@@ -1,0 +1,21 @@
+//! Design-choice ablations on the Fig-3 LASSO workload: quantizer
+//! resolution q, error feedback on/off, compressor families, and the
+//! asynchrony knobs (τ, P). Prints one table per sweep.
+//!
+//!     cargo run --release --example ablation -- [--iters 400] [--trials 3]
+
+use qadmm::exp::ablation::{run_all, AblationOptions};
+use qadmm::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env();
+    let opts = AblationOptions {
+        iters: args.usize("iters", 400),
+        mc_trials: args.usize("trials", 3),
+        target: args.f64("target", 1e-8),
+    };
+    args.finish()?;
+    let rows = run_all(&opts)?;
+    println!("\n{} ablation rows total", rows.len());
+    Ok(())
+}

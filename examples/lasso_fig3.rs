@@ -1,0 +1,49 @@
+//! Reproduce **Figure 3** (§5.1): LASSO accuracy (eq. 19) vs iterations and
+//! vs communication bits, QADMM (q = 3) against unquantized async ADMM, for
+//! τ ∈ {1, 3}, with the paper's parameters
+//! (M, ρ, θ, N, H) = (200, 500, 0.1, 16, 100), P = 1, two-group oracle.
+//!
+//!     cargo run --release --example lasso_fig3 -- [--iters 700] [--trials 10]
+//!         [--backend hlo|native] [--quick]
+//!
+//! Writes `out/fig3_tau{1,3}_{qadmm,baseline}.csv` (mean curves over the MC
+//! trials) and prints the headline reduction at accuracy 1e-10.
+
+use qadmm::config::{presets, Backend};
+use qadmm::exp::fig3::{self, Fig3Options};
+use qadmm::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::from_env();
+    let quick = args.flag("quick");
+    let mut opts = Fig3Options {
+        iters: args.usize("iters", if quick { 250 } else { presets::fig3(3).iters }),
+        mc_trials: args.usize("trials", if quick { 2 } else { presets::fig3(3).mc_trials }),
+        target: args.f64("target", if quick { 1e-8 } else { 1e-10 }),
+        out_dir: args.str("out", "out").into(),
+        artifact_dir: args.str("artifacts", "artifacts").into(),
+        ..Default::default()
+    };
+    match args.str("backend", "hlo").as_str() {
+        "native" => opts.backend = Backend::Native,
+        "hlo" => opts.backend = Backend::Hlo,
+        other => anyhow::bail!("unknown backend '{other}'"),
+    }
+    args.finish()?;
+
+    println!(
+        "fig3: taus={:?} iters={} trials={} backend={:?}",
+        opts.taus, opts.iters, opts.mc_trials, opts.backend
+    );
+    let summary = fig3::run(&opts)?;
+    for s in &summary.series {
+        println!("--- {} (accuracy milestones) ---", s.label);
+        print!("{}", qadmm::exp::milestones(&s.mean_recorder(), |r| r.accuracy));
+    }
+    println!();
+    for h in &summary.headline {
+        println!("{h}");
+    }
+    println!("CSV series in {}", opts.out_dir.display());
+    Ok(())
+}

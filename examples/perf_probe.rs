@@ -1,0 +1,61 @@
+//! §Perf probe: component timings for the codec hot path and the PJRT
+//! dispatch chain (direct runtime vs compute-service channel hop).
+use qadmm::compress::qsgd::Qsgd;
+use qadmm::compress::Compressor;
+use qadmm::runtime::service::ComputeService;
+use qadmm::runtime::tensor::Tensor;
+use qadmm::runtime::Runtime;
+use qadmm::util::rng::Pcg64;
+use std::time::Instant;
+
+fn time<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    for _ in 0..3 { std::hint::black_box(f()); }
+    let t = Instant::now();
+    for _ in 0..reps { std::hint::black_box(f()); }
+    t.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    // --- codec ---
+    let mut rng = Pcg64::seed_from_u64(1);
+    let m = 1_000_000;
+    let delta = rng.normal_vec(m, 0.0, 1.0);
+    let q = Qsgd::new(3);
+    let fused = time(20, || q.compress(&delta, &mut rng));
+    let refr = time(20, || q.compress_reference(&delta, &mut rng));
+    println!("codec: fused {:.2}ms ({:.1}M/s) vs reference {:.2}ms ({:.1}M/s)",
+        fused*1e3, m as f64/fused/1e6, refr*1e3, m as f64/refr/1e6);
+
+    // --- PJRT dispatch chain (lasso_node_step, m=200) ---
+    if !std::path::Path::new("artifacts/manifest.json").exists() { return; }
+    let rt = Runtime::open(std::path::Path::new("artifacts")).unwrap();
+    let mm = 200;
+    let minv = Tensor::F64(rng.normal_vec(mm*mm, 0.0, 0.01), vec![mm, mm]);
+    let vecs: Vec<Tensor> = (0..7).map(|_| Tensor::vec_f64(rng.normal_vec(mm, 0.0, 1.0))).collect();
+    let inputs = || {
+        let mut v = vec![minv.clone()];
+        v.extend(vecs.iter().cloned());
+        v.push(Tensor::scalar_f64(500.0));
+        v.push(Tensor::scalar_f64(3.0));
+        v
+    };
+    let ins = inputs();
+    let direct = time(200, || rt.call("lasso_node_step", &ins).unwrap());
+    println!("pjrt: direct Runtime::call lasso_node_step = {:.1}µs", direct*1e6);
+    // literal creation alone
+    let lit = time(200, || {
+        ins.iter().map(|t| t.to_literal().unwrap()).collect::<Vec<_>>()
+    });
+    println!("pjrt: literal creation alone = {:.1}µs", lit*1e6);
+    let svc = ComputeService::start("artifacts".into(), vec!["lasso_node_step".into()]).unwrap();
+    let client = svc.client();
+    let via_svc = time(200, || client.call("lasso_node_step", inputs()).unwrap());
+    println!("pjrt: via ComputeService channel = {:.1}µs", via_svc*1e6);
+    // tiny artifact for fixed-cost floor
+    let qd = Tensor::vec_f64(rng.normal_vec(200, 0.0, 1.0));
+    let qn = Tensor::vec_f64(rng.uniform_vec_f64(200));
+    let qi = vec![qd, qn, Tensor::scalar_f64(3.0)];
+    let tiny = time(200, || rt.call("quantize_f64_m200", &qi).unwrap());
+    println!("pjrt: direct quantize_f64_m200 (tiny) = {:.1}µs", tiny*1e6);
+}
+// appended probe: execute_b with cached constant buffers (run via second main shim not used)

@@ -1,0 +1,57 @@
+//! probe: does buffer caching for constants help on CPU-PJRT?
+use qadmm::util::rng::Pcg64;
+use std::time::Instant;
+
+fn main() {
+    let client = xla::PjRtClient::cpu().unwrap();
+    let proto = xla::HloModuleProto::from_text_file("artifacts/lasso_node_step.hlo.txt").unwrap();
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto)).unwrap();
+    let mut rng = Pcg64::seed_from_u64(1);
+    let m = 200;
+    let minv = rng.normal_vec(m * m, 0.0, 0.01);
+    let vecs: Vec<Vec<f64>> = (0..7).map(|_| rng.normal_vec(m, 0.0, 1.0)).collect();
+
+    // baseline: literals every call
+    let mk_lit = |data: &Vec<f64>, dims: &[i64]| xla::Literal::vec1(data).reshape(dims).unwrap();
+    let reps = 200;
+    for _ in 0..3 { run_lit(&exe, &minv, &vecs, &mk_lit); }
+    let t = Instant::now();
+    for _ in 0..reps { run_lit(&exe, &minv, &vecs, &mk_lit); }
+    println!("execute with literals: {:.1}µs", t.elapsed().as_secs_f64() / reps as f64 * 1e6);
+
+    // cached const buffers + fresh varying buffers, execute_b
+    let minv_buf = client.buffer_from_host_buffer(&minv, &[m, m], None).unwrap();
+    let atb2_buf = client.buffer_from_host_buffer(&vecs[0], &[m], None).unwrap();
+    let rho = client.buffer_from_host_buffer(&[500.0f64], &[], None);
+    let rho = match rho { Ok(b) => b, Err(e) => { println!("scalar buffer err: {e:?}"); return; } };
+    let s = client.buffer_from_host_buffer(&[3.0f64], &[], None).unwrap();
+    for _ in 0..3 { run_buf(&client, &exe, &minv_buf, &atb2_buf, &vecs, &rho, &s, m); }
+    let t = Instant::now();
+    for _ in 0..reps { run_buf(&client, &exe, &minv_buf, &atb2_buf, &vecs, &rho, &s, m); }
+    println!("execute_b cached consts: {:.1}µs", t.elapsed().as_secs_f64() / reps as f64 * 1e6);
+}
+
+fn run_lit(exe: &xla::PjRtLoadedExecutable, minv: &Vec<f64>, vecs: &[Vec<f64>],
+           mk: &dyn Fn(&Vec<f64>, &[i64]) -> xla::Literal) {
+    let mut args = vec![mk(minv, &[200, 200])];
+    for v in &vecs[..7] { args.push(mk(v, &[200])); }
+    args.push(xla::Literal::scalar(500.0f64));
+    args.push(xla::Literal::scalar(3.0f64));
+    let out = exe.execute::<xla::Literal>(&args).unwrap()[0][0].to_literal_sync().unwrap();
+    std::hint::black_box(out);
+}
+
+fn run_buf(client: &xla::PjRtClient, exe: &xla::PjRtLoadedExecutable,
+           minv: &xla::PjRtBuffer, atb2: &xla::PjRtBuffer, vecs: &[Vec<f64>],
+           rho: &xla::PjRtBuffer, s: &xla::PjRtBuffer, m: usize) {
+    let varying: Vec<xla::PjRtBuffer> = vecs[1..7]
+        .iter()
+        .map(|v| client.buffer_from_host_buffer(v, &[m], None).unwrap())
+        .collect();
+    let mut args: Vec<&xla::PjRtBuffer> = vec![minv, atb2];
+    for v in &varying { args.push(v); }
+    args.push(rho);
+    args.push(s);
+    let out = exe.execute_b(&args).unwrap()[0][0].to_literal_sync().unwrap();
+    std::hint::black_box(out);
+}

@@ -1,0 +1,62 @@
+//! Quickstart: solve a small distributed LASSO with QADMM (q = 3 bits) and
+//! compare against the unquantized async-ADMM baseline.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Demonstrates the public API end to end: configure an experiment, build a
+//! problem, run the Monte-Carlo harness, read the headline numbers.
+
+use qadmm::admm::runner::{self, ProblemFactory};
+use qadmm::compress::CompressorKind;
+use qadmm::config::presets;
+use qadmm::metrics::summary;
+use qadmm::problems::lasso::{LassoConfig, LassoProblem};
+use qadmm::problems::Problem;
+use qadmm::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    // A small instance of the paper's §5.1 workload (native f64 backend).
+    let mut cfg = presets::ci_lasso();
+    cfg.iters = 300;
+    cfg.mc_trials = 3;
+
+    let lasso = LassoConfig { m: 64, h: 48, n: 8, rho: 100.0, theta: 0.1 };
+    match &mut cfg.problem {
+        qadmm::config::ProblemKind::Lasso { m, h, n, rho, theta } => {
+            (*m, *h, *n, *rho, *theta) =
+                (lasso.m, lasso.h, lasso.n, lasso.rho, lasso.theta);
+        }
+        _ => unreachable!(),
+    }
+
+    let mut results = Vec::new();
+    for compressor in [CompressorKind::Qsgd { bits: 3 }, CompressorKind::Identity] {
+        cfg.compressor = compressor;
+        cfg.name = format!("quickstart-{}", compressor.label());
+        let mut factory: Box<ProblemFactory> =
+            Box::new(move |_seed, data_rng: &mut Pcg64| {
+                Ok(Box::new(LassoProblem::generate(lasso, data_rng)?) as Box<dyn Problem>)
+            });
+        let res = runner::run_mc(&cfg, factory.as_mut())?;
+        drop(factory);
+        let rec = res.mean_recorder();
+        let last = rec.last().unwrap().clone();
+        println!(
+            "{:24} final accuracy {:.3e}   total wire {:.1} bits/param",
+            compressor.label(),
+            last.accuracy,
+            last.comm_bits
+        );
+        results.push(rec);
+    }
+
+    let target = 1e-8;
+    let q = summary::bits_to_accuracy(&results[0].records, target);
+    let b = summary::bits_to_accuracy(&results[1].records, target);
+    println!("{}", summary::headline_row("quickstart", "accuracy 1e-8", q, b));
+
+    let (q, b) = (q.expect("qadmm reached target"), b.expect("baseline reached target"));
+    assert!(q < b, "quantized run should need fewer bits");
+    println!("OK: QADMM reached 1e-8 with {:.1}% of the baseline's bits", 100.0 * q / b);
+    Ok(())
+}

@@ -1,0 +1,217 @@
+"""AOT compile path: lower every L2 graph to HLO *text* + a JSON manifest.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+
+HLO text (NOT `lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()`)
+is the interchange format: jax ≥ 0.5 emits protos with 64-bit instruction
+ids which the xla crate's runtime (xla_extension 0.5.1) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+The manifest records, for every artifact, the ordered input/output names,
+shapes and dtypes — the rust runtime validates its call signatures against
+it at load time — plus the flat parameter layouts of the NN architectures
+so the coordinator can He-initialize layer-by-layer with its own RNG.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model, nn  # noqa: E402
+
+# Experiment dimensions (paper §5; see DESIGN.md per-experiment index).
+LASSO_M = 200
+LASSO_N = 16
+CNN_M = nn.CNN_PARAMS
+CNN_N = 3
+CNN_K = 10           # inner Adam steps per ADMM iteration
+CNN_B = 64           # inner batch size
+MLP_M = nn.MLP_PARAMS
+MLP_N = 4            # nodes used by the threaded e2e driver
+MLP_K = 5
+MLP_B = 32
+EVAL_B = 256         # test-set evaluation batch
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def f64(*shape):
+    return spec(shape, jnp.float64)
+
+
+def f32(*shape):
+    return spec(shape, jnp.float32)
+
+
+def i32(*shape):
+    return spec(shape, jnp.int32)
+
+
+def quantize_entry(delta, noise, s):
+    from compile.kernels.quantize import quantize
+
+    return quantize(delta, noise, s)
+
+
+def soft_threshold_entry(v, kappa):
+    from compile.kernels.soft_threshold import soft_threshold
+
+    return (soft_threshold(v, kappa),)
+
+
+def registry():
+    """name → (fn, [(input_name, ShapeDtypeStruct)], [output_name], meta)."""
+    arts = {}
+
+    def add(name, fn, inputs, outputs, **meta):
+        arts[name] = (fn, inputs, outputs, meta)
+
+    m, n = LASSO_M, LASSO_N
+    add(
+        "quantize_f64_m200", quantize_entry,
+        [("delta", f64(m)), ("noise", f64(m)), ("s", f64())],
+        ["values", "levels", "norm"],
+    )
+    add(
+        "quantize_f32_m1024", quantize_entry,
+        [("delta", f32(1024)), ("noise", f32(1024)), ("s", f32())],
+        ["values", "levels", "norm"],
+    )
+    add(
+        "soft_threshold_f64_m200", soft_threshold_entry,
+        [("v", f64(m)), ("kappa", f64())],
+        ["out"],
+    )
+    add(
+        "lasso_node_step", model.lasso_node_step,
+        [("minv", f64(m, m)), ("atb2", f64(m)), ("zhat", f64(m)),
+         ("u", f64(m)), ("xhat", f64(m)), ("uhat", f64(m)),
+         ("noise_x", f64(m)), ("noise_u", f64(m)),
+         ("rho", f64()), ("s", f64())],
+        ["x_new", "u_new", "cx_val", "cx_lvl", "cx_norm",
+         "cu_val", "cu_lvl", "cu_norm"],
+        m=m,
+    )
+    add(
+        "lasso_server_step", model.lasso_server_step,
+        [("xhat", f64(n, m)), ("uhat", f64(n, m)), ("zhat", f64(m)),
+         ("noise_z", f64(m)), ("theta", f64()), ("rho", f64()),
+         ("s", f64())],
+        ["z_new", "cz_val", "cz_lvl", "cz_norm"],
+        m=m, n=n,
+    )
+    add(
+        "lasso_lagrangian", model.lasso_lagrangian,
+        [("x", f64(n, m)), ("u", f64(n, m)), ("z", f64(m)),
+         ("ata", f64(n, m, m)), ("atb2", f64(n, m)), ("btb", f64(n)),
+         ("theta", f64()), ("rho", f64())],
+        ["lagrangian"],
+        m=m, n=n,
+    )
+
+    def nn_updates(prefix, mm, kk, bb, img_shape, local_fn, eval_fn):
+        add(
+            f"{prefix}_local_update", local_fn,
+            [("flat", f32(mm)), ("m", f32(mm)), ("v", f32(mm)), ("t", f32()),
+             ("u", f32(mm)), ("zhat", f32(mm)), ("xhat", f32(mm)),
+             ("uhat", f32(mm)),
+             ("bx", f32(kk, bb, *img_shape)), ("by", i32(kk, bb)),
+             ("noise_x", f32(mm)), ("noise_u", f32(mm)),
+             ("rho", f32()), ("lr", f32()), ("s", f32())],
+            ["x_new", "m_new", "v_new", "t_new", "u_new",
+             "cx_val", "cx_lvl", "cx_norm", "cu_val", "cu_lvl", "cu_norm",
+             "loss"],
+            m=mm, k=kk, b=bb,
+        )
+        add(
+            f"{prefix}_eval", eval_fn,
+            [("flat", f32(mm)), ("x", f32(EVAL_B, *img_shape)),
+             ("y", i32(EVAL_B))],
+            ["correct", "loss"],
+            m=mm, b=EVAL_B,
+        )
+
+    nn_updates("cnn", CNN_M, CNN_K, CNN_B, (28, 28, 1),
+               model.cnn_local_update, model.cnn_eval)
+    nn_updates("mlp", MLP_M, MLP_K, MLP_B, (784,),
+               model.mlp_local_update, model.mlp_eval)
+
+    for prefix, mm, nn_nodes in (("cnn", CNN_M, CNN_N), ("mlp", MLP_M, MLP_N)):
+        add(
+            f"{prefix}_server_step", model.nn_server_step,
+            [("xhat", f32(nn_nodes, mm)), ("uhat", f32(nn_nodes, mm)),
+             ("zhat", f32(mm)), ("noise_z", f32(mm)), ("s", f32())],
+            ["z_new", "cz_val", "cz_lvl", "cz_norm"],
+            m=mm, n=nn_nodes,
+        )
+    return arts
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def dtype_name(dt) -> str:
+    return {"float32": "f32", "float64": "f64", "int32": "i32"}[jnp.dtype(dt).name]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out", default="../artifacts")
+    parser.add_argument("--only", default=None,
+                        help="comma-separated artifact names (for iteration)")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    arts = registry()
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"artifacts": {}, "params": {}, "consts": {}}
+    for name, (fn, inputs, outputs, meta) in arts.items():
+        if only and name not in only:
+            continue
+        specs = [s for _, s in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [
+                {"name": iname, "shape": list(s.shape), "dtype": dtype_name(s.dtype)}
+                for iname, s in inputs
+            ],
+            "outputs": outputs,
+            "meta": meta,
+        }
+        print(f"  lowered {name:28s} -> {fname} ({len(text)} chars)")
+
+    manifest["params"]["cnn"] = nn.cnn_param_specs()
+    manifest["params"]["mlp"] = nn.mlp_param_specs()
+    manifest["consts"] = {
+        "lasso_m": LASSO_M, "lasso_n": LASSO_N,
+        "cnn_m": CNN_M, "cnn_n": CNN_N, "cnn_k": CNN_K, "cnn_b": CNN_B,
+        "mlp_m": MLP_M, "mlp_n": MLP_N, "mlp_k": MLP_K, "mlp_b": MLP_B,
+        "eval_b": EVAL_B,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

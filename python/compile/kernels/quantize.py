@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: the paper's stochastic multi-level quantizer C(Δ) (eq. 17).
+
+Given Δ ∈ R^M and S quantization levels (S = 2^(q-1) - 1 for q bits/scalar),
+each element is normalized by ‖Δ‖_max, stochastically rounded to one of the
+S+1 lattice points {0, 1/S, ..., 1} (unbiased: P[round up] equals the
+fractional position inside the interval), and the sign/magnitude restored:
+
+    [C(Δ)]_m = ‖Δ‖_max · sgn(Δ_m) · h(Δ_m, S)
+
+The Bernoulli draws are *inputs* (a uniform[0,1) tensor supplied by the rust
+coordinator's seeded PCG64), so the lowered HLO is a pure function and Monte
+Carlo trials are exactly reproducible.
+
+The kernel emits both the dequantized values (used for the error-feedback
+update of the estimates x̂/û/ẑ) and the signed integer levels in [-S, S]
+(what the rust wire layer bit-packs to q bits/scalar).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the max-norm reduction is
+done by the surrounding jnp (XLA reduce); the kernel body is a fused
+elementwise block over BLOCK-sized tiles — pure VPU work with a BlockSpec
+expressing the HBM→VMEM tiling. interpret=True for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile size: one lane-aligned VMEM block per grid step. 256 elements keeps
+# the (delta, noise, values, levels) working set tiny; on a real TPU this
+# would be sized to a multiple of the (8, 128) vreg tile.
+BLOCK = 256
+
+
+def _quantize_kernel(delta_ref, noise_ref, norm_ref, s_ref, val_ref, lvl_ref):
+    """One BLOCK tile of eq. (17). All refs are VMEM blocks."""
+    d = delta_ref[...]
+    noise = noise_ref[...]
+    norm = norm_ref[0]
+    s = s_ref[0]
+
+    nonzero = norm > 0
+    safe_norm = jnp.where(nonzero, norm, jnp.ones_like(norm))
+    # Normalized magnitude in [0, S].
+    y = jnp.abs(d) / safe_norm * s
+    # Interval index p ∈ {0, ..., S-1}; y == S (the max element) lands in the
+    # top interval with frac == 1, i.e. it always rounds up and is exact.
+    p = jnp.minimum(jnp.floor(y), s - 1.0)
+    frac = y - p
+    up = (noise < frac).astype(d.dtype)
+    lvl = p + up
+    sgn = jnp.sign(d)
+    val = jnp.where(nonzero, norm * sgn * lvl / s, jnp.zeros_like(d))
+    val_ref[...] = val
+    lvl_ref[...] = jnp.where(
+        nonzero, sgn * lvl, jnp.zeros_like(lvl)
+    ).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def quantize(delta, noise, s, *, block=BLOCK):
+    """C(Δ) with stochastic rounding driven by `noise` ~ U[0,1)^M.
+
+    Args:
+      delta: [M] f32/f64, the tensor to compress.
+      noise: [M] same dtype, uniform draws (one per element).
+      s: scalar, number of quantization intervals S (float-valued).
+      block: tile size for the Pallas grid.
+
+    Returns:
+      (values [M], levels int32 [M] in [-S, S], norm scalar ‖Δ‖_max).
+    """
+    if delta.ndim != 1:
+        raise ValueError(f"quantize expects rank-1 input, got {delta.shape}")
+    m = delta.shape[0]
+    dtype = delta.dtype
+    norm = jnp.max(jnp.abs(delta)).reshape((1,))
+    s_arr = jnp.asarray(s, dtype=dtype).reshape((1,))
+
+    pad = (-m) % block
+    if pad:
+        delta_p = jnp.pad(delta, (0, pad))
+        noise_p = jnp.pad(noise, (0, pad), constant_values=1.0)
+    else:
+        delta_p, noise_p = delta, noise
+    mp = m + pad
+    grid = (mp // block,)
+
+    val, lvl = pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp,), dtype),
+            jax.ShapeDtypeStruct((mp,), jnp.int32),
+        ],
+        interpret=True,
+    )(delta_p, noise_p, norm, s_arr)
+    if pad:
+        val, lvl = val[:m], lvl[:m]
+    return val, lvl, norm[0]

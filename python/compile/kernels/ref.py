@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+These are deliberately written as straight-line jnp with no tiling so a
+mismatch against the kernels localizes to the kernel's block schedule.
+"""
+
+import jax.numpy as jnp
+
+
+def quantize_ref(delta, noise, s):
+    """Reference C(Δ) of eq. (17). Same semantics as kernels.quantize."""
+    dtype = delta.dtype
+    s = jnp.asarray(s, dtype=dtype)
+    norm = jnp.max(jnp.abs(delta))
+    nonzero = norm > 0
+    safe_norm = jnp.where(nonzero, norm, jnp.ones_like(norm))
+    y = jnp.abs(delta) / safe_norm * s
+    p = jnp.minimum(jnp.floor(y), s - 1.0)
+    frac = y - p
+    lvl = p + (noise < frac).astype(dtype)
+    sgn = jnp.sign(delta)
+    val = jnp.where(nonzero, norm * sgn * lvl / s, jnp.zeros_like(delta))
+    lvl_signed = jnp.where(nonzero, sgn * lvl, jnp.zeros_like(lvl)).astype(jnp.int32)
+    return val, lvl_signed, norm
+
+
+def soft_threshold_ref(v, kappa):
+    """Reference prox of κ‖·‖₁."""
+    kappa = jnp.asarray(kappa, dtype=v.dtype)
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - kappa, 0.0)
+
+
+def dequantize_ref(levels, norm, s):
+    """Inverse of the wire encoding: value = norm · level / S."""
+    return levels.astype(norm.dtype) * norm / s

@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: soft-thresholding, the prox of κ‖·‖₁.
+
+    S_κ(v)_m = sgn(v_m) · max(|v_m| − κ, 0)
+
+This is the closed-form consensus update (eq. 15) for LASSO:
+    z ← S_{θ/(ρN)}( mean_i(x̂_i + û_i) ).
+Elementwise VPU work, tiled like the quantizer.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+
+
+def _soft_threshold_kernel(v_ref, kappa_ref, o_ref):
+    v = v_ref[...]
+    kappa = kappa_ref[0]
+    o_ref[...] = jnp.sign(v) * jnp.maximum(jnp.abs(v) - kappa, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def soft_threshold(v, kappa, *, block=BLOCK):
+    """Elementwise prox of κ‖·‖₁ over a rank-1 tensor."""
+    if v.ndim != 1:
+        raise ValueError(f"soft_threshold expects rank-1 input, got {v.shape}")
+    m = v.shape[0]
+    dtype = v.dtype
+    kappa_arr = jnp.asarray(kappa, dtype=dtype).reshape((1,))
+    pad = (-m) % block
+    v_p = jnp.pad(v, (0, pad)) if pad else v
+    mp = m + pad
+    out = pl.pallas_call(
+        _soft_threshold_kernel,
+        grid=(mp // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), dtype),
+        interpret=True,
+    )(v_p, kappa_arr)
+    return out[:m] if pad else out

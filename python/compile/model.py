@@ -1,0 +1,176 @@
+"""L2 compute graphs: one fused HLO per ADMM-iteration side.
+
+Every function here is lowered once by aot.py to artifacts/*.hlo.txt and
+executed from the rust coordinator via PJRT. The quantizer (L1 Pallas
+kernel) is called *inside* these graphs so compression lowers into the same
+HLO as the numeric update — one dispatch per node step / server step.
+
+Conventions
+-----------
+* LASSO graphs are f64 (the paper's Fig. 3 tracks relative accuracy down to
+  1e-10, below f32 resolution); NN graphs are f32.
+* All stochasticity enters through explicit uniform-noise inputs.
+* Scalars (ρ, θ, S, lr, t) are 0-d inputs so a single artifact serves
+  parameter sweeps.
+* The exact LASSO solve uses a precomputed M⁻¹ = (2AᵀA + ρI)⁻¹ (factorized
+  once per node in rust): the per-iteration update is a single matmul, with
+  no LAPACK custom-calls in the HLO (xla_extension 0.5.1 cannot load them).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile import nn
+from compile.kernels.quantize import quantize
+from compile.kernels.soft_threshold import soft_threshold
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+# --------------------------------------------------------------------------
+# LASSO (exact primal updates, §5.1)
+# --------------------------------------------------------------------------
+
+def lasso_node_step(minv, atb2, zhat, u, xhat, uhat, noise_x, noise_u, rho, s):
+    """Node-side QADMM iteration (eqs. 9a, 9b, 10, 11 + C(Δ)).
+
+    f_i(x) = ‖A_i x − b_i‖² so the exact primal update solves
+        (2AᵀA + ρI) x = 2Aᵀb + ρ(ẑ − u)
+    via the precomputed inverse `minv`; `atb2` = 2Aᵀb.
+
+    Returns (x_new, u_new, cx_val, cx_lvl, cx_norm, cu_val, cu_lvl, cu_norm):
+    the new local iterates plus the quantized deltas (dequantized values for
+    the error-feedback estimate updates, signed levels + max-norm for the
+    wire).
+    """
+    rhs = atb2 + rho * (zhat - u)
+    x_new = minv @ rhs
+    u_new = u + (x_new - zhat)
+    dx = x_new - xhat  # current change + previous compression error (eq. 10)
+    du = u_new - uhat  # (eq. 11)
+    cx_val, cx_lvl, cx_norm = quantize(dx, noise_x, s)
+    cu_val, cu_lvl, cu_norm = quantize(du, noise_u, s)
+    return x_new, u_new, cx_val, cx_lvl, cx_norm, cu_val, cu_lvl, cu_norm
+
+
+def lasso_server_step(xhat, uhat, zhat, noise_z, theta, rho, s):
+    """Server-side consensus update (eq. 15) + downlink compression (eq. 16).
+
+    z ← S_{θ/(ρN)}( mean_i(x̂_i + û_i) ), then Δz = z − ẑ is quantized.
+    xhat/uhat are stacked [N, M].
+    """
+    n = xhat.shape[0]
+    v = jnp.mean(xhat + uhat, axis=0)
+    kappa = theta / (rho * n)
+    z_new = soft_threshold(v, kappa)
+    dz = z_new - zhat
+    cz_val, cz_lvl, cz_norm = quantize(dz, noise_z, s)
+    return z_new, cz_val, cz_lvl, cz_norm
+
+
+def lasso_lagrangian(x, u, z, ata, atb2, btb, theta, rho):
+    """Augmented Lagrangian (eq. 3/4) for the metric (eq. 19), f64.
+
+    x, u: [N, M] stacked true local iterates; ata: [N, M, M] Gram matrices;
+    atb2: [N, M] (= 2Aᵀb); btb: [N] (= ‖b‖²).
+    f_i(x) = xᵀ(AᵀA)x − (2Aᵀb)ᵀx + bᵀb, and with u = λ/ρ:
+        L = Σf_i + θ‖z‖₁ + ρ/2 Σ‖x_i − z + u_i‖² − ρ/2 Σ‖u_i‖².
+    """
+    quad = jnp.einsum("nm,nmk,nk->n", x, ata, x)
+    lin = jnp.einsum("nm,nm->n", atb2, x)
+    f = jnp.sum(quad - lin + btb)
+    h = theta * jnp.sum(jnp.abs(z))
+    resid = x - z[None, :] + u
+    penalty = 0.5 * rho * jnp.sum(resid * resid)
+    return f + h + penalty - 0.5 * rho * jnp.sum(u * u)
+
+
+# --------------------------------------------------------------------------
+# Neural networks (inexact primal updates, §5.2)
+# --------------------------------------------------------------------------
+
+def _local_loss(forward, flat, bx, by, zhat, u, rho):
+    """f_i estimate on one batch + the augmented proximal term of eq. (9a)."""
+    logits = forward(flat, bx)
+    data = nn.cross_entropy(logits, by)
+    resid = flat - zhat + u
+    return data + 0.5 * rho * jnp.sum(resid * resid)
+
+
+def _adam_scan(forward, flat, m, v, t, u, zhat, bx, by, rho, lr):
+    """K Adam steps (lax.scan) on the prox-augmented local loss.
+
+    bx: [K, B, ...], by: [K, B]. Returns (flat', m', v', t', mean_loss).
+    The scan fuses all K gradient steps into one HLO so PJRT dispatch
+    overhead is paid once per ADMM iteration, not once per gradient step.
+    """
+    loss_grad = jax.value_and_grad(
+        lambda p, x, y: _local_loss(forward, p, x, y, zhat, u, rho)
+    )
+
+    def body(carry, batch):
+        p, m, v, t = carry
+        x, y = batch
+        loss, g = loss_grad(p, x, y)
+        t = t + 1.0
+        m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+        v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+        mhat = m / (1.0 - jnp.power(ADAM_B1, t))
+        vhat = v / (1.0 - jnp.power(ADAM_B2, t))
+        p = p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        return (p, m, v, t), loss
+
+    (flat, m, v, t), losses = jax.lax.scan(body, (flat, m, v, t), (bx, by))
+    return flat, m, v, t, jnp.mean(losses)
+
+
+def make_nn_local_update(forward):
+    """Node-side inexact QADMM iteration for a NN problem.
+
+    Runs K Adam steps of eq. (9a), then the dual update (9b), then computes
+    and quantizes both deltas (10)–(11). Adam moments persist across outer
+    iterations (node-local state, never communicated).
+    """
+
+    def nn_local_update(flat, m, v, t, u, zhat, xhat, uhat, bx, by,
+                        noise_x, noise_u, rho, lr, s):
+        x_new, m, v, t, mean_loss = _adam_scan(
+            forward, flat, m, v, t, u, zhat, bx, by, rho, lr
+        )
+        u_new = u + (x_new - zhat)
+        dx = x_new - xhat
+        du = u_new - uhat
+        cx_val, cx_lvl, cx_norm = quantize(dx, noise_x, s)
+        cu_val, cu_lvl, cu_norm = quantize(du, noise_u, s)
+        return (x_new, m, v, t, u_new,
+                cx_val, cx_lvl, cx_norm, cu_val, cu_lvl, cu_norm, mean_loss)
+
+    return nn_local_update
+
+
+def nn_server_step(xhat, uhat, zhat, noise_z, s):
+    """Server consensus for NN (h ≡ 0 ⇒ plain average) + downlink C(Δz)."""
+    v = jnp.mean(xhat + uhat, axis=0)
+    z_new = v  # prox of h ≡ 0 is the identity
+    dz = z_new - zhat
+    cz_val, cz_lvl, cz_norm = quantize(dz, noise_z, s)
+    return z_new, cz_val, cz_lvl, cz_norm
+
+
+def make_nn_eval(forward):
+    """Test-set evaluation: (correct-count, mean CE loss) over one batch."""
+
+    def nn_eval(flat, x, y):
+        logits = forward(flat, x)
+        return nn.accuracy_count(logits, y), nn.cross_entropy(logits, y)
+
+    return nn_eval
+
+
+# Concrete variants bound to the two architectures.
+cnn_local_update = make_nn_local_update(nn.cnn_forward)
+cnn_eval = make_nn_eval(nn.cnn_forward)
+mlp_local_update = make_nn_local_update(nn.mlp_forward)
+mlp_eval = make_nn_eval(nn.mlp_forward)

@@ -1,0 +1,126 @@
+"""Neural-network definitions for the inexact-ADMM experiments (§5.2).
+
+The paper's classifier: 6 layers — five 3×3 conv layers (stride 2, padding
+1, channels 16/32/64/128/128) followed by a fully connected layer with 10
+outputs. Spatial path on 28×28 input: 28 → 14 → 7 → 4 → 2 → 1, so the FC
+sees a 128-dim feature. Parameter count M = 246,026 (the paper reports
+246,762; the small gap is their parameter accounting — architecture is
+identical).
+
+Parameters live as one flat vector x_i ∈ R^M — that is exactly the iterate
+the ADMM consensus runs over and what the quantizer compresses — and are
+unflattened by static slicing inside the traced function. The flat layout
+(name/shape/offset/fan_in) is exported into artifacts/manifest.json so the
+rust coordinator can He-initialize per layer with its own RNG.
+
+A small MLP variant (784–64–10) provides a fast path for CI and the
+threaded end-to-end driver.
+"""
+
+import jax
+import jax.numpy as jnp
+
+CNN_CHANNELS = [(1, 16), (16, 32), (32, 64), (64, 128), (128, 128)]
+MLP_WIDTHS = [784, 64, 10]
+
+
+def cnn_param_specs():
+    """Flat-layout spec: list of dicts {name, shape, offset, size, fan_in}."""
+    specs = []
+    offset = 0
+
+    def add(name, shape, fan_in):
+        nonlocal offset
+        size = 1
+        for d in shape:
+            size *= d
+        specs.append(
+            {"name": name, "shape": list(shape), "offset": offset,
+             "size": size, "fan_in": fan_in}
+        )
+        offset += size
+
+    for i, (cin, cout) in enumerate(CNN_CHANNELS):
+        add(f"conv{i}_w", (3, 3, cin, cout), 3 * 3 * cin)
+        add(f"conv{i}_b", (cout,), 3 * 3 * cin)
+    add("fc_w", (128, 10), 128)
+    add("fc_b", (10,), 128)
+    return specs
+
+
+def mlp_param_specs(widths=None):
+    widths = widths or MLP_WIDTHS
+    specs = []
+    offset = 0
+    for i, (din, dout) in enumerate(zip(widths[:-1], widths[1:])):
+        for name, shape, fan_in in (
+            (f"fc{i}_w", (din, dout), din),
+            (f"fc{i}_b", (dout,), din),
+        ):
+            size = 1
+            for d in shape:
+                size *= d
+            specs.append(
+                {"name": name, "shape": list(shape), "offset": offset,
+                 "size": size, "fan_in": fan_in}
+            )
+            offset += size
+    return specs
+
+
+def param_count(specs):
+    return sum(s["size"] for s in specs)
+
+
+CNN_PARAMS = param_count(cnn_param_specs())  # 246_026
+MLP_PARAMS = param_count(mlp_param_specs())  # 50_890
+
+
+def _unflatten(flat, specs):
+    out = {}
+    for s in specs:
+        out[s["name"]] = jax.lax.dynamic_slice(
+            flat, (s["offset"],), (s["size"],)
+        ).reshape(s["shape"])
+    return out
+
+
+def cnn_forward(flat, x):
+    """Logits for x: [B, 28, 28, 1] f32 → [B, 10]."""
+    p = _unflatten(flat, cnn_param_specs())
+    h = x
+    for i in range(len(CNN_CHANNELS)):
+        w, b = p[f"conv{i}_w"], p[f"conv{i}_b"]
+        h = jax.lax.conv_general_dilated(
+            h, w, window_strides=(2, 2), padding=[(1, 1), (1, 1)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        h = jax.nn.relu(h + b)
+    h = h.reshape(h.shape[0], -1)  # [B, 128]
+    return h @ p["fc_w"] + p["fc_b"]
+
+
+def mlp_forward(flat, x, widths=None):
+    """Logits for x: [B, 784] f32 → [B, 10]."""
+    widths = widths or MLP_WIDTHS
+    p = _unflatten(flat, mlp_param_specs(widths))
+    h = x
+    n_layers = len(widths) - 1
+    for i in range(n_layers):
+        h = h @ p[f"fc{i}_w"] + p[f"fc{i}_b"]
+        if i + 1 < n_layers:
+            h = jax.nn.relu(h)
+    return h
+
+
+def cross_entropy(logits, labels):
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)
+    return -jnp.mean(picked)
+
+
+def accuracy_count(logits, labels):
+    """Number of correct argmax predictions (f32 scalar)."""
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.sum((pred == labels.astype(jnp.int32)).astype(jnp.float32))

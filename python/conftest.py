@@ -1,0 +1,6 @@
+# Make `pytest python/tests` work from the repo root: the compile package
+# lives in this directory.
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

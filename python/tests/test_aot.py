@@ -1,0 +1,65 @@
+"""AOT manifest + artifact sanity: every registered graph lowers, the
+manifest signatures match the registry, and the HLO is text-parseable."""
+
+import json
+import os
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot, nn  # noqa: E402
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_registry_is_well_formed():
+    arts = aot.registry()
+    assert len(arts) >= 12
+    for name, (fn, inputs, outputs, meta) in arts.items():
+        assert callable(fn)
+        assert inputs and outputs
+        names = [n for n, _ in inputs]
+        assert len(set(names)) == len(names), f"dup input names in {name}"
+
+
+def test_manifest_matches_registry():
+    path = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        manifest = json.load(f)
+    arts = aot.registry()
+    for name, (fn, inputs, outputs, meta) in arts.items():
+        entry = manifest["artifacts"][name]
+        assert entry["outputs"] == outputs
+        assert [i["name"] for i in entry["inputs"]] == [n for n, _ in inputs]
+        for (iname, s), mi in zip(inputs, entry["inputs"]):
+            assert list(s.shape) == mi["shape"]
+        hlo_path = os.path.join(ART_DIR, entry["file"])
+        assert os.path.exists(hlo_path)
+        with open(hlo_path) as hf:
+            text = hf.read()
+        assert "ENTRY" in text and "HloModule" in text
+
+
+def test_manifest_param_specs():
+    path = os.path.join(ART_DIR, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        manifest = json.load(f)
+    assert manifest["params"]["cnn"] == nn.cnn_param_specs()
+    assert manifest["params"]["mlp"] == nn.mlp_param_specs()
+    assert manifest["consts"]["cnn_m"] == nn.CNN_PARAMS == 246_026
+
+
+def test_lowering_is_deterministic():
+    """Same registry entry lowers to identical HLO text (hermetic AOT)."""
+    arts = aot.registry()
+    fn, inputs, _, _ = arts["quantize_f64_m200"]
+    specs = [s for _, s in inputs]
+    t1 = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    t2 = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert t1 == t2

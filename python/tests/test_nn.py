@@ -1,0 +1,142 @@
+"""NN graphs: parameter accounting, forward shapes, learning sanity, and the
+inexact local update's ADMM bookkeeping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model, nn  # noqa: E402
+
+
+def he_init(specs, seed):
+    rng = np.random.default_rng(seed)
+    flat = np.zeros(nn.param_count(specs), dtype=np.float32)
+    for s in specs:
+        if s["name"].endswith("_w"):
+            std = np.sqrt(2.0 / s["fan_in"])
+            flat[s["offset"]:s["offset"] + s["size"]] = (
+                rng.standard_normal(s["size"]) * std
+            )
+    return jnp.asarray(flat)
+
+
+def test_cnn_param_count_matches_paper_architecture():
+    # 5 convs (3x3, stride 2, pad 1, channels 16/32/64/128/128) + FC(128,10)
+    assert nn.CNN_PARAMS == 246_026
+    specs = nn.cnn_param_specs()
+    assert specs[-1]["offset"] + specs[-1]["size"] == nn.CNN_PARAMS
+    # offsets are contiguous and sorted
+    off = 0
+    for s in specs:
+        assert s["offset"] == off
+        off += s["size"]
+
+
+def test_cnn_forward_shape_and_grad():
+    flat = he_init(nn.cnn_param_specs(), 0)
+    x = jnp.asarray(np.random.default_rng(1).random((4, 28, 28, 1), dtype=np.float32))
+    logits = nn.cnn_forward(flat, x)
+    assert logits.shape == (4, 10)
+    y = jnp.asarray(np.array([0, 1, 2, 3], dtype=np.int32))
+    g = jax.grad(lambda p: nn.cross_entropy(nn.cnn_forward(p, x), y))(flat)
+    assert g.shape == flat.shape
+    assert float(jnp.sum(jnp.abs(g))) > 0
+
+
+def test_mlp_param_count():
+    assert nn.MLP_PARAMS == 784 * 64 + 64 + 64 * 10 + 10
+
+
+def test_cross_entropy_and_accuracy():
+    logits = jnp.asarray(np.array([[10.0, 0, 0], [0, 10.0, 0]], dtype=np.float32))
+    y = jnp.asarray(np.array([0, 0], dtype=np.int32))
+    assert float(nn.accuracy_count(logits, y)) == 1.0
+    ce = float(nn.cross_entropy(logits, y))
+    assert 0 < ce < 6
+
+
+def test_mlp_local_update_bookkeeping():
+    """u' = u + x' − ẑ and Δ = x' − x̂ must hold regardless of the inner
+    optimizer trajectory (that is the ADMM contract)."""
+    m = nn.MLP_PARAMS
+    k, b = 2, 8
+    rng = np.random.default_rng(3)
+    flat = he_init(nn.mlp_param_specs(), 2)
+    zeros = jnp.zeros(m, dtype=jnp.float32)
+    u = jnp.asarray(rng.standard_normal(m).astype(np.float32) * 0.01)
+    zhat = jnp.asarray(rng.standard_normal(m).astype(np.float32) * 0.01)
+    xhat = jnp.asarray(rng.standard_normal(m).astype(np.float32) * 0.01)
+    uhat = jnp.asarray(rng.standard_normal(m).astype(np.float32) * 0.01)
+    bx = jnp.asarray(rng.random((k, b, 784), dtype=np.float32))
+    by = jnp.asarray(rng.integers(0, 10, size=(k, b)).astype(np.int32))
+    nx = jnp.asarray(rng.random(m, dtype=np.float32))
+    nu = jnp.asarray(rng.random(m, dtype=np.float32))
+    out = model.mlp_local_update(
+        flat, zeros, zeros, jnp.float32(0.0), u, zhat, xhat, uhat,
+        bx, by, nx, nu, jnp.float32(0.1), jnp.float32(1e-3), jnp.float32(3.0)
+    )
+    (x_new, m_new, v_new, t_new, u_new,
+     cx_val, cx_lvl, cx_norm, cu_val, cu_lvl, cu_norm, loss) = out
+    np.testing.assert_allclose(
+        np.asarray(u_new), np.asarray(u + (x_new - zhat)), atol=1e-6
+    )
+    assert float(t_new) == float(k)
+    dx = np.asarray(x_new - xhat)
+    assert abs(float(cx_norm) - np.abs(dx).max()) < 1e-6
+    # quantization error bound per element
+    assert np.abs(np.asarray(cx_val) - dx).max() <= float(cx_norm) / 3.0 + 1e-6
+    assert float(loss) > 0
+
+
+def test_mlp_learns_toy_problem():
+    """K-step Adam local updates reduce the data loss on a separable toy
+    task — the inexact primal update must actually optimize f_i."""
+    m = nn.MLP_PARAMS
+    k, b = 5, 32
+    rng = np.random.default_rng(4)
+    flat = he_init(nn.mlp_param_specs(), 5)
+    # class c has a bump at pixels [78c, 78c+40)
+    def make_batch():
+        y = rng.integers(0, 10, size=b).astype(np.int32)
+        x = rng.random((b, 784), dtype=np.float32) * 0.1
+        for j, c in enumerate(y):
+            x[j, 78 * c: 78 * c + 40] += 1.0
+        return x, y
+
+    zeros = jnp.zeros(m, dtype=jnp.float32)
+    state = (flat, zeros, zeros, jnp.float32(0.0))
+    losses = []
+    for it in range(8):
+        bxs, bys = [], []
+        for _ in range(k):
+            x, y = make_batch()
+            bxs.append(x)
+            bys.append(y)
+        bx = jnp.asarray(np.stack(bxs))
+        by = jnp.asarray(np.stack(bys))
+        out = model.mlp_local_update(
+            state[0], state[1], state[2], state[3],
+            zeros, state[0], zeros, zeros,  # u=0, zhat=x ⇒ pure f_i descent
+            bx, by, jnp.zeros(m, jnp.float32), jnp.zeros(m, jnp.float32),
+            jnp.float32(0.0), jnp.float32(1e-3), jnp.float32(3.0)
+        )
+        state = (out[0], out[1], out[2], out[3])
+        losses.append(float(out[11]))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_nn_server_step_average():
+    m, n = 64, 3
+    rng = np.random.default_rng(6)
+    xhat = jnp.asarray(rng.standard_normal((n, m)).astype(np.float32))
+    uhat = jnp.asarray(rng.standard_normal((n, m)).astype(np.float32))
+    zhat = jnp.zeros(m, dtype=jnp.float32)
+    noise = jnp.asarray(rng.random(m, dtype=np.float32))
+    z_new, cz_val, cz_lvl, cz_norm = model.nn_server_step(
+        xhat, uhat, zhat, noise, jnp.float32(3.0)
+    )
+    np.testing.assert_allclose(
+        np.asarray(z_new), np.asarray(jnp.mean(xhat + uhat, axis=0)), atol=1e-6
+    )

@@ -1,0 +1,138 @@
+"""Pallas quantizer vs pure-jnp oracle + algebraic properties of C(Δ).
+
+This is the core L1 correctness signal: the same kernel lowers into every
+node/server artifact, so any semantic drift here corrupts the whole stack.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels.quantize import quantize  # noqa: E402
+from compile.kernels.ref import quantize_ref  # noqa: E402
+
+
+def levels_for_bits(q):
+    """S = 2^(q-1) − 1 (one bit is the sign)."""
+    return 2 ** (q - 1) - 1
+
+
+def make(m, seed, dtype, scale=1.0):
+    rng = np.random.default_rng(seed)
+    delta = (rng.standard_normal(m) * scale).astype(dtype)
+    noise = rng.random(m).astype(dtype)
+    return jnp.asarray(delta), jnp.asarray(noise)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=2048),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    q=st.integers(min_value=1, max_value=8),
+    dtype=st.sampled_from([np.float32, np.float64]),
+)
+def test_kernel_matches_ref(m, seed, q, dtype):
+    s = float(max(levels_for_bits(q), 1))
+    delta, noise = make(m, seed, dtype)
+    val_k, lvl_k, norm_k = quantize(delta, noise, s)
+    val_r, lvl_r, norm_r = quantize_ref(delta, noise, s)
+    np.testing.assert_array_equal(np.asarray(lvl_k), np.asarray(lvl_r))
+    np.testing.assert_allclose(np.asarray(val_k), np.asarray(val_r), rtol=0, atol=0)
+    assert float(norm_k) == float(norm_r)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=512),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    q=st.integers(min_value=2, max_value=8),
+)
+def test_elementwise_error_bound(m, seed, q):
+    """|C(Δ)_m − Δ_m| ≤ ‖Δ‖_max / S — one lattice interval."""
+    s = float(levels_for_bits(q))
+    delta, noise = make(m, seed, np.float64)
+    val, _, norm = quantize(delta, noise, s)
+    err = np.abs(np.asarray(val) - np.asarray(delta))
+    assert err.max() <= float(norm) / s + 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=2, max_value=512),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    q=st.integers(min_value=1, max_value=8),
+)
+def test_levels_in_range_and_signs(m, seed, q):
+    s_int = max(levels_for_bits(q), 1)
+    delta, noise = make(m, seed, np.float64)
+    val, lvl, _ = quantize(delta, noise, float(s_int))
+    lvl = np.asarray(lvl)
+    assert lvl.max() <= s_int and lvl.min() >= -s_int
+    # level sign agrees with delta sign wherever the level is nonzero
+    d = np.asarray(delta)
+    nz = lvl != 0
+    assert np.all(np.sign(lvl[nz]) == np.sign(d[nz]))
+    # dequantized value reconstructs from (level, norm): the wire only
+    # carries levels + norm, so this identity is what the rust decoder uses.
+    norm = np.abs(d).max()
+    np.testing.assert_allclose(np.asarray(val), lvl * norm / s_int, atol=1e-12)
+
+
+def test_max_element_is_exact():
+    """y == S at the max element ⇒ always rounds up ⇒ exact."""
+    delta = jnp.asarray(np.array([0.1, -3.0, 0.5], dtype=np.float64))
+    noise = jnp.asarray(np.array([0.999999, 0.999999, 0.999999]))
+    val, lvl, norm = quantize(delta, noise, 3.0)
+    assert float(norm) == 3.0
+    assert float(val[1]) == -3.0
+    assert int(lvl[1]) == -3
+
+
+def test_zero_vector():
+    delta = jnp.zeros(300, dtype=jnp.float64)
+    noise = jnp.zeros(300, dtype=jnp.float64)
+    val, lvl, norm = quantize(delta, noise, 3.0)
+    assert float(norm) == 0.0
+    assert np.all(np.asarray(val) == 0.0)
+    assert np.all(np.asarray(lvl) == 0)
+
+
+def test_unbiasedness():
+    """E[C(Δ)] = Δ over the Bernoulli draws (the QSGD property that makes
+    error feedback converge). Monte-Carlo with a tight tolerance."""
+    m, trials, s = 64, 4000, 3.0
+    rng = np.random.default_rng(7)
+    delta = jnp.asarray(rng.standard_normal(m))
+    acc = np.zeros(m)
+    for t in range(trials):
+        noise = jnp.asarray(rng.random(m))
+        val, _, _ = quantize(delta, noise, s)
+        acc += np.asarray(val)
+    mean = acc / trials
+    # std of one draw ≤ norm/(2S); CLT bound with generous 6 sigma
+    norm = float(jnp.max(jnp.abs(delta)))
+    tol = 6 * (norm / (2 * s)) / np.sqrt(trials)
+    np.testing.assert_allclose(mean, np.asarray(delta), atol=tol)
+
+
+def test_deterministic_given_noise():
+    delta, noise = make(513, 11, np.float64)
+    a = quantize(delta, noise, 7.0)
+    b = quantize(delta, noise, 7.0)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("block", [32, 256, 1024])
+def test_block_size_invariance(block):
+    """The BlockSpec tiling must not change semantics."""
+    delta, noise = make(1000, 3, np.float64)
+    v0, l0, n0 = quantize(delta, noise, 3.0, block=256)
+    v1, l1, n1 = quantize(delta, noise, 3.0, block=block)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+    np.testing.assert_allclose(np.asarray(v0), np.asarray(v1))
+    assert float(n0) == float(n1)

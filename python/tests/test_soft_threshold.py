@@ -1,0 +1,52 @@
+"""Soft-threshold Pallas kernel vs oracle + closed-form cases."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels.ref import soft_threshold_ref  # noqa: E402
+from compile.kernels.soft_threshold import soft_threshold  # noqa: E402
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=2048),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    kappa=st.floats(min_value=0.0, max_value=5.0),
+    dtype=st.sampled_from([np.float32, np.float64]),
+)
+def test_kernel_matches_ref(m, seed, kappa, dtype):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.standard_normal(m).astype(dtype))
+    out_k = soft_threshold(v, kappa)
+    out_r = soft_threshold_ref(v, kappa)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=0)
+
+
+def test_hand_cases():
+    v = jnp.asarray(np.array([3.0, -3.0, 0.5, -0.5, 0.0]))
+    out = np.asarray(soft_threshold(v, 1.0))
+    np.testing.assert_allclose(out, [2.0, -2.0, 0.0, 0.0, 0.0])
+
+
+def test_prox_optimality():
+    """S_κ(v) minimizes κ|z| + ½(z−v)²: check via subgradient conditions."""
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(400)
+    kappa = 0.3
+    z = np.asarray(soft_threshold(jnp.asarray(v), kappa))
+    # where z != 0: z - v + κ·sign(z) == 0
+    nz = z != 0
+    np.testing.assert_allclose(z[nz] - v[nz] + kappa * np.sign(z[nz]), 0, atol=1e-12)
+    # where z == 0: |v| ≤ κ
+    assert np.all(np.abs(v[~nz]) <= kappa + 1e-12)
+
+
+def test_kappa_zero_is_identity():
+    rng = np.random.default_rng(1)
+    v = rng.standard_normal(257)
+    out = np.asarray(soft_threshold(jnp.asarray(v), 0.0))
+    np.testing.assert_allclose(out, v, atol=0)

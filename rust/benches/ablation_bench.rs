@@ -1,0 +1,21 @@
+//! Reduced ablation sweeps (q bits, error feedback, compressor family,
+//! τ/P), printing the per-variant table used in DESIGN.md's design-choice
+//! discussion. Scale with QADMM_ABLATION_ITERS / QADMM_ABLATION_TRIALS.
+
+use qadmm::exp::ablation::{run_all, AblationOptions};
+use qadmm::util::timer::Stopwatch;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let opts = AblationOptions {
+        iters: env_usize("QADMM_ABLATION_ITERS", 250),
+        mc_trials: env_usize("QADMM_ABLATION_TRIALS", 2),
+        target: 1e-8,
+    };
+    let sw = Stopwatch::new();
+    let rows = run_all(&opts).expect("ablation");
+    println!("ablation bench: {} rows in {:.2}s", rows.len(), sw.elapsed_secs());
+}

@@ -1,0 +1,101 @@
+//! Per-iteration cost of the QADMM loop, per layer:
+//! * native LASSO node step / server step (L3 math only)
+//! * HLO LASSO node step / server step (PJRT dispatch + compute)
+//! * HLO MLP local update (K-step fused Adam scan)
+//! * one full sequential simulator iteration (everything together)
+//!
+//! This measures the fused-HLO vs dispatch-overhead tradeoff the §Perf pass
+//! optimizes. Artifact-backed benches skip when artifacts are missing.
+
+use qadmm::admm::sim::{AsyncSim, TrialRngs};
+use qadmm::bench_harness::Bencher;
+use qadmm::config::presets;
+use qadmm::problems::lasso::{LassoConfig, LassoProblem};
+use qadmm::problems::nn::{NnArch, NnProblem};
+use qadmm::problems::Problem;
+use qadmm::runtime::artifacts::Manifest;
+use qadmm::runtime::service::ComputeService;
+use qadmm::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Pcg64::seed_from_u64(4);
+    let paper = LassoConfig { m: 200, h: 100, n: 16, rho: 500.0, theta: 0.1 };
+
+    // --- native LASSO ---
+    let mut p = LassoProblem::generate(paper, &mut rng).unwrap();
+    let zhat = rng.normal_vec(200, 0.0, 1.0);
+    let u = rng.normal_vec(200, 0.0, 0.1);
+    let x_prev = vec![0.0; 200];
+    b.bench_val("lasso/native/node_step/m=200", 1, || {
+        p.local_update(0, &zhat, &u, &x_prev, &mut rng).unwrap()
+    });
+    let xhat: Vec<Vec<f64>> = (0..16).map(|_| rng.normal_vec(200, 0.0, 1.0)).collect();
+    let uhat: Vec<Vec<f64>> = (0..16).map(|_| rng.normal_vec(200, 0.0, 0.1)).collect();
+    b.bench_val("lasso/native/server_step/n=16", 1, || {
+        p.consensus(&xhat, &uhat).unwrap()
+    });
+
+    // --- one full simulator iteration (native backend, paper dims) ---
+    let cfg = {
+        let mut c = presets::fig3(3);
+        c.backend = qadmm::config::Backend::Native;
+        c
+    };
+    let rngs = TrialRngs::new(7);
+    let mut rng2 = Pcg64::seed_from_u64(7);
+    let mut prob = LassoProblem::generate(paper, &mut rng2).unwrap();
+    prob.set_reference_optimum(1.0); // metric value irrelevant for timing
+    let mut sim = AsyncSim::new(&cfg, &mut prob, rngs).unwrap();
+    b.bench("lasso/sim/full_iteration(native)", 1, || {
+        sim.step().unwrap();
+    });
+
+    // --- HLO-backed benches ---
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let svc = ComputeService::start("artifacts".into(), vec![]).unwrap();
+        let manifest = Manifest::load(std::path::Path::new("artifacts/manifest.json")).unwrap();
+        let mut hp = LassoProblem::generate(paper, &mut rng)
+            .unwrap()
+            .with_hlo(Box::new(svc.client()), 200, 16)
+            .unwrap();
+        // warm the executable caches
+        let _ = hp.local_update(0, &zhat, &u, &x_prev, &mut rng).unwrap();
+        let _ = hp.consensus(&xhat, &uhat).unwrap();
+        b.bench_val("lasso/hlo/node_step/m=200", 1, || {
+            hp.local_update(0, &zhat, &u, &x_prev, &mut rng).unwrap()
+        });
+        b.bench_val("lasso/hlo/server_step/n=16", 1, || {
+            hp.consensus(&xhat, &uhat).unwrap()
+        });
+
+        // MLP local update: K=5 fused Adam steps, M=50,890
+        let mut nn = NnProblem::new(
+            NnArch::Mlp,
+            4,
+            1.0,
+            1e-3,
+            Box::new(svc.client()),
+            &manifest,
+            800,
+            256,
+            std::path::Path::new("data/mnist"),
+            11,
+        )
+        .unwrap();
+        let m = nn.dim();
+        let flat = nn.init_x(&mut rng);
+        let zeros = vec![0.0; m];
+        let _ = nn.local_update(0, &flat, &zeros, &flat, &mut rng).unwrap();
+        b.bench_val("mlp/hlo/local_update(K=5,B=32)", 1, || {
+            nn.local_update(0, &flat, &zeros, &flat, &mut rng).unwrap()
+        });
+        b.bench_val("mlp/hlo/eval(test=256)", 1, || {
+            nn.test_metrics(&flat).unwrap()
+        });
+    } else {
+        println!("(artifacts not built; skipping HLO benches)");
+    }
+
+    b.finish("admm_iteration");
+}

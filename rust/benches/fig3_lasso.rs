@@ -1,0 +1,41 @@
+//! Figure-3 regeneration bench: runs the (reduced) LASSO experiment for
+//! τ ∈ {1, 3} × {QADMM, baseline} on the native backend and prints the
+//! paper's series milestones + headline reduction, with wall-clock timing.
+//!
+//! Scale with env: QADMM_FIG3_ITERS / QADMM_FIG3_TRIALS (defaults 250 / 2;
+//! the paper's setting is 700 / 10 via `qadmm fig3` or the example).
+
+use qadmm::config::Backend;
+use qadmm::exp::fig3::{run, Fig3Options};
+use qadmm::util::timer::Stopwatch;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let opts = Fig3Options {
+        taus: vec![1, 3],
+        iters: env_usize("QADMM_FIG3_ITERS", 250),
+        mc_trials: env_usize("QADMM_FIG3_TRIALS", 2),
+        backend: Backend::Native,
+        out_dir: "out".into(),
+        artifact_dir: "artifacts".into(),
+        target: 1e-8,
+    };
+    let sw = Stopwatch::new();
+    let summary = run(&opts).expect("fig3 run");
+    for s in &summary.series {
+        println!("--- fig3 {} ---", s.label);
+        print!("{}", qadmm::exp::milestones(&s.mean_recorder(), |r| r.accuracy));
+    }
+    for h in &summary.headline {
+        println!("{h}");
+    }
+    println!(
+        "fig3 bench: {} iters x {} trials x 4 configs in {:.2}s",
+        opts.iters,
+        opts.mc_trials,
+        sw.elapsed_secs()
+    );
+}

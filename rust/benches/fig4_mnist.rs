@@ -1,0 +1,51 @@
+//! Figure-4 regeneration bench (reduced): federated NN training, QADMM vs
+//! unquantized baseline, printing test-accuracy milestones + the headline
+//! bit reduction, with wall-clock timing. Defaults to the fast MLP variant;
+//! set QADMM_FIG4_ARCH=cnn for the paper's 6-layer CNN (M = 246,026).
+//!
+//! Scale with env: QADMM_FIG4_ITERS / QADMM_FIG4_TRIALS / QADMM_FIG4_TRAIN.
+
+use qadmm::exp::fig4::{run, Fig4Options};
+use qadmm::problems::nn::NnArch;
+use qadmm::util::timer::Stopwatch;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("(artifacts not built; skipping fig4 bench)");
+        return;
+    }
+    let arch = match std::env::var("QADMM_FIG4_ARCH").as_deref() {
+        Ok("cnn") => NnArch::Cnn,
+        _ => NnArch::Mlp,
+    };
+    let opts = Fig4Options {
+        arch,
+        iters: env_usize("QADMM_FIG4_ITERS", 20),
+        mc_trials: env_usize("QADMM_FIG4_TRIALS", 1),
+        n_train: env_usize("QADMM_FIG4_TRAIN", 1500),
+        n_test: 512,
+        target: 0.9,
+        out_dir: "out".into(),
+        artifact_dir: "artifacts".into(),
+        data_dir: "data/mnist".into(),
+    };
+    let sw = Stopwatch::new();
+    let summary = run(&opts).expect("fig4 run");
+    for s in &summary.series {
+        println!("--- fig4 {} ---", s.label);
+        print!("{}", qadmm::exp::milestones(&s.mean_recorder(), |r| r.test_acc));
+    }
+    for h in &summary.headline {
+        println!("{h}");
+    }
+    println!(
+        "fig4 bench: arch={arch:?} {} iters x {} trials x 2 configs in {:.2}s",
+        opts.iters,
+        opts.mc_trials,
+        sw.elapsed_secs()
+    );
+}

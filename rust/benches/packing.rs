@@ -1,0 +1,48 @@
+//! Bit-packing microbenches: pack/unpack of q-bit sign-magnitude levels and
+//! the Elias-γ sparse index coder.
+
+use qadmm::bench_harness::Bencher;
+use qadmm::compress::packing::{pack_levels, unpack_levels, BitReader, BitWriter};
+use qadmm::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Pcg64::seed_from_u64(2);
+    let m = 1_000_000;
+
+    for q in [3u8, 8] {
+        let s = (1i32 << (q - 1)) - 1;
+        let levels: Vec<i32> =
+            (0..m).map(|_| rng.gen_range((2 * s + 1) as usize) as i32 - s).collect();
+        b.bench_val(&format!("pack_levels/q={q}/m={m}"), m, || pack_levels(&levels, q));
+        let packed = pack_levels(&levels, q);
+        b.bench_val(&format!("unpack_levels/q={q}/m={m}"), m, || {
+            unpack_levels(&packed, m, q).unwrap()
+        });
+    }
+
+    // Elias-γ gap coding (top-k index stream)
+    let gaps: Vec<u64> = (0..100_000).map(|_| 1 + rng.gen_range(1000) as u64).collect();
+    b.bench_val("elias_gamma/write/100k", gaps.len(), || {
+        let mut w = BitWriter::new();
+        for &g in &gaps {
+            w.put_elias_gamma(g);
+        }
+        w.finish()
+    });
+    let mut w = BitWriter::new();
+    for &g in &gaps {
+        w.put_elias_gamma(g);
+    }
+    let bytes = w.finish();
+    b.bench_val("elias_gamma/read/100k", gaps.len(), || {
+        let mut r = BitReader::new(&bytes);
+        let mut acc = 0u64;
+        for _ in 0..gaps.len() {
+            acc = acc.wrapping_add(r.get_elias_gamma().unwrap());
+        }
+        acc
+    });
+
+    b.finish("packing");
+}

@@ -1,0 +1,60 @@
+//! Hot-path microbenches for the compressor C(Δ): quantize / dequantize /
+//! full compress (incl. wire packing) / decode, across sizes and q. This is
+//! the L3 perf target (EXPERIMENTS.md §Perf).
+//!
+//!     cargo bench --bench quantizer     (QADMM_BENCH_FAST=1 for smoke)
+
+use qadmm::bench_harness::Bencher;
+use qadmm::compress::qsgd::Qsgd;
+use qadmm::compress::{Compressor, CompressorKind};
+use qadmm::util::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Pcg64::seed_from_u64(1);
+
+    for &m in &[200usize, 10_000, 1_000_000] {
+        let delta = rng.normal_vec(m, 0.0, 1.0);
+        let noise = rng.uniform_vec_f64(m);
+        let q = Qsgd::new(3);
+        b.bench_val(&format!("qsgd3/quantize_with_noise/m={m}"), m, || {
+            q.quantize_with_noise(&delta, &noise)
+        });
+        let (levels, norm) = q.quantize_with_noise(&delta, &noise);
+        b.bench_val(&format!("qsgd3/dequantize/m={m}"), m, || {
+            q.dequantize(&levels, norm)
+        });
+        b.bench_val(&format!("qsgd3/compress_full(rng+pack)/m={m}"), m, || {
+            q.compress(&delta, &mut rng)
+        });
+        let wire = q.from_levels(&levels, norm).wire;
+        b.bench_val(&format!("qsgd3/decode/m={m}"), m, || {
+            q.decode(&wire, m).unwrap()
+        });
+    }
+
+    // q sweep at fixed size
+    let m = 100_000;
+    let delta = rng.normal_vec(m, 0.0, 1.0);
+    for q in [2u8, 3, 4, 8] {
+        let c = Qsgd::new(q);
+        b.bench_val(&format!("qsgd{q}/compress_full/m={m}"), m, || {
+            c.compress(&delta, &mut rng)
+        });
+    }
+
+    // other compressor families at the same size
+    for kind in [
+        CompressorKind::Sign,
+        CompressorKind::TopK { frac_permille: 10 },
+        CompressorKind::RandK { frac_permille: 10 },
+        CompressorKind::Identity,
+    ] {
+        let c = kind.build();
+        b.bench_val(&format!("{}/compress_full/m={m}", kind.label()), m, || {
+            c.compress(&delta, &mut rng)
+        });
+    }
+
+    b.finish("quantizer");
+}

@@ -1,0 +1,55 @@
+//! §4's motivating communication-cost table, regenerated with *measured*
+//! wire bytes: per-iteration uplink cost of one node for M = 10⁷ parameters
+//! (the paper's "640 MB per iteration" example) across precisions, plus the
+//! exact bytes of every compressor at practical sizes.
+
+use qadmm::bench_harness::Bencher;
+use qadmm::compress::{Compressor, CompressorKind};
+use qadmm::util::rng::Pcg64;
+use qadmm::util::timer::fmt_count;
+
+fn main() {
+    let mut rng = Pcg64::seed_from_u64(3);
+
+    println!("--- §4 motivating table: one node's uplink per iteration (x and u) ---");
+    println!("{:>12} {:>14} {:>14} {:>12}", "scheme", "bits/scalar", "M=1e7 bytes", "vs fp64");
+    // measure on a 1e5 slice and scale exactly (frames are linear in M
+    // apart from the constant header)
+    let m_probe = 100_000usize;
+    let m_target = 10_000_000f64;
+    let delta = rng.normal_vec(m_probe, 0.0, 1.0);
+    let schemes: Vec<(String, CompressorKind)> = vec![
+        ("fp64".into(), CompressorKind::Identity),
+        ("qsgd8".into(), CompressorKind::Qsgd { bits: 8 }),
+        ("qsgd4".into(), CompressorKind::Qsgd { bits: 4 }),
+        ("qsgd3".into(), CompressorKind::Qsgd { bits: 3 }),
+        ("sign".into(), CompressorKind::Sign),
+        ("topk1%".into(), CompressorKind::TopK { frac_permille: 10 }),
+    ];
+    let mut fp64_bytes = 0f64;
+    for (name, kind) in &schemes {
+        let c = kind.build();
+        let wire = c.compress(&delta, &mut rng).wire;
+        let bits_per_scalar = wire.len() as f64 * 8.0 / m_probe as f64;
+        // the paper counts both x and u on the uplink: 2 vectors
+        let bytes_1e7 = 2.0 * bits_per_scalar * m_target / 8.0;
+        if name == "fp64" {
+            fp64_bytes = bytes_1e7;
+        }
+        println!(
+            "{name:>12} {bits_per_scalar:>14.3} {:>13}B {:>11.1}%",
+            fmt_count(bytes_1e7),
+            100.0 * bytes_1e7 / fp64_bytes
+        );
+    }
+
+    // end-to-end wire timing: how long does encoding 2×M scalars take
+    let mut b = Bencher::new();
+    for kind in [CompressorKind::Qsgd { bits: 3 }, CompressorKind::Identity] {
+        let c = kind.build();
+        b.bench_val(&format!("{}/encode_uplink/m={m_probe}", kind.label()), m_probe, || {
+            (c.compress(&delta, &mut rng), c.compress(&delta, &mut rng))
+        });
+    }
+    b.finish("wire_cost");
+}

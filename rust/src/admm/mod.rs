@@ -1,0 +1,15 @@
+//! The paper's coordination contribution: asynchronous consensus ADMM with
+//! compressed, error-fed-back exchange (QADMM, Algorithm 1).
+//!
+//! * [`oracle`] — the `simulate-async()` oracle (§5: two groups with
+//!   selection probabilities 0.1 / 0.8).
+//! * [`scheduler`] — the server's bounded-staleness bookkeeping (minimum
+//!   arrivals `P`, per-node staleness counters `d_i`, forcing at τ−1).
+//! * [`sim`] — the deterministic sequential simulator executing Algorithm 1
+//!   verbatim (the reproducible path behind every figure).
+//! * [`runner`] — the Monte-Carlo trial harness and series averaging.
+
+pub mod oracle;
+pub mod runner;
+pub mod scheduler;
+pub mod sim;

@@ -1,0 +1,105 @@
+//! `simulate-async()`: which nodes complete their compute + communication
+//! within the next iteration.
+//!
+//! §5.1 (LASSO): the N nodes are split once into two fixed halves; members
+//! of the slow half are selected w.p. 0.1 each iteration, the fast half
+//! w.p. 0.8. §5.2 (MNIST): the grouping is redrawn on every call with equal
+//! probability per node.
+
+use crate::config::OracleConfig;
+use crate::util::rng::Pcg64;
+
+pub struct AsyncOracle {
+    cfg: OracleConfig,
+    /// true = fast group (selection probability `p_fast`).
+    fast: Vec<bool>,
+}
+
+impl AsyncOracle {
+    pub fn new(n: usize, cfg: OracleConfig, rng: &mut Pcg64) -> Self {
+        let mut o = Self { cfg, fast: vec![false; n] };
+        o.assign_groups(rng);
+        o
+    }
+
+    fn assign_groups(&mut self, rng: &mut Pcg64) {
+        let n = self.fast.len();
+        if self.cfg.regroup_each_call {
+            // §5.2: independent fair coin per node, per call
+            for f in &mut self.fast {
+                *f = rng.bernoulli(0.5);
+            }
+        } else {
+            // §5.1: a fixed random half-split
+            self.fast = vec![false; n];
+            for &i in rng.choose_k(n, n / 2).iter() {
+                self.fast[i] = true;
+            }
+        }
+    }
+
+    /// One oracle draw: the set of nodes that will complete next iteration.
+    pub fn sample(&mut self, rng: &mut Pcg64) -> Vec<bool> {
+        if self.cfg.regroup_each_call {
+            self.assign_groups(rng);
+        }
+        self.fast
+            .iter()
+            .map(|&fast| rng.bernoulli(if fast { self.cfg.p_fast } else { self.cfg.p_slow }))
+            .collect()
+    }
+
+    pub fn fast_mask(&self) -> &[bool] {
+        &self.fast
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_split_is_half_and_stable() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut o = AsyncOracle::new(16, OracleConfig::default(), &mut rng);
+        assert_eq!(o.fast_mask().iter().filter(|&&f| f).count(), 8);
+        let before = o.fast_mask().to_vec();
+        let _ = o.sample(&mut rng);
+        assert_eq!(o.fast_mask(), &before[..]);
+    }
+
+    #[test]
+    fn selection_rates_match_probabilities() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let cfg = OracleConfig { p_slow: 0.1, p_fast: 0.8, regroup_each_call: false };
+        let mut o = AsyncOracle::new(16, cfg, &mut rng);
+        let fast = o.fast_mask().to_vec();
+        let trials = 20_000;
+        let mut counts = vec![0usize; 16];
+        for _ in 0..trials {
+            for (c, sel) in counts.iter_mut().zip(o.sample(&mut rng)) {
+                *c += sel as usize;
+            }
+        }
+        for (i, c) in counts.iter().enumerate() {
+            let rate = *c as f64 / trials as f64;
+            let expect = if fast[i] { 0.8 } else { 0.1 };
+            assert!((rate - expect).abs() < 0.02, "node {i}: rate={rate} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn regroup_mode_selects_at_mixture_rate() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let cfg = OracleConfig { p_slow: 0.1, p_fast: 0.8, regroup_each_call: true };
+        let mut o = AsyncOracle::new(8, cfg, &mut rng);
+        let trials = 20_000;
+        let mut total = 0usize;
+        for _ in 0..trials {
+            total += o.sample(&mut rng).iter().filter(|&&s| s).count();
+        }
+        let rate = total as f64 / (trials * 8) as f64;
+        // mixture: 0.5·0.1 + 0.5·0.8 = 0.45
+        assert!((rate - 0.45).abs() < 0.01, "rate={rate}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Monte-Carlo trial harness: run one configuration over `mc_trials`
+//! independent trials (fresh data, oracle schedule and quantizer noise per
+//! trial, all derived from `seed + trial`), then average the metric series
+//! — exactly how the paper's figures are produced.
+
+use crate::config::ExperimentConfig;
+use crate::metrics::RunRecorder;
+use crate::problems::Problem;
+use crate::util::stats;
+
+use super::sim::{AsyncSim, TrialRngs};
+
+/// Averaged curves across trials (aligned on the eval grid).
+#[derive(Clone, Debug)]
+pub struct McResult {
+    pub trials: Vec<RunRecorder>,
+    pub iters: Vec<f64>,
+    pub mean_accuracy: Vec<f64>,
+    pub mean_test_acc: Vec<f64>,
+    pub mean_loss: Vec<f64>,
+    pub mean_comm_bits: Vec<f64>,
+}
+
+impl McResult {
+    fn from_trials(trials: Vec<RunRecorder>) -> Self {
+        assert!(!trials.is_empty());
+        let len = trials.iter().map(|t| t.records.len()).min().unwrap();
+        let trimmed: Vec<Vec<&crate::metrics::IterRecord>> =
+            trials.iter().map(|t| t.records.iter().take(len).collect()).collect();
+        let series = |f: &dyn Fn(&crate::metrics::IterRecord) -> f64| -> Vec<Vec<f64>> {
+            trimmed.iter().map(|t| t.iter().map(|r| f(r)).collect()).collect()
+        };
+        let iters = trimmed[0].iter().map(|r| r.iter as f64).collect();
+        let mean_accuracy = stats::mean_series(&series(&|r| r.accuracy));
+        let mean_test_acc = stats::mean_series(&series(&|r| r.test_acc));
+        let mean_loss = stats::mean_series(&series(&|r| r.loss));
+        let mean_comm_bits = stats::mean_series(&series(&|r| r.comm_bits));
+        Self { trials, iters, mean_accuracy, mean_test_acc, mean_loss, mean_comm_bits }
+    }
+
+    /// A recorder carrying the averaged series (for the summary helpers).
+    pub fn mean_recorder(&self) -> RunRecorder {
+        let mut rec = RunRecorder::new();
+        for i in 0..self.iters.len() {
+            rec.push(crate::metrics::IterRecord {
+                iter: self.iters[i] as usize,
+                comm_bits: self.mean_comm_bits[i],
+                accuracy: self.mean_accuracy[i],
+                test_acc: self.mean_test_acc[i],
+                loss: self.mean_loss[i],
+                active_nodes: 0,
+                wall_s: 0.0,
+            });
+        }
+        rec
+    }
+}
+
+/// Builds a fresh problem for each trial. Receives the trial seed and the
+/// dedicated data RNG (fork 1 of the trial root) so that, for a fixed seed,
+/// every configuration sees identical data.
+pub type ProblemFactory<'f> =
+    dyn FnMut(u64, &mut crate::util::rng::Pcg64) -> anyhow::Result<Box<dyn Problem>> + 'f;
+
+pub fn trial_seed(base_seed: u64, trial: usize) -> u64 {
+    base_seed.wrapping_add(1_000_003u64.wrapping_mul(trial as u64 + 1))
+}
+
+/// Run `cfg.mc_trials` trials and average.
+pub fn run_mc(cfg: &ExperimentConfig, factory: &mut ProblemFactory) -> anyhow::Result<McResult> {
+    cfg.validate()?;
+    let mut trials = Vec::with_capacity(cfg.mc_trials);
+    for t in 0..cfg.mc_trials {
+        let seed = trial_seed(cfg.seed, t);
+        let mut rngs = TrialRngs::new(seed);
+        let mut problem = factory(seed, &mut rngs.data)?;
+        let sim = AsyncSim::new(cfg, problem.as_mut(), rngs)?;
+        let recorder = sim.run(cfg.iters)?;
+        crate::util::log::debug(
+            "runner",
+            &format!("{}: trial {t} done ({} records)", cfg.name, recorder.records.len()),
+        );
+        trials.push(recorder);
+    }
+    Ok(McResult::from_trials(trials))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+    use crate::problems::lasso::{LassoConfig, LassoProblem};
+
+    fn lasso_factory(
+        cfg: &ExperimentConfig,
+    ) -> impl FnMut(u64, &mut crate::util::rng::Pcg64) -> anyhow::Result<Box<dyn Problem>> + '_
+    {
+        move |_seed, data_rng| {
+            let (m, h, n, rho, theta) = match cfg.problem {
+                crate::config::ProblemKind::Lasso { m, h, n, rho, theta } => {
+                    (m, h, n, rho, theta)
+                }
+                _ => unreachable!(),
+            };
+            let p =
+                LassoProblem::generate(LassoConfig { m, h, n, rho, theta }, data_rng)?;
+            Ok(Box::new(p) as Box<dyn Problem>)
+        }
+    }
+
+    #[test]
+    fn qadmm_converges_on_small_lasso() {
+        let mut cfg = presets::ci_lasso();
+        cfg.mc_trials = 2;
+        cfg.iters = 250;
+        let mut factory = lasso_factory(&cfg);
+        let res = run_mc(&cfg, &mut factory).unwrap();
+        assert_eq!(res.trials.len(), 2);
+        let last = *res.mean_accuracy.last().unwrap();
+        let first = res.mean_accuracy[0];
+        assert!(last < 1e-6, "final accuracy {last}");
+        assert!(last < first * 1e-3, "no convergence: {first} -> {last}");
+        // comm bits strictly increasing
+        assert!(res.mean_comm_bits.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn identical_seed_identical_trajectories() {
+        let cfg = presets::ci_lasso();
+        let mut f1 = lasso_factory(&cfg);
+        let a = run_mc(&cfg, &mut f1).unwrap();
+        let mut f2 = lasso_factory(&cfg);
+        let b = run_mc(&cfg, &mut f2).unwrap();
+        assert_eq!(a.mean_accuracy, b.mean_accuracy);
+        assert_eq!(a.mean_comm_bits, b.mean_comm_bits);
+    }
+
+    #[test]
+    fn baseline_uses_more_bits_for_same_iterations() {
+        let cfg = presets::ci_lasso();
+        let mut f = lasso_factory(&cfg);
+        let q = run_mc(&cfg, &mut f).unwrap();
+        let mut base_cfg = cfg.clone();
+        base_cfg.compressor = crate::compress::CompressorKind::Identity;
+        let mut f2 = lasso_factory(&base_cfg);
+        let b = run_mc(&base_cfg, &mut f2).unwrap();
+        let q_bits = *q.mean_comm_bits.last().unwrap();
+        let b_bits = *b.mean_comm_bits.last().unwrap();
+        assert!(
+            q_bits < 0.2 * b_bits,
+            "expected ≥80% wire reduction: qadmm={q_bits} baseline={b_bits}"
+        );
+        // and both converge comparably
+        let qa = *q.mean_accuracy.last().unwrap();
+        let ba = *b.mean_accuracy.last().unwrap();
+        assert!(qa < 1e-6 && ba < 1e-6, "qadmm={qa} baseline={ba}");
+    }
+}

@@ -1,0 +1,146 @@
+//! Server-side bounded-staleness scheduling (Algorithm 1 lines 27–40):
+//! per-node staleness counters d_i, forced inclusion at d_i = τ−1, and the
+//! minimum-arrivals threshold P.
+
+/// Bookkeeping for the async trigger rule. `advance` consumes the active
+//  set of iteration r plus an oracle draw and produces A_{r+1}.
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    d: Vec<usize>,
+    tau: usize,
+    p_min: usize,
+}
+
+impl Scheduler {
+    pub fn new(n: usize, tau: usize, p_min: usize) -> Self {
+        assert!(tau >= 1 && (1..=n).contains(&p_min));
+        Self { d: vec![0; n], tau, p_min }
+    }
+
+    /// Algorithm 1 lines 28–40. `oracle` draws additional samples if the
+    /// assembled A_{r+1} is smaller than P (the server keeps waiting for
+    /// arrivals until at least P nodes have reported).
+    ///
+    /// Counter semantics: d_i is the node's staleness *after* round r. Any
+    /// node whose staleness has reached τ−1 is forced into A_{r+1} (the
+    /// server waits for it), so no update is ever older than τ iterations
+    /// and τ = 1 degenerates to the synchronous algorithm — every node is
+    /// forced every round, exactly the paper's "τ=1 corresponds to the
+    /// synchronous case".
+    pub fn advance(
+        &mut self,
+        active_r: &[bool],
+        mut oracle: impl FnMut() -> Vec<bool>,
+    ) -> Vec<bool> {
+        let n = self.d.len();
+        debug_assert_eq!(active_r.len(), n);
+        for i in 0..n {
+            if active_r[i] {
+                self.d[i] = 0;
+            } else {
+                self.d[i] += 1;
+            }
+        }
+        let mut next = oracle();
+        debug_assert_eq!(next.len(), n);
+        for i in 0..n {
+            if self.d[i] >= self.tau - 1 {
+                next[i] = true;
+            }
+        }
+        // P-threshold: |A_{r+1}| ≥ P (merge further oracle draws, i.e. the
+        // server waits longer so more nodes complete). A pathological
+        // oracle that never selects anyone is broken out of by forcing the
+        // stalest nodes — the server just waits for them.
+        let mut attempts = 0usize;
+        while next.iter().filter(|&&a| a).count() < self.p_min {
+            attempts += 1;
+            if attempts > 1000 {
+                let mut order: Vec<usize> = (0..n).collect();
+                order.sort_by_key(|&i| std::cmp::Reverse(self.d[i]));
+                for &i in &order {
+                    if next.iter().filter(|&&a| a).count() >= self.p_min {
+                        break;
+                    }
+                    next[i] = true;
+                }
+                break;
+            }
+            for (dst, extra) in next.iter_mut().zip(oracle()) {
+                *dst |= extra;
+            }
+        }
+        next
+    }
+
+    pub fn staleness(&self) -> &[usize] {
+        &self.d
+    }
+
+    pub fn tau(&self) -> usize {
+        self.tau
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_one_is_synchronous() {
+        let mut s = Scheduler::new(4, 1, 1);
+        let all = vec![true; 4];
+        // even with an oracle that picks nobody, every node is forced
+        let next = s.advance(&all, || vec![false; 4]);
+        assert_eq!(next, vec![true; 4]);
+        let next2 = s.advance(&next, || vec![false; 4]);
+        assert_eq!(next2, vec![true; 4]);
+    }
+
+    #[test]
+    fn no_node_skips_more_than_tau_minus_one() {
+        let tau = 3;
+        let mut s = Scheduler::new(5, tau, 1);
+        let mut active = vec![true; 5];
+        let mut skipped = vec![0usize; 5];
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(9);
+        for _ in 0..500 {
+            let next = s.advance(&active, || (0..5).map(|_| rng.bernoulli(0.3)).collect());
+            for i in 0..5 {
+                if next[i] {
+                    skipped[i] = 0;
+                } else {
+                    skipped[i] += 1;
+                    assert!(skipped[i] <= tau - 1, "node {i} skipped {}", skipped[i]);
+                }
+            }
+            active = next;
+        }
+    }
+
+    #[test]
+    fn p_threshold_is_enforced() {
+        let mut s = Scheduler::new(6, 10, 3);
+        let mut calls = 0;
+        let next = s.advance(&vec![true; 6], || {
+            calls += 1;
+            // each draw picks exactly one distinct node
+            let mut v = vec![false; 6];
+            v[calls % 6] = true;
+            v
+        });
+        assert!(next.iter().filter(|&&a| a).count() >= 3);
+        assert!(calls >= 3);
+    }
+
+    #[test]
+    fn staleness_counters_track() {
+        let mut s = Scheduler::new(3, 5, 1);
+        // node 2 never active via oracle
+        let a0 = vec![true, true, false];
+        let next = s.advance(&a0, || vec![true, true, false]);
+        assert_eq!(s.staleness(), &[0, 0, 1]);
+        let _ = s.advance(&next, || vec![true, true, false]);
+        assert_eq!(s.staleness(), &[0, 0, 2]);
+    }
+}

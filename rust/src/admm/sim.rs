@@ -1,0 +1,249 @@
+//! The sequential QADMM simulator: Algorithm 1, executed deterministically.
+//!
+//! This is the reproducible engine behind every figure. All randomness is
+//! split into disjoint PCG64 streams (data / oracle / quantizer / batches /
+//! init) so that two runs with the same seed but different compressors see
+//! *identical* data, oracle schedules and batch orders — the comparison the
+//! paper's figures make.
+
+use crate::comm::accounting::CommAccounting;
+use crate::comm::message::MSG_HEADER_BYTES;
+use crate::compress::error_feedback::EstimateTracker;
+use crate::compress::Compressor;
+use crate::config::ExperimentConfig;
+use crate::metrics::{IterRecord, RunRecorder};
+use crate::problems::Problem;
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+use super::oracle::AsyncOracle;
+use super::scheduler::Scheduler;
+
+/// Disjoint RNG streams for one trial. The data stream (fork 1) is consumed
+/// by the problem factory; the simulator takes the rest.
+pub struct TrialRngs {
+    pub data: Pcg64,
+    pub oracle: Pcg64,
+    pub quant: Pcg64,
+    pub batches: Pcg64,
+    pub init: Pcg64,
+}
+
+impl TrialRngs {
+    pub fn new(seed: u64) -> Self {
+        let mut root = Pcg64::seed_from_u64(seed);
+        Self {
+            data: root.fork(1),
+            oracle: root.fork(2),
+            quant: root.fork(3),
+            batches: root.fork(4),
+            init: root.fork(5),
+        }
+    }
+}
+
+pub struct AsyncSim<'a> {
+    cfg: &'a ExperimentConfig,
+    problem: &'a mut dyn Problem,
+    compressor: Box<dyn Compressor>,
+    m: usize,
+    n: usize,
+    // true iterates
+    x: Vec<Vec<f64>>,
+    u: Vec<Vec<f64>>,
+    z: Vec<f64>,
+    // shared estimate banks (server view == node mirrors; transport is the
+    // lossless frame of the lossy code, so one copy suffices in-process)
+    xhat: Vec<EstimateTracker>,
+    uhat: Vec<EstimateTracker>,
+    zhat: EstimateTracker,
+    active: Vec<bool>,
+    scheduler: Scheduler,
+    oracle: AsyncOracle,
+    accounting: CommAccounting,
+    rng_oracle: Pcg64,
+    rng_quant: Pcg64,
+    rng_batches: Pcg64,
+    recorder: RunRecorder,
+    clock: Stopwatch,
+    iter: usize,
+}
+
+impl<'a> AsyncSim<'a> {
+    /// Initialize per Algorithm 1 lines 1–9 (full-precision first exchange).
+    pub fn new(
+        cfg: &'a ExperimentConfig,
+        problem: &'a mut dyn Problem,
+        mut rngs: TrialRngs,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let m = problem.dim();
+        let n = problem.n_nodes();
+        let ef = cfg.error_feedback;
+        let x0 = problem.init_x(&mut rngs.init);
+        anyhow::ensure!(x0.len() == m, "init_x returned wrong dimension");
+        let x: Vec<Vec<f64>> = vec![x0.clone(); n];
+        let u: Vec<Vec<f64>> = vec![vec![0.0; m]; n];
+
+        let mut accounting = CommAccounting::new(n);
+        // lines 1–4: nodes transmit x⁰, u⁰ at full precision, charged at the
+        // paper's stated rate ("e.g., 32-bits per scalar")
+        for i in 0..n {
+            accounting.record_uplink(i, MSG_HEADER_BYTES * 8 + 2 * m as u64 * 32);
+        }
+        let xhat: Vec<EstimateTracker> =
+            (0..n).map(|_| EstimateTracker::new(x0.clone(), ef)).collect();
+        let uhat: Vec<EstimateTracker> =
+            (0..n).map(|_| EstimateTracker::new(vec![0.0; m], ef)).collect();
+
+        // line 7: z⁰ from the (exact) estimates; line 8: broadcast full precision
+        let xs: Vec<Vec<f64>> = xhat.iter().map(|t| t.estimate().to_vec()).collect();
+        let us: Vec<Vec<f64>> = uhat.iter().map(|t| t.estimate().to_vec()).collect();
+        let z = problem.consensus(&xs, &us)?;
+        accounting.record_broadcast(MSG_HEADER_BYTES * 8 + m as u64 * 32);
+        let zhat = EstimateTracker::new(z.clone(), ef);
+
+        let oracle = AsyncOracle::new(n, cfg.oracle, &mut rngs.oracle);
+        Ok(Self {
+            compressor: cfg.compressor.build(),
+            m,
+            n,
+            x,
+            u,
+            z,
+            xhat,
+            uhat,
+            zhat,
+            active: vec![true; n], // A₀ = V: every node computes first
+            scheduler: Scheduler::new(n, cfg.tau, cfg.p_min),
+            oracle,
+            accounting,
+            rng_oracle: rngs.oracle,
+            rng_quant: rngs.quant,
+            rng_batches: rngs.batches,
+            recorder: RunRecorder::new(),
+            clock: Stopwatch::new(),
+            iter: 0,
+            cfg,
+            problem,
+        })
+    }
+
+    /// One iteration of Algorithm 1 (node updates for A_r, uplink
+    /// compression, server consensus, downlink broadcast, scheduling).
+    pub fn step(&mut self) -> anyhow::Result<()> {
+        let active_count = self.active.iter().filter(|&&a| a).count();
+        let mut train_loss = 0.0;
+        // --- nodes in A_r (lines 18–22) ---
+        for i in 0..self.n {
+            if !self.active[i] {
+                continue;
+            }
+            let zhat_view = self.zhat.estimate().to_vec();
+            let (x_new, loss) = self.problem.local_update(
+                i,
+                &zhat_view,
+                &self.u[i],
+                &self.x[i],
+                &mut self.rng_batches,
+            )?;
+            anyhow::ensure!(x_new.len() == self.m, "local_update wrong dim");
+            // eq. (9b): u ← u + (x_new − ẑ)
+            for j in 0..self.m {
+                self.u[i][j] += x_new[j] - zhat_view[j];
+            }
+            self.x[i] = x_new;
+            train_loss += loss;
+
+            // eqs. (10)–(14): compress deltas, update both estimate banks
+            let dx = self.xhat[i].make_delta(&self.x[i]);
+            let du = self.uhat[i].make_delta(&self.u[i]);
+            let cx = self.compressor.compress(&dx, &mut self.rng_quant);
+            let cu = self.compressor.compress(&du, &mut self.rng_quant);
+            self.accounting.record_uplink(
+                i,
+                MSG_HEADER_BYTES * 8 + cx.wire_bits() + cu.wire_bits(),
+            );
+            self.xhat[i].commit(&cx.dequantized);
+            self.uhat[i].commit(&cu.dequantized);
+        }
+
+        // --- server (lines 27–43) ---
+        let xs: Vec<Vec<f64>> = self.xhat.iter().map(|t| t.estimate().to_vec()).collect();
+        let us: Vec<Vec<f64>> = self.uhat.iter().map(|t| t.estimate().to_vec()).collect();
+        self.z = self.problem.consensus(&xs, &us)?;
+        let dz = self.zhat.make_delta(&self.z);
+        let cz = self.compressor.compress(&dz, &mut self.rng_quant);
+        self.accounting.record_broadcast(MSG_HEADER_BYTES * 8 + cz.wire_bits());
+        self.zhat.commit(&cz.dequantized);
+
+        let next = self
+            .scheduler
+            .advance(&self.active, || self.oracle.sample(&mut self.rng_oracle));
+        self.active = next;
+        self.iter += 1;
+
+        if self.iter % self.cfg.eval_every == 0 {
+            let metrics = self.problem.evaluate(&self.x, &self.u, &self.z)?;
+            self.recorder.push(IterRecord {
+                iter: self.iter,
+                comm_bits: self.accounting.normalized_bits(self.m),
+                accuracy: metrics.accuracy,
+                test_acc: metrics.test_acc,
+                loss: if metrics.loss.is_nan() {
+                    train_loss / active_count.max(1) as f64
+                } else {
+                    metrics.loss
+                },
+                active_nodes: active_count,
+                wall_s: self.clock.elapsed_secs(),
+            });
+        }
+        Ok(())
+    }
+
+    pub fn run(mut self, iters: usize) -> anyhow::Result<RunRecorder> {
+        for _ in 0..iters {
+            self.step()?;
+        }
+        Ok(self.recorder)
+    }
+
+    // ---- state accessors (tests + invariant checks) ----
+
+    pub fn iter(&self) -> usize {
+        self.iter
+    }
+
+    pub fn z(&self) -> &[f64] {
+        &self.z
+    }
+
+    pub fn x(&self) -> &[Vec<f64>] {
+        &self.x
+    }
+
+    pub fn u(&self) -> &[Vec<f64>] {
+        &self.u
+    }
+
+    pub fn x_estimate(&self, i: usize) -> &[f64] {
+        self.xhat[i].estimate()
+    }
+
+    pub fn z_estimate(&self) -> &[f64] {
+        self.zhat.estimate()
+    }
+
+    pub fn accounting(&self) -> &CommAccounting {
+        &self.accounting
+    }
+
+    pub fn recorder(&self) -> &RunRecorder {
+        &self.recorder
+    }
+
+    pub fn active(&self) -> &[bool] {
+        &self.active
+    }
+}

@@ -1,0 +1,138 @@
+//! In-house micro/meso benchmark harness (criterion is not available in
+//! the offline crate universe). Warmup + adaptive sampling, robust stats,
+//! optional throughput units, and a one-line-per-bench report identical
+//! across all `cargo bench` targets.
+
+use crate::util::stats;
+use crate::util::timer::{fmt_count, fmt_duration, Stopwatch};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub p99_s: f64,
+    /// items/sec if `items_per_call` was set.
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        let tp = match self.throughput {
+            Some(t) => format!("  [{} items/s]", fmt_count(t)),
+            None => String::new(),
+        };
+        format!(
+            "{:44} median {:>10}  mean {:>10}  min {:>10}  p99 {:>10}  (n={}){}",
+            self.name,
+            fmt_duration(self.median_s),
+            fmt_duration(self.mean_s),
+            fmt_duration(self.min_s),
+            fmt_duration(self.p99_s),
+            self.samples,
+            tp
+        )
+    }
+}
+
+pub struct Bencher {
+    /// Target measurement time per bench (seconds).
+    pub target_time: f64,
+    /// Max samples per bench.
+    pub max_samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // QADMM_BENCH_FAST=1 shrinks budgets for CI smoke runs.
+        let fast = std::env::var("QADMM_BENCH_FAST").is_ok();
+        Self {
+            target_time: if fast { 0.2 } else { 1.0 },
+            max_samples: if fast { 10 } else { 50 },
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Benchmark `f`; `items_per_call` (if nonzero) yields a throughput.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, items_per_call: usize, mut f: F) {
+        // Warmup: run until ~10% of target time has elapsed (at least once).
+        let warm = Stopwatch::new();
+        loop {
+            f();
+            if warm.elapsed_secs() > self.target_time * 0.1 {
+                break;
+            }
+        }
+        // Calibrate inner batch so one sample takes ≥ ~200µs (timer noise).
+        let t0 = Instant::now();
+        f();
+        let single = t0.elapsed().as_secs_f64().max(1e-9);
+        let batch = (2e-4 / single).ceil().max(1.0) as usize;
+
+        let mut samples = Vec::new();
+        let total = Stopwatch::new();
+        while samples.len() < self.max_samples && total.elapsed_secs() < self.target_time {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / batch as f64);
+        }
+        let mean_s = stats::mean(&samples);
+        let result = BenchResult {
+            name: name.to_string(),
+            samples: samples.len(),
+            mean_s,
+            median_s: stats::median(&samples),
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            p99_s: stats::quantile(&samples, 0.99),
+            throughput: (items_per_call > 0).then(|| items_per_call as f64 / mean_s),
+        };
+        println!("{}", result.report_line());
+        self.results.push(result);
+    }
+
+    /// Benchmark with a value-producing closure (guards against DCE).
+    pub fn bench_val<T, F: FnMut() -> T>(&mut self, name: &str, items_per_call: usize, mut f: F) {
+        self.bench(name, items_per_call, || {
+            std::hint::black_box(f());
+        });
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn finish(self, suite: &str) {
+        println!("--- {suite}: {} benches done ---", self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn produces_sane_stats() {
+        let mut b = Bencher { target_time: 0.05, max_samples: 8, results: vec![] };
+        let mut acc = 0u64;
+        b.bench_val("noop-ish", 100, || {
+            acc = acc.wrapping_add(1);
+            acc
+        });
+        let r = &b.results()[0];
+        assert!(r.samples >= 1);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.p99_s + 1e-12);
+        assert!(r.throughput.unwrap() > 0.0);
+    }
+}

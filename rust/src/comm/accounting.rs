@@ -1,0 +1,102 @@
+//! Communication accounting: exact bit counters per link and direction.
+//!
+//! The paper's metric (eq. 20):
+//!     communication bits = (total bits exchanged between nodes and server) / M
+//! i.e. cumulative wire traffic normalized by the model dimension.
+
+#[derive(Clone, Debug, Default)]
+pub struct LinkStats {
+    pub uplink_bits: u64,
+    pub downlink_bits: u64,
+    pub uplink_msgs: u64,
+    pub downlink_msgs: u64,
+}
+
+/// Per-node link counters + totals for a star topology.
+#[derive(Clone, Debug)]
+pub struct CommAccounting {
+    links: Vec<LinkStats>,
+}
+
+impl CommAccounting {
+    pub fn new(n_nodes: usize) -> Self {
+        Self { links: vec![LinkStats::default(); n_nodes] }
+    }
+
+    pub fn record_uplink(&mut self, node: usize, bits: u64) {
+        self.links[node].uplink_bits += bits;
+        self.links[node].uplink_msgs += 1;
+    }
+
+    pub fn record_downlink(&mut self, node: usize, bits: u64) {
+        self.links[node].downlink_bits += bits;
+        self.links[node].downlink_msgs += 1;
+    }
+
+    /// Downlink broadcast: the server transmits the same frame to every
+    /// node; each link carries it (the paper charges both directions).
+    pub fn record_broadcast(&mut self, bits: u64) {
+        for link in &mut self.links {
+            link.downlink_bits += bits;
+            link.downlink_msgs += 1;
+        }
+    }
+
+    pub fn link(&self, node: usize) -> &LinkStats {
+        &self.links[node]
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.links.iter().map(|l| l.uplink_bits + l.downlink_bits).sum()
+    }
+
+    pub fn total_uplink_bits(&self) -> u64 {
+        self.links.iter().map(|l| l.uplink_bits).sum()
+    }
+
+    pub fn total_downlink_bits(&self) -> u64 {
+        self.links.iter().map(|l| l.downlink_bits).sum()
+    }
+
+    /// Eq. (20): total bits / M.
+    pub fn normalized_bits(&self, m: usize) -> f64 {
+        self.total_bits() as f64 / m as f64
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.links.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_per_link_and_total() {
+        let mut acc = CommAccounting::new(3);
+        acc.record_uplink(0, 100);
+        acc.record_uplink(0, 50);
+        acc.record_downlink(2, 30);
+        assert_eq!(acc.link(0).uplink_bits, 150);
+        assert_eq!(acc.link(0).uplink_msgs, 2);
+        assert_eq!(acc.link(2).downlink_bits, 30);
+        assert_eq!(acc.total_bits(), 180);
+    }
+
+    #[test]
+    fn broadcast_charges_every_link() {
+        let mut acc = CommAccounting::new(4);
+        acc.record_broadcast(10);
+        assert_eq!(acc.total_downlink_bits(), 40);
+        assert_eq!(acc.link(3).downlink_msgs, 1);
+    }
+
+    #[test]
+    fn normalization_is_eq20() {
+        let mut acc = CommAccounting::new(2);
+        acc.record_uplink(0, 640);
+        acc.record_downlink(1, 360);
+        assert_eq!(acc.normalized_bits(100), 10.0);
+    }
+}

@@ -1,0 +1,85 @@
+//! Latency models for the threaded runtime: per-node compute/transmit
+//! delays that reproduce the heterogeneous-network conditions (stragglers)
+//! that motivate asynchronous ADMM.
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LatencyModel {
+    /// No injected delay (pure compute speed).
+    None,
+    /// Fixed delay in seconds.
+    Const(f64),
+    /// Exponential with the given mean (seconds).
+    Exp(f64),
+    /// Straggler mixture: fast constant delay w.p. (1−p_slow), slow w.p. p_slow.
+    Mixture { fast: f64, slow: f64, p_slow: f64 },
+}
+
+impl LatencyModel {
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        match *self {
+            LatencyModel::None => 0.0,
+            LatencyModel::Const(s) => s,
+            LatencyModel::Exp(mean) => rng.exponential(mean),
+            LatencyModel::Mixture { fast, slow, p_slow } => {
+                if rng.bernoulli(p_slow) {
+                    slow
+                } else {
+                    fast
+                }
+            }
+        }
+    }
+
+    /// Expected delay (for analytic wall-clock estimates in benches).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LatencyModel::None => 0.0,
+            LatencyModel::Const(s) => s,
+            LatencyModel::Exp(mean) => mean,
+            LatencyModel::Mixture { fast, slow, p_slow } => {
+                fast * (1.0 - p_slow) + slow * p_slow
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_and_none() {
+        let mut rng = Pcg64::seed_from_u64(0);
+        assert_eq!(LatencyModel::None.sample(&mut rng), 0.0);
+        assert_eq!(LatencyModel::Const(0.25).sample(&mut rng), 0.25);
+    }
+
+    #[test]
+    fn empirical_means_match() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        for model in [
+            LatencyModel::Exp(0.2),
+            LatencyModel::Mixture { fast: 0.01, slow: 0.5, p_slow: 0.3 },
+        ] {
+            let n = 50_000;
+            let mean: f64 =
+                (0..n).map(|_| model.sample(&mut rng)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - model.mean()).abs() < 0.01,
+                "{model:?}: {mean} vs {}",
+                model.mean()
+            );
+        }
+    }
+
+    #[test]
+    fn samples_nonnegative() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let model = LatencyModel::Exp(0.1);
+        for _ in 0..1000 {
+            assert!(model.sample(&mut rng) >= 0.0);
+        }
+    }
+}

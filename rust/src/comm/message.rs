@@ -1,0 +1,103 @@
+//! Message vocabulary between nodes and the server (star topology).
+//!
+//! Payloads are wire frames from [`crate::compress::wire`]; their byte
+//! length *is* the accounted communication cost. Control fields (node id,
+//! iteration) are charged as a fixed per-message header.
+
+/// Fixed header overhead charged per message (node id + iteration + kind),
+/// matching what a compact real framing would carry.
+pub const MSG_HEADER_BYTES: u64 = 12;
+
+#[derive(Clone, Debug)]
+pub enum NodeToServer {
+    /// Quantized (or dense, for the baseline) uplink: C(Δx), C(Δu).
+    Update {
+        node: usize,
+        iter: u64,
+        /// Monotone per-node sequence number for duplicate suppression.
+        seq: u64,
+        dx_wire: Vec<u8>,
+        du_wire: Vec<u8>,
+    },
+    /// Full-precision initial exchange (Algorithm 1 lines 1–4).
+    InitFull { node: usize, x0: Vec<f64>, u0: Vec<f64> },
+}
+
+impl NodeToServer {
+    /// Exact accounted size in bits.
+    pub fn wire_bits(&self) -> u64 {
+        match self {
+            NodeToServer::Update { dx_wire, du_wire, .. } => {
+                MSG_HEADER_BYTES * 8 + (dx_wire.len() + du_wire.len()) as u64 * 8
+            }
+            NodeToServer::InitFull { x0, u0, .. } => {
+                MSG_HEADER_BYTES * 8 + (x0.len() + u0.len()) as u64 * 64
+            }
+        }
+    }
+
+    pub fn node(&self) -> usize {
+        match self {
+            NodeToServer::Update { node, .. } | NodeToServer::InitFull { node, .. } => *node,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum ServerToNode {
+    /// Quantized (or dense) downlink broadcast: C(Δz). `included_mask` bit i
+    /// is set when node i's update was incorporated into this consensus —
+    /// a node starts its next local update only once its previous one has
+    /// landed (the per-node cadence of the paper's Fig. 2; at most one
+    /// update in flight per node).
+    Consensus { iter: u64, included_mask: u64, dz_wire: Vec<u8> },
+    /// Full-precision initial consensus (Algorithm 1 line 8).
+    InitZ { z0: Vec<f64> },
+    /// Orderly shutdown of a node worker.
+    Shutdown,
+}
+
+impl ServerToNode {
+    pub fn wire_bits(&self) -> u64 {
+        match self {
+            ServerToNode::Consensus { dz_wire, .. } => {
+                // +8 bytes for the inclusion mask
+                (MSG_HEADER_BYTES + 8) * 8 + dz_wire.len() as u64 * 8
+            }
+            ServerToNode::InitZ { z0 } => MSG_HEADER_BYTES * 8 + z0.len() as u64 * 64,
+            ServerToNode::Shutdown => MSG_HEADER_BYTES * 8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn update_bits_count_both_payloads() {
+        let m = NodeToServer::Update {
+            node: 0,
+            iter: 1,
+            seq: 0,
+            dx_wire: vec![0u8; 10],
+            du_wire: vec![0u8; 14],
+        };
+        assert_eq!(m.wire_bits(), (12 + 24) * 8);
+    }
+
+    #[test]
+    fn init_counts_full_precision() {
+        let m = NodeToServer::InitFull { node: 2, x0: vec![0.0; 5], u0: vec![0.0; 5] };
+        assert_eq!(m.wire_bits(), 12 * 8 + 10 * 64);
+        assert_eq!(m.node(), 2);
+    }
+
+    #[test]
+    fn downlink_bits() {
+        let m =
+            ServerToNode::Consensus { iter: 3, included_mask: 0b101, dz_wire: vec![0u8; 100] };
+        assert_eq!(m.wire_bits(), (12 + 8 + 100) * 8);
+        assert_eq!(ServerToNode::Shutdown.wire_bits(), 96);
+    }
+}

@@ -1,0 +1,8 @@
+//! Simulated star-topology network: messages, per-link bit accounting
+//! (the paper's communication metric, eq. 20), latency models for the
+//! threaded runtime, and failure injection (duplicates / stragglers).
+
+pub mod accounting;
+pub mod latency;
+pub mod message;
+pub mod network;

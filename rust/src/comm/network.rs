@@ -1,0 +1,240 @@
+//! Thread-backed star network for the deployed (non-simulated) runtime:
+//! std::sync::mpsc channels wrapped with bit accounting, optional injected
+//! latency, duplicate injection (failure testing) and sequence-number
+//! deduplication at the receiver.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::accounting::CommAccounting;
+use super::latency::LatencyModel;
+use super::message::{NodeToServer, ServerToNode};
+use crate::util::rng::Pcg64;
+
+/// Fault-injection knobs for a link (per direction).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultSpec {
+    /// Probability a message is delivered twice (receiver must dedup).
+    pub dup_prob: f64,
+}
+
+/// Shared accounting handle (server + nodes update concurrently).
+pub type SharedAccounting = Arc<Mutex<CommAccounting>>;
+
+/// Node-side endpoint of the star.
+pub struct NodeEndpoint {
+    pub node: usize,
+    to_server: Sender<NodeToServer>,
+    from_server: Receiver<ServerToNode>,
+    accounting: SharedAccounting,
+    latency: LatencyModel,
+    faults: FaultSpec,
+    rng: Pcg64,
+    seq: u64,
+}
+
+impl NodeEndpoint {
+    /// Send with accounting + injected latency + optional duplication.
+    pub fn send(&mut self, mut msg: NodeToServer) -> anyhow::Result<()> {
+        if let NodeToServer::Update { seq, .. } = &mut msg {
+            *seq = self.seq;
+            self.seq += 1;
+        }
+        let bits = msg.wire_bits();
+        self.accounting.lock().unwrap().record_uplink(self.node, bits);
+        let delay = self.latency.sample(&mut self.rng);
+        if delay > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(delay));
+        }
+        if self.rng.bernoulli(self.faults.dup_prob) {
+            self.to_server
+                .send(msg.clone())
+                .map_err(|_| anyhow::anyhow!("server hung up"))?;
+        }
+        self.to_server.send(msg).map_err(|_| anyhow::anyhow!("server hung up"))
+    }
+
+    pub fn recv(&self) -> anyhow::Result<ServerToNode> {
+        self.from_server.recv().map_err(|_| anyhow::anyhow!("server hung up"))
+    }
+
+    /// Non-blocking receive (backlog draining for stragglers).
+    pub fn try_recv(&self) -> Option<ServerToNode> {
+        self.from_server.try_recv().ok()
+    }
+}
+
+/// Server-side endpoint: fan-in from all nodes + per-node senders.
+pub struct ServerEndpoint {
+    from_nodes: Receiver<NodeToServer>,
+    to_nodes: Vec<Sender<ServerToNode>>,
+    accounting: SharedAccounting,
+    /// Last seen uplink sequence number per node, for dedup.
+    last_seq: Vec<Option<u64>>,
+}
+
+impl ServerEndpoint {
+    /// Blocking receive with duplicate suppression.
+    pub fn recv(&mut self) -> anyhow::Result<NodeToServer> {
+        loop {
+            let msg =
+                self.from_nodes.recv().map_err(|_| anyhow::anyhow!("all nodes hung up"))?;
+            if !self.is_duplicate(&msg) {
+                return Ok(msg);
+            }
+        }
+    }
+
+    pub fn recv_timeout(&mut self, timeout: Duration) -> anyhow::Result<Option<NodeToServer>> {
+        loop {
+            match self.from_nodes.recv_timeout(timeout) {
+                Ok(msg) => {
+                    if !self.is_duplicate(&msg) {
+                        return Ok(Some(msg));
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => return Ok(None),
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("all nodes hung up")
+                }
+            }
+        }
+    }
+
+    /// Drain whatever is still in flight during shutdown; node hang-ups are
+    /// expected here (workers exit once they see Shutdown).
+    pub fn drain(&mut self, quiet: Duration) {
+        loop {
+            match self.from_nodes.recv_timeout(quiet) {
+                Ok(_) => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn is_duplicate(&mut self, msg: &NodeToServer) -> bool {
+        if let NodeToServer::Update { node, seq, .. } = msg {
+            if self.last_seq[*node] == Some(*seq) {
+                return true;
+            }
+            self.last_seq[*node] = Some(*seq);
+        }
+        false
+    }
+
+    /// Unicast to one node (accounted).
+    pub fn send(&self, node: usize, msg: ServerToNode) -> anyhow::Result<()> {
+        self.accounting.lock().unwrap().record_downlink(node, msg.wire_bits());
+        self.to_nodes[node].send(msg).map_err(|_| anyhow::anyhow!("node {node} hung up"))
+    }
+
+    /// Broadcast (each link accounted separately, as in eq. 20).
+    pub fn broadcast(&self, msg: &ServerToNode) -> anyhow::Result<()> {
+        for node in 0..self.to_nodes.len() {
+            self.send(node, msg.clone())?;
+        }
+        Ok(())
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.to_nodes.len()
+    }
+}
+
+/// Build a star network: one server endpoint + N node endpoints.
+pub fn star(
+    n_nodes: usize,
+    latencies: &[LatencyModel],
+    faults: FaultSpec,
+    seed: u64,
+) -> (ServerEndpoint, Vec<NodeEndpoint>, SharedAccounting) {
+    assert_eq!(latencies.len(), n_nodes);
+    let accounting: SharedAccounting = Arc::new(Mutex::new(CommAccounting::new(n_nodes)));
+    let (up_tx, up_rx) = channel::<NodeToServer>();
+    let mut to_nodes = Vec::with_capacity(n_nodes);
+    let mut endpoints = Vec::with_capacity(n_nodes);
+    let mut root = Pcg64::seed_from_u64(seed);
+    for node in 0..n_nodes {
+        let (down_tx, down_rx) = channel::<ServerToNode>();
+        to_nodes.push(down_tx);
+        endpoints.push(NodeEndpoint {
+            node,
+            to_server: up_tx.clone(),
+            from_server: down_rx,
+            accounting: accounting.clone(),
+            latency: latencies[node],
+            faults,
+            rng: root.fork(node as u64),
+            seq: 0,
+        });
+    }
+    let server = ServerEndpoint {
+        from_nodes: up_rx,
+        to_nodes,
+        accounting: accounting.clone(),
+        last_seq: vec![None; n_nodes],
+    };
+    (server, endpoints, accounting)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn update(node: usize, iter: u64) -> NodeToServer {
+        NodeToServer::Update { node, iter, seq: 0, dx_wire: vec![0; 8], du_wire: vec![0; 8] }
+    }
+
+    #[test]
+    fn roundtrip_with_accounting() {
+        let (mut server, mut nodes, acc) =
+            star(2, &[LatencyModel::None; 2], FaultSpec::default(), 1);
+        nodes[0].send(update(0, 0)).unwrap();
+        nodes[1].send(update(1, 0)).unwrap();
+        for _ in 0..2 {
+            let msg = server.recv().unwrap();
+            assert!(matches!(msg, NodeToServer::Update { .. }));
+        }
+        server.broadcast(&ServerToNode::Consensus { iter: 0, included_mask: 0b11, dz_wire: vec![0; 4] }).unwrap();
+        assert!(matches!(nodes[0].recv().unwrap(), ServerToNode::Consensus { .. }));
+        assert!(matches!(nodes[1].recv().unwrap(), ServerToNode::Consensus { .. }));
+        let acc = acc.lock().unwrap();
+        assert_eq!(acc.total_uplink_bits(), 2 * (12 + 16) * 8);
+        assert_eq!(acc.total_downlink_bits(), 2 * (12 + 8 + 4) * 8);
+    }
+
+    #[test]
+    fn duplicates_are_suppressed() {
+        let (mut server, mut nodes, _acc) = star(
+            1,
+            &[LatencyModel::None],
+            FaultSpec { dup_prob: 1.0 }, // every message duplicated
+            2,
+        );
+        nodes[0].send(update(0, 0)).unwrap();
+        nodes[0].send(update(0, 1)).unwrap();
+        let a = server.recv().unwrap();
+        let b = server.recv().unwrap();
+        // seq 0 then seq 1 — the duplicates in between were dropped
+        match (a, b) {
+            (
+                NodeToServer::Update { seq: s1, .. },
+                NodeToServer::Update { seq: s2, .. },
+            ) => {
+                assert_eq!((s1, s2), (0, 1));
+            }
+            _ => panic!("wrong kinds"),
+        }
+        // nothing further pending
+        assert!(server.recv_timeout(Duration::from_millis(50)).unwrap().is_none());
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let (mut server, _nodes, _acc) =
+            star(1, &[LatencyModel::None], FaultSpec::default(), 3);
+        let got = server.recv_timeout(Duration::from_millis(20)).unwrap();
+        assert!(got.is_none());
+    }
+}

@@ -1,0 +1,144 @@
+//! Error feedback (§4.1): both endpoints of a link track the *estimate*
+//! ŷ of the iterate y, and the sender transmits C(y_new − ŷ), which equals
+//! (current change) + (previous compression error) — the telescoping form
+//! of eqs. (10)–(11) that cancels accumulated error.
+//!
+//! The EF-off ablation transmits C(y_new − y_old) instead (pure delta
+//! coding), demonstrating the §4.1 error-accumulation argument.
+
+/// One endpoint's view of a compressed stream: the shared estimate ŷ plus
+/// (for the ablation) the last true iterate.
+#[derive(Clone, Debug)]
+pub struct EstimateTracker {
+    estimate: Vec<f64>,
+    last_true: Vec<f64>,
+    feedback: bool,
+}
+
+impl EstimateTracker {
+    pub fn new(initial: Vec<f64>, feedback: bool) -> Self {
+        Self { estimate: initial.clone(), last_true: initial, feedback }
+    }
+
+    /// The Δ the sender should compress for the new iterate (and remember
+    /// the iterate for the EF-off mode).
+    pub fn make_delta(&mut self, current: &[f64]) -> Vec<f64> {
+        let base: &[f64] = if self.feedback { &self.estimate } else { &self.last_true };
+        let delta = current.iter().zip(base).map(|(c, b)| c - b).collect();
+        self.last_true.copy_from_slice(current);
+        delta
+    }
+
+    /// Apply a dequantized message to the estimate: ŷ += C(Δ).
+    /// Called symmetrically at sender (mirror) and receiver.
+    pub fn commit(&mut self, dequantized: &[f64]) {
+        debug_assert_eq!(dequantized.len(), self.estimate.len());
+        for (e, d) in self.estimate.iter_mut().zip(dequantized) {
+            *e += d;
+        }
+    }
+
+    pub fn estimate(&self) -> &[f64] {
+        &self.estimate
+    }
+
+    /// Force the estimate (used for the full-precision initial exchange,
+    /// Algorithm 1 lines 1–8).
+    pub fn reset(&mut self, value: &[f64]) {
+        self.estimate.copy_from_slice(value);
+        self.last_true.copy_from_slice(value);
+    }
+
+    pub fn feedback_enabled(&self) -> bool {
+        self.feedback
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::qsgd::Qsgd;
+    use crate::compress::Compressor;
+    use crate::util::rng::Pcg64;
+
+    /// With EF, the estimate error stays bounded by one quantization step of
+    /// the *current* delta (the telescoping identity ŷ = y + δ^(r)); without
+    /// EF it accumulates as Σδ^(t).
+    #[test]
+    fn feedback_bounds_estimate_error() {
+        let m = 128;
+        let q = Qsgd::new(3);
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut y = vec![0.0; m];
+        let mut ef = EstimateTracker::new(y.clone(), true);
+        let mut no_ef = EstimateTracker::new(y.clone(), false);
+
+        let mut final_err_ef = 0.0f64;
+        let mut final_err_no_ef = 0.0f64;
+        for r in 0..200 {
+            // a drifting iterate with decaying steps
+            let g = rng.normal_vec(m, 0.0, 1.0 / (1.0 + r as f64 * 0.1));
+            for (yi, gi) in y.iter_mut().zip(&g) {
+                *yi += gi;
+            }
+            let d1 = ef.make_delta(&y);
+            let c1 = q.compress(&d1, &mut rng);
+            ef.commit(&c1.dequantized);
+            let d2 = no_ef.make_delta(&y);
+            let c2 = q.compress(&d2, &mut rng);
+            no_ef.commit(&c2.dequantized);
+
+            let err_ef = y
+                .iter()
+                .zip(ef.estimate())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            // EF error ≤ one interval of the *last transmitted* delta
+            let dnorm = d1.iter().fold(0.0f64, |mx, v| mx.max(v.abs()));
+            assert!(err_ef <= dnorm / q.s() as f64 + 1e-9, "r={r} err={err_ef}");
+            final_err_ef = err_ef;
+            final_err_no_ef = no_ef
+                .estimate()
+                .iter()
+                .zip(&y)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+        }
+        assert!(
+            final_err_no_ef > 3.0 * final_err_ef,
+            "EF should dominate: no_ef={final_err_no_ef} ef={final_err_ef}"
+        );
+    }
+
+    #[test]
+    fn identical_streams_stay_in_sync() {
+        // sender mirror and receiver commit the same dequantized messages ⇒
+        // identical estimates (the invariant the coordinator relies on).
+        let m = 64;
+        let q = Qsgd::new(4);
+        let mut rng = Pcg64::seed_from_u64(2);
+        let mut y = rng.normal_vec(m, 0.0, 1.0);
+        let mut sender = EstimateTracker::new(vec![0.0; m], true);
+        let mut receiver = EstimateTracker::new(vec![0.0; m], true);
+        for _ in 0..50 {
+            for v in &mut y {
+                *v += 0.1 * rng.standard_normal();
+            }
+            let delta = sender.make_delta(&y);
+            let c = q.compress(&delta, &mut rng);
+            let decoded = q.decode(&c.wire, m).unwrap();
+            sender.commit(&c.dequantized);
+            receiver.commit(&decoded);
+            assert_eq!(sender.estimate(), receiver.estimate());
+        }
+    }
+
+    #[test]
+    fn reset_overrides() {
+        let mut t = EstimateTracker::new(vec![0.0; 3], true);
+        t.reset(&[1.0, 2.0, 3.0]);
+        assert_eq!(t.estimate(), &[1.0, 2.0, 3.0]);
+        let d = t.make_delta(&[1.0, 2.0, 4.0]);
+        assert_eq!(d, vec![0.0, 0.0, 1.0]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Compression operators C: R^M → Q^M and the wire codec (§4.1).
+//!
+//! The paper's compressor is the QSGD-style stochastic multi-level
+//! quantizer ([`qsgd`], eq. 17); [`signsgd`], [`topk`] and [`randk`] cover
+//! the other families the paper cites ([10,11,14]) and feed the compressor
+//! ablation. [`identity`] is the uncompressed baseline ("async ADMM").
+//!
+//! Contract: `decode(compress(Δ).wire) == compress(Δ).dequantized` exactly —
+//! the receiver reconstructs the *same* vector the sender used to update its
+//! own estimate mirror, so server and node estimate banks never diverge
+//! (lossless transport of the lossy code). Every compressor reports its
+//! exact wire size in bits; the paper's communication metric (eq. 20) is
+//! derived solely from these.
+
+pub mod error_feedback;
+pub mod identity;
+pub mod packing;
+pub mod qsgd;
+pub mod randk;
+pub mod signsgd;
+pub mod topk;
+pub mod wire;
+
+use crate::util::rng::Pcg64;
+
+/// Result of compressing a vector.
+#[derive(Clone, Debug)]
+pub struct Compressed {
+    /// The dequantized C(Δ) — what both ends add to their estimates.
+    pub dequantized: Vec<f64>,
+    /// Exact wire encoding (framed; see [`wire`]).
+    pub wire: Vec<u8>,
+}
+
+impl Compressed {
+    pub fn wire_bits(&self) -> u64 {
+        self.wire.len() as u64 * 8
+    }
+}
+
+/// A compression operator. Stateless; all randomness comes from the caller's
+/// RNG so trials replay deterministically.
+pub trait Compressor: Send {
+    fn name(&self) -> String;
+
+    /// Compress `delta`, drawing any randomness from `rng`.
+    fn compress(&self, delta: &[f64], rng: &mut Pcg64) -> Compressed;
+
+    /// Decode a wire message produced by this compressor (or any other —
+    /// the frame is self-describing). `m` is the expected vector length.
+    fn decode(&self, bytes: &[u8], m: usize) -> anyhow::Result<Vec<f64>> {
+        wire::decode(bytes, m)
+    }
+}
+
+/// Compressor selection for configs/CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompressorKind {
+    /// Full precision f64 wire.
+    Identity,
+    /// Full precision f32 wire (the paper's baseline accounting:
+    /// "32-bits per scalar").
+    Identity32,
+    /// Paper's stochastic multi-level quantizer, q bits/scalar (q ≥ 2).
+    Qsgd { bits: u8 },
+    /// 1-bit sign + ℓ₁/M scale.
+    Sign,
+    /// Largest-k magnitudes, k = ceil(frac·M).
+    TopK { frac_permille: u16 },
+    /// Random-k coordinates (shared-seed indices), k = ceil(frac·M).
+    RandK { frac_permille: u16 },
+}
+
+impl CompressorKind {
+    pub fn build(&self) -> Box<dyn Compressor> {
+        match *self {
+            CompressorKind::Identity => Box::new(identity::Identity),
+            CompressorKind::Identity32 => Box::new(identity::Identity32),
+            CompressorKind::Qsgd { bits } => Box::new(qsgd::Qsgd::new(bits)),
+            CompressorKind::Sign => Box::new(signsgd::SignSgd),
+            CompressorKind::TopK { frac_permille } => {
+                Box::new(topk::TopK::new(frac_permille as f64 / 1000.0))
+            }
+            CompressorKind::RandK { frac_permille } => {
+                Box::new(randk::RandK::new(frac_permille as f64 / 1000.0))
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        // forms: identity | qsgd3 | sign | topk50 | randk50  (suffix = ‰)
+        if s == "identity" || s == "none" {
+            Ok(CompressorKind::Identity)
+        } else if s == "identity32" || s == "fp32" {
+            Ok(CompressorKind::Identity32)
+        } else if s == "sign" {
+            Ok(CompressorKind::Sign)
+        } else if let Some(q) = s.strip_prefix("qsgd") {
+            let bits: u8 = q.parse()?;
+            anyhow::ensure!((2..=16).contains(&bits), "qsgd bits must be in 2..=16");
+            Ok(CompressorKind::Qsgd { bits })
+        } else if let Some(f) = s.strip_prefix("topk") {
+            Ok(CompressorKind::TopK { frac_permille: f.parse()? })
+        } else if let Some(f) = s.strip_prefix("randk") {
+            Ok(CompressorKind::RandK { frac_permille: f.parse()? })
+        } else {
+            anyhow::bail!("unknown compressor '{s}' (identity|qsgdQ|sign|topkP|randkP)")
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            CompressorKind::Identity => "identity".into(),
+            CompressorKind::Identity32 => "identity32".into(),
+            CompressorKind::Qsgd { bits } => format!("qsgd{bits}"),
+            CompressorKind::Sign => "sign".into(),
+            CompressorKind::TopK { frac_permille } => format!("topk{frac_permille}"),
+            CompressorKind::RandK { frac_permille } => format!("randk{frac_permille}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["identity", "qsgd3", "qsgd8", "sign", "topk50", "randk125"] {
+            let k = CompressorKind::parse(s).unwrap();
+            assert_eq!(k.label(), s);
+            assert_eq!(CompressorKind::parse(&k.label()).unwrap(), k);
+        }
+        assert!(CompressorKind::parse("qsgd1").is_err()); // S would be 0
+        assert!(CompressorKind::parse("bogus").is_err());
+    }
+
+    /// The cross-compressor contract: decode(wire) == dequantized, exactly.
+    #[test]
+    fn decode_matches_dequantized_for_all_kinds() {
+        let kinds = [
+            CompressorKind::Identity,
+            CompressorKind::Qsgd { bits: 3 },
+            CompressorKind::Qsgd { bits: 8 },
+            CompressorKind::Sign,
+            CompressorKind::TopK { frac_permille: 100 },
+            CompressorKind::RandK { frac_permille: 100 },
+        ];
+        let mut rng = Pcg64::seed_from_u64(9);
+        let delta = rng.normal_vec(517, 0.0, 2.0);
+        for kind in kinds {
+            let c = kind.build();
+            let out = c.compress(&delta, &mut rng);
+            let decoded = c.decode(&out.wire, delta.len()).unwrap();
+            assert_eq!(decoded, out.dequantized, "kind={}", kind.label());
+        }
+    }
+}

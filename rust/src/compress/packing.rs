@@ -1,0 +1,212 @@
+//! Bit-level packing: fixed-width fields, sign-magnitude levels, and
+//! Elias-γ for sparse index gaps. This is what turns "q bits per scalar"
+//! from an accounting fiction into actual wire bytes.
+
+/// Little-endian bit writer.
+#[derive(Default)]
+pub struct BitWriter {
+    bytes: Vec<u8>,
+    /// Bits used in the last byte (0 ⇒ byte boundary).
+    bit_pos: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the low `width` bits of `value` (LSB first).
+    pub fn put(&mut self, value: u64, width: u32) {
+        debug_assert!(width <= 64);
+        debug_assert!(width == 64 || value < (1u64 << width));
+        let mut remaining = width;
+        let mut v = value;
+        while remaining > 0 {
+            if self.bit_pos == 0 {
+                self.bytes.push(0);
+            }
+            let free = 8 - self.bit_pos;
+            let take = free.min(remaining);
+            let last = self.bytes.last_mut().unwrap();
+            *last |= ((v & ((1u64 << take) - 1)) as u8) << self.bit_pos;
+            v >>= take;
+            self.bit_pos = (self.bit_pos + take) % 8;
+            remaining -= take;
+        }
+    }
+
+    /// Elias-γ code for `value ≥ 1`: ⌊log₂v⌋ zeros, then v's bits (MSB=1 first).
+    pub fn put_elias_gamma(&mut self, value: u64) {
+        debug_assert!(value >= 1);
+        let nbits = 64 - value.leading_zeros();
+        for _ in 0..nbits - 1 {
+            self.put(0, 1);
+        }
+        // emit MSB-first so the reader can detect the leading 1
+        for i in (0..nbits).rev() {
+            self.put((value >> i) & 1, 1);
+        }
+    }
+
+    pub fn bit_len(&self) -> u64 {
+        if self.bytes.is_empty() {
+            0
+        } else {
+            (self.bytes.len() as u64 - 1) * 8
+                + if self.bit_pos == 0 { 8 } else { self.bit_pos as u64 }
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.bytes
+    }
+}
+
+/// Little-endian bit reader.
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: u64, // absolute bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    pub fn get(&mut self, width: u32) -> anyhow::Result<u64> {
+        debug_assert!(width <= 64);
+        let mut out = 0u64;
+        let mut got = 0u32;
+        while got < width {
+            let byte_idx = (self.pos / 8) as usize;
+            anyhow::ensure!(byte_idx < self.bytes.len(), "bitstream underrun");
+            let bit_off = (self.pos % 8) as u32;
+            let avail = 8 - bit_off;
+            let take = avail.min(width - got);
+            let chunk = ((self.bytes[byte_idx] >> bit_off) as u64) & ((1u64 << take) - 1);
+            out |= chunk << got;
+            got += take;
+            self.pos += take as u64;
+        }
+        Ok(out)
+    }
+
+    pub fn get_elias_gamma(&mut self) -> anyhow::Result<u64> {
+        let mut zeros = 0u32;
+        loop {
+            if self.get(1)? == 1 {
+                break;
+            }
+            zeros += 1;
+            anyhow::ensure!(zeros < 64, "corrupt elias-gamma code");
+        }
+        let mut value = 1u64;
+        for _ in 0..zeros {
+            value = (value << 1) | self.get(1)?;
+        }
+        Ok(value)
+    }
+}
+
+/// Pack signed levels in `[-S, S]` with sign-magnitude at `q` bits each:
+/// 1 sign bit + (q−1) magnitude bits, where `S = 2^(q−1) − 1`.
+pub fn pack_levels(levels: &[i32], q: u8) -> Vec<u8> {
+    let s = (1i32 << (q - 1)) - 1;
+    let mut w = BitWriter::new();
+    for &lvl in levels {
+        debug_assert!(lvl.abs() <= s, "level {lvl} out of range for q={q}");
+        let sign = (lvl < 0) as u64;
+        let mag = lvl.unsigned_abs() as u64;
+        w.put(sign | (mag << 1), q as u32);
+    }
+    w.finish()
+}
+
+/// Inverse of [`pack_levels`].
+pub fn unpack_levels(bytes: &[u8], m: usize, q: u8) -> anyhow::Result<Vec<i32>> {
+    let mut r = BitReader::new(bytes);
+    let mut out = Vec::with_capacity(m);
+    for _ in 0..m {
+        let field = r.get(q as u32)?;
+        let sign = field & 1;
+        let mag = (field >> 1) as i32;
+        out.push(if sign == 1 { -mag } else { mag });
+    }
+    Ok(out)
+}
+
+/// Exact packed size in bytes for `m` levels at `q` bits.
+pub fn packed_len(m: usize, q: u8) -> usize {
+    (m * q as usize).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn bitwriter_roundtrip_mixed_widths() {
+        let mut w = BitWriter::new();
+        let fields = [(5u64, 3u32), (1023, 10), (0, 1), (1, 1), (u32::MAX as u64, 32), (7, 7)];
+        for (v, width) in fields {
+            w.put(v, width);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for (v, width) in fields {
+            assert_eq!(r.get(width).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn elias_gamma_roundtrip() {
+        let mut w = BitWriter::new();
+        let values = [1u64, 2, 3, 7, 8, 100, 12345, u32::MAX as u64];
+        for v in values {
+            w.put_elias_gamma(v);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for v in values {
+            assert_eq!(r.get_elias_gamma().unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn levels_roundtrip_all_q() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        for q in 2u8..=10 {
+            let s = (1i32 << (q - 1)) - 1;
+            let levels: Vec<i32> =
+                (0..777).map(|_| rng.gen_range((2 * s + 1) as usize) as i32 - s).collect();
+            let bytes = pack_levels(&levels, q);
+            assert_eq!(bytes.len(), packed_len(777, q));
+            let back = unpack_levels(&bytes, 777, q).unwrap();
+            assert_eq!(back, levels);
+        }
+    }
+
+    #[test]
+    fn packed_len_is_q_bits_per_scalar() {
+        assert_eq!(packed_len(8, 3), 3); // 24 bits
+        assert_eq!(packed_len(1, 3), 1);
+        assert_eq!(packed_len(1000, 3), 375);
+    }
+
+    #[test]
+    fn underrun_is_error() {
+        let mut r = BitReader::new(&[0xFF]);
+        assert!(r.get(9).is_err());
+        assert!(unpack_levels(&[0x01], 100, 3).is_err());
+    }
+
+    #[test]
+    fn bit_len_tracks_exactly() {
+        let mut w = BitWriter::new();
+        w.put(1, 3);
+        assert_eq!(w.bit_len(), 3);
+        w.put(1, 6);
+        assert_eq!(w.bit_len(), 9);
+    }
+}

@@ -1,0 +1,275 @@
+//! The paper's compressor: stochastic multi-level quantization (eq. 17).
+//!
+//! With q bits per scalar, S = 2^(q−1) − 1 intervals on [0, 1]. Each
+//! normalized magnitude |Δ_m|/‖Δ‖_max lands in [p/S, (p+1)/S] and rounds up
+//! with probability equal to its fractional position (unbiased), then sign
+//! and magnitude are restored. This file is the *bit-exact native twin* of
+//! the Pallas kernel `python/compile/kernels/quantize.py` — an integration
+//! test feeds both the same noise and asserts identical levels.
+
+use super::wire::encode_qsgd;
+use super::{Compressed, Compressor};
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Qsgd {
+    bits: u8,
+}
+
+impl Qsgd {
+    pub fn new(bits: u8) -> Self {
+        assert!((2..=16).contains(&bits), "qsgd bits must be in 2..=16 (got {bits})");
+        Self { bits }
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// S = 2^(q−1) − 1.
+    pub fn s(&self) -> i32 {
+        (1i32 << (self.bits - 1)) - 1
+    }
+
+    /// Deterministic quantization given explicit noise ∈ [0,1)^M.
+    /// Mirrors the Pallas kernel operation-for-operation:
+    ///   y = |d| / norm * S;  p = min(⌊y⌋, S−1);  lvl = p + [noise < y−p].
+    pub fn quantize_with_noise(&self, delta: &[f64], noise: &[f64]) -> (Vec<i32>, f64) {
+        assert_eq!(delta.len(), noise.len());
+        let s = self.s() as f64;
+        let norm = delta.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        if norm == 0.0 {
+            return (vec![0; delta.len()], 0.0);
+        }
+        let levels = delta
+            .iter()
+            .zip(noise)
+            .map(|(&d, &n)| {
+                let y = d.abs() / norm * s;
+                let p = y.floor().min(s - 1.0);
+                let frac = y - p;
+                let lvl = p + if n < frac { 1.0 } else { 0.0 };
+                let signed = if d < 0.0 { -lvl } else if d > 0.0 { lvl } else { 0.0 };
+                signed as i32
+            })
+            .collect();
+        (levels, norm)
+    }
+
+    /// Dequantize levels: value = norm · lvl / S (the wire-side inverse).
+    pub fn dequantize(&self, levels: &[i32], norm: f64) -> Vec<f64> {
+        let s = self.s() as f64;
+        levels.iter().map(|&l| norm * l as f64 / s).collect()
+    }
+
+    /// Build a [`Compressed`] from levels produced elsewhere (e.g. by the
+    /// HLO artifact, which runs the same kernel) — packs the wire frame and
+    /// reconstructs the dequantized vector from the *wire* representation so
+    /// sender and receiver stay bit-identical.
+    pub fn from_levels(&self, levels: &[i32], norm: f64) -> Compressed {
+        Compressed {
+            dequantized: self.dequantize(levels, norm),
+            wire: encode_qsgd(levels, norm, self.bits),
+        }
+    }
+}
+
+impl Qsgd {
+    /// Reference (two-pass, allocation-heavy) compress path. Kept as the
+    /// correctness oracle for the fused hot path below; draws the same RNG
+    /// stream, so `compress == compress_reference` bit-for-bit.
+    pub fn compress_reference(&self, delta: &[f64], rng: &mut Pcg64) -> Compressed {
+        let noise: Vec<f64> = (0..delta.len()).map(|_| rng.uniform_f64()).collect();
+        let (levels, norm) = self.quantize_with_noise(delta, &noise);
+        self.from_levels(&levels, norm)
+    }
+}
+
+impl Compressor for Qsgd {
+    fn name(&self) -> String {
+        format!("qsgd{}", self.bits)
+    }
+
+    /// Hot path (§Perf): one pass with inline RNG produces the signed
+    /// levels and the dequantized values together (no separate noise
+    /// vector, no second quantize pass), then the chunked bit packer emits
+    /// the payload. Bit-identical to [`Self::compress_reference`] — the
+    /// operation order (|d| / norm * s, norm · lvl / s) matches
+    /// quantize_with_noise and the Pallas kernel exactly.
+    fn compress(&self, delta: &[f64], rng: &mut Pcg64) -> Compressed {
+        let m = delta.len();
+        let s = self.s() as f64;
+        let norm = delta.iter().fold(0.0f64, |mx, x| mx.max(x.abs()));
+
+        // frame header (layout of wire::encode_qsgd): tag, m, q, norm
+        let payload_len = super::packing::packed_len(m, self.bits);
+        let mut wire = Vec::with_capacity(14 + payload_len);
+        wire.push(super::wire::TAG_QSGD);
+        wire.extend_from_slice(&(m as u32).to_le_bytes());
+        wire.push(self.bits);
+        wire.extend_from_slice(&norm.to_le_bytes());
+
+        if norm == 0.0 {
+            // zero vector: burn the RNG draws so the stream position matches
+            // the reference path, and emit an all-zero payload
+            for _ in 0..m {
+                rng.uniform_f64();
+            }
+            wire.resize(14 + payload_len, 0);
+            return Compressed { dequantized: vec![0.0; m], wire };
+        }
+
+        let mut dequantized = vec![0.0f64; m];
+        let dq = &mut dequantized[..];
+        let header = wire.len();
+        wire.resize(header + payload_len, 0);
+        let payload = &mut wire[header..];
+        let q = self.bits as u32;
+        let mut acc: u64 = 0;
+        let mut nbits: u32 = 0;
+        let mut byte_pos = 0usize;
+        for i in 0..m {
+            let d = delta[i];
+            let y = d.abs() / norm * s;
+            let p = y.floor().min(s - 1.0);
+            let frac = y - p;
+            let lvl = p + (rng.uniform_f64() < frac) as u64 as f64;
+            // lvl == 0 whenever d == 0, so copysign covers the zero case
+            let signed = lvl.copysign(d);
+            dq[i] = norm * signed / s;
+            // sign-magnitude field, identical to packing::pack_levels
+            let field = (signed.is_sign_negative() && lvl > 0.0) as u64 | ((lvl as u64) << 1);
+            acc |= field << nbits;
+            nbits += q;
+            while nbits >= 8 {
+                payload[byte_pos] = acc as u8;
+                byte_pos += 1;
+                acc >>= 8;
+                nbits -= 8;
+            }
+        }
+        if nbits > 0 {
+            payload[byte_pos] = acc as u8;
+        }
+        Compressed { dequantized, wire }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn s_levels() {
+        assert_eq!(Qsgd::new(2).s(), 1);
+        assert_eq!(Qsgd::new(3).s(), 3);
+        assert_eq!(Qsgd::new(4).s(), 7);
+        assert_eq!(Qsgd::new(8).s(), 127);
+    }
+
+    #[test]
+    fn max_element_is_exact() {
+        let q = Qsgd::new(3);
+        let delta = [0.1, -3.0, 0.5];
+        let noise = [0.999, 0.999, 0.999];
+        let (levels, norm) = q.quantize_with_noise(&delta, &noise);
+        assert_eq!(norm, 3.0);
+        assert_eq!(levels[1], -3);
+        assert_eq!(q.dequantize(&levels, norm)[1], -3.0);
+    }
+
+    #[test]
+    fn zero_vector() {
+        let q = Qsgd::new(3);
+        let (levels, norm) = q.quantize_with_noise(&[0.0; 10], &[0.5; 10]);
+        assert_eq!(norm, 0.0);
+        assert!(levels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn error_bounded_by_one_interval() {
+        let q = Qsgd::new(4);
+        let mut rng = Pcg64::seed_from_u64(1);
+        let delta = rng.normal_vec(500, 0.0, 3.0);
+        let c = q.compress(&delta, &mut rng);
+        let norm = delta.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        let bound = norm / q.s() as f64;
+        for (d, v) in delta.iter().zip(&c.dequantized) {
+            assert!((d - v).abs() <= bound + 1e-12);
+        }
+    }
+
+    #[test]
+    fn unbiased_over_noise() {
+        let q = Qsgd::new(3);
+        let mut rng = Pcg64::seed_from_u64(2);
+        let delta = rng.normal_vec(64, 0.0, 1.0);
+        let trials = 4000;
+        let mut acc = vec![0.0; 64];
+        for _ in 0..trials {
+            let c = q.compress(&delta, &mut rng);
+            for (a, v) in acc.iter_mut().zip(&c.dequantized) {
+                *a += v;
+            }
+        }
+        let norm = delta.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        let tol = 6.0 * (norm / (2.0 * q.s() as f64)) / (trials as f64).sqrt();
+        for (a, d) in acc.iter().zip(&delta) {
+            assert!((a / trials as f64 - d).abs() < tol);
+        }
+    }
+
+    #[test]
+    fn wire_is_q_bits_per_scalar_plus_header() {
+        let q = Qsgd::new(3);
+        let mut rng = Pcg64::seed_from_u64(3);
+        let delta = rng.normal_vec(1000, 0.0, 1.0);
+        let c = q.compress(&delta, &mut rng);
+        // 14-byte header + ceil(1000·3/8)
+        assert_eq!(c.wire.len(), 14 + 375);
+        let decoded = q.decode(&c.wire, 1000).unwrap();
+        assert_eq!(decoded, c.dequantized);
+    }
+
+    #[test]
+    fn levels_within_pack_range() {
+        let q = Qsgd::new(2); // S = 1: the coarsest valid quantizer
+        let mut rng = Pcg64::seed_from_u64(4);
+        let delta = rng.normal_vec(333, 0.0, 1.0);
+        let c = q.compress(&delta, &mut rng);
+        assert!(c.dequantized.iter().all(|v| v.is_finite()));
+        let decoded = q.decode(&c.wire, 333).unwrap();
+        assert_eq!(decoded, c.dequantized);
+    }
+
+    #[test]
+    fn fused_compress_equals_reference_bitwise() {
+        let mut rng = Pcg64::seed_from_u64(13);
+        for q in [2u8, 3, 5, 8, 12] {
+            let c = Qsgd::new(q);
+            for m in [1usize, 7, 256, 1000] {
+                let delta = rng.normal_vec(m, 0.0, 2.0);
+                let a = c.compress(&delta, &mut Pcg64::seed_from_u64(99));
+                let b = c.compress_reference(&delta, &mut Pcg64::seed_from_u64(99));
+                assert_eq!(a.wire, b.wire, "q={q} m={m}");
+                assert_eq!(a.dequantized, b.dequantized, "q={q} m={m}");
+                // zero vector too (RNG stream position must also match)
+                let mut r1 = Pcg64::seed_from_u64(5);
+                let mut r2 = Pcg64::seed_from_u64(5);
+                let z = vec![0.0; m];
+                assert_eq!(c.compress(&z, &mut r1).wire, c.compress_reference(&z, &mut r2).wire);
+                assert_eq!(r1.next_u64(), r2.next_u64());
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_rng_seed() {
+        let q = Qsgd::new(3);
+        let delta: Vec<f64> = (0..100).map(|i| (i as f64 - 50.0) * 0.1).collect();
+        let a = q.compress(&delta, &mut Pcg64::seed_from_u64(7));
+        let b = q.compress(&delta, &mut Pcg64::seed_from_u64(7));
+        assert_eq!(a.wire, b.wire);
+        assert_eq!(a.dequantized, b.dequantized);
+    }
+}

@@ -1,0 +1,78 @@
+//! Rand-k sparsifier: k uniformly random coordinates, index set derived
+//! from a seed shared on the wire (8 bytes instead of k indices). Unscaled
+//! (biased); error feedback supplies convergence, as with top-k.
+
+use super::wire::{encode_randk, randk_indices};
+use super::{Compressed, Compressor};
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RandK {
+    frac: f64,
+}
+
+impl RandK {
+    pub fn new(frac: f64) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0, "randk fraction must be in (0, 1]");
+        Self { frac }
+    }
+
+    pub fn k_for(&self, m: usize) -> usize {
+        ((self.frac * m as f64).ceil() as usize).clamp(1, m)
+    }
+}
+
+impl Compressor for RandK {
+    fn name(&self) -> String {
+        format!("randk{}", (self.frac * 1000.0).round() as u64)
+    }
+
+    fn compress(&self, delta: &[f64], rng: &mut Pcg64) -> Compressed {
+        let m = delta.len();
+        let k = self.k_for(m);
+        let seed = rng.next_u64();
+        let idx = randk_indices(m, k, seed);
+        let values: Vec<f64> = idx.iter().map(|&i| delta[i]).collect();
+        let mut dequantized = vec![0.0; m];
+        for (&i, &v) in idx.iter().zip(&values) {
+            dequantized[i] = v;
+        }
+        Compressed { dequantized, wire: encode_randk(m, seed, &values) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_reconstructs_via_shared_seed() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let delta = rng.normal_vec(300, 0.0, 1.0);
+        let r = RandK::new(0.1);
+        let c = r.compress(&delta, &mut rng);
+        assert_eq!(r.decode(&c.wire, 300).unwrap(), c.dequantized);
+        let kept = c.dequantized.iter().filter(|&&v| v != 0.0).count();
+        assert!(kept <= r.k_for(300)); // ties to zero entries allowed
+    }
+
+    #[test]
+    fn kept_values_match_delta() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let delta = rng.normal_vec(100, 0.0, 1.0);
+        let c = RandK::new(0.2).compress(&delta, &mut rng);
+        for (d, v) in delta.iter().zip(&c.dequantized) {
+            assert!(*v == 0.0 || v == d);
+        }
+    }
+
+    #[test]
+    fn different_calls_pick_different_supports() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let delta = vec![1.0; 200];
+        let r = RandK::new(0.05);
+        let a = r.compress(&delta, &mut rng);
+        let b = r.compress(&delta, &mut rng);
+        assert_ne!(a.dequantized, b.dequantized);
+    }
+}

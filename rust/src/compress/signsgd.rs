@@ -1,0 +1,52 @@
+//! 1-bit sign compressor (signSGD [11] with the ℓ₁/M scale of EF-signSGD
+//! [12]): C(Δ) = (‖Δ‖₁/M) · sign(Δ). The extreme point of the
+//! bits-vs-fidelity ablation.
+
+use super::wire::encode_sign;
+use super::{Compressed, Compressor};
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SignSgd;
+
+impl Compressor for SignSgd {
+    fn name(&self) -> String {
+        "sign".into()
+    }
+
+    fn compress(&self, delta: &[f64], _rng: &mut Pcg64) -> Compressed {
+        let m = delta.len().max(1);
+        let scale = delta.iter().map(|x| x.abs()).sum::<f64>() / m as f64;
+        let negs: Vec<bool> = delta.iter().map(|&x| x < 0.0).collect();
+        let dequantized = negs.iter().map(|&n| if n { -scale } else { scale }).collect();
+        Compressed { dequantized, wire: encode_sign(&negs, scale) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_signs_and_l1_scale() {
+        let delta = vec![2.0, -4.0, 0.5, -0.5, 1.0];
+        let c = SignSgd.compress(&delta, &mut Pcg64::seed_from_u64(0));
+        let scale = 8.0 / 5.0;
+        assert_eq!(c.dequantized, vec![scale, -scale, scale, -scale, scale]);
+    }
+
+    #[test]
+    fn wire_is_about_one_bit_per_scalar() {
+        let delta = vec![1.0; 800];
+        let c = SignSgd.compress(&delta, &mut Pcg64::seed_from_u64(0));
+        // 5-byte frame header + 8-byte scale + 100 bytes of bitmap
+        assert_eq!(c.wire.len(), 5 + 8 + 100);
+        assert_eq!(SignSgd.decode(&c.wire, 800).unwrap(), c.dequantized);
+    }
+
+    #[test]
+    fn zero_vector_gives_zero_scale() {
+        let c = SignSgd.compress(&[0.0; 16], &mut Pcg64::seed_from_u64(0));
+        assert!(c.dequantized.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,83 @@
+//! Top-k sparsifier [10,14]: keep the k largest-magnitude coordinates,
+//! zero the rest. Indices gap-coded with Elias-γ on the wire.
+//! Biased, so it *requires* error feedback to converge — which is exactly
+//! what the EF ablation demonstrates.
+
+use super::wire::encode_topk;
+use super::{Compressed, Compressor};
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug)]
+pub struct TopK {
+    frac: f64,
+}
+
+impl TopK {
+    pub fn new(frac: f64) -> Self {
+        assert!(frac > 0.0 && frac <= 1.0, "topk fraction must be in (0, 1]");
+        Self { frac }
+    }
+
+    pub fn k_for(&self, m: usize) -> usize {
+        ((self.frac * m as f64).ceil() as usize).clamp(1, m)
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> String {
+        format!("topk{}", (self.frac * 1000.0).round() as u64)
+    }
+
+    fn compress(&self, delta: &[f64], _rng: &mut Pcg64) -> Compressed {
+        let m = delta.len();
+        let k = self.k_for(m);
+        let mut order: Vec<usize> = (0..m).collect();
+        order.select_nth_unstable_by(k - 1, |&a, &b| {
+            delta[b].abs().partial_cmp(&delta[a].abs()).unwrap()
+        });
+        let mut keep: Vec<usize> = order[..k].to_vec();
+        keep.sort_unstable();
+        let entries: Vec<(usize, f64)> = keep.iter().map(|&i| (i, delta[i])).collect();
+        let mut dequantized = vec![0.0; m];
+        for &(i, v) in &entries {
+            dequantized[i] = v;
+        }
+        Compressed { dequantized, wire: encode_topk(m, &entries) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let delta = vec![0.1, -5.0, 0.2, 3.0, -0.05];
+        let c = TopK::new(0.4).compress(&delta, &mut Pcg64::seed_from_u64(0));
+        assert_eq!(c.dequantized, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn decode_matches() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let delta = rng.normal_vec(400, 0.0, 1.0);
+        let t = TopK::new(0.05);
+        let c = t.compress(&delta, &mut rng);
+        assert_eq!(t.decode(&c.wire, 400).unwrap(), c.dequantized);
+        assert_eq!(c.dequantized.iter().filter(|&&v| v != 0.0).count(), t.k_for(400));
+    }
+
+    #[test]
+    fn k_at_least_one() {
+        assert_eq!(TopK::new(0.001).k_for(10), 1);
+        assert_eq!(TopK::new(1.0).k_for(10), 10);
+    }
+
+    #[test]
+    fn wire_much_smaller_than_dense_for_sparse_k() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let delta = rng.normal_vec(10_000, 0.0, 1.0);
+        let c = TopK::new(0.01).compress(&delta, &mut rng);
+        assert!(c.wire.len() < 10_000 * 8 / 10, "wire={}", c.wire.len());
+    }
+}

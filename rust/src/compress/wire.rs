@@ -1,0 +1,313 @@
+//! Self-describing wire frames for compressed vectors.
+//!
+//! Layout (little-endian):
+//! ```text
+//!   u8  tag        1=dense64 2=dense32 3=qsgd 4=sign 5=topk 6=randk
+//!   u32 m          vector length
+//!   ... tag-specific payload ...
+//! ```
+//! Decoding any frame yields the exact dequantized vector the sender
+//! computed — the lossy compression happens before framing; the frame
+//! itself is lossless.
+
+use super::packing::{packed_len, unpack_levels, BitReader, BitWriter};
+use crate::util::rng::Pcg64;
+
+pub const TAG_DENSE64: u8 = 1;
+pub const TAG_DENSE32: u8 = 2;
+pub const TAG_QSGD: u8 = 3;
+pub const TAG_SIGN: u8 = 4;
+pub const TAG_TOPK: u8 = 5;
+pub const TAG_RANDK: u8 = 6;
+
+pub struct FrameWriter {
+    buf: Vec<u8>,
+}
+
+impl FrameWriter {
+    pub fn new(tag: u8, m: usize) -> Self {
+        let mut buf = Vec::with_capacity(16);
+        buf.push(tag);
+        buf.extend_from_slice(&(m as u32).to_le_bytes());
+        Self { buf }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+pub struct FrameReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> FrameReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(self.pos + n <= self.buf.len(), "wire frame underrun");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+}
+
+// ---- encoders --------------------------------------------------------------
+
+pub fn encode_dense64(v: &[f64]) -> Vec<u8> {
+    let mut w = FrameWriter::new(TAG_DENSE64, v.len());
+    for &x in v {
+        w.f64(x);
+    }
+    w.finish()
+}
+
+pub fn encode_dense32(v: &[f64]) -> Vec<u8> {
+    let mut w = FrameWriter::new(TAG_DENSE32, v.len());
+    for &x in v {
+        w.f32(x as f32);
+    }
+    w.finish()
+}
+
+pub fn encode_qsgd(levels: &[i32], norm: f64, q: u8) -> Vec<u8> {
+    let mut w = FrameWriter::new(TAG_QSGD, levels.len());
+    w.u8(q);
+    w.f64(norm);
+    w.bytes(&super::packing::pack_levels(levels, q));
+    w.finish()
+}
+
+pub fn encode_sign(signs_negative: &[bool], scale: f64) -> Vec<u8> {
+    let mut w = FrameWriter::new(TAG_SIGN, signs_negative.len());
+    w.f64(scale);
+    let mut bits = BitWriter::new();
+    for &neg in signs_negative {
+        bits.put(neg as u64, 1);
+    }
+    w.bytes(&bits.finish());
+    w.finish()
+}
+
+/// Sparse top-k frame: ascending indices gap-coded with Elias-γ, values as
+/// raw f64 bits in the same bitstream.
+pub fn encode_topk(m: usize, entries: &[(usize, f64)]) -> Vec<u8> {
+    debug_assert!(entries.windows(2).all(|w| w[0].0 < w[1].0), "indices must ascend");
+    let mut w = FrameWriter::new(TAG_TOPK, m);
+    w.u32(entries.len() as u32);
+    let mut bits = BitWriter::new();
+    let mut prev = 0usize;
+    for (i, (idx, val)) in entries.iter().enumerate() {
+        let gap = if i == 0 { idx + 1 } else { idx - prev };
+        bits.put_elias_gamma(gap as u64);
+        bits.put(val.to_bits(), 64);
+        prev = *idx;
+    }
+    w.bytes(&bits.finish());
+    w.finish()
+}
+
+pub fn encode_randk(m: usize, seed: u64, values: &[f64]) -> Vec<u8> {
+    let mut w = FrameWriter::new(TAG_RANDK, m);
+    w.u64(seed);
+    w.u32(values.len() as u32);
+    for &v in values {
+        w.f64(v);
+    }
+    w.finish()
+}
+
+/// Re-derive the rand-k index set on the receiving side (shared seed).
+pub fn randk_indices(m: usize, k: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut idx = rng.choose_k(m, k);
+    idx.sort_unstable();
+    idx
+}
+
+// ---- universal decoder -----------------------------------------------------
+
+/// Decode any frame into the dense dequantized vector of length `m`.
+pub fn decode(bytes: &[u8], m: usize) -> anyhow::Result<Vec<f64>> {
+    let mut r = FrameReader::new(bytes);
+    let tag = r.u8()?;
+    let m_wire = r.u32()? as usize;
+    anyhow::ensure!(m_wire == m, "frame length {m_wire} != expected {m}");
+    match tag {
+        TAG_DENSE64 => (0..m).map(|_| r.f64()).collect(),
+        TAG_DENSE32 => (0..m).map(|_| r.f32().map(|x| x as f64)).collect(),
+        TAG_QSGD => {
+            let q = r.u8()?;
+            anyhow::ensure!((2..=16).contains(&q), "bad qsgd width {q}");
+            let norm = r.f64()?;
+            let packed = r.rest();
+            anyhow::ensure!(packed.len() >= packed_len(m, q), "qsgd payload too short");
+            let levels = unpack_levels(packed, m, q)?;
+            let s = ((1i32 << (q - 1)) - 1) as f64;
+            Ok(levels.iter().map(|&l| norm * l as f64 / s).collect())
+        }
+        TAG_SIGN => {
+            let scale = r.f64()?;
+            let packed = r.rest();
+            let mut bits = BitReader::new(packed);
+            (0..m)
+                .map(|_| bits.get(1).map(|b| if b == 1 { -scale } else { scale }))
+                .collect()
+        }
+        TAG_TOPK => {
+            let k = r.u32()? as usize;
+            anyhow::ensure!(k <= m, "topk k={k} > m={m}");
+            let mut bits = BitReader::new(r.rest());
+            let mut out = vec![0.0; m];
+            let mut idx = 0usize;
+            for i in 0..k {
+                let gap = bits.get_elias_gamma()? as usize;
+                idx = if i == 0 { gap - 1 } else { idx + gap };
+                anyhow::ensure!(idx < m, "topk index out of range");
+                out[idx] = f64::from_bits(bits.get(64)?);
+            }
+            Ok(out)
+        }
+        TAG_RANDK => {
+            let seed = r.u64()?;
+            let k = r.u32()? as usize;
+            anyhow::ensure!(k <= m, "randk k={k} > m={m}");
+            let idx = randk_indices(m, k, seed);
+            let mut out = vec![0.0; m];
+            for &i in idx.iter() {
+                out[i] = r.f64()?;
+            }
+            Ok(out)
+        }
+        t => anyhow::bail!("unknown wire tag {t}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrips() {
+        let v = vec![1.5, -2.25, 0.0, 1e-9];
+        assert_eq!(decode(&encode_dense64(&v), 4).unwrap(), v);
+        let d32 = decode(&encode_dense32(&v), 4).unwrap();
+        for (a, b) in d32.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn qsgd_frame_roundtrip() {
+        let levels = vec![3, -3, 0, 1, -2, 2, 0, -1];
+        let bytes = encode_qsgd(&levels, 2.5, 3);
+        // header: 1 tag + 4 m + 1 q + 8 norm = 14; payload 8×3 bits = 3 bytes
+        assert_eq!(bytes.len(), 14 + 3);
+        let v = decode(&bytes, 8).unwrap();
+        let s = 3.0;
+        for (x, &l) in v.iter().zip(&levels) {
+            assert_eq!(*x, 2.5 * l as f64 / s);
+        }
+    }
+
+    #[test]
+    fn sign_frame_roundtrip() {
+        let negs = vec![true, false, false, true, true, false, true, false, true];
+        let bytes = encode_sign(&negs, 0.75);
+        let v = decode(&bytes, negs.len()).unwrap();
+        for (x, &n) in v.iter().zip(&negs) {
+            assert_eq!(*x, if n { -0.75 } else { 0.75 });
+        }
+    }
+
+    #[test]
+    fn topk_frame_roundtrip() {
+        let entries = vec![(0usize, 1.5), (7, -0.25), (63, 1e-3)];
+        let bytes = encode_topk(64, &entries);
+        let v = decode(&bytes, 64).unwrap();
+        let mut expect = vec![0.0; 64];
+        for (i, x) in &entries {
+            expect[*i] = *x;
+        }
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn randk_frame_roundtrip() {
+        let m = 50;
+        let seed = 1234;
+        let idx = randk_indices(m, 5, seed);
+        let values: Vec<f64> = idx.iter().map(|&i| i as f64 * 0.5).collect();
+        let bytes = encode_randk(m, seed, &values);
+        let v = decode(&bytes, m).unwrap();
+        for (j, &i) in idx.iter().enumerate() {
+            assert_eq!(v[i], values[j]);
+        }
+        assert_eq!(v.iter().filter(|&&x| x != 0.0).count(), 5);
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let bytes = encode_dense64(&[1.0, 2.0]);
+        assert!(decode(&bytes, 3).is_err());
+    }
+
+    #[test]
+    fn truncated_frame_rejected() {
+        let bytes = encode_qsgd(&[1, -1, 0, 2], 1.0, 3);
+        assert!(decode(&bytes[..bytes.len() - 2], 4).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! Experiment configuration: problem, compressor, asynchrony, backend.
+//!
+//! Presets mirror the paper's §5 setups exactly; every field is also
+//! overridable from the CLI. Configs serialize to JSON so each run's
+//! metrics file embeds the exact configuration that produced it.
+
+pub mod presets;
+
+use crate::comm::latency::LatencyModel;
+use crate::compress::CompressorKind;
+use crate::util::json::Json;
+
+/// Which problem instance to run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProblemKind {
+    /// LASSO (§5.1): exact primal updates.
+    Lasso { m: usize, h: usize, n: usize, rho: f64, theta: f64 },
+    /// MLP classifier on the synthetic-MNIST corpus (CI / e2e scale).
+    Mlp { n: usize, rho: f64, lr: f64 },
+    /// Paper's 6-layer CNN on (synthetic-)MNIST (§5.2): inexact updates.
+    Cnn { n: usize, rho: f64, lr: f64 },
+}
+
+impl ProblemKind {
+    pub fn n_nodes(&self) -> usize {
+        match *self {
+            ProblemKind::Lasso { n, .. }
+            | ProblemKind::Mlp { n, .. }
+            | ProblemKind::Cnn { n, .. } => n,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ProblemKind::Lasso { .. } => "lasso",
+            ProblemKind::Mlp { .. } => "mlp",
+            ProblemKind::Cnn { .. } => "cnn",
+        }
+    }
+}
+
+/// Where the per-iteration numeric updates execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-rust f64 path (LASSO only) — used for cross-validation and the
+    /// 1e-10 accuracy regime.
+    Native,
+    /// AOT-compiled HLO artifacts via PJRT (the production path).
+    Hlo,
+}
+
+/// The `simulate-async()` oracle (§5.1/§5.2): two groups with selection
+/// probabilities 0.1 / 0.8.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OracleConfig {
+    pub p_slow: f64,
+    pub p_fast: f64,
+    /// §5.1 splits the nodes once; §5.2 regroups on every call.
+    pub regroup_each_call: bool,
+}
+
+impl Default for OracleConfig {
+    fn default() -> Self {
+        Self { p_slow: 0.1, p_fast: 0.8, regroup_each_call: false }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub problem: ProblemKind,
+    pub compressor: CompressorKind,
+    /// Error feedback on (paper) or off (ablation: pure delta coding).
+    pub error_feedback: bool,
+    /// Maximum staleness in iterations; τ = 1 ⇒ synchronous.
+    pub tau: usize,
+    /// Minimum arrivals that trigger a server update.
+    pub p_min: usize,
+    pub iters: usize,
+    pub mc_trials: usize,
+    pub seed: u64,
+    pub oracle: OracleConfig,
+    pub backend: Backend,
+    /// Evaluate metrics every this many iterations (NN eval is expensive).
+    pub eval_every: usize,
+    /// Per-node latency for the threaded runtime (unused by the simulator).
+    pub latency: LatencyModel,
+}
+
+impl ExperimentConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let n = self.problem.n_nodes();
+        anyhow::ensure!(n >= 1, "need at least one node");
+        anyhow::ensure!(self.tau >= 1, "tau must be >= 1 (1 = synchronous)");
+        anyhow::ensure!(
+            (1..=n).contains(&self.p_min),
+            "p_min must be in 1..={n} (got {})",
+            self.p_min
+        );
+        anyhow::ensure!(self.iters >= 1, "iters must be >= 1");
+        anyhow::ensure!(self.mc_trials >= 1, "mc_trials must be >= 1");
+        anyhow::ensure!(self.eval_every >= 1, "eval_every must be >= 1");
+        if matches!(self.problem, ProblemKind::Mlp { .. } | ProblemKind::Cnn { .. }) {
+            anyhow::ensure!(
+                self.backend == Backend::Hlo,
+                "NN problems only run on the HLO backend"
+            );
+        }
+        let (p_slow, p_fast) = (self.oracle.p_slow, self.oracle.p_fast);
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&p_slow) && (0.0..=1.0).contains(&p_fast),
+            "oracle probabilities must be in [0,1]"
+        );
+        Ok(())
+    }
+
+    /// Dimension M of the consensus variable.
+    pub fn model_dim(&self, manifest_dim: Option<usize>) -> usize {
+        match self.problem {
+            ProblemKind::Lasso { m, .. } => m,
+            // NN dims come from the artifact manifest.
+            ProblemKind::Mlp { .. } | ProblemKind::Cnn { .. } => {
+                manifest_dim.expect("NN problems need the artifact manifest for M")
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let problem = match self.problem {
+            ProblemKind::Lasso { m, h, n, rho, theta } => Json::obj(vec![
+                ("kind", Json::Str("lasso".into())),
+                ("m", Json::Num(m as f64)),
+                ("h", Json::Num(h as f64)),
+                ("n", Json::Num(n as f64)),
+                ("rho", Json::Num(rho)),
+                ("theta", Json::Num(theta)),
+            ]),
+            ProblemKind::Mlp { n, rho, lr } => Json::obj(vec![
+                ("kind", Json::Str("mlp".into())),
+                ("n", Json::Num(n as f64)),
+                ("rho", Json::Num(rho)),
+                ("lr", Json::Num(lr)),
+            ]),
+            ProblemKind::Cnn { n, rho, lr } => Json::obj(vec![
+                ("kind", Json::Str("cnn".into())),
+                ("n", Json::Num(n as f64)),
+                ("rho", Json::Num(rho)),
+                ("lr", Json::Num(lr)),
+            ]),
+        };
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("problem", problem),
+            ("compressor", Json::Str(self.compressor.label())),
+            ("error_feedback", Json::Bool(self.error_feedback)),
+            ("tau", Json::Num(self.tau as f64)),
+            ("p_min", Json::Num(self.p_min as f64)),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mc_trials", Json::Num(self.mc_trials as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            (
+                "oracle",
+                Json::obj(vec![
+                    ("p_slow", Json::Num(self.oracle.p_slow)),
+                    ("p_fast", Json::Num(self.oracle.p_fast)),
+                    ("regroup_each_call", Json::Bool(self.oracle.regroup_each_call)),
+                ]),
+            ),
+            (
+                "backend",
+                Json::Str(match self.backend {
+                    Backend::Native => "native".into(),
+                    Backend::Hlo => "hlo".into(),
+                }),
+            ),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> ExperimentConfig {
+        presets::fig3(3)
+    }
+
+    #[test]
+    fn presets_validate() {
+        for cfg in [
+            presets::fig3(1),
+            presets::fig3(3),
+            presets::fig4(),
+            presets::ci_lasso(),
+            presets::e2e_mlp(),
+        ] {
+            cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+        }
+    }
+
+    #[test]
+    fn validation_catches_bad_fields() {
+        let mut c = base();
+        c.tau = 0;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.p_min = 0;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.p_min = 100;
+        assert!(c.validate().is_err());
+        let mut c = presets::e2e_mlp();
+        c.backend = Backend::Native;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_has_key_fields() {
+        let j = base().to_json();
+        assert_eq!(j.get("tau").unwrap().as_usize(), Some(3));
+        assert_eq!(
+            j.get("problem").unwrap().get("kind").unwrap().as_str(),
+            Some("lasso")
+        );
+        // round-trips through the parser
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("compressor").unwrap().as_str(), Some("qsgd3"));
+    }
+
+    #[test]
+    fn model_dim() {
+        assert_eq!(base().model_dim(None), 200);
+        assert_eq!(presets::e2e_mlp().model_dim(Some(50890)), 50890);
+    }
+}

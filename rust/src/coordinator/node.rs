@@ -1,0 +1,145 @@
+//! Node worker thread: receives consensus broadcasts, catches up on any
+//! backlog (a straggler applies every missed C(Δz) in order — the estimate
+//! stream is cumulative), runs its local update, and ships compressed
+//! deltas back to the server.
+
+use crate::comm::message::{NodeToServer, ServerToNode};
+use crate::comm::network::NodeEndpoint;
+use crate::compress::error_feedback::EstimateTracker;
+use crate::compress::{wire, Compressor};
+use crate::config::ExperimentConfig;
+use crate::util::rng::Pcg64;
+
+use super::SharedProblem;
+
+pub struct NodeWorker {
+    ep: NodeEndpoint,
+    problem: SharedProblem,
+    compressor: Box<dyn Compressor>,
+    ef: bool,
+    m: usize,
+    x: Vec<f64>,
+    u: Vec<f64>,
+    xhat: EstimateTracker,
+    uhat: EstimateTracker,
+    zhat: Option<EstimateTracker>,
+    rng: Pcg64,
+}
+
+impl NodeWorker {
+    pub fn new(
+        ep: NodeEndpoint,
+        problem: SharedProblem,
+        cfg: &ExperimentConfig,
+        x0: Vec<f64>,
+        rng: Pcg64,
+    ) -> Self {
+        let m = x0.len();
+        Self {
+            ep,
+            problem,
+            compressor: cfg.compressor.build(),
+            ef: cfg.error_feedback,
+            m,
+            x: x0.clone(),
+            u: vec![0.0; m],
+            xhat: EstimateTracker::new(x0, cfg.error_feedback),
+            uhat: EstimateTracker::new(vec![0.0; m], cfg.error_feedback),
+            zhat: None,
+            rng,
+        }
+    }
+
+    pub fn node_id(&self) -> usize {
+        self.ep.node
+    }
+
+    pub fn run(mut self) -> anyhow::Result<()> {
+        // Algorithm 1 lines 1–4: full-precision initial upload.
+        self.ep.send(NodeToServer::InitFull {
+            node: self.ep.node,
+            x0: self.x.clone(),
+            u0: self.u.clone(),
+        })?;
+        loop {
+            let msg = self.ep.recv()?;
+            match msg {
+                ServerToNode::InitZ { z0 } => {
+                    self.zhat = Some(EstimateTracker::new(z0, self.ef));
+                    if !self.compute_and_send()? {
+                        break;
+                    }
+                }
+                ServerToNode::Consensus { included_mask, dz_wire, .. } => {
+                    self.apply_consensus(&dz_wire)?;
+                    let mut included = included_mask & (1 << self.ep.node) != 0;
+                    // Catch up: a straggler may have a backlog of broadcasts;
+                    // apply every missed delta before computing once.
+                    let mut shutdown = false;
+                    while let Some(extra) = self.ep.try_recv() {
+                        match extra {
+                            ServerToNode::Consensus { included_mask, dz_wire, .. } => {
+                                self.apply_consensus(&dz_wire)?;
+                                included |= included_mask & (1 << self.ep.node) != 0;
+                            }
+                            ServerToNode::Shutdown => {
+                                shutdown = true;
+                                break;
+                            }
+                            ServerToNode::InitZ { .. } => {}
+                        }
+                    }
+                    if shutdown {
+                        break;
+                    }
+                    // One update in flight per node (Fig. 2 cadence): only
+                    // compute again once the server has incorporated the
+                    // previous update into a consensus we have seen.
+                    if included && !self.compute_and_send()? {
+                        break;
+                    }
+                }
+                ServerToNode::Shutdown => break,
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_consensus(&mut self, dz_wire: &[u8]) -> anyhow::Result<()> {
+        let dz = wire::decode(dz_wire, self.m)?;
+        self.zhat
+            .as_mut()
+            .expect("consensus before InitZ")
+            .commit(&dz);
+        Ok(())
+    }
+
+    /// Returns false when the server has hung up (treated as shutdown).
+    fn compute_and_send(&mut self) -> anyhow::Result<bool> {
+        let zhat = self.zhat.as_ref().expect("no consensus yet").estimate().to_vec();
+        let (x_new, _loss) = {
+            let mut p = self.problem.lock().unwrap();
+            p.local_update(self.ep.node, &zhat, &self.u, &self.x, &mut self.rng)?
+        };
+        for j in 0..self.m {
+            self.u[j] += x_new[j] - zhat[j];
+        }
+        self.x = x_new;
+        let dx = self.xhat.make_delta(&self.x);
+        let du = self.uhat.make_delta(&self.u);
+        let cx = self.compressor.compress(&dx, &mut self.rng);
+        let cu = self.compressor.compress(&du, &mut self.rng);
+        self.xhat.commit(&cx.dequantized);
+        self.uhat.commit(&cu.dequantized);
+        let sent = self.ep.send(NodeToServer::Update {
+            node: self.ep.node,
+            iter: 0,
+            seq: 0, // stamped by the endpoint
+            dx_wire: cx.wire,
+            du_wire: cu.wire,
+        });
+        // A send failure after the server finished its rounds is an orderly
+        // shutdown race, not an error.
+        Ok(sent.is_ok())
+    }
+}

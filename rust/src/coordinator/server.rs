@@ -1,0 +1,183 @@
+//! Server loop: arrival-driven Algorithm 1. Triggers a consensus round once
+//! at least `P` nodes have reported *and* every node at staleness τ−1 is
+//! among them (the bounded-delay rule); broadcasts the compressed consensus
+//! delta; repeats for the configured number of rounds.
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use crate::comm::message::{NodeToServer, ServerToNode};
+use crate::comm::network::{ServerEndpoint, SharedAccounting};
+use crate::compress::error_feedback::EstimateTracker;
+use crate::compress::{wire, Compressor};
+use crate::config::ExperimentConfig;
+use crate::metrics::{IterRecord, RunRecorder};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+use super::SharedProblem;
+
+pub struct ServerLoop {
+    ep: ServerEndpoint,
+    problem: SharedProblem,
+    accounting: SharedAccounting,
+    compressor: Box<dyn Compressor>,
+    m: usize,
+    n: usize,
+    tau: usize,
+    p_min: usize,
+    iters: usize,
+    eval_every: usize,
+    xhat: Vec<EstimateTracker>,
+    uhat: Vec<EstimateTracker>,
+    zhat: Option<EstimateTracker>,
+    d: Vec<usize>,
+    pending: BTreeSet<usize>,
+    rng: Pcg64,
+    /// How long the server will wait for a required (stale) node before
+    /// declaring the deployment wedged.
+    pub stall_timeout: Duration,
+}
+
+impl ServerLoop {
+    pub fn new(
+        ep: ServerEndpoint,
+        problem: SharedProblem,
+        accounting: SharedAccounting,
+        cfg: &ExperimentConfig,
+        x0: Vec<f64>,
+        m: usize,
+        rng: Pcg64,
+    ) -> Self {
+        let n = ep.n_nodes();
+        let ef = cfg.error_feedback;
+        Self {
+            ep,
+            problem,
+            accounting,
+            compressor: cfg.compressor.build(),
+            m,
+            n,
+            tau: cfg.tau,
+            p_min: cfg.p_min,
+            iters: cfg.iters,
+            eval_every: cfg.eval_every,
+            xhat: (0..n).map(|_| EstimateTracker::new(x0.clone(), ef)).collect(),
+            uhat: (0..n).map(|_| EstimateTracker::new(vec![0.0; m], ef)).collect(),
+            zhat: None,
+            d: vec![0; n],
+            pending: BTreeSet::new(),
+            rng,
+            stall_timeout: Duration::from_secs(60),
+        }
+    }
+
+    pub fn run(mut self) -> anyhow::Result<RunRecorder> {
+        let clock = Stopwatch::new();
+        let mut recorder = RunRecorder::new();
+
+        // ---- init: collect full-precision (x⁰, u⁰) from every node ----
+        // (idempotent per node: the fault injector may duplicate InitFull)
+        let mut inited = vec![false; self.n];
+        while inited.iter().any(|i| !i) {
+            match self.ep.recv()? {
+                NodeToServer::InitFull { node, x0, u0 } => {
+                    self.xhat[node].reset(&x0);
+                    self.uhat[node].reset(&u0);
+                    inited[node] = true;
+                }
+                NodeToServer::Update { .. } => {
+                    anyhow::bail!("update before init handshake completed")
+                }
+            }
+        }
+        let z = self.consensus()?;
+        self.ep.broadcast(&ServerToNode::InitZ { z0: z.clone() })?;
+        self.zhat = Some(EstimateTracker::new(z, true));
+
+        // ---- main rounds ----
+        for r in 0..self.iters {
+            self.gather_batch()?;
+            let z = self.consensus()?;
+            let dz = self.zhat.as_mut().unwrap().make_delta(&z);
+            let cz = self.compressor.compress(&dz, &mut self.rng);
+            let included_mask =
+                self.pending.iter().fold(0u64, |mask, &i| mask | (1 << i));
+            self.ep.broadcast(&ServerToNode::Consensus {
+                iter: r as u64,
+                included_mask,
+                dz_wire: cz.wire,
+            })?;
+            self.zhat.as_mut().unwrap().commit(&cz.dequantized);
+
+            let batch_size = self.pending.len();
+            for i in 0..self.n {
+                if self.pending.contains(&i) {
+                    self.d[i] = 0;
+                } else {
+                    self.d[i] += 1;
+                }
+            }
+            self.pending.clear();
+
+            if (r + 1) % self.eval_every == 0 {
+                let xs: Vec<Vec<f64>> =
+                    self.xhat.iter().map(|t| t.estimate().to_vec()).collect();
+                let us: Vec<Vec<f64>> =
+                    self.uhat.iter().map(|t| t.estimate().to_vec()).collect();
+                let metrics = self.problem.lock().unwrap().evaluate(&xs, &us, &z)?;
+                let comm_bits =
+                    self.accounting.lock().unwrap().normalized_bits(self.m);
+                recorder.push(IterRecord {
+                    iter: r + 1,
+                    comm_bits,
+                    accuracy: metrics.accuracy,
+                    test_acc: metrics.test_acc,
+                    loss: metrics.loss,
+                    active_nodes: batch_size,
+                    wall_s: clock.elapsed_secs(),
+                });
+            }
+        }
+
+        // orderly shutdown: stop the nodes, then drain in-flight uplinks
+        self.ep.broadcast(&ServerToNode::Shutdown)?;
+        self.ep.drain(Duration::from_millis(100));
+        Ok(recorder)
+    }
+
+    /// Wait until ≥ P arrivals and every τ−1-stale node has reported.
+    fn gather_batch(&mut self) -> anyhow::Result<()> {
+        loop {
+            let stale_ok = (0..self.n)
+                .filter(|i| self.d[*i] >= self.tau - 1)
+                .all(|i| self.pending.contains(&i));
+            if self.pending.len() >= self.p_min && stale_ok {
+                return Ok(());
+            }
+            match self.ep.recv_timeout(self.stall_timeout)? {
+                Some(NodeToServer::Update { node, dx_wire, du_wire, .. }) => {
+                    let dx = wire::decode(&dx_wire, self.m)?;
+                    let du = wire::decode(&du_wire, self.m)?;
+                    self.xhat[node].commit(&dx);
+                    self.uhat[node].commit(&du);
+                    self.pending.insert(node);
+                }
+                // Duplicated InitFull frames (fault injection) are ignored —
+                // the handshake already completed.
+                Some(NodeToServer::InitFull { .. }) => {}
+                None => anyhow::bail!(
+                    "server stalled: {} arrivals, staleness {:?}",
+                    self.pending.len(),
+                    self.d
+                ),
+            }
+        }
+    }
+
+    fn consensus(&mut self) -> anyhow::Result<Vec<f64>> {
+        let xs: Vec<Vec<f64>> = self.xhat.iter().map(|t| t.estimate().to_vec()).collect();
+        let us: Vec<Vec<f64>> = self.uhat.iter().map(|t| t.estimate().to_vec()).collect();
+        self.problem.lock().unwrap().consensus(&xs, &us)
+    }
+}

@@ -1,0 +1,173 @@
+//! Ablation benches over the design choices DESIGN.md calls out:
+//! * quantizer resolution q ∈ {2..8}
+//! * error feedback on/off (the §4.1 error-accumulation argument)
+//! * compressor family (qsgd / sign / top-k / rand-k / identity)
+//! * staleness bound τ and arrival threshold P
+//!
+//! All on the Fig-3 LASSO workload (native backend for speed), reporting
+//! bits-to-target and final accuracy per variant.
+
+use crate::admm::runner::{self, ProblemFactory};
+use crate::compress::CompressorKind;
+use crate::config::{presets, ExperimentConfig, ProblemKind};
+use crate::metrics::summary;
+use crate::problems::lasso::{LassoConfig, LassoProblem};
+use crate::problems::Problem;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct AblationRow {
+    pub label: String,
+    pub final_accuracy: f64,
+    pub bits_to_target: Option<f64>,
+    pub total_bits: f64,
+}
+
+impl AblationRow {
+    pub fn render(&self) -> String {
+        format!(
+            "{:32} final_acc {:>10.3e}  bits@target {:>12}  total_bits/param {:>12.1}",
+            self.label,
+            self.final_accuracy,
+            self.bits_to_target
+                .map(|b| format!("{b:.1}"))
+                .unwrap_or_else(|| "n/a".into()),
+            self.total_bits
+        )
+    }
+}
+
+fn base_cfg(iters: usize, trials: usize) -> ExperimentConfig {
+    let mut cfg = presets::fig3(3);
+    cfg.backend = crate::config::Backend::Native;
+    cfg.iters = iters;
+    cfg.mc_trials = trials;
+    cfg
+}
+
+fn run_one(cfg: &ExperimentConfig, target: f64) -> anyhow::Result<AblationRow> {
+    let lcfg = match cfg.problem {
+        ProblemKind::Lasso { m, h, n, rho, theta } => LassoConfig { m, h, n, rho, theta },
+        _ => unreachable!(),
+    };
+    let mut factory: Box<ProblemFactory> = Box::new(move |_seed, data_rng: &mut Pcg64| {
+        Ok(Box::new(LassoProblem::generate(lcfg, data_rng)?) as Box<dyn Problem>)
+    });
+    let res = runner::run_mc(cfg, factory.as_mut())?;
+    drop(factory);
+    let rec = res.mean_recorder();
+    Ok(AblationRow {
+        label: cfg.name.clone(),
+        final_accuracy: *res.mean_accuracy.last().unwrap(),
+        bits_to_target: summary::bits_to_accuracy(&rec.records, target),
+        total_bits: *res.mean_comm_bits.last().unwrap(),
+    })
+}
+
+pub struct AblationOptions {
+    pub iters: usize,
+    pub mc_trials: usize,
+    pub target: f64,
+}
+
+impl Default for AblationOptions {
+    fn default() -> Self {
+        Self { iters: 400, mc_trials: 3, target: 1e-8 }
+    }
+}
+
+/// q-bit sweep: resolution vs bits-to-target.
+pub fn sweep_q(opts: &AblationOptions) -> anyhow::Result<Vec<AblationRow>> {
+    let mut rows = Vec::new();
+    for q in [2u8, 3, 4, 6, 8] {
+        let mut cfg = base_cfg(opts.iters, opts.mc_trials);
+        cfg.compressor = CompressorKind::Qsgd { bits: q };
+        cfg.name = format!("q={q}");
+        rows.push(run_one(&cfg, opts.target)?);
+    }
+    for (kind, name) in [
+        (CompressorKind::Identity32, "q=32(identity32)"),
+        (CompressorKind::Identity, "q=64(identity)"),
+    ] {
+        let mut cfg = base_cfg(opts.iters, opts.mc_trials);
+        cfg.compressor = kind;
+        cfg.name = name.into();
+        rows.push(run_one(&cfg, opts.target)?);
+    }
+    Ok(rows)
+}
+
+/// Error feedback on/off, for the biased (top-k) and unbiased (qsgd)
+/// compressors — EF should matter far more for the biased one.
+pub fn sweep_error_feedback(opts: &AblationOptions) -> anyhow::Result<Vec<AblationRow>> {
+    let mut rows = Vec::new();
+    for (comp, label) in [
+        (CompressorKind::Qsgd { bits: 3 }, "qsgd3"),
+        (CompressorKind::TopK { frac_permille: 100 }, "topk100"),
+        (CompressorKind::Sign, "sign"),
+    ] {
+        for ef in [true, false] {
+            let mut cfg = base_cfg(opts.iters, opts.mc_trials);
+            cfg.compressor = comp;
+            cfg.error_feedback = ef;
+            cfg.name = format!("{label}_ef={}", if ef { "on" } else { "off" });
+            rows.push(run_one(&cfg, opts.target)?);
+        }
+    }
+    Ok(rows)
+}
+
+/// Compressor-family sweep at matched (approximate) bit budgets.
+pub fn sweep_compressors(opts: &AblationOptions) -> anyhow::Result<Vec<AblationRow>> {
+    let kinds = [
+        CompressorKind::Qsgd { bits: 3 },
+        CompressorKind::Sign,
+        CompressorKind::TopK { frac_permille: 50 },
+        CompressorKind::RandK { frac_permille: 50 },
+        CompressorKind::Identity,
+    ];
+    let mut rows = Vec::new();
+    for kind in kinds {
+        let mut cfg = base_cfg(opts.iters, opts.mc_trials);
+        cfg.compressor = kind;
+        cfg.name = kind.label();
+        rows.push(run_one(&cfg, opts.target)?);
+    }
+    Ok(rows)
+}
+
+/// τ and P sweeps: how much staleness/batching the convergence tolerates.
+pub fn sweep_async(opts: &AblationOptions) -> anyhow::Result<Vec<AblationRow>> {
+    let mut rows = Vec::new();
+    for tau in [1usize, 3, 6] {
+        let mut cfg = base_cfg(opts.iters, opts.mc_trials);
+        cfg.tau = tau;
+        cfg.name = format!("tau={tau}");
+        rows.push(run_one(&cfg, opts.target)?);
+    }
+    for p in [1usize, 4, 8] {
+        let mut cfg = base_cfg(opts.iters, opts.mc_trials);
+        cfg.p_min = p;
+        cfg.name = format!("P={p}");
+        rows.push(run_one(&cfg, opts.target)?);
+    }
+    Ok(rows)
+}
+
+/// Run every sweep, printing a table per group.
+pub fn run_all(opts: &AblationOptions) -> anyhow::Result<Vec<AblationRow>> {
+    let mut all = Vec::new();
+    for (title, rows) in [
+        ("quantizer resolution (q bits/scalar)", sweep_q(opts)?),
+        ("error feedback", sweep_error_feedback(opts)?),
+        ("compressor family", sweep_compressors(opts)?),
+        ("asynchrony (tau, P)", sweep_async(opts)?),
+    ] {
+        println!("--- ablation: {title} ---");
+        for r in &rows {
+            println!("{}", r.render());
+        }
+        all.extend(rows);
+    }
+    Ok(all)
+}

@@ -1,0 +1,121 @@
+//! Figure 4 (MNIST CNN): test classification accuracy vs iterations and vs
+//! communication bits, QADMM (q = 3, τ = 3, N = 3, inexact primal = 10 Adam
+//! steps) against unquantized async ADMM.
+//! Headline: ~91.02% fewer bits to reach 95% test accuracy.
+
+use crate::admm::runner::{self, ProblemFactory};
+use crate::compress::CompressorKind;
+use crate::config::{presets, ProblemKind};
+use crate::metrics::summary;
+use crate::problems::nn::{NnArch, NnProblem};
+use crate::problems::Problem;
+use crate::runtime::artifacts::Manifest;
+use crate::runtime::service::ComputeService;
+use crate::util::rng::Pcg64;
+
+use super::Series;
+
+pub struct Fig4Options {
+    pub arch: NnArch,
+    pub iters: usize,
+    pub mc_trials: usize,
+    /// Training examples per run (paper: 60k; CPU default is smaller).
+    pub n_train: usize,
+    pub n_test: usize,
+    pub out_dir: std::path::PathBuf,
+    pub artifact_dir: std::path::PathBuf,
+    pub data_dir: std::path::PathBuf,
+    /// Test-accuracy target for the headline reduction number.
+    pub target: f64,
+}
+
+impl Default for Fig4Options {
+    fn default() -> Self {
+        Self {
+            arch: NnArch::Cnn,
+            iters: presets::fig4().iters,
+            mc_trials: presets::fig4().mc_trials,
+            n_train: 3000,
+            n_test: 1024,
+            out_dir: "out".into(),
+            artifact_dir: "artifacts".into(),
+            data_dir: "data/mnist".into(),
+            target: 0.95,
+        }
+    }
+}
+
+pub struct Fig4Summary {
+    pub series: Vec<Series>,
+    pub headline: Vec<String>,
+}
+
+pub fn run(opts: &Fig4Options) -> anyhow::Result<Fig4Summary> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let prefix = opts.arch.prefix();
+    let service = ComputeService::start(
+        opts.artifact_dir.clone(),
+        vec![format!("{prefix}_local_update"), format!("{prefix}_eval")],
+    )?;
+    let manifest = Manifest::load(&opts.artifact_dir.join("manifest.json"))?;
+
+    let mut series = Vec::new();
+    let mut rows: Vec<crate::metrics::RunRecorder> = Vec::new();
+    for compressor in [CompressorKind::Qsgd { bits: 3 }, CompressorKind::Identity32] {
+        let mut cfg = presets::fig4();
+        cfg.iters = opts.iters;
+        cfg.mc_trials = opts.mc_trials;
+        cfg.compressor = compressor;
+        if opts.arch == NnArch::Mlp {
+            let (n, rho, lr) = match cfg.problem {
+                ProblemKind::Cnn { n, rho, lr } => (n, rho, lr),
+                _ => unreachable!(),
+            };
+            cfg.problem = ProblemKind::Mlp { n: n.max(3), rho, lr };
+        }
+        let label = if compressor == CompressorKind::Identity32 {
+            "baseline".to_string()
+        } else {
+            "qadmm".to_string()
+        };
+        let (n_nodes, rho, lr) = match cfg.problem {
+            ProblemKind::Cnn { n, rho, lr } | ProblemKind::Mlp { n, rho, lr } => (n, rho, lr),
+            _ => unreachable!(),
+        };
+        let arch = opts.arch;
+        let svc = &service;
+        let mfst = &manifest;
+        let mut factory: Box<ProblemFactory> =
+            Box::new(move |seed: u64, _data_rng: &mut Pcg64| {
+                let p = NnProblem::new(
+                    arch,
+                    n_nodes,
+                    rho,
+                    lr,
+                    Box::new(svc.client()),
+                    mfst,
+                    opts.n_train,
+                    opts.n_test,
+                    &opts.data_dir,
+                    seed,
+                )?;
+                Ok(Box::new(p) as Box<dyn Problem>)
+            });
+        let result = runner::run_mc(&cfg, factory.as_mut())?;
+        drop(factory);
+        let s = Series { label: format!("{prefix}_{label}"), result };
+        s.write_csv(&opts.out_dir, "fig4")?;
+        rows.push(s.mean_recorder());
+        series.push(s);
+    }
+
+    let q = summary::bits_to_test_acc(&rows[0].records, opts.target);
+    let b = summary::bits_to_test_acc(&rows[1].records, opts.target);
+    let headline = vec![summary::headline_row(
+        &format!("Fig4 {} classifier", prefix.to_uppercase()),
+        &format!("{:.0}% test accuracy", opts.target * 100.0),
+        q,
+        b,
+    )];
+    Ok(Fig4Summary { series, headline })
+}

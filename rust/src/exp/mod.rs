@@ -1,0 +1,49 @@
+//! Figure/table drivers: each regenerates one piece of the paper's
+//! evaluation (§5) — the same workload, parameters, baselines and summary
+//! rows — writing CSV series under `out/` and printing headline numbers.
+
+pub mod ablation;
+pub mod fig3;
+pub mod fig4;
+
+use crate::admm::runner::McResult;
+use crate::metrics::RunRecorder;
+
+/// One (configuration → averaged curves) pair produced by a driver.
+pub struct Series {
+    pub label: String,
+    pub result: McResult,
+}
+
+impl Series {
+    pub fn mean_recorder(&self) -> RunRecorder {
+        self.result.mean_recorder()
+    }
+
+    pub fn write_csv(&self, dir: &std::path::Path, stem: &str) -> anyhow::Result<()> {
+        let path = dir.join(format!("{stem}_{}.csv", self.label));
+        self.mean_recorder().write_csv(&path)?;
+        Ok(())
+    }
+}
+
+/// Milestone table shared by the figure drivers: value of a metric at a few
+/// x positions along both axes (iterations / communication bits).
+pub fn milestones(rec: &RunRecorder, metric: impl Fn(&crate::metrics::IterRecord) -> f64) -> String {
+    let n = rec.records.len();
+    if n == 0 {
+        return "  (no records)".into();
+    }
+    let picks = [n / 10, n / 4, n / 2, (3 * n) / 4, n - 1];
+    let mut out = String::new();
+    for &i in &picks {
+        let r = &rec.records[i.min(n - 1)];
+        out.push_str(&format!(
+            "  iter {:>6}  bits/param {:>12.1}  metric {:>12.4e}\n",
+            r.iter,
+            r.comm_bits,
+            metric(r)
+        ));
+    }
+    out
+}

@@ -1,0 +1,35 @@
+//! # QADMM — Communication-Efficient Distributed Asynchronous ADMM
+//!
+//! Rust implementation of the paper's system: an asynchronous consensus-ADMM
+//! coordinator (server + nodes, star topology) where every uplink and
+//! downlink exchange is compressed with a stochastic multi-level quantizer
+//! plus error feedback, so only quantized *deltas* of the iterates travel on
+//! the wire (~90% fewer bits at equal convergence).
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — node/server state machines, the async scheduler
+//!   (minimum-arrivals threshold `P`, bounded staleness `τ`), the wire codec
+//!   and bit accounting, experiment harnesses, metrics and the CLI.
+//! * **L2/L1 (python, build-time only)** — JAX graphs + Pallas kernels,
+//!   AOT-lowered to `artifacts/*.hlo.txt`, executed here via PJRT
+//!   ([`runtime`]). Python is never on the request path.
+//!
+//! The library is fully self-contained: the build environment exposes only
+//! the `xla` crate's dependency closure, so the JSON, RNG, CLI, bench and
+//! property-test substrates are implemented in-tree ([`util`]).
+
+pub mod admm;
+pub mod bench_harness;
+pub mod comm;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod exp;
+pub mod metrics;
+pub mod problems;
+pub mod runtime;
+pub mod solver;
+pub mod util;
+
+pub use compress::{Compressor, CompressorKind};
+pub use config::ExperimentConfig;

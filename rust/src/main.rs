@@ -1,0 +1,400 @@
+//! `qadmm` — leader entrypoint.
+//!
+//! Subcommands:
+//!   run        run one experiment preset (sequential simulator)
+//!   fig3       regenerate Figure 3 (LASSO, accuracy vs iters/bits)
+//!   fig4       regenerate Figure 4 (CNN/MNIST, test acc vs iters/bits)
+//!   ablation   design-choice sweeps (q, EF, compressor family, tau, P)
+//!   serve      threaded deployment (server + node workers + PJRT service)
+//!   info       inspect the artifact manifest
+//!   selftest   PJRT round-trip smoke test
+//!
+//! Example: `qadmm fig3 --iters 700 --trials 10 --backend hlo`
+
+use std::path::PathBuf;
+
+use qadmm::admm::runner::{self, ProblemFactory};
+use qadmm::comm::network::FaultSpec;
+use qadmm::compress::CompressorKind;
+use qadmm::config::{presets, Backend, ProblemKind};
+use qadmm::exp::{ablation, fig3, fig4};
+use qadmm::problems::lasso::{LassoConfig, LassoProblem};
+use qadmm::problems::nn::{NnArch, NnProblem};
+use qadmm::problems::Problem;
+use qadmm::runtime::artifacts::Manifest;
+use qadmm::runtime::service::ComputeService;
+use qadmm::runtime::tensor::Tensor;
+use qadmm::runtime::Runtime;
+use qadmm::util::cli::Args;
+use qadmm::util::rng::Pcg64;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let mut args = Args::from_env();
+    let cmd = args.positional().first().cloned().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "run" => cmd_run(&mut args),
+        "fig3" => cmd_fig3(&mut args),
+        "fig4" => cmd_fig4(&mut args),
+        "ablation" => cmd_ablation(&mut args),
+        "serve" => cmd_serve(&mut args),
+        "info" => cmd_info(&mut args),
+        "selftest" => cmd_selftest(&mut args),
+        _ => {
+            print!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+qadmm — Communication-Efficient Distributed Asynchronous ADMM
+
+USAGE: qadmm <cmd> [--options]
+
+  run       --preset NAME [--iters N] [--trials N] [--q N|--compressor KIND]
+            [--tau N] [--p N] [--seed N] [--no-ef] [--out DIR]
+  fig3      [--iters N] [--trials N] [--backend hlo|native] [--target X]
+  fig4      [--iters N] [--trials N] [--arch cnn|mlp] [--train N] [--test N]
+  ablation  [--iters N] [--trials N] [--target X]
+  serve     --preset NAME [--iters N] [--dup-prob X]   (threaded deployment)
+  info      [--artifacts DIR]
+  selftest  [--artifacts DIR]
+
+Presets: fig3 fig3-tau1 fig4 fig4-full ci-lasso e2e-mlp
+Compressors: identity | qsgdQ | sign | topkP | randkP (P in permille)
+";
+
+fn apply_overrides(
+    cfg: &mut qadmm::ExperimentConfig,
+    args: &mut Args,
+) -> anyhow::Result<()> {
+    cfg.iters = args.usize("iters", cfg.iters);
+    cfg.mc_trials = args.usize("trials", cfg.mc_trials);
+    cfg.tau = args.usize("tau", cfg.tau);
+    cfg.p_min = args.usize("p", cfg.p_min);
+    cfg.seed = args.u64("seed", cfg.seed);
+    cfg.eval_every = args.usize("eval-every", cfg.eval_every);
+    if let Some(c) = args.str_opt("compressor") {
+        cfg.compressor = CompressorKind::parse(&c)?;
+    } else {
+        let q = args.usize("q", 0);
+        if q > 0 {
+            cfg.compressor = CompressorKind::Qsgd { bits: q as u8 };
+        }
+    }
+    if args.flag("no-ef") {
+        cfg.error_feedback = false;
+    }
+    // problem-level overrides
+    let rho_override = args.f64("rho", f64::NAN);
+    let lr_override = args.f64("lr", f64::NAN);
+    match &mut cfg.problem {
+        ProblemKind::Lasso { rho, .. } => {
+            if rho_override.is_finite() {
+                *rho = rho_override;
+            }
+        }
+        ProblemKind::Mlp { rho, lr, .. } | ProblemKind::Cnn { rho, lr, .. } => {
+            if rho_override.is_finite() {
+                *rho = rho_override;
+            }
+            if lr_override.is_finite() {
+                *lr = lr_override;
+            }
+        }
+    }
+    if let Some(b) = args.str_opt("backend") {
+        cfg.backend = match b.as_str() {
+            "hlo" => Backend::Hlo,
+            "native" => Backend::Native,
+            other => anyhow::bail!("unknown backend '{other}'"),
+        };
+    }
+    Ok(())
+}
+
+/// Build a problem factory for any preset (shared by run/serve).
+fn make_factory<'a>(
+    cfg: &qadmm::ExperimentConfig,
+    service: Option<&'a ComputeService>,
+    manifest: Option<&'a Manifest>,
+    artifact_consts: (usize, usize),
+    data_dir: PathBuf,
+    n_train: usize,
+    n_test: usize,
+) -> Box<ProblemFactory<'a>> {
+    let cfg = cfg.clone();
+    let (art_m, art_n) = artifact_consts;
+    Box::new(move |seed: u64, data_rng: &mut Pcg64| -> anyhow::Result<Box<dyn Problem>> {
+        match cfg.problem {
+            ProblemKind::Lasso { m, h, n, rho, theta } => {
+                let mut p =
+                    LassoProblem::generate(LassoConfig { m, h, n, rho, theta }, data_rng)?;
+                if cfg.backend == Backend::Hlo {
+                    let svc = service.expect("HLO backend needs the compute service");
+                    p = p.with_hlo(Box::new(svc.client()), art_m, art_n)?;
+                }
+                Ok(Box::new(p))
+            }
+            ProblemKind::Mlp { n, rho, lr } | ProblemKind::Cnn { n, rho, lr } => {
+                let arch = if matches!(cfg.problem, ProblemKind::Mlp { .. }) {
+                    NnArch::Mlp
+                } else {
+                    NnArch::Cnn
+                };
+                let p = NnProblem::new(
+                    arch,
+                    n,
+                    rho,
+                    lr,
+                    Box::new(service.expect("NN needs the compute service").client()),
+                    manifest.expect("NN needs the manifest"),
+                    n_train,
+                    n_test,
+                    &data_dir,
+                    seed,
+                )?;
+                Ok(Box::new(p))
+            }
+        }
+    })
+}
+
+fn needed_artifacts(cfg: &qadmm::ExperimentConfig) -> Vec<String> {
+    match cfg.problem {
+        ProblemKind::Lasso { .. } => {
+            vec!["lasso_node_step".into(), "lasso_server_step".into()]
+        }
+        ProblemKind::Mlp { .. } => vec!["mlp_local_update".into(), "mlp_eval".into()],
+        ProblemKind::Cnn { .. } => vec!["cnn_local_update".into(), "cnn_eval".into()],
+    }
+}
+
+fn cmd_run(args: &mut Args) -> anyhow::Result<()> {
+    let preset = args.str("preset", "ci-lasso");
+    let mut cfg = presets::by_name(&preset)?;
+    apply_overrides(&mut cfg, args)?;
+    let out_dir = PathBuf::from(args.str("out", "out"));
+    let artifact_dir = PathBuf::from(args.str("artifacts", "artifacts"));
+    let data_dir = PathBuf::from(args.str("data", "data/mnist"));
+    let n_train = args.usize("train", 3000);
+    let n_test = args.usize("test", 1024);
+    args.finish()?;
+    cfg.validate()?;
+
+    let needs_hlo = cfg.backend == Backend::Hlo
+        || matches!(cfg.problem, ProblemKind::Mlp { .. } | ProblemKind::Cnn { .. });
+    let service = if needs_hlo {
+        Some(ComputeService::start(artifact_dir.clone(), needed_artifacts(&cfg))?)
+    } else {
+        None
+    };
+    let manifest = if needs_hlo {
+        Some(Manifest::load(&artifact_dir.join("manifest.json"))?)
+    } else {
+        None
+    };
+    let art_consts = manifest
+        .as_ref()
+        .map(|m| {
+            (m.const_usize("lasso_m").unwrap_or(0), m.const_usize("lasso_n").unwrap_or(0))
+        })
+        .unwrap_or((0, 0));
+
+    println!("running {} ({} iters x {} trials)...", cfg.name, cfg.iters, cfg.mc_trials);
+    let mut factory = make_factory(
+        &cfg,
+        service.as_ref(),
+        manifest.as_ref(),
+        art_consts,
+        data_dir,
+        n_train,
+        n_test,
+    );
+    let res = runner::run_mc(&cfg, factory.as_mut())?;
+    drop(factory);
+    let rec = res.mean_recorder();
+    std::fs::create_dir_all(&out_dir)?;
+    let csv = out_dir.join(format!("{}.csv", cfg.name));
+    rec.write_csv(&csv)?;
+    std::fs::write(
+        out_dir.join(format!("{}.config.json", cfg.name)),
+        cfg.to_json().to_string_pretty(),
+    )?;
+    if let Some(last) = rec.last() {
+        println!(
+            "final: iter={} accuracy={:.3e} test_acc={:.4} loss={:.4e} bits/param={:.1}",
+            last.iter, last.accuracy, last.test_acc, last.loss, last.comm_bits
+        );
+    }
+    println!("wrote {}", csv.display());
+    Ok(())
+}
+
+fn cmd_fig3(args: &mut Args) -> anyhow::Result<()> {
+    let mut opts = fig3::Fig3Options {
+        iters: args.usize("iters", presets::fig3(3).iters),
+        mc_trials: args.usize("trials", presets::fig3(3).mc_trials),
+        target: args.f64("target", 1e-10),
+        out_dir: PathBuf::from(args.str("out", "out")),
+        artifact_dir: PathBuf::from(args.str("artifacts", "artifacts")),
+        ..Default::default()
+    };
+    if args.str("backend", "hlo") == "native" {
+        opts.backend = Backend::Native;
+    }
+    args.finish()?;
+    let summary = fig3::run(&opts)?;
+    for s in &summary.series {
+        println!("--- fig3 series {} ---", s.label);
+        print!(
+            "{}",
+            qadmm::exp::milestones(&s.mean_recorder(), |r| r.accuracy)
+        );
+    }
+    for h in &summary.headline {
+        println!("{h}");
+    }
+    Ok(())
+}
+
+fn cmd_fig4(args: &mut Args) -> anyhow::Result<()> {
+    let arch = match args.str("arch", "cnn").as_str() {
+        "cnn" => NnArch::Cnn,
+        "mlp" => NnArch::Mlp,
+        other => anyhow::bail!("unknown arch '{other}'"),
+    };
+    let opts = fig4::Fig4Options {
+        arch,
+        iters: args.usize("iters", presets::fig4().iters),
+        mc_trials: args.usize("trials", presets::fig4().mc_trials),
+        n_train: args.usize("train", 3000),
+        n_test: args.usize("test", 1024),
+        target: args.f64("target", 0.95),
+        out_dir: PathBuf::from(args.str("out", "out")),
+        artifact_dir: PathBuf::from(args.str("artifacts", "artifacts")),
+        data_dir: PathBuf::from(args.str("data", "data/mnist")),
+    };
+    args.finish()?;
+    let summary = fig4::run(&opts)?;
+    for s in &summary.series {
+        println!("--- fig4 series {} ---", s.label);
+        print!("{}", qadmm::exp::milestones(&s.mean_recorder(), |r| r.test_acc));
+    }
+    for h in &summary.headline {
+        println!("{h}");
+    }
+    Ok(())
+}
+
+fn cmd_ablation(args: &mut Args) -> anyhow::Result<()> {
+    let opts = ablation::AblationOptions {
+        iters: args.usize("iters", 400),
+        mc_trials: args.usize("trials", 3),
+        target: args.f64("target", 1e-8),
+    };
+    args.finish()?;
+    ablation::run_all(&opts)?;
+    Ok(())
+}
+
+fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
+    let preset = args.str("preset", "e2e-mlp");
+    let mut cfg = presets::by_name(&preset)?;
+    apply_overrides(&mut cfg, args)?;
+    let artifact_dir = PathBuf::from(args.str("artifacts", "artifacts"));
+    let data_dir = PathBuf::from(args.str("data", "data/mnist"));
+    let n_train = args.usize("train", 2000);
+    let n_test = args.usize("test", 512);
+    let dup_prob = args.f64("dup-prob", 0.0);
+    args.finish()?;
+
+    let service = ComputeService::start(artifact_dir.clone(), needed_artifacts(&cfg))?;
+    let manifest = Manifest::load(&artifact_dir.join("manifest.json"))?;
+    let art_consts = (
+        manifest.const_usize("lasso_m").unwrap_or(0),
+        manifest.const_usize("lasso_n").unwrap_or(0),
+    );
+    let mut factory = make_factory(
+        &cfg,
+        Some(&service),
+        Some(&manifest),
+        art_consts,
+        data_dir,
+        n_train,
+        n_test,
+    );
+    let mut rngs = qadmm::admm::sim::TrialRngs::new(cfg.seed);
+    let boxed = factory(cfg.seed, &mut rngs.data)?;
+    drop(factory);
+    // SAFETY of Send: problems constructed here use ComputeClient execs.
+    let problem: Box<dyn Problem + Send> = unsafe { make_send(boxed) };
+    println!("serving {} on {} node threads...", cfg.name, cfg.problem.n_nodes());
+    let outcome =
+        qadmm::coordinator::run_threaded(&cfg, problem, FaultSpec { dup_prob })?;
+    if let Some(last) = outcome.recorder.last() {
+        println!(
+            "final: iter={} test_acc={:.4} loss={:.4e} bits/param={:.1}",
+            last.iter, last.test_acc, last.loss, outcome.normalized_bits
+        );
+    }
+    Ok(())
+}
+
+/// The factory returns `Box<dyn Problem>`; when every exec handle inside is
+/// a `ComputeClient` (channel sender) the value is Send in fact. This
+/// re-brands the box for the threaded runtime.
+unsafe fn make_send(p: Box<dyn Problem>) -> Box<dyn Problem + Send> {
+    unsafe { std::mem::transmute(p) }
+}
+
+fn cmd_info(args: &mut Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.str("artifacts", "artifacts"));
+    args.finish()?;
+    let manifest = Manifest::load(&dir.join("manifest.json"))?;
+    println!("artifacts in {}:", dir.display());
+    for (name, spec) in &manifest.artifacts {
+        let ins: Vec<String> = spec
+            .inputs
+            .iter()
+            .map(|i| format!("{}:{}{:?}", i.name, i.dtype, i.shape))
+            .collect();
+        println!("  {name:28} {} -> {:?}", ins.join(" "), spec.outputs);
+    }
+    for (k, v) in &manifest.consts {
+        println!("  const {k} = {v}");
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &mut Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.str("artifacts", "artifacts"));
+    args.finish()?;
+    let rt = Runtime::open(&dir)?;
+    // run the standalone quantizer artifact and check against native qsgd
+    let m = 200;
+    let mut rng = Pcg64::seed_from_u64(1);
+    let delta = rng.normal_vec(m, 0.0, 1.0);
+    let noise = rng.uniform_vec_f64(m);
+    let out = rt.call(
+        "quantize_f64_m200",
+        &[
+            Tensor::vec_f64(delta.clone()),
+            Tensor::vec_f64(noise.clone()),
+            Tensor::scalar_f64(3.0),
+        ],
+    )?;
+    let q = qadmm::compress::qsgd::Qsgd::new(3);
+    let (levels, norm) = q.quantize_with_noise(&delta, &noise);
+    anyhow::ensure!(out[1].as_i32()? == levels.as_slice(), "level mismatch HLO vs native");
+    anyhow::ensure!((out[2].scalar()? - norm).abs() < 1e-15, "norm mismatch");
+    println!("selftest OK: HLO quantizer == native quantizer ({m} elements)");
+    Ok(())
+}

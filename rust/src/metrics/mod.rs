@@ -1,0 +1,138 @@
+//! Metrics: per-iteration records (accuracy eq. 19, communication bits
+//! eq. 20, test accuracy/loss), CSV/JSON emission, and headline summaries
+//! (bits-to-target reduction percentages).
+
+pub mod summary;
+
+use crate::util::json::Json;
+
+/// One measured point along a run.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub iter: usize,
+    /// Cumulative communication bits normalized by M (eq. 20).
+    pub comm_bits: f64,
+    /// |L − F*| / F* for convex problems (eq. 19); NaN if not applicable.
+    pub accuracy: f64,
+    /// Test-set classification accuracy in [0,1]; NaN if not applicable.
+    pub test_acc: f64,
+    /// Training loss (NN) or augmented Lagrangian value (LASSO).
+    pub loss: f64,
+    /// |A_r|: how many nodes updated this iteration.
+    pub active_nodes: usize,
+    /// Wall-clock seconds since run start.
+    pub wall_s: f64,
+}
+
+/// Collects the records of one run (one MC trial).
+#[derive(Clone, Debug, Default)]
+pub struct RunRecorder {
+    pub records: Vec<IterRecord>,
+}
+
+impl RunRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: IterRecord) {
+        self.records.push(r);
+    }
+
+    pub fn csv_header() -> &'static str {
+        "iter,comm_bits,accuracy,test_acc,loss,active_nodes,wall_s"
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(Self::csv_header());
+        out.push('\n');
+        for r in &self.records {
+            out.push_str(&format!(
+                "{},{:.6e},{:.6e},{:.6},{:.6e},{},{:.4}\n",
+                r.iter, r.comm_bits, r.accuracy, r.test_acc, r.loss, r.active_nodes, r.wall_s
+            ));
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+
+    pub fn series(&self, f: impl Fn(&IterRecord) -> f64) -> Vec<f64> {
+        self.records.iter().map(f).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("iter", Json::Num(r.iter as f64)),
+                        ("comm_bits", Json::Num(r.comm_bits)),
+                        ("accuracy", Json::Num(r.accuracy)),
+                        ("test_acc", Json::Num(r.test_acc)),
+                        ("loss", Json::Num(r.loss)),
+                        ("active_nodes", Json::Num(r.active_nodes as f64)),
+                        ("wall_s", Json::Num(r.wall_s)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn last(&self) -> Option<&IterRecord> {
+        self.records.last()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: usize, acc: f64, bits: f64) -> IterRecord {
+        IterRecord {
+            iter,
+            comm_bits: bits,
+            accuracy: acc,
+            test_acc: f64::NAN,
+            loss: 1.0,
+            active_nodes: 4,
+            wall_s: 0.1,
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut r = RunRecorder::new();
+        r.push(rec(0, 1.0, 64.0));
+        r.push(rec(1, 0.1, 128.0));
+        let csv = r.to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("iter,"));
+        assert_eq!(lines[1].split(',').count(), 7);
+    }
+
+    #[test]
+    fn series_extracts() {
+        let mut r = RunRecorder::new();
+        r.push(rec(0, 1.0, 64.0));
+        r.push(rec(1, 0.5, 128.0));
+        assert_eq!(r.series(|x| x.accuracy), vec![1.0, 0.5]);
+        assert_eq!(r.last().unwrap().iter, 1);
+    }
+
+    #[test]
+    fn json_serializes_nan_as_null() {
+        let mut r = RunRecorder::new();
+        r.push(rec(0, 1.0, 64.0));
+        let text = r.to_json().to_string_compact();
+        assert!(text.contains("\"test_acc\":null"));
+    }
+}

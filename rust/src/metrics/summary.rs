@@ -1,0 +1,97 @@
+//! Headline summaries: "QADMM requires X% fewer communication bits than the
+//! unquantized version to reach accuracy Y" (the paper's 90.62% / 91.02%).
+
+use super::IterRecord;
+
+/// First cumulative comm-bits value at which `reached` becomes true and
+/// stays measurable (first crossing). Returns None if never reached.
+pub fn bits_to_reach(records: &[IterRecord], reached: impl Fn(&IterRecord) -> bool) -> Option<f64> {
+    records.iter().find(|r| reached(r)).map(|r| r.comm_bits)
+}
+
+/// Bits until eq.-19 accuracy drops to `target` (LASSO-style, lower=better).
+pub fn bits_to_accuracy(records: &[IterRecord], target: f64) -> Option<f64> {
+    bits_to_reach(records, |r| r.accuracy.is_finite() && r.accuracy <= target)
+}
+
+/// Bits until test accuracy rises to `target` (classification, higher=better).
+pub fn bits_to_test_acc(records: &[IterRecord], target: f64) -> Option<f64> {
+    bits_to_reach(records, |r| r.test_acc.is_finite() && r.test_acc >= target)
+}
+
+/// Percentage reduction of `ours` relative to `baseline` (positive = fewer).
+pub fn reduction_pct(ours: f64, baseline: f64) -> f64 {
+    100.0 * (1.0 - ours / baseline)
+}
+
+/// Pretty summary row used by the figure drivers.
+pub fn headline_row(
+    label: &str,
+    target_desc: &str,
+    ours: Option<f64>,
+    baseline: Option<f64>,
+) -> String {
+    match (ours, baseline) {
+        (Some(o), Some(b)) => format!(
+            "{label}: to reach {target_desc}: QADMM {o:.1} bits/param vs baseline {b:.1} \
+             bits/param  =>  {:.2}% reduction",
+            reduction_pct(o, b)
+        ),
+        (o, b) => format!(
+            "{label}: to reach {target_desc}: QADMM {:?} vs baseline {:?} (not reached)",
+            o, b
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: usize, acc: f64, test_acc: f64, bits: f64) -> IterRecord {
+        IterRecord {
+            iter,
+            comm_bits: bits,
+            accuracy: acc,
+            test_acc,
+            loss: 0.0,
+            active_nodes: 1,
+            wall_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn first_crossing_downward() {
+        let recs = vec![
+            rec(0, 1.0, 0.2, 10.0),
+            rec(1, 1e-3, 0.5, 20.0),
+            rec(2, 1e-11, 0.9, 30.0),
+            rec(3, 1e-12, 0.96, 40.0),
+        ];
+        assert_eq!(bits_to_accuracy(&recs, 1e-10), Some(30.0));
+        assert_eq!(bits_to_test_acc(&recs, 0.95), Some(40.0));
+        assert_eq!(bits_to_accuracy(&recs, 1e-20), None);
+    }
+
+    #[test]
+    fn reduction_matches_paper_arithmetic() {
+        // 90.62% reduction means ours = 9.38% of baseline
+        let r = reduction_pct(9.38, 100.0);
+        assert!((r - 90.62).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_records_are_skipped() {
+        let recs = vec![rec(0, f64::NAN, f64::NAN, 5.0), rec(1, 0.5, 0.99, 10.0)];
+        assert_eq!(bits_to_accuracy(&recs, 0.6), Some(10.0));
+        assert_eq!(bits_to_test_acc(&recs, 0.9), Some(10.0));
+    }
+
+    #[test]
+    fn headline_row_formats() {
+        let s = headline_row("LASSO", "1e-10", Some(10.0), Some(100.0));
+        assert!(s.contains("90.00% reduction"));
+        let s2 = headline_row("LASSO", "1e-10", None, Some(1.0));
+        assert!(s2.contains("not reached"));
+    }
+}

@@ -1,0 +1,457 @@
+//! LASSO consensus problem (§5.1):
+//!     minimize Σᵢ ‖Aᵢx − bᵢ‖² + θ‖x‖₁
+//! with exact primal updates — (2AᵀAᵢ + ρI) is factorized once per node, so
+//! each update is one M×M solve (a single matmul against the precomputed
+//! inverse on the HLO path).
+//!
+//! Data generation follows the paper exactly: Aᵢ ~ N(0,1), b = A z₀ + n with
+//! z₀ sparse (0.2·M nonzeros ~ N(0,1)) and n ~ N(0, 0.01).
+
+use super::{EvalMetrics, Problem};
+use crate::config::Backend;
+use crate::runtime::tensor::Tensor;
+use crate::runtime::Exec;
+use crate::solver::linalg::{add, dot, Mat};
+use crate::solver::prox;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LassoConfig {
+    pub m: usize,
+    pub h: usize,
+    pub n: usize,
+    pub rho: f64,
+    pub theta: f64,
+}
+
+pub struct LassoProblem {
+    pub cfg: LassoConfig,
+    /// Per-node data matrices Aᵢ [h × m] and targets bᵢ.
+    a: Vec<Mat>,
+    b: Vec<Vec<f64>>,
+    /// Precomputed per-node quantities.
+    ata: Vec<Mat>,      // AᵀA
+    atb2: Vec<Vec<f64>>, // 2Aᵀb
+    btb: Vec<f64>,      // ‖b‖²
+    minv: Vec<Mat>,     // (2AᵀA + ρI)⁻¹
+    backend: Backend,
+    exec: Option<Box<dyn Exec + Send>>,
+    /// Unique namespace for device-pinned constants: trials/variants each
+    /// get fresh problem instances whose matrices must never collide in the
+    /// runtime's const cache.
+    instance: u64,
+    /// Reference optimum F* for the accuracy metric (eq. 19), lazy.
+    fstar: Option<f64>,
+    /// The sparse ground truth (diagnostics).
+    pub z0: Vec<f64>,
+}
+
+impl LassoProblem {
+    /// Generate a problem instance from the paper's distributions.
+    pub fn generate(cfg: LassoConfig, rng: &mut Pcg64) -> anyhow::Result<Self> {
+        let LassoConfig { m, h, n, rho, .. } = cfg;
+        anyhow::ensure!(m > 0 && h > 0 && n > 0, "bad lasso dims");
+        let mut z0 = vec![0.0; m];
+        let nnz = ((0.2 * m as f64).round() as usize).max(1);
+        for &i in rng.choose_k(m, nnz).iter() {
+            z0[i] = rng.standard_normal();
+        }
+        let mut a = Vec::with_capacity(n);
+        let mut b = Vec::with_capacity(n);
+        for _ in 0..n {
+            let ai = Mat { rows: h, cols: m, data: rng.normal_vec(h * m, 0.0, 1.0) };
+            // noise ~ N(0, 0.01) ⇒ std 0.1
+            let mut bi = ai.matvec(&z0);
+            for v in &mut bi {
+                *v += 0.1 * rng.standard_normal();
+            }
+            a.push(ai);
+            b.push(bi);
+        }
+        let mut ata = Vec::with_capacity(n);
+        let mut atb2 = Vec::with_capacity(n);
+        let mut btb = Vec::with_capacity(n);
+        let mut minv = Vec::with_capacity(n);
+        for i in 0..n {
+            let gram = a[i].gram();
+            let mut sys = gram.clone();
+            sys.scale_in_place(2.0);
+            sys.add_diag_in_place(rho);
+            minv.push(sys.spd_inverse()?);
+            atb2.push(a[i].matvec_t(&b[i]).iter().map(|v| 2.0 * v).collect());
+            btb.push(dot(&b[i], &b[i]));
+            ata.push(gram);
+        }
+        static INSTANCE: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+        Ok(Self {
+            cfg,
+            a,
+            b,
+            ata,
+            atb2,
+            btb,
+            minv,
+            backend: Backend::Native,
+            exec: None,
+            instance: INSTANCE.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            fstar: None,
+            z0,
+        })
+    }
+
+    /// Switch to the HLO backend (artifact `lasso_node_step` /
+    /// `lasso_server_step`). Requires the artifact dimensions to match.
+    pub fn with_hlo(
+        mut self,
+        exec: Box<dyn Exec + Send>,
+        art_m: usize,
+        art_n: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            self.cfg.m == art_m && self.cfg.n == art_n,
+            "HLO artifacts are compiled for (m={art_m}, n={art_n}); config has (m={}, n={})",
+            self.cfg.m,
+            self.cfg.n
+        );
+        self.backend = Backend::Hlo;
+        self.exec = Some(exec);
+        Ok(self)
+    }
+
+    /// Augmented Lagrangian (eq. 3/4) with λ = ρu, in exact f64.
+    pub fn lagrangian(&self, x: &[Vec<f64>], u: &[Vec<f64>], z: &[f64]) -> f64 {
+        let LassoConfig { n, rho, theta, .. } = self.cfg;
+        let mut total = 0.0;
+        for i in 0..n {
+            // f_i = xᵀ(AᵀA)x − (2Aᵀb)ᵀx + bᵀb
+            let gx = self.ata[i].matvec(&x[i]);
+            total += dot(&x[i], &gx) - dot(&self.atb2[i], &x[i]) + self.btb[i];
+            let mut pen = 0.0;
+            let mut unorm = 0.0;
+            for j in 0..self.cfg.m {
+                let r = x[i][j] - z[j] + u[i][j];
+                pen += r * r;
+                unorm += u[i][j] * u[i][j];
+            }
+            total += 0.5 * rho * (pen - unorm);
+        }
+        total + theta * prox::l1_norm(z)
+    }
+
+    /// Plain objective of problem (18) at consensus point z.
+    pub fn objective(&self, z: &[f64]) -> f64 {
+        let mut total = 0.0;
+        for i in 0..self.cfg.n {
+            let r: Vec<f64> =
+                self.a[i].matvec(z).iter().zip(&self.b[i]).map(|(p, q)| p - q).collect();
+            total += dot(&r, &r);
+        }
+        total + self.cfg.theta * prox::l1_norm(z)
+    }
+
+    /// F*: run exact synchronous unquantized ADMM to (near) machine
+    /// precision. Cached. This matches how the paper's metric normalizes.
+    pub fn reference_optimum(&mut self, iters: usize) -> f64 {
+        if let Some(f) = self.fstar {
+            return f;
+        }
+        let LassoConfig { m, n, .. } = self.cfg;
+        let mut x = vec![vec![0.0; m]; n];
+        let mut u = vec![vec![0.0; m]; n];
+        let mut z = vec![0.0; m];
+        for _ in 0..iters {
+            for i in 0..n {
+                x[i] = self.exact_primal_native(i, &z, &u[i]);
+                let xi = x[i].clone();
+                for j in 0..m {
+                    u[i][j] += xi[j] - z[j];
+                }
+            }
+            z = self.consensus_native(&x, &u);
+        }
+        let f = self.lagrangian(&x, &u, &z);
+        self.fstar = Some(f);
+        f
+    }
+
+    /// Override F* (used when one MC-trial harness shares the reference).
+    pub fn set_reference_optimum(&mut self, f: f64) {
+        self.fstar = Some(f);
+    }
+
+    fn exact_primal_native(&self, node: usize, zhat: &[f64], u: &[f64]) -> Vec<f64> {
+        let rho = self.cfg.rho;
+        let rhs: Vec<f64> = self.atb2[node]
+            .iter()
+            .zip(zhat.iter().zip(u))
+            .map(|(atb, (zj, uj))| atb + rho * (zj - uj))
+            .collect();
+        self.minv[node].matvec(&rhs)
+    }
+
+    fn consensus_native(&self, xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> Vec<f64> {
+        let LassoConfig { m, n, rho, theta, .. } = self.cfg;
+        let mut v = vec![0.0; m];
+        for i in 0..n {
+            for j in 0..m {
+                v[j] += xhat[i][j] + uhat[i][j];
+            }
+        }
+        for vj in &mut v {
+            *vj /= n as f64;
+        }
+        prox::soft_threshold_in_place(&mut v, theta / (rho * n as f64));
+        v
+    }
+
+    fn exact_primal_hlo(
+        &self,
+        node: usize,
+        zhat: &[f64],
+        u: &[f64],
+    ) -> anyhow::Result<Vec<f64>> {
+        let m = self.cfg.m;
+        let exec = self.exec.as_ref().expect("hlo backend without exec");
+        // per-node factor (2AᵀA+ρI)⁻¹ and 2Aᵀb are constant across
+        // iterations: pinned on device once, keyed by node (§Perf).
+        let consts = [
+            Tensor::F64(self.minv[node].data.clone(), vec![m, m]),
+            Tensor::vec_f64(self.atb2[node].clone()),
+        ];
+        let zeros = vec![0.5; m]; // unused noise lanes (fused quant outputs ignored)
+        let varying = [
+            Tensor::vec_f64(zhat.to_vec()),
+            Tensor::vec_f64(u.to_vec()),
+            Tensor::vec_f64(vec![0.0; m]), // xhat (only feeds fused quant)
+            Tensor::vec_f64(vec![0.0; m]), // uhat
+            Tensor::vec_f64(zeros.clone()),
+            Tensor::vec_f64(zeros),
+            Tensor::scalar_f64(self.cfg.rho),
+            Tensor::scalar_f64(3.0),
+        ];
+        let key = (self.instance << 16) | node as u64;
+        let out = exec.call_prefixed("lasso_node_step", key, &consts, &varying)?;
+        Ok(out[0].as_f64()?.to_vec())
+    }
+
+    fn consensus_hlo(&self, xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
+        let LassoConfig { m, n, rho, theta, .. } = self.cfg;
+        let exec = self.exec.as_ref().expect("hlo backend without exec");
+        let stack = |vs: &[Vec<f64>]| -> Tensor {
+            Tensor::F64(vs.concat(), vec![n, m])
+        };
+        let inputs = vec![
+            stack(xhat),
+            stack(uhat),
+            Tensor::vec_f64(vec![0.0; m]), // zhat (only feeds fused quant)
+            Tensor::vec_f64(vec![0.5; m]), // noise
+            Tensor::scalar_f64(theta),
+            Tensor::scalar_f64(rho),
+            Tensor::scalar_f64(3.0),
+        ];
+        let out = exec.call("lasso_server_step", &inputs)?;
+        Ok(out[0].as_f64()?.to_vec())
+    }
+
+    /// Stacked (AᵀA [n·m·m], 2Aᵀb [n·m], ‖b‖² [n]) tensors for the HLO
+    /// Lagrangian artifact (parity tests).
+    pub fn gram_tensors(&self) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        let ata = self.ata.iter().flat_map(|m| m.data.iter().copied()).collect();
+        let atb2 = self.atb2.concat();
+        (ata, atb2, self.btb.clone())
+    }
+
+    /// Residual f_i value (local training loss) at x.
+    fn local_loss(&self, node: usize, x: &[f64]) -> f64 {
+        let gx = self.ata[node].matvec(x);
+        dot(x, &gx) - dot(&self.atb2[node], x) + self.btb[node]
+    }
+}
+
+impl Problem for LassoProblem {
+    fn dim(&self) -> usize {
+        self.cfg.m
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.cfg.n
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "lasso(m={},h={},n={},rho={},theta={},{})",
+            self.cfg.m,
+            self.cfg.h,
+            self.cfg.n,
+            self.cfg.rho,
+            self.cfg.theta,
+            match self.backend {
+                Backend::Native => "native",
+                Backend::Hlo => "hlo",
+            }
+        )
+    }
+
+    fn init_x(&mut self, _rng: &mut Pcg64) -> Vec<f64> {
+        vec![0.0; self.cfg.m]
+    }
+
+    fn local_update(
+        &mut self,
+        node: usize,
+        zhat: &[f64],
+        u: &[f64],
+        _x_prev: &[f64],
+        _rng: &mut Pcg64,
+    ) -> anyhow::Result<(Vec<f64>, f64)> {
+        let x = match self.backend {
+            Backend::Native => self.exact_primal_native(node, zhat, u),
+            Backend::Hlo => self.exact_primal_hlo(node, zhat, u)?,
+        };
+        let loss = self.local_loss(node, &x);
+        Ok((x, loss))
+    }
+
+    fn consensus(&mut self, xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
+        match self.backend {
+            Backend::Native => Ok(self.consensus_native(xhat, uhat)),
+            Backend::Hlo => self.consensus_hlo(xhat, uhat),
+        }
+    }
+
+    fn evaluate(
+        &mut self,
+        x: &[Vec<f64>],
+        u: &[Vec<f64>],
+        z: &[f64],
+    ) -> anyhow::Result<EvalMetrics> {
+        let fstar = self.reference_optimum(6000);
+        let lag = self.lagrangian(x, u, z);
+        Ok(EvalMetrics {
+            accuracy: (lag - fstar).abs() / fstar.abs().max(f64::MIN_POSITIVE),
+            test_acc: f64::NAN,
+            loss: lag,
+        })
+    }
+}
+
+impl Drop for LassoProblem {
+    fn drop(&mut self) {
+        // evict this instance's pinned device constants
+        if let Some(exec) = &self.exec {
+            let keys: Vec<u64> =
+                (0..self.cfg.n).map(|i| (self.instance << 16) | i as u64).collect();
+            exec.drop_consts("lasso_node_step", &keys);
+        }
+    }
+}
+
+/// Convenience: the consensus input v = mean(x̂+û) (used by tests/benches).
+pub fn consensus_input(xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> Vec<f64> {
+    let n = xhat.len();
+    let mut v = add(&xhat[0], &uhat[0]);
+    for i in 1..n {
+        for j in 0..v.len() {
+            v[j] += xhat[i][j] + uhat[i][j];
+        }
+    }
+    for vj in &mut v {
+        *vj /= n as f64;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::fista;
+
+    fn small() -> (LassoProblem, Pcg64) {
+        let mut rng = Pcg64::seed_from_u64(11);
+        let cfg = LassoConfig { m: 24, h: 20, n: 4, rho: 20.0, theta: 0.2 };
+        (LassoProblem::generate(cfg, &mut rng).unwrap(), rng)
+    }
+
+    #[test]
+    fn primal_update_satisfies_kkt() {
+        let (mut p, mut rng) = small();
+        let zhat = rng.normal_vec(24, 0.0, 1.0);
+        let u = rng.normal_vec(24, 0.0, 0.1);
+        let (x, _) = p.local_update(0, &zhat, &u, &vec![0.0; 24], &mut rng).unwrap();
+        // 2AᵀA x − 2Aᵀb + ρ(x − ẑ + u) = 0
+        let gx = p.ata[0].matvec(&x);
+        for j in 0..24 {
+            let grad = 2.0 * gx[j] - p.atb2[0][j] + p.cfg.rho * (x[j] - zhat[j] + u[j]);
+            assert!(grad.abs() < 1e-9, "grad[{j}]={grad}");
+        }
+    }
+
+    #[test]
+    fn consensus_is_soft_thresholded_mean() {
+        let (mut p, mut rng) = small();
+        let xhat: Vec<Vec<f64>> = (0..4).map(|_| rng.normal_vec(24, 0.0, 1.0)).collect();
+        let uhat: Vec<Vec<f64>> = (0..4).map(|_| rng.normal_vec(24, 0.0, 0.1)).collect();
+        let z = p.consensus(&xhat, &uhat).unwrap();
+        let v = consensus_input(&xhat, &uhat);
+        let kappa = p.cfg.theta / (p.cfg.rho * 4.0);
+        for j in 0..24 {
+            assert!((z[j] - prox::soft_threshold_scalar(v[j], kappa)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn reference_optimum_agrees_with_fista() {
+        let (mut p, _) = small();
+        let admm_fstar = p.reference_optimum(4000);
+        // stack all nodes into one big (nh × m) system for FISTA
+        let rows: Vec<Vec<f64>> = p
+            .a
+            .iter()
+            .flat_map(|ai| (0..ai.rows).map(move |r| ai.row(r).to_vec()))
+            .collect();
+        let big_a = Mat::from_rows(&rows);
+        let big_b: Vec<f64> = p.b.concat();
+        let res = fista::solve(&big_a, &big_b, p.cfg.theta, 1e-14, 30_000);
+        let rel = (admm_fstar - res.objective).abs() / res.objective.abs();
+        assert!(rel < 1e-6, "admm={admm_fstar} fista={}", res.objective);
+    }
+
+    #[test]
+    fn lagrangian_converges_to_fstar_under_sync_admm() {
+        let (mut p, mut rng) = small();
+        let fstar = p.reference_optimum(4000);
+        let (n, m) = (4, 24);
+        let mut x = vec![vec![0.0; m]; n];
+        let mut u = vec![vec![0.0; m]; n];
+        let mut z = vec![0.0; m];
+        for _ in 0..400 {
+            for i in 0..n {
+                let (xi, _) = p.local_update(i, &z, &u[i], &x[i], &mut rng).unwrap();
+                x[i] = xi;
+                for j in 0..m {
+                    u[i][j] += x[i][j] - z[j];
+                }
+            }
+            z = p.consensus(&x, &u).unwrap();
+        }
+        let metrics = p.evaluate(&x, &u, &z).unwrap();
+        assert!(metrics.accuracy < 1e-6, "accuracy={}", metrics.accuracy);
+        assert!((metrics.loss - fstar).abs() / fstar < 1e-6);
+    }
+
+    #[test]
+    fn data_matches_paper_distributions() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let cfg = LassoConfig { m: 100, h: 400, n: 2, rho: 10.0, theta: 0.1 };
+        let p = LassoProblem::generate(cfg, &mut rng).unwrap();
+        let nnz = p.z0.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nnz, 20); // 0.2 · M
+        // A entries ~ N(0,1): sample mean/var
+        let data = &p.a[0].data;
+        let mean: f64 = data.iter().sum::<f64>() / data.len() as f64;
+        let var: f64 = data.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / data.len() as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+}

@@ -1,0 +1,299 @@
+//! L2-regularized logistic regression — the convex *inexact*-update problem
+//! family the related work ([5]–[8]) simulates. Local update = K Newton-ish
+//! gradient steps on the prox-augmented local loss (native f64), so this
+//! exercises the inexact path without the NN artifacts.
+//!
+//! ```text
+//!     minimize Σᵢ Σ_j log(1 + exp(−y_j aᵢⱼᵀx)) + (γ/2)‖x‖²
+//! ```
+//!
+//! The ridge term is carried by the consensus prox (h = γ/2‖·‖²  ⇒
+//! z = ρN/(γ+ρN) · mean(x̂+û)).
+
+use super::{EvalMetrics, Problem};
+use crate::solver::linalg::{dot, Mat};
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LogRegConfig {
+    pub m: usize,
+    pub h: usize,
+    pub n: usize,
+    pub rho: f64,
+    /// ridge coefficient γ
+    pub gamma: f64,
+    /// inner gradient steps per local update
+    pub k_steps: usize,
+    /// inner step size
+    pub lr: f64,
+}
+
+pub struct LogRegProblem {
+    pub cfg: LogRegConfig,
+    a: Vec<Mat>,        // features per node [h × m]
+    y: Vec<Vec<f64>>,   // labels ±1
+    fstar: Option<f64>,
+    pub x_true: Vec<f64>,
+}
+
+impl LogRegProblem {
+    pub fn generate(cfg: LogRegConfig, rng: &mut Pcg64) -> anyhow::Result<Self> {
+        anyhow::ensure!(cfg.m > 0 && cfg.h > 0 && cfg.n > 0 && cfg.k_steps > 0);
+        let x_true = rng.normal_vec(cfg.m, 0.0, 1.0);
+        let mut a = Vec::with_capacity(cfg.n);
+        let mut y = Vec::with_capacity(cfg.n);
+        for _ in 0..cfg.n {
+            let ai = Mat { rows: cfg.h, cols: cfg.m, data: rng.normal_vec(cfg.h * cfg.m, 0.0, 1.0) };
+            let margins = ai.matvec(&x_true);
+            // labels from the logistic model (adds irreducible noise)
+            let yi = margins
+                .iter()
+                .map(|&mgn| {
+                    let p = 1.0 / (1.0 + (-mgn).exp());
+                    if rng.uniform_f64() < p { 1.0 } else { -1.0 }
+                })
+                .collect();
+            a.push(ai);
+            y.push(yi);
+        }
+        Ok(Self { cfg, a, y, fstar: None, x_true })
+    }
+
+    /// Σ_j log(1 + exp(−y_j aᵀx)) for one node.
+    fn local_nll(&self, node: usize, x: &[f64]) -> f64 {
+        let margins = self.a[node].matvec(x);
+        margins
+            .iter()
+            .zip(&self.y[node])
+            .map(|(&mgn, &yj)| {
+                let t = -yj * mgn;
+                // stable log1p(exp(t))
+                if t > 30.0 { t } else { (1.0 + t.exp()).ln() }
+            })
+            .sum()
+    }
+
+    fn local_grad(&self, node: usize, x: &[f64]) -> Vec<f64> {
+        let margins = self.a[node].matvec(x);
+        let w: Vec<f64> = margins
+            .iter()
+            .zip(&self.y[node])
+            .map(|(&mgn, &yj)| -yj / (1.0 + (yj * mgn).exp()))
+            .collect();
+        self.a[node].matvec_t(&w)
+    }
+
+    /// Global objective at consensus point z.
+    pub fn objective(&self, z: &[f64]) -> f64 {
+        let nll: f64 = (0..self.cfg.n).map(|i| self.local_nll(i, z)).sum();
+        nll + 0.5 * self.cfg.gamma * dot(z, z)
+    }
+
+    /// Augmented Lagrangian (eq. 4 with h = γ/2‖·‖²).
+    pub fn lagrangian(&self, x: &[Vec<f64>], u: &[Vec<f64>], z: &[f64]) -> f64 {
+        let mut total = 0.5 * self.cfg.gamma * dot(z, z);
+        for i in 0..self.cfg.n {
+            total += self.local_nll(i, &x[i]);
+            for j in 0..self.cfg.m {
+                let r = x[i][j] - z[j] + u[i][j];
+                total += 0.5 * self.cfg.rho * (r * r - u[i][j] * u[i][j]);
+            }
+        }
+        total
+    }
+
+    /// High-precision F* via long synchronous exact-ish ADMM (many inner
+    /// steps). Cached.
+    pub fn reference_optimum(&mut self, outer: usize) -> f64 {
+        if let Some(f) = self.fstar {
+            return f;
+        }
+        let (m, n) = (self.cfg.m, self.cfg.n);
+        let save = self.cfg.k_steps;
+        let mut x = vec![vec![0.0; m]; n];
+        let mut u = vec![vec![0.0; m]; n];
+        let mut z = vec![0.0; m];
+        self.cfg.k_steps = 200; // near-exact inner solves for the reference
+        let mut rng = Pcg64::seed_from_u64(0);
+        for _ in 0..outer {
+            for i in 0..n {
+                let (xi, _) = self.local_update(i, &z, &u[i], &x[i], &mut rng).unwrap();
+                x[i] = xi;
+                for j in 0..m {
+                    u[i][j] += x[i][j] - z[j];
+                }
+            }
+            let xs = x.clone();
+            let us = u.clone();
+            z = self.consensus(&xs, &us).unwrap();
+        }
+        self.cfg.k_steps = save;
+        let f = self.lagrangian(&x, &u, &z);
+        self.fstar = Some(f);
+        f
+    }
+}
+
+impl Problem for LogRegProblem {
+    fn dim(&self) -> usize {
+        self.cfg.m
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.cfg.n
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "logreg(m={},h={},n={},rho={},gamma={},k={})",
+            self.cfg.m, self.cfg.h, self.cfg.n, self.cfg.rho, self.cfg.gamma, self.cfg.k_steps
+        )
+    }
+
+    fn init_x(&mut self, _rng: &mut Pcg64) -> Vec<f64> {
+        vec![0.0; self.cfg.m]
+    }
+
+    /// Inexact primal update: K gradient steps on
+    /// f_i(x) + ρ/2‖x − ẑ + u‖² with a 1/(L̂+ρ)-ish fixed step.
+    fn local_update(
+        &mut self,
+        node: usize,
+        zhat: &[f64],
+        u: &[f64],
+        x_prev: &[f64],
+        _rng: &mut Pcg64,
+    ) -> anyhow::Result<(Vec<f64>, f64)> {
+        let rho = self.cfg.rho;
+        let mut x = x_prev.to_vec();
+        for _ in 0..self.cfg.k_steps {
+            let mut g = self.local_grad(node, &x);
+            for j in 0..self.cfg.m {
+                g[j] += rho * (x[j] - zhat[j] + u[j]);
+            }
+            for j in 0..self.cfg.m {
+                x[j] -= self.cfg.lr * g[j];
+            }
+        }
+        let loss = self.local_nll(node, &x);
+        Ok((x, loss))
+    }
+
+    /// prox of γ/2‖·‖²: z = ρN/(γ + ρN) · mean(x̂ + û).
+    fn consensus(&mut self, xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
+        let (m, n, rho, gamma) = (self.cfg.m, xhat.len(), self.cfg.rho, self.cfg.gamma);
+        let shrink = rho * n as f64 / (gamma + rho * n as f64);
+        let mut z = vec![0.0; m];
+        for i in 0..n {
+            for j in 0..m {
+                z[j] += xhat[i][j] + uhat[i][j];
+            }
+        }
+        for v in &mut z {
+            *v = shrink * (*v / n as f64);
+        }
+        Ok(z)
+    }
+
+    fn evaluate(
+        &mut self,
+        x: &[Vec<f64>],
+        u: &[Vec<f64>],
+        z: &[f64],
+    ) -> anyhow::Result<EvalMetrics> {
+        let fstar = self.reference_optimum(400);
+        let lag = self.lagrangian(x, u, z);
+        Ok(EvalMetrics {
+            accuracy: (lag - fstar).abs() / fstar.abs().max(f64::MIN_POSITIVE),
+            test_acc: f64::NAN,
+            loss: lag,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admm::runner;
+    use crate::config::presets;
+
+    fn small() -> LogRegConfig {
+        LogRegConfig { m: 12, h: 60, n: 4, rho: 2.0, gamma: 1.0, k_steps: 15, lr: 0.02 }
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let p = LogRegProblem::generate(small(), &mut rng).unwrap();
+        let x = rng.normal_vec(12, 0.0, 0.5);
+        let g = p.local_grad(0, &x);
+        let eps = 1e-6;
+        for j in [0usize, 5, 11] {
+            let mut xp = x.clone();
+            xp[j] += eps;
+            let mut xm = x.clone();
+            xm[j] -= eps;
+            let fd = (p.local_nll(0, &xp) - p.local_nll(0, &xm)) / (2.0 * eps);
+            assert!((fd - g[j]).abs() < 1e-4, "j={j}: fd={fd} g={}", g[j]);
+        }
+    }
+
+    #[test]
+    fn consensus_is_shrunk_mean() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let mut p = LogRegProblem::generate(small(), &mut rng).unwrap();
+        let xhat: Vec<Vec<f64>> = (0..4).map(|_| rng.normal_vec(12, 0.0, 1.0)).collect();
+        let uhat: Vec<Vec<f64>> = (0..4).map(|_| rng.normal_vec(12, 0.0, 1.0)).collect();
+        let z = p.consensus(&xhat, &uhat).unwrap();
+        let shrink = 2.0 * 4.0 / (1.0 + 2.0 * 4.0);
+        for j in 0..12 {
+            let mean =
+                (0..4).map(|i| xhat[i][j] + uhat[i][j]).sum::<f64>() / 4.0;
+            assert!((z[j] - shrink * mean).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn qadmm_converges_on_logreg() {
+        let mut cfg = presets::ci_lasso(); // reuse knobs; problem comes from factory
+        cfg.name = "ci-logreg".into();
+        cfg.iters = 250;
+        cfg.mc_trials = 1;
+        let lcfg = small();
+        let mut factory: Box<runner::ProblemFactory> =
+            Box::new(move |_seed, rng: &mut Pcg64| {
+                Ok(Box::new(LogRegProblem::generate(lcfg, rng)?) as Box<dyn Problem>)
+            });
+        let res = runner::run_mc(&cfg, factory.as_mut()).unwrap();
+        let acc = *res.mean_accuracy.last().unwrap();
+        assert!(acc < 1e-4, "final accuracy {acc}");
+    }
+
+    #[test]
+    fn quantized_matches_baseline_quality_with_fewer_bits() {
+        let mut cfg = presets::ci_lasso();
+        cfg.name = "ci-logreg-cmp".into();
+        cfg.iters = 250;
+        cfg.mc_trials = 1;
+        let lcfg = small();
+        let run = |cfg: &crate::config::ExperimentConfig| {
+            let mut factory: Box<runner::ProblemFactory> =
+                Box::new(move |_seed, rng: &mut Pcg64| {
+                    Ok(Box::new(LogRegProblem::generate(lcfg, rng)?) as Box<dyn Problem>)
+                });
+            runner::run_mc(cfg, factory.as_mut()).unwrap()
+        };
+        let q = run(&cfg);
+        let mut base = cfg.clone();
+        base.compressor = crate::compress::CompressorKind::Identity32;
+        let b = run(&base);
+        let qa = *q.mean_accuracy.last().unwrap();
+        let ba = *b.mean_accuracy.last().unwrap();
+        assert!(qa < 1e-4 && ba < 1e-4, "q={qa} b={ba}");
+        let qbits = *q.mean_comm_bits.last().unwrap();
+        let bbits = *b.mean_comm_bits.last().unwrap();
+        // m = 12 is tiny, so frame headers (14 B + norm) eat into the 3/32
+        // asymptotic ratio — still expect a ≥2x reduction.
+        assert!(qbits < 0.5 * bbits, "bits: q={qbits} vs b={bbits}");
+    }
+}

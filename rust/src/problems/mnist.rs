@@ -1,0 +1,338 @@
+//! MNIST data substrate.
+//!
+//! Two sources behind one interface:
+//! * **IDX parser** — if the real MNIST files exist under `data/mnist/`
+//!   (`train-images-idx3-ubyte` etc.), they are used.
+//! * **Synthetic MNIST** — the offline substitution (DESIGN.md §3): each
+//!   digit class is a fixed stroke template (polylines in the unit square)
+//!   rasterized at 28×28 with a Gaussian pen, then randomly translated,
+//!   rotated, scaled, and pixel-noised. Class-consistent, learnable, and
+//!   exercises the identical federated-training code path (same CNN, same
+//!   M, same wire traffic).
+
+use crate::util::rng::Pcg64;
+
+pub const IMG_SIDE: usize = 28;
+pub const IMG_PIXELS: usize = IMG_SIDE * IMG_SIDE;
+pub const N_CLASSES: usize = 10;
+
+/// A labeled image set, pixels in [0,1], row-major 28×28.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub images: Vec<f32>, // len = n · 784
+    pub labels: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * IMG_PIXELS..(i + 1) * IMG_PIXELS]
+    }
+
+    /// Split into `n` near-equal shards (random assignment, like the paper's
+    /// random partition of the 60k training examples).
+    pub fn split(&self, n: usize, rng: &mut Pcg64) -> Vec<Dataset> {
+        let mut order: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut order);
+        let mut shards = vec![Dataset::default(); n];
+        for (pos, &idx) in order.iter().enumerate() {
+            let s = &mut shards[pos % n];
+            s.images.extend_from_slice(self.image(idx));
+            s.labels.push(self.labels[idx]);
+        }
+        shards
+    }
+}
+
+// --------------------------------------------------------------------------
+// Synthetic generator
+// --------------------------------------------------------------------------
+
+/// Stroke templates per class: polylines in [0,1]².
+fn class_strokes(digit: usize) -> Vec<Vec<(f64, f64)>> {
+    let circle = |cx: f64, cy: f64, rx: f64, ry: f64| -> Vec<(f64, f64)> {
+        (0..=16)
+            .map(|k| {
+                let t = k as f64 / 16.0 * std::f64::consts::TAU;
+                (cx + rx * t.cos(), cy + ry * t.sin())
+            })
+            .collect()
+    };
+    match digit {
+        0 => vec![circle(0.5, 0.5, 0.22, 0.3)],
+        1 => vec![vec![(0.38, 0.3), (0.52, 0.16), (0.52, 0.84)]],
+        2 => vec![vec![
+            (0.3, 0.3),
+            (0.38, 0.18),
+            (0.6, 0.16),
+            (0.7, 0.3),
+            (0.62, 0.45),
+            (0.35, 0.72),
+            (0.3, 0.82),
+            (0.72, 0.82),
+        ]],
+        3 => vec![vec![
+            (0.32, 0.2),
+            (0.55, 0.15),
+            (0.68, 0.28),
+            (0.52, 0.45),
+            (0.68, 0.62),
+            (0.55, 0.82),
+            (0.3, 0.78),
+        ]],
+        4 => vec![
+            vec![(0.62, 0.15), (0.3, 0.58), (0.75, 0.58)],
+            vec![(0.62, 0.35), (0.62, 0.85)],
+        ],
+        5 => vec![vec![
+            (0.7, 0.17),
+            (0.36, 0.17),
+            (0.33, 0.45),
+            (0.55, 0.42),
+            (0.7, 0.55),
+            (0.66, 0.74),
+            (0.42, 0.83),
+            (0.3, 0.73),
+        ]],
+        6 => {
+            let mut bottom = circle(0.5, 0.62, 0.18, 0.2);
+            bottom.truncate(17);
+            vec![vec![(0.62, 0.14), (0.42, 0.38), (0.34, 0.6)], bottom]
+        }
+        7 => vec![vec![(0.28, 0.18), (0.72, 0.18), (0.46, 0.84)]],
+        8 => vec![circle(0.5, 0.32, 0.16, 0.15), circle(0.5, 0.66, 0.19, 0.18)],
+        9 => {
+            vec![circle(0.52, 0.34, 0.17, 0.17), vec![(0.69, 0.34), (0.66, 0.6), (0.56, 0.84)]]
+        }
+        _ => panic!("digit out of range"),
+    }
+}
+
+fn dist_to_segment(px: f64, py: f64, (x1, y1): (f64, f64), (x2, y2): (f64, f64)) -> f64 {
+    let (dx, dy) = (x2 - x1, y2 - y1);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 == 0.0 {
+        0.0
+    } else {
+        (((px - x1) * dx + (py - y1) * dy) / len2).clamp(0.0, 1.0)
+    };
+    let (cx, cy) = (x1 + t * dx, y1 + t * dy);
+    ((px - cx) * (px - cx) + (py - cy) * (py - cy)).sqrt()
+}
+
+/// Render one digit with random affine jitter + pixel noise.
+pub fn render_digit(digit: usize, rng: &mut Pcg64) -> Vec<f32> {
+    let strokes = class_strokes(digit);
+    // affine jitter: rotation, scale, translation
+    let ang = (rng.uniform_f64() - 0.5) * 0.3; // ±0.15 rad
+    let scale = 0.9 + 0.2 * rng.uniform_f64();
+    let (tx, ty) = ((rng.uniform_f64() - 0.5) * 0.12, (rng.uniform_f64() - 0.5) * 0.12);
+    let (ca, sa) = (ang.cos(), ang.sin());
+    let xform = |(x, y): (f64, f64)| -> (f64, f64) {
+        let (cx, cy) = (x - 0.5, y - 0.5);
+        let (rx, ry) = (ca * cx - sa * cy, sa * cx + ca * cy);
+        (0.5 + scale * rx + tx, 0.5 + scale * ry + ty)
+    };
+    let strokes: Vec<Vec<(f64, f64)>> =
+        strokes.iter().map(|s| s.iter().map(|&p| xform(p)).collect()).collect();
+
+    let sigma = 0.028 + 0.008 * rng.uniform_f64(); // pen width jitter
+    let mut img = vec![0.0f32; IMG_PIXELS];
+    for py in 0..IMG_SIDE {
+        for px in 0..IMG_SIDE {
+            let (fx, fy) =
+                ((px as f64 + 0.5) / IMG_SIDE as f64, (py as f64 + 0.5) / IMG_SIDE as f64);
+            let mut best = f64::INFINITY;
+            for stroke in &strokes {
+                for w in stroke.windows(2) {
+                    best = best.min(dist_to_segment(fx, fy, w[0], w[1]));
+                }
+            }
+            let v = (-0.5 * (best / sigma) * (best / sigma)).exp();
+            img[py * IMG_SIDE + px] = v as f32;
+        }
+    }
+    // intensity jitter + additive noise, clamp to [0,1]
+    let gain = 0.85 + 0.3 * rng.uniform_f64();
+    for v in &mut img {
+        let noisy = *v as f64 * gain + 0.05 * rng.standard_normal();
+        *v = noisy.clamp(0.0, 1.0) as f32;
+    }
+    img
+}
+
+/// Generate a balanced synthetic dataset of `n` examples.
+pub fn synthetic(n: usize, rng: &mut Pcg64) -> Dataset {
+    let mut ds = Dataset::default();
+    ds.images.reserve(n * IMG_PIXELS);
+    ds.labels.reserve(n);
+    for i in 0..n {
+        let digit = i % N_CLASSES;
+        ds.images.extend_from_slice(&render_digit(digit, rng));
+        ds.labels.push(digit as i32);
+    }
+    // shuffle example order (labels + images together)
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut out = Dataset::default();
+    out.images.reserve(n * IMG_PIXELS);
+    out.labels.reserve(n);
+    for &i in &order {
+        out.images.extend_from_slice(ds.image(i));
+        out.labels.push(ds.labels[i]);
+    }
+    out
+}
+
+// --------------------------------------------------------------------------
+// IDX parser (real MNIST, if present)
+// --------------------------------------------------------------------------
+
+fn read_u32_be(b: &[u8], off: usize) -> u32 {
+    u32::from_be_bytes(b[off..off + 4].try_into().unwrap())
+}
+
+/// Parse an IDX3 image file + IDX1 label file into a Dataset.
+pub fn parse_idx(images: &[u8], labels: &[u8]) -> anyhow::Result<Dataset> {
+    anyhow::ensure!(images.len() >= 16 && read_u32_be(images, 0) == 0x0803, "bad image magic");
+    anyhow::ensure!(labels.len() >= 8 && read_u32_be(labels, 0) == 0x0801, "bad label magic");
+    let n = read_u32_be(images, 4) as usize;
+    anyhow::ensure!(read_u32_be(labels, 4) as usize == n, "image/label count mismatch");
+    let rows = read_u32_be(images, 8) as usize;
+    let cols = read_u32_be(images, 12) as usize;
+    anyhow::ensure!(rows == IMG_SIDE && cols == IMG_SIDE, "expected 28x28");
+    anyhow::ensure!(images.len() == 16 + n * IMG_PIXELS, "truncated image file");
+    anyhow::ensure!(labels.len() == 8 + n, "truncated label file");
+    let mut ds = Dataset::default();
+    ds.images = images[16..].iter().map(|&b| b as f32 / 255.0).collect();
+    ds.labels = labels[8..].iter().map(|&b| b as i32).collect();
+    Ok(ds)
+}
+
+/// Load real MNIST from `dir` if present; otherwise synthesize
+/// (`n_train`, `n_test`) examples from `seed`.
+pub fn load_or_synthesize(
+    dir: &std::path::Path,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> anyhow::Result<(Dataset, Dataset, &'static str)> {
+    let train_images = dir.join("train-images-idx3-ubyte");
+    if train_images.exists() {
+        let train = parse_idx(
+            &std::fs::read(&train_images)?,
+            &std::fs::read(dir.join("train-labels-idx1-ubyte"))?,
+        )?;
+        let test = parse_idx(
+            &std::fs::read(dir.join("t10k-images-idx3-ubyte"))?,
+            &std::fs::read(dir.join("t10k-labels-idx1-ubyte"))?,
+        )?;
+        return Ok((train, test, "mnist-idx"));
+    }
+    let mut rng = Pcg64::seed_from_u64(seed ^ 0x6d6e_6973_7421);
+    let train = synthetic(n_train, &mut rng);
+    let test = synthetic(n_test, &mut rng);
+    Ok((train, test, "synthetic"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_classes_in_range() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        for d in 0..N_CLASSES {
+            let img = render_digit(d, &mut rng);
+            assert_eq!(img.len(), IMG_PIXELS);
+            assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            // the pen must actually draw something
+            let mass: f32 = img.iter().sum();
+            assert!(mass > 10.0, "digit {d} too faint: {mass}");
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // mean intra-class L2 distance should be smaller than inter-class
+        let mut rng = Pcg64::seed_from_u64(2);
+        let per = 8;
+        let mut imgs: Vec<Vec<Vec<f32>>> = Vec::new();
+        for d in 0..N_CLASSES {
+            imgs.push((0..per).map(|_| render_digit(d, &mut rng)).collect());
+        }
+        let d2 = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum()
+        };
+        let mut intra = 0.0;
+        let mut intra_n = 0;
+        let mut inter = 0.0;
+        let mut inter_n = 0;
+        for c1 in 0..N_CLASSES {
+            for i in 0..per {
+                for j in i + 1..per {
+                    intra += d2(&imgs[c1][i], &imgs[c1][j]);
+                    intra_n += 1;
+                }
+                let c2 = (c1 + 1) % N_CLASSES;
+                inter += d2(&imgs[c1][i], &imgs[c2][i]);
+                inter_n += 1;
+            }
+        }
+        let (intra, inter) = (intra / intra_n as f64, inter / inter_n as f64);
+        assert!(inter > 1.5 * intra, "inter={inter} intra={intra}");
+    }
+
+    #[test]
+    fn synthetic_is_balanced_and_deterministic() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let ds = synthetic(100, &mut rng);
+        assert_eq!(ds.len(), 100);
+        for c in 0..N_CLASSES {
+            assert_eq!(ds.labels.iter().filter(|&&l| l == c as i32).count(), 10);
+        }
+        let mut rng2 = Pcg64::seed_from_u64(3);
+        let ds2 = synthetic(100, &mut rng2);
+        assert_eq!(ds.images, ds2.images);
+        assert_eq!(ds.labels, ds2.labels);
+    }
+
+    #[test]
+    fn split_partitions_everything() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let ds = synthetic(50, &mut rng);
+        let shards = ds.split(3, &mut rng);
+        assert_eq!(shards.iter().map(Dataset::len).sum::<usize>(), 50);
+        assert!(shards.iter().all(|s| s.len() >= 16));
+    }
+
+    #[test]
+    fn idx_parser_roundtrip() {
+        // build a tiny fake IDX pair
+        let n = 3;
+        let mut images = Vec::new();
+        images.extend_from_slice(&0x0803u32.to_be_bytes());
+        images.extend_from_slice(&(n as u32).to_be_bytes());
+        images.extend_from_slice(&28u32.to_be_bytes());
+        images.extend_from_slice(&28u32.to_be_bytes());
+        images.extend(std::iter::repeat_n(128u8, n * IMG_PIXELS));
+        let mut labels = Vec::new();
+        labels.extend_from_slice(&0x0801u32.to_be_bytes());
+        labels.extend_from_slice(&(n as u32).to_be_bytes());
+        labels.extend_from_slice(&[7u8, 0, 9]);
+        let ds = parse_idx(&images, &labels).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.labels, vec![7, 0, 9]);
+        assert!((ds.image(0)[0] - 128.0 / 255.0).abs() < 1e-6);
+        // corrupt magic fails
+        images[0] = 9;
+        assert!(parse_idx(&images, &labels).is_err());
+    }
+}

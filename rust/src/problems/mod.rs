@@ -1,0 +1,58 @@
+//! Problem definitions: what each node optimizes locally and how the server
+//! aggregates. Problems expose *pure numeric* updates; compression, error
+//! feedback and scheduling live in [`crate::admm`].
+
+pub mod lasso;
+pub mod logreg;
+pub mod mnist;
+pub mod nn;
+
+use crate::util::rng::Pcg64;
+
+/// Metrics a problem can report at evaluation points.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalMetrics {
+    /// Eq. (19): |L − F*| / F* (convex problems; NaN for NN).
+    pub accuracy: f64,
+    /// Test-set classification accuracy in [0,1] (NN; NaN for LASSO).
+    pub test_acc: f64,
+    /// Objective value: augmented Lagrangian (LASSO) or test CE loss (NN).
+    pub loss: f64,
+}
+
+/// A distributed consensus problem (eq. 2): N local objectives + a shared
+/// regularizer handled by the server prox.
+pub trait Problem {
+    /// Dimension M of the consensus variable.
+    fn dim(&self) -> usize;
+
+    fn n_nodes(&self) -> usize;
+
+    fn name(&self) -> String;
+
+    /// Initial x⁽⁰⁾ (shared across nodes; NN uses He init, LASSO zeros).
+    fn init_x(&mut self, rng: &mut Pcg64) -> Vec<f64>;
+
+    /// Local primal update (eq. 9a): exact argmin or K inexact steps,
+    /// starting from `x_prev`, against the node's estimate `zhat` of z and
+    /// its dual `u`. Returns (x_new, local training loss).
+    fn local_update(
+        &mut self,
+        node: usize,
+        zhat: &[f64],
+        u: &[f64],
+        x_prev: &[f64],
+        rng: &mut Pcg64,
+    ) -> anyhow::Result<(Vec<f64>, f64)>;
+
+    /// Server consensus update (eq. 15) on the estimate banks.
+    fn consensus(&mut self, xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> anyhow::Result<Vec<f64>>;
+
+    /// Metrics on the *true* iterates (eq. 19 uses x, z, u, not estimates).
+    fn evaluate(
+        &mut self,
+        x: &[Vec<f64>],
+        u: &[Vec<f64>],
+        z: &[f64],
+    ) -> anyhow::Result<EvalMetrics>;
+}

@@ -1,0 +1,286 @@
+//! Neural-network consensus problems (§5.2): inexact primal updates — K
+//! Adam steps on the prox-augmented local loss — executed entirely inside
+//! one AOT-compiled HLO artifact per ADMM iteration (`cnn_local_update` /
+//! `mlp_local_update`). The consensus prox for h ≡ 0 is the plain average,
+//! computed natively in f64.
+
+use super::mnist::{self, Dataset, IMG_PIXELS};
+use super::{EvalMetrics, Problem};
+use crate::runtime::artifacts::{Manifest, ParamSpec};
+use crate::runtime::tensor::Tensor;
+use crate::runtime::Exec;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NnArch {
+    /// 784–64–10 MLP (fast CI / e2e scale).
+    Mlp,
+    /// The paper's 6-layer CNN (M = 246,026).
+    Cnn,
+}
+
+impl NnArch {
+    pub fn prefix(&self) -> &'static str {
+        match self {
+            NnArch::Mlp => "mlp",
+            NnArch::Cnn => "cnn",
+        }
+    }
+
+    /// Image tensor trailing dims in the artifacts.
+    fn img_dims(&self) -> Vec<usize> {
+        match self {
+            NnArch::Mlp => vec![IMG_PIXELS],
+            NnArch::Cnn => vec![28, 28, 1],
+        }
+    }
+}
+
+pub struct NnProblem {
+    arch: NnArch,
+    m: usize,
+    k: usize,
+    b: usize,
+    eval_b: usize,
+    n_nodes: usize,
+    rho: f64,
+    lr: f64,
+    exec: Box<dyn Exec + Send>,
+    param_specs: Vec<ParamSpec>,
+    // Adam state per node (node-local, never communicated).
+    adam_m: Vec<Vec<f32>>,
+    adam_v: Vec<Vec<f32>>,
+    adam_t: Vec<f32>,
+    shards: Vec<Dataset>,
+    test: Dataset,
+    /// Restart Adam at every outer iteration (default true; see
+    /// `local_update`). Settable for the ablation.
+    pub reset_adam: bool,
+    pub data_source: &'static str,
+    /// Last evaluated train-loss per node (diagnostics).
+    pub last_losses: Vec<f64>,
+}
+
+impl NnProblem {
+    /// Build from the artifact manifest + a data directory (real MNIST if
+    /// present under `data_dir`, otherwise the synthetic corpus).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        arch: NnArch,
+        n_nodes: usize,
+        rho: f64,
+        lr: f64,
+        exec: Box<dyn Exec + Send>,
+        manifest: &Manifest,
+        n_train: usize,
+        n_test: usize,
+        data_dir: &std::path::Path,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        let p = arch.prefix();
+        let m = manifest.const_usize(&format!("{p}_m"))?;
+        let k = manifest.const_usize(&format!("{p}_k"))?;
+        let b = manifest.const_usize(&format!("{p}_b"))?;
+        let eval_b = manifest.const_usize("eval_b")?;
+        let param_specs = manifest.param_specs(p)?.to_vec();
+        let total: usize = param_specs.iter().map(|s| s.size).sum();
+        anyhow::ensure!(total == m, "param specs sum {total} != manifest m {m}");
+
+        // round test size up to a whole number of eval batches
+        let n_test = n_test.div_ceil(eval_b) * eval_b;
+        let (train, test, data_source) =
+            mnist::load_or_synthesize(data_dir, n_train, n_test, seed)?;
+        let mut rng = Pcg64::seed_from_u64(seed ^ 0x5348_4152_44);
+        let shards = train.split(n_nodes, &mut rng);
+        let min_shard = shards.iter().map(Dataset::len).min().unwrap_or(0);
+        anyhow::ensure!(min_shard >= b, "shard too small: {min_shard} < batch {b}");
+
+        Ok(Self {
+            arch,
+            m,
+            k,
+            b,
+            eval_b,
+            n_nodes,
+            rho,
+            lr,
+            exec,
+            param_specs,
+            adam_m: vec![vec![0.0; m]; n_nodes],
+            adam_v: vec![vec![0.0; m]; n_nodes],
+            adam_t: vec![0.0; n_nodes],
+            shards,
+            test,
+            reset_adam: true,
+            data_source,
+            last_losses: vec![f64::NAN; n_nodes],
+        })
+    }
+
+    /// He initialization (weights ~ N(0, 2/fan_in), biases 0) in f64.
+    pub fn he_init(&self, rng: &mut Pcg64) -> Vec<f64> {
+        let mut flat = vec![0.0; self.m];
+        for spec in &self.param_specs {
+            if spec.name.ends_with("_w") {
+                let std = (2.0 / spec.fan_in as f64).sqrt();
+                for v in &mut flat[spec.offset..spec.offset + spec.size] {
+                    *v = std * rng.standard_normal();
+                }
+            }
+        }
+        flat
+    }
+
+    fn sample_batches(&self, node: usize, rng: &mut Pcg64) -> (Vec<f32>, Vec<i32>) {
+        let shard = &self.shards[node];
+        let mut bx = Vec::with_capacity(self.k * self.b * IMG_PIXELS);
+        let mut by = Vec::with_capacity(self.k * self.b);
+        for _ in 0..self.k * self.b {
+            let idx = rng.gen_range(shard.len());
+            bx.extend_from_slice(shard.image(idx));
+            by.push(shard.labels[idx]);
+        }
+        (bx, by)
+    }
+
+    fn batch_shape(&self) -> Vec<usize> {
+        let mut s = vec![self.k, self.b];
+        s.extend(self.arch.img_dims());
+        s
+    }
+
+    fn eval_shape(&self) -> Vec<usize> {
+        let mut s = vec![self.eval_b];
+        s.extend(self.arch.img_dims());
+        s
+    }
+
+    /// Evaluate `z` on the held-out test set: (accuracy, mean CE loss).
+    pub fn test_metrics(&mut self, z: &[f64]) -> anyhow::Result<(f64, f64)> {
+        let name = format!("{}_eval", self.arch.prefix());
+        let flat = Tensor::f32_from_f64(z, vec![self.m]);
+        let n_batches = self.test.len() / self.eval_b;
+        anyhow::ensure!(n_batches > 0, "test set smaller than eval batch");
+        let mut correct = 0.0;
+        let mut loss_sum = 0.0;
+        for batch in 0..n_batches {
+            let lo = batch * self.eval_b;
+            let hi = lo + self.eval_b;
+            let x = Tensor::F32(
+                self.test.images[lo * IMG_PIXELS..hi * IMG_PIXELS].to_vec(),
+                self.eval_shape(),
+            );
+            let y = Tensor::vec_i32(self.test.labels[lo..hi].to_vec());
+            let out = self.exec.call(&name, &[flat.clone(), x, y])?;
+            correct += out[0].scalar()?;
+            loss_sum += out[1].scalar()?;
+        }
+        let total = (n_batches * self.eval_b) as f64;
+        Ok((correct / total, loss_sum / n_batches as f64))
+    }
+}
+
+impl Problem for NnProblem {
+    fn dim(&self) -> usize {
+        self.m
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "{}(m={},n={},k={},b={},rho={},lr={},data={})",
+            self.arch.prefix(),
+            self.m,
+            self.n_nodes,
+            self.k,
+            self.b,
+            self.rho,
+            self.lr,
+            self.data_source
+        )
+    }
+
+    fn init_x(&mut self, rng: &mut Pcg64) -> Vec<f64> {
+        self.he_init(rng)
+    }
+
+    fn local_update(
+        &mut self,
+        node: usize,
+        zhat: &[f64],
+        u: &[f64],
+        x_prev: &[f64],
+        rng: &mut Pcg64,
+    ) -> anyhow::Result<(Vec<f64>, f64)> {
+        let name = format!("{}_local_update", self.arch.prefix());
+        let (bx, by) = self.sample_batches(node, rng);
+        let m = self.m;
+        let dummy = vec![0.0f32; m];
+        let noise = vec![0.5f32; m];
+        // Adam restarts fresh on every outer iteration (the paper: "10
+        // iterations of gradient descent ... ADAM with an *initial* learning
+        // rate of 0.001"). Persisting moments across outer iterations is
+        // unstable: once the training loss is small, stale second moments
+        // shrink and the dual-driven prox term overshoots (verified
+        // empirically — sync runs diverge after ~25 iterations otherwise).
+        if self.reset_adam {
+            self.adam_m[node].iter_mut().for_each(|v| *v = 0.0);
+            self.adam_v[node].iter_mut().for_each(|v| *v = 0.0);
+            self.adam_t[node] = 0.0;
+        }
+        let inputs = vec![
+            Tensor::f32_from_f64(x_prev, vec![m]),
+            Tensor::vec_f32(self.adam_m[node].clone()),
+            Tensor::vec_f32(self.adam_v[node].clone()),
+            Tensor::scalar_f32(self.adam_t[node]),
+            Tensor::f32_from_f64(u, vec![m]),
+            Tensor::f32_from_f64(zhat, vec![m]),
+            Tensor::vec_f32(dummy.clone()), // xhat: feeds only fused quant
+            Tensor::vec_f32(dummy),         // uhat
+            Tensor::F32(bx, self.batch_shape()),
+            Tensor::I32(by, vec![self.k, self.b]),
+            Tensor::vec_f32(noise.clone()),
+            Tensor::vec_f32(noise),
+            Tensor::scalar_f32(self.rho as f32),
+            Tensor::scalar_f32(self.lr as f32),
+            Tensor::scalar_f32(3.0),
+        ];
+        let out = self.exec.call(&name, &inputs)?;
+        // outputs: x_new m_new v_new t_new u_new cx.. loss
+        self.adam_m[node] = out[1].as_f32()?.to_vec();
+        self.adam_v[node] = out[2].as_f32()?.to_vec();
+        self.adam_t[node] = out[3].scalar()? as f32;
+        let x_new = out[0].to_f64_vec();
+        let loss = out[11].scalar()?;
+        self.last_losses[node] = loss;
+        Ok((x_new, loss))
+    }
+
+    fn consensus(&mut self, xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
+        // prox of h ≡ 0 is the identity: z = mean(x̂ + û)
+        let n = xhat.len() as f64;
+        let mut z = vec![0.0; self.m];
+        for (xi, ui) in xhat.iter().zip(uhat) {
+            for j in 0..self.m {
+                z[j] += xi[j] + ui[j];
+            }
+        }
+        for v in &mut z {
+            *v /= n;
+        }
+        Ok(z)
+    }
+
+    fn evaluate(
+        &mut self,
+        _x: &[Vec<f64>],
+        _u: &[Vec<f64>],
+        z: &[f64],
+    ) -> anyhow::Result<EvalMetrics> {
+        let (test_acc, test_loss) = self.test_metrics(z)?;
+        Ok(EvalMetrics { accuracy: f64::NAN, test_acc, loss: test_loss })
+    }
+}

@@ -1,0 +1,266 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Input shapes/dtypes are validated on every call so a
+//! drifted artifact set fails loudly at the boundary, not inside XLA.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::tensor::Tensor;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f64" | "f32" | "i32"
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactSpec {
+    pub fn validate_inputs(&self, inputs: &[Tensor]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            inputs.len() == self.inputs.len(),
+            "got {} inputs, expected {}",
+            inputs.len(),
+            self.inputs.len()
+        );
+        for (t, spec) in inputs.iter().zip(&self.inputs) {
+            anyhow::ensure!(
+                t.shape() == spec.shape.as_slice(),
+                "input '{}': shape {:?} != expected {:?}",
+                spec.name,
+                t.shape(),
+                spec.shape
+            );
+            anyhow::ensure!(
+                t.dtype_name() == spec.dtype,
+                "input '{}': dtype {} != expected {}",
+                spec.name,
+                t.dtype_name(),
+                spec.dtype
+            );
+        }
+        Ok(())
+    }
+
+    /// Index of a named output (panics on unknown name — a programmer error).
+    pub fn output_index(&self, name: &str) -> usize {
+        self.outputs
+            .iter()
+            .position(|o| o == name)
+            .unwrap_or_else(|| panic!("artifact has no output '{name}' ({:?})", self.outputs))
+    }
+}
+
+/// Flat-parameter layout entry for a NN architecture (He init in rust).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub fan_in: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub params: BTreeMap<String, Vec<ParamSpec>>,
+    pub consts: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let root = Json::parse(text)?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in root
+            .expect("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("'artifacts' is not an object"))?
+        {
+            let inputs = entry
+                .expect("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("inputs not an array"))?
+                .iter()
+                .map(parse_tensor_spec)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outputs = entry
+                .expect("outputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("outputs not an array"))?
+                .iter()
+                .map(|o| {
+                    o.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow::anyhow!("output name not a string"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let file = entry
+                .expect("file")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("file not a string"))?
+                .to_string();
+            artifacts.insert(name.clone(), ArtifactSpec { file, inputs, outputs });
+        }
+
+        let mut params = BTreeMap::new();
+        if let Some(pobj) = root.get("params").and_then(Json::as_obj) {
+            for (arch, list) in pobj {
+                let specs = list
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("params.{arch} not an array"))?
+                    .iter()
+                    .map(parse_param_spec)
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                params.insert(arch.clone(), specs);
+            }
+        }
+
+        let mut consts = BTreeMap::new();
+        if let Some(cobj) = root.get("consts").and_then(Json::as_obj) {
+            for (k, v) in cobj {
+                consts.insert(
+                    k.clone(),
+                    v.as_usize().ok_or_else(|| anyhow::anyhow!("const {k} not a usize"))?,
+                );
+            }
+        }
+        Ok(Self { artifacts, params, consts })
+    }
+
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown artifact '{name}' (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn param_specs(&self, arch: &str) -> anyhow::Result<&[ParamSpec]> {
+        self.params
+            .get(arch)
+            .map(Vec::as_slice)
+            .ok_or_else(|| anyhow::anyhow!("no param specs for arch '{arch}'"))
+    }
+
+    pub fn const_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.consts
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("manifest const '{key}' missing"))
+    }
+}
+
+fn parse_tensor_spec(j: &Json) -> anyhow::Result<TensorSpec> {
+    let name = j
+        .expect("name")?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("tensor name not a string"))?
+        .to_string();
+    let shape = j
+        .expect("shape")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let dtype = j
+        .expect("dtype")?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("dtype not a string"))?
+        .to_string();
+    Ok(TensorSpec { name, shape, dtype })
+}
+
+fn parse_param_spec(j: &Json) -> anyhow::Result<ParamSpec> {
+    Ok(ParamSpec {
+        name: j
+            .expect("name")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("param name"))?
+            .to_string(),
+        shape: j
+            .expect("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("param shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<anyhow::Result<Vec<_>>>()?,
+        offset: j.expect("offset")?.as_usize().ok_or_else(|| anyhow::anyhow!("offset"))?,
+        size: j.expect("size")?.as_usize().ok_or_else(|| anyhow::anyhow!("size"))?,
+        fan_in: j.expect("fan_in")?.as_usize().ok_or_else(|| anyhow::anyhow!("fan_in"))?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "q": {"file": "q.hlo.txt",
+              "inputs": [{"name": "delta", "shape": [8], "dtype": "f64"},
+                         {"name": "s", "shape": [], "dtype": "f64"}],
+              "outputs": ["values", "levels"], "meta": {}}
+      },
+      "params": {"mlp": [{"name": "fc0_w", "shape": [4, 2], "offset": 0,
+                           "size": 8, "fan_in": 4}]},
+      "consts": {"mlp_m": 10}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("q").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].shape, Vec::<usize>::new());
+        assert_eq!(a.output_index("levels"), 1);
+        assert_eq!(m.param_specs("mlp").unwrap()[0].fan_in, 4);
+        assert_eq!(m.const_usize("mlp_m").unwrap(), 10);
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn validates_inputs() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("q").unwrap();
+        let good = vec![Tensor::vec_f64(vec![0.0; 8]), Tensor::scalar_f64(3.0)];
+        a.validate_inputs(&good).unwrap();
+        let wrong_shape = vec![Tensor::vec_f64(vec![0.0; 7]), Tensor::scalar_f64(3.0)];
+        assert!(a.validate_inputs(&wrong_shape).is_err());
+        let wrong_dtype = vec![Tensor::vec_f32(vec![0.0; 8]), Tensor::scalar_f64(3.0)];
+        assert!(a.validate_inputs(&wrong_dtype).is_err());
+        let wrong_count = vec![Tensor::scalar_f64(3.0)];
+        assert!(a.validate_inputs(&wrong_count).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let path = Path::new("artifacts/manifest.json");
+        if !path.exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(path).unwrap();
+        assert!(m.artifacts.contains_key("lasso_node_step"));
+        assert_eq!(m.const_usize("cnn_m").unwrap(), 246_026);
+        assert_eq!(m.const_usize("lasso_m").unwrap(), 200);
+    }
+}

@@ -1,0 +1,250 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`), compile
+//! them once on the CPU PJRT client, and execute them from the L3 hot path.
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! PJRT handles are not `Send`, so multi-threaded deployments go through
+//! [`service::ComputeService`] — a dedicated thread that owns the client
+//! and serves typed requests over channels (the same shape as a real
+//! accelerator-executor process).
+
+pub mod artifacts;
+pub mod service;
+pub mod tensor;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use artifacts::Manifest;
+use tensor::Tensor;
+
+/// A compiled-artifact registry bound to one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Device-resident constant inputs, keyed by (artifact, caller key):
+    /// per-node factors (e.g. the LASSO (2AᵀA+ρI)⁻¹) are uploaded once and
+    /// reused every iteration (§Perf).
+    consts: RefCell<HashMap<(String, u64), Vec<xla::PjRtBuffer>>>,
+}
+
+impl Runtime {
+    /// Open `dir` (containing `manifest.json` + HLO text files) on the CPU
+    /// PJRT client.
+    pub fn open(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            consts: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifact location: `$QADMM_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> anyhow::Result<Self> {
+        let dir = std::env::var("QADMM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(Path::new(&dir))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) one artifact.
+    fn ensure_compiled(&self, name: &str) -> anyhow::Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        crate::util::log::debug("runtime", &format!("compiled artifact '{name}'"));
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of artifacts (pays the XLA compile cost up front).
+    pub fn warmup(&self, names: &[&str]) -> anyhow::Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with shape/dtype validation against the manifest.
+    pub fn call(&self, name: &str, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(name)?;
+        spec.validate_inputs(inputs)
+            .map_err(|e| anyhow::anyhow!("artifact '{name}': {e}"))?;
+        self.ensure_compiled(name)?;
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| t.to_buffer(&self.client))
+            .collect::<anyhow::Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.execute_buffers(name, &refs, spec.outputs.len())
+    }
+
+    /// Execute with a device-resident constant *prefix*: `consts` is
+    /// uploaded once per (artifact, key) and reused on every subsequent
+    /// call (pass `None` once registered); only `varying` crosses the
+    /// host/device boundary. ~12× cheaper dispatch than the Literal path
+    /// for small models (§Perf).
+    pub fn call_prefixed(
+        &self,
+        name: &str,
+        key: u64,
+        consts: Option<&[Tensor]>,
+        varying: &[Tensor],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(name)?;
+        self.ensure_compiled(name)?;
+        let cache_key = (name.to_string(), key);
+        if !self.consts.borrow().contains_key(&cache_key) {
+            let consts = consts.ok_or_else(|| {
+                anyhow::anyhow!("artifact '{name}' key {key}: constants never registered")
+            })?;
+            // validate the full concatenation once, at registration
+            let all: Vec<Tensor> = consts.iter().chain(varying.iter()).cloned().collect();
+            spec.validate_inputs(&all)
+                .map_err(|e| anyhow::anyhow!("artifact '{name}': {e}"))?;
+            let uploaded: Vec<xla::PjRtBuffer> = consts
+                .iter()
+                .map(|t| t.to_buffer(&self.client))
+                .collect::<anyhow::Result<_>>()?;
+            self.consts.borrow_mut().insert(cache_key.clone(), uploaded);
+        } else {
+            let n_consts = self.consts.borrow()[&cache_key].len();
+            anyhow::ensure!(
+                n_consts + varying.len() == spec.inputs.len(),
+                "artifact '{name}': {} varying inputs + {n_consts} consts != {} expected",
+                varying.len(),
+                spec.inputs.len()
+            );
+        }
+        let varying_bufs: Vec<xla::PjRtBuffer> = varying
+            .iter()
+            .map(|t| t.to_buffer(&self.client))
+            .collect::<anyhow::Result<_>>()?;
+        let consts_cache = self.consts.borrow();
+        let const_bufs = consts_cache.get(&cache_key).expect("inserted above");
+        let refs: Vec<&xla::PjRtBuffer> =
+            const_bufs.iter().chain(varying_bufs.iter()).collect();
+        self.execute_buffers(name, &refs, spec.outputs.len())
+    }
+
+    fn execute_buffers(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+        n_outputs: usize,
+    ) -> anyhow::Result<Vec<Tensor>> {
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("compiled by caller");
+        let result = exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple result of {name}: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == n_outputs,
+            "artifact '{name}' returned {} outputs, manifest says {n_outputs}",
+            parts.len()
+        );
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Evict pinned constants (called when a problem instance retires).
+    pub fn drop_consts(&self, name: &str, keys: &[u64]) {
+        let mut cache = self.consts.borrow_mut();
+        for &k in keys {
+            cache.remove(&(name.to_string(), k));
+        }
+    }
+
+    /// Number of artifacts compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Number of pinned constant sets (diagnostics).
+    pub fn pinned_const_sets(&self) -> usize {
+        self.consts.borrow().len()
+    }
+}
+
+/// Anything that can execute a named artifact: the in-process [`Runtime`]
+/// (single-threaded simulator) or a [`service::ComputeClient`] (threaded
+/// deployment). Problems are written against this trait.
+pub trait Exec {
+    fn call(&self, name: &str, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>>;
+
+    /// Execute with a cacheable constant input prefix (see
+    /// [`Runtime::call_prefixed`]). The default just concatenates — backends
+    /// with device memory override it to pin the constants.
+    fn call_prefixed(
+        &self,
+        name: &str,
+        _key: u64,
+        consts: &[Tensor],
+        varying: &[Tensor],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        let all: Vec<Tensor> = consts.iter().chain(varying.iter()).cloned().collect();
+        self.call(name, &all)
+    }
+
+    /// Evict pinned constants; default no-op for backends without a cache.
+    fn drop_consts(&self, _name: &str, _keys: &[u64]) {}
+}
+
+impl Exec for Runtime {
+    fn call(&self, name: &str, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        Runtime::call(self, name, inputs)
+    }
+
+    fn call_prefixed(
+        &self,
+        name: &str,
+        key: u64,
+        consts: &[Tensor],
+        varying: &[Tensor],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        Runtime::call_prefixed(self, name, key, Some(consts), varying)
+    }
+}
+
+impl Exec for std::rc::Rc<Runtime> {
+    fn call(&self, name: &str, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        Runtime::call(self, name, inputs)
+    }
+
+    fn call_prefixed(
+        &self,
+        name: &str,
+        key: u64,
+        consts: &[Tensor],
+        varying: &[Tensor],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        Runtime::call_prefixed(self, name, key, Some(consts), varying)
+    }
+}

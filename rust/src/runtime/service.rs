@@ -1,0 +1,192 @@
+//! ComputeService: a dedicated thread that owns the (non-`Send`) PJRT
+//! client and serves artifact executions over channels — the executor
+//! process of the threaded deployment. Node workers and the server thread
+//! hold cloneable [`ComputeClient`] handles.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use super::tensor::Tensor;
+use super::{Exec, Runtime};
+
+enum Request {
+    Call {
+        name: String,
+        inputs: Vec<Tensor>,
+        reply: Sender<anyhow::Result<Vec<Tensor>>>,
+    },
+    /// Prefixed call: `consts` is Some only the first time a (name, key)
+    /// pair is seen by this client — the service pins them on device.
+    CallPrefixed {
+        name: String,
+        key: u64,
+        consts: Option<Vec<Tensor>>,
+        varying: Vec<Tensor>,
+        reply: Sender<anyhow::Result<Vec<Tensor>>>,
+    },
+    /// Evict pinned constants for a retired problem instance.
+    DropConsts { name: String, keys: Vec<u64> },
+    Shutdown,
+}
+
+/// Cloneable handle to the compute thread.
+#[derive(Clone)]
+pub struct ComputeClient {
+    tx: Sender<Request>,
+    /// (name, key) pairs whose constants this client already shipped.
+    registered: std::sync::Arc<std::sync::Mutex<std::collections::HashSet<(String, u64)>>>,
+}
+
+impl ComputeClient {
+    pub fn call(&self, name: &str, inputs: Vec<Tensor>) -> anyhow::Result<Vec<Tensor>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Request::Call { name: name.to_string(), inputs, reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("compute service is down"))?;
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("compute service dropped the reply"))?
+    }
+
+    pub fn call_prefixed(
+        &self,
+        name: &str,
+        key: u64,
+        consts: &[Tensor],
+        varying: Vec<Tensor>,
+    ) -> anyhow::Result<Vec<Tensor>> {
+        let cache_key = (name.to_string(), key);
+        let consts_opt = {
+            let mut reg = self.registered.lock().unwrap();
+            if reg.contains(&cache_key) {
+                None
+            } else {
+                reg.insert(cache_key);
+                Some(consts.to_vec())
+            }
+        };
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Request::CallPrefixed {
+                name: name.to_string(),
+                key,
+                consts: consts_opt,
+                varying,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("compute service is down"))?;
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("compute service dropped the reply"))?
+    }
+}
+
+impl Exec for ComputeClient {
+    fn call(&self, name: &str, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        ComputeClient::call(self, name, inputs.to_vec())
+    }
+
+    fn call_prefixed(
+        &self,
+        name: &str,
+        key: u64,
+        consts: &[Tensor],
+        varying: &[Tensor],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        ComputeClient::call_prefixed(self, name, key, consts, varying.to_vec())
+    }
+
+    fn drop_consts(&self, name: &str, keys: &[u64]) {
+        let mut reg = self.registered.lock().unwrap();
+        for &k in keys {
+            reg.remove(&(name.to_string(), k));
+        }
+        let _ = self
+            .tx
+            .send(Request::DropConsts { name: name.to_string(), keys: keys.to_vec() });
+    }
+}
+
+/// The service: spawn, hand out clients, then `shutdown()` (or drop).
+pub struct ComputeService {
+    tx: Sender<Request>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ComputeService {
+    /// Start the service for the given artifact directory; `warmup` names
+    /// are compiled before the first request is accepted.
+    pub fn start(artifact_dir: PathBuf, warmup: Vec<String>) -> anyhow::Result<Self> {
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("qadmm-compute".into())
+            .spawn(move || Self::run(artifact_dir, warmup, rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("compute service died during startup"))??;
+        Ok(Self { tx, handle: Some(handle) })
+    }
+
+    fn run(
+        dir: PathBuf,
+        warmup: Vec<String>,
+        rx: Receiver<Request>,
+        ready: Sender<anyhow::Result<()>>,
+    ) {
+        let runtime = match Runtime::open(&dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                let _ = ready.send(Err(e));
+                return;
+            }
+        };
+        let names: Vec<&str> = warmup.iter().map(String::as_str).collect();
+        if let Err(e) = runtime.warmup(&names) {
+            let _ = ready.send(Err(e));
+            return;
+        }
+        let _ = ready.send(Ok(()));
+        while let Ok(req) = rx.recv() {
+            match req {
+                Request::Call { name, inputs, reply } => {
+                    let _ = reply.send(runtime.call(&name, &inputs));
+                }
+                Request::CallPrefixed { name, key, consts, varying, reply } => {
+                    let _ = reply.send(runtime.call_prefixed(
+                        &name,
+                        key,
+                        consts.as_deref(),
+                        &varying,
+                    ));
+                }
+                Request::DropConsts { name, keys } => {
+                    runtime.drop_consts(&name, &keys);
+                }
+                Request::Shutdown => break,
+            }
+        }
+    }
+
+    pub fn client(&self) -> ComputeClient {
+        ComputeClient {
+            tx: self.tx.clone(),
+            registered: std::sync::Arc::new(std::sync::Mutex::new(
+                std::collections::HashSet::new(),
+            )),
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

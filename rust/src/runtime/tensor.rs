@@ -1,0 +1,196 @@
+//! Host-side tensor values crossing the rust ⇄ PJRT boundary.
+
+/// A dense host tensor (row-major) in one of the dtypes the artifacts use.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F64(Vec<f64>, Vec<usize>),
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    pub fn scalar_f64(x: f64) -> Self {
+        Tensor::F64(vec![x], vec![])
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        Tensor::F32(vec![x], vec![])
+    }
+
+    pub fn vec_f64(v: Vec<f64>) -> Self {
+        let n = v.len();
+        Tensor::F64(v, vec![n])
+    }
+
+    pub fn vec_f32(v: Vec<f32>) -> Self {
+        let n = v.len();
+        Tensor::F32(v, vec![n])
+    }
+
+    pub fn vec_i32(v: Vec<i32>) -> Self {
+        let n = v.len();
+        Tensor::I32(v, vec![n])
+    }
+
+    /// f64 data reinterpreted as f32 with the given shape (NN boundary).
+    pub fn f32_from_f64(v: &[f64], shape: Vec<usize>) -> Self {
+        debug_assert_eq!(v.len(), shape.iter().product::<usize>());
+        Tensor::F32(v.iter().map(|&x| x as f32).collect(), shape)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F64(_, s) | Tensor::F32(_, s) | Tensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F64(v, _) => v.len(),
+            Tensor::F32(v, _) => v.len(),
+            Tensor::I32(v, _) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            Tensor::F64(..) => "f64",
+            Tensor::F32(..) => "f32",
+            Tensor::I32(..) => "i32",
+        }
+    }
+
+    pub fn as_f64(&self) -> anyhow::Result<&[f64]> {
+        match self {
+            Tensor::F64(v, _) => Ok(v),
+            t => anyhow::bail!("expected f64 tensor, got {}", t.dtype_name()),
+        }
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            Tensor::F32(v, _) => Ok(v),
+            t => anyhow::bail!("expected f32 tensor, got {}", t.dtype_name()),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            Tensor::I32(v, _) => Ok(v),
+            t => anyhow::bail!("expected i32 tensor, got {}", t.dtype_name()),
+        }
+    }
+
+    /// Any numeric tensor widened to f64 (convenience at the NN boundary).
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        match self {
+            Tensor::F64(v, _) => v.clone(),
+            Tensor::F32(v, _) => v.iter().map(|&x| x as f64).collect(),
+            Tensor::I32(v, _) => v.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    /// Scalar extraction (rank-0 or single-element).
+    pub fn scalar(&self) -> anyhow::Result<f64> {
+        anyhow::ensure!(self.len() == 1, "tensor has {} elements, wanted 1", self.len());
+        Ok(self.to_f64_vec()[0])
+    }
+
+    /// Upload to a device buffer (the fast execution path: `execute_b`
+    /// avoids the Literal layout conversion that costs ~10× the transfer).
+    pub fn to_buffer(&self, client: &xla::PjRtClient) -> anyhow::Result<xla::PjRtBuffer> {
+        let res = match self {
+            Tensor::F64(v, s) => client.buffer_from_host_buffer(v, s, None),
+            Tensor::F32(v, s) => client.buffer_from_host_buffer(v, s, None),
+            Tensor::I32(v, s) => client.buffer_from_host_buffer(v, s, None),
+        };
+        res.map_err(|e| anyhow::anyhow!("host->device transfer: {e:?}"))
+    }
+
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F64(v, _) => xla::Literal::vec1(v),
+            Tensor::F32(v, _) => xla::Literal::vec1(v),
+            Tensor::I32(v, _) => xla::Literal::vec1(v),
+        };
+        lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<Tensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let ty = lit.ty().map_err(|e| anyhow::anyhow!("literal dtype: {e:?}"))?;
+        match ty {
+            xla::ElementType::F64 => Ok(Tensor::F64(
+                lit.to_vec::<f64>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+                dims,
+            )),
+            xla::ElementType::F32 => Ok(Tensor::F32(
+                lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+                dims,
+            )),
+            xla::ElementType::S32 => Ok(Tensor::I32(
+                lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+                dims,
+            )),
+            other => anyhow::bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_shapes() {
+        let t = Tensor::vec_f64(vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.shape(), &[3]);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.dtype_name(), "f64");
+        assert_eq!(Tensor::scalar_f32(1.0).shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn accessors_enforce_dtype() {
+        let t = Tensor::vec_i32(vec![1, 2]);
+        assert!(t.as_i32().is_ok());
+        assert!(t.as_f64().is_err());
+        assert_eq!(t.to_f64_vec(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn f32_from_f64_casts() {
+        let t = Tensor::f32_from_f64(&[1.5, -2.5], vec![2]);
+        assert_eq!(t.as_f32().unwrap(), &[1.5f32, -2.5f32]);
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        assert_eq!(Tensor::scalar_f64(4.25).scalar().unwrap(), 4.25);
+        assert!(Tensor::vec_f64(vec![1.0, 2.0]).scalar().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f64() {
+        let t = Tensor::F64(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar_and_i32() {
+        for t in [Tensor::scalar_f32(7.5), Tensor::vec_i32(vec![-1, 0, 9])] {
+            let lit = t.to_literal().unwrap();
+            assert_eq!(Tensor::from_literal(&lit).unwrap(), t);
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Conjugate gradient for SPD systems (alternative exact-solve path and a
+//! cross-check for the Cholesky route).
+
+use super::linalg::{axpy, dot, norm2, Mat};
+
+/// Solve `A x = b` for SPD `A` to relative residual `tol`, at most
+/// `max_iters` iterations. Returns (x, iterations, final relative residual).
+pub fn solve_spd(a: &Mat, b: &[f64], tol: f64, max_iters: usize) -> (Vec<f64>, usize, f64) {
+    let n = b.len();
+    assert_eq!(a.rows, n);
+    let bnorm = norm2(b).max(f64::MIN_POSITIVE);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut rs = dot(&r, &r);
+    let mut iters = 0;
+    for k in 0..max_iters {
+        iters = k + 1;
+        let ap = a.matvec(&p);
+        let alpha = rs / dot(&p, &ap).max(f64::MIN_POSITIVE);
+        axpy(&mut x, alpha, &p);
+        axpy(&mut r, -alpha, &ap);
+        let rs_new = dot(&r, &r);
+        if rs_new.sqrt() / bnorm < tol {
+            return (x, iters, rs_new.sqrt() / bnorm);
+        }
+        let beta = rs_new / rs;
+        for (pi, ri) in p.iter_mut().zip(&r) {
+            *pi = ri + beta * *pi;
+        }
+        rs = rs_new;
+    }
+    (x, iters, rs.sqrt() / bnorm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn solves_well_conditioned_system() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let a = Mat { rows: 30, cols: 20, data: rng.normal_vec(600, 0.0, 1.0) };
+        let mut spd = a.gram();
+        spd.add_diag_in_place(5.0);
+        let x_true = rng.normal_vec(20, 0.0, 1.0);
+        let b = spd.matvec(&x_true);
+        let (x, iters, res) = solve_spd(&spd, &b, 1e-12, 200);
+        assert!(res < 1e-10, "res={res} iters={iters}");
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn agrees_with_cholesky() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let a = Mat { rows: 25, cols: 15, data: rng.normal_vec(375, 0.0, 1.0) };
+        let mut spd = a.gram();
+        spd.add_diag_in_place(3.0);
+        let b = rng.normal_vec(15, 0.0, 1.0);
+        let l = spd.cholesky().unwrap();
+        let x_chol = Mat::cholesky_solve(&l, &b);
+        let (x_cg, _, _) = solve_spd(&spd, &b, 1e-13, 300);
+        for (a, b) in x_cg.iter().zip(&x_chol) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_rhs_gives_zero() {
+        let spd = Mat::eye(5);
+        let (x, _, _) = solve_spd(&spd, &[0.0; 5], 1e-12, 10);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+}

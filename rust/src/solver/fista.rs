@@ -1,0 +1,124 @@
+//! Centralized FISTA for the full LASSO
+//!     minimize ‖A x − b‖² + θ‖x‖₁
+//! (stacked over all nodes). Used to cross-check the F* reference optimum
+//! that the accuracy metric (eq. 19) normalizes by.
+
+use super::linalg::{norm2, sub, Mat};
+use super::prox::{l1_norm, soft_threshold_in_place};
+
+pub struct FistaResult {
+    pub x: Vec<f64>,
+    pub objective: f64,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// Objective ‖Ax − b‖² + θ‖x‖₁.
+pub fn lasso_objective(a: &Mat, b: &[f64], theta: f64, x: &[f64]) -> f64 {
+    let r = sub(&a.matvec(x), b);
+    norm2(&r).powi(2) + theta * l1_norm(x)
+}
+
+/// FISTA with fixed step 1/L, L = 2·λmax(AᵀA) (f(x)=‖Ax−b‖² has ∇²=2AᵀA).
+pub fn solve(a: &Mat, b: &[f64], theta: f64, tol: f64, max_iters: usize) -> FistaResult {
+    let m = a.cols;
+    let gram = a.gram(); // AᵀA
+    let lip = 2.0 * gram.spectral_norm_sym(300) * 1.001; // small safety margin
+    let step = 1.0 / lip;
+    let atb = a.matvec_t(b);
+
+    let mut x = vec![0.0; m];
+    let mut y = x.clone();
+    let mut t = 1.0f64;
+    let mut prev_obj = lasso_objective(a, b, theta, &x);
+    for k in 0..max_iters {
+        // grad f(y) = 2(AᵀA y − Aᵀb)
+        let gy = gram.matvec(&y);
+        let mut x_new: Vec<f64> = y
+            .iter()
+            .zip(gy.iter().zip(&atb))
+            .map(|(yi, (gi, ai))| yi - step * 2.0 * (gi - ai))
+            .collect();
+        soft_threshold_in_place(&mut x_new, step * theta);
+        let t_new = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
+        let momentum = (t - 1.0) / t_new;
+        for ((yi, xn), xo) in y.iter_mut().zip(&x_new).zip(&x) {
+            *yi = xn + momentum * (xn - xo);
+        }
+        x = x_new;
+        t = t_new;
+        if (k + 1) % 50 == 0 {
+            let obj = lasso_objective(a, b, theta, &x);
+            let rel = (prev_obj - obj).abs() / obj.abs().max(1e-300);
+            if rel < tol {
+                return FistaResult {
+                    objective: obj,
+                    x,
+                    iterations: k + 1,
+                    converged: true,
+                };
+            }
+            prev_obj = obj;
+        }
+    }
+    let objective = lasso_objective(a, b, theta, &x);
+    FistaResult { x, objective, iterations: max_iters, converged: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn toy(seed: u64, h: usize, m: usize) -> (Mat, Vec<f64>) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let a = Mat { rows: h, cols: m, data: rng.normal_vec(h * m, 0.0, 1.0) };
+        let mut x0 = vec![0.0; m];
+        for i in (0..m).step_by(5) {
+            x0[i] = rng.standard_normal();
+        }
+        let mut b = a.matvec(&x0);
+        for v in &mut b {
+            *v += 0.01 * rng.standard_normal();
+        }
+        (a, b)
+    }
+
+    #[test]
+    fn decreases_objective_monotonically_enough() {
+        let (a, b) = toy(1, 60, 20);
+        let start = lasso_objective(&a, &b, 0.5, &vec![0.0; 20]);
+        let res = solve(&a, &b, 0.5, 1e-12, 4000);
+        assert!(res.objective < start * 0.5, "start={start} end={}", res.objective);
+    }
+
+    #[test]
+    fn solution_satisfies_lasso_optimality() {
+        // 0 ∈ 2Aᵀ(Ax−b) + θ∂‖x‖₁
+        let (a, b) = toy(2, 80, 24);
+        let theta = 1.0;
+        let res = solve(&a, &b, theta, 1e-14, 20_000);
+        let r = sub(&a.matvec(&res.x), &b);
+        let g: Vec<f64> = a.matvec_t(&r).iter().map(|v| 2.0 * v).collect();
+        for (xi, gi) in res.x.iter().zip(&g) {
+            if xi.abs() > 1e-9 {
+                assert!((gi + theta * xi.signum()).abs() < 1e-3, "xi={xi} gi={gi}");
+            } else {
+                assert!(gi.abs() <= theta + 1e-3, "gi={gi}");
+            }
+        }
+    }
+
+    #[test]
+    fn theta_zero_reduces_to_least_squares() {
+        let (a, b) = toy(3, 50, 10);
+        let res = solve(&a, &b, 0.0, 1e-14, 20_000);
+        // normal equations: AᵀA x = Aᵀb
+        let gram = a.gram();
+        let atb = a.matvec_t(&b);
+        let lhs = gram.matvec(&res.x);
+        for (l, r) in lhs.iter().zip(&atb) {
+            assert!((l - r).abs() < 1e-6, "{l} vs {r}");
+        }
+    }
+}

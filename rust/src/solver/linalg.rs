@@ -1,0 +1,363 @@
+//! Dense f64 linear algebra: row-major matrices, Cholesky, Gram products.
+//!
+//! Sized for the paper's problems (M ≤ a few hundred for LASSO); the NN
+//! path never touches this (its compute lives in the HLO artifacts).
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        assert!(rows.iter().all(|row| row.len() == c), "ragged rows");
+        Self { rows: r, cols: c, data: rows.concat() }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// y = A x
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// y = Aᵀ x
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let xi = x[i];
+            for (yj, a) in y.iter_mut().zip(row) {
+                *yj += a * xi;
+            }
+        }
+        y
+    }
+
+    /// C = A B
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows);
+        let mut c = Mat::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+        c
+    }
+
+    /// Gram matrix AᵀA (symmetric, [cols × cols]).
+    pub fn gram(&self) -> Mat {
+        let n = self.cols;
+        let mut g = Mat::zeros(n, n);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..n {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.data[i * n..(i + 1) * n];
+                for (gv, rv) in grow[i..].iter_mut().zip(&row[i..]) {
+                    *gv += ri * rv;
+                }
+            }
+        }
+        // mirror upper → lower
+        for i in 0..n {
+            for j in 0..i {
+                g.data[i * n + j] = g.data[j * n + i];
+            }
+        }
+        g
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    pub fn scale_in_place(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_diag_in_place(&mut self, d: f64) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += d;
+        }
+    }
+
+    /// Cholesky factorization A = L Lᵀ (A must be SPD). Returns lower L.
+    pub fn cholesky(&self) -> anyhow::Result<Mat> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = self[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        anyhow::bail!("matrix not positive definite (pivot {i}: {sum})");
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(l)
+    }
+
+    /// Solve A x = b given L from [`Mat::cholesky`] (forward + back subst).
+    pub fn cholesky_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+        let n = l.rows;
+        assert_eq!(b.len(), n);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= l[(i, k)] * y[k];
+            }
+            y[i] = sum / l[(i, i)];
+        }
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in i + 1..n {
+                sum -= l[(k, i)] * x[k];
+            }
+            x[i] = sum / l[(i, i)];
+        }
+        x
+    }
+
+    /// A⁻¹ via Cholesky (A SPD). Used once per node to precompute
+    /// (2AᵀA + ρI)⁻¹ for the exact-update artifact.
+    pub fn spd_inverse(&self) -> anyhow::Result<Mat> {
+        let l = self.cholesky()?;
+        let n = self.rows;
+        let mut inv = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = Mat::cholesky_solve(&l, &e);
+            e[j] = 0.0;
+            for i in 0..n {
+                inv[(i, j)] = col[i];
+            }
+        }
+        Ok(inv)
+    }
+
+    /// Largest eigenvalue of a symmetric PSD matrix via power iteration.
+    pub fn spectral_norm_sym(&self, iters: usize) -> f64 {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut v = vec![1.0 / (n as f64).sqrt(); n];
+        let mut lam = 0.0;
+        for _ in 0..iters {
+            let w = self.matvec(&v);
+            let norm = norm2(&w);
+            if norm == 0.0 {
+                return 0.0;
+            }
+            for (vi, wi) in v.iter_mut().zip(&w) {
+                *vi = wi / norm;
+            }
+            lam = norm;
+        }
+        lam
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+// ---- vector helpers ------------------------------------------------------
+
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+pub fn norm_inf(a: &[f64]) -> f64 {
+    a.iter().fold(0.0, |m, x| m.max(x.abs()))
+}
+
+pub fn axpy(y: &mut [f64], alpha: f64, x: &[f64]) {
+    assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+pub fn add(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_mat(rng: &mut Pcg64, r: usize, c: usize) -> Mat {
+        Mat { rows: r, cols: c, data: rng.normal_vec(r * c, 0.0, 1.0) }
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let i = Mat::eye(4);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(i.matvec(&x), x);
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let a = random_mat(&mut rng, 7, 5);
+        let g = a.gram();
+        let g2 = a.transpose().matmul(&a);
+        for (x, y) in g.data.iter().zip(&g2.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cholesky_solves() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let a = random_mat(&mut rng, 12, 8);
+        let mut spd = a.gram();
+        spd.add_diag_in_place(2.0);
+        let l = spd.cholesky().unwrap();
+        let x_true = rng.normal_vec(8, 0.0, 1.0);
+        let b = spd.matvec(&x_true);
+        let x = Mat::cholesky_solve(&l, &b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-9, "{xi} vs {ti}");
+        }
+    }
+
+    #[test]
+    fn spd_inverse_roundtrip() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let a = random_mat(&mut rng, 10, 6);
+        let mut spd = a.gram();
+        spd.add_diag_in_place(1.5);
+        let inv = spd.spd_inverse().unwrap();
+        let prod = spd.matmul(&inv);
+        for i in 0..6 {
+            for j in 0..6 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[(i, j)] - expect).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(m.cholesky().is_err());
+    }
+
+    #[test]
+    fn spectral_norm_of_diag() {
+        let mut d = Mat::eye(3);
+        d[(0, 0)] = 5.0;
+        d[(1, 1)] = 2.0;
+        let lam = d.spectral_norm_sym(200);
+        assert!((lam - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn vector_ops() {
+        let a = vec![3.0, 4.0];
+        assert_eq!(norm2(&a), 5.0);
+        assert_eq!(norm_inf(&[-7.0, 2.0]), 7.0);
+        let mut y = vec![1.0, 1.0];
+        axpy(&mut y, 2.0, &a);
+        assert_eq!(y, vec![7.0, 9.0]);
+        assert_eq!(sub(&a, &[1.0, 1.0]), vec![2.0, 3.0]);
+        assert_eq!(add(&a, &[1.0, 1.0]), vec![4.0, 5.0]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Native numeric substrates: dense linear algebra, proximal operators and
+//! centralized reference solvers (used for the exact LASSO primal update,
+//! the F* reference optimum, and HLO-vs-native parity tests).
+
+pub mod cg;
+pub mod fista;
+pub mod linalg;
+pub mod prox;

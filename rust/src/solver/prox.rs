@@ -1,0 +1,74 @@
+//! Proximal operators (native twins of the Pallas kernels).
+
+/// Soft-thresholding: prox of κ‖·‖₁, elementwise
+/// `S_κ(v) = sgn(v)·max(|v| − κ, 0)`.
+pub fn soft_threshold(v: &[f64], kappa: f64) -> Vec<f64> {
+    v.iter().map(|&x| soft_threshold_scalar(x, kappa)).collect()
+}
+
+#[inline]
+pub fn soft_threshold_scalar(x: f64, kappa: f64) -> f64 {
+    if x > kappa {
+        x - kappa
+    } else if x < -kappa {
+        x + kappa
+    } else {
+        0.0
+    }
+}
+
+pub fn soft_threshold_in_place(v: &mut [f64], kappa: f64) {
+    for x in v {
+        *x = soft_threshold_scalar(*x, kappa);
+    }
+}
+
+/// L1 norm.
+pub fn l1_norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x.abs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_closed_form() {
+        let v = vec![3.0, -3.0, 0.5, -0.5, 0.0];
+        assert_eq!(soft_threshold(&v, 1.0), vec![2.0, -2.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn kappa_zero_is_identity() {
+        let v = vec![1.5, -2.5, 0.0];
+        assert_eq!(soft_threshold(&v, 0.0), v);
+    }
+
+    #[test]
+    fn prox_optimality_conditions() {
+        // z = S_κ(v) minimizes κ|z| + ½(z−v)²
+        let v: Vec<f64> = (-20..20).map(|i| i as f64 * 0.17).collect();
+        let kappa = 0.4;
+        let z = soft_threshold(&v, kappa);
+        for (zi, vi) in z.iter().zip(&v) {
+            if *zi != 0.0 {
+                assert!((zi - vi + kappa * zi.signum()).abs() < 1e-12);
+            } else {
+                assert!(vi.abs() <= kappa + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn in_place_matches() {
+        let v = vec![2.0, -0.1, 0.3];
+        let mut w = v.clone();
+        soft_threshold_in_place(&mut w, 0.25);
+        assert_eq!(w, soft_threshold(&v, 0.25));
+    }
+
+    #[test]
+    fn l1() {
+        assert_eq!(l1_norm(&[1.0, -2.0, 3.0]), 6.0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Tiny CLI argument parser: `--key value`, `--flag`, positional args.
+//!
+//! Typed getters with defaults; unknown-flag detection produces a usage
+//! error so typos fail loudly instead of silently running the default.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse an argv slice (without the program name). A token `--k` followed
+    /// by a non-`--` token is an option; a `--k` followed by another `--` (or
+    /// nothing) is a boolean flag.
+    pub fn parse<I, S>(argv: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let tokens: Vec<String> = argv.into_iter().map(Into::into).collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(key) = t.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.opts.insert(key.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn note(&mut self, key: &str) {
+        if !self.known.iter().any(|k| k == key) {
+            self.known.push(key.to_string());
+        }
+    }
+
+    pub fn str_opt(&mut self, key: &str) -> Option<String> {
+        self.note(key);
+        self.opts.get(key).cloned()
+    }
+
+    pub fn str(&mut self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn f64(&mut self, key: &str, default: f64) -> f64 {
+        self.note(key);
+        self.opts
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn usize(&mut self, key: &str, default: usize) -> usize {
+        self.note(key);
+        self.opts
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&mut self, key: &str, default: u64) -> u64 {
+        self.note(key);
+        self.opts
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.note(key);
+        self.flags.iter().any(|f| f == key)
+            || self.opts.get(key).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// After all getters ran, reject any CLI key that no getter asked about.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        for key in self.opts.keys().chain(self.flags.iter()) {
+            if !self.known.iter().any(|k| k == key) {
+                anyhow::bail!(
+                    "unknown option --{key}; known options: {}",
+                    self.known.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed_forms() {
+        let mut a = Args::parse(vec!["run", "--iters", "500", "--q=3", "--verbose", "--tau", "3"]);
+        assert_eq!(a.positional(), &["run".to_string()]);
+        assert_eq!(a.usize("iters", 0), 500);
+        assert_eq!(a.usize("q", 0), 3);
+        assert_eq!(a.usize("tau", 0), 3);
+        assert!(a.flag("verbose"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = Args::parse(Vec::<String>::new());
+        assert_eq!(a.f64("rho", 500.0), 500.0);
+        assert_eq!(a.str("preset", "fig3"), "fig3");
+        assert!(!a.flag("baseline"));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut a = Args::parse(vec!["--oops", "1"]);
+        let _ = a.usize("iters", 10);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_number_panics() {
+        let mut a = Args::parse(vec!["--iters", "abc"]);
+        a.usize("iters", 0);
+    }
+}

@@ -1,0 +1,56 @@
+//! Leveled stderr logger, controlled by `QADMM_LOG` (error|warn|info|debug).
+//!
+//! Deliberately tiny: one global level read once, macro-free call sites.
+
+use std::sync::OnceLock;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+fn level() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(|| match std::env::var("QADMM_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        _ => Level::Info,
+    })
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+pub fn log(l: Level, target: &str, msg: &str) {
+    if enabled(l) {
+        eprintln!("[{:5}] {target}: {msg}", format!("{l:?}").to_uppercase());
+    }
+}
+
+pub fn info(target: &str, msg: &str) {
+    log(Level::Info, target, msg);
+}
+
+pub fn warn(target: &str, msg: &str) {
+    log(Level::Warn, target, msg);
+}
+
+pub fn debug(target: &str, msg: &str) {
+    log(Level::Debug, target, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering() {
+        assert!(Level::Error < Level::Debug);
+        assert!(enabled(Level::Error));
+    }
+}

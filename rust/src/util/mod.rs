@@ -1,0 +1,11 @@
+//! In-tree substrates: seeded RNG, JSON, CLI parsing, statistics, timing.
+//!
+//! The offline build environment only vendors the `xla` crate closure, so
+//! these stand in for `rand`, `serde_json`, `clap` and friends (DESIGN.md §3).
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;
+pub mod timer;

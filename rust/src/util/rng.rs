@@ -1,0 +1,257 @@
+//! Deterministic, seedable PCG64 RNG (PCG-XSL-RR 128/64) + distributions.
+//!
+//! Every stochastic choice in the system — data generation, NN init, the
+//! `simulate-async()` oracle, quantizer noise, batch sampling, latency
+//! draws — flows from one of these generators, so whole Monte-Carlo trials
+//! replay bit-exactly from a `u64` seed. Independent streams are derived
+//! with [`Pcg64::fork`] (distinct odd increments), mirroring how `jax`
+//! splits keys.
+
+/// SplitMix64: seed-expansion PRNG (Steele et al.), used to derive PCG state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+const PCG_MUL: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+/// PCG-XSL-RR 128/64 (O'Neill). 2^128 period, 64-bit outputs.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128, // must be odd
+}
+
+impl Pcg64 {
+    /// Seed via SplitMix64 expansion of a single `u64`.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let state = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        let inc = (((sm.next_u64() as u128) << 64) | sm.next_u64() as u128) | 1;
+        let mut rng = Self { state: 0, inc };
+        rng.state = rng.state.wrapping_add(state);
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent stream: same entropy family, distinct sequence.
+    pub fn fork(&mut self, stream: u64) -> Pcg64 {
+        let mut sm = SplitMix64::new(self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let state = ((sm.next_u64() as u128) << 64) | sm.next_u64() as u128;
+        let inc = (((sm.next_u64() as u128) << 64) | sm.next_u64() as u128) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.state = rng.state.wrapping_add(state);
+        rng.next_u64();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MUL).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of mantissa entropy.
+    #[inline]
+    pub fn uniform_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` with 24 bits of mantissa entropy.
+    #[inline]
+    pub fn uniform_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire-style rejection).
+    pub fn gen_range(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "gen_range bound must be positive");
+        let bound = bound as u64;
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u64();
+            // low-bias multiply-shift
+            let (hi, lo) = {
+                let wide = (r as u128) * (bound as u128);
+                ((wide >> 64) as u64, wide as u64)
+            };
+            if lo >= threshold {
+                return hi as usize;
+            }
+        }
+    }
+
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform_f64() < p
+    }
+
+    /// Standard normal via Box-Muller (pairs cached).
+    pub fn standard_normal(&mut self) -> f64 {
+        // Marsaglia polar method: no trig, numerically tame.
+        loop {
+            let u = 2.0 * self.uniform_f64() - 1.0;
+            let v = 2.0 * self.uniform_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    pub fn normal_vec(&mut self, n: usize, mean: f64, std: f64) -> Vec<f64> {
+        (0..n).map(|_| mean + std * self.standard_normal()).collect()
+    }
+
+    pub fn uniform_vec_f64(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.uniform_f64()).collect()
+    }
+
+    pub fn uniform_vec_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.uniform_f32()).collect()
+    }
+
+    /// Exponential with the given mean.
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        let u = 1.0 - self.uniform_f64(); // (0, 1]
+        -mean * u.ln()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, slice: &mut [T]) {
+        for i in (1..slice.len()).rev() {
+            let j = self.gen_range(i + 1);
+            slice.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices from `[0, n)` (partial Fisher-Yates).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.gen_range(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Pcg64::seed_from_u64(42);
+        let mut b = Pcg64::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seed_from_u64(1);
+        let mut b = Pcg64::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn fork_streams_are_independent_and_deterministic() {
+        let mut root1 = Pcg64::seed_from_u64(7);
+        let mut root2 = Pcg64::seed_from_u64(7);
+        let mut f1 = root1.fork(3);
+        let mut f2 = root2.fork(3);
+        for _ in 0..32 {
+            assert_eq!(f1.next_u64(), f2.next_u64());
+        }
+        let mut g = root1.fork(4);
+        let same = (0..64).filter(|_| f1.next_u64() == g.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_bounds_and_moments() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let n = 200_000;
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform_f64();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+            sumsq += u * u;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var={var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.standard_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn gen_range_unbiased_and_in_bounds() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            let k = rng.gen_range(7);
+            counts[k] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        for _ in 0..100 {
+            let mut v = rng.choose_k(20, 8);
+            v.sort_unstable();
+            v.dedup();
+            assert_eq!(v.len(), 8);
+            assert!(v.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg64::seed_from_u64(8);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.exponential(2.5)).sum::<f64>() / n as f64;
+        assert!((mean - 2.5).abs() < 0.05, "mean={mean}");
+    }
+}

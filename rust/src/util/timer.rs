@@ -1,0 +1,86 @@
+//! Wall-clock helpers for the bench harness and experiment logs.
+
+use std::time::Instant;
+
+/// Simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_secs();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Human format: picks ns/µs/ms/s.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.2}s")
+    }
+}
+
+/// Human format for counts: 1.2K / 3.4M / 5.6G.
+pub fn fmt_count(x: f64) -> String {
+    let ax = x.abs();
+    if ax >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.2}K", x / 1e3)
+    } else {
+        format!("{x:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_duration(2.5e-9), "2.5ns");
+        assert_eq!(fmt_duration(2.5e-6), "2.50µs");
+        assert_eq!(fmt_duration(2.5e-3), "2.50ms");
+        assert_eq!(fmt_duration(2.5), "2.50s");
+        assert_eq!(fmt_count(999.0), "999");
+        assert_eq!(fmt_count(1.5e3), "1.50K");
+        assert_eq!(fmt_count(2.5e6), "2.50M");
+        assert_eq!(fmt_count(3.5e9), "3.50G");
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::new();
+        let a = sw.elapsed_secs();
+        let b = sw.elapsed_secs();
+        assert!(b >= a && a >= 0.0);
+    }
+}

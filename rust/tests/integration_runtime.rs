@@ -1,0 +1,259 @@
+//! Integration tests over the PJRT runtime: every artifact loads, compiles
+//! and agrees with the native f64 implementations — the HLO-vs-native
+//! parity suite. Skipped gracefully when `artifacts/` has not been built.
+
+use qadmm::compress::qsgd::Qsgd;
+use qadmm::problems::lasso::{consensus_input, LassoConfig, LassoProblem};
+use qadmm::problems::Problem;
+use qadmm::runtime::tensor::Tensor;
+use qadmm::runtime::Runtime;
+use qadmm::solver::prox;
+use qadmm::util::rng::Pcg64;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(std::path::Path::new("artifacts")).expect("open runtime"))
+}
+
+#[test]
+fn quantize_artifact_is_bit_identical_to_native_f64() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::seed_from_u64(42);
+    for q in [2u8, 3, 5, 8] {
+        let qsgd = Qsgd::new(q);
+        let delta = rng.normal_vec(200, 0.0, 2.0);
+        let noise = rng.uniform_vec_f64(200);
+        let out = rt
+            .call(
+                "quantize_f64_m200",
+                &[
+                    Tensor::vec_f64(delta.clone()),
+                    Tensor::vec_f64(noise.clone()),
+                    Tensor::scalar_f64(qsgd.s() as f64),
+                ],
+            )
+            .unwrap();
+        let (levels, norm) = qsgd.quantize_with_noise(&delta, &noise);
+        assert_eq!(out[1].as_i32().unwrap(), levels.as_slice(), "q={q}");
+        assert_eq!(out[2].scalar().unwrap(), norm, "q={q}");
+        // dequantized values identical to the wire-side reconstruction
+        let deq = qsgd.dequantize(&levels, norm);
+        let hlo_vals = out[0].as_f64().unwrap();
+        for (a, b) in hlo_vals.iter().zip(&deq) {
+            assert!((a - b).abs() < 1e-15);
+        }
+    }
+}
+
+#[test]
+fn quantize_artifact_zero_vector() {
+    let Some(rt) = runtime() else { return };
+    let out = rt
+        .call(
+            "quantize_f64_m200",
+            &[
+                Tensor::vec_f64(vec![0.0; 200]),
+                Tensor::vec_f64(vec![0.5; 200]),
+                Tensor::scalar_f64(3.0),
+            ],
+        )
+        .unwrap();
+    assert!(out[0].as_f64().unwrap().iter().all(|&v| v == 0.0));
+    assert!(out[1].as_i32().unwrap().iter().all(|&l| l == 0));
+    assert_eq!(out[2].scalar().unwrap(), 0.0);
+}
+
+#[test]
+fn soft_threshold_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::seed_from_u64(7);
+    let v = rng.normal_vec(200, 0.0, 1.0);
+    for kappa in [0.0, 0.3, 2.0] {
+        let out = rt
+            .call(
+                "soft_threshold_f64_m200",
+                &[Tensor::vec_f64(v.clone()), Tensor::scalar_f64(kappa)],
+            )
+            .unwrap();
+        let native = prox::soft_threshold(&v, kappa);
+        for (a, b) in out[0].as_f64().unwrap().iter().zip(&native) {
+            assert!((a - b).abs() < 1e-15, "kappa={kappa}");
+        }
+    }
+}
+
+fn paper_lasso(rng: &mut Pcg64) -> LassoProblem {
+    LassoProblem::generate(
+        LassoConfig { m: 200, h: 100, n: 16, rho: 500.0, theta: 0.1 },
+        rng,
+    )
+    .unwrap()
+}
+
+fn service() -> Option<qadmm::runtime::service::ComputeService> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(
+        qadmm::runtime::service::ComputeService::start("artifacts".into(), vec![])
+            .expect("compute service"),
+    )
+}
+
+#[test]
+fn lasso_node_step_hlo_matches_native() {
+    let Some(svc) = service() else { return };
+    let mut rng = Pcg64::seed_from_u64(3);
+    let mut native = paper_lasso(&mut rng);
+    let mut rng2 = Pcg64::seed_from_u64(3);
+    let mut hlo =
+        paper_lasso(&mut rng2).with_hlo(Box::new(svc.client()), 200, 16).unwrap();
+    let zhat = rng.normal_vec(200, 0.0, 1.0);
+    let u = rng.normal_vec(200, 0.0, 0.1);
+    let x_prev = vec![0.0; 200];
+    for node in [0usize, 7, 15] {
+        let (xn, _) = native.local_update(node, &zhat, &u, &x_prev, &mut rng).unwrap();
+        let (xh, _) = hlo.local_update(node, &zhat, &u, &x_prev, &mut rng).unwrap();
+        for (a, b) in xn.iter().zip(&xh) {
+            assert!((a - b).abs() < 1e-8, "node {node}: {a} vs {b}");
+        }
+    }
+}
+
+/// Regression: two problem *instances* sharing one compute service must not
+/// collide in the pinned-constant cache (each instance gets a namespace).
+#[test]
+fn pinned_consts_do_not_collide_across_instances() {
+    let Some(svc) = service() else { return };
+    let make = |seed: u64| {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let native = paper_lasso(&mut rng);
+        let mut rng2 = Pcg64::seed_from_u64(seed);
+        let hlo = paper_lasso(&mut rng2).with_hlo(Box::new(svc.client()), 200, 16).unwrap();
+        (native, hlo)
+    };
+    let (mut nat_a, mut hlo_a) = make(100);
+    let (mut nat_b, mut hlo_b) = make(200); // different data!
+    let mut rng = Pcg64::seed_from_u64(7);
+    let zhat = rng.normal_vec(200, 0.0, 1.0);
+    let u = rng.normal_vec(200, 0.0, 0.1);
+    let x_prev = vec![0.0; 200];
+    // interleave calls: A then B then A again
+    let mut check = |nat: &mut LassoProblem, hlo: &mut LassoProblem, rng: &mut Pcg64| {
+        let (xn, _) = nat.local_update(0, &zhat, &u, &x_prev, rng).unwrap();
+        let (xh, _) = hlo.local_update(0, &zhat, &u, &x_prev, rng).unwrap();
+        for (a, b) in xn.iter().zip(&xh) {
+            assert!((a - b).abs() < 1e-8, "instance collision: {a} vs {b}");
+        }
+    };
+    check(&mut nat_a, &mut hlo_a, &mut rng);
+    check(&mut nat_b, &mut hlo_b, &mut rng);
+    check(&mut nat_a, &mut hlo_a, &mut rng);
+}
+
+#[test]
+fn lasso_server_step_hlo_matches_native() {
+    let Some(svc) = service() else { return };
+    let mut rng = Pcg64::seed_from_u64(4);
+    let mut native = paper_lasso(&mut rng);
+    let mut rng2 = Pcg64::seed_from_u64(4);
+    let mut hlo =
+        paper_lasso(&mut rng2).with_hlo(Box::new(svc.client()), 200, 16).unwrap();
+
+    let xhat: Vec<Vec<f64>> = (0..16).map(|_| rng.normal_vec(200, 0.0, 1.0)).collect();
+    let uhat: Vec<Vec<f64>> = (0..16).map(|_| rng.normal_vec(200, 0.0, 0.1)).collect();
+    let zn = native.consensus(&xhat, &uhat).unwrap();
+    let zh = hlo.consensus(&xhat, &uhat).unwrap();
+    for (a, b) in zn.iter().zip(&zh) {
+        assert!((a - b).abs() < 1e-10);
+    }
+    // sanity: the consensus is the soft-thresholded mean
+    let v = consensus_input(&xhat, &uhat);
+    let kappa = 0.1 / (500.0 * 16.0);
+    for (z, vj) in zn.iter().zip(&v) {
+        assert!((z - prox::soft_threshold_scalar(*vj, kappa)).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn lasso_lagrangian_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::seed_from_u64(5);
+    let p = paper_lasso(&mut rng);
+    let x: Vec<Vec<f64>> = (0..16).map(|_| rng.normal_vec(200, 0.0, 1.0)).collect();
+    let u: Vec<Vec<f64>> = (0..16).map(|_| rng.normal_vec(200, 0.0, 0.1)).collect();
+    let z = rng.normal_vec(200, 0.0, 1.0);
+    let native_lag = p.lagrangian(&x, &u, &z);
+    let (ata, atb2, btb) = p.gram_tensors();
+    let out = rt
+        .call(
+            "lasso_lagrangian",
+            &[
+                Tensor::F64(x.concat(), vec![16, 200]),
+                Tensor::F64(u.concat(), vec![16, 200]),
+                Tensor::vec_f64(z),
+                Tensor::F64(ata, vec![16, 200, 200]),
+                Tensor::F64(atb2, vec![16, 200]),
+                Tensor::vec_f64(btb),
+                Tensor::scalar_f64(0.1),
+                Tensor::scalar_f64(500.0),
+            ],
+        )
+        .unwrap();
+    let hlo_lag = out[0].scalar().unwrap();
+    let rel = (native_lag - hlo_lag).abs() / native_lag.abs();
+    assert!(rel < 1e-12, "native={native_lag} hlo={hlo_lag}");
+}
+
+#[test]
+fn artifact_input_validation_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    let err = rt
+        .call(
+            "quantize_f64_m200",
+            &[
+                Tensor::vec_f64(vec![0.0; 100]), // wrong length
+                Tensor::vec_f64(vec![0.5; 200]),
+                Tensor::scalar_f64(3.0),
+            ],
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("shape"), "{err}");
+    let err = rt.call("nonexistent", &[]).unwrap_err();
+    assert!(err.to_string().contains("unknown artifact"), "{err}");
+}
+
+#[test]
+fn f32_quantize_artifact_matches_native_within_f32() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::seed_from_u64(9);
+    let delta64 = rng.normal_vec(1024, 0.0, 1.0);
+    let noise64 = rng.uniform_vec_f64(1024);
+    let delta32: Vec<f32> = delta64.iter().map(|&x| x as f32).collect();
+    let noise32: Vec<f32> = noise64.iter().map(|&x| x as f32).collect();
+    let out = rt
+        .call(
+            "quantize_f32_m1024",
+            &[
+                Tensor::vec_f32(delta32.clone()),
+                Tensor::vec_f32(noise32.clone()),
+                Tensor::scalar_f32(3.0),
+            ],
+        )
+        .unwrap();
+    // native twin in f64 over the f32-rounded inputs: levels can differ only
+    // on knife-edge rounding; check ≥99% agreement + value bound
+    let qsgd = Qsgd::new(3);
+    let (levels, norm) = qsgd.quantize_with_noise(
+        &delta32.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+        &noise32.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+    );
+    let hlo_levels = out[1].as_i32().unwrap();
+    let agree = hlo_levels.iter().zip(&levels).filter(|(a, b)| a == b).count();
+    assert!(agree >= 1014, "only {agree}/1024 levels agree");
+    assert!((out[2].scalar().unwrap() - norm).abs() < 1e-6);
+}

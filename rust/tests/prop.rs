@@ -1,0 +1,159 @@
+//! Property-based tests with an in-tree generator (proptest is not in the
+//! offline crate universe): randomized inputs over many seeds, with the
+//! failing seed printed for reproduction.
+
+use qadmm::admm::scheduler::Scheduler;
+use qadmm::compress::packing::{pack_levels, unpack_levels};
+use qadmm::compress::{Compressor, CompressorKind};
+use qadmm::util::rng::Pcg64;
+
+/// Run `f` over `cases` random seeds; panic with the seed on failure.
+fn for_all(cases: usize, base: u64, f: impl Fn(&mut Pcg64)) {
+    for c in 0..cases {
+        let seed = base.wrapping_add(c as u64);
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            panic!("property failed for seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn random_vec(rng: &mut Pcg64) -> Vec<f64> {
+    let m = 1 + rng.gen_range(600);
+    let scale = 10f64.powf(rng.uniform_f64() * 8.0 - 4.0); // 1e-4 .. 1e4
+    match rng.gen_range(4) {
+        0 => vec![0.0; m],                                      // degenerate
+        1 => (0..m).map(|_| rng.standard_normal() * scale).collect(),
+        2 => {
+            // sparse
+            let mut v = vec![0.0; m];
+            for _ in 0..1 + m / 10 {
+                let i = rng.gen_range(m);
+                v[i] = rng.standard_normal() * scale;
+            }
+            v
+        }
+        _ => (0..m).map(|i| ((i as f64) - m as f64 / 2.0) * scale).collect(), // ramp
+    }
+}
+
+#[test]
+fn prop_packing_roundtrips() {
+    for_all(300, 11, |rng| {
+        let q = 2 + rng.gen_range(13) as u8; // 2..=14
+        let s = (1i32 << (q - 1)) - 1;
+        let m = 1 + rng.gen_range(400);
+        let levels: Vec<i32> =
+            (0..m).map(|_| rng.gen_range((2 * s + 1) as usize) as i32 - s).collect();
+        let bytes = pack_levels(&levels, q);
+        assert_eq!(unpack_levels(&bytes, m, q).unwrap(), levels);
+    });
+}
+
+#[test]
+fn prop_decode_equals_dequantized_for_every_compressor() {
+    let kinds = [
+        CompressorKind::Identity,
+        CompressorKind::Qsgd { bits: 2 },
+        CompressorKind::Qsgd { bits: 3 },
+        CompressorKind::Qsgd { bits: 11 },
+        CompressorKind::Sign,
+        CompressorKind::TopK { frac_permille: 37 },
+        CompressorKind::RandK { frac_permille: 211 },
+    ];
+    for_all(150, 22, |rng| {
+        let delta = random_vec(rng);
+        for kind in kinds {
+            let c = kind.build();
+            let out = c.compress(&delta, rng);
+            let decoded = c.decode(&out.wire, delta.len()).unwrap();
+            assert_eq!(decoded, out.dequantized, "{}", kind.label());
+        }
+    });
+}
+
+#[test]
+fn prop_qsgd_error_bounded_and_sign_preserving() {
+    for_all(200, 33, |rng| {
+        let q = 2 + rng.gen_range(7) as u8;
+        let comp = CompressorKind::Qsgd { bits: q }.build();
+        let delta = random_vec(rng);
+        let out = comp.compress(&delta, rng);
+        let norm = delta.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        let s = ((1i32 << (q - 1)) - 1) as f64;
+        for (d, v) in delta.iter().zip(&out.dequantized) {
+            assert!((d - v).abs() <= norm / s * (1.0 + 1e-12) + 1e-300);
+            assert!(*v == 0.0 || v.signum() == d.signum());
+        }
+    });
+}
+
+#[test]
+fn prop_scheduler_never_exceeds_staleness_bound() {
+    for_all(100, 44, |rng| {
+        let n = 2 + rng.gen_range(30);
+        let tau = 1 + rng.gen_range(6);
+        let p_min = 1 + rng.gen_range(n);
+        let p_sel = rng.uniform_f64();
+        let mut sched = Scheduler::new(n, tau, p_min);
+        let mut active = vec![true; n];
+        let mut last_active = vec![0usize; n];
+        for round in 1..=120usize {
+            let mut oracle_rng = rng.fork(round as u64);
+            let next = sched.advance(&active, || {
+                (0..n).map(|_| oracle_rng.bernoulli(p_sel)).collect()
+            });
+            assert!(next.iter().filter(|&&a| a).count() >= p_min);
+            for i in 0..n {
+                if next[i] {
+                    last_active[i] = round;
+                } else {
+                    // the bounded-delay guarantee
+                    assert!(
+                        round - last_active[i] <= tau - 1 || tau == 1,
+                        "node {i} stale for {} with tau={tau}",
+                        round - last_active[i]
+                    );
+                }
+            }
+            active = next;
+        }
+    });
+}
+
+#[test]
+fn prop_wire_decode_rejects_corruption_or_stays_sane() {
+    // flipping bytes must never panic; it either errors or returns a
+    // finite-length vector (decoder robustness)
+    for_all(150, 55, |rng| {
+        let delta = random_vec(rng);
+        let comp = CompressorKind::Qsgd { bits: 3 }.build();
+        let mut wire = comp.compress(&delta, rng).wire;
+        let idx = rng.gen_range(wire.len());
+        wire[idx] ^= 1 << rng.gen_range(8);
+        match comp.decode(&wire, delta.len()) {
+            Ok(v) => assert_eq!(v.len(), delta.len()),
+            Err(_) => {}
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_numbers() {
+    use qadmm::util::json::Json;
+    for_all(300, 66, |rng| {
+        let x = match rng.gen_range(3) {
+            0 => (rng.next_u64() % (1 << 53)) as f64,
+            1 => rng.standard_normal() * 10f64.powf(rng.uniform_f64() * 200.0 - 100.0),
+            _ => -((rng.next_u64() % 1000) as f64),
+        };
+        let text = Json::Num(x).to_string_compact();
+        let back = Json::parse(&text).unwrap();
+        let y = back.as_f64().unwrap();
+        let rel = if x == 0.0 { y.abs() } else { ((x - y) / x).abs() };
+        assert!(rel < 1e-12, "{x} -> {text} -> {y}");
+    });
+}
