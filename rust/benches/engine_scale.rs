@@ -1,0 +1,103 @@
+//! Event-engine scaling sweep: n ∈ {16, 128, 1024} nodes.
+//!
+//! The headline configuration is the acceptance bar for the virtual-time
+//! engine: **n = 1024 nodes, m = 10240-dim LASSO, 200 consensus rounds,
+//! heterogeneous straggler latency — in seconds of wall-clock, not hours**
+//! (the threaded runtime would sleep through every injected delay; the
+//! sequential simulator has no notion of stragglers at all). Feasible
+//! because the LASSO Woodbury solver never forms an m×m inverse (h ≪ m)
+//! and the per-node fan-out runs on the worker pool.
+//!
+//! `QADMM_BENCH_FAST=1` shrinks the sweep for CI smoke runs.
+
+use qadmm::admm::engine::EventEngine;
+use qadmm::admm::sim::TrialRngs;
+use qadmm::comm::latency::LatencyModel;
+use qadmm::config::{presets, EngineKind, OracleConfig, ProblemKind};
+use qadmm::problems::lasso::{LassoConfig, LassoProblem};
+use qadmm::util::timer::{fmt_count, Stopwatch};
+
+struct Sweep {
+    n: usize,
+    m: usize,
+    h: usize,
+    rounds: usize,
+}
+
+fn run_sweep(s: &Sweep) -> anyhow::Result<()> {
+    let mut cfg = presets::ci_lasso();
+    cfg.name = format!("engine-scale-n{}", s.n);
+    cfg.problem = ProblemKind::Lasso { m: s.m, h: s.h, n: s.n, rho: 50.0, theta: 0.1 };
+    cfg.engine = EngineKind::Event;
+    cfg.tau = 4;
+    cfg.p_min = (s.n / 4).max(1);
+    cfg.iters = s.rounds;
+    cfg.mc_trials = 1;
+    cfg.eval_every = s.rounds; // one final eval; per-round eval is O(n·h·m)
+    cfg.oracle = OracleConfig { p_slow: 0.1, p_fast: 0.8, regroup_each_call: false };
+    // Straggler mixture in *virtual* seconds: a threaded run would sleep
+    // ~rounds × slow-tail of real time; the engine only does arithmetic.
+    cfg.latency = LatencyModel::Mixture { fast: 0.002, slow: 0.25, p_slow: 0.15 };
+
+    let gen_clock = Stopwatch::new();
+    let mut rngs = TrialRngs::new(cfg.seed);
+    let mut problem = LassoProblem::generate(
+        LassoConfig { m: s.m, h: s.h, n: s.n, rho: 50.0, theta: 0.1 },
+        &mut rngs.data,
+    )?;
+    // The accuracy metric needs F*, which costs thousands of reference
+    // rounds — irrelevant for a throughput bench.
+    problem.set_reference_optimum(1.0);
+    let gen_s = gen_clock.elapsed_secs();
+
+    let clock = Stopwatch::new();
+    let mut engine = EventEngine::new(&cfg, &mut problem, rngs)?;
+    for _ in 0..s.rounds {
+        engine.step_round()?;
+    }
+    let wall = clock.elapsed_secs();
+    let stats = engine.stats();
+    println!(
+        "n={:5} m={:6} h={:3} rounds={:4}  wall {:7.2}s (gen {:5.2}s)  virtual {:8.2}s  \
+         speedup {:>9}x  events/s {:>9}  dispatches {}",
+        s.n,
+        s.m,
+        s.h,
+        s.rounds,
+        wall,
+        gen_s,
+        stats.virtual_time,
+        fmt_count(stats.virtual_time / wall.max(1e-9)),
+        fmt_count(stats.events as f64 / wall.max(1e-9)),
+        stats.dispatches,
+    );
+    if s.n >= 1024 && wall >= 10.0 {
+        println!("  !! acceptance bar missed: n={} took {wall:.2}s (target < 10s)", s.n);
+    }
+    Ok(())
+}
+
+fn main() {
+    let fast = std::env::var("QADMM_BENCH_FAST").is_ok();
+    let sweeps = if fast {
+        vec![
+            Sweep { n: 16, m: 200, h: 100, rounds: 50 },
+            Sweep { n: 128, m: 512, h: 16, rounds: 20 },
+            Sweep { n: 1024, m: 10_240, h: 4, rounds: 10 },
+        ]
+    } else {
+        vec![
+            Sweep { n: 16, m: 200, h: 100, rounds: 200 },
+            Sweep { n: 128, m: 2048, h: 16, rounds: 200 },
+            Sweep { n: 1024, m: 10_240, h: 4, rounds: 200 },
+        ]
+    };
+    println!("--- engine_scale: event-driven virtual-time QADMM ---");
+    for s in &sweeps {
+        if let Err(e) = run_sweep(s) {
+            eprintln!("n={}: {e:#}", s.n);
+            std::process::exit(1);
+        }
+    }
+    println!("--- engine_scale: {} sweeps done ---", sweeps.len());
+}

@@ -1,0 +1,419 @@
+//! Event-driven virtual-time QADMM engine (Algorithm 1 at 1000+ nodes).
+//!
+//! The sequential simulator ([`super::sim`]) advances in lockstep rounds;
+//! the threaded coordinator ([`crate::coordinator`]) burns real wall-clock
+//! on injected `thread::sleep` latency. This engine keeps the *semantics*
+//! of genuine asynchrony — per-node compute and network delays, the
+//! server firing on `P` arrivals, force-waiting any node at staleness τ−1 —
+//! but advances a **virtual clock** through a binary-heap event queue
+//! ([`super::events`]), so a 1000-node straggler run finishes in
+//! milliseconds of wall time.
+//!
+//! Timeline per consensus round:
+//! 1. the server fires: consensus over the estimate banks, compressed Δz
+//!    broadcast (accounted per link), scheduler advance (oracle selection +
+//!    τ−1 forcing — the same [`super::scheduler::Scheduler`] the simulator
+//!    uses, consuming the same oracle RNG stream);
+//! 2. selected idle nodes are *dispatched*: their local updates run through
+//!    [`crate::problems::Problem::local_update_batch`] (worker-pool
+//!    parallel for native LASSO, merged in node order), deltas are
+//!    compressed with per-node RNG forks, and a `ComputeDone` event is
+//!    scheduled at `now + compute_delay`;
+//! 3. `ComputeDone` accounts the uplink and schedules `MsgArrive` at
+//!    `+ network_delay`; `MsgArrive` commits the dequantized deltas into
+//!    the server's estimate banks and joins the sparse arrival set;
+//! 4. between distinct virtual instants the server checks the trigger:
+//!    |arrivals| ≥ P **and** every node whose staleness has reached τ−1
+//!    has arrived. Nodes selected while still in flight are not
+//!    re-dispatched (at most one update in flight per node, the Fig. 2
+//!    cadence), and their eventual arrival counts toward the next round.
+//!
+//! **Parity contract** (see `tests/engine_parity.rs`): with zero latency
+//! and the identity compressor, every arrival lands in the same virtual
+//! instant as its dispatch, so rounds coincide exactly with simulator
+//! iterations and the `z` trajectory and bit accounting are bit-identical
+//! to [`super::sim::AsyncSim`].
+
+use std::collections::BTreeSet;
+
+use crate::comm::accounting::CommAccounting;
+use crate::comm::latency::{per_node_latencies, LatencyModel};
+use crate::comm::message::MSG_HEADER_BYTES;
+use crate::compress::error_feedback::EstimateTracker;
+use crate::compress::Compressor;
+use crate::config::ExperimentConfig;
+use crate::metrics::{IterRecord, RunRecorder};
+use crate::problems::{LocalUpdateItem, Problem};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+use super::events::{EventKind, EventQueue};
+use super::oracle::AsyncOracle;
+use super::scheduler::Scheduler;
+use super::sim::TrialRngs;
+
+/// A compressed update sitting in a node's outbox / on the virtual wire.
+struct InFlightMsg {
+    dx: Vec<f64>,
+    du: Vec<f64>,
+    bits: u64,
+    loss: f64,
+}
+
+/// Timeline counters the property tests assert on.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineStats {
+    /// Consensus rounds fired so far.
+    pub rounds: usize,
+    /// Virtual seconds elapsed.
+    pub virtual_time: f64,
+    /// Events processed (ComputeDone + MsgArrive).
+    pub events: u64,
+    /// Local updates dispatched.
+    pub dispatches: u64,
+    /// Smallest arrival set that ever triggered a round (must be ≥ P).
+    pub min_arrivals: usize,
+    /// Largest per-node staleness counter ever observed (must be ≤ τ−1).
+    pub max_staleness: usize,
+}
+
+impl Default for EngineStats {
+    fn default() -> Self {
+        Self {
+            rounds: 0,
+            virtual_time: 0.0,
+            events: 0,
+            dispatches: 0,
+            min_arrivals: usize::MAX,
+            max_staleness: 0,
+        }
+    }
+}
+
+pub struct EventEngine<'a> {
+    cfg: &'a ExperimentConfig,
+    problem: &'a mut dyn Problem,
+    compressor: Box<dyn Compressor>,
+    m: usize,
+    n: usize,
+    // true iterates
+    x: Vec<Vec<f64>>,
+    u: Vec<Vec<f64>>,
+    z: Vec<f64>,
+    // server-side estimate banks (committed only on MsgArrive)
+    xhat: Vec<EstimateTracker>,
+    uhat: Vec<EstimateTracker>,
+    zhat: EstimateTracker,
+    /// Sparse arrival set for the round being assembled (no n ≤ 64 mask).
+    arrived: BTreeSet<usize>,
+    /// Node has an update computing or in transit (one in flight max).
+    busy: Vec<bool>,
+    in_flight: Vec<Option<InFlightMsg>>,
+    /// Loss delivered with each node's last arrival (round-loss fallback).
+    arrived_loss: Vec<f64>,
+    /// Persistent consensus-input buffers (n×m each): refreshed from the
+    /// estimate banks at every fire instead of reallocated — at 1024×10k
+    /// that is 160 MB of allocator churn per round saved.
+    xs_buf: Vec<Vec<f64>>,
+    us_buf: Vec<Vec<f64>>,
+    scheduler: Scheduler,
+    oracle: AsyncOracle,
+    accounting: CommAccounting,
+    queue: EventQueue,
+    /// Per-node compute/network delay models (straggler heterogeneity).
+    latency: Vec<LatencyModel>,
+    rng_latency: Pcg64,
+    rng_oracle: Pcg64,
+    /// Per-node quantizer streams (forked once; order-independent).
+    node_quant: Vec<Pcg64>,
+    /// Server-side quantizer stream for the broadcast compression.
+    server_quant: Pcg64,
+    /// Per-node batch-sampling streams for inexact problems.
+    node_batch: Vec<Pcg64>,
+    recorder: RunRecorder,
+    clock: Stopwatch,
+    vtime: f64,
+    stats: EngineStats,
+}
+
+impl<'a> EventEngine<'a> {
+    /// Initialize per Algorithm 1 lines 1–9 — the exact same full-precision
+    /// exchange (and accounting) as [`super::sim::AsyncSim::new`] — then
+    /// dispatch A₀ = V at virtual time 0.
+    pub fn new(
+        cfg: &'a ExperimentConfig,
+        problem: &'a mut dyn Problem,
+        mut rngs: TrialRngs,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let m = problem.dim();
+        let n = problem.n_nodes();
+        let ef = cfg.error_feedback;
+        let x0 = problem.init_x(&mut rngs.init);
+        anyhow::ensure!(x0.len() == m, "init_x returned wrong dimension");
+        let x: Vec<Vec<f64>> = vec![x0.clone(); n];
+        let u: Vec<Vec<f64>> = vec![vec![0.0; m]; n];
+
+        let mut accounting = CommAccounting::new(n);
+        for i in 0..n {
+            accounting.record_uplink(i, MSG_HEADER_BYTES * 8 + 2 * m as u64 * 32);
+        }
+        let xhat: Vec<EstimateTracker> =
+            (0..n).map(|_| EstimateTracker::new(x0.clone(), ef)).collect();
+        let uhat: Vec<EstimateTracker> =
+            (0..n).map(|_| EstimateTracker::new(vec![0.0; m], ef)).collect();
+        let xs: Vec<Vec<f64>> = xhat.iter().map(|t| t.estimate().to_vec()).collect();
+        let us: Vec<Vec<f64>> = uhat.iter().map(|t| t.estimate().to_vec()).collect();
+        let z = problem.consensus(&xs, &us)?;
+        accounting.record_broadcast(MSG_HEADER_BYTES * 8 + m as u64 * 32);
+        let zhat = EstimateTracker::new(z.clone(), ef);
+
+        let oracle = AsyncOracle::new(n, cfg.oracle, &mut rngs.oracle);
+        let mut qroot = rngs.quant;
+        let node_quant: Vec<Pcg64> = (0..n).map(|i| qroot.fork(i as u64)).collect();
+        let server_quant = qroot.fork(n as u64);
+        let mut broot = rngs.batches;
+        let node_batch: Vec<Pcg64> = (0..n).map(|i| broot.fork(i as u64)).collect();
+
+        let mut engine = Self {
+            compressor: cfg.compressor.build(),
+            m,
+            n,
+            x,
+            u,
+            z,
+            xhat,
+            uhat,
+            zhat,
+            arrived: BTreeSet::new(),
+            busy: vec![false; n],
+            in_flight: (0..n).map(|_| None).collect(),
+            arrived_loss: vec![0.0; n],
+            xs_buf: vec![vec![0.0; m]; n],
+            us_buf: vec![vec![0.0; m]; n],
+            scheduler: Scheduler::new(n, cfg.tau, cfg.p_min),
+            oracle,
+            accounting,
+            queue: EventQueue::new(),
+            server_quant,
+            latency: per_node_latencies(cfg.latency, n),
+            // per-trial stream: MC trials must be independent replicates
+            // over network randomness, not replays of one delay sequence
+            rng_latency: rngs.latency,
+            rng_oracle: rngs.oracle,
+            node_quant,
+            node_batch,
+            recorder: RunRecorder::new(),
+            clock: Stopwatch::new(),
+            vtime: 0.0,
+            stats: EngineStats::default(),
+            cfg,
+            problem,
+        };
+        // A₀ = V: every node computes first (same as the simulator).
+        let all: Vec<usize> = (0..n).collect();
+        engine.dispatch(&all)?;
+        Ok(engine)
+    }
+
+    /// Advance virtual time until exactly one more consensus round fires —
+    /// the event-driven analogue of [`super::sim::AsyncSim::step`].
+    pub fn step_round(&mut self) -> anyhow::Result<()> {
+        loop {
+            if self.trigger_satisfied() {
+                return self.fire();
+            }
+            let Some(t) = self.queue.peek_time() else {
+                anyhow::bail!(
+                    "event queue drained before the trigger (round {}, {} arrivals, staleness {:?})",
+                    self.stats.rounds,
+                    self.arrived.len(),
+                    self.scheduler.staleness()
+                );
+            };
+            debug_assert!(t >= self.vtime, "virtual time went backwards");
+            self.vtime = t;
+            // Consume the whole virtual instant before re-checking the
+            // trigger: simultaneous arrivals are indistinguishable in
+            // virtual time, so the server sees them as one batch. This is
+            // what makes the zero-latency timeline collapse onto the
+            // sequential simulator's rounds.
+            while self.queue.peek_time() == Some(t) {
+                let ev = self.queue.pop().unwrap();
+                self.handle(ev.kind)?;
+            }
+        }
+    }
+
+    /// |arrivals| ≥ P and every τ−1-stale node has reported.
+    fn trigger_satisfied(&self) -> bool {
+        if self.arrived.len() < self.cfg.p_min {
+            return false;
+        }
+        let tau = self.cfg.tau;
+        self.scheduler
+            .staleness()
+            .iter()
+            .enumerate()
+            .all(|(i, &d)| d + 1 < tau || self.arrived.contains(&i))
+    }
+
+    fn handle(&mut self, kind: EventKind) -> anyhow::Result<()> {
+        self.stats.events += 1;
+        match kind {
+            EventKind::ComputeDone { node } => {
+                let msg = self.in_flight[node]
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("ComputeDone without outbox (node {node})"))?;
+                self.accounting.record_uplink(node, msg.bits);
+                let delay = self.latency[node].sample(&mut self.rng_latency);
+                self.queue.push(self.vtime + delay, EventKind::MsgArrive { node });
+            }
+            EventKind::MsgArrive { node } => {
+                let msg = self.in_flight[node]
+                    .take()
+                    .ok_or_else(|| anyhow::anyhow!("MsgArrive without payload (node {node})"))?;
+                self.xhat[node].commit(&msg.dx);
+                self.uhat[node].commit(&msg.du);
+                self.arrived_loss[node] = msg.loss;
+                self.arrived.insert(node);
+                self.busy[node] = false;
+            }
+        }
+        Ok(())
+    }
+
+    /// One consensus round: mirrors `AsyncSim::step`'s server phase —
+    /// consensus, compressed broadcast, scheduler advance, eval — then
+    /// dispatches the next selection.
+    fn fire(&mut self) -> anyhow::Result<()> {
+        let batch = self.arrived.len();
+        debug_assert!(batch >= self.cfg.p_min);
+        let train_loss: f64 = self.arrived.iter().map(|&i| self.arrived_loss[i]).sum();
+
+        for (buf, t) in self.xs_buf.iter_mut().zip(&self.xhat) {
+            buf.copy_from_slice(t.estimate());
+        }
+        for (buf, t) in self.us_buf.iter_mut().zip(&self.uhat) {
+            buf.copy_from_slice(t.estimate());
+        }
+        self.z = self.problem.consensus(&self.xs_buf, &self.us_buf)?;
+        let dz = self.zhat.make_delta(&self.z);
+        let cz = self.compressor.compress(&dz, &mut self.server_quant);
+        self.accounting.record_broadcast(MSG_HEADER_BYTES * 8 + cz.wire_bits());
+        self.zhat.commit(&cz.dequantized);
+
+        let arrived_mask: Vec<bool> = (0..self.n).map(|i| self.arrived.contains(&i)).collect();
+        let next = self
+            .scheduler
+            .advance(&arrived_mask, || self.oracle.sample(&mut self.rng_oracle));
+        self.arrived.clear();
+        self.stats.rounds += 1;
+        self.stats.virtual_time = self.vtime;
+        self.stats.min_arrivals = self.stats.min_arrivals.min(batch);
+        let max_d = self.scheduler.staleness().iter().copied().max().unwrap_or(0);
+        self.stats.max_staleness = self.stats.max_staleness.max(max_d);
+        debug_assert!(max_d + 1 <= self.cfg.tau, "staleness bound violated: {max_d}");
+
+        if self.stats.rounds % self.cfg.eval_every == 0 {
+            let metrics = self.problem.evaluate(&self.x, &self.u, &self.z)?;
+            self.recorder.push(IterRecord {
+                iter: self.stats.rounds,
+                comm_bits: self.accounting.normalized_bits(self.m),
+                accuracy: metrics.accuracy,
+                test_acc: metrics.test_acc,
+                loss: if metrics.loss.is_nan() {
+                    train_loss / batch.max(1) as f64
+                } else {
+                    metrics.loss
+                },
+                active_nodes: batch,
+                wall_s: self.clock.elapsed_secs(),
+            });
+        }
+
+        let to_dispatch: Vec<usize> =
+            (0..self.n).filter(|&i| next[i] && !self.busy[i]).collect();
+        self.dispatch(&to_dispatch)
+    }
+
+    /// Fan the local updates of `nodes` out through the problem's batch
+    /// hook (worker-pool parallel where supported), apply the primal/dual
+    /// updates in node order, compress with per-node RNG forks, and put
+    /// the messages on the virtual wire.
+    fn dispatch(&mut self, nodes: &[usize]) -> anyhow::Result<()> {
+        if nodes.is_empty() {
+            return Ok(());
+        }
+        let zhat_view = self.zhat.estimate().to_vec();
+        let results = {
+            let u = &self.u;
+            let x = &self.x;
+            let mut items: Vec<LocalUpdateItem<'_>> = Vec::with_capacity(nodes.len());
+            let mut want = nodes.iter().copied().peekable();
+            for (i, rng) in self.node_batch.iter_mut().enumerate() {
+                if want.peek() == Some(&i) {
+                    want.next();
+                    items.push(LocalUpdateItem { node: i, u: &u[i], x_prev: &x[i], rng });
+                }
+            }
+            self.problem.local_update_batch(&zhat_view, &mut items)?
+        };
+        anyhow::ensure!(results.len() == nodes.len(), "batch result count mismatch");
+        for (&node, (x_new, loss)) in nodes.iter().zip(results) {
+            anyhow::ensure!(x_new.len() == self.m, "local_update wrong dim");
+            // eq. (9b): u ← u + (x_new − ẑ)
+            for j in 0..self.m {
+                self.u[node][j] += x_new[j] - zhat_view[j];
+            }
+            self.x[node] = x_new;
+            // eqs. (10)–(14): compress deltas against the node's mirror
+            // (== the server bank: its previous update has already landed)
+            let dx = self.xhat[node].make_delta(&self.x[node]);
+            let du = self.uhat[node].make_delta(&self.u[node]);
+            let cx = self.compressor.compress(&dx, &mut self.node_quant[node]);
+            let cu = self.compressor.compress(&du, &mut self.node_quant[node]);
+            let bits = MSG_HEADER_BYTES * 8 + cx.wire_bits() + cu.wire_bits();
+            self.in_flight[node] =
+                Some(InFlightMsg { dx: cx.dequantized, du: cu.dequantized, bits, loss });
+            self.busy[node] = true;
+            self.stats.dispatches += 1;
+            let delay = self.latency[node].sample(&mut self.rng_latency);
+            self.queue.push(self.vtime + delay, EventKind::ComputeDone { node });
+        }
+        Ok(())
+    }
+
+    pub fn run(mut self, rounds: usize) -> anyhow::Result<RunRecorder> {
+        for _ in 0..rounds {
+            self.step_round()?;
+        }
+        Ok(self.recorder)
+    }
+
+    // ---- state accessors (tests + invariant checks) ----
+
+    pub fn z(&self) -> &[f64] {
+        &self.z
+    }
+
+    pub fn accounting(&self) -> &CommAccounting {
+        &self.accounting
+    }
+
+    pub fn recorder(&self) -> &RunRecorder {
+        &self.recorder
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    pub fn virtual_time(&self) -> f64 {
+        self.vtime
+    }
+
+    pub fn staleness(&self) -> &[usize] {
+        self.scheduler.staleness()
+    }
+}

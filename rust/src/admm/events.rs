@@ -1,0 +1,142 @@
+//! Virtual-time event substrate for the event-driven engine.
+//!
+//! A binary-heap priority queue over `(time, seq)` where `time` is virtual
+//! seconds and `seq` is the insertion order. Ties on `time` are broken by
+//! insertion order, which makes the whole timeline deterministic: two runs
+//! that push the same events in the same order pop them in the same order,
+//! even when every delay is 0.0 (the parity configuration, where the
+//! engine must replay the sequential simulator bit-for-bit).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// What happened at a virtual instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Node finished its local primal update (uplink send begins).
+    ComputeDone { node: usize },
+    /// Node's compressed update arrived at the server.
+    MsgArrive { node: usize },
+}
+
+/// One scheduled event. Ordered by `(time, seq)` with `f64::total_cmp`,
+/// so NaN-free timelines have a total deterministic order.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub time: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time.total_cmp(&other.time).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Min-heap of events in virtual time.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `kind` at virtual time `time` (seconds). Delays must be
+    /// finite and non-negative; a NaN time would corrupt the ordering.
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        debug_assert!(time.is_finite() && time >= 0.0, "bad virtual time {time}");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(Event { time, seq, kind }));
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(e)| e)
+    }
+
+    /// Virtual time of the next event, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(e)| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::MsgArrive { node: 0 });
+        q.push(0.5, EventKind::ComputeDone { node: 1 });
+        q.push(1.0, EventKind::ComputeDone { node: 2 });
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop().map(|e| e.time)).collect();
+        assert_eq!(times, vec![0.5, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        for node in 0..5 {
+            q.push(0.0, EventKind::ComputeDone { node });
+        }
+        for node in 0..5 {
+            let e = q.pop().unwrap();
+            assert_eq!(e.kind, EventKind::ComputeDone { node });
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn interleaved_pushes_stay_deterministic() {
+        // two identical push sequences produce identical pop sequences
+        let run = || {
+            let mut q = EventQueue::new();
+            q.push(1.0, EventKind::ComputeDone { node: 0 });
+            q.push(1.0, EventKind::MsgArrive { node: 1 });
+            q.push(0.0, EventKind::ComputeDone { node: 2 });
+            q.push(1.0, EventKind::ComputeDone { node: 3 });
+            std::iter::from_fn(|| q.pop().map(|e| (e.time, e.kind))).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn peek_time_matches_next_pop() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(3.5, EventKind::MsgArrive { node: 9 });
+        q.push(0.25, EventKind::MsgArrive { node: 4 });
+        assert_eq!(q.peek_time(), Some(0.25));
+        assert_eq!(q.pop().unwrap().time, 0.25);
+        assert_eq!(q.peek_time(), Some(3.5));
+        assert_eq!(q.len(), 1);
+    }
+}

@@ -3,11 +3,12 @@
 //! trial, all derived from `seed + trial`), then average the metric series
 //! — exactly how the paper's figures are produced.
 
-use crate::config::ExperimentConfig;
+use crate::config::{EngineKind, ExperimentConfig};
 use crate::metrics::RunRecorder;
 use crate::problems::Problem;
 use crate::util::stats;
 
+use super::engine::EventEngine;
 use super::sim::{AsyncSim, TrialRngs};
 
 /// Averaged curves across trials (aligned on the eval grid).
@@ -66,7 +67,9 @@ pub fn trial_seed(base_seed: u64, trial: usize) -> u64 {
     base_seed.wrapping_add(1_000_003u64.wrapping_mul(trial as u64 + 1))
 }
 
-/// Run `cfg.mc_trials` trials and average.
+/// Run `cfg.mc_trials` trials and average. `cfg.engine` picks the in-process
+/// engine (seq | event); the threaded deployment has its own entry point
+/// ([`crate::coordinator::run_threaded`]) because it needs `Problem + Send`.
 pub fn run_mc(cfg: &ExperimentConfig, factory: &mut ProblemFactory) -> anyhow::Result<McResult> {
     cfg.validate()?;
     let mut trials = Vec::with_capacity(cfg.mc_trials);
@@ -74,8 +77,15 @@ pub fn run_mc(cfg: &ExperimentConfig, factory: &mut ProblemFactory) -> anyhow::R
         let seed = trial_seed(cfg.seed, t);
         let mut rngs = TrialRngs::new(seed);
         let mut problem = factory(seed, &mut rngs.data)?;
-        let sim = AsyncSim::new(cfg, problem.as_mut(), rngs)?;
-        let recorder = sim.run(cfg.iters)?;
+        let recorder = match cfg.engine {
+            EngineKind::Seq => AsyncSim::new(cfg, problem.as_mut(), rngs)?.run(cfg.iters)?,
+            EngineKind::Event => {
+                EventEngine::new(cfg, problem.as_mut(), rngs)?.run(cfg.iters)?
+            }
+            EngineKind::Threaded => anyhow::bail!(
+                "run_mc drives in-process engines; use coordinator::run_threaded for engine=threaded"
+            ),
+        };
         crate::util::log::debug(
             "runner",
             &format!("{}: trial {t} done ({} records)", cfg.name, recorder.records.len()),
@@ -122,6 +132,24 @@ mod tests {
         assert!(last < first * 1e-3, "no convergence: {first} -> {last}");
         // comm bits strictly increasing
         assert!(res.mean_comm_bits.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn event_engine_matches_seq_in_parity_config() {
+        // identity compressor + zero latency: the virtual timeline collapses
+        // onto the simulator's rounds and the curves are bit-identical
+        let mut cfg = presets::ci_lasso();
+        cfg.compressor = crate::compress::CompressorKind::Identity;
+        cfg.iters = 60;
+        cfg.mc_trials = 1;
+        let mut f1 = lasso_factory(&cfg);
+        let seq = run_mc(&cfg, &mut f1).unwrap();
+        let mut cfg2 = cfg.clone();
+        cfg2.engine = crate::config::EngineKind::Event;
+        let mut f2 = lasso_factory(&cfg2);
+        let ev = run_mc(&cfg2, &mut f2).unwrap();
+        assert_eq!(seq.mean_accuracy, ev.mean_accuracy);
+        assert_eq!(seq.mean_comm_bits, ev.mean_comm_bits);
     }
 
     #[test]

@@ -27,6 +27,9 @@ pub struct TrialRngs {
     pub quant: Pcg64,
     pub batches: Pcg64,
     pub init: Pcg64,
+    /// Virtual compute/network delay draws (event engine only). Forked
+    /// last, so streams 1–5 are unchanged from before it existed.
+    pub latency: Pcg64,
 }
 
 impl TrialRngs {
@@ -38,6 +41,7 @@ impl TrialRngs {
             quant: root.fork(3),
             batches: root.fork(4),
             init: root.fork(5),
+            latency: root.fork(6),
         }
     }
 }
@@ -245,5 +249,10 @@ impl<'a> AsyncSim<'a> {
 
     pub fn active(&self) -> &[bool] {
         &self.active
+    }
+
+    /// Per-node staleness counters (invariant: ≤ τ−1; see the scheduler).
+    pub fn staleness(&self) -> &[usize] {
+        self.scheduler.staleness()
     }
 }

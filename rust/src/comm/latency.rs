@@ -45,9 +45,47 @@ impl LatencyModel {
     }
 }
 
+/// Heterogeneous per-node variants of one base model: odd-indexed nodes are
+/// "slow" with 4× the configured delay (mixture nodes get 4× the slow
+/// probability, capped), mirroring the straggler conditions that motivate
+/// asynchronous ADMM. Shared by the threaded coordinator and the
+/// event-driven engine so both model the same population.
+pub fn per_node_latencies(base: LatencyModel, n: usize) -> Vec<LatencyModel> {
+    (0..n)
+        .map(|i| match base {
+            LatencyModel::None => LatencyModel::None,
+            LatencyModel::Const(s) => {
+                LatencyModel::Const(if i % 2 == 0 { s } else { 4.0 * s })
+            }
+            LatencyModel::Exp(mu) => LatencyModel::Exp(if i % 2 == 0 { mu } else { 4.0 * mu }),
+            LatencyModel::Mixture { fast, slow, p_slow } => LatencyModel::Mixture {
+                fast,
+                slow,
+                p_slow: if i % 2 == 0 { p_slow } else { (4.0 * p_slow).min(0.9) },
+            },
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn per_node_slows_odd_nodes() {
+        let v = per_node_latencies(LatencyModel::Const(0.1), 4);
+        assert_eq!(v[0], LatencyModel::Const(0.1));
+        assert_eq!(v[1], LatencyModel::Const(0.4));
+        assert_eq!(v[2], LatencyModel::Const(0.1));
+        assert!(per_node_latencies(LatencyModel::None, 3)
+            .iter()
+            .all(|l| *l == LatencyModel::None));
+        match per_node_latencies(LatencyModel::Mixture { fast: 0.0, slow: 1.0, p_slow: 0.5 }, 2)[1]
+        {
+            LatencyModel::Mixture { p_slow, .. } => assert_eq!(p_slow, 0.9),
+            _ => panic!("wrong variant"),
+        }
+    }
 
     #[test]
     fn const_and_none() {

@@ -45,12 +45,16 @@ impl NodeToServer {
 
 #[derive(Clone, Debug)]
 pub enum ServerToNode {
-    /// Quantized (or dense) downlink broadcast: C(Δz). `included_mask` bit i
-    /// is set when node i's update was incorporated into this consensus —
-    /// a node starts its next local update only once its previous one has
-    /// landed (the per-node cadence of the paper's Fig. 2; at most one
-    /// update in flight per node).
-    Consensus { iter: u64, included_mask: u64, dz_wire: Vec<u8> },
+    /// Quantized (or dense) downlink broadcast: C(Δz). `included` lists
+    /// (ascending) the nodes whose updates were incorporated into this
+    /// consensus — a node starts its next local update only once its
+    /// previous one has landed (the per-node cadence of the paper's
+    /// Fig. 2; at most one update in flight per node). A sparse id set
+    /// instead of a u64 bitmask, so deployments are not capped at 64
+    /// nodes; the wire charge is 4 bytes of count + 4 bytes per id,
+    /// which beats the dense mask whenever the arrival batch is small
+    /// relative to n (the P-triggered regime).
+    Consensus { iter: u64, included: Vec<u32>, dz_wire: Vec<u8> },
     /// Full-precision initial consensus (Algorithm 1 line 8).
     InitZ { z0: Vec<f64> },
     /// Orderly shutdown of a node worker.
@@ -60,9 +64,10 @@ pub enum ServerToNode {
 impl ServerToNode {
     pub fn wire_bits(&self) -> u64 {
         match self {
-            ServerToNode::Consensus { dz_wire, .. } => {
-                // +8 bytes for the inclusion mask
-                (MSG_HEADER_BYTES + 8) * 8 + dz_wire.len() as u64 * 8
+            ServerToNode::Consensus { included, dz_wire, .. } => {
+                // +4 bytes count, +4 bytes per included node id
+                (MSG_HEADER_BYTES + 4 + 4 * included.len() as u64) * 8
+                    + dz_wire.len() as u64 * 8
             }
             ServerToNode::InitZ { z0 } => MSG_HEADER_BYTES * 8 + z0.len() as u64 * 64,
             ServerToNode::Shutdown => MSG_HEADER_BYTES * 8,
@@ -96,8 +101,16 @@ mod tests {
     #[test]
     fn downlink_bits() {
         let m =
-            ServerToNode::Consensus { iter: 3, included_mask: 0b101, dz_wire: vec![0u8; 100] };
-        assert_eq!(m.wire_bits(), (12 + 8 + 100) * 8);
+            ServerToNode::Consensus { iter: 3, included: vec![0, 2], dz_wire: vec![0u8; 100] };
+        // header + count + 2 ids + payload
+        assert_eq!(m.wire_bits(), (12 + 4 + 8 + 100) * 8);
         assert_eq!(ServerToNode::Shutdown.wire_bits(), 96);
+    }
+
+    #[test]
+    fn sparse_inclusion_scales_past_64_nodes() {
+        let included: Vec<u32> = (0..1000).collect();
+        let m = ServerToNode::Consensus { iter: 0, included, dz_wire: vec![] };
+        assert_eq!(m.wire_bits(), (12 + 4 + 4000) * 8);
     }
 }

@@ -196,12 +196,19 @@ mod tests {
             let msg = server.recv().unwrap();
             assert!(matches!(msg, NodeToServer::Update { .. }));
         }
-        server.broadcast(&ServerToNode::Consensus { iter: 0, included_mask: 0b11, dz_wire: vec![0; 4] }).unwrap();
+        server
+            .broadcast(&ServerToNode::Consensus {
+                iter: 0,
+                included: vec![0, 1],
+                dz_wire: vec![0; 4],
+            })
+            .unwrap();
         assert!(matches!(nodes[0].recv().unwrap(), ServerToNode::Consensus { .. }));
         assert!(matches!(nodes[1].recv().unwrap(), ServerToNode::Consensus { .. }));
         let acc = acc.lock().unwrap();
         assert_eq!(acc.total_uplink_bits(), 2 * (12 + 16) * 8);
-        assert_eq!(acc.total_downlink_bits(), 2 * (12 + 8 + 4) * 8);
+        // header + 4-byte count + two 4-byte ids + payload, per link
+        assert_eq!(acc.total_downlink_bits(), 2 * (12 + 4 + 8 + 4) * 8);
     }
 
     #[test]

@@ -7,25 +7,35 @@
 //! coding), demonstrating the §4.1 error-accumulation argument.
 
 /// One endpoint's view of a compressed stream: the shared estimate ŷ plus
-/// (for the ablation) the last true iterate.
+/// (for the EF-off ablation only) the last true iterate. With feedback on —
+/// the paper's configuration — the delta base *is* the estimate, so no
+/// second vector is stored: at engine scale (1000+ nodes × 10k+ dims ×
+/// 4 banks) this halves the tracker memory.
 #[derive(Clone, Debug)]
 pub struct EstimateTracker {
     estimate: Vec<f64>,
-    last_true: Vec<f64>,
+    /// Present iff `feedback` is off (pure delta coding needs y_old).
+    last_true: Option<Vec<f64>>,
     feedback: bool,
 }
 
 impl EstimateTracker {
     pub fn new(initial: Vec<f64>, feedback: bool) -> Self {
-        Self { estimate: initial.clone(), last_true: initial, feedback }
+        let last_true = (!feedback).then(|| initial.clone());
+        Self { estimate: initial, last_true, feedback }
     }
 
     /// The Δ the sender should compress for the new iterate (and remember
     /// the iterate for the EF-off mode).
     pub fn make_delta(&mut self, current: &[f64]) -> Vec<f64> {
-        let base: &[f64] = if self.feedback { &self.estimate } else { &self.last_true };
+        let base: &[f64] = match &self.last_true {
+            Some(lt) if !self.feedback => lt,
+            _ => &self.estimate,
+        };
         let delta = current.iter().zip(base).map(|(c, b)| c - b).collect();
-        self.last_true.copy_from_slice(current);
+        if let Some(lt) = &mut self.last_true {
+            lt.copy_from_slice(current);
+        }
         delta
     }
 
@@ -46,7 +56,9 @@ impl EstimateTracker {
     /// Algorithm 1 lines 1–8).
     pub fn reset(&mut self, value: &[f64]) {
         self.estimate.copy_from_slice(value);
-        self.last_true.copy_from_slice(value);
+        if let Some(lt) = &mut self.last_true {
+            lt.copy_from_slice(value);
+        }
     }
 
     pub fn feedback_enabled(&self) -> bool {

@@ -100,12 +100,25 @@ impl CompressorKind {
             anyhow::ensure!((2..=16).contains(&bits), "qsgd bits must be in 2..=16");
             Ok(CompressorKind::Qsgd { bits })
         } else if let Some(f) = s.strip_prefix("topk") {
-            Ok(CompressorKind::TopK { frac_permille: f.parse()? })
+            Ok(CompressorKind::TopK { frac_permille: Self::parse_permille(f)? })
         } else if let Some(f) = s.strip_prefix("randk") {
-            Ok(CompressorKind::RandK { frac_permille: f.parse()? })
+            Ok(CompressorKind::RandK { frac_permille: Self::parse_permille(f)? })
         } else {
             anyhow::bail!("unknown compressor '{s}' (identity|qsgdQ|sign|topkP|randkP)")
         }
+    }
+
+    /// A sparsifier fraction in permille must land in (0, 1] — `topk0`
+    /// would keep nothing and values over 1000 are not fractions (the
+    /// builders assert the same range, so rejecting here turns a later
+    /// panic into a parse error).
+    fn parse_permille(s: &str) -> anyhow::Result<u16> {
+        let p: u16 = s.parse()?;
+        anyhow::ensure!(
+            (1..=1000).contains(&p),
+            "sparsifier permille must be in 1..=1000 (got {p})"
+        );
+        Ok(p)
     }
 
     pub fn label(&self) -> String {
@@ -126,13 +139,19 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for s in ["identity", "qsgd3", "qsgd8", "sign", "topk50", "randk125"] {
+        for s in ["identity", "qsgd3", "qsgd8", "sign", "topk50", "randk125", "topk1000"] {
             let k = CompressorKind::parse(s).unwrap();
             assert_eq!(k.label(), s);
             assert_eq!(CompressorKind::parse(&k.label()).unwrap(), k);
         }
         assert!(CompressorKind::parse("qsgd1").is_err()); // S would be 0
         assert!(CompressorKind::parse("bogus").is_err());
+        // sparsifier fractions must be in (0, 1]: k = 0 keeps nothing and
+        // >1000‰ is not a fraction — both used to parse and then panic in
+        // the builder (TopK::new / RandK::new asserts)
+        for s in ["topk0", "randk0", "topk1001", "randk2000", "topk70000"] {
+            assert!(CompressorKind::parse(s).is_err(), "{s} should be rejected");
+        }
     }
 
     /// The cross-compressor contract: decode(wire) == dequantized, exactly.

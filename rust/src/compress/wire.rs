@@ -214,7 +214,11 @@ pub fn decode(bytes: &[u8], m: usize) -> anyhow::Result<Vec<f64>> {
             let mut out = vec![0.0; m];
             let mut idx = 0usize;
             for i in 0..k {
-                let gap = bits.get_elias_gamma()? as usize;
+                // A corrupted γ code can decode to any u64; bound it before
+                // the add so a flipped bit yields Err, never an overflow.
+                let gap = bits.get_elias_gamma()?;
+                anyhow::ensure!(gap as u128 <= m as u128, "topk gap {gap} out of range");
+                let gap = gap as usize;
                 idx = if i == 0 { gap - 1 } else { idx + gap };
                 anyhow::ensure!(idx < m, "topk index out of range");
                 out[idx] = f64::from_bits(bits.get(64)?);

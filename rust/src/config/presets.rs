@@ -1,6 +1,6 @@
 //! Named experiment presets matching the paper's §5 setups.
 
-use super::{Backend, ExperimentConfig, OracleConfig, ProblemKind};
+use super::{Backend, EngineKind, ExperimentConfig, OracleConfig, ProblemKind};
 use crate::comm::latency::LatencyModel;
 use crate::compress::CompressorKind;
 
@@ -20,6 +20,7 @@ pub fn fig3(tau: usize) -> ExperimentConfig {
         seed: 2025,
         oracle: OracleConfig { p_slow: 0.1, p_fast: 0.8, regroup_each_call: false },
         backend: Backend::Hlo,
+        engine: EngineKind::Seq,
         eval_every: 1,
         latency: LatencyModel::None,
     }
@@ -42,6 +43,7 @@ pub fn fig4() -> ExperimentConfig {
         seed: 2025,
         oracle: OracleConfig { p_slow: 0.1, p_fast: 0.8, regroup_each_call: true },
         backend: Backend::Hlo,
+        engine: EngineKind::Seq,
         eval_every: 2,
         latency: LatencyModel::None,
     }
@@ -70,6 +72,7 @@ pub fn ci_lasso() -> ExperimentConfig {
         seed: 7,
         oracle: OracleConfig::default(),
         backend: Backend::Native,
+        engine: EngineKind::Seq,
         eval_every: 1,
         latency: LatencyModel::None,
     }
@@ -89,6 +92,7 @@ pub fn e2e_mlp() -> ExperimentConfig {
         seed: 42,
         oracle: OracleConfig { p_slow: 0.1, p_fast: 0.8, regroup_each_call: true },
         backend: Backend::Hlo,
+        engine: EngineKind::Seq,
         eval_every: 5,
         latency: LatencyModel::Mixture { fast: 0.0, slow: 0.004, p_slow: 0.2 },
     }

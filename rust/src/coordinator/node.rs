@@ -70,17 +70,17 @@ impl NodeWorker {
                         break;
                     }
                 }
-                ServerToNode::Consensus { included_mask, dz_wire, .. } => {
+                ServerToNode::Consensus { included, dz_wire, .. } => {
                     self.apply_consensus(&dz_wire)?;
-                    let mut included = included_mask & (1 << self.ep.node) != 0;
+                    let mut included = included.binary_search(&(self.ep.node as u32)).is_ok();
                     // Catch up: a straggler may have a backlog of broadcasts;
                     // apply every missed delta before computing once.
                     let mut shutdown = false;
                     while let Some(extra) = self.ep.try_recv() {
                         match extra {
-                            ServerToNode::Consensus { included_mask, dz_wire, .. } => {
+                            ServerToNode::Consensus { included: inc, dz_wire, .. } => {
                                 self.apply_consensus(&dz_wire)?;
-                                included |= included_mask & (1 << self.ep.node) != 0;
+                                included |= inc.binary_search(&(self.ep.node as u32)).is_ok();
                             }
                             ServerToNode::Shutdown => {
                                 shutdown = true;

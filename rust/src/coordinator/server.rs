@@ -101,11 +101,11 @@ impl ServerLoop {
             let z = self.consensus()?;
             let dz = self.zhat.as_mut().unwrap().make_delta(&z);
             let cz = self.compressor.compress(&dz, &mut self.rng);
-            let included_mask =
-                self.pending.iter().fold(0u64, |mask, &i| mask | (1 << i));
+            // BTreeSet iteration is ascending, matching the wire contract.
+            let included: Vec<u32> = self.pending.iter().map(|&i| i as u32).collect();
             self.ep.broadcast(&ServerToNode::Consensus {
                 iter: r as u64,
-                included_mask,
+                included,
                 dz_wire: cz.wire,
             })?;
             self.zhat.as_mut().unwrap().commit(&cz.dequantized);

@@ -3,13 +3,15 @@
 //! * error feedback on/off (the §4.1 error-accumulation argument)
 //! * compressor family (qsgd / sign / top-k / rand-k / identity)
 //! * staleness bound τ and arrival threshold P
+//! * execution engine (sequential simulator vs event-driven virtual time)
 //!
 //! All on the Fig-3 LASSO workload (native backend for speed), reporting
 //! bits-to-target and final accuracy per variant.
 
 use crate::admm::runner::{self, ProblemFactory};
+use crate::comm::latency::LatencyModel;
 use crate::compress::CompressorKind;
-use crate::config::{presets, ExperimentConfig, ProblemKind};
+use crate::config::{presets, EngineKind, ExperimentConfig, ProblemKind};
 use crate::metrics::summary;
 use crate::problems::lasso::{LassoConfig, LassoProblem};
 use crate::problems::Problem;
@@ -154,6 +156,28 @@ pub fn sweep_async(opts: &AblationOptions) -> anyhow::Result<Vec<AblationRow>> {
     Ok(rows)
 }
 
+/// Execution-engine sweep: the sequential simulator vs the event-driven
+/// virtual-time engine. At zero latency the two rows must be *identical*
+/// for the identity compressor (the parity contract) and statistically
+/// indistinguishable for qsgd; the straggler row shows the event engine's
+/// whole point — heterogeneous Exp delays change arrival batching (and
+/// hence the trajectory) without costing any wall-clock sleeps.
+pub fn sweep_engine(opts: &AblationOptions) -> anyhow::Result<Vec<AblationRow>> {
+    let mut rows = Vec::new();
+    for (engine, latency, label) in [
+        (EngineKind::Seq, LatencyModel::None, "engine=seq"),
+        (EngineKind::Event, LatencyModel::None, "engine=event"),
+        (EngineKind::Event, LatencyModel::Exp(0.01), "engine=event+stragglers"),
+    ] {
+        let mut cfg = base_cfg(opts.iters, opts.mc_trials);
+        cfg.engine = engine;
+        cfg.latency = latency;
+        cfg.name = label.into();
+        rows.push(run_one(&cfg, opts.target)?);
+    }
+    Ok(rows)
+}
+
 /// Run every sweep, printing a table per group.
 pub fn run_all(opts: &AblationOptions) -> anyhow::Result<Vec<AblationRow>> {
     let mut all = Vec::new();
@@ -162,6 +186,7 @@ pub fn run_all(opts: &AblationOptions) -> anyhow::Result<Vec<AblationRow>> {
         ("error feedback", sweep_error_feedback(opts)?),
         ("compressor family", sweep_compressors(opts)?),
         ("asynchrony (tau, P)", sweep_async(opts)?),
+        ("execution engine (seq vs event)", sweep_engine(opts)?),
     ] {
         println!("--- ablation: {title} ---");
         for r in &rows {

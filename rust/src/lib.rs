@@ -14,6 +14,17 @@
 //!   AOT-lowered to `artifacts/*.hlo.txt`, executed here via PJRT
 //!   ([`runtime`]). Python is never on the request path.
 //!
+//! Three engines execute Algorithm 1 (select with `--engine`):
+//! * [`admm::sim`] (`seq`) — the sequential round-based simulator, the
+//!   bit-exact reference behind every figure;
+//! * [`admm::engine`] (`event`) — the event-driven virtual-time engine for
+//!   1000+-node asynchrony studies (per-node delays, P-arrival trigger,
+//!   τ−1 force-wait) with no wall-clock sleeps; identical to `seq`
+//!   bit-for-bit at zero latency with the identity compressor;
+//! * [`coordinator`] (`threaded`) — real server/node threads over the
+//!   accounted star network, for deployment-shaped runs and fault
+//!   injection.
+//!
 //! The library is fully self-contained: the build environment exposes only
 //! the `xla` crate's dependency closure, so the JSON, RNG, CLI, bench and
 //! property-test substrates are implemented in-tree ([`util`]).

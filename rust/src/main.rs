@@ -16,7 +16,7 @@ use std::path::PathBuf;
 use qadmm::admm::runner::{self, ProblemFactory};
 use qadmm::comm::network::FaultSpec;
 use qadmm::compress::CompressorKind;
-use qadmm::config::{presets, Backend, ProblemKind};
+use qadmm::config::{presets, Backend, EngineKind, ProblemKind};
 use qadmm::exp::{ablation, fig3, fig4};
 use qadmm::problems::lasso::{LassoConfig, LassoProblem};
 use qadmm::problems::nn::{NnArch, NnProblem};
@@ -58,8 +58,9 @@ qadmm — Communication-Efficient Distributed Asynchronous ADMM
 
 USAGE: qadmm <cmd> [--options]
 
-  run       --preset NAME [--iters N] [--trials N] [--q N|--compressor KIND]
-            [--tau N] [--p N] [--seed N] [--no-ef] [--out DIR]
+  run       --preset NAME [--engine seq|event|threaded] [--iters N]
+            [--trials N] [--q N|--compressor KIND] [--tau N] [--p N]
+            [--seed N] [--no-ef] [--out DIR]
   fig3      [--iters N] [--trials N] [--backend hlo|native] [--target X]
   fig4      [--iters N] [--trials N] [--arch cnn|mlp] [--train N] [--test N]
   ablation  [--iters N] [--trials N] [--target X]
@@ -68,7 +69,9 @@ USAGE: qadmm <cmd> [--options]
   selftest  [--artifacts DIR]
 
 Presets: fig3 fig3-tau1 fig4 fig4-full ci-lasso e2e-mlp
-Compressors: identity | qsgdQ | sign | topkP | randkP (P in permille)
+Compressors: identity | qsgdQ | sign | topkP | randkP (P in permille, 1..=1000)
+Engines: seq (lockstep simulator) | event (virtual-time, 1000+ nodes)
+         | threaded (real threads + injected latency)
 ";
 
 fn apply_overrides(
@@ -81,6 +84,12 @@ fn apply_overrides(
     cfg.p_min = args.usize("p", cfg.p_min);
     cfg.seed = args.u64("seed", cfg.seed);
     cfg.eval_every = args.usize("eval-every", cfg.eval_every);
+    let engine = args.choice(
+        "engine",
+        cfg.engine.label(),
+        &["seq", "sequential", "sim", "event", "virtual", "threaded", "threads"],
+    )?;
+    cfg.engine = EngineKind::parse(&engine)?;
     if let Some(c) = args.str_opt("compressor") {
         cfg.compressor = CompressorKind::parse(&c)?;
     } else {
@@ -208,7 +217,13 @@ fn cmd_run(args: &mut Args) -> anyhow::Result<()> {
         })
         .unwrap_or((0, 0));
 
-    println!("running {} ({} iters x {} trials)...", cfg.name, cfg.iters, cfg.mc_trials);
+    println!(
+        "running {} on engine={} ({} iters x {} trials)...",
+        cfg.name,
+        cfg.engine.label(),
+        cfg.iters,
+        cfg.mc_trials
+    );
     let mut factory = make_factory(
         &cfg,
         service.as_ref(),
@@ -218,6 +233,27 @@ fn cmd_run(args: &mut Args) -> anyhow::Result<()> {
         n_train,
         n_test,
     );
+    if cfg.engine == EngineKind::Threaded {
+        // The threaded deployment drives one problem instance directly
+        // (run_mc covers the in-process engines).
+        let mut rngs = qadmm::admm::sim::TrialRngs::new(cfg.seed);
+        let boxed = factory(cfg.seed, &mut rngs.data)?;
+        drop(factory);
+        let problem: Box<dyn Problem + Send> = unsafe { make_send(boxed) };
+        let outcome =
+            qadmm::coordinator::run_threaded(&cfg, problem, FaultSpec::default())?;
+        std::fs::create_dir_all(&out_dir)?;
+        let csv = out_dir.join(format!("{}.csv", cfg.name));
+        outcome.recorder.write_csv(&csv)?;
+        if let Some(last) = outcome.recorder.last() {
+            println!(
+                "final: iter={} accuracy={:.3e} test_acc={:.4} loss={:.4e} bits/param={:.1}",
+                last.iter, last.accuracy, last.test_acc, last.loss, outcome.normalized_bits
+            );
+        }
+        println!("wrote {}", csv.display());
+        return Ok(());
+    }
     let res = runner::run_mc(&cfg, factory.as_mut())?;
     drop(factory);
     let rec = res.mean_recorder();
@@ -308,7 +344,13 @@ fn cmd_ablation(args: &mut Args) -> anyhow::Result<()> {
 fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     let preset = args.str("preset", "e2e-mlp");
     let mut cfg = presets::by_name(&preset)?;
+    cfg.engine = EngineKind::Threaded; // serve *is* the threaded deployment
     apply_overrides(&mut cfg, args)?;
+    anyhow::ensure!(
+        cfg.engine == EngineKind::Threaded,
+        "serve always uses the threaded engine; use `run --engine {}` instead",
+        cfg.engine.label()
+    );
     let artifact_dir = PathBuf::from(args.str("artifacts", "artifacts"));
     let data_dir = PathBuf::from(args.str("data", "data/mnist"));
     let n_train = args.usize("train", 2000);

@@ -1,19 +1,76 @@
 //! LASSO consensus problem (§5.1):
 //!     minimize Σᵢ ‖Aᵢx − bᵢ‖² + θ‖x‖₁
-//! with exact primal updates — (2AᵀAᵢ + ρI) is factorized once per node, so
-//! each update is one M×M solve (a single matmul against the precomputed
-//! inverse on the HLO path).
+//! with exact primal updates. Two native solvers:
+//!
+//! * **dense** (h ≥ m): (2AᵀAᵢ + ρI) is inverted once per node, each update
+//!   is one M×M matvec (the same precomputed inverse the HLO path uploads);
+//! * **Woodbury** (h < m): (ρI + 2AᵀA)⁻¹v = (v − Aᵀ(ρ/2·I + AAᵀ)⁻¹Av)/ρ,
+//!   so only an h×h factor is stored and each update costs O(h·m). This is
+//!   what makes 1000-node × 10k-dim engine-scale runs feasible — no m×m
+//!   inverse is ever formed.
 //!
 //! Data generation follows the paper exactly: Aᵢ ~ N(0,1), b = A z₀ + n with
 //! z₀ sparse (0.2·M nonzeros ~ N(0,1)) and n ~ N(0, 0.01).
 
-use super::{EvalMetrics, Problem};
+use super::{EvalMetrics, LocalUpdateItem, Problem};
 use crate::config::Backend;
 use crate::runtime::tensor::Tensor;
 use crate::runtime::Exec;
 use crate::solver::linalg::{add, dot, Mat};
 use crate::solver::prox;
 use crate::util::rng::Pcg64;
+
+/// Per-node factor for the exact primal solve.
+enum PrimalSolver {
+    /// (2AᵀA + ρI)⁻¹ per node, [m × m].
+    Dense(Vec<Mat>),
+    /// (ρ/2·I + AAᵀ)⁻¹ per node, [h × h] (Woodbury identity).
+    Woodbury(Vec<Mat>),
+}
+
+/// x = (2AᵀA + ρI)⁻¹ rhs through whichever factor is available.
+fn apply_primal_solver(
+    solver: &PrimalSolver,
+    a: &Mat,
+    rho: f64,
+    node: usize,
+    rhs: &[f64],
+) -> Vec<f64> {
+    match solver {
+        PrimalSolver::Dense(minv) => minv[node].matvec(rhs),
+        PrimalSolver::Woodbury(w) => {
+            let t = a.matvec(rhs);
+            let s = w[node].matvec(&t);
+            let back = a.matvec_t(&s);
+            rhs.iter().zip(&back).map(|(v, c)| (v - c) / rho).collect()
+        }
+    }
+}
+
+/// Eq. (9a) exact solve: argmin fᵢ(x) + ρ/2‖x − ẑ + u‖². Free function so
+/// the sequential path and the worker-pool fan-out share one body.
+fn native_primal(
+    a: &Mat,
+    atb2: &[f64],
+    solver: &PrimalSolver,
+    node: usize,
+    rho: f64,
+    zhat: &[f64],
+    u: &[f64],
+) -> Vec<f64> {
+    let rhs: Vec<f64> = atb2
+        .iter()
+        .zip(zhat.iter().zip(u))
+        .map(|(atb, (zj, uj))| atb + rho * (zj - uj))
+        .collect();
+    apply_primal_solver(solver, a, rho, node, &rhs)
+}
+
+/// fᵢ(x) = ‖Ax‖² − (2Aᵀb)ᵀx + bᵀb via the residual form (O(h·m)).
+fn native_loss(a: &Mat, atb2: &[f64], btb: f64, x: &[f64]) -> f64 {
+    let ax = a.matvec(x);
+    dot(&ax, &ax) - dot(atb2, x) + btb
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct LassoConfig {
@@ -30,10 +87,9 @@ pub struct LassoProblem {
     a: Vec<Mat>,
     b: Vec<Vec<f64>>,
     /// Precomputed per-node quantities.
-    ata: Vec<Mat>,      // AᵀA
     atb2: Vec<Vec<f64>>, // 2Aᵀb
     btb: Vec<f64>,      // ‖b‖²
-    minv: Vec<Mat>,     // (2AᵀA + ρI)⁻¹
+    solver: PrimalSolver,
     backend: Backend,
     exec: Option<Box<dyn Exec + Send>>,
     /// Unique namespace for device-pinned constants: trials/variants each
@@ -68,29 +124,40 @@ impl LassoProblem {
             a.push(ai);
             b.push(bi);
         }
-        let mut ata = Vec::with_capacity(n);
         let mut atb2 = Vec::with_capacity(n);
         let mut btb = Vec::with_capacity(n);
-        let mut minv = Vec::with_capacity(n);
         for i in 0..n {
-            let gram = a[i].gram();
-            let mut sys = gram.clone();
-            sys.scale_in_place(2.0);
-            sys.add_diag_in_place(rho);
-            minv.push(sys.spd_inverse()?);
             atb2.push(a[i].matvec_t(&b[i]).iter().map(|v| 2.0 * v).collect());
             btb.push(dot(&b[i], &b[i]));
-            ata.push(gram);
         }
+        let solver = if h < m {
+            // Woodbury: only the h×h rows-Gram is ever inverted; no m×m
+            // matrix is formed (memory O(h·m) per node instead of O(m²)).
+            let mut w = Vec::with_capacity(n);
+            for ai in &a {
+                let mut sys = ai.gram_rows();
+                sys.add_diag_in_place(rho / 2.0);
+                w.push(sys.spd_inverse()?);
+            }
+            PrimalSolver::Woodbury(w)
+        } else {
+            let mut minv = Vec::with_capacity(n);
+            for ai in &a {
+                let mut sys = ai.gram();
+                sys.scale_in_place(2.0);
+                sys.add_diag_in_place(rho);
+                minv.push(sys.spd_inverse()?);
+            }
+            PrimalSolver::Dense(minv)
+        };
         static INSTANCE: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
         Ok(Self {
             cfg,
             a,
             b,
-            ata,
             atb2,
             btb,
-            minv,
+            solver,
             backend: Backend::Native,
             exec: None,
             instance: INSTANCE.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
@@ -113,6 +180,18 @@ impl LassoProblem {
             self.cfg.m,
             self.cfg.n
         );
+        // The artifact takes the dense (2AᵀA+ρI)⁻¹ as a pinned constant, so
+        // materialize it if generate() chose the Woodbury factor.
+        if matches!(self.solver, PrimalSolver::Woodbury(_)) {
+            let mut minv = Vec::with_capacity(self.cfg.n);
+            for ai in &self.a {
+                let mut sys = ai.gram();
+                sys.scale_in_place(2.0);
+                sys.add_diag_in_place(self.cfg.rho);
+                minv.push(sys.spd_inverse()?);
+            }
+            self.solver = PrimalSolver::Dense(minv);
+        }
         self.backend = Backend::Hlo;
         self.exec = Some(exec);
         Ok(self)
@@ -123,9 +202,9 @@ impl LassoProblem {
         let LassoConfig { n, rho, theta, .. } = self.cfg;
         let mut total = 0.0;
         for i in 0..n {
-            // f_i = xᵀ(AᵀA)x − (2Aᵀb)ᵀx + bᵀb
-            let gx = self.ata[i].matvec(&x[i]);
-            total += dot(&x[i], &gx) - dot(&self.atb2[i], &x[i]) + self.btb[i];
+            // f_i = ‖Ax‖² − (2Aᵀb)ᵀx + bᵀb  (O(h·m), no Gram needed)
+            let ax = self.a[i].matvec(&x[i]);
+            total += dot(&ax, &ax) - dot(&self.atb2[i], &x[i]) + self.btb[i];
             let mut pen = 0.0;
             let mut unorm = 0.0;
             for j in 0..self.cfg.m {
@@ -180,13 +259,7 @@ impl LassoProblem {
     }
 
     fn exact_primal_native(&self, node: usize, zhat: &[f64], u: &[f64]) -> Vec<f64> {
-        let rho = self.cfg.rho;
-        let rhs: Vec<f64> = self.atb2[node]
-            .iter()
-            .zip(zhat.iter().zip(u))
-            .map(|(atb, (zj, uj))| atb + rho * (zj - uj))
-            .collect();
-        self.minv[node].matvec(&rhs)
+        native_primal(&self.a[node], &self.atb2[node], &self.solver, node, self.cfg.rho, zhat, u)
     }
 
     fn consensus_native(&self, xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> Vec<f64> {
@@ -214,8 +287,11 @@ impl LassoProblem {
         let exec = self.exec.as_ref().expect("hlo backend without exec");
         // per-node factor (2AᵀA+ρI)⁻¹ and 2Aᵀb are constant across
         // iterations: pinned on device once, keyed by node (§Perf).
+        let PrimalSolver::Dense(minv) = &self.solver else {
+            anyhow::bail!("HLO backend requires the dense factor (with_hlo materializes it)")
+        };
         let consts = [
-            Tensor::F64(self.minv[node].data.clone(), vec![m, m]),
+            Tensor::F64(minv[node].data.clone(), vec![m, m]),
             Tensor::vec_f64(self.atb2[node].clone()),
         ];
         let zeros = vec![0.5; m]; // unused noise lanes (fused quant outputs ignored)
@@ -254,17 +330,17 @@ impl LassoProblem {
     }
 
     /// Stacked (AᵀA [n·m·m], 2Aᵀb [n·m], ‖b‖² [n]) tensors for the HLO
-    /// Lagrangian artifact (parity tests).
+    /// Lagrangian artifact (parity tests). The Grams are built on demand —
+    /// they are no longer kept resident (O(n·m²) memory).
     pub fn gram_tensors(&self) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
-        let ata = self.ata.iter().flat_map(|m| m.data.iter().copied()).collect();
+        let ata = self.a.iter().flat_map(|m| m.gram().data).collect();
         let atb2 = self.atb2.concat();
         (ata, atb2, self.btb.clone())
     }
 
-    /// Residual f_i value (local training loss) at x.
+    /// f_i value (local training loss) at x, via the residual form.
     fn local_loss(&self, node: usize, x: &[f64]) -> f64 {
-        let gx = self.ata[node].matvec(x);
-        dot(x, &gx) - dot(&self.atb2[node], x) + self.btb[node]
+        native_loss(&self.a[node], &self.atb2[node], self.btb[node], x)
     }
 }
 
@@ -310,6 +386,47 @@ impl Problem for LassoProblem {
         };
         let loss = self.local_loss(node, &x);
         Ok((x, loss))
+    }
+
+    /// Deterministic worker-pool fan-out: the native update is pure math
+    /// over per-node data, so chunks run on scoped threads and merge back
+    /// in item order — bit-identical to the sequential path for any pool
+    /// size. HLO execution is serialized by the compute service, so that
+    /// backend keeps the sequential default.
+    fn local_update_batch(
+        &mut self,
+        zhat: &[f64],
+        items: &mut [LocalUpdateItem<'_>],
+    ) -> anyhow::Result<Vec<(Vec<f64>, f64)>> {
+        let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        if self.backend != Backend::Native || items.len() < 2 || workers < 2 {
+            let mut out = Vec::with_capacity(items.len());
+            for it in items.iter_mut() {
+                out.push(self.local_update(it.node, zhat, it.u, it.x_prev, it.rng)?);
+            }
+            return Ok(out);
+        }
+        let (a, atb2, btb) = (&self.a, &self.atb2, &self.btb);
+        let (solver, rho) = (&self.solver, self.cfg.rho);
+        let run_one = |it: &LocalUpdateItem<'_>| -> (Vec<f64>, f64) {
+            let node = it.node;
+            let x = native_primal(&a[node], &atb2[node], solver, node, rho, zhat, it.u);
+            let loss = native_loss(&a[node], &atb2[node], btb[node], &x);
+            (x, loss)
+        };
+        let chunk = items.len().div_ceil(workers.min(items.len()));
+        let results: Vec<Vec<(Vec<f64>, f64)>> = std::thread::scope(|s| {
+            let run = &run_one;
+            let handles: Vec<_> = items
+                .chunks(chunk)
+                .map(|slice| s.spawn(move || slice.iter().map(run).collect()))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("lasso worker panicked"))
+                .collect()
+        });
+        Ok(results.into_iter().flatten().collect())
     }
 
     fn consensus(&mut self, xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
@@ -379,11 +496,49 @@ mod tests {
         let u = rng.normal_vec(24, 0.0, 0.1);
         let (x, _) = p.local_update(0, &zhat, &u, &vec![0.0; 24], &mut rng).unwrap();
         // 2AᵀA x − 2Aᵀb + ρ(x − ẑ + u) = 0
-        let gx = p.ata[0].matvec(&x);
+        let ax = p.a[0].matvec(&x);
+        let gx = p.a[0].matvec_t(&ax);
         for j in 0..24 {
             let grad = 2.0 * gx[j] - p.atb2[0][j] + p.cfg.rho * (x[j] - zhat[j] + u[j]);
             assert!(grad.abs() < 1e-9, "grad[{j}]={grad}");
         }
+    }
+
+    /// small() has h = 20 < m = 24, so the Woodbury factor is selected; it
+    /// must agree with the explicit (2AᵀA + ρI)⁻¹ to solver precision.
+    #[test]
+    fn woodbury_matches_dense_inverse() {
+        let (p, mut rng) = small();
+        assert!(matches!(p.solver, PrimalSolver::Woodbury(_)));
+        let rhs = rng.normal_vec(24, 0.0, 1.0);
+        let x = apply_primal_solver(&p.solver, &p.a[0], p.cfg.rho, 0, &rhs);
+        let mut sys = p.a[0].gram();
+        sys.scale_in_place(2.0);
+        sys.add_diag_in_place(p.cfg.rho);
+        let dense = sys.spd_inverse().unwrap().matvec(&rhs);
+        for (a, b) in x.iter().zip(&dense) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    /// The worker-pool fan-out must be bit-identical to node-by-node calls.
+    #[test]
+    fn batch_update_matches_sequential() {
+        let (mut p, mut rng) = small();
+        let zhat = rng.normal_vec(24, 0.0, 1.0);
+        let us: Vec<Vec<f64>> = (0..4).map(|_| rng.normal_vec(24, 0.0, 0.1)).collect();
+        let x_prev = vec![0.0; 24];
+        let seq: Vec<(Vec<f64>, f64)> = (0..4)
+            .map(|i| p.local_update(i, &zhat, &us[i], &x_prev, &mut rng).unwrap())
+            .collect();
+        let mut rngs: Vec<Pcg64> = (0..4).map(|i| Pcg64::seed_from_u64(i as u64)).collect();
+        let mut items: Vec<LocalUpdateItem> = rngs
+            .iter_mut()
+            .enumerate()
+            .map(|(i, rng)| LocalUpdateItem { node: i, u: &us[i], x_prev: &x_prev, rng })
+            .collect();
+        let batch = p.local_update_batch(&zhat, &mut items).unwrap();
+        assert_eq!(seq, batch);
     }
 
     #[test]

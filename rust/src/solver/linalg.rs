@@ -111,6 +111,26 @@ impl Mat {
         g
     }
 
+    /// Rows-Gram matrix AAᵀ (symmetric, [rows × rows]). Complements
+    /// [`Self::gram`]; the LASSO Woodbury solver inverts this h×h system
+    /// instead of the m×m normal equations when h < m.
+    pub fn gram_rows(&self) -> Mat {
+        let n = self.rows;
+        let mut g = Mat::zeros(n, n);
+        for i in 0..n {
+            let ri = self.row(i);
+            for j in i..n {
+                let mut acc = 0.0;
+                for (a, b) in ri.iter().zip(self.row(j)) {
+                    acc += a * b;
+                }
+                g.data[i * n + j] = acc;
+                g.data[j * n + i] = acc;
+            }
+        }
+        g
+    }
+
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -275,6 +295,22 @@ mod tests {
 
     fn random_mat(rng: &mut Pcg64, r: usize, c: usize) -> Mat {
         Mat { rows: r, cols: c, data: rng.normal_vec(r * c, 0.0, 1.0) }
+    }
+
+    #[test]
+    fn gram_rows_is_a_a_transpose() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        let a = random_mat(&mut rng, 5, 9);
+        let g = a.gram_rows();
+        let expect = a.matmul(&a.transpose());
+        assert_eq!(g.rows, 5);
+        assert_eq!(g.cols, 5);
+        for i in 0..5 {
+            for j in 0..5 {
+                assert!((g[(i, j)] - expect[(i, j)]).abs() < 1e-12);
+                assert_eq!(g[(i, j)], g[(j, i)]);
+            }
+        }
     }
 
     #[test]

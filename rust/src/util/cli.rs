@@ -87,6 +87,23 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// A string option restricted to a fixed vocabulary; unknown values
+    /// fail with the allowed list instead of silently running a default.
+    pub fn choice(
+        &mut self,
+        key: &str,
+        default: &str,
+        allowed: &[&str],
+    ) -> anyhow::Result<String> {
+        let v = self.str(key, default);
+        anyhow::ensure!(
+            allowed.contains(&v.as_str()),
+            "--{key} expects one of {}, got '{v}'",
+            allowed.join("|")
+        );
+        Ok(v)
+    }
+
     pub fn flag(&mut self, key: &str) -> bool {
         self.note(key);
         self.flags.iter().any(|f| f == key)
@@ -132,6 +149,16 @@ mod tests {
         assert_eq!(a.f64("rho", 500.0), 500.0);
         assert_eq!(a.str("preset", "fig3"), "fig3");
         assert!(!a.flag("baseline"));
+    }
+
+    #[test]
+    fn choice_accepts_allowed_and_rejects_rest() {
+        let mut a = Args::parse(vec!["--engine", "event"]);
+        assert_eq!(a.choice("engine", "seq", &["seq", "event", "threaded"]).unwrap(), "event");
+        let mut b = Args::parse(vec!["--engine", "warp"]);
+        assert!(b.choice("engine", "seq", &["seq", "event", "threaded"]).is_err());
+        let mut c = Args::parse(Vec::<String>::new());
+        assert_eq!(c.choice("engine", "seq", &["seq", "event"]).unwrap(), "seq");
     }
 
     #[test]

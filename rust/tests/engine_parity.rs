@@ -1,0 +1,140 @@
+//! The parity contract between the sequential simulator and the
+//! event-driven virtual-time engine: with **zero latency** and the
+//! **identity compressor**, every dispatched update arrives in the same
+//! virtual instant, so engine rounds coincide exactly with simulator
+//! iterations — the `z` trajectory, the per-round metric records and the
+//! cumulative comm-bit accounting must be *bit-identical*, for both the
+//! exact-update (LASSO) and inexact-update (logistic regression) problem
+//! families and across (τ, P, oracle) variations.
+
+use qadmm::admm::engine::EventEngine;
+use qadmm::admm::sim::{AsyncSim, TrialRngs};
+use qadmm::compress::CompressorKind;
+use qadmm::config::{presets, ExperimentConfig, OracleConfig, ProblemKind};
+use qadmm::problems::lasso::{LassoConfig, LassoProblem};
+use qadmm::problems::logreg::{LogRegConfig, LogRegProblem};
+use qadmm::problems::Problem;
+use qadmm::util::rng::Pcg64;
+
+fn parity_cfg(n: usize, tau: usize, p_min: usize, regroup: bool) -> ExperimentConfig {
+    let mut cfg = presets::ci_lasso();
+    cfg.name = format!("parity-tau{tau}-p{p_min}");
+    cfg.problem = ProblemKind::Lasso { m: 24, h: 18, n, rho: 30.0, theta: 0.1 };
+    cfg.compressor = CompressorKind::Identity; // zero quantizer randomness
+    cfg.tau = tau;
+    cfg.p_min = p_min;
+    cfg.iters = 40;
+    cfg.mc_trials = 1;
+    cfg.eval_every = 1;
+    cfg.oracle = OracleConfig { p_slow: 0.1, p_fast: 0.8, regroup_each_call: regroup };
+    cfg
+}
+
+/// Drive both engines in lockstep on identically-generated problems and
+/// assert bit-identical state after every round.
+fn assert_parity(
+    cfg: &ExperimentConfig,
+    make: &dyn Fn(&mut Pcg64) -> Box<dyn Problem>,
+) {
+    let mut rngs_a = TrialRngs::new(cfg.seed);
+    let mut prob_a = make(&mut rngs_a.data);
+    let mut sim = AsyncSim::new(cfg, prob_a.as_mut(), rngs_a).unwrap();
+
+    let mut rngs_b = TrialRngs::new(cfg.seed);
+    let mut prob_b = make(&mut rngs_b.data);
+    let mut eng = EventEngine::new(cfg, prob_b.as_mut(), rngs_b).unwrap();
+
+    // Algorithm 1 lines 1–9 charge the same full-precision exchange.
+    assert_eq!(
+        sim.accounting().total_bits(),
+        eng.accounting().total_bits(),
+        "init accounting diverged"
+    );
+
+    for r in 1..=cfg.iters {
+        sim.step().unwrap();
+        eng.step_round().unwrap();
+        assert_eq!(sim.z(), eng.z(), "z trajectory diverged at round {r} ({})", cfg.name);
+        assert_eq!(
+            sim.accounting().total_bits(),
+            eng.accounting().total_bits(),
+            "comm bits diverged at round {r} ({})",
+            cfg.name
+        );
+        assert_eq!(sim.staleness(), eng.staleness(), "staleness diverged at round {r}");
+    }
+
+    // With zero latency the engine's timeline never leaves t = 0.
+    assert_eq!(eng.virtual_time(), 0.0);
+    let stats = eng.stats();
+    assert_eq!(stats.rounds, cfg.iters);
+    assert!(stats.min_arrivals >= cfg.p_min);
+    assert!(stats.max_staleness + 1 <= cfg.tau.max(1));
+
+    // Full metric series, NaN-safe (test_acc is NaN for convex problems).
+    let (a, b) = (sim.recorder(), eng.recorder());
+    assert_eq!(a.records.len(), b.records.len());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.iter, rb.iter);
+        assert_eq!(ra.active_nodes, rb.active_nodes);
+        assert_eq!(ra.comm_bits.to_bits(), rb.comm_bits.to_bits());
+        assert_eq!(ra.accuracy.to_bits(), rb.accuracy.to_bits());
+        assert_eq!(ra.test_acc.to_bits(), rb.test_acc.to_bits());
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits());
+    }
+}
+
+#[test]
+fn lasso_trajectories_are_bit_identical() {
+    for (tau, p_min, regroup) in [(3usize, 1usize, false), (4, 2, true), (1, 4, false)] {
+        let cfg = parity_cfg(4, tau, p_min, regroup);
+        let lcfg = match cfg.problem {
+            ProblemKind::Lasso { m, h, n, rho, theta } => LassoConfig { m, h, n, rho, theta },
+            _ => unreachable!(),
+        };
+        let make = move |rng: &mut Pcg64| -> Box<dyn Problem> {
+            Box::new(LassoProblem::generate(lcfg, rng).unwrap())
+        };
+        assert_parity(&cfg, &make);
+    }
+}
+
+#[test]
+fn logreg_trajectories_are_bit_identical() {
+    // inexact updates (K gradient steps) through the batch fan-out path
+    let lcfg = LogRegConfig { m: 10, h: 40, n: 5, rho: 2.0, gamma: 1.0, k_steps: 8, lr: 0.02 };
+    let make = move |rng: &mut Pcg64| -> Box<dyn Problem> {
+        Box::new(LogRegProblem::generate(lcfg, rng).unwrap())
+    };
+    for (tau, p_min) in [(3usize, 2usize), (2, 1)] {
+        let mut cfg = parity_cfg(5, tau, p_min, false);
+        cfg.name = format!("parity-logreg-tau{tau}-p{p_min}");
+        cfg.eval_every = 5; // logreg eval (F* reference) is the pricey part
+        assert_parity(&cfg, &make);
+    }
+}
+
+/// The engine stays deterministic when its worker pool actually kicks in:
+/// two identical runs at a node count large enough to shard across threads
+/// produce identical results (merged in node order, per-node RNG forks).
+#[test]
+fn event_engine_is_deterministic_across_runs_at_scale() {
+    let mut cfg = parity_cfg(24, 3, 2, false);
+    cfg.problem = ProblemKind::Lasso { m: 24, h: 6, n: 24, rho: 30.0, theta: 0.1 };
+    cfg.compressor = CompressorKind::Qsgd { bits: 3 };
+    cfg.iters = 25;
+    let lcfg = LassoConfig { m: 24, h: 6, n: 24, rho: 30.0, theta: 0.1 };
+    let run = || {
+        let mut rngs = TrialRngs::new(cfg.seed);
+        let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+        let mut eng = EventEngine::new(&cfg, &mut p, rngs).unwrap();
+        for _ in 0..cfg.iters {
+            eng.step_round().unwrap();
+        }
+        (eng.z().to_vec(), eng.accounting().total_bits())
+    };
+    let (z1, b1) = run();
+    let (z2, b2) = run();
+    assert_eq!(z1, z2);
+    assert_eq!(b1, b2);
+}

@@ -2,9 +2,14 @@
 //! offline crate universe): randomized inputs over many seeds, with the
 //! failing seed printed for reproduction.
 
+use qadmm::admm::engine::EventEngine;
 use qadmm::admm::scheduler::Scheduler;
+use qadmm::admm::sim::{AsyncSim, TrialRngs};
+use qadmm::comm::latency::LatencyModel;
 use qadmm::compress::packing::{pack_levels, unpack_levels};
 use qadmm::compress::{Compressor, CompressorKind};
+use qadmm::config::{presets, OracleConfig, ProblemKind};
+use qadmm::problems::lasso::{LassoConfig, LassoProblem};
 use qadmm::util::rng::Pcg64;
 
 /// Run `f` over `cases` random seeds; panic with the seed on failure.
@@ -120,6 +125,115 @@ fn prop_scheduler_never_exceeds_staleness_bound() {
                 }
             }
             active = next;
+        }
+    });
+}
+
+/// Both in-process engines uphold the paper's scheduling guarantees for
+/// randomized (n, τ, P): every consensus round incorporates ≥ P arrivals,
+/// and no node's staleness ever exceeds τ−1 (the server force-waits). The
+/// event engine additionally runs under heterogeneous Exp delays, so the
+/// invariants are exercised on a genuinely asynchronous timeline, not just
+/// the lockstep one.
+#[test]
+fn prop_engines_enforce_arrival_and_staleness_bounds() {
+    for_all(10, 77, |rng| {
+        let n = 2 + rng.gen_range(10);
+        let tau = 1 + rng.gen_range(4);
+        let p_min = 1 + rng.gen_range(n);
+        let mut cfg = presets::ci_lasso();
+        cfg.name = format!("prop-n{n}-tau{tau}-p{p_min}");
+        cfg.problem = ProblemKind::Lasso { m: 8, h: 5, n, rho: 20.0, theta: 0.1 };
+        cfg.tau = tau;
+        cfg.p_min = p_min;
+        cfg.iters = 30;
+        cfg.mc_trials = 1;
+        cfg.eval_every = 1;
+        cfg.seed = rng.next_u64();
+        cfg.oracle = OracleConfig {
+            p_slow: rng.uniform_f64(),
+            p_fast: rng.uniform_f64(),
+            regroup_each_call: rng.bernoulli(0.5),
+        };
+        let lcfg = LassoConfig { m: 8, h: 5, n, rho: 20.0, theta: 0.1 };
+
+        // sequential simulator
+        let mut rngs = TrialRngs::new(cfg.seed);
+        let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+        p.set_reference_optimum(1.0); // metric value irrelevant here
+        let mut sim = AsyncSim::new(&cfg, &mut p, rngs).unwrap();
+        for _ in 0..cfg.iters {
+            sim.step().unwrap();
+            let active = sim.recorder().last().unwrap().active_nodes;
+            assert!(active >= p_min, "sim round with {active} < P={p_min}");
+            let max_d = sim.staleness().iter().copied().max().unwrap();
+            assert!(max_d + 1 <= tau, "sim staleness {max_d} breaks tau={tau}");
+        }
+
+        // event engine under straggler delays
+        cfg.latency = LatencyModel::Exp(0.01);
+        cfg.engine = qadmm::config::EngineKind::Event;
+        let mut rngs = TrialRngs::new(cfg.seed);
+        let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+        p.set_reference_optimum(1.0);
+        let mut eng = EventEngine::new(&cfg, &mut p, rngs).unwrap();
+        for _ in 0..cfg.iters {
+            eng.step_round().unwrap();
+            let max_d = eng.staleness().iter().copied().max().unwrap();
+            assert!(max_d + 1 <= tau, "engine staleness {max_d} breaks tau={tau}");
+        }
+        let stats = eng.stats();
+        assert_eq!(stats.rounds, cfg.iters);
+        assert!(
+            stats.min_arrivals >= p_min,
+            "engine fired on {} < P={p_min}",
+            stats.min_arrivals
+        );
+        assert!(stats.max_staleness + 1 <= tau);
+        assert!(stats.virtual_time >= 0.0 && stats.virtual_time.is_finite());
+    });
+}
+
+/// decode() must be total: for *every* compressor family, truncating the
+/// frame yields Err (never a panic, never a wrong-length vector), and
+/// arbitrary byte corruption yields Err or a correct-length vector.
+#[test]
+fn prop_decode_on_truncated_or_corrupt_frames_never_panics() {
+    let kinds = [
+        CompressorKind::Identity,
+        CompressorKind::Identity32,
+        CompressorKind::Qsgd { bits: 2 },
+        CompressorKind::Qsgd { bits: 3 },
+        CompressorKind::Qsgd { bits: 11 },
+        CompressorKind::Sign,
+        CompressorKind::TopK { frac_permille: 120 },
+        CompressorKind::RandK { frac_permille: 200 },
+    ];
+    for_all(40, 88, |rng| {
+        let m = 1 + rng.gen_range(96);
+        let delta: Vec<f64> = (0..m).map(|_| rng.standard_normal() * 3.0).collect();
+        for kind in kinds {
+            let c = kind.build();
+            let wire = c.compress(&delta, rng).wire;
+            // every strict prefix is rejected
+            for cut in 0..wire.len() {
+                assert!(
+                    c.decode(&wire[..cut], m).is_err(),
+                    "{}: truncation to {cut}/{} bytes accepted",
+                    kind.label(),
+                    wire.len()
+                );
+            }
+            // random single-bit corruption never panics
+            for _ in 0..24 {
+                let mut w = wire.clone();
+                let i = rng.gen_range(w.len());
+                w[i] ^= 1 << rng.gen_range(8);
+                match c.decode(&w, m) {
+                    Ok(v) => assert_eq!(v.len(), m, "{}", kind.label()),
+                    Err(_) => {}
+                }
+            }
         }
     });
 }
