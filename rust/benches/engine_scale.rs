@@ -1,4 +1,5 @@
-//! Event-engine scaling sweep: n ∈ {16, 128, 1024} nodes.
+//! Event-engine scaling sweep: n ∈ {16, 128, 1024} nodes, plus a
+//! τ × downlink-delay grid at n ∈ {256, 1024}.
 //!
 //! The headline configuration is the acceptance bar for the virtual-time
 //! engine: **n = 1024 nodes, m = 10240-dim LASSO, 200 consensus rounds,
@@ -8,12 +9,18 @@
 //! because the LASSO Woodbury solver never forms an m×m inverse (h ≪ m)
 //! and the per-node fan-out runs on the worker pool.
 //!
-//! `QADMM_BENCH_FAST=1` shrinks the sweep for CI smoke runs.
+//! The downlink grid exercises the per-link decomposition end to end:
+//! delayed ẑ delivery multiplies `DownlinkArrive` events and fragments the
+//! dispatch batches, which is exactly the regime the mirror bookkeeping
+//! has to keep cheap.
+//!
+//! `QADMM_BENCH_FAST=1` shrinks both sweeps for CI smoke runs.
 
 use qadmm::admm::engine::EventEngine;
 use qadmm::admm::sim::TrialRngs;
 use qadmm::comm::latency::LatencyModel;
-use qadmm::config::{presets, EngineKind, OracleConfig, ProblemKind};
+use qadmm::comm::profile::LinkConfig;
+use qadmm::config::{presets, EngineKind, ExperimentConfig, OracleConfig, ProblemKind};
 use qadmm::problems::lasso::{LassoConfig, LassoProblem};
 use qadmm::util::timer::{fmt_count, Stopwatch};
 
@@ -22,23 +29,37 @@ struct Sweep {
     m: usize,
     h: usize,
     rounds: usize,
+    tau: usize,
+    link: LinkConfig,
+    label: &'static str,
 }
 
-fn run_sweep(s: &Sweep) -> anyhow::Result<()> {
+/// The straggler mixture of the original scaling sweep, split across the
+/// compute and uplink legs (virtual seconds).
+fn straggler_link() -> LinkConfig {
+    let mix = LatencyModel::Mixture { fast: 0.002, slow: 0.25, p_slow: 0.15 };
+    LinkConfig { compute: mix, uplink: mix, downlink: LatencyModel::None, clock_drift: 0.0 }
+}
+
+fn base_cfg(s: &Sweep) -> ExperimentConfig {
     let mut cfg = presets::ci_lasso();
-    cfg.name = format!("engine-scale-n{}", s.n);
+    cfg.name = format!("engine-scale-n{}-{}", s.n, s.label);
     cfg.problem = ProblemKind::Lasso { m: s.m, h: s.h, n: s.n, rho: 50.0, theta: 0.1 };
     cfg.engine = EngineKind::Event;
-    cfg.tau = 4;
+    cfg.tau = s.tau;
     cfg.p_min = (s.n / 4).max(1);
     cfg.iters = s.rounds;
     cfg.mc_trials = 1;
     cfg.eval_every = s.rounds; // one final eval; per-round eval is O(n·h·m)
     cfg.oracle = OracleConfig { p_slow: 0.1, p_fast: 0.8, regroup_each_call: false };
-    // Straggler mixture in *virtual* seconds: a threaded run would sleep
+    // Injected delays in *virtual* seconds: a threaded run would sleep
     // ~rounds × slow-tail of real time; the engine only does arithmetic.
-    cfg.latency = LatencyModel::Mixture { fast: 0.002, slow: 0.25, p_slow: 0.15 };
+    cfg.link = s.link;
+    cfg
+}
 
+fn run_sweep(s: &Sweep) -> anyhow::Result<()> {
+    let cfg = base_cfg(s);
     let gen_clock = Stopwatch::new();
     let mut rngs = TrialRngs::new(cfg.seed);
     let mut problem = LassoProblem::generate(
@@ -58,11 +79,12 @@ fn run_sweep(s: &Sweep) -> anyhow::Result<()> {
     let wall = clock.elapsed_secs();
     let stats = engine.stats();
     println!(
-        "n={:5} m={:6} h={:3} rounds={:4}  wall {:7.2}s (gen {:5.2}s)  virtual {:8.2}s  \
-         speedup {:>9}x  events/s {:>9}  dispatches {}",
+        "{:24} n={:5} m={:6} tau={:2} rounds={:4}  wall {:7.2}s (gen {:5.2}s)  \
+         virtual {:8.2}s  speedup {:>9}x  events/s {:>9}  dispatches {}",
+        s.label,
         s.n,
         s.m,
-        s.h,
+        s.tau,
         s.rounds,
         wall,
         gen_s,
@@ -77,25 +99,59 @@ fn run_sweep(s: &Sweep) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn scale_sweep(n: usize, m: usize, h: usize, rounds: usize) -> Sweep {
+    Sweep { n, m, h, rounds, tau: 4, link: straggler_link(), label: "scale" }
+}
+
 fn main() {
     let fast = std::env::var("QADMM_BENCH_FAST").is_ok();
-    let sweeps = if fast {
+    let mut sweeps = if fast {
         vec![
-            Sweep { n: 16, m: 200, h: 100, rounds: 50 },
-            Sweep { n: 128, m: 512, h: 16, rounds: 20 },
-            Sweep { n: 1024, m: 10_240, h: 4, rounds: 10 },
+            scale_sweep(16, 200, 100, 50),
+            scale_sweep(128, 512, 16, 20),
+            scale_sweep(1024, 10_240, 4, 10),
         ]
     } else {
         vec![
-            Sweep { n: 16, m: 200, h: 100, rounds: 200 },
-            Sweep { n: 128, m: 2048, h: 16, rounds: 200 },
-            Sweep { n: 1024, m: 10_240, h: 4, rounds: 200 },
+            scale_sweep(16, 200, 100, 200),
+            scale_sweep(128, 2048, 16, 200),
+            scale_sweep(1024, 10_240, 4, 200),
         ]
     };
+
+    // τ × downlink grid at n ∈ {256, 1024} (fast mode keeps n = 256 only):
+    // delayed ẑ delivery is the per-link decomposition's hot path.
+    let downlinks: [(LatencyModel, &'static str); 2] = [
+        (LatencyModel::Const(0.05), "tauxdown-const"),
+        (LatencyModel::Exp(0.25), "tauxdown-exp"),
+    ];
+    let grid_sizes: &[usize] = if fast { &[256] } else { &[256, 1024] };
+    let grid_rounds = if fast { 10 } else { 100 };
+    for &n in grid_sizes {
+        for tau in [2usize, 8] {
+            for (down, label) in downlinks {
+                sweeps.push(Sweep {
+                    n,
+                    m: 1024,
+                    h: 8,
+                    rounds: grid_rounds,
+                    tau,
+                    link: LinkConfig {
+                        compute: LatencyModel::Exp(0.01),
+                        uplink: LatencyModel::Exp(0.01),
+                        downlink: down,
+                        clock_drift: 0.05,
+                    },
+                    label,
+                });
+            }
+        }
+    }
+
     println!("--- engine_scale: event-driven virtual-time QADMM ---");
     for s in &sweeps {
         if let Err(e) = run_sweep(s) {
-            eprintln!("n={}: {e:#}", s.n);
+            eprintln!("n={} ({}): {e:#}", s.n, s.label);
             std::process::exit(1);
         }
     }

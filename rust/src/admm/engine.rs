@@ -9,18 +9,29 @@
 //! ([`super::events`]), so a 1000-node straggler run finishes in
 //! milliseconds of wall time.
 //!
-//! Timeline per consensus round:
+//! Timeline per consensus round (each delay leg drawn from the node's
+//! [`LinkProfile`] — compute scaled by its clock drift, uplink and
+//! downlink on the server's clock):
 //! 1. the server fires: consensus over the estimate banks, compressed Δz
 //!    broadcast (accounted per link), scheduler advance (oracle selection +
 //!    τ−1 forcing — the same [`super::scheduler::Scheduler`] the simulator
-//!    uses, consuming the same oracle RNG stream);
-//! 2. selected idle nodes are *dispatched*: their local updates run through
+//!    uses, consuming the same oracle RNG stream). The broadcast does
+//!    **not** land instantly: each node gets a `DownlinkArrive` event at
+//!    `now + downlink_delay` (clamped monotone per link, so broadcasts
+//!    never overtake each other) with the Δz payload queued in its FIFO
+//!    inbox;
+//! 2. `DownlinkArrive` commits Δz into the node's private ẑ **mirror** —
+//!    the server's `zhat` bank and a node's view of it are now distinct
+//!    states that agree only once every broadcast has landed. If the node
+//!    was selected at fire time (and idle), its local update starts *here*:
+//!    all dispatches born in one virtual instant run as one batch through
 //!    [`crate::problems::Problem::local_update_batch`] (worker-pool
-//!    parallel for native LASSO, merged in node order), deltas are
-//!    compressed with per-node RNG forks, and a `ComputeDone` event is
-//!    scheduled at `now + compute_delay`;
+//!    parallel for native LASSO, merged in node order), each item reading
+//!    its own mirror; deltas are compressed with per-node RNG forks and a
+//!    `ComputeDone` event is scheduled at `+ compute_delay / clock_rate`
+//!    (fast-clocked nodes finish sooner);
 //! 3. `ComputeDone` accounts the uplink and schedules `MsgArrive` at
-//!    `+ network_delay`; `MsgArrive` commits the dequantized deltas into
+//!    `+ uplink_delay`; `MsgArrive` commits the dequantized deltas into
 //!    the server's estimate banks and joins the sparse arrival set;
 //! 4. between distinct virtual instants the server checks the trigger:
 //!    |arrivals| ≥ P **and** every node whose staleness has reached τ−1
@@ -28,17 +39,21 @@
 //!    re-dispatched (at most one update in flight per node, the Fig. 2
 //!    cadence), and their eventual arrival counts toward the next round.
 //!
-//! **Parity contract** (see `tests/engine_parity.rs`): with zero latency
-//! and the identity compressor, every arrival lands in the same virtual
-//! instant as its dispatch, so rounds coincide exactly with simulator
-//! iterations and the `z` trajectory and bit accounting are bit-identical
-//! to [`super::sim::AsyncSim`].
+//! **Parity contract** (see `tests/engine_parity.rs`): with zero delay on
+//! every link leg and the identity compressor, every broadcast and every
+//! arrival lands in the same virtual instant as its dispatch, each mirror
+//! equals the server's `zhat`, rounds coincide exactly with simulator
+//! iterations, and the `z` trajectory and bit accounting are bit-identical
+//! to [`super::sim::AsyncSim`]. Any nonzero downlink leg breaks the
+//! collapse: nodes compute against a stale ẑ, which is precisely the
+//! asymmetric staleness of the paper's Fig. 2.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, VecDeque};
+use std::sync::Arc;
 
 use crate::comm::accounting::CommAccounting;
-use crate::comm::latency::{per_node_latencies, LatencyModel};
-use crate::comm::message::MSG_HEADER_BYTES;
+use crate::comm::message::{INIT_BITS_PER_SCALAR, MSG_HEADER_BYTES};
+use crate::comm::profile::{per_node_profiles, LinkProfile};
 use crate::compress::error_feedback::EstimateTracker;
 use crate::compress::Compressor;
 use crate::config::ExperimentConfig;
@@ -60,34 +75,31 @@ struct InFlightMsg {
     loss: f64,
 }
 
+/// One broadcast on a node's downlink: the dequantized Δz (shared across
+/// all n links) and whether the node should start a local update when it
+/// lands (it was selected and idle at fire time).
+struct DownlinkPacket {
+    dz: Arc<Vec<f64>>,
+    dispatch: bool,
+}
+
 /// Timeline counters the property tests assert on.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct EngineStats {
     /// Consensus rounds fired so far.
     pub rounds: usize,
     /// Virtual seconds elapsed.
     pub virtual_time: f64,
-    /// Events processed (ComputeDone + MsgArrive).
+    /// Events processed (ComputeDone + MsgArrive + DownlinkArrive).
     pub events: u64,
     /// Local updates dispatched.
     pub dispatches: u64,
-    /// Smallest arrival set that ever triggered a round (must be ≥ P).
-    pub min_arrivals: usize,
+    /// Smallest arrival set that ever triggered a round (must be ≥ P);
+    /// `None` until the first round fires, so reading stats early can
+    /// never leak a `usize::MAX` sentinel to callers.
+    pub min_arrivals: Option<usize>,
     /// Largest per-node staleness counter ever observed (must be ≤ τ−1).
     pub max_staleness: usize,
-}
-
-impl Default for EngineStats {
-    fn default() -> Self {
-        Self {
-            rounds: 0,
-            virtual_time: 0.0,
-            events: 0,
-            dispatches: 0,
-            min_arrivals: usize::MAX,
-            max_staleness: 0,
-        }
-    }
 }
 
 pub struct EventEngine<'a> {
@@ -104,6 +116,18 @@ pub struct EventEngine<'a> {
     xhat: Vec<EstimateTracker>,
     uhat: Vec<EstimateTracker>,
     zhat: EstimateTracker,
+    /// Each node's private view of ẑ: advances only when a broadcast
+    /// lands on its downlink (`DownlinkArrive`), never at fire time.
+    /// `dispatch` reads this, not `zhat`.
+    z_mirror: Vec<Vec<f64>>,
+    /// Per-node FIFO of broadcasts in downlink transit.
+    downlink_inbox: Vec<VecDeque<DownlinkPacket>>,
+    /// Last scheduled downlink arrival per node (monotonicity clamp: a
+    /// later broadcast never overtakes an earlier one on the same link).
+    downlink_last: Vec<f64>,
+    /// Nodes whose downlink landed with a dispatch flag in the instant
+    /// being drained; flushed as one batch between instants.
+    pending_dispatch: Vec<usize>,
     /// Sparse arrival set for the round being assembled (no n ≤ 64 mask).
     arrived: BTreeSet<usize>,
     /// Node has an update computing or in transit (one in flight max).
@@ -120,8 +144,9 @@ pub struct EventEngine<'a> {
     oracle: AsyncOracle,
     accounting: CommAccounting,
     queue: EventQueue,
-    /// Per-node compute/network delay models (straggler heterogeneity).
-    latency: Vec<LatencyModel>,
+    /// Per-node link profiles: compute/uplink/downlink legs + clock drift
+    /// (straggler heterogeneity).
+    links: Vec<LinkProfile>,
     rng_latency: Pcg64,
     rng_oracle: Pcg64,
     /// Per-node quantizer streams (forked once; order-independent).
@@ -156,7 +181,10 @@ impl<'a> EventEngine<'a> {
 
         let mut accounting = CommAccounting::new(n);
         for i in 0..n {
-            accounting.record_uplink(i, MSG_HEADER_BYTES * 8 + 2 * m as u64 * 32);
+            accounting.record_uplink(
+                i,
+                MSG_HEADER_BYTES * 8 + 2 * m as u64 * INIT_BITS_PER_SCALAR,
+            );
         }
         let xhat: Vec<EstimateTracker> =
             (0..n).map(|_| EstimateTracker::new(x0.clone(), ef)).collect();
@@ -165,9 +193,12 @@ impl<'a> EventEngine<'a> {
         let xs: Vec<Vec<f64>> = xhat.iter().map(|t| t.estimate().to_vec()).collect();
         let us: Vec<Vec<f64>> = uhat.iter().map(|t| t.estimate().to_vec()).collect();
         let z = problem.consensus(&xs, &us)?;
-        accounting.record_broadcast(MSG_HEADER_BYTES * 8 + m as u64 * 32);
+        accounting.record_broadcast(MSG_HEADER_BYTES * 8 + m as u64 * INIT_BITS_PER_SCALAR);
         let zhat = EstimateTracker::new(z.clone(), ef);
 
+        // Every node's mirror starts at the full-precision z⁰ it received
+        // in the (synchronous) init broadcast.
+        let z_mirror = vec![z.clone(); n];
         let oracle = AsyncOracle::new(n, cfg.oracle, &mut rngs.oracle);
         let mut qroot = rngs.quant;
         let node_quant: Vec<Pcg64> = (0..n).map(|i| qroot.fork(i as u64)).collect();
@@ -185,6 +216,10 @@ impl<'a> EventEngine<'a> {
             xhat,
             uhat,
             zhat,
+            z_mirror,
+            downlink_inbox: (0..n).map(|_| VecDeque::new()).collect(),
+            downlink_last: vec![0.0; n],
+            pending_dispatch: Vec::new(),
             arrived: BTreeSet::new(),
             busy: vec![false; n],
             in_flight: (0..n).map(|_| None).collect(),
@@ -196,7 +231,7 @@ impl<'a> EventEngine<'a> {
             accounting,
             queue: EventQueue::new(),
             server_quant,
-            latency: per_node_latencies(cfg.latency, n),
+            links: per_node_profiles(cfg.link, n),
             // per-trial stream: MC trials must be independent replicates
             // over network randomness, not replays of one delay sequence
             rng_latency: rngs.latency,
@@ -220,6 +255,15 @@ impl<'a> EventEngine<'a> {
     /// the event-driven analogue of [`super::sim::AsyncSim::step`].
     pub fn step_round(&mut self) -> anyhow::Result<()> {
         loop {
+            // Flush local updates born in the instant just drained: every
+            // node whose downlink landed here (with a dispatch flag) runs
+            // in one batch, so uniform delays keep the worker-pool fan-out
+            // of the zero-latency timeline.
+            if !self.pending_dispatch.is_empty() {
+                let mut nodes = std::mem::take(&mut self.pending_dispatch);
+                nodes.sort_unstable();
+                self.dispatch(&nodes)?;
+            }
             if self.trigger_satisfied() {
                 return self.fire();
             }
@@ -266,7 +310,7 @@ impl<'a> EventEngine<'a> {
                     .as_ref()
                     .ok_or_else(|| anyhow::anyhow!("ComputeDone without outbox (node {node})"))?;
                 self.accounting.record_uplink(node, msg.bits);
-                let delay = self.latency[node].sample(&mut self.rng_latency);
+                let delay = self.links[node].sample_uplink(&mut self.rng_latency);
                 self.queue.push(self.vtime + delay, EventKind::MsgArrive { node });
             }
             EventKind::MsgArrive { node } => {
@@ -279,13 +323,25 @@ impl<'a> EventEngine<'a> {
                 self.arrived.insert(node);
                 self.busy[node] = false;
             }
+            EventKind::DownlinkArrive { node } => {
+                let pkt = self.downlink_inbox[node].pop_front().ok_or_else(|| {
+                    anyhow::anyhow!("DownlinkArrive with empty inbox (node {node})")
+                })?;
+                for (zm, d) in self.z_mirror[node].iter_mut().zip(pkt.dz.iter()) {
+                    *zm += d;
+                }
+                if pkt.dispatch {
+                    self.pending_dispatch.push(node);
+                }
+            }
         }
         Ok(())
     }
 
     /// One consensus round: mirrors `AsyncSim::step`'s server phase —
     /// consensus, compressed broadcast, scheduler advance, eval — then
-    /// dispatches the next selection.
+    /// puts the broadcast (with the next selection's dispatch flags) on
+    /// every node's downlink.
     fn fire(&mut self) -> anyhow::Result<()> {
         let batch = self.arrived.len();
         debug_assert!(batch >= self.cfg.p_min);
@@ -302,6 +358,9 @@ impl<'a> EventEngine<'a> {
         let cz = self.compressor.compress(&dz, &mut self.server_quant);
         self.accounting.record_broadcast(MSG_HEADER_BYTES * 8 + cz.wire_bits());
         self.zhat.commit(&cz.dequantized);
+        // One shared payload for all n downlinks; the node mirrors commit
+        // it when their DownlinkArrive fires, not here.
+        let dz_payload = Arc::new(cz.dequantized);
 
         let arrived_mask: Vec<bool> = (0..self.n).map(|i| self.arrived.contains(&i)).collect();
         let next = self
@@ -310,7 +369,8 @@ impl<'a> EventEngine<'a> {
         self.arrived.clear();
         self.stats.rounds += 1;
         self.stats.virtual_time = self.vtime;
-        self.stats.min_arrivals = self.stats.min_arrivals.min(batch);
+        self.stats.min_arrivals =
+            Some(self.stats.min_arrivals.map_or(batch, |prev| prev.min(batch)));
         let max_d = self.scheduler.staleness().iter().copied().max().unwrap_or(0);
         self.stats.max_staleness = self.stats.max_staleness.max(max_d);
         debug_assert!(max_d + 1 <= self.cfg.tau, "staleness bound violated: {max_d}");
@@ -332,43 +392,71 @@ impl<'a> EventEngine<'a> {
             });
         }
 
-        let to_dispatch: Vec<usize> =
-            (0..self.n).filter(|&i| next[i] && !self.busy[i]).collect();
-        self.dispatch(&to_dispatch)
+        // Put the broadcast on every downlink. A selected idle node is
+        // marked busy *now* (it cannot be re-selected while the broadcast
+        // is in transit) but starts computing only when its DownlinkArrive
+        // fires and its mirror has caught up.
+        for i in 0..self.n {
+            let dispatch = next[i] && !self.busy[i];
+            if dispatch {
+                self.busy[i] = true;
+            }
+            self.downlink_inbox[i]
+                .push_back(DownlinkPacket { dz: Arc::clone(&dz_payload), dispatch });
+            let delay = self.links[i].sample_downlink(&mut self.rng_latency);
+            let at = (self.vtime + delay).max(self.downlink_last[i]);
+            self.downlink_last[i] = at;
+            self.queue.push(at, EventKind::DownlinkArrive { node: i });
+        }
+        Ok(())
     }
 
-    /// Fan the local updates of `nodes` out through the problem's batch
-    /// hook (worker-pool parallel where supported), apply the primal/dual
-    /// updates in node order, compress with per-node RNG forks, and put
-    /// the messages on the virtual wire.
+    /// Fan the local updates of `nodes` (ascending) out through the
+    /// problem's batch hook (worker-pool parallel where supported), each
+    /// item reading the node's own ẑ **mirror** — never the server's
+    /// `zhat`, which may be ahead of what this node has received — apply
+    /// the primal/dual updates in node order, compress with per-node RNG
+    /// forks, and put the messages on the virtual wire.
     fn dispatch(&mut self, nodes: &[usize]) -> anyhow::Result<()> {
         if nodes.is_empty() {
             return Ok(());
         }
-        let zhat_view = self.zhat.estimate().to_vec();
         let results = {
             let u = &self.u;
             let x = &self.x;
+            let zm = &self.z_mirror;
             let mut items: Vec<LocalUpdateItem<'_>> = Vec::with_capacity(nodes.len());
-            let mut want = nodes.iter().copied().peekable();
-            for (i, rng) in self.node_batch.iter_mut().enumerate() {
-                if want.peek() == Some(&i) {
-                    want.next();
-                    items.push(LocalUpdateItem { node: i, u: &u[i], x_prev: &x[i], rng });
-                }
+            // O(|nodes|) carve-out of the per-node RNG forks (split_at_mut
+            // is pointer arithmetic): with fragmented downlink arrivals a
+            // round can flush n single-node batches, so an O(n) scan per
+            // flush would make the round quadratic in n.
+            let mut rest: &mut [Pcg64] = &mut self.node_batch;
+            let mut offset = 0usize;
+            for &i in nodes {
+                let (_, tail) = rest.split_at_mut(i - offset);
+                let (rng, tail) = tail.split_first_mut().expect("node id out of range");
+                items.push(LocalUpdateItem {
+                    node: i,
+                    zhat: &zm[i],
+                    u: &u[i],
+                    x_prev: &x[i],
+                    rng,
+                });
+                rest = tail;
+                offset = i + 1;
             }
-            self.problem.local_update_batch(&zhat_view, &mut items)?
+            self.problem.local_update_batch(&mut items)?
         };
         anyhow::ensure!(results.len() == nodes.len(), "batch result count mismatch");
         for (&node, (x_new, loss)) in nodes.iter().zip(results) {
             anyhow::ensure!(x_new.len() == self.m, "local_update wrong dim");
-            // eq. (9b): u ← u + (x_new − ẑ)
+            // eq. (9b): u ← u + (x_new − ẑᵢ), against the node's mirror
             for j in 0..self.m {
-                self.u[node][j] += x_new[j] - zhat_view[j];
+                self.u[node][j] += x_new[j] - self.z_mirror[node][j];
             }
             self.x[node] = x_new;
-            // eqs. (10)–(14): compress deltas against the node's mirror
-            // (== the server bank: its previous update has already landed)
+            // eqs. (10)–(14): compress deltas against the node's estimate
+            // bank (== the server bank: its previous update has landed)
             let dx = self.xhat[node].make_delta(&self.x[node]);
             let du = self.uhat[node].make_delta(&self.u[node]);
             let cx = self.compressor.compress(&dx, &mut self.node_quant[node]);
@@ -378,7 +466,7 @@ impl<'a> EventEngine<'a> {
                 Some(InFlightMsg { dx: cx.dequantized, du: cu.dequantized, bits, loss });
             self.busy[node] = true;
             self.stats.dispatches += 1;
-            let delay = self.latency[node].sample(&mut self.rng_latency);
+            let delay = self.links[node].sample_compute(&mut self.rng_latency);
             self.queue.push(self.vtime + delay, EventKind::ComputeDone { node });
         }
         Ok(())
@@ -415,5 +503,16 @@ impl<'a> EventEngine<'a> {
 
     pub fn staleness(&self) -> &[usize] {
         self.scheduler.staleness()
+    }
+
+    /// Node `i`'s current view of ẑ (advances only on downlink arrival).
+    pub fn z_mirror(&self, node: usize) -> &[f64] {
+        &self.z_mirror[node]
+    }
+
+    /// The server's own ẑ estimate (what the mirrors converge to once
+    /// every broadcast has landed).
+    pub fn z_estimate(&self) -> &[f64] {
+        self.zhat.estimate()
     }
 }

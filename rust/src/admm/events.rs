@@ -17,6 +17,10 @@ pub enum EventKind {
     ComputeDone { node: usize },
     /// Node's compressed update arrived at the server.
     MsgArrive { node: usize },
+    /// The server's compressed Δz broadcast reached this node's ẑ mirror
+    /// (payloads ride a per-node FIFO inbox; arrival times are clamped
+    /// monotone per link, so broadcasts never overtake each other).
+    DownlinkArrive { node: usize },
 }
 
 /// One scheduled event. Ordered by `(time, seq)` with `f64::total_cmp`,

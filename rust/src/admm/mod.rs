@@ -8,7 +8,9 @@
 //! * [`sim`] — the deterministic sequential simulator executing Algorithm 1
 //!   verbatim (the reproducible path behind every figure).
 //! * [`events`] / [`engine`] — the event-driven virtual-time engine: a
-//!   binary-heap timeline of per-node `ComputeDone` / `MsgArrive` events.
+//!   binary-heap timeline of per-node `ComputeDone` / `MsgArrive` /
+//!   `DownlinkArrive` events, with per-node ẑ mirrors that advance only
+//!   when the server's broadcast lands on that node's downlink.
 //! * [`runner`] — the Monte-Carlo trial harness and series averaging.
 //!
 //! # Choosing an engine
@@ -19,12 +21,12 @@
 //! | engine | module | use when |
 //! |---|---|---|
 //! | `seq` | [`sim`] | regenerating figures: lockstep rounds, one shared RNG stream per concern, the bit-exact reference |
-//! | `event` | [`engine`] | studying asynchrony at scale: per-node compute/network delays in *virtual* seconds, P-arrival trigger, τ−1 force-wait, worker-pool fan-out — 1000+ nodes in milliseconds of wall time |
-//! | `threaded` | [`crate::coordinator`] | exercising the deployment shape: real server/node threads over accounted channels, injected `thread::sleep` latency, fault injection |
+//! | `event` | [`engine`] | studying asynchrony at scale: per-link compute/uplink/downlink delays + clock drift in *virtual* seconds ([`crate::comm::profile::LinkProfile`]), P-arrival trigger, τ−1 force-wait, worker-pool fan-out — 1000+ nodes in milliseconds of wall time |
+//! | `threaded` | [`crate::coordinator`] | exercising the deployment shape: real server/node threads over accounted channels, injected `thread::sleep` per-link latency, fault injection |
 //!
-//! `event` with zero latency and the identity compressor reproduces `seq`
-//! bit-for-bit (`tests/engine_parity.rs` enforces it), so results migrate
-//! between the two without re-validation.
+//! `event` with zero delay on every link leg and the identity compressor
+//! reproduces `seq` bit-for-bit (`tests/engine_parity.rs` enforces it), so
+//! results migrate between the two without re-validation.
 
 pub mod engine;
 pub mod events;

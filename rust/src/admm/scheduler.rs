@@ -51,23 +51,33 @@ impl Scheduler {
         // P-threshold: |A_{r+1}| ≥ P (merge further oracle draws, i.e. the
         // server waits longer so more nodes complete). A pathological
         // oracle that never selects anyone is broken out of by forcing the
-        // stalest nodes — the server just waits for them.
+        // stalest nodes — the server just waits for them. A running active
+        // count (updated on each false→true flip) replaces the full recount
+        // per attempt and per forced node, which was O(n²) and dominated
+        // `advance` at n ≥ 4096 under sparse oracles.
+        let mut active = next.iter().filter(|&&a| a).count();
         let mut attempts = 0usize;
-        while next.iter().filter(|&&a| a).count() < self.p_min {
+        while active < self.p_min {
             attempts += 1;
             if attempts > 1000 {
                 let mut order: Vec<usize> = (0..n).collect();
                 order.sort_by_key(|&i| std::cmp::Reverse(self.d[i]));
                 for &i in &order {
-                    if next.iter().filter(|&&a| a).count() >= self.p_min {
+                    if active >= self.p_min {
                         break;
                     }
-                    next[i] = true;
+                    if !next[i] {
+                        next[i] = true;
+                        active += 1;
+                    }
                 }
                 break;
             }
             for (dst, extra) in next.iter_mut().zip(oracle()) {
-                *dst |= extra;
+                if extra && !*dst {
+                    *dst = true;
+                    active += 1;
+                }
             }
         }
         next
@@ -131,6 +141,30 @@ mod tests {
         });
         assert!(next.iter().filter(|&&a| a).count() >= 3);
         assert!(calls >= 3);
+    }
+
+    /// The worst case for the P-threshold loop: a huge population whose
+    /// oracle never selects anyone, so the 1000-attempt merge runs dry and
+    /// the stalest-first forcing has to fill the entire batch. With the
+    /// running count this is O(attempts·n + n log n); the old per-attempt
+    /// recount made it O(n²) and visibly hung at this size.
+    #[test]
+    fn never_selecting_oracle_at_4096_nodes_fills_p_quickly() {
+        let n = 4096;
+        let mut s = Scheduler::new(n, 2, n);
+        let start = std::time::Instant::now();
+        let next = s.advance(&vec![true; n], || vec![false; n]);
+        assert_eq!(next.iter().filter(|&&a| a).count(), n);
+        // generous bound: the whole call is a few million boolean ops
+        assert!(
+            start.elapsed() < std::time::Duration::from_secs(5),
+            "P-threshold loop took {:?}",
+            start.elapsed()
+        );
+        // and a partial fill stops exactly at P
+        let mut s = Scheduler::new(n, 2, 7);
+        let next = s.advance(&vec![true; n], || vec![false; n]);
+        assert_eq!(next.iter().filter(|&&a| a).count(), 7);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! paper's figures make.
 
 use crate::comm::accounting::CommAccounting;
-use crate::comm::message::MSG_HEADER_BYTES;
+use crate::comm::message::{INIT_BITS_PER_SCALAR, MSG_HEADER_BYTES};
 use crate::compress::error_feedback::EstimateTracker;
 use crate::compress::Compressor;
 use crate::config::ExperimentConfig;
@@ -93,7 +93,10 @@ impl<'a> AsyncSim<'a> {
         // lines 1–4: nodes transmit x⁰, u⁰ at full precision, charged at the
         // paper's stated rate ("e.g., 32-bits per scalar")
         for i in 0..n {
-            accounting.record_uplink(i, MSG_HEADER_BYTES * 8 + 2 * m as u64 * 32);
+            accounting.record_uplink(
+                i,
+                MSG_HEADER_BYTES * 8 + 2 * m as u64 * INIT_BITS_PER_SCALAR,
+            );
         }
         let xhat: Vec<EstimateTracker> =
             (0..n).map(|_| EstimateTracker::new(x0.clone(), ef)).collect();
@@ -104,7 +107,7 @@ impl<'a> AsyncSim<'a> {
         let xs: Vec<Vec<f64>> = xhat.iter().map(|t| t.estimate().to_vec()).collect();
         let us: Vec<Vec<f64>> = uhat.iter().map(|t| t.estimate().to_vec()).collect();
         let z = problem.consensus(&xs, &us)?;
-        accounting.record_broadcast(MSG_HEADER_BYTES * 8 + m as u64 * 32);
+        accounting.record_broadcast(MSG_HEADER_BYTES * 8 + m as u64 * INIT_BITS_PER_SCALAR);
         let zhat = EstimateTracker::new(z.clone(), ef);
 
         let oracle = AsyncOracle::new(n, cfg.oracle, &mut rngs.oracle);

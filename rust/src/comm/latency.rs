@@ -1,6 +1,10 @@
-//! Latency models for the threaded runtime: per-node compute/transmit
-//! delays that reproduce the heterogeneous-network conditions (stragglers)
-//! that motivate asynchronous ADMM.
+//! Latency models: per-node delay distributions that reproduce the
+//! heterogeneous-network conditions (stragglers) that motivate
+//! asynchronous ADMM. One [`LatencyModel`] describes a single delay
+//! source; [`super::profile::LinkProfile`] composes three of them
+//! (compute, uplink, downlink) plus a clock-drift factor into the full
+//! per-link decomposition used by both the event engine and the threaded
+//! runtime.
 
 use crate::util::rng::Pcg64;
 
@@ -41,6 +45,54 @@ impl LatencyModel {
             LatencyModel::Mixture { fast, slow, p_slow } => {
                 fast * (1.0 - p_slow) + slow * p_slow
             }
+        }
+    }
+
+    /// Compact textual form (CLI / config JSON): `none`, `const:S`,
+    /// `exp:MEAN`, `mix:FAST,SLOW,P_SLOW`.
+    pub fn label(&self) -> String {
+        match *self {
+            LatencyModel::None => "none".into(),
+            LatencyModel::Const(s) => format!("const:{s}"),
+            LatencyModel::Exp(mean) => format!("exp:{mean}"),
+            LatencyModel::Mixture { fast, slow, p_slow } => {
+                format!("mix:{fast},{slow},{p_slow}")
+            }
+        }
+    }
+
+    /// Inverse of [`Self::label`].
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let bad_num =
+            |v: &str| anyhow::anyhow!("latency model: '{v}' is not a number (in '{s}')");
+        if s == "none" {
+            return Ok(LatencyModel::None);
+        }
+        let (kind, rest) = s.split_once(':').ok_or_else(|| {
+            anyhow::anyhow!("latency model '{s}': expected none|const:S|exp:MEAN|mix:FAST,SLOW,P")
+        })?;
+        let num = |v: &str| -> anyhow::Result<f64> {
+            let x: f64 = v.trim().parse().map_err(|_| bad_num(v))?;
+            anyhow::ensure!(
+                x.is_finite() && x >= 0.0,
+                "latency model '{s}': negative or non-finite value"
+            );
+            Ok(x)
+        };
+        match kind {
+            "const" => Ok(LatencyModel::Const(num(rest)?)),
+            "exp" => Ok(LatencyModel::Exp(num(rest)?)),
+            "mix" => {
+                let parts: Vec<&str> = rest.split(',').collect();
+                anyhow::ensure!(
+                    parts.len() == 3,
+                    "latency model '{s}': mix needs FAST,SLOW,P_SLOW"
+                );
+                let p_slow = num(parts[2])?;
+                anyhow::ensure!(p_slow <= 1.0, "latency model '{s}': p_slow must be in [0,1]");
+                Ok(LatencyModel::Mixture { fast: num(parts[0])?, slow: num(parts[1])?, p_slow })
+            }
+            other => anyhow::bail!("unknown latency model kind '{other}' (none|const|exp|mix)"),
         }
     }
 }
@@ -110,6 +162,23 @@ mod tests {
                 model.mean()
             );
         }
+    }
+
+    #[test]
+    fn label_parse_roundtrips() {
+        for model in [
+            LatencyModel::None,
+            LatencyModel::Const(0.25),
+            LatencyModel::Exp(0.01),
+            LatencyModel::Mixture { fast: 0.002, slow: 0.25, p_slow: 0.15 },
+        ] {
+            assert_eq!(LatencyModel::parse(&model.label()).unwrap(), model);
+        }
+        assert!(LatencyModel::parse("warp:1").is_err());
+        assert!(LatencyModel::parse("const:abc").is_err());
+        assert!(LatencyModel::parse("exp:-1").is_err());
+        assert!(LatencyModel::parse("mix:0.1,0.2").is_err());
+        assert!(LatencyModel::parse("mix:0.1,0.2,1.5").is_err());
     }
 
     #[test]

@@ -8,6 +8,14 @@
 /// matching what a compact real framing would carry.
 pub const MSG_HEADER_BYTES: u64 = 12;
 
+/// Bits charged per scalar of the full-precision initial exchange
+/// (Algorithm 1 lines 1–8), the paper's stated rate ("e.g., 32-bits per
+/// scalar"). Every runtime — sequential simulator, event engine, and the
+/// threaded coordinator (which accounts via [`NodeToServer::wire_bits`] /
+/// [`ServerToNode::wire_bits`]) — must charge the init exchange at this
+/// one rate so their comm-bit curves start from the same offset.
+pub const INIT_BITS_PER_SCALAR: u64 = 32;
+
 #[derive(Clone, Debug)]
 pub enum NodeToServer {
     /// Quantized (or dense, for the baseline) uplink: C(Δx), C(Δu).
@@ -31,7 +39,7 @@ impl NodeToServer {
                 MSG_HEADER_BYTES * 8 + (dx_wire.len() + du_wire.len()) as u64 * 8
             }
             NodeToServer::InitFull { x0, u0, .. } => {
-                MSG_HEADER_BYTES * 8 + (x0.len() + u0.len()) as u64 * 64
+                MSG_HEADER_BYTES * 8 + (x0.len() + u0.len()) as u64 * INIT_BITS_PER_SCALAR
             }
         }
     }
@@ -69,7 +77,9 @@ impl ServerToNode {
                 (MSG_HEADER_BYTES + 4 + 4 * included.len() as u64) * 8
                     + dz_wire.len() as u64 * 8
             }
-            ServerToNode::InitZ { z0 } => MSG_HEADER_BYTES * 8 + z0.len() as u64 * 64,
+            ServerToNode::InitZ { z0 } => {
+                MSG_HEADER_BYTES * 8 + z0.len() as u64 * INIT_BITS_PER_SCALAR
+            }
             ServerToNode::Shutdown => MSG_HEADER_BYTES * 8,
         }
     }
@@ -92,10 +102,13 @@ mod tests {
     }
 
     #[test]
-    fn init_counts_full_precision() {
+    fn init_charged_at_the_papers_32_bit_rate() {
         let m = NodeToServer::InitFull { node: 2, x0: vec![0.0; 5], u0: vec![0.0; 5] };
-        assert_eq!(m.wire_bits(), 12 * 8 + 10 * 64);
+        assert_eq!(m.wire_bits(), 12 * 8 + 10 * INIT_BITS_PER_SCALAR);
+        assert_eq!(m.wire_bits(), 12 * 8 + 10 * 32);
         assert_eq!(m.node(), 2);
+        let z = ServerToNode::InitZ { z0: vec![0.0; 7] };
+        assert_eq!(z.wire_bits(), 12 * 8 + 7 * 32);
     }
 
     #[test]

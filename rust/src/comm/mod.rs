@@ -1,8 +1,11 @@
 //! Simulated star-topology network: messages, per-link bit accounting
-//! (the paper's communication metric, eq. 20), latency models for the
-//! threaded runtime, and failure injection (duplicates / stragglers).
+//! (the paper's communication metric, eq. 20), per-link latency
+//! decomposition (compute/uplink/downlink + clock drift) shared by the
+//! event engine and the threaded runtime, and failure injection
+//! (duplicates / stragglers).
 
 pub mod accounting;
 pub mod latency;
 pub mod message;
 pub mod network;
+pub mod profile;

@@ -1,15 +1,16 @@
 //! Thread-backed star network for the deployed (non-simulated) runtime:
-//! std::sync::mpsc channels wrapped with bit accounting, optional injected
-//! latency, duplicate injection (failure testing) and sequence-number
-//! deduplication at the receiver.
+//! std::sync::mpsc channels wrapped with bit accounting, injected per-link
+//! latency (uplink sleeps on send, downlink sleeps on delivery, compute
+//! sleeps via [`NodeEndpoint::inject_compute_delay`]), duplicate injection
+//! (failure testing) and sequence-number deduplication at the receiver.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use super::accounting::CommAccounting;
-use super::latency::LatencyModel;
 use super::message::{NodeToServer, ServerToNode};
+use super::profile::LinkProfile;
 use crate::util::rng::Pcg64;
 
 /// Fault-injection knobs for a link (per direction).
@@ -28,14 +29,14 @@ pub struct NodeEndpoint {
     to_server: Sender<NodeToServer>,
     from_server: Receiver<ServerToNode>,
     accounting: SharedAccounting,
-    latency: LatencyModel,
+    profile: LinkProfile,
     faults: FaultSpec,
     rng: Pcg64,
     seq: u64,
 }
 
 impl NodeEndpoint {
-    /// Send with accounting + injected latency + optional duplication.
+    /// Send with accounting + injected uplink latency + optional duplication.
     pub fn send(&mut self, mut msg: NodeToServer) -> anyhow::Result<()> {
         if let NodeToServer::Update { seq, .. } = &mut msg {
             *seq = self.seq;
@@ -43,7 +44,7 @@ impl NodeEndpoint {
         }
         let bits = msg.wire_bits();
         self.accounting.lock().unwrap().record_uplink(self.node, bits);
-        let delay = self.latency.sample(&mut self.rng);
+        let delay = self.profile.sample_uplink(&mut self.rng);
         if delay > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(delay));
         }
@@ -55,13 +56,32 @@ impl NodeEndpoint {
         self.to_server.send(msg).map_err(|_| anyhow::anyhow!("server hung up"))
     }
 
-    pub fn recv(&self) -> anyhow::Result<ServerToNode> {
-        self.from_server.recv().map_err(|_| anyhow::anyhow!("server hung up"))
+    /// Blocking receive; the downlink transit of the delivered message is
+    /// injected here, on the receiving side, so a slow downlink delays this
+    /// node without stalling the server's broadcast loop.
+    pub fn recv(&mut self) -> anyhow::Result<ServerToNode> {
+        let msg =
+            self.from_server.recv().map_err(|_| anyhow::anyhow!("server hung up"))?;
+        let delay = self.profile.sample_downlink(&mut self.rng);
+        if delay > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(delay));
+        }
+        Ok(msg)
     }
 
-    /// Non-blocking receive (backlog draining for stragglers).
+    /// Non-blocking receive (backlog draining for stragglers — the backlog
+    /// is already late, so no additional downlink sleep is injected).
     pub fn try_recv(&self) -> Option<ServerToNode> {
         self.from_server.try_recv().ok()
+    }
+
+    /// Injected local-compute time, scaled by the node's clock drift
+    /// (called by the worker after each local update).
+    pub fn inject_compute_delay(&mut self) {
+        let delay = self.profile.sample_compute(&mut self.rng);
+        if delay > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(delay));
+        }
     }
 }
 
@@ -142,14 +162,15 @@ impl ServerEndpoint {
     }
 }
 
-/// Build a star network: one server endpoint + N node endpoints.
+/// Build a star network: one server endpoint + N node endpoints, each
+/// with its own per-link [`LinkProfile`].
 pub fn star(
     n_nodes: usize,
-    latencies: &[LatencyModel],
+    profiles: &[LinkProfile],
     faults: FaultSpec,
     seed: u64,
 ) -> (ServerEndpoint, Vec<NodeEndpoint>, SharedAccounting) {
-    assert_eq!(latencies.len(), n_nodes);
+    assert_eq!(profiles.len(), n_nodes);
     let accounting: SharedAccounting = Arc::new(Mutex::new(CommAccounting::new(n_nodes)));
     let (up_tx, up_rx) = channel::<NodeToServer>();
     let mut to_nodes = Vec::with_capacity(n_nodes);
@@ -163,7 +184,7 @@ pub fn star(
             to_server: up_tx.clone(),
             from_server: down_rx,
             accounting: accounting.clone(),
-            latency: latencies[node],
+            profile: profiles[node],
             faults,
             rng: root.fork(node as u64),
             seq: 0,
@@ -189,7 +210,7 @@ mod tests {
     #[test]
     fn roundtrip_with_accounting() {
         let (mut server, mut nodes, acc) =
-            star(2, &[LatencyModel::None; 2], FaultSpec::default(), 1);
+            star(2, &[LinkProfile::none(); 2], FaultSpec::default(), 1);
         nodes[0].send(update(0, 0)).unwrap();
         nodes[1].send(update(1, 0)).unwrap();
         for _ in 0..2 {
@@ -215,7 +236,7 @@ mod tests {
     fn duplicates_are_suppressed() {
         let (mut server, mut nodes, _acc) = star(
             1,
-            &[LatencyModel::None],
+            &[LinkProfile::none()],
             FaultSpec { dup_prob: 1.0 }, // every message duplicated
             2,
         );
@@ -240,7 +261,7 @@ mod tests {
     #[test]
     fn recv_timeout_times_out() {
         let (mut server, _nodes, _acc) =
-            star(1, &[LatencyModel::None], FaultSpec::default(), 3);
+            star(1, &[LinkProfile::none()], FaultSpec::default(), 3);
         let got = server.recv_timeout(Duration::from_millis(20)).unwrap();
         assert!(got.is_none());
     }

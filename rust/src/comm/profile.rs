@@ -1,0 +1,236 @@
+//! Per-link latency decomposition (the paper's Fig. 2 asynchrony model).
+//!
+//! A node's round trip is staled by *three* independent delay sources, not
+//! one: the local compute time, the uplink transit of its compressed
+//! update, and the downlink transit of the server's ẑ broadcast. The seed
+//! engines collapsed all of these into a single per-node [`LatencyModel`]
+//! (and delivered the broadcast instantaneously), which understates the
+//! staleness the τ bound has to absorb. This module splits the link into
+//! its legs:
+//!
+//! * [`LinkConfig`] — the population-level specification carried by
+//!   [`crate::config::ExperimentConfig`]: one base model per leg plus a
+//!   clock-drift amplitude.
+//! * [`LinkProfile`] — one node's realized link after heterogeneity is
+//!   applied (odd-indexed nodes are 4× slower per leg, mirroring
+//!   [`per_node_latencies`]) with the node's resolved clock-rate factor.
+//!
+//! Clock drift models unsynchronized node clocks: node i's local compute
+//! clock runs at rate `1 + ε·spread(i)` with `spread` deterministically
+//! spaced over [−1, 1], so nominal compute duration D takes `D / rate`
+//! server-seconds — a slow-clocked node (rate < 1) stretches its compute
+//! time, a fast one shrinks it. Drift scales *compute* only — wire
+//! transit is measured on the server's clock. With every leg `None` the
+//! profile is exactly the zero-latency parity configuration: drift
+//! divides a 0.0 sample and the engine timeline collapses onto the
+//! sequential simulator.
+
+use super::latency::{per_node_latencies, LatencyModel};
+use crate::util::rng::Pcg64;
+
+/// Population-level link specification (one per experiment).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkConfig {
+    /// Local update duration.
+    pub compute: LatencyModel,
+    /// Node → server transit of the compressed (Δx, Δu) frame.
+    pub uplink: LatencyModel,
+    /// Server → node transit of the compressed Δz broadcast.
+    pub downlink: LatencyModel,
+    /// Maximum relative clock-rate skew ε ∈ [0, 1): node rates are spread
+    /// deterministically over [1−ε, 1+ε]. 0.0 = perfectly synchronized.
+    pub clock_drift: f64,
+}
+
+impl LinkConfig {
+    /// Zero delay on every leg, no drift (the parity configuration).
+    pub const fn none() -> Self {
+        Self {
+            compute: LatencyModel::None,
+            uplink: LatencyModel::None,
+            downlink: LatencyModel::None,
+            clock_drift: 0.0,
+        }
+    }
+
+    /// The seed engines' shape: one model drawn for compute and again for
+    /// uplink, instantaneous downlink. Kept for sweeps that predate the
+    /// decomposition.
+    pub const fn symmetric(model: LatencyModel) -> Self {
+        Self {
+            compute: model,
+            uplink: model,
+            downlink: LatencyModel::None,
+            clock_drift: 0.0,
+        }
+    }
+
+    /// Delay on the uplink only (the seed threaded runtime's shape, where
+    /// the injected sleep lived in `NodeEndpoint::send`).
+    pub const fn uplink_only(model: LatencyModel) -> Self {
+        Self {
+            compute: LatencyModel::None,
+            uplink: model,
+            downlink: LatencyModel::None,
+            clock_drift: 0.0,
+        }
+    }
+
+    /// True iff no leg can ever delay anything (drift is then irrelevant:
+    /// it multiplies 0.0 samples).
+    pub fn is_zero(&self) -> bool {
+        self.compute == LatencyModel::None
+            && self.uplink == LatencyModel::None
+            && self.downlink == LatencyModel::None
+    }
+}
+
+impl Default for LinkConfig {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+/// One node's realized link: per-leg delay models plus the node's local
+/// clock rate relative to the server's (1.0 = perfectly synchronized).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkProfile {
+    pub compute: LatencyModel,
+    pub uplink: LatencyModel,
+    pub downlink: LatencyModel,
+    pub clock_drift: f64,
+}
+
+impl LinkProfile {
+    /// Zero delay on every leg at nominal clock rate.
+    pub const fn none() -> Self {
+        Self {
+            compute: LatencyModel::None,
+            uplink: LatencyModel::None,
+            downlink: LatencyModel::None,
+            clock_drift: 1.0,
+        }
+    }
+
+    /// Local update duration *as seen by the server's clock*: work of
+    /// nominal duration D on a clock running at rate r completes in D / r
+    /// server-seconds, so a fast-clocked node (r > 1) finishes sooner.
+    pub fn sample_compute(&self, rng: &mut Pcg64) -> f64 {
+        self.compute.sample(rng) / self.clock_drift
+    }
+
+    pub fn sample_uplink(&self, rng: &mut Pcg64) -> f64 {
+        self.uplink.sample(rng)
+    }
+
+    pub fn sample_downlink(&self, rng: &mut Pcg64) -> f64 {
+        self.downlink.sample(rng)
+    }
+
+    /// Expected dispatch→arrival time (analytic estimates in benches).
+    pub fn mean_round_trip(&self) -> f64 {
+        self.compute.mean() / self.clock_drift + self.uplink.mean() + self.downlink.mean()
+    }
+}
+
+/// Deterministic drift spread over [−1, 1] (node 0 slowest-clocked, node
+/// n−1 fastest): heterogeneous but reproducible, like the odd-node
+/// latency slowdown.
+fn drift_spread(i: usize, n: usize) -> f64 {
+    if n <= 1 {
+        0.0
+    } else {
+        2.0 * (i as f64) / ((n - 1) as f64) - 1.0
+    }
+}
+
+/// Realize per-node profiles from one population spec: each leg goes
+/// through [`per_node_latencies`] (odd-indexed nodes 4× slower), and the
+/// drift amplitude resolves to a per-node clock-rate factor.
+pub fn per_node_profiles(cfg: LinkConfig, n: usize) -> Vec<LinkProfile> {
+    let compute = per_node_latencies(cfg.compute, n);
+    let uplink = per_node_latencies(cfg.uplink, n);
+    let downlink = per_node_latencies(cfg.downlink, n);
+    (0..n)
+        .map(|i| LinkProfile {
+            compute: compute[i],
+            uplink: uplink[i],
+            downlink: downlink[i],
+            clock_drift: 1.0 + cfg.clock_drift * drift_spread(i, n),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_node_slows_odd_nodes_on_every_leg() {
+        let cfg = LinkConfig {
+            compute: LatencyModel::Const(0.1),
+            uplink: LatencyModel::Const(0.2),
+            downlink: LatencyModel::Const(0.3),
+            clock_drift: 0.0,
+        };
+        let p = per_node_profiles(cfg, 4);
+        assert_eq!(p[0].compute, LatencyModel::Const(0.1));
+        assert_eq!(p[1].compute, LatencyModel::Const(0.4));
+        assert_eq!(p[0].downlink, LatencyModel::Const(0.3));
+        assert_eq!(p[1].downlink, LatencyModel::Const(1.2));
+        assert!(p.iter().all(|q| q.clock_drift == 1.0));
+    }
+
+    #[test]
+    fn drift_spreads_over_unit_interval() {
+        let cfg = LinkConfig { clock_drift: 0.1, ..LinkConfig::none() };
+        let p = per_node_profiles(cfg, 5);
+        assert!((p[0].clock_drift - 0.9).abs() < 1e-12);
+        assert!((p[2].clock_drift - 1.0).abs() < 1e-12);
+        assert!((p[4].clock_drift - 1.1).abs() < 1e-12);
+        // a single node gets the nominal rate
+        assert_eq!(per_node_profiles(cfg, 1)[0].clock_drift, 1.0);
+    }
+
+    #[test]
+    fn drift_scales_compute_only() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let p = LinkProfile {
+            compute: LatencyModel::Const(2.0),
+            uplink: LatencyModel::Const(2.0),
+            downlink: LatencyModel::Const(2.0),
+            clock_drift: 2.0,
+        };
+        // a clock at rate 2 finishes nominal 2.0s of work in 1.0s
+        assert_eq!(p.sample_compute(&mut rng), 1.0);
+        assert_eq!(p.sample_uplink(&mut rng), 2.0);
+        assert_eq!(p.sample_downlink(&mut rng), 2.0);
+        assert_eq!(p.mean_round_trip(), 5.0);
+        // and a slow clock (rate 1/2) takes twice the nominal duration
+        let slow = LinkProfile { clock_drift: 0.5, ..p };
+        assert_eq!(slow.sample_compute(&mut rng), 4.0);
+    }
+
+    #[test]
+    fn zero_config_stays_zero_under_drift() {
+        let cfg = LinkConfig { clock_drift: 0.5, ..LinkConfig::none() };
+        assert!(cfg.is_zero());
+        let mut rng = Pcg64::seed_from_u64(2);
+        for p in per_node_profiles(cfg, 8) {
+            assert_eq!(p.sample_compute(&mut rng), 0.0);
+            assert_eq!(p.sample_downlink(&mut rng), 0.0);
+        }
+    }
+
+    #[test]
+    fn legacy_shapes() {
+        let s = LinkConfig::symmetric(LatencyModel::Exp(0.1));
+        assert_eq!(s.compute, LatencyModel::Exp(0.1));
+        assert_eq!(s.uplink, LatencyModel::Exp(0.1));
+        assert_eq!(s.downlink, LatencyModel::None);
+        let u = LinkConfig::uplink_only(LatencyModel::Const(0.2));
+        assert_eq!(u.compute, LatencyModel::None);
+        assert_eq!(u.uplink, LatencyModel::Const(0.2));
+        assert!(!u.is_zero());
+    }
+}

@@ -134,8 +134,12 @@ impl Compressor for Qsgd {
             let p = y.floor().min(s - 1.0);
             let frac = y - p;
             let lvl = p + (rng.uniform_f64() < frac) as u64 as f64;
-            // lvl == 0 whenever d == 0, so copysign covers the zero case
-            let signed = lvl.copysign(d);
+            // Zero levels must dequantize to +0.0 regardless of the input's
+            // sign bit: `lvl.copysign(d)` would emit −0.0 for a −0.0 input,
+            // diverging bitwise from compress_reference (whose sign branch
+            // tests `d < 0.0`, false for −0.0) and from the Pallas kernel —
+            // breaking the documented bit-exact twin claim.
+            let signed = if lvl == 0.0 { 0.0 } else { lvl.copysign(d) };
             dq[i] = norm * signed / s;
             // sign-magnitude field, identical to packing::pack_levels
             let field = (signed.is_sign_negative() && lvl > 0.0) as u64 | ((lvl as u64) << 1);
@@ -259,6 +263,30 @@ mod tests {
                 let z = vec![0.0; m];
                 assert_eq!(c.compress(&z, &mut r1).wire, c.compress_reference(&z, &mut r2).wire);
                 assert_eq!(r1.next_u64(), r2.next_u64());
+            }
+        }
+    }
+
+    /// Regression: a −0.0 input must produce +0.0 dequantized output on
+    /// the fused path, bit-identical to the reference path and the wire.
+    #[test]
+    fn negative_zero_input_is_bitwise_identical_to_reference() {
+        for q in [2u8, 3, 8] {
+            let c = Qsgd::new(q);
+            let delta = [1.5, -0.0, 0.0, -2.0, -0.0];
+            let a = c.compress(&delta, &mut Pcg64::seed_from_u64(17));
+            let b = c.compress_reference(&delta, &mut Pcg64::seed_from_u64(17));
+            assert_eq!(a.wire, b.wire, "q={q}");
+            for (i, (x, y)) in a.dequantized.iter().zip(&b.dequantized).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "q={q} elem {i}: {x} vs {y}");
+            }
+            // the −0.0 inputs dequantize to +0.0 exactly
+            assert_eq!(a.dequantized[1].to_bits(), 0.0f64.to_bits());
+            assert_eq!(a.dequantized[4].to_bits(), 0.0f64.to_bits());
+            // and the wire roundtrip agrees bitwise too
+            let decoded = c.decode(&a.wire, delta.len()).unwrap();
+            for (x, y) in decoded.iter().zip(&a.dequantized) {
+                assert_eq!(x.to_bits(), y.to_bits());
             }
         }
     }

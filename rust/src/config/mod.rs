@@ -6,7 +6,7 @@
 
 pub mod presets;
 
-use crate::comm::latency::LatencyModel;
+use crate::comm::profile::LinkConfig;
 use crate::compress::CompressorKind;
 use crate::util::json::Json;
 
@@ -120,10 +120,10 @@ pub struct ExperimentConfig {
     pub engine: EngineKind,
     /// Evaluate metrics every this many iterations (NN eval is expensive).
     pub eval_every: usize,
-    /// Per-node latency: injected sleeps for the threaded runtime, virtual
-    /// compute/network delays for the event engine (unused by the
-    /// sequential simulator).
-    pub latency: LatencyModel,
+    /// Per-link latency decomposition (compute / uplink / downlink legs +
+    /// clock drift): injected sleeps for the threaded runtime, virtual
+    /// delays for the event engine (unused by the sequential simulator).
+    pub link: LinkConfig,
 }
 
 impl ExperimentConfig {
@@ -149,6 +149,11 @@ impl ExperimentConfig {
         anyhow::ensure!(
             (0.0..=1.0).contains(&p_slow) && (0.0..=1.0).contains(&p_fast),
             "oracle probabilities must be in [0,1]"
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.link.clock_drift),
+            "clock_drift must be in [0,1) so drifted clock rates stay positive (got {})",
+            self.link.clock_drift
         );
         Ok(())
     }
@@ -214,6 +219,15 @@ impl ExperimentConfig {
             ),
             ("engine", Json::Str(self.engine.label().into())),
             ("eval_every", Json::Num(self.eval_every as f64)),
+            (
+                "link",
+                Json::obj(vec![
+                    ("compute", Json::Str(self.link.compute.label())),
+                    ("uplink", Json::Str(self.link.uplink.label())),
+                    ("downlink", Json::Str(self.link.downlink.label())),
+                    ("clock_drift", Json::Num(self.link.clock_drift)),
+                ]),
+            ),
         ])
     }
 }
@@ -253,6 +267,12 @@ mod tests {
         let mut c = presets::e2e_mlp();
         c.backend = Backend::Native;
         assert!(c.validate().is_err());
+        let mut c = base();
+        c.link.clock_drift = 1.0;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.link.clock_drift = -0.1;
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -274,6 +294,10 @@ mod tests {
         let j = base().to_json();
         assert_eq!(j.get("tau").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("engine").unwrap().as_str(), Some("seq"));
+        assert_eq!(
+            j.get("link").unwrap().get("downlink").unwrap().as_str(),
+            Some("none")
+        );
         assert_eq!(
             j.get("problem").unwrap().get("kind").unwrap().as_str(),
             Some("lasso")

@@ -2,6 +2,7 @@
 
 use super::{Backend, EngineKind, ExperimentConfig, OracleConfig, ProblemKind};
 use crate::comm::latency::LatencyModel;
+use crate::comm::profile::LinkConfig;
 use crate::compress::CompressorKind;
 
 /// Fig. 3: LASSO, (M, ρ, θ, N, H) = (200, 500, 0.1, 16, 100), q = 3,
@@ -22,7 +23,7 @@ pub fn fig3(tau: usize) -> ExperimentConfig {
         backend: Backend::Hlo,
         engine: EngineKind::Seq,
         eval_every: 1,
-        latency: LatencyModel::None,
+        link: LinkConfig::none(),
     }
 }
 
@@ -45,7 +46,7 @@ pub fn fig4() -> ExperimentConfig {
         backend: Backend::Hlo,
         engine: EngineKind::Seq,
         eval_every: 2,
-        latency: LatencyModel::None,
+        link: LinkConfig::none(),
     }
 }
 
@@ -74,7 +75,7 @@ pub fn ci_lasso() -> ExperimentConfig {
         backend: Backend::Native,
         engine: EngineKind::Seq,
         eval_every: 1,
-        latency: LatencyModel::None,
+        link: LinkConfig::none(),
     }
 }
 
@@ -94,7 +95,12 @@ pub fn e2e_mlp() -> ExperimentConfig {
         backend: Backend::Hlo,
         engine: EngineKind::Seq,
         eval_every: 5,
-        latency: LatencyModel::Mixture { fast: 0.0, slow: 0.004, p_slow: 0.2 },
+        // the seed runtime injected this on the uplink send only
+        link: LinkConfig::uplink_only(LatencyModel::Mixture {
+            fast: 0.0,
+            slow: 0.004,
+            p_slow: 0.2,
+        }),
     }
 }
 

@@ -14,8 +14,8 @@ pub mod server;
 
 use std::sync::{Arc, Mutex};
 
-use crate::comm::latency::{per_node_latencies, LatencyModel};
 use crate::comm::network::{self, FaultSpec};
+use crate::comm::profile::{per_node_profiles, LinkProfile};
 use crate::config::ExperimentConfig;
 use crate::metrics::RunRecorder;
 use crate::problems::Problem;
@@ -46,14 +46,15 @@ pub fn run_threaded(
     let mut root = Pcg64::seed_from_u64(cfg.seed ^ 0x7468_7265_6164);
     let mut init_rng = root.fork(100);
 
-    // Per-node latency: half the nodes are "slow" with 4x the configured
-    // latency, mirroring the heterogeneous-network motivation. (The old
-    // n ≤ 64 cap is gone: inclusion travels as a sparse id set, and node
-    // counts are bounded only by thread resources — virtual-time runs at
-    // 1000+ nodes belong to admm::engine.)
-    let latencies: Vec<LatencyModel> = per_node_latencies(cfg.latency, n);
+    // Per-node link profiles: half the nodes are "slow" with 4x the
+    // configured delay on every leg (compute / uplink / downlink) plus a
+    // deterministic clock-drift spread, mirroring the heterogeneous-network
+    // motivation. (The old n ≤ 64 cap is gone: inclusion travels as a
+    // sparse id set, and node counts are bounded only by thread resources —
+    // virtual-time runs at 1000+ nodes belong to admm::engine.)
+    let profiles: Vec<LinkProfile> = per_node_profiles(cfg.link, n);
 
-    let (server_ep, node_eps, accounting) = network::star(n, &latencies, faults, cfg.seed);
+    let (server_ep, node_eps, accounting) = network::star(n, &profiles, faults, cfg.seed);
     let shared: SharedProblem = Arc::new(Mutex::new(problem));
 
     // Initial state (Algorithm 1 lines 1–9) is assembled centrally and the

@@ -121,6 +121,9 @@ impl NodeWorker {
             let mut p = self.problem.lock().unwrap();
             p.local_update(self.ep.node, &zhat, &self.u, &self.x, &mut self.rng)?
         };
+        // Injected compute time (scaled by this node's clock drift),
+        // outside the problem lock so other nodes keep computing.
+        self.ep.inject_compute_delay();
         for j in 0..self.m {
             self.u[j] += x_new[j] - zhat[j];
         }

@@ -10,6 +10,7 @@
 
 use crate::admm::runner::{self, ProblemFactory};
 use crate::comm::latency::LatencyModel;
+use crate::comm::profile::LinkConfig;
 use crate::compress::CompressorKind;
 use crate::config::{presets, EngineKind, ExperimentConfig, ProblemKind};
 use crate::metrics::summary;
@@ -159,19 +160,32 @@ pub fn sweep_async(opts: &AblationOptions) -> anyhow::Result<Vec<AblationRow>> {
 /// Execution-engine sweep: the sequential simulator vs the event-driven
 /// virtual-time engine. At zero latency the two rows must be *identical*
 /// for the identity compressor (the parity contract) and statistically
-/// indistinguishable for qsgd; the straggler row shows the event engine's
-/// whole point — heterogeneous Exp delays change arrival batching (and
-/// hence the trajectory) without costing any wall-clock sleeps.
+/// indistinguishable for qsgd; the straggler rows show the event engine's
+/// whole point — heterogeneous delays change arrival batching (and hence
+/// the trajectory) without costing any wall-clock sleeps. The downlink
+/// row additionally delays ẑ delivery, so nodes compute against stale
+/// mirrors (the Fig. 2 asymmetry the τ bound has to absorb).
 pub fn sweep_engine(opts: &AblationOptions) -> anyhow::Result<Vec<AblationRow>> {
+    let delayed_downlink = LinkConfig {
+        compute: LatencyModel::Exp(0.01),
+        uplink: LatencyModel::Exp(0.01),
+        downlink: LatencyModel::Exp(0.05),
+        clock_drift: 0.1,
+    };
     let mut rows = Vec::new();
-    for (engine, latency, label) in [
-        (EngineKind::Seq, LatencyModel::None, "engine=seq"),
-        (EngineKind::Event, LatencyModel::None, "engine=event"),
-        (EngineKind::Event, LatencyModel::Exp(0.01), "engine=event+stragglers"),
+    for (engine, link, label) in [
+        (EngineKind::Seq, LinkConfig::none(), "engine=seq"),
+        (EngineKind::Event, LinkConfig::none(), "engine=event"),
+        (
+            EngineKind::Event,
+            LinkConfig::symmetric(LatencyModel::Exp(0.01)),
+            "engine=event+stragglers",
+        ),
+        (EngineKind::Event, delayed_downlink, "engine=event+downlink"),
     ] {
         let mut cfg = base_cfg(opts.iters, opts.mc_trials);
         cfg.engine = engine;
-        cfg.latency = latency;
+        cfg.link = link;
         cfg.name = label.into();
         rows.push(run_one(&cfg, opts.target)?);
     }

@@ -18,9 +18,10 @@
 //! * [`admm::sim`] (`seq`) — the sequential round-based simulator, the
 //!   bit-exact reference behind every figure;
 //! * [`admm::engine`] (`event`) — the event-driven virtual-time engine for
-//!   1000+-node asynchrony studies (per-node delays, P-arrival trigger,
+//!   1000+-node asynchrony studies (per-link compute/uplink/downlink
+//!   delays + clock drift, downlink-delayed ẑ mirrors, P-arrival trigger,
 //!   τ−1 force-wait) with no wall-clock sleeps; identical to `seq`
-//!   bit-for-bit at zero latency with the identity compressor;
+//!   bit-for-bit at zero link delay with the identity compressor;
 //! * [`coordinator`] (`threaded`) — real server/node threads over the
 //!   accounted star network, for deployment-shaped runs and fault
 //!   injection.

@@ -5,6 +5,7 @@
 //!   fig3       regenerate Figure 3 (LASSO, accuracy vs iters/bits)
 //!   fig4       regenerate Figure 4 (CNN/MNIST, test acc vs iters/bits)
 //!   ablation   design-choice sweeps (q, EF, compressor family, tau, P)
+//!   downlink   tau x downlink-delay sweep at n in {256, 1024} (event engine)
 //!   serve      threaded deployment (server + node workers + PJRT service)
 //!   info       inspect the artifact manifest
 //!   selftest   PJRT round-trip smoke test
@@ -17,7 +18,7 @@ use qadmm::admm::runner::{self, ProblemFactory};
 use qadmm::comm::network::FaultSpec;
 use qadmm::compress::CompressorKind;
 use qadmm::config::{presets, Backend, EngineKind, ProblemKind};
-use qadmm::exp::{ablation, fig3, fig4};
+use qadmm::exp::{ablation, downlink, fig3, fig4};
 use qadmm::problems::lasso::{LassoConfig, LassoProblem};
 use qadmm::problems::nn::{NnArch, NnProblem};
 use qadmm::problems::Problem;
@@ -43,6 +44,7 @@ fn real_main() -> anyhow::Result<()> {
         "fig3" => cmd_fig3(&mut args),
         "fig4" => cmd_fig4(&mut args),
         "ablation" => cmd_ablation(&mut args),
+        "downlink" => cmd_downlink(&mut args),
         "serve" => cmd_serve(&mut args),
         "info" => cmd_info(&mut args),
         "selftest" => cmd_selftest(&mut args),
@@ -61,9 +63,12 @@ USAGE: qadmm <cmd> [--options]
   run       --preset NAME [--engine seq|event|threaded] [--iters N]
             [--trials N] [--q N|--compressor KIND] [--tau N] [--p N]
             [--seed N] [--no-ef] [--out DIR]
+            [--compute-delay L] [--uplink-delay L] [--downlink-delay L]
+            [--clock-drift E]
   fig3      [--iters N] [--trials N] [--backend hlo|native] [--target X]
   fig4      [--iters N] [--trials N] [--arch cnn|mlp] [--train N] [--test N]
   ablation  [--iters N] [--trials N] [--target X]
+  downlink  [--iters N] [--trials N] [--target X] [--quick]
   serve     --preset NAME [--iters N] [--dup-prob X]   (threaded deployment)
   info      [--artifacts DIR]
   selftest  [--artifacts DIR]
@@ -72,6 +77,9 @@ Presets: fig3 fig3-tau1 fig4 fig4-full ci-lasso e2e-mlp
 Compressors: identity | qsgdQ | sign | topkP | randkP (P in permille, 1..=1000)
 Engines: seq (lockstep simulator) | event (virtual-time, 1000+ nodes)
          | threaded (real threads + injected latency)
+Latency models L: none | const:S | exp:MEAN | mix:FAST,SLOW,P_SLOW
+  (per-link legs; odd-indexed nodes are 4x slower, --clock-drift E in [0,1)
+   spreads node clock rates over [1-E, 1+E])
 ";
 
 fn apply_overrides(
@@ -101,6 +109,18 @@ fn apply_overrides(
     if args.flag("no-ef") {
         cfg.error_feedback = false;
     }
+    // per-link latency decomposition (engine=event virtual delays,
+    // engine=threaded injected sleeps)
+    if let Some(l) = args.str_opt("compute-delay") {
+        cfg.link.compute = qadmm::comm::latency::LatencyModel::parse(&l)?;
+    }
+    if let Some(l) = args.str_opt("uplink-delay") {
+        cfg.link.uplink = qadmm::comm::latency::LatencyModel::parse(&l)?;
+    }
+    if let Some(l) = args.str_opt("downlink-delay") {
+        cfg.link.downlink = qadmm::comm::latency::LatencyModel::parse(&l)?;
+    }
+    cfg.link.clock_drift = args.f64("clock-drift", cfg.link.clock_drift);
     // problem-level overrides
     let rho_override = args.f64("rho", f64::NAN);
     let lr_override = args.f64("lr", f64::NAN);
@@ -217,13 +237,19 @@ fn cmd_run(args: &mut Args) -> anyhow::Result<()> {
         })
         .unwrap_or((0, 0));
 
+    // The threaded deployment drives one real server/node topology; it has
+    // no Monte-Carlo averaging, so don't claim --trials it won't run.
+    let trials = if cfg.engine == EngineKind::Threaded { 1 } else { cfg.mc_trials };
     println!(
         "running {} on engine={} ({} iters x {} trials)...",
         cfg.name,
         cfg.engine.label(),
         cfg.iters,
-        cfg.mc_trials
+        trials
     );
+    if cfg.engine == EngineKind::Threaded && cfg.mc_trials > 1 {
+        println!("note: engine=threaded runs a single deployment; --trials ignored");
+    }
     let mut factory = make_factory(
         &cfg,
         service.as_ref(),
@@ -234,10 +260,11 @@ fn cmd_run(args: &mut Args) -> anyhow::Result<()> {
         n_test,
     );
     if cfg.engine == EngineKind::Threaded {
-        // The threaded deployment drives one problem instance directly
-        // (run_mc covers the in-process engines).
-        let mut rngs = qadmm::admm::sim::TrialRngs::new(cfg.seed);
-        let boxed = factory(cfg.seed, &mut rngs.data)?;
+        // One problem instance, seeded like trial 0 of the in-process
+        // engines so threaded results are comparable at equal seed.
+        let seed = runner::trial_seed(cfg.seed, 0);
+        let mut rngs = qadmm::admm::sim::TrialRngs::new(seed);
+        let boxed = factory(seed, &mut rngs.data)?;
         drop(factory);
         let problem: Box<dyn Problem + Send> = unsafe { make_send(boxed) };
         let outcome =
@@ -338,6 +365,19 @@ fn cmd_ablation(args: &mut Args) -> anyhow::Result<()> {
     };
     args.finish()?;
     ablation::run_all(&opts)?;
+    Ok(())
+}
+
+fn cmd_downlink(args: &mut Args) -> anyhow::Result<()> {
+    let defaults = downlink::DownlinkSweepOptions::default();
+    let opts = downlink::DownlinkSweepOptions {
+        iters: args.usize("iters", defaults.iters),
+        mc_trials: args.usize("trials", defaults.mc_trials),
+        target: args.f64("target", defaults.target),
+        quick: args.flag("quick"),
+    };
+    args.finish()?;
+    downlink::run(&opts)?;
     Ok(())
 }
 

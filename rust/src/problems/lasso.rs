@@ -395,14 +395,13 @@ impl Problem for LassoProblem {
     /// backend keeps the sequential default.
     fn local_update_batch(
         &mut self,
-        zhat: &[f64],
         items: &mut [LocalUpdateItem<'_>],
     ) -> anyhow::Result<Vec<(Vec<f64>, f64)>> {
         let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
         if self.backend != Backend::Native || items.len() < 2 || workers < 2 {
             let mut out = Vec::with_capacity(items.len());
             for it in items.iter_mut() {
-                out.push(self.local_update(it.node, zhat, it.u, it.x_prev, it.rng)?);
+                out.push(self.local_update(it.node, it.zhat, it.u, it.x_prev, it.rng)?);
             }
             return Ok(out);
         }
@@ -410,7 +409,7 @@ impl Problem for LassoProblem {
         let (solver, rho) = (&self.solver, self.cfg.rho);
         let run_one = |it: &LocalUpdateItem<'_>| -> (Vec<f64>, f64) {
             let node = it.node;
-            let x = native_primal(&a[node], &atb2[node], solver, node, rho, zhat, it.u);
+            let x = native_primal(&a[node], &atb2[node], solver, node, rho, it.zhat, it.u);
             let loss = native_loss(&a[node], &atb2[node], btb[node], &x);
             (x, loss)
         };
@@ -535,9 +534,15 @@ mod tests {
         let mut items: Vec<LocalUpdateItem> = rngs
             .iter_mut()
             .enumerate()
-            .map(|(i, rng)| LocalUpdateItem { node: i, u: &us[i], x_prev: &x_prev, rng })
+            .map(|(i, rng)| LocalUpdateItem {
+                node: i,
+                zhat: &zhat,
+                u: &us[i],
+                x_prev: &x_prev,
+                rng,
+            })
             .collect();
-        let batch = p.local_update_batch(&zhat, &mut items).unwrap();
+        let batch = p.local_update_batch(&mut items).unwrap();
         assert_eq!(seq, batch);
     }
 

@@ -10,11 +10,16 @@ pub mod nn;
 use crate::util::rng::Pcg64;
 
 /// One node's inputs to a fanned-out local update (see
-/// [`Problem::local_update_batch`]). The shared ẑ view is passed once for
-/// the whole batch; per-node randomness comes from the item's own forked
-/// RNG so results are independent of worker-pool size and schedule.
+/// [`Problem::local_update_batch`]). Each item carries its *own* ẑ view:
+/// with per-link downlink delays the nodes of one batch may hold
+/// different mirrors of the server's consensus (a straggler computes
+/// against an older ẑ than its fast neighbour). Per-node randomness comes
+/// from the item's own forked RNG so results are independent of
+/// worker-pool size and schedule.
 pub struct LocalUpdateItem<'a> {
     pub node: usize,
+    /// The node's current estimate of z (its downlink mirror).
+    pub zhat: &'a [f64],
     pub u: &'a [f64],
     pub x_prev: &'a [f64],
     pub rng: &'a mut Pcg64,
@@ -56,19 +61,19 @@ pub trait Problem {
         rng: &mut Pcg64,
     ) -> anyhow::Result<(Vec<f64>, f64)>;
 
-    /// Fan-out of [`Self::local_update`] over a batch of nodes against one
-    /// shared ẑ view. Results are returned in item order. The default runs
-    /// sequentially; problems whose update is pure math (e.g. native LASSO)
-    /// override this with a deterministic worker pool — results must be
-    /// bit-identical to the sequential order regardless of pool size.
+    /// Fan-out of [`Self::local_update`] over a batch of nodes, each
+    /// against its item's ẑ view. Results are returned in item order. The
+    /// default runs sequentially; problems whose update is pure math (e.g.
+    /// native LASSO) override this with a deterministic worker pool —
+    /// results must be bit-identical to the sequential order regardless of
+    /// pool size.
     fn local_update_batch(
         &mut self,
-        zhat: &[f64],
         items: &mut [LocalUpdateItem<'_>],
     ) -> anyhow::Result<Vec<(Vec<f64>, f64)>> {
         let mut out = Vec::with_capacity(items.len());
         for it in items.iter_mut() {
-            out.push(self.local_update(it.node, zhat, it.u, it.x_prev, it.rng)?);
+            out.push(self.local_update(it.node, it.zhat, it.u, it.x_prev, it.rng)?);
         }
         Ok(out)
     }

@@ -9,19 +9,31 @@
 //! [`service::ComputeService`] — a dedicated thread that owns the client
 //! and serves typed requests over channels (the same shape as a real
 //! accelerator-executor process).
+//!
+//! The `xla` native dependency (and with it `XLA_EXTENSION_DIR`) is only
+//! required under the **`xla-runtime`** feature (on by default). Building
+//! with `--no-default-features` swaps [`Runtime`] for a stub whose
+//! constructor fails with a clear error, so the pure-native stack (LASSO,
+//! all three engines on `Backend::Native`, the compressors, the tests)
+//! compiles and runs without the XLA toolchain.
 
 pub mod artifacts;
 pub mod service;
 pub mod tensor;
 
+#[cfg(feature = "xla-runtime")]
 use std::cell::RefCell;
+#[cfg(feature = "xla-runtime")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "xla-runtime")]
+use std::path::PathBuf;
 
 use artifacts::Manifest;
 use tensor::Tensor;
 
 /// A compiled-artifact registry bound to one PJRT client.
+#[cfg(feature = "xla-runtime")]
 pub struct Runtime {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -33,6 +45,7 @@ pub struct Runtime {
     consts: RefCell<HashMap<(String, u64), Vec<xla::PjRtBuffer>>>,
 }
 
+#[cfg(feature = "xla-runtime")]
 impl Runtime {
     /// Open `dir` (containing `manifest.json` + HLO text files) on the CPU
     /// PJRT client.
@@ -190,6 +203,65 @@ impl Runtime {
     /// Number of pinned constant sets (diagnostics).
     pub fn pinned_const_sets(&self) -> usize {
         self.consts.borrow().len()
+    }
+}
+
+/// Stub that takes [`Runtime`]'s place when the crate is built with
+/// `--no-default-features`: every signature is preserved so the service,
+/// the problems layer and the CLI compile unchanged, but construction
+/// fails — the `Infallible` field makes the post-construction methods
+/// statically unreachable.
+#[cfg(not(feature = "xla-runtime"))]
+pub struct Runtime {
+    manifest: Manifest,
+    no_xla: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+impl Runtime {
+    pub fn open(_dir: &Path) -> anyhow::Result<Self> {
+        anyhow::bail!(
+            "this build has no PJRT/XLA support: rebuild with the `xla-runtime` \
+             feature (on by default) to execute HLO artifacts"
+        )
+    }
+
+    pub fn open_default() -> anyhow::Result<Self> {
+        Self::open(Path::new("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn warmup(&self, _names: &[&str]) -> anyhow::Result<()> {
+        match self.no_xla {}
+    }
+
+    pub fn call(&self, _name: &str, _inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        match self.no_xla {}
+    }
+
+    pub fn call_prefixed(
+        &self,
+        _name: &str,
+        _key: u64,
+        _consts: Option<&[Tensor]>,
+        _varying: &[Tensor],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        match self.no_xla {}
+    }
+
+    pub fn drop_consts(&self, _name: &str, _keys: &[u64]) {
+        match self.no_xla {}
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        match self.no_xla {}
+    }
+
+    pub fn pinned_const_sets(&self) -> usize {
+        match self.no_xla {}
     }
 }
 

@@ -102,6 +102,7 @@ impl Tensor {
 
     /// Upload to a device buffer (the fast execution path: `execute_b`
     /// avoids the Literal layout conversion that costs ~10× the transfer).
+    #[cfg(feature = "xla-runtime")]
     pub fn to_buffer(&self, client: &xla::PjRtClient) -> anyhow::Result<xla::PjRtBuffer> {
         let res = match self {
             Tensor::F64(v, s) => client.buffer_from_host_buffer(v, s, None),
@@ -111,6 +112,7 @@ impl Tensor {
         res.map_err(|e| anyhow::anyhow!("host->device transfer: {e:?}"))
     }
 
+    #[cfg(feature = "xla-runtime")]
     pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -121,6 +123,7 @@ impl Tensor {
         lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
     }
 
+    #[cfg(feature = "xla-runtime")]
     pub fn from_literal(lit: &xla::Literal) -> anyhow::Result<Tensor> {
         let shape = lit
             .array_shape()
@@ -178,6 +181,7 @@ mod tests {
         assert!(Tensor::vec_f64(vec![1.0, 2.0]).scalar().is_err());
     }
 
+    #[cfg(feature = "xla-runtime")]
     #[test]
     fn literal_roundtrip_f64() {
         let t = Tensor::F64(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
@@ -186,6 +190,7 @@ mod tests {
         assert_eq!(back, t);
     }
 
+    #[cfg(feature = "xla-runtime")]
     #[test]
     fn literal_roundtrip_scalar_and_i32() {
         for t in [Tensor::scalar_f32(7.5), Tensor::vec_i32(vec![-1, 0, 9])] {

@@ -1,0 +1,80 @@
+//! Cross-runtime accounting parity for the full-precision init exchange.
+//!
+//! The threaded coordinator charges messages through
+//! `NodeToServer::wire_bits` / `ServerToNode::wire_bits`, while the
+//! sequential simulator and the event engine charge the init exchange with
+//! explicit formulas. All three must agree on the paper's 32-bits-per-
+//! scalar init rate ([`qadmm::comm::message::INIT_BITS_PER_SCALAR`]) or
+//! their comm-bit curves start from different offsets and every
+//! bits-to-target comparison across runtimes is skewed. (The seed charged
+//! 64 bits/scalar in the message layer and 32 in the engines.)
+
+use qadmm::admm::engine::EventEngine;
+use qadmm::admm::sim::{AsyncSim, TrialRngs};
+use qadmm::comm::message::{
+    NodeToServer, ServerToNode, INIT_BITS_PER_SCALAR, MSG_HEADER_BYTES,
+};
+use qadmm::compress::CompressorKind;
+use qadmm::config::{presets, ExperimentConfig, ProblemKind};
+use qadmm::problems::lasso::{LassoConfig, LassoProblem};
+
+fn cfg_and_lasso() -> (ExperimentConfig, LassoConfig) {
+    let mut cfg = presets::ci_lasso();
+    cfg.compressor = CompressorKind::Identity;
+    let l = match cfg.problem {
+        ProblemKind::Lasso { m, h, n, rho, theta } => LassoConfig { m, h, n, rho, theta },
+        _ => unreachable!(),
+    };
+    (cfg, l)
+}
+
+/// The exact bits the threaded runtime would charge for one node's init
+/// exchange, derived from the message types themselves.
+fn threaded_init_bits_per_node(m: usize) -> u64 {
+    let up = NodeToServer::InitFull { node: 0, x0: vec![0.0; m], u0: vec![0.0; m] };
+    let down = ServerToNode::InitZ { z0: vec![0.0; m] };
+    up.wire_bits() + down.wire_bits()
+}
+
+/// Before any round fires, the simulator's and the event engine's books
+/// must equal n × (InitFull + InitZ) *as priced by the message layer* —
+/// the same pricing the threaded endpoints apply on send.
+#[test]
+fn init_exchange_offset_is_identical_across_runtimes() {
+    let (cfg, l) = cfg_and_lasso();
+    let per_node = threaded_init_bits_per_node(l.m);
+    // the message layer charges the paper's 32-bit init rate
+    assert_eq!(
+        per_node,
+        2 * (MSG_HEADER_BYTES * 8) + 3 * l.m as u64 * INIT_BITS_PER_SCALAR
+    );
+    assert_eq!(INIT_BITS_PER_SCALAR, 32);
+    let expect = l.n as u64 * per_node;
+
+    let mut rngs = TrialRngs::new(cfg.seed);
+    let mut p = LassoProblem::generate(l, &mut rngs.data).unwrap();
+    let sim = AsyncSim::new(&cfg, &mut p, rngs).unwrap();
+    assert_eq!(sim.accounting().total_bits(), expect, "simulator init offset");
+
+    let mut rngs = TrialRngs::new(cfg.seed);
+    let mut p = LassoProblem::generate(l, &mut rngs.data).unwrap();
+    let eng = EventEngine::new(&cfg, &mut p, rngs).unwrap();
+    assert_eq!(eng.accounting().total_bits(), expect, "event engine init offset");
+}
+
+/// Uplink/downlink split of the init offset matches too (the threaded
+/// outcome reports these separately).
+#[test]
+fn init_offset_split_by_direction() {
+    let (cfg, l) = cfg_and_lasso();
+    let up = NodeToServer::InitFull { node: 0, x0: vec![0.0; l.m], u0: vec![0.0; l.m] }
+        .wire_bits();
+    let down = ServerToNode::InitZ { z0: vec![0.0; l.m] }.wire_bits();
+
+    let mut rngs = TrialRngs::new(cfg.seed);
+    let mut p = LassoProblem::generate(l, &mut rngs.data).unwrap();
+    let sim = AsyncSim::new(&cfg, &mut p, rngs).unwrap();
+    let acc = sim.accounting();
+    assert_eq!(acc.total_uplink_bits(), l.n as u64 * up);
+    assert_eq!(acc.total_downlink_bits(), l.n as u64 * down);
+}

@@ -1,14 +1,19 @@
 //! The parity contract between the sequential simulator and the
-//! event-driven virtual-time engine: with **zero latency** and the
-//! **identity compressor**, every dispatched update arrives in the same
-//! virtual instant, so engine rounds coincide exactly with simulator
-//! iterations — the `z` trajectory, the per-round metric records and the
-//! cumulative comm-bit accounting must be *bit-identical*, for both the
-//! exact-update (LASSO) and inexact-update (logistic regression) problem
-//! families and across (τ, P, oracle) variations.
+//! event-driven virtual-time engine: with **zero delay on every link leg**
+//! (compute, uplink *and* downlink) and the **identity compressor**, every
+//! dispatched update — and every ẑ broadcast — arrives in the same virtual
+//! instant, so engine rounds coincide exactly with simulator iterations —
+//! the `z` trajectory, the per-round metric records and the cumulative
+//! comm-bit accounting must be *bit-identical*, for both the exact-update
+//! (LASSO) and inexact-update (logistic regression) problem families and
+//! across (τ, P, oracle) variations. A nonzero downlink leg must *break*
+//! the collapse: nodes then compute against stale ẑ mirrors and the
+//! trajectory measurably changes.
 
 use qadmm::admm::engine::EventEngine;
 use qadmm::admm::sim::{AsyncSim, TrialRngs};
+use qadmm::comm::latency::LatencyModel;
+use qadmm::comm::profile::LinkConfig;
 use qadmm::compress::CompressorKind;
 use qadmm::config::{presets, ExperimentConfig, OracleConfig, ProblemKind};
 use qadmm::problems::lasso::{LassoConfig, LassoProblem};
@@ -27,6 +32,7 @@ fn parity_cfg(n: usize, tau: usize, p_min: usize, regroup: bool) -> ExperimentCo
     cfg.mc_trials = 1;
     cfg.eval_every = 1;
     cfg.oracle = OracleConfig { p_slow: 0.1, p_fast: 0.8, regroup_each_call: regroup };
+    cfg.link = LinkConfig::none(); // zero delay on every leg
     cfg
 }
 
@@ -50,6 +56,8 @@ fn assert_parity(
         eng.accounting().total_bits(),
         "init accounting diverged"
     );
+    // Before any round fires, stats must not leak a sentinel.
+    assert_eq!(eng.stats().min_arrivals, None);
 
     for r in 1..=cfg.iters {
         sim.step().unwrap();
@@ -68,7 +76,7 @@ fn assert_parity(
     assert_eq!(eng.virtual_time(), 0.0);
     let stats = eng.stats();
     assert_eq!(stats.rounds, cfg.iters);
-    assert!(stats.min_arrivals >= cfg.p_min);
+    assert!(stats.min_arrivals.expect("rounds fired") >= cfg.p_min);
     assert!(stats.max_staleness + 1 <= cfg.tau.max(1));
 
     // Full metric series, NaN-safe (test_acc is NaN for convex problems).
@@ -112,6 +120,73 @@ fn logreg_trajectories_are_bit_identical() {
         cfg.eval_every = 5; // logreg eval (F* reference) is the pricey part
         assert_parity(&cfg, &make);
     }
+}
+
+/// Pure clock drift cannot break parity: drift scales compute *durations*,
+/// and 0.3 × 0.0 is still 0.0 — the zero-delay timeline (downlink
+/// included) must stay bit-identical to the simulator even with maximally
+/// skewed node clocks.
+#[test]
+fn zero_delay_parity_survives_clock_drift() {
+    let mut cfg = parity_cfg(4, 3, 1, false);
+    cfg.name = "parity-drift".into();
+    cfg.link = LinkConfig { clock_drift: 0.3, ..LinkConfig::none() };
+    let lcfg = match cfg.problem {
+        ProblemKind::Lasso { m, h, n, rho, theta } => LassoConfig { m, h, n, rho, theta },
+        _ => unreachable!(),
+    };
+    let make = move |rng: &mut Pcg64| -> Box<dyn Problem> {
+        Box::new(LassoProblem::generate(lcfg, rng).unwrap())
+    };
+    assert_parity(&cfg, &make);
+}
+
+/// The other half of the contract: a nonzero downlink leg must *change*
+/// the z-trajectory. With heterogeneous Const downlink delays (odd nodes
+/// 4× slower) the broadcast reaches even nodes first; with P = 1 the
+/// server fires on partial batches that the zero-downlink run never sees,
+/// so the consensus inputs — and hence z — diverge, while every
+/// scheduling invariant still holds.
+#[test]
+fn nonzero_downlink_delay_changes_the_z_trajectory() {
+    let cfg_zero = parity_cfg(4, 3, 1, false);
+    let mut cfg_down = parity_cfg(4, 3, 1, false);
+    cfg_down.name = "parity-downlink".into();
+    cfg_down.link = LinkConfig {
+        compute: LatencyModel::None,
+        uplink: LatencyModel::None,
+        downlink: LatencyModel::Const(0.05),
+        clock_drift: 0.0,
+    };
+    let lcfg = match cfg_zero.problem {
+        ProblemKind::Lasso { m, h, n, rho, theta } => LassoConfig { m, h, n, rho, theta },
+        _ => unreachable!(),
+    };
+    let run = |cfg: &ExperimentConfig| {
+        let mut rngs = TrialRngs::new(cfg.seed);
+        let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+        let mut eng = EventEngine::new(cfg, &mut p, rngs).unwrap();
+        let mut zs = Vec::new();
+        for _ in 0..cfg.iters {
+            eng.step_round().unwrap();
+            zs.push(eng.z().to_vec());
+            let max_d = eng.staleness().iter().copied().max().unwrap();
+            assert!(max_d + 1 <= cfg.tau, "staleness bound broken under downlink delay");
+        }
+        (zs, eng.virtual_time(), eng.stats())
+    };
+    let (z_zero, t_zero, _) = run(&cfg_zero);
+    let (z_down, t_down, stats_down) = run(&cfg_down);
+    assert_eq!(t_zero, 0.0);
+    assert!(t_down > 0.0, "downlink delay must advance virtual time");
+    assert!(stats_down.min_arrivals.expect("rounds fired") >= cfg_down.p_min);
+    // Same number of rounds, different trajectory: at least one round's z
+    // must differ (in fact they diverge early and stay diverged).
+    assert_eq!(z_zero.len(), z_down.len());
+    assert!(
+        z_zero.iter().zip(&z_down).any(|(a, b)| a != b),
+        "delayed downlink left the z-trajectory bit-identical"
+    );
 }
 
 /// The engine stays deterministic when its worker pool actually kicks in:

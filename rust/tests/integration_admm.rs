@@ -53,8 +53,9 @@ fn estimate_banks_track_true_iterates() {
 }
 
 /// Wire accounting must equal the analytic formula exactly for qsgd:
-/// init (2·64M + 64M per node) + per active node (header + 2 frames) + one
-/// broadcast per iteration.
+/// init (2·32M up + 32M down per node, the paper's 32-bit rate — see
+/// `tests/accounting_parity.rs` for the cross-runtime contract) + per
+/// active node (header + 2 frames) + one broadcast per iteration.
 #[test]
 fn bit_accounting_matches_analytic_formula() {
     let (mut cfg, l) = ci_cfg();

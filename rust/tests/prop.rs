@@ -6,6 +6,7 @@ use qadmm::admm::engine::EventEngine;
 use qadmm::admm::scheduler::Scheduler;
 use qadmm::admm::sim::{AsyncSim, TrialRngs};
 use qadmm::comm::latency::LatencyModel;
+use qadmm::comm::profile::LinkConfig;
 use qadmm::compress::packing::{pack_levels, unpack_levels};
 use qadmm::compress::{Compressor, CompressorKind};
 use qadmm::config::{presets, OracleConfig, ProblemKind};
@@ -170,8 +171,16 @@ fn prop_engines_enforce_arrival_and_staleness_bounds() {
             assert!(max_d + 1 <= tau, "sim staleness {max_d} breaks tau={tau}");
         }
 
-        // event engine under straggler delays
-        cfg.latency = LatencyModel::Exp(0.01);
+        // event engine under straggler delays on *every* link leg: delayed
+        // compute, uplink AND downlink, plus drifted node clocks — the
+        // scheduling guarantees may not depend on the ẑ broadcast landing
+        // promptly
+        cfg.link = LinkConfig {
+            compute: LatencyModel::Exp(0.01),
+            uplink: LatencyModel::Exp(0.01),
+            downlink: LatencyModel::Exp(0.02),
+            clock_drift: 0.2,
+        };
         cfg.engine = qadmm::config::EngineKind::Event;
         let mut rngs = TrialRngs::new(cfg.seed);
         let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
@@ -184,13 +193,64 @@ fn prop_engines_enforce_arrival_and_staleness_bounds() {
         }
         let stats = eng.stats();
         assert_eq!(stats.rounds, cfg.iters);
-        assert!(
-            stats.min_arrivals >= p_min,
-            "engine fired on {} < P={p_min}",
-            stats.min_arrivals
-        );
+        let min_arrivals = stats.min_arrivals.expect("rounds fired");
+        assert!(min_arrivals >= p_min, "engine fired on {min_arrivals} < P={p_min}");
         assert!(stats.max_staleness + 1 <= tau);
         assert!(stats.virtual_time >= 0.0 && stats.virtual_time.is_finite());
+    });
+}
+
+/// A nonzero downlink delay must measurably change the z-trajectory: the
+/// ẑ broadcast lands late and per-node, so the server fires on arrival
+/// batches the instant-delivery run never assembles. Identity compression
+/// keeps both runs free of quantizer noise, so any divergence is
+/// attributable to delivery timing alone.
+#[test]
+fn prop_downlink_delay_changes_z_trajectory() {
+    for_all(8, 99, |rng| {
+        let n = 4 + rng.gen_range(8);
+        let tau = 3 + rng.gen_range(3);
+        let mut cfg = presets::ci_lasso();
+        cfg.name = format!("prop-downlink-n{n}-tau{tau}");
+        cfg.problem = ProblemKind::Lasso { m: 8, h: 5, n, rho: 20.0, theta: 0.1 };
+        cfg.compressor = CompressorKind::Identity;
+        cfg.tau = tau;
+        cfg.p_min = 1;
+        cfg.iters = 25;
+        cfg.mc_trials = 1;
+        cfg.eval_every = 1;
+        cfg.seed = rng.next_u64();
+        cfg.engine = qadmm::config::EngineKind::Event;
+        let lcfg = LassoConfig { m: 8, h: 5, n, rho: 20.0, theta: 0.1 };
+
+        let run = |link: LinkConfig| {
+            let mut cfg = cfg.clone();
+            cfg.link = link;
+            let mut rngs = TrialRngs::new(cfg.seed);
+            let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+            p.set_reference_optimum(1.0);
+            let mut eng = EventEngine::new(&cfg, &mut p, rngs).unwrap();
+            let mut zs = Vec::new();
+            for _ in 0..cfg.iters {
+                eng.step_round().unwrap();
+                zs.push(eng.z().to_vec());
+                let max_d = eng.staleness().iter().copied().max().unwrap();
+                assert!(max_d + 1 <= tau, "staleness bound broken");
+            }
+            zs
+        };
+        let instant = run(LinkConfig::none());
+        let delayed = run(LinkConfig {
+            compute: LatencyModel::None,
+            uplink: LatencyModel::None,
+            downlink: LatencyModel::Exp(0.1),
+            clock_drift: 0.0,
+        });
+        assert_ne!(
+            instant, delayed,
+            "Exp downlink delay left all {} rounds bit-identical",
+            cfg.iters
+        );
     });
 }
 
