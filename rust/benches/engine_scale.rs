@@ -1,5 +1,7 @@
-//! Event-engine scaling sweep: n ∈ {16, 128, 1024} nodes, plus a
-//! τ × downlink-delay grid at n ∈ {256, 1024}.
+//! Event-engine scaling sweep: n ∈ {16, 128, 1024} nodes, a τ ×
+//! downlink-delay grid at n ∈ {256, 1024}, and the `server_round` section
+//! comparing the old O(n·m) bank-sweep fire against the incremental
+//! O(|A|·m) accumulator path at n ∈ {256, 1024, 4096} × P ∈ {n/8, n/2, n}.
 //!
 //! The headline configuration is the acceptance bar for the virtual-time
 //! engine: **n = 1024 nodes, m = 10240-dim LASSO, 200 consensus rounds,
@@ -14,14 +16,23 @@
 //! dispatch batches, which is exactly the regime the mirror bookkeeping
 //! has to keep cheap.
 //!
-//! `QADMM_BENCH_FAST=1` shrinks both sweeps for CI smoke runs.
+//! Every section's numbers are also written as machine-readable JSON to
+//! `BENCH_engine.json` at the repo root, so the perf trajectory is
+//! recorded run over run.
+//!
+//! `QADMM_BENCH_FAST=1` shrinks all sweeps for CI smoke runs.
 
 use qadmm::admm::engine::EventEngine;
 use qadmm::admm::sim::TrialRngs;
 use qadmm::comm::latency::LatencyModel;
 use qadmm::comm::profile::LinkConfig;
 use qadmm::config::{presets, EngineKind, ExperimentConfig, OracleConfig, ProblemKind};
+use qadmm::problems::accumulator::ConsensusAccumulator;
 use qadmm::problems::lasso::{LassoConfig, LassoProblem};
+use qadmm::problems::{Arena, EvalMetrics, Problem};
+use qadmm::solver::prox;
+use qadmm::util::json::Json;
+use qadmm::util::rng::Pcg64;
 use qadmm::util::timer::{fmt_count, Stopwatch};
 
 struct Sweep {
@@ -58,7 +69,7 @@ fn base_cfg(s: &Sweep) -> ExperimentConfig {
     cfg
 }
 
-fn run_sweep(s: &Sweep) -> anyhow::Result<()> {
+fn run_sweep(s: &Sweep) -> anyhow::Result<Json> {
     let cfg = base_cfg(s);
     let gen_clock = Stopwatch::new();
     let mut rngs = TrialRngs::new(cfg.seed);
@@ -96,11 +107,163 @@ fn run_sweep(s: &Sweep) -> anyhow::Result<()> {
     if s.n >= 1024 && wall >= 10.0 {
         println!("  !! acceptance bar missed: n={} took {wall:.2}s (target < 10s)", s.n);
     }
-    Ok(())
+    Ok(Json::obj(vec![
+        ("label", Json::Str(s.label.into())),
+        ("n", Json::Num(s.n as f64)),
+        ("m", Json::Num(s.m as f64)),
+        ("tau", Json::Num(s.tau as f64)),
+        ("rounds", Json::Num(s.rounds as f64)),
+        ("wall_s", Json::Num(wall)),
+        ("gen_s", Json::Num(gen_s)),
+        ("virtual_s", Json::Num(stats.virtual_time)),
+        ("events", Json::Num(stats.events as f64)),
+        ("dispatches", Json::Num(stats.dispatches as f64)),
+    ]))
 }
 
 fn scale_sweep(n: usize, m: usize, h: usize, rounds: usize) -> Sweep {
     Sweep { n, m, h, rounds, tau: 4, link: straggler_link(), label: "scale" }
+}
+
+// ---- server_round: old O(n·m) fire vs incremental O(|A|·m) -----------------
+
+/// Server-side view of the LASSO consensus (soft-thresholded mean) with no
+/// node data attached — isolates the fire cost from problem generation so
+/// the section can run at n = 4096 in milliseconds.
+struct ProxMean {
+    m: usize,
+    n: usize,
+}
+
+impl Problem for ProxMean {
+    fn dim(&self) -> usize {
+        self.m
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.n
+    }
+
+    fn name(&self) -> String {
+        format!("prox-mean(m={},n={})", self.m, self.n)
+    }
+
+    fn init_x(&mut self, _rng: &mut Pcg64) -> Vec<f64> {
+        vec![0.0; self.m]
+    }
+
+    fn local_update(
+        &mut self,
+        _node: usize,
+        _zhat: &[f64],
+        _u: &[f64],
+        _x_prev: &[f64],
+        _rng: &mut Pcg64,
+    ) -> anyhow::Result<(Vec<f64>, f64)> {
+        anyhow::bail!("server-side bench problem has no local update")
+    }
+
+    /// The old fire: O(n·m) sweep over the banks.
+    fn consensus(&mut self, xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
+        let mut v = vec![0.0; self.m];
+        for (xi, ui) in xhat.iter().zip(uhat) {
+            for j in 0..self.m {
+                v[j] += xi[j] + ui[j];
+            }
+        }
+        let n = self.n as f64;
+        for vj in &mut v {
+            *vj /= n;
+        }
+        prox::soft_threshold_in_place(&mut v, 0.1 / (50.0 * n));
+        Ok(v)
+    }
+
+    /// The incremental fire: O(m) prox of the running sum.
+    fn consensus_from_sum(&mut self, sum: &[f64], n_nodes: usize) -> anyhow::Result<Vec<f64>> {
+        let n = n_nodes as f64;
+        let mut v: Vec<f64> = sum.iter().map(|s| s / n).collect();
+        prox::soft_threshold_in_place(&mut v, 0.1 / (50.0 * n));
+        Ok(v)
+    }
+
+    fn evaluate(&mut self, _x: &Arena, _u: &Arena, _z: &[f64]) -> anyhow::Result<EvalMetrics> {
+        anyhow::bail!("server-side bench problem has no metrics")
+    }
+}
+
+/// Time one (n, P) cell: the seed's fire (copy banks into the persistent
+/// consensus-input buffers + `consensus`) against the incremental round
+/// (P folds at arrival time + `consensus_from_sum` at fire time).
+fn server_round_cell(n: usize, m: usize, p: usize, reps: usize) -> anyhow::Result<Json> {
+    let mut rng = Pcg64::seed_from_u64(0x5eed ^ n as u64);
+    let mut problem = ProxMean { m, n };
+    let xhat: Vec<Vec<f64>> = (0..n).map(|_| rng.normal_vec(m, 0.0, 1.0)).collect();
+    let uhat: Vec<Vec<f64>> = (0..n).map(|_| rng.normal_vec(m, 0.0, 0.1)).collect();
+    // one arrival batch worth of dequantized deltas, reused every rep
+    let deltas: Vec<(Vec<f64>, Vec<f64>)> = (0..p)
+        .map(|_| (rng.normal_vec(m, 0.0, 0.01), rng.normal_vec(m, 0.0, 0.01)))
+        .collect();
+
+    // old path: the seed refreshed these n×m buffers from the banks at
+    // every fire, then swept them in `consensus`
+    let mut xs_buf: Vec<Vec<f64>> = vec![vec![0.0; m]; n];
+    let mut us_buf: Vec<Vec<f64>> = vec![vec![0.0; m]; n];
+    let clock = Stopwatch::new();
+    let mut sink = 0.0;
+    for _ in 0..reps {
+        for (buf, t) in xs_buf.iter_mut().zip(&xhat) {
+            buf.copy_from_slice(t);
+        }
+        for (buf, t) in us_buf.iter_mut().zip(&uhat) {
+            buf.copy_from_slice(t);
+        }
+        let z = problem.consensus(&xs_buf, &us_buf)?;
+        sink += z[0];
+    }
+    let old_fire_us = clock.elapsed_secs() * 1e6 / reps as f64;
+
+    // incremental path, whole round: P arrival folds + the O(m) fire
+    let mut acc = ConsensusAccumulator::new(m, 0);
+    acc.refresh(xhat.iter().zip(&uhat).map(|(x, u)| (x.as_slice(), u.as_slice())));
+    let clock = Stopwatch::new();
+    for _ in 0..reps {
+        for (dx, du) in &deltas {
+            acc.fold(dx, du);
+        }
+        let z = problem.consensus_from_sum(acc.sum(), n)?;
+        sink += z[0];
+    }
+    let inc_round_us = clock.elapsed_secs() * 1e6 / reps as f64;
+
+    // fire alone (the folds happen at arrival time, spread across the
+    // round — this is what the server blocks on)
+    let clock = Stopwatch::new();
+    for _ in 0..reps {
+        let z = problem.consensus_from_sum(acc.sum(), n)?;
+        sink += z[0];
+    }
+    let inc_fire_us = clock.elapsed_secs() * 1e6 / reps as f64;
+    std::hint::black_box(sink);
+
+    let speedup_round = old_fire_us / inc_round_us.max(1e-9);
+    let speedup_fire = old_fire_us / inc_fire_us.max(1e-9);
+    println!(
+        "server_round            n={n:5} m={m:6} P={p:5}  old {old_fire_us:9.1}us  \
+         inc-round {inc_round_us:9.1}us  inc-fire {inc_fire_us:9.1}us  \
+         speedup {speedup_round:6.1}x (fire-only {speedup_fire:.0}x)"
+    );
+    Ok(Json::obj(vec![
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("p", Json::Num(p as f64)),
+        ("reps", Json::Num(reps as f64)),
+        ("old_fire_us", Json::Num(old_fire_us)),
+        ("inc_round_us", Json::Num(inc_round_us)),
+        ("inc_fire_us", Json::Num(inc_fire_us)),
+        ("speedup_round", Json::Num(speedup_round)),
+        ("speedup_fire", Json::Num(speedup_fire)),
+    ]))
 }
 
 fn main() {
@@ -149,11 +312,48 @@ fn main() {
     }
 
     println!("--- engine_scale: event-driven virtual-time QADMM ---");
+    let mut sweep_records = Vec::new();
     for s in &sweeps {
-        if let Err(e) = run_sweep(s) {
-            eprintln!("n={} ({}): {e:#}", s.n, s.label);
-            std::process::exit(1);
+        match run_sweep(s) {
+            Ok(rec) => sweep_records.push(rec),
+            Err(e) => {
+                eprintln!("n={} ({}): {e:#}", s.n, s.label);
+                std::process::exit(1);
+            }
         }
+    }
+
+    // server fire cost: old full-recompute path vs incremental accumulator
+    println!("--- server_round: O(n·m) bank sweep vs O(|A|·m) incremental ---");
+    let (m, cells_n, reps): (usize, &[usize], usize) = if fast {
+        (256, &[256, 1024], 20)
+    } else {
+        (1024, &[256, 1024, 4096], 30)
+    };
+    let mut server_records = Vec::new();
+    for &n in cells_n {
+        for p in [n / 8, n / 2, n] {
+            match server_round_cell(n, m, p.max(1), reps) {
+                Ok(rec) => server_records.push(rec),
+                Err(e) => {
+                    eprintln!("server_round n={n} p={p}: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
+
+    // machine-readable trajectory record at the repo root
+    let out = Json::obj(vec![
+        ("bench", Json::Str("engine_scale".into())),
+        ("fast", Json::Bool(fast)),
+        ("sweeps", Json::Arr(sweep_records)),
+        ("server_round", Json::Arr(server_records)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
+    match std::fs::write(path, out.to_string_pretty()) {
+        Ok(()) => println!("--- wrote {path} ---"),
+        Err(e) => eprintln!("!! could not write {path}: {e}"),
     }
     println!("--- engine_scale: {} sweeps done ---", sweeps.len());
 }

@@ -9,10 +9,18 @@
 //! ([`super::events`]), so a 1000-node straggler run finishes in
 //! milliseconds of wall time.
 //!
+//! The server's per-round cost scales with the **arrival set**, not the
+//! fleet: each `MsgArrive` folds its dequantized deltas into the running
+//! sum s = Σ(x̂+û) ([`ConsensusAccumulator`], O(m) per arrival), so a fire
+//! is `consensus_from_sum(s)` — O(m) — instead of the old O(n·m) bank
+//! sweep; true iterates and ẑ mirrors live in flat n×m [`Arena`]s, and the
+//! dispatch path reuses pooled delta/compression buffers (no steady-state
+//! per-message allocation).
+//!
 //! Timeline per consensus round (each delay leg drawn from the node's
 //! [`LinkProfile`] — compute scaled by its clock drift, uplink and
 //! downlink on the server's clock):
-//! 1. the server fires: consensus over the estimate banks, compressed Δz
+//! 1. the server fires: consensus from the incremental sum, compressed Δz
 //!    broadcast (accounted per link), scheduler advance (oracle selection +
 //!    τ−1 forcing — the same [`super::scheduler::Scheduler`] the simulator
 //!    uses, consuming the same oracle RNG stream). The broadcast does
@@ -55,10 +63,11 @@ use crate::comm::accounting::CommAccounting;
 use crate::comm::message::{INIT_BITS_PER_SCALAR, MSG_HEADER_BYTES};
 use crate::comm::profile::{per_node_profiles, LinkProfile};
 use crate::compress::error_feedback::EstimateTracker;
-use crate::compress::Compressor;
+use crate::compress::{Compressed, Compressor};
 use crate::config::ExperimentConfig;
 use crate::metrics::{IterRecord, RunRecorder};
-use crate::problems::{LocalUpdateItem, Problem};
+use crate::problems::accumulator::ConsensusAccumulator;
+use crate::problems::{Arena, LocalUpdateItem, Problem};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -68,11 +77,27 @@ use super::scheduler::Scheduler;
 use super::sim::TrialRngs;
 
 /// A compressed update sitting in a node's outbox / on the virtual wire.
-struct InFlightMsg {
-    dx: Vec<f64>,
-    du: Vec<f64>,
+/// One slot per node lives for the whole run — `compress_into` refills the
+/// pooled [`Compressed`] buffers on every dispatch, so the steady-state
+/// round does no per-message allocation.
+struct InFlightSlot {
+    cx: Compressed,
+    cu: Compressed,
     bits: u64,
     loss: f64,
+    occupied: bool,
+}
+
+impl InFlightSlot {
+    fn empty() -> Self {
+        Self {
+            cx: Compressed::empty(),
+            cu: Compressed::empty(),
+            bits: 0,
+            loss: 0.0,
+            occupied: false,
+        }
+    }
 }
 
 /// One broadcast on a node's downlink: the dequantized Δz (shared across
@@ -108,38 +133,48 @@ pub struct EventEngine<'a> {
     compressor: Box<dyn Compressor>,
     m: usize,
     n: usize,
-    // true iterates
-    x: Vec<Vec<f64>>,
-    u: Vec<Vec<f64>>,
+    // true iterates, flattened into contiguous n×m arenas
+    x: Arena,
+    u: Arena,
     z: Vec<f64>,
     // server-side estimate banks (committed only on MsgArrive)
     xhat: Vec<EstimateTracker>,
     uhat: Vec<EstimateTracker>,
     zhat: EstimateTracker,
-    /// Each node's private view of ẑ: advances only when a broadcast
-    /// lands on its downlink (`DownlinkArrive`), never at fire time.
-    /// `dispatch` reads this, not `zhat`.
-    z_mirror: Vec<Vec<f64>>,
+    /// Incremental server sum s = Σ(x̂+û): every `MsgArrive` folds its
+    /// committed deltas in (O(m)), so `fire` is O(m) instead of the old
+    /// O(n·m) bank sweep — see [`ConsensusAccumulator`] for the Kahan +
+    /// periodic-refresh drift contract.
+    acc: ConsensusAccumulator,
+    /// Each node's private view of ẑ (n×m arena): a row advances only when
+    /// a broadcast lands on its downlink (`DownlinkArrive`), never at fire
+    /// time. `dispatch` reads this, not `zhat`.
+    z_mirror: Arena,
     /// Per-node FIFO of broadcasts in downlink transit.
     downlink_inbox: Vec<VecDeque<DownlinkPacket>>,
     /// Last scheduled downlink arrival per node (monotonicity clamp: a
     /// later broadcast never overtakes an earlier one on the same link).
     downlink_last: Vec<f64>,
     /// Nodes whose downlink landed with a dispatch flag in the instant
-    /// being drained; flushed as one batch between instants.
+    /// being drained; flushed as one batch between instants (buffer is
+    /// recycled across flushes).
     pending_dispatch: Vec<usize>,
     /// Sparse arrival set for the round being assembled (no n ≤ 64 mask).
     arrived: BTreeSet<usize>,
+    /// Overdue nodes (staleness = τ−1) that have not arrived yet, counted
+    /// so the per-instant trigger check is O(1) instead of an O(n)
+    /// staleness scan — fragmented arrival patterns used to make rounds
+    /// O(n²). Recomputed after each `fire`, decremented on `MsgArrive`.
+    overdue_pending: usize,
     /// Node has an update computing or in transit (one in flight max).
     busy: Vec<bool>,
-    in_flight: Vec<Option<InFlightMsg>>,
+    in_flight: Vec<InFlightSlot>,
     /// Loss delivered with each node's last arrival (round-loss fallback).
     arrived_loss: Vec<f64>,
-    /// Persistent consensus-input buffers (n×m each): refreshed from the
-    /// estimate banks at every fire instead of reallocated — at 1024×10k
-    /// that is 160 MB of allocator churn per round saved.
-    xs_buf: Vec<Vec<f64>>,
-    us_buf: Vec<Vec<f64>>,
+    /// Scratch for delta construction (reused across all nodes/rounds).
+    delta_buf: Vec<f64>,
+    /// Reusable arrival mask handed to the scheduler each fire.
+    arrived_mask: Vec<bool>,
     scheduler: Scheduler,
     oracle: AsyncOracle,
     accounting: CommAccounting,
@@ -176,8 +211,8 @@ impl<'a> EventEngine<'a> {
         let ef = cfg.error_feedback;
         let x0 = problem.init_x(&mut rngs.init);
         anyhow::ensure!(x0.len() == m, "init_x returned wrong dimension");
-        let x: Vec<Vec<f64>> = vec![x0.clone(); n];
-        let u: Vec<Vec<f64>> = vec![vec![0.0; m]; n];
+        let x = Arena::broadcast_row(&x0, n);
+        let u = Arena::zeros(n, m);
 
         let mut accounting = CommAccounting::new(n);
         for i in 0..n {
@@ -190,15 +225,18 @@ impl<'a> EventEngine<'a> {
             (0..n).map(|_| EstimateTracker::new(x0.clone(), ef)).collect();
         let uhat: Vec<EstimateTracker> =
             (0..n).map(|_| EstimateTracker::new(vec![0.0; m], ef)).collect();
-        let xs: Vec<Vec<f64>> = xhat.iter().map(|t| t.estimate().to_vec()).collect();
-        let us: Vec<Vec<f64>> = uhat.iter().map(|t| t.estimate().to_vec()).collect();
-        let z = problem.consensus(&xs, &us)?;
+        // z⁰ via the incremental path seeded with a full bank sweep — the
+        // identical fold order the simulator uses, so the parity contract
+        // starts bit-exact.
+        let mut acc = ConsensusAccumulator::new(m, cfg.consensus_refresh_every);
+        acc.refresh(xhat.iter().zip(&uhat).map(|(xt, ut)| (xt.estimate(), ut.estimate())));
+        let z = problem.consensus_from_sum(acc.sum(), n)?;
         accounting.record_broadcast(MSG_HEADER_BYTES * 8 + m as u64 * INIT_BITS_PER_SCALAR);
         let zhat = EstimateTracker::new(z.clone(), ef);
 
         // Every node's mirror starts at the full-precision z⁰ it received
         // in the (synchronous) init broadcast.
-        let z_mirror = vec![z.clone(); n];
+        let z_mirror = Arena::broadcast_row(&z, n);
         let oracle = AsyncOracle::new(n, cfg.oracle, &mut rngs.oracle);
         let mut qroot = rngs.quant;
         let node_quant: Vec<Pcg64> = (0..n).map(|i| qroot.fork(i as u64)).collect();
@@ -206,6 +244,9 @@ impl<'a> EventEngine<'a> {
         let mut broot = rngs.batches;
         let node_batch: Vec<Pcg64> = (0..n).map(|i| broot.fork(i as u64)).collect();
 
+        // Initial staleness is all-zero, so only τ = 1 starts with overdue
+        // nodes (every node is then force-waited each round).
+        let overdue_pending = if cfg.tau == 1 { n } else { 0 };
         let mut engine = Self {
             compressor: cfg.compressor.build(),
             m,
@@ -216,16 +257,18 @@ impl<'a> EventEngine<'a> {
             xhat,
             uhat,
             zhat,
+            acc,
             z_mirror,
             downlink_inbox: (0..n).map(|_| VecDeque::new()).collect(),
             downlink_last: vec![0.0; n],
             pending_dispatch: Vec::new(),
             arrived: BTreeSet::new(),
+            overdue_pending,
             busy: vec![false; n],
-            in_flight: (0..n).map(|_| None).collect(),
+            in_flight: (0..n).map(|_| InFlightSlot::empty()).collect(),
             arrived_loss: vec![0.0; n],
-            xs_buf: vec![vec![0.0; m]; n],
-            us_buf: vec![vec![0.0; m]; n],
+            delta_buf: Vec::with_capacity(m),
+            arrived_mask: vec![false; n],
             scheduler: Scheduler::new(n, cfg.tau, cfg.p_min),
             oracle,
             accounting,
@@ -263,6 +306,13 @@ impl<'a> EventEngine<'a> {
                 let mut nodes = std::mem::take(&mut self.pending_dispatch);
                 nodes.sort_unstable();
                 self.dispatch(&nodes)?;
+                // recycle the buffer: fragmented downlink arrivals flush up
+                // to n single-node batches per round, and reallocating the
+                // list each flush is avoidable churn
+                nodes.clear();
+                if self.pending_dispatch.is_empty() {
+                    self.pending_dispatch = nodes;
+                }
             }
             if self.trigger_satisfied() {
                 return self.fire();
@@ -289,45 +339,63 @@ impl<'a> EventEngine<'a> {
         }
     }
 
-    /// |arrivals| ≥ P and every τ−1-stale node has reported.
+    /// |arrivals| ≥ P and every τ−1-stale node has reported. O(1): the
+    /// force-wait half is the maintained [`Self::overdue_pending`] counter
+    /// (staleness only changes inside `fire`, arrivals only in `MsgArrive`,
+    /// and both keep the counter in sync), so checking the trigger once per
+    /// virtual instant no longer costs an O(n) staleness scan — under
+    /// fragmented arrivals (≈ n instants per round) that scan made rounds
+    /// O(n²).
     fn trigger_satisfied(&self) -> bool {
-        if self.arrived.len() < self.cfg.p_min {
-            return false;
+        let fast = self.arrived.len() >= self.cfg.p_min && self.overdue_pending == 0;
+        // Cross-check against the direct scan on small fleets (debug only).
+        #[cfg(debug_assertions)]
+        if self.n <= 128 {
+            let tau = self.cfg.tau;
+            let slow = self.arrived.len() >= self.cfg.p_min
+                && self
+                    .scheduler
+                    .staleness()
+                    .iter()
+                    .enumerate()
+                    .all(|(i, &d)| d + 1 < tau || self.arrived.contains(&i));
+            debug_assert_eq!(fast, slow, "overdue counter out of sync");
         }
-        let tau = self.cfg.tau;
-        self.scheduler
-            .staleness()
-            .iter()
-            .enumerate()
-            .all(|(i, &d)| d + 1 < tau || self.arrived.contains(&i))
+        fast
     }
 
     fn handle(&mut self, kind: EventKind) -> anyhow::Result<()> {
         self.stats.events += 1;
         match kind {
             EventKind::ComputeDone { node } => {
-                let msg = self.in_flight[node]
-                    .as_ref()
-                    .ok_or_else(|| anyhow::anyhow!("ComputeDone without outbox (node {node})"))?;
-                self.accounting.record_uplink(node, msg.bits);
+                let slot = &self.in_flight[node];
+                anyhow::ensure!(slot.occupied, "ComputeDone without outbox (node {node})");
+                self.accounting.record_uplink(node, slot.bits);
                 let delay = self.links[node].sample_uplink(&mut self.rng_latency);
                 self.queue.push(self.vtime + delay, EventKind::MsgArrive { node });
             }
             EventKind::MsgArrive { node } => {
-                let msg = self.in_flight[node]
-                    .take()
-                    .ok_or_else(|| anyhow::anyhow!("MsgArrive without payload (node {node})"))?;
-                self.xhat[node].commit(&msg.dx);
-                self.uhat[node].commit(&msg.du);
-                self.arrived_loss[node] = msg.loss;
-                self.arrived.insert(node);
+                let slot = &mut self.in_flight[node];
+                anyhow::ensure!(slot.occupied, "MsgArrive without payload (node {node})");
+                slot.occupied = false;
+                self.xhat[node].commit(&slot.cx.dequantized);
+                self.uhat[node].commit(&slot.cu.dequantized);
+                // keep s = Σ(x̂+û) in lockstep with the bank commits
+                self.acc.fold(&slot.cx.dequantized, &slot.cu.dequantized);
+                self.arrived_loss[node] = slot.loss;
+                if self.arrived.insert(node)
+                    && self.scheduler.staleness()[node] + 1 >= self.cfg.tau
+                {
+                    // an overdue (τ−1-stale) node just reported
+                    self.overdue_pending -= 1;
+                }
                 self.busy[node] = false;
             }
             EventKind::DownlinkArrive { node } => {
                 let pkt = self.downlink_inbox[node].pop_front().ok_or_else(|| {
                     anyhow::anyhow!("DownlinkArrive with empty inbox (node {node})")
                 })?;
-                for (zm, d) in self.z_mirror[node].iter_mut().zip(pkt.dz.iter()) {
+                for (zm, d) in self.z_mirror.row_mut(node).iter_mut().zip(pkt.dz.iter()) {
                     *zm += d;
                 }
                 if pkt.dispatch {
@@ -339,21 +407,22 @@ impl<'a> EventEngine<'a> {
     }
 
     /// One consensus round: mirrors `AsyncSim::step`'s server phase —
-    /// consensus, compressed broadcast, scheduler advance, eval — then
-    /// puts the broadcast (with the next selection's dispatch flags) on
-    /// every node's downlink.
+    /// consensus from the incremental sum (O(m); the arrivals already
+    /// folded their deltas in), compressed broadcast, scheduler advance,
+    /// eval — then puts the broadcast (with the next selection's dispatch
+    /// flags) on every node's downlink. The only O(n·m) work left on this
+    /// path is the every-K-rounds accumulator refresh.
     fn fire(&mut self) -> anyhow::Result<()> {
         let batch = self.arrived.len();
         debug_assert!(batch >= self.cfg.p_min);
         let train_loss: f64 = self.arrived.iter().map(|&i| self.arrived_loss[i]).sum();
 
-        for (buf, t) in self.xs_buf.iter_mut().zip(&self.xhat) {
-            buf.copy_from_slice(t.estimate());
+        if self.acc.refresh_due(self.stats.rounds + 1) {
+            self.acc.refresh(
+                self.xhat.iter().zip(&self.uhat).map(|(xt, ut)| (xt.estimate(), ut.estimate())),
+            );
         }
-        for (buf, t) in self.us_buf.iter_mut().zip(&self.uhat) {
-            buf.copy_from_slice(t.estimate());
-        }
-        self.z = self.problem.consensus(&self.xs_buf, &self.us_buf)?;
+        self.z = self.problem.consensus_from_sum(self.acc.sum(), self.n)?;
         let dz = self.zhat.make_delta(&self.z);
         let cz = self.compressor.compress(&dz, &mut self.server_quant);
         self.accounting.record_broadcast(MSG_HEADER_BYTES * 8 + cz.wire_bits());
@@ -362,10 +431,13 @@ impl<'a> EventEngine<'a> {
         // it when their DownlinkArrive fires, not here.
         let dz_payload = Arc::new(cz.dequantized);
 
-        let arrived_mask: Vec<bool> = (0..self.n).map(|i| self.arrived.contains(&i)).collect();
+        for (i, a) in self.arrived_mask.iter_mut().enumerate() {
+            *a = self.arrived.contains(&i);
+        }
+        let arrived_mask = &self.arrived_mask;
         let next = self
             .scheduler
-            .advance(&arrived_mask, || self.oracle.sample(&mut self.rng_oracle));
+            .advance(arrived_mask, || self.oracle.sample(&mut self.rng_oracle));
         self.arrived.clear();
         self.stats.rounds += 1;
         self.stats.virtual_time = self.vtime;
@@ -374,6 +446,12 @@ impl<'a> EventEngine<'a> {
         let max_d = self.scheduler.staleness().iter().copied().max().unwrap_or(0);
         self.stats.max_staleness = self.stats.max_staleness.max(max_d);
         debug_assert!(max_d + 1 <= self.cfg.tau, "staleness bound violated: {max_d}");
+        // The arrival set was just cleared, so the overdue count for the
+        // next round is simply |{i : dᵢ = τ−1}| under the fresh staleness
+        // counters (one O(n) pass per *round*, not per instant).
+        let tau = self.cfg.tau;
+        self.overdue_pending =
+            self.scheduler.staleness().iter().filter(|&&d| d + 1 >= tau).count();
 
         if self.stats.rounds % self.cfg.eval_every == 0 {
             let metrics = self.problem.evaluate(&self.x, &self.u, &self.z)?;
@@ -437,9 +515,9 @@ impl<'a> EventEngine<'a> {
                 let (rng, tail) = tail.split_first_mut().expect("node id out of range");
                 items.push(LocalUpdateItem {
                     node: i,
-                    zhat: &zm[i],
-                    u: &u[i],
-                    x_prev: &x[i],
+                    zhat: zm.row(i),
+                    u: u.row(i),
+                    x_prev: x.row(i),
                     rng,
                 });
                 rest = tail;
@@ -451,19 +529,36 @@ impl<'a> EventEngine<'a> {
         for (&node, (x_new, loss)) in nodes.iter().zip(results) {
             anyhow::ensure!(x_new.len() == self.m, "local_update wrong dim");
             // eq. (9b): u ← u + (x_new − ẑᵢ), against the node's mirror
-            for j in 0..self.m {
-                self.u[node][j] += x_new[j] - self.z_mirror[node][j];
+            {
+                let zrow = self.z_mirror.row(node);
+                let urow = self.u.row_mut(node);
+                for j in 0..self.m {
+                    urow[j] += x_new[j] - zrow[j];
+                }
             }
-            self.x[node] = x_new;
+            self.x.row_mut(node).copy_from_slice(&x_new);
             // eqs. (10)–(14): compress deltas against the node's estimate
-            // bank (== the server bank: its previous update has landed)
-            let dx = self.xhat[node].make_delta(&self.x[node]);
-            let du = self.uhat[node].make_delta(&self.u[node]);
-            let cx = self.compressor.compress(&dx, &mut self.node_quant[node]);
-            let cu = self.compressor.compress(&du, &mut self.node_quant[node]);
-            let bits = MSG_HEADER_BYTES * 8 + cx.wire_bits() + cu.wire_bits();
-            self.in_flight[node] =
-                Some(InFlightMsg { dx: cx.dequantized, du: cu.dequantized, bits, loss });
+            // bank (== the server bank: its previous update has landed),
+            // writing through the pooled delta scratch and the node's
+            // in-flight slot — no steady-state allocation on this path
+            // (the problem's `x_new` vector is the one remaining alloc,
+            // inherent to the `local_update` signature)
+            let slot = &mut self.in_flight[node];
+            self.xhat[node].make_delta_into(self.x.row(node), &mut self.delta_buf);
+            self.compressor.compress_into(
+                &self.delta_buf,
+                &mut self.node_quant[node],
+                &mut slot.cx,
+            );
+            self.uhat[node].make_delta_into(self.u.row(node), &mut self.delta_buf);
+            self.compressor.compress_into(
+                &self.delta_buf,
+                &mut self.node_quant[node],
+                &mut slot.cu,
+            );
+            slot.bits = MSG_HEADER_BYTES * 8 + slot.cx.wire_bits() + slot.cu.wire_bits();
+            slot.loss = loss;
+            slot.occupied = true;
             self.busy[node] = true;
             self.stats.dispatches += 1;
             let delay = self.links[node].sample_compute(&mut self.rng_latency);
@@ -507,7 +602,7 @@ impl<'a> EventEngine<'a> {
 
     /// Node `i`'s current view of ẑ (advances only on downlink arrival).
     pub fn z_mirror(&self, node: usize) -> &[f64] {
-        &self.z_mirror[node]
+        self.z_mirror.row(node)
     }
 
     /// The server's own ẑ estimate (what the mirrors converge to once

@@ -12,7 +12,8 @@ use crate::compress::error_feedback::EstimateTracker;
 use crate::compress::Compressor;
 use crate::config::ExperimentConfig;
 use crate::metrics::{IterRecord, RunRecorder};
-use crate::problems::Problem;
+use crate::problems::accumulator::ConsensusAccumulator;
+use crate::problems::{Arena, Problem};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -52,15 +53,20 @@ pub struct AsyncSim<'a> {
     compressor: Box<dyn Compressor>,
     m: usize,
     n: usize,
-    // true iterates
-    x: Vec<Vec<f64>>,
-    u: Vec<Vec<f64>>,
+    // true iterates, flattened into contiguous n×m arenas
+    x: Arena,
+    u: Arena,
     z: Vec<f64>,
     // shared estimate banks (server view == node mirrors; transport is the
     // lossless frame of the lossy code, so one copy suffices in-process)
     xhat: Vec<EstimateTracker>,
     uhat: Vec<EstimateTracker>,
     zhat: EstimateTracker,
+    /// Incremental server sum s = Σ(x̂+û): folded per active node in node
+    /// order, the *same* fold order the event engine's `MsgArrive` stream
+    /// produces at zero latency — this is what keeps the parity contract
+    /// bit-exact through the incremental consensus path.
+    acc: ConsensusAccumulator,
     active: Vec<bool>,
     scheduler: Scheduler,
     oracle: AsyncOracle,
@@ -86,8 +92,8 @@ impl<'a> AsyncSim<'a> {
         let ef = cfg.error_feedback;
         let x0 = problem.init_x(&mut rngs.init);
         anyhow::ensure!(x0.len() == m, "init_x returned wrong dimension");
-        let x: Vec<Vec<f64>> = vec![x0.clone(); n];
-        let u: Vec<Vec<f64>> = vec![vec![0.0; m]; n];
+        let x = Arena::broadcast_row(&x0, n);
+        let u = Arena::zeros(n, m);
 
         let mut accounting = CommAccounting::new(n);
         // lines 1–4: nodes transmit x⁰, u⁰ at full precision, charged at the
@@ -103,10 +109,11 @@ impl<'a> AsyncSim<'a> {
         let uhat: Vec<EstimateTracker> =
             (0..n).map(|_| EstimateTracker::new(vec![0.0; m], ef)).collect();
 
-        // line 7: z⁰ from the (exact) estimates; line 8: broadcast full precision
-        let xs: Vec<Vec<f64>> = xhat.iter().map(|t| t.estimate().to_vec()).collect();
-        let us: Vec<Vec<f64>> = uhat.iter().map(|t| t.estimate().to_vec()).collect();
-        let z = problem.consensus(&xs, &us)?;
+        // line 7: z⁰ from the (exact) estimates via the incremental path
+        // seeded with a full bank sweep; line 8: broadcast full precision
+        let mut acc = ConsensusAccumulator::new(m, cfg.consensus_refresh_every);
+        acc.refresh(xhat.iter().zip(&uhat).map(|(xt, ut)| (xt.estimate(), ut.estimate())));
+        let z = problem.consensus_from_sum(acc.sum(), n)?;
         accounting.record_broadcast(MSG_HEADER_BYTES * 8 + m as u64 * INIT_BITS_PER_SCALAR);
         let zhat = EstimateTracker::new(z.clone(), ef);
 
@@ -121,6 +128,7 @@ impl<'a> AsyncSim<'a> {
             xhat,
             uhat,
             zhat,
+            acc,
             active: vec![true; n], // A₀ = V: every node computes first
             scheduler: Scheduler::new(n, cfg.tau, cfg.p_min),
             oracle,
@@ -146,25 +154,30 @@ impl<'a> AsyncSim<'a> {
             if !self.active[i] {
                 continue;
             }
-            let zhat_view = self.zhat.estimate().to_vec();
             let (x_new, loss) = self.problem.local_update(
                 i,
-                &zhat_view,
-                &self.u[i],
-                &self.x[i],
+                self.zhat.estimate(),
+                self.u.row(i),
+                self.x.row(i),
                 &mut self.rng_batches,
             )?;
             anyhow::ensure!(x_new.len() == self.m, "local_update wrong dim");
             // eq. (9b): u ← u + (x_new − ẑ)
-            for j in 0..self.m {
-                self.u[i][j] += x_new[j] - zhat_view[j];
+            {
+                let zhat_view = self.zhat.estimate();
+                let ui = self.u.row_mut(i);
+                for j in 0..self.m {
+                    ui[j] += x_new[j] - zhat_view[j];
+                }
             }
-            self.x[i] = x_new;
+            self.x.row_mut(i).copy_from_slice(&x_new);
             train_loss += loss;
 
-            // eqs. (10)–(14): compress deltas, update both estimate banks
-            let dx = self.xhat[i].make_delta(&self.x[i]);
-            let du = self.uhat[i].make_delta(&self.u[i]);
+            // eqs. (10)–(14): compress deltas, update both estimate banks,
+            // and fold the committed deltas into the running consensus sum
+            // (s += C(Δx) + C(Δu), the O(m)-per-arrival server cost)
+            let dx = self.xhat[i].make_delta(self.x.row(i));
+            let du = self.uhat[i].make_delta(self.u.row(i));
             let cx = self.compressor.compress(&dx, &mut self.rng_quant);
             let cu = self.compressor.compress(&du, &mut self.rng_quant);
             self.accounting.record_uplink(
@@ -173,12 +186,17 @@ impl<'a> AsyncSim<'a> {
             );
             self.xhat[i].commit(&cx.dequantized);
             self.uhat[i].commit(&cu.dequantized);
+            self.acc.fold(&cx.dequantized, &cu.dequantized);
         }
 
-        // --- server (lines 27–43) ---
-        let xs: Vec<Vec<f64>> = self.xhat.iter().map(|t| t.estimate().to_vec()).collect();
-        let us: Vec<Vec<f64>> = self.uhat.iter().map(|t| t.estimate().to_vec()).collect();
-        self.z = self.problem.consensus(&xs, &us)?;
+        // --- server (lines 27–43): consensus from the incremental sum,
+        // with the periodic full-recompute drift wash-out ---
+        if self.acc.refresh_due(self.iter + 1) {
+            self.acc.refresh(
+                self.xhat.iter().zip(&self.uhat).map(|(xt, ut)| (xt.estimate(), ut.estimate())),
+            );
+        }
+        self.z = self.problem.consensus_from_sum(self.acc.sum(), self.n)?;
         let dz = self.zhat.make_delta(&self.z);
         let cz = self.compressor.compress(&dz, &mut self.rng_quant);
         self.accounting.record_broadcast(MSG_HEADER_BYTES * 8 + cz.wire_bits());
@@ -226,11 +244,12 @@ impl<'a> AsyncSim<'a> {
         &self.z
     }
 
-    pub fn x(&self) -> &[Vec<f64>] {
+    /// True iterates, one row per node.
+    pub fn x(&self) -> &Arena {
         &self.x
     }
 
-    pub fn u(&self) -> &[Vec<f64>] {
+    pub fn u(&self) -> &Arena {
         &self.u
     }
 

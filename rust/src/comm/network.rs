@@ -228,8 +228,9 @@ mod tests {
         assert!(matches!(nodes[1].recv().unwrap(), ServerToNode::Consensus { .. }));
         let acc = acc.lock().unwrap();
         assert_eq!(acc.total_uplink_bits(), 2 * (12 + 16) * 8);
-        // header + 4-byte count + two 4-byte ids + payload, per link
-        assert_eq!(acc.total_downlink_bits(), 2 * (12 + 4 + 8 + 4) * 8);
+        // header + payload per link (the inclusion list is control plane
+        // and not charged — eq. 20 counts data)
+        assert_eq!(acc.total_downlink_bits(), 2 * (12 + 4) * 8);
     }
 
     #[test]

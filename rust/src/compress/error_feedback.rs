@@ -28,15 +28,24 @@ impl EstimateTracker {
     /// The Δ the sender should compress for the new iterate (and remember
     /// the iterate for the EF-off mode).
     pub fn make_delta(&mut self, current: &[f64]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(current.len());
+        self.make_delta_into(current, &mut out);
+        out
+    }
+
+    /// [`Self::make_delta`] into a caller-owned buffer (cleared, then
+    /// filled) — the engine hot path reuses one scratch vector per round so
+    /// delta construction does no steady-state allocation.
+    pub fn make_delta_into(&mut self, current: &[f64], out: &mut Vec<f64>) {
+        out.clear();
         let base: &[f64] = match &self.last_true {
             Some(lt) if !self.feedback => lt,
             _ => &self.estimate,
         };
-        let delta = current.iter().zip(base).map(|(c, b)| c - b).collect();
+        out.extend(current.iter().zip(base).map(|(c, b)| c - b));
         if let Some(lt) = &mut self.last_true {
             lt.copy_from_slice(current);
         }
-        delta
     }
 
     /// Apply a dequantized message to the estimate: ŷ += C(Δ).

@@ -17,6 +17,15 @@ impl Compressor for Identity {
     fn compress(&self, delta: &[f64], _rng: &mut Pcg64) -> Compressed {
         Compressed { dequantized: delta.to_vec(), wire: encode_dense64(delta) }
     }
+
+    /// Pooled-buffer variant: clears and refills `out`, reusing capacity —
+    /// no steady-state allocation. The frame comes from the same
+    /// [`super::wire::encode_dense64_into`] encoder `compress` uses.
+    fn compress_into(&self, delta: &[f64], _rng: &mut Pcg64, out: &mut Compressed) {
+        out.dequantized.clear();
+        out.dequantized.extend_from_slice(delta);
+        super::wire::encode_dense64_into(delta, &mut out.wire);
+    }
 }
 
 /// Dense fp32 wire — the paper's "full precision (e.g., 32-bits per
@@ -35,6 +44,14 @@ impl Compressor for Identity32 {
         let wire = super::wire::encode_dense32(delta);
         let dequantized = delta.iter().map(|&x| x as f32 as f64).collect();
         Compressed { dequantized, wire }
+    }
+
+    /// Pooled-buffer variant via [`super::wire::encode_dense32_into`] —
+    /// one source of truth for the dense32 frame.
+    fn compress_into(&self, delta: &[f64], _rng: &mut Pcg64, out: &mut Compressed) {
+        out.dequantized.clear();
+        out.dequantized.extend(delta.iter().map(|&x| x as f32 as f64));
+        super::wire::encode_dense32_into(delta, &mut out.wire);
     }
 }
 

@@ -33,6 +33,11 @@ pub struct Compressed {
 }
 
 impl Compressed {
+    /// An empty container for [`Compressor::compress_into`] reuse.
+    pub fn empty() -> Self {
+        Self { dequantized: Vec::new(), wire: Vec::new() }
+    }
+
     pub fn wire_bits(&self) -> u64 {
         self.wire.len() as u64 * 8
     }
@@ -45,6 +50,17 @@ pub trait Compressor: Send {
 
     /// Compress `delta`, drawing any randomness from `rng`.
     fn compress(&self, delta: &[f64], rng: &mut Pcg64) -> Compressed;
+
+    /// [`Self::compress`] into a caller-owned [`Compressed`], reusing its
+    /// buffer capacity. The engine's dispatch path pools one `Compressed`
+    /// pair per node, so steady-state rounds do no per-message allocation.
+    /// Must be bit-identical to `compress` (same wire, same dequantized,
+    /// same RNG consumption); the default falls back to it. The hot-path
+    /// compressors (qsgd, identity, identity32) override with true in-place
+    /// encoders; the sparsifier ablations keep the allocating fallback.
+    fn compress_into(&self, delta: &[f64], rng: &mut Pcg64, out: &mut Compressed) {
+        *out = self.compress(delta, rng);
+    }
 
     /// Decode a wire message produced by this compressor (or any other —
     /// the frame is self-describing). `m` is the expected vector length.
@@ -151,6 +167,49 @@ mod tests {
         // the builder (TopK::new / RandK::new asserts)
         for s in ["topk0", "randk0", "topk1001", "randk2000", "topk70000"] {
             assert!(CompressorKind::parse(s).is_err(), "{s} should be rejected");
+        }
+    }
+
+    /// compress_into must be bit-identical to compress — same wire bytes,
+    /// same dequantized values, same RNG consumption — including when the
+    /// output buffers are dirty from a previous (longer) message.
+    #[test]
+    fn compress_into_matches_compress_for_all_kinds() {
+        let kinds = [
+            CompressorKind::Identity,
+            CompressorKind::Identity32,
+            CompressorKind::Qsgd { bits: 2 },
+            CompressorKind::Qsgd { bits: 3 },
+            CompressorKind::Qsgd { bits: 11 },
+            CompressorKind::Sign,
+            CompressorKind::TopK { frac_permille: 100 },
+            CompressorKind::RandK { frac_permille: 100 },
+        ];
+        let mut rng = Pcg64::seed_from_u64(31);
+        for kind in kinds {
+            let c = kind.build();
+            let mut out = Compressed::empty();
+            // dirty the pooled buffers with a longer vector first
+            let long = rng.normal_vec(903, 0.0, 1.0);
+            c.compress_into(&long, &mut Pcg64::seed_from_u64(1), &mut out);
+            for m in [1usize, 64, 517] {
+                let delta = rng.normal_vec(m, 0.0, 2.0);
+                let mut r1 = Pcg64::seed_from_u64(77);
+                let mut r2 = Pcg64::seed_from_u64(77);
+                let a = c.compress(&delta, &mut r1);
+                c.compress_into(&delta, &mut r2, &mut out);
+                assert_eq!(a.wire, out.wire, "kind={} m={m}", kind.label());
+                assert_eq!(a.dequantized, out.dequantized, "kind={} m={m}", kind.label());
+                assert_eq!(r1.next_u64(), r2.next_u64(), "kind={} m={m}", kind.label());
+            }
+            // zero vector keeps the RNG streams aligned too
+            let mut r1 = Pcg64::seed_from_u64(5);
+            let mut r2 = Pcg64::seed_from_u64(5);
+            let z = vec![0.0; 40];
+            let a = c.compress(&z, &mut r1);
+            c.compress_into(&z, &mut r2, &mut out);
+            assert_eq!(a.wire, out.wire, "kind={} zero", kind.label());
+            assert_eq!(r1.next_u64(), r2.next_u64(), "kind={} zero", kind.label());
         }
     }
 

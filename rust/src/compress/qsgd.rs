@@ -97,15 +97,26 @@ impl Compressor for Qsgd {
     /// operation order (|d| / norm * s, norm · lvl / s) matches
     /// quantize_with_noise and the Pallas kernel exactly.
     fn compress(&self, delta: &[f64], rng: &mut Pcg64) -> Compressed {
+        let mut out = Compressed::empty();
+        self.compress_into(delta, rng, &mut out);
+        out
+    }
+
+    /// In-place variant of the fused hot path: writes into `out`'s pooled
+    /// buffers (cleared, capacity reused) so the engine's dispatch loop
+    /// performs no steady-state allocation per message. Bit-identical to
+    /// [`Self::compress`].
+    fn compress_into(&self, delta: &[f64], rng: &mut Pcg64, out: &mut Compressed) {
         let m = delta.len();
         let s = self.s() as f64;
         let norm = delta.iter().fold(0.0f64, |mx, x| mx.max(x.abs()));
 
         // frame header (layout of wire::encode_qsgd): tag, m, q, norm
         let payload_len = super::packing::packed_len(m, self.bits);
-        let mut wire = Vec::with_capacity(14 + payload_len);
-        wire.push(super::wire::TAG_QSGD);
-        wire.extend_from_slice(&(m as u32).to_le_bytes());
+        let wire = &mut out.wire;
+        wire.clear();
+        wire.reserve(14 + payload_len);
+        super::wire::frame_header_into(wire, super::wire::TAG_QSGD, m);
         wire.push(self.bits);
         wire.extend_from_slice(&norm.to_le_bytes());
 
@@ -116,11 +127,14 @@ impl Compressor for Qsgd {
                 rng.uniform_f64();
             }
             wire.resize(14 + payload_len, 0);
-            return Compressed { dequantized: vec![0.0; m], wire };
+            out.dequantized.clear();
+            out.dequantized.resize(m, 0.0);
+            return;
         }
 
-        let mut dequantized = vec![0.0f64; m];
-        let dq = &mut dequantized[..];
+        out.dequantized.clear();
+        out.dequantized.resize(m, 0.0);
+        let dq = &mut out.dequantized[..];
         let header = wire.len();
         wire.resize(header + payload_len, 0);
         let payload = &mut wire[header..];
@@ -155,7 +169,6 @@ impl Compressor for Qsgd {
         if nbits > 0 {
             payload[byte_pos] = acc as u8;
         }
-        Compressed { dequantized, wire }
     }
 }
 

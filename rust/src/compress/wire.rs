@@ -20,6 +20,14 @@ pub const TAG_SIGN: u8 = 4;
 pub const TAG_TOPK: u8 = 5;
 pub const TAG_RANDK: u8 = 6;
 
+/// Write the universal frame header (1-byte tag + u32 LE length) into a
+/// borrowed buffer — the single definition shared by [`FrameWriter::new`]
+/// and the pooled `_into` encoders (including `Qsgd::compress_into`).
+pub fn frame_header_into(out: &mut Vec<u8>, tag: u8, m: usize) {
+    out.push(tag);
+    out.extend_from_slice(&(m as u32).to_le_bytes());
+}
+
 pub struct FrameWriter {
     buf: Vec<u8>,
 }
@@ -27,8 +35,7 @@ pub struct FrameWriter {
 impl FrameWriter {
     pub fn new(tag: u8, m: usize) -> Self {
         let mut buf = Vec::with_capacity(16);
-        buf.push(tag);
-        buf.extend_from_slice(&(m as u32).to_le_bytes());
+        frame_header_into(&mut buf, tag, m);
         Self { buf }
     }
 
@@ -108,19 +115,38 @@ impl<'a> FrameReader<'a> {
 // ---- encoders --------------------------------------------------------------
 
 pub fn encode_dense64(v: &[f64]) -> Vec<u8> {
-    let mut w = FrameWriter::new(TAG_DENSE64, v.len());
+    let mut out = Vec::new();
+    encode_dense64_into(v, &mut out);
+    out
+}
+
+/// [`encode_dense64`] into a caller-owned buffer (cleared, capacity
+/// reused) — the pooled hot path. Single source of truth for the dense64
+/// frame layout.
+pub fn encode_dense64_into(v: &[f64], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(5 + 8 * v.len());
+    frame_header_into(out, TAG_DENSE64, v.len());
     for &x in v {
-        w.f64(x);
+        out.extend_from_slice(&x.to_le_bytes());
     }
-    w.finish()
 }
 
 pub fn encode_dense32(v: &[f64]) -> Vec<u8> {
-    let mut w = FrameWriter::new(TAG_DENSE32, v.len());
+    let mut out = Vec::new();
+    encode_dense32_into(v, &mut out);
+    out
+}
+
+/// [`encode_dense32`] into a caller-owned buffer (cleared, capacity
+/// reused). Single source of truth for the dense32 frame layout.
+pub fn encode_dense32_into(v: &[f64], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(5 + 4 * v.len());
+    frame_header_into(out, TAG_DENSE32, v.len());
     for &x in v {
-        w.f32(x as f32);
+        out.extend_from_slice(&(x as f32).to_le_bytes());
     }
-    w.finish()
 }
 
 pub fn encode_qsgd(levels: &[i32], norm: f64, q: u8) -> Vec<u8> {

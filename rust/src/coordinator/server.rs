@@ -12,6 +12,8 @@ use crate::compress::error_feedback::EstimateTracker;
 use crate::compress::{wire, Compressor};
 use crate::config::ExperimentConfig;
 use crate::metrics::{IterRecord, RunRecorder};
+use crate::problems::accumulator::ConsensusAccumulator;
+use crate::problems::Arena;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -31,6 +33,11 @@ pub struct ServerLoop {
     xhat: Vec<EstimateTracker>,
     uhat: Vec<EstimateTracker>,
     zhat: Option<EstimateTracker>,
+    /// Incremental consensus sum: each decoded arrival folds its deltas in
+    /// (real arrival order — no bitwise replay claim in the deployment
+    /// shape, only the accumulator's drift bound), so the per-round
+    /// consensus is O(m) + the every-K-rounds refresh.
+    acc: ConsensusAccumulator,
     d: Vec<usize>,
     pending: BTreeSet<usize>,
     rng: Pcg64,
@@ -65,6 +72,7 @@ impl ServerLoop {
             xhat: (0..n).map(|_| EstimateTracker::new(x0.clone(), ef)).collect(),
             uhat: (0..n).map(|_| EstimateTracker::new(vec![0.0; m], ef)).collect(),
             zhat: None,
+            acc: ConsensusAccumulator::new(m, cfg.consensus_refresh_every),
             d: vec![0; n],
             pending: BTreeSet::new(),
             rng,
@@ -91,6 +99,9 @@ impl ServerLoop {
                 }
             }
         }
+        // seed the incremental sum with one full bank sweep, then fold
+        // arrivals in as they land
+        self.refresh_sum();
         let z = self.consensus()?;
         self.ep.broadcast(&ServerToNode::InitZ { z0: z.clone() })?;
         self.zhat = Some(EstimateTracker::new(z, true));
@@ -98,6 +109,9 @@ impl ServerLoop {
         // ---- main rounds ----
         for r in 0..self.iters {
             self.gather_batch()?;
+            if self.acc.refresh_due(r + 1) {
+                self.refresh_sum();
+            }
             let z = self.consensus()?;
             let dz = self.zhat.as_mut().unwrap().make_delta(&z);
             let cz = self.compressor.compress(&dz, &mut self.rng);
@@ -121,10 +135,10 @@ impl ServerLoop {
             self.pending.clear();
 
             if (r + 1) % self.eval_every == 0 {
-                let xs: Vec<Vec<f64>> =
-                    self.xhat.iter().map(|t| t.estimate().to_vec()).collect();
-                let us: Vec<Vec<f64>> =
-                    self.uhat.iter().map(|t| t.estimate().to_vec()).collect();
+                let xs =
+                    Arena::from_rows_iter(self.m, self.xhat.iter().map(|t| t.estimate()));
+                let us =
+                    Arena::from_rows_iter(self.m, self.uhat.iter().map(|t| t.estimate()));
                 let metrics = self.problem.lock().unwrap().evaluate(&xs, &us, &z)?;
                 let comm_bits =
                     self.accounting.lock().unwrap().normalized_bits(self.m);
@@ -161,6 +175,9 @@ impl ServerLoop {
                     let du = wire::decode(&du_wire, self.m)?;
                     self.xhat[node].commit(&dx);
                     self.uhat[node].commit(&du);
+                    // O(m) fold keeps s = Σ(x̂+û) current without the
+                    // per-round bank sweep
+                    self.acc.fold(&dx, &du);
                     self.pending.insert(node);
                 }
                 // Duplicated InitFull frames (fault injection) are ignored —
@@ -175,9 +192,15 @@ impl ServerLoop {
         }
     }
 
+    /// z = prox(s/n) from the incremental sum — O(m) per round.
     fn consensus(&mut self) -> anyhow::Result<Vec<f64>> {
-        let xs: Vec<Vec<f64>> = self.xhat.iter().map(|t| t.estimate().to_vec()).collect();
-        let us: Vec<Vec<f64>> = self.uhat.iter().map(|t| t.estimate().to_vec()).collect();
-        self.problem.lock().unwrap().consensus(&xs, &us)
+        self.problem.lock().unwrap().consensus_from_sum(self.acc.sum(), self.n)
+    }
+
+    /// Full O(n·m) rebuild of the sum from the banks (init + every-K-rounds
+    /// drift wash-out).
+    fn refresh_sum(&mut self) {
+        self.acc
+            .refresh(self.xhat.iter().zip(&self.uhat).map(|(x, u)| (x.estimate(), u.estimate())));
     }
 }

@@ -64,7 +64,8 @@ USAGE: qadmm <cmd> [--options]
             [--trials N] [--q N|--compressor KIND] [--tau N] [--p N]
             [--seed N] [--no-ef] [--out DIR]
             [--compute-delay L] [--uplink-delay L] [--downlink-delay L]
-            [--clock-drift E]
+            [--clock-drift E] [--refresh-every K]  (K rounds between full
+            recomputes of the incremental consensus sum; 0 = never)
   fig3      [--iters N] [--trials N] [--backend hlo|native] [--target X]
   fig4      [--iters N] [--trials N] [--arch cnn|mlp] [--train N] [--test N]
   ablation  [--iters N] [--trials N] [--target X]
@@ -92,6 +93,8 @@ fn apply_overrides(
     cfg.p_min = args.usize("p", cfg.p_min);
     cfg.seed = args.u64("seed", cfg.seed);
     cfg.eval_every = args.usize("eval-every", cfg.eval_every);
+    cfg.consensus_refresh_every =
+        args.usize("refresh-every", cfg.consensus_refresh_every);
     let engine = args.choice(
         "engine",
         cfg.engine.label(),

@@ -12,7 +12,7 @@
 //! Data generation follows the paper exactly: Aᵢ ~ N(0,1), b = A z₀ + n with
 //! z₀ sparse (0.2·M nonzeros ~ N(0,1)) and n ~ N(0, 0.01).
 
-use super::{EvalMetrics, LocalUpdateItem, Problem};
+use super::{fan_out_batch, Arena, EvalMetrics, LocalUpdateItem, Problem};
 use crate::config::Backend;
 use crate::runtime::tensor::Tensor;
 use crate::runtime::Exec;
@@ -197,20 +197,22 @@ impl LassoProblem {
         Ok(self)
     }
 
-    /// Augmented Lagrangian (eq. 3/4) with λ = ρu, in exact f64.
-    pub fn lagrangian(&self, x: &[Vec<f64>], u: &[Vec<f64>], z: &[f64]) -> f64 {
+    /// Augmented Lagrangian (eq. 3/4) with λ = ρu, in exact f64. `x`/`u`
+    /// are the n×m iterate arenas (one row per node).
+    pub fn lagrangian(&self, x: &Arena, u: &Arena, z: &[f64]) -> f64 {
         let LassoConfig { n, rho, theta, .. } = self.cfg;
         let mut total = 0.0;
         for i in 0..n {
+            let (xi, ui) = (x.row(i), u.row(i));
             // f_i = ‖Ax‖² − (2Aᵀb)ᵀx + bᵀb  (O(h·m), no Gram needed)
-            let ax = self.a[i].matvec(&x[i]);
-            total += dot(&ax, &ax) - dot(&self.atb2[i], &x[i]) + self.btb[i];
+            let ax = self.a[i].matvec(xi);
+            total += dot(&ax, &ax) - dot(&self.atb2[i], xi) + self.btb[i];
             let mut pen = 0.0;
             let mut unorm = 0.0;
             for j in 0..self.cfg.m {
-                let r = x[i][j] - z[j] + u[i][j];
+                let r = xi[j] - z[j] + ui[j];
                 pen += r * r;
-                unorm += u[i][j] * u[i][j];
+                unorm += ui[j] * ui[j];
             }
             total += 0.5 * rho * (pen - unorm);
         }
@@ -248,7 +250,7 @@ impl LassoProblem {
             }
             z = self.consensus_native(&x, &u);
         }
-        let f = self.lagrangian(&x, &u, &z);
+        let f = self.lagrangian(&Arena::from_rows(&x), &Arena::from_rows(&u), &z);
         self.fstar = Some(f);
         f
     }
@@ -388,17 +390,16 @@ impl Problem for LassoProblem {
         Ok((x, loss))
     }
 
-    /// Deterministic worker-pool fan-out: the native update is pure math
-    /// over per-node data, so chunks run on scoped threads and merge back
-    /// in item order — bit-identical to the sequential path for any pool
-    /// size. HLO execution is serialized by the compute service, so that
-    /// backend keeps the sequential default.
+    /// Deterministic worker-pool fan-out ([`fan_out_batch`]): the native
+    /// update is pure math over per-node data, so chunks run on scoped
+    /// threads and merge back in item order — bit-identical to the
+    /// sequential path for any pool size. HLO execution is serialized by
+    /// the compute service, so that backend keeps the sequential default.
     fn local_update_batch(
         &mut self,
         items: &mut [LocalUpdateItem<'_>],
     ) -> anyhow::Result<Vec<(Vec<f64>, f64)>> {
-        let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-        if self.backend != Backend::Native || items.len() < 2 || workers < 2 {
+        if self.backend != Backend::Native {
             let mut out = Vec::with_capacity(items.len());
             for it in items.iter_mut() {
                 out.push(self.local_update(it.node, it.zhat, it.u, it.x_prev, it.rng)?);
@@ -407,25 +408,12 @@ impl Problem for LassoProblem {
         }
         let (a, atb2, btb) = (&self.a, &self.atb2, &self.btb);
         let (solver, rho) = (&self.solver, self.cfg.rho);
-        let run_one = |it: &LocalUpdateItem<'_>| -> (Vec<f64>, f64) {
+        Ok(fan_out_batch(items, |it: &LocalUpdateItem<'_>| {
             let node = it.node;
             let x = native_primal(&a[node], &atb2[node], solver, node, rho, it.zhat, it.u);
             let loss = native_loss(&a[node], &atb2[node], btb[node], &x);
             (x, loss)
-        };
-        let chunk = items.len().div_ceil(workers.min(items.len()));
-        let results: Vec<Vec<(Vec<f64>, f64)>> = std::thread::scope(|s| {
-            let run = &run_one;
-            let handles: Vec<_> = items
-                .chunks(chunk)
-                .map(|slice| s.spawn(move || slice.iter().map(run).collect()))
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("lasso worker panicked"))
-                .collect()
-        });
-        Ok(results.into_iter().flatten().collect())
+        }))
     }
 
     fn consensus(&mut self, xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
@@ -435,12 +423,22 @@ impl Problem for LassoProblem {
         }
     }
 
-    fn evaluate(
-        &mut self,
-        x: &[Vec<f64>],
-        u: &[Vec<f64>],
-        z: &[f64],
-    ) -> anyhow::Result<EvalMetrics> {
+    /// Eq. 15 from the running sum: z = S_{θ/(ρn)}(s/n), O(m). Computed in
+    /// native f64 on every backend: the HLO `lasso_server_step` artifact
+    /// consumes the *stacked banks*, so it cannot serve the incremental
+    /// path — and since every runtime (init included) now goes through this
+    /// method, the artifact is exercised only by the explicit bank-based
+    /// [`Problem::consensus`] calls in the HLO parity tests and benches,
+    /// not by any run path (ROADMAP records the retire-or-rewire decision).
+    fn consensus_from_sum(&mut self, sum: &[f64], n_nodes: usize) -> anyhow::Result<Vec<f64>> {
+        let LassoConfig { rho, theta, .. } = self.cfg;
+        let n = n_nodes as f64;
+        let mut v: Vec<f64> = sum.iter().map(|s| s / n).collect();
+        prox::soft_threshold_in_place(&mut v, theta / (rho * n));
+        Ok(v)
+    }
+
+    fn evaluate(&mut self, x: &Arena, u: &Arena, z: &[f64]) -> anyhow::Result<EvalMetrics> {
         let fstar = self.reference_optimum(6000);
         let lag = self.lagrangian(x, u, z);
         Ok(EvalMetrics {
@@ -559,6 +557,27 @@ mod tests {
         }
     }
 
+    /// consensus_from_sum fed the exact Σ(x̂+û) must reproduce the bank-
+    /// based consensus bit-for-bit (same division and prox order).
+    #[test]
+    fn consensus_from_sum_matches_bank_consensus_bitwise() {
+        let (mut p, mut rng) = small();
+        let xhat: Vec<Vec<f64>> = (0..4).map(|_| rng.normal_vec(24, 0.0, 1.0)).collect();
+        let uhat: Vec<Vec<f64>> = (0..4).map(|_| rng.normal_vec(24, 0.0, 0.1)).collect();
+        let z_banks = p.consensus(&xhat, &uhat).unwrap();
+        // the same left-to-right summation order consensus_native uses
+        let mut sum = vec![0.0; 24];
+        for i in 0..4 {
+            for j in 0..24 {
+                sum[j] += xhat[i][j] + uhat[i][j];
+            }
+        }
+        let z_sum = p.consensus_from_sum(&sum, 4).unwrap();
+        for (a, b) in z_banks.iter().zip(&z_sum) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
     #[test]
     fn reference_optimum_agrees_with_fista() {
         let (mut p, _) = small();
@@ -594,7 +613,8 @@ mod tests {
             }
             z = p.consensus(&x, &u).unwrap();
         }
-        let metrics = p.evaluate(&x, &u, &z).unwrap();
+        let metrics =
+            p.evaluate(&Arena::from_rows(&x), &Arena::from_rows(&u), &z).unwrap();
         assert!(metrics.accuracy < 1e-6, "accuracy={}", metrics.accuracy);
         assert!((metrics.loss - fstar).abs() / fstar < 1e-6);
     }

@@ -9,8 +9,13 @@
 //!
 //! The ridge term is carried by the consensus prox (h = γ/2‖·‖²  ⇒
 //! z = ρN/(γ+ρN) · mean(x̂+û)).
+//!
+//! The update is pure math over per-node data — no RNG draws — so the
+//! batch fan-out runs on the shared worker pool
+//! ([`crate::problems::fan_out_batch`]), bit-identical to the sequential
+//! order for any pool size (the engine-parity contract relies on this).
 
-use super::{EvalMetrics, Problem};
+use super::{fan_out_batch, Arena, EvalMetrics, LocalUpdateItem, Problem};
 use crate::solver::linalg::{dot, Mat};
 use crate::util::rng::Pcg64;
 
@@ -26,6 +31,56 @@ pub struct LogRegConfig {
     pub k_steps: usize,
     /// inner step size
     pub lr: f64,
+}
+
+/// Σ_j log(1 + exp(−y_j aᵀx)) for one node's data. Free function so the
+/// sequential path and the worker-pool fan-out share one body.
+fn node_nll(a: &Mat, y: &[f64], x: &[f64]) -> f64 {
+    let margins = a.matvec(x);
+    margins
+        .iter()
+        .zip(y)
+        .map(|(&mgn, &yj)| {
+            let t = -yj * mgn;
+            // stable log1p(exp(t))
+            if t > 30.0 { t } else { (1.0 + t.exp()).ln() }
+        })
+        .sum()
+}
+
+fn node_grad(a: &Mat, y: &[f64], x: &[f64]) -> Vec<f64> {
+    let margins = a.matvec(x);
+    let w: Vec<f64> = margins
+        .iter()
+        .zip(y)
+        .map(|(&mgn, &yj)| -yj / (1.0 + (yj * mgn).exp()))
+        .collect();
+    a.matvec_t(&w)
+}
+
+/// Eq. (9a) inexact solve: K gradient steps on f_i(x) + ρ/2‖x − ẑ + u‖²
+/// with a 1/(L̂+ρ)-ish fixed step, from `x_prev`. Deterministic (no RNG).
+fn inexact_primal(
+    a: &Mat,
+    y: &[f64],
+    cfg: &LogRegConfig,
+    zhat: &[f64],
+    u: &[f64],
+    x_prev: &[f64],
+) -> (Vec<f64>, f64) {
+    let rho = cfg.rho;
+    let mut x = x_prev.to_vec();
+    for _ in 0..cfg.k_steps {
+        let mut g = node_grad(a, y, &x);
+        for j in 0..cfg.m {
+            g[j] += rho * (x[j] - zhat[j] + u[j]);
+        }
+        for j in 0..cfg.m {
+            x[j] -= cfg.lr * g[j];
+        }
+    }
+    let loss = node_nll(a, y, &x);
+    (x, loss)
 }
 
 pub struct LogRegProblem {
@@ -61,26 +116,11 @@ impl LogRegProblem {
 
     /// Σ_j log(1 + exp(−y_j aᵀx)) for one node.
     fn local_nll(&self, node: usize, x: &[f64]) -> f64 {
-        let margins = self.a[node].matvec(x);
-        margins
-            .iter()
-            .zip(&self.y[node])
-            .map(|(&mgn, &yj)| {
-                let t = -yj * mgn;
-                // stable log1p(exp(t))
-                if t > 30.0 { t } else { (1.0 + t.exp()).ln() }
-            })
-            .sum()
+        node_nll(&self.a[node], &self.y[node], x)
     }
 
     fn local_grad(&self, node: usize, x: &[f64]) -> Vec<f64> {
-        let margins = self.a[node].matvec(x);
-        let w: Vec<f64> = margins
-            .iter()
-            .zip(&self.y[node])
-            .map(|(&mgn, &yj)| -yj / (1.0 + (yj * mgn).exp()))
-            .collect();
-        self.a[node].matvec_t(&w)
+        node_grad(&self.a[node], &self.y[node], x)
     }
 
     /// Global objective at consensus point z.
@@ -89,14 +129,16 @@ impl LogRegProblem {
         nll + 0.5 * self.cfg.gamma * dot(z, z)
     }
 
-    /// Augmented Lagrangian (eq. 4 with h = γ/2‖·‖²).
-    pub fn lagrangian(&self, x: &[Vec<f64>], u: &[Vec<f64>], z: &[f64]) -> f64 {
+    /// Augmented Lagrangian (eq. 4 with h = γ/2‖·‖²) over the n×m iterate
+    /// arenas.
+    pub fn lagrangian(&self, x: &Arena, u: &Arena, z: &[f64]) -> f64 {
         let mut total = 0.5 * self.cfg.gamma * dot(z, z);
         for i in 0..self.cfg.n {
-            total += self.local_nll(i, &x[i]);
+            let (xi, ui) = (x.row(i), u.row(i));
+            total += self.local_nll(i, xi);
             for j in 0..self.cfg.m {
-                let r = x[i][j] - z[j] + u[i][j];
-                total += 0.5 * self.cfg.rho * (r * r - u[i][j] * u[i][j]);
+                let r = xi[j] - z[j] + ui[j];
+                total += 0.5 * self.cfg.rho * (r * r - ui[j] * ui[j]);
             }
         }
         total
@@ -128,7 +170,7 @@ impl LogRegProblem {
             z = self.consensus(&xs, &us).unwrap();
         }
         self.cfg.k_steps = save;
-        let f = self.lagrangian(&x, &u, &z);
+        let f = self.lagrangian(&Arena::from_rows(&x), &Arena::from_rows(&u), &z);
         self.fstar = Some(f);
         f
     }
@@ -164,43 +206,44 @@ impl Problem for LogRegProblem {
         x_prev: &[f64],
         _rng: &mut Pcg64,
     ) -> anyhow::Result<(Vec<f64>, f64)> {
-        let rho = self.cfg.rho;
-        let mut x = x_prev.to_vec();
-        for _ in 0..self.cfg.k_steps {
-            let mut g = self.local_grad(node, &x);
-            for j in 0..self.cfg.m {
-                g[j] += rho * (x[j] - zhat[j] + u[j]);
-            }
-            for j in 0..self.cfg.m {
-                x[j] -= self.cfg.lr * g[j];
-            }
-        }
-        let loss = self.local_nll(node, &x);
-        Ok((x, loss))
+        Ok(inexact_primal(&self.a[node], &self.y[node], &self.cfg, zhat, u, x_prev))
+    }
+
+    /// Worker-pool fan-out over the shared [`fan_out_batch`] helper (the
+    /// same pool native LASSO uses): the K-step gradient loop is pure math
+    /// over per-node (Aᵢ, yᵢ), so chunks run on scoped threads and merge in
+    /// item order — bit-identical to sequential for any pool size.
+    fn local_update_batch(
+        &mut self,
+        items: &mut [LocalUpdateItem<'_>],
+    ) -> anyhow::Result<Vec<(Vec<f64>, f64)>> {
+        let (a, y, cfg) = (&self.a, &self.y, &self.cfg);
+        Ok(fan_out_batch(items, |it: &LocalUpdateItem<'_>| {
+            inexact_primal(&a[it.node], &y[it.node], cfg, it.zhat, it.u, it.x_prev)
+        }))
     }
 
     /// prox of γ/2‖·‖²: z = ρN/(γ + ρN) · mean(x̂ + û).
     fn consensus(&mut self, xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
-        let (m, n, rho, gamma) = (self.cfg.m, xhat.len(), self.cfg.rho, self.cfg.gamma);
-        let shrink = rho * n as f64 / (gamma + rho * n as f64);
-        let mut z = vec![0.0; m];
+        let (m, n) = (self.cfg.m, xhat.len());
+        let mut sum = vec![0.0; m];
         for i in 0..n {
             for j in 0..m {
-                z[j] += xhat[i][j] + uhat[i][j];
+                sum[j] += xhat[i][j] + uhat[i][j];
             }
         }
-        for v in &mut z {
-            *v = shrink * (*v / n as f64);
-        }
-        Ok(z)
+        self.consensus_from_sum(&sum, n)
     }
 
-    fn evaluate(
-        &mut self,
-        x: &[Vec<f64>],
-        u: &[Vec<f64>],
-        z: &[f64],
-    ) -> anyhow::Result<EvalMetrics> {
+    /// The shrunk mean from the running sum: z = shrink · (s/n), O(m).
+    fn consensus_from_sum(&mut self, sum: &[f64], n_nodes: usize) -> anyhow::Result<Vec<f64>> {
+        let (rho, gamma) = (self.cfg.rho, self.cfg.gamma);
+        let n = n_nodes as f64;
+        let shrink = rho * n / (gamma + rho * n);
+        Ok(sum.iter().map(|s| shrink * (s / n)).collect())
+    }
+
+    fn evaluate(&mut self, x: &Arena, u: &Arena, z: &[f64]) -> anyhow::Result<EvalMetrics> {
         let fstar = self.reference_optimum(400);
         let lag = self.lagrangian(x, u, z);
         Ok(EvalMetrics {
@@ -251,6 +294,34 @@ mod tests {
                 (0..4).map(|i| xhat[i][j] + uhat[i][j]).sum::<f64>() / 4.0;
             assert!((z[j] - shrink * mean).abs() < 1e-12);
         }
+    }
+
+    /// The worker-pool fan-out must be bit-identical to node-by-node calls
+    /// (the engine parity contract leans on this for the inexact family).
+    #[test]
+    fn batch_update_matches_sequential() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let mut p = LogRegProblem::generate(small(), &mut rng).unwrap();
+        let zhat = rng.normal_vec(12, 0.0, 1.0);
+        let us: Vec<Vec<f64>> = (0..4).map(|_| rng.normal_vec(12, 0.0, 0.1)).collect();
+        let x_prev = rng.normal_vec(12, 0.0, 0.3);
+        let seq: Vec<(Vec<f64>, f64)> = (0..4)
+            .map(|i| p.local_update(i, &zhat, &us[i], &x_prev, &mut rng).unwrap())
+            .collect();
+        let mut rngs: Vec<Pcg64> = (0..4).map(|i| Pcg64::seed_from_u64(i as u64)).collect();
+        let mut items: Vec<LocalUpdateItem> = rngs
+            .iter_mut()
+            .enumerate()
+            .map(|(i, rng)| LocalUpdateItem {
+                node: i,
+                zhat: &zhat,
+                u: &us[i],
+                x_prev: &x_prev,
+                rng,
+            })
+            .collect();
+        let batch = p.local_update_batch(&mut items).unwrap();
+        assert_eq!(seq, batch);
     }
 
     #[test]

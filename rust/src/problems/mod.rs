@@ -2,12 +2,83 @@
 //! aggregates. Problems expose *pure numeric* updates; compression, error
 //! feedback and scheduling live in [`crate::admm`].
 
+pub mod accumulator;
 pub mod lasso;
 pub mod logreg;
 pub mod mnist;
 pub mod nn;
 
 use crate::util::rng::Pcg64;
+
+/// Contiguous n×m row-major storage for per-node vectors (one row per
+/// node). The engines keep their true iterates (x, u) and the downlink
+/// mirrors in arenas instead of `Vec<Vec<f64>>`: one allocation instead of
+/// n, rows adjacent in memory for the per-round sweeps, and no per-node
+/// boxing on the hot path.
+#[derive(Clone, Debug)]
+pub struct Arena {
+    m: usize,
+    data: Vec<f64>,
+}
+
+impl Arena {
+    pub fn zeros(n: usize, m: usize) -> Self {
+        Self { m, data: vec![0.0; n * m] }
+    }
+
+    /// n copies of one row (e.g. the shared x⁽⁰⁾).
+    pub fn broadcast_row(row: &[f64], n: usize) -> Self {
+        let mut a = Self::zeros(n, row.len());
+        for i in 0..n {
+            a.row_mut(i).copy_from_slice(row);
+        }
+        a
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let m = rows.first().map_or(0, Vec::len);
+        Self::from_rows_iter(m, rows.iter().map(Vec::as_slice))
+    }
+
+    pub fn from_rows_iter<'a>(m: usize, rows: impl Iterator<Item = &'a [f64]>) -> Self {
+        let mut data = Vec::new();
+        for r in rows {
+            assert_eq!(r.len(), m, "arena row length mismatch");
+            data.extend_from_slice(r);
+        }
+        Self { m, data }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        if self.m == 0 {
+            0
+        } else {
+            self.data.len() / self.m
+        }
+    }
+
+    /// Row width M.
+    pub fn dim(&self) -> usize {
+        self.m
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.m..(i + 1) * self.m]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.m..(i + 1) * self.m]
+    }
+
+    pub fn rows(&self) -> std::slice::ChunksExact<'_, f64> {
+        self.data.chunks_exact(self.m.max(1))
+    }
+
+    /// The whole n·m buffer (row-major).
+    pub fn flat(&self) -> &[f64] {
+        &self.data
+    }
+}
 
 /// One node's inputs to a fanned-out local update (see
 /// [`Problem::local_update_batch`]). Each item carries its *own* ẑ view:
@@ -23,6 +94,41 @@ pub struct LocalUpdateItem<'a> {
     pub u: &'a [f64],
     pub x_prev: &'a [f64],
     pub rng: &'a mut Pcg64,
+}
+
+/// Deterministic worker-pool fan-out shared by the native problem
+/// families (LASSO exact solves, logistic-regression gradient loops):
+/// chunk the batch across scoped threads, run `run_one` per item, merge
+/// back in item order — bit-identical to a sequential loop for any pool
+/// size. `run_one` must be pure math over per-node data (it gets a shared
+/// item reference, so it cannot draw from the item's RNG; problems whose
+/// update consumes randomness keep the sequential default).
+pub fn fan_out_batch<F>(items: &[LocalUpdateItem<'_>], run_one: F) -> Vec<(Vec<f64>, f64)>
+where
+    F: Fn(&LocalUpdateItem<'_>) -> (Vec<f64>, f64) + Sync,
+{
+    // Size check first: fragmented downlink arrivals flush many single-item
+    // batches, and available_parallelism() is an uncached syscall.
+    if items.len() < 2 {
+        return items.iter().map(&run_one).collect();
+    }
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    if workers < 2 {
+        return items.iter().map(&run_one).collect();
+    }
+    let chunk = items.len().div_ceil(workers.min(items.len()));
+    let results: Vec<Vec<(Vec<f64>, f64)>> = std::thread::scope(|s| {
+        let run = &run_one;
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|slice| s.spawn(move || slice.iter().map(run).collect()))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("batch worker panicked"))
+            .collect()
+    });
+    results.into_iter().flatten().collect()
 }
 
 /// Metrics a problem can report at evaluation points.
@@ -64,9 +170,9 @@ pub trait Problem {
     /// Fan-out of [`Self::local_update`] over a batch of nodes, each
     /// against its item's ẑ view. Results are returned in item order. The
     /// default runs sequentially; problems whose update is pure math (e.g.
-    /// native LASSO) override this with a deterministic worker pool —
-    /// results must be bit-identical to the sequential order regardless of
-    /// pool size.
+    /// native LASSO, logistic regression) override this with
+    /// [`fan_out_batch`] — results must be bit-identical to the sequential
+    /// order regardless of pool size.
     fn local_update_batch(
         &mut self,
         items: &mut [LocalUpdateItem<'_>],
@@ -78,14 +184,67 @@ pub trait Problem {
         Ok(out)
     }
 
-    /// Server consensus update (eq. 15) on the estimate banks.
+    /// Server consensus update (eq. 15) on the full estimate banks —
+    /// O(n·m). This is the reference entry point (init exchange, tests,
+    /// the HLO server-step artifact); the per-round hot path is
+    /// [`Self::consensus_from_sum`] fed by an incrementally maintained sum
+    /// ([`accumulator::ConsensusAccumulator`]).
     fn consensus(&mut self, xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> anyhow::Result<Vec<f64>>;
 
-    /// Metrics on the *true* iterates (eq. 19 uses x, z, u, not estimates).
-    fn evaluate(
-        &mut self,
-        x: &[Vec<f64>],
-        u: &[Vec<f64>],
-        z: &[f64],
-    ) -> anyhow::Result<EvalMetrics>;
+    /// Server consensus update from the precomputed running sum
+    /// s = Σᵢ(x̂ᵢ + ûᵢ) over all `n_nodes` banks: z = prox_{h/(ρn)}(s/n),
+    /// O(m). Must agree with [`Self::consensus`] whenever
+    /// `s == Σᵢ(x̂ᵢ + ûᵢ)` coordinate-wise (the engines' property tests
+    /// assert this up to the accumulator's ≤1e-10 drift bound).
+    fn consensus_from_sum(&mut self, sum: &[f64], n_nodes: usize) -> anyhow::Result<Vec<f64>>;
+
+    /// Metrics on the *true* iterates (eq. 19 uses x, z, u, not estimates),
+    /// stored as n×m arenas (one row per node).
+    fn evaluate(&mut self, x: &Arena, u: &Arena, z: &[f64]) -> anyhow::Result<EvalMetrics>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_rows_round_trip() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let mut a = Arena::from_rows(&rows);
+        assert_eq!(a.n_rows(), 3);
+        assert_eq!(a.dim(), 2);
+        assert_eq!(a.row(1), &[3.0, 4.0]);
+        a.row_mut(1)[0] = 9.0;
+        assert_eq!(a.row(1), &[9.0, 4.0]);
+        let collected: Vec<&[f64]> = a.rows().collect();
+        assert_eq!(collected.len(), 3);
+        assert_eq!(collected[2], &[5.0, 6.0]);
+        assert_eq!(a.flat(), &[1.0, 2.0, 9.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn arena_broadcast_row() {
+        let a = Arena::broadcast_row(&[7.0, 8.0], 3);
+        assert_eq!(a.n_rows(), 3);
+        for i in 0..3 {
+            assert_eq!(a.row(i), &[7.0, 8.0]);
+        }
+    }
+
+    #[test]
+    fn fan_out_matches_sequential_order() {
+        let mut rngs: Vec<Pcg64> = (0..7).map(|i| Pcg64::seed_from_u64(i)).collect();
+        let z = vec![0.0; 4];
+        let u = vec![0.0; 4];
+        let x = vec![0.0; 4];
+        let items: Vec<LocalUpdateItem<'_>> = rngs
+            .iter_mut()
+            .enumerate()
+            .map(|(i, rng)| LocalUpdateItem { node: i, zhat: &z, u: &u, x_prev: &x, rng })
+            .collect();
+        let run = |it: &LocalUpdateItem<'_>| (vec![it.node as f64; 4], it.node as f64 * 2.0);
+        let out = fan_out_batch(&items, run);
+        let seq: Vec<(Vec<f64>, f64)> = items.iter().map(run).collect();
+        assert_eq!(out, seq);
+    }
 }

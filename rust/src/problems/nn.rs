@@ -5,7 +5,7 @@
 //! computed natively in f64.
 
 use super::mnist::{self, Dataset, IMG_PIXELS};
-use super::{EvalMetrics, Problem};
+use super::{Arena, EvalMetrics, Problem};
 use crate::runtime::artifacts::{Manifest, ParamSpec};
 use crate::runtime::tensor::Tensor;
 use crate::runtime::Exec;
@@ -261,25 +261,23 @@ impl Problem for NnProblem {
 
     fn consensus(&mut self, xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
         // prox of h ≡ 0 is the identity: z = mean(x̂ + û)
-        let n = xhat.len() as f64;
-        let mut z = vec![0.0; self.m];
+        let n = xhat.len();
+        let mut sum = vec![0.0; self.m];
         for (xi, ui) in xhat.iter().zip(uhat) {
             for j in 0..self.m {
-                z[j] += xi[j] + ui[j];
+                sum[j] += xi[j] + ui[j];
             }
         }
-        for v in &mut z {
-            *v /= n;
-        }
-        Ok(z)
+        self.consensus_from_sum(&sum, n)
     }
 
-    fn evaluate(
-        &mut self,
-        _x: &[Vec<f64>],
-        _u: &[Vec<f64>],
-        z: &[f64],
-    ) -> anyhow::Result<EvalMetrics> {
+    /// The plain mean from the running sum: z = s/n, O(m).
+    fn consensus_from_sum(&mut self, sum: &[f64], n_nodes: usize) -> anyhow::Result<Vec<f64>> {
+        let n = n_nodes as f64;
+        Ok(sum.iter().map(|s| s / n).collect())
+    }
+
+    fn evaluate(&mut self, _x: &Arena, _u: &Arena, z: &[f64]) -> anyhow::Result<EvalMetrics> {
         let (test_acc, test_loss) = self.test_metrics(z)?;
         Ok(EvalMetrics { accuracy: f64::NAN, test_acc, loss: test_loss })
     }

@@ -1,22 +1,28 @@
-//! Cross-runtime accounting parity for the full-precision init exchange.
+//! Cross-runtime accounting parity: the init exchange *and* steady-state
+//! rounds.
 //!
 //! The threaded coordinator charges messages through
 //! `NodeToServer::wire_bits` / `ServerToNode::wire_bits`, while the
-//! sequential simulator and the event engine charge the init exchange with
-//! explicit formulas. All three must agree on the paper's 32-bits-per-
-//! scalar init rate ([`qadmm::comm::message::INIT_BITS_PER_SCALAR`]) or
-//! their comm-bit curves start from different offsets and every
+//! sequential simulator and the event engine charge with explicit
+//! formulas. All three must agree on the paper's 32-bits-per-scalar init
+//! rate ([`qadmm::comm::message::INIT_BITS_PER_SCALAR`]) — or their
+//! comm-bit curves start from different offsets — *and* on the
+//! steady-state per-round pricing (header + payload for every frame; the
+//! `Consensus` inclusion list is control plane and not charged) — or every
 //! bits-to-target comparison across runtimes is skewed. (The seed charged
-//! 64 bits/scalar in the message layer and 32 in the engines.)
+//! 64 bits/scalar in the message layer and 32 in the engines, and charged
+//! the inclusion list only in the threaded runtime.)
 
 use qadmm::admm::engine::EventEngine;
 use qadmm::admm::sim::{AsyncSim, TrialRngs};
 use qadmm::comm::message::{
     NodeToServer, ServerToNode, INIT_BITS_PER_SCALAR, MSG_HEADER_BYTES,
 };
-use qadmm::compress::CompressorKind;
+use qadmm::comm::network::FaultSpec;
+use qadmm::compress::{Compressor, CompressorKind};
 use qadmm::config::{presets, ExperimentConfig, ProblemKind};
 use qadmm::problems::lasso::{LassoConfig, LassoProblem};
+use qadmm::util::rng::Pcg64;
 
 fn cfg_and_lasso() -> (ExperimentConfig, LassoConfig) {
     let mut cfg = presets::ci_lasso();
@@ -60,6 +66,92 @@ fn init_exchange_offset_is_identical_across_runtimes() {
     let mut p = LassoProblem::generate(l, &mut rngs.data).unwrap();
     let eng = EventEngine::new(&cfg, &mut p, rngs).unwrap();
     assert_eq!(eng.accounting().total_bits(), expect, "event engine init offset");
+}
+
+/// Steady-state rounds must be priced identically by all three runtimes.
+/// Lockstep configuration (τ = 1, P = n) makes the message *counts*
+/// deterministic even under real threads: every round is exactly n uplink
+/// updates + n broadcast links, and the identity compressor's frame size
+/// is value-independent. The totals are tied to the message-layer pricing
+/// (the same `wire_bits` the threaded endpoints charge on send), so a
+/// pricing skew in any runtime — like the seed's inclusion-list charge —
+/// breaks this test.
+#[test]
+fn steady_state_rounds_price_identically_across_runtimes() {
+    let (mut cfg, l) = cfg_and_lasso();
+    let rounds = 8usize;
+    cfg.tau = 1; // synchronous: every node forced every round
+    cfg.p_min = l.n;
+    cfg.iters = rounds;
+    cfg.mc_trials = 1;
+    cfg.eval_every = rounds;
+
+    // message-layer pricing for one steady-state round
+    let frame = CompressorKind::Identity
+        .build()
+        .compress(&vec![0.0; l.m], &mut Pcg64::seed_from_u64(0))
+        .wire;
+    let update_bits = NodeToServer::Update {
+        node: 0,
+        iter: 0,
+        seq: 0,
+        dx_wire: frame.clone(),
+        du_wire: frame.clone(),
+    }
+    .wire_bits();
+    let consensus_bits =
+        ServerToNode::Consensus { iter: 0, included: (0..l.n as u32).collect(), dz_wire: frame }
+            .wire_bits();
+    let init_per_node = threaded_init_bits_per_node(l.m);
+    let expect = l.n as u64 * init_per_node
+        + rounds as u64 * l.n as u64 * (update_bits + consensus_bits);
+
+    // sequential simulator
+    let mut rngs = TrialRngs::new(cfg.seed);
+    let mut p = LassoProblem::generate(l, &mut rngs.data).unwrap();
+    p.set_reference_optimum(1.0);
+    let mut sim = AsyncSim::new(&cfg, &mut p, rngs).unwrap();
+    for _ in 0..rounds {
+        sim.step().unwrap();
+    }
+    assert_eq!(sim.accounting().total_bits(), expect, "simulator steady state");
+
+    // event engine (zero latency: rounds coincide with iterations)
+    let mut rngs = TrialRngs::new(cfg.seed);
+    let mut p = LassoProblem::generate(l, &mut rngs.data).unwrap();
+    p.set_reference_optimum(1.0);
+    let mut eng = EventEngine::new(&cfg, &mut p, rngs).unwrap();
+    for _ in 0..rounds {
+        eng.step_round().unwrap();
+    }
+    assert_eq!(eng.accounting().total_bits(), expect, "event engine steady state");
+
+    // threaded deployment: downlink is fully deterministic (n InitZ +
+    // rounds·n Consensus + n Shutdown); on the uplink the nodes included in
+    // the *final* consensus race the Shutdown frame, so 0..=n extra updates
+    // may be sent (charged on send) before the workers exit.
+    let mut rngs = TrialRngs::new(cfg.seed);
+    let mut p = LassoProblem::generate(l, &mut rngs.data).unwrap();
+    p.set_reference_optimum(1.0);
+    let outcome =
+        qadmm::coordinator::run_threaded(&cfg, Box::new(p), FaultSpec::default()).unwrap();
+    let init_up = NodeToServer::InitFull { node: 0, x0: vec![0.0; l.m], u0: vec![0.0; l.m] }
+        .wire_bits();
+    let init_down = ServerToNode::InitZ { z0: vec![0.0; l.m] }.wire_bits();
+    let expect_down = l.n as u64 * init_down
+        + rounds as u64 * l.n as u64 * consensus_bits
+        + l.n as u64 * ServerToNode::Shutdown.wire_bits();
+    assert_eq!(outcome.downlink_bits, expect_down, "threaded downlink steady state");
+    let expect_up = l.n as u64 * init_up + rounds as u64 * l.n as u64 * update_bits;
+    let extra = outcome
+        .uplink_bits
+        .checked_sub(expect_up)
+        .expect("threaded uplink below the deterministic floor");
+    assert_eq!(extra % update_bits, 0, "uplink tail is whole update frames");
+    assert!(
+        extra / update_bits <= l.n as u64,
+        "more than n shutdown-race updates: {extra} extra bits"
+    );
 }
 
 /// Uplink/downlink split of the init offset matches too (the threaded

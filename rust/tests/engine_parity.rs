@@ -122,6 +122,30 @@ fn logreg_trajectories_are_bit_identical() {
     }
 }
 
+/// The incremental consensus path must stay bit-exact between engines at
+/// every refresh cadence: both fold arrivals in the same order and rebuild
+/// the sum from the banks on the same rounds, so parity holds whether the
+/// accumulator refreshes every round, rarely, or never. (Different
+/// cadences produce *different* trajectories from each other — the
+/// incremental and recomputed sums differ in the last ulp — but each
+/// cadence's two engines must agree exactly.)
+#[test]
+fn parity_holds_across_consensus_refresh_cadences() {
+    for refresh in [0usize, 1, 3, 64] {
+        let mut cfg = parity_cfg(4, 3, 1, false);
+        cfg.name = format!("parity-refresh{refresh}");
+        cfg.consensus_refresh_every = refresh;
+        let lcfg = match cfg.problem {
+            ProblemKind::Lasso { m, h, n, rho, theta } => LassoConfig { m, h, n, rho, theta },
+            _ => unreachable!(),
+        };
+        let make = move |rng: &mut Pcg64| -> Box<dyn Problem> {
+            Box::new(LassoProblem::generate(lcfg, rng).unwrap())
+        };
+        assert_parity(&cfg, &make);
+    }
+}
+
 /// Pure clock drift cannot break parity: drift scales compute *durations*,
 /// and 0.3 × 0.0 is still 0.0 — the zero-delay timeline (downlink
 /// included) must stay bit-identical to the simulator even with maximally
@@ -186,6 +210,54 @@ fn nonzero_downlink_delay_changes_the_z_trajectory() {
     assert!(
         z_zero.iter().zip(&z_down).any(|(a, b)| a != b),
         "delayed downlink left the z-trajectory bit-identical"
+    );
+}
+
+/// Regression for the O(n)-per-virtual-instant trigger scan: with Exp
+/// compute/uplink delays every arrival lands in its own virtual instant,
+/// so a round at P = n/2 checks the trigger ~n/2 times — the old staleness
+/// scan made that O(n²) per round. The maintained overdue counter makes
+/// each check O(1); this run at n = 4096 with single-event batches must
+/// finish comfortably within the wall bound while upholding every
+/// scheduling invariant.
+#[test]
+fn fragmented_arrivals_at_4096_nodes_stay_fast() {
+    let n = 4096;
+    let mut cfg = presets::ci_lasso();
+    cfg.name = "trigger-scan-4096".into();
+    cfg.problem = ProblemKind::Lasso { m: 4, h: 2, n, rho: 20.0, theta: 0.1 };
+    cfg.compressor = CompressorKind::Identity;
+    cfg.tau = 4;
+    cfg.p_min = n / 2;
+    cfg.iters = 3;
+    cfg.mc_trials = 1;
+    cfg.eval_every = cfg.iters;
+    cfg.link = LinkConfig {
+        compute: LatencyModel::Exp(0.01),
+        uplink: LatencyModel::Exp(0.01),
+        downlink: LatencyModel::None,
+        clock_drift: 0.0,
+    };
+    let lcfg = LassoConfig { m: 4, h: 2, n, rho: 20.0, theta: 0.1 };
+    let mut rngs = TrialRngs::new(cfg.seed);
+    let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+    p.set_reference_optimum(1.0); // metric value irrelevant here
+    let start = std::time::Instant::now();
+    let mut eng = EventEngine::new(&cfg, &mut p, rngs).unwrap();
+    for _ in 0..cfg.iters {
+        eng.step_round().unwrap();
+        let max_d = eng.staleness().iter().copied().max().unwrap();
+        assert!(max_d + 1 <= cfg.tau, "staleness bound broken");
+    }
+    let stats = eng.stats();
+    assert_eq!(stats.rounds, cfg.iters);
+    assert!(stats.min_arrivals.expect("rounds fired") >= cfg.p_min);
+    // generous even for debug builds — the old O(n²) scan is what this
+    // bound guards against regressing toward
+    assert!(
+        start.elapsed() < std::time::Duration::from_secs(60),
+        "fragmented 4096-node rounds took {:?}",
+        start.elapsed()
     );
 }
 

@@ -41,7 +41,7 @@ fn estimate_banks_track_true_iterates() {
     for _ in 0..cfg.iters {
         sim.step().unwrap();
         for i in 0..l.n {
-            let x = &sim.x()[i];
+            let x = sim.x().row(i);
             let xe = sim.x_estimate(i);
             let err = x.iter().zip(xe).map(|(a, b)| (a - b).abs()).fold(0.0f64, f64::max);
             // bound: ‖Δ‖∞/S of the last transmitted delta ≤ a loose cap on

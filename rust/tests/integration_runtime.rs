@@ -187,7 +187,11 @@ fn lasso_lagrangian_artifact_matches_native() {
     let x: Vec<Vec<f64>> = (0..16).map(|_| rng.normal_vec(200, 0.0, 1.0)).collect();
     let u: Vec<Vec<f64>> = (0..16).map(|_| rng.normal_vec(200, 0.0, 0.1)).collect();
     let z = rng.normal_vec(200, 0.0, 1.0);
-    let native_lag = p.lagrangian(&x, &u, &z);
+    let native_lag = p.lagrangian(
+        &qadmm::problems::Arena::from_rows(&x),
+        &qadmm::problems::Arena::from_rows(&u),
+        &z,
+    );
     let (ata, atb2, btb) = p.gram_tensors();
     let out = rt
         .call(

@@ -7,9 +7,11 @@ use qadmm::admm::scheduler::Scheduler;
 use qadmm::admm::sim::{AsyncSim, TrialRngs};
 use qadmm::comm::latency::LatencyModel;
 use qadmm::comm::profile::LinkConfig;
+use qadmm::compress::error_feedback::EstimateTracker;
 use qadmm::compress::packing::{pack_levels, unpack_levels};
 use qadmm::compress::{Compressor, CompressorKind};
 use qadmm::config::{presets, OracleConfig, ProblemKind};
+use qadmm::problems::accumulator::ConsensusAccumulator;
 use qadmm::problems::lasso::{LassoConfig, LassoProblem};
 use qadmm::util::rng::Pcg64;
 
@@ -43,6 +45,108 @@ fn random_vec(rng: &mut Pcg64) -> Vec<f64> {
             v
         }
         _ => (0..m).map(|i| ((i as f64) - m as f64 / 2.0) * scale).collect(), // ramp
+    }
+}
+
+/// The tentpole's correctness contract: the incrementally folded server
+/// sum (Kahan + periodic refresh) matches a full recompute of Σ(x̂+û) to
+/// ≤ 1e-10 relative error, across random fleet sizes, arrival patterns
+/// (random P per round), compressor families, and refresh cadences
+/// (including "never"). The banks evolve exactly as in the engines: each
+/// arrival commits its dequantized deltas, and the accumulator folds the
+/// *same* vectors.
+#[test]
+fn prop_incremental_consensus_sum_matches_full_recompute() {
+    let kinds = [
+        CompressorKind::Identity,
+        CompressorKind::Identity32,
+        CompressorKind::Qsgd { bits: 3 },
+        CompressorKind::Qsgd { bits: 8 },
+        CompressorKind::Sign,
+        CompressorKind::TopK { frac_permille: 150 },
+        CompressorKind::RandK { frac_permille: 250 },
+    ];
+    for_all(40, 202, |rng| {
+        let n = 2 + rng.gen_range(16);
+        let m = 1 + rng.gen_range(96);
+        let refresh = [0usize, 1, 3, 7, 64][rng.gen_range(5)];
+        let comp = kinds[rng.gen_range(kinds.len())].build();
+        let scale = 10f64.powf(rng.uniform_f64() * 6.0 - 3.0); // 1e-3..1e3
+
+        let mut xhat: Vec<EstimateTracker> = (0..n)
+            .map(|_| EstimateTracker::new(rng.normal_vec(m, 0.0, scale), true))
+            .collect();
+        let mut uhat: Vec<EstimateTracker> = (0..n)
+            .map(|_| EstimateTracker::new(rng.normal_vec(m, 0.0, scale), true))
+            .collect();
+        let mut acc = ConsensusAccumulator::new(m, refresh);
+        acc.refresh(xhat.iter().zip(&uhat).map(|(x, u)| (x.estimate(), u.estimate())));
+
+        for round in 1..=25usize {
+            // a random arrival set of size P ∈ [1, n]
+            let p = 1 + rng.gen_range(n);
+            for node in rng.choose_k(n, p) {
+                let dx = comp.compress(&rng.normal_vec(m, 0.0, scale), rng);
+                let du = comp.compress(&rng.normal_vec(m, 0.0, scale), rng);
+                xhat[node].commit(&dx.dequantized);
+                uhat[node].commit(&du.dequantized);
+                acc.fold(&dx.dequantized, &du.dequantized);
+            }
+            if acc.refresh_due(round) {
+                acc.refresh(xhat.iter().zip(&uhat).map(|(x, u)| (x.estimate(), u.estimate())));
+            }
+            // full recompute reference
+            let mut full = vec![0.0; m];
+            for (x, u) in xhat.iter().zip(&uhat) {
+                for (j, f) in full.iter_mut().enumerate() {
+                    *f += x.estimate()[j] + u.estimate()[j];
+                }
+            }
+            let norm = full.iter().fold(1.0f64, |a, v| a.max(v.abs()));
+            for (j, (s, f)) in acc.sum().iter().zip(&full).enumerate() {
+                assert!(
+                    (s - f).abs() <= 1e-10 * norm,
+                    "round {round} coord {j}: inc={s} full={f} (norm {norm})"
+                );
+            }
+        }
+    });
+}
+
+/// Drift bound without any refresh: 10k Kahan folds stay within 1e-10
+/// relative of a from-scratch recompute — the `refresh_every = 0`
+/// configuration is safe on long runs, not just the refreshed default.
+#[test]
+fn kahan_drift_bounded_over_10k_folds_without_refresh() {
+    let (n, m) = (8usize, 64usize);
+    let mut rng = Pcg64::seed_from_u64(909);
+    let mut xhat: Vec<EstimateTracker> =
+        (0..n).map(|_| EstimateTracker::new(rng.normal_vec(m, 0.0, 1.0), true)).collect();
+    let mut uhat: Vec<EstimateTracker> =
+        (0..n).map(|_| EstimateTracker::new(rng.normal_vec(m, 0.0, 1.0), true)).collect();
+    let mut acc = ConsensusAccumulator::new(m, 0); // never refreshed
+    acc.refresh(xhat.iter().zip(&uhat).map(|(x, u)| (x.estimate(), u.estimate())));
+    let q = CompressorKind::Qsgd { bits: 3 }.build();
+    for _ in 0..10_000 {
+        let node = rng.gen_range(n);
+        let dx = q.compress(&rng.normal_vec(m, 0.0, 0.1), &mut rng);
+        let du = q.compress(&rng.normal_vec(m, 0.0, 0.1), &mut rng);
+        xhat[node].commit(&dx.dequantized);
+        uhat[node].commit(&du.dequantized);
+        acc.fold(&dx.dequantized, &du.dequantized);
+    }
+    let mut full = vec![0.0; m];
+    for (x, u) in xhat.iter().zip(&uhat) {
+        for (j, f) in full.iter_mut().enumerate() {
+            *f += x.estimate()[j] + u.estimate()[j];
+        }
+    }
+    let norm = full.iter().fold(1.0f64, |a, v| a.max(v.abs()));
+    for (s, f) in acc.sum().iter().zip(&full) {
+        assert!(
+            (s - f).abs() <= 1e-10 * norm,
+            "10k-fold drift: inc={s} full={f} (norm {norm})"
+        );
     }
 }
 
