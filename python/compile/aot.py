@@ -102,14 +102,10 @@ def registry():
          "cu_val", "cu_lvl", "cu_norm"],
         m=m,
     )
-    add(
-        "lasso_server_step", model.lasso_server_step,
-        [("xhat", f64(n, m)), ("uhat", f64(n, m)), ("zhat", f64(m)),
-         ("noise_z", f64(m)), ("theta", f64()), ("rho", f64()),
-         ("s", f64())],
-        ["z_new", "cz_val", "cz_lvl", "cz_norm"],
-        m=m, n=n,
-    )
+    # lasso_server_step is retired: the rust server prox runs native-f64 via
+    # Problem::consensus_from_sum on every backend, so no runtime path ever
+    # dispatched the stacked-bank artifact (re-add as a fused fold+prox
+    # kernel if the server step moves on-device).
     add(
         "lasso_lagrangian", model.lasso_lagrangian,
         [("x", f64(n, m)), ("u", f64(n, m)), ("z", f64(m)),

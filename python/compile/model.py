@@ -22,7 +22,6 @@ import jax.numpy as jnp
 
 from compile import nn
 from compile.kernels.quantize import quantize
-from compile.kernels.soft_threshold import soft_threshold
 
 ADAM_B1 = 0.9
 ADAM_B2 = 0.999
@@ -53,21 +52,6 @@ def lasso_node_step(minv, atb2, zhat, u, xhat, uhat, noise_x, noise_u, rho, s):
     cx_val, cx_lvl, cx_norm = quantize(dx, noise_x, s)
     cu_val, cu_lvl, cu_norm = quantize(du, noise_u, s)
     return x_new, u_new, cx_val, cx_lvl, cx_norm, cu_val, cu_lvl, cu_norm
-
-
-def lasso_server_step(xhat, uhat, zhat, noise_z, theta, rho, s):
-    """Server-side consensus update (eq. 15) + downlink compression (eq. 16).
-
-    z ← S_{θ/(ρN)}( mean_i(x̂_i + û_i) ), then Δz = z − ẑ is quantized.
-    xhat/uhat are stacked [N, M].
-    """
-    n = xhat.shape[0]
-    v = jnp.mean(xhat + uhat, axis=0)
-    kappa = theta / (rho * n)
-    z_new = soft_threshold(v, kappa)
-    dz = z_new - zhat
-    cz_val, cz_lvl, cz_norm = quantize(dz, noise_z, s)
-    return z_new, cz_val, cz_lvl, cz_norm
 
 
 def lasso_lagrangian(x, u, z, ata, atb2, btb, theta, rho):

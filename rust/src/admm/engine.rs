@@ -17,6 +17,16 @@
 //! dispatch path reuses pooled delta/compression buffers (no steady-state
 //! per-message allocation).
 //!
+//! The consensus **fan-in** is owned by the configured topology
+//! ([`crate::topology`]): under the star every `MsgArrive` is an arrival
+//! *at the server*; under `tree:<fanout>` / `gossip:<k>` it lands at an
+//! intermediate aggregator, which folds it into a pending partial sum and
+//! — once its per-tier threshold P_g is met, or nothing further is in
+//! flight toward it — forwards the re-quantized partial delta on its own
+//! accounted link (`AggregateArrive` carries the children's arrival
+//! credit to the server). The star path is byte-for-byte the pre-existing
+//! one: no tier state is even allocated.
+//!
 //! Timeline per consensus round (each delay leg drawn from the node's
 //! [`LinkProfile`] — compute scaled by its clock drift, uplink and
 //! downlink on the server's clock):
@@ -62,12 +72,13 @@ use std::sync::Arc;
 use crate::comm::accounting::CommAccounting;
 use crate::comm::message::{INIT_BITS_PER_SCALAR, MSG_HEADER_BYTES};
 use crate::comm::profile::{per_node_profiles, LinkProfile};
-use crate::compress::error_feedback::EstimateTracker;
+use crate::compress::error_feedback::{estimate_rows, EstimateTracker};
 use crate::compress::{Compressed, Compressor};
 use crate::config::ExperimentConfig;
 use crate::metrics::{IterRecord, RunRecorder};
 use crate::problems::accumulator::ConsensusAccumulator;
 use crate::problems::{Arena, LocalUpdateItem, Problem};
+use crate::topology::{AggForward, AggregatorTier};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -115,10 +126,14 @@ pub struct EngineStats {
     pub rounds: usize,
     /// Virtual seconds elapsed.
     pub virtual_time: f64,
-    /// Events processed (ComputeDone + MsgArrive + DownlinkArrive).
+    /// Events processed (ComputeDone + MsgArrive + DownlinkArrive +
+    /// AggregateArrive).
     pub events: u64,
     /// Local updates dispatched.
     pub dispatches: u64,
+    /// Re-quantized partial-sum forwards sent by the aggregator tier
+    /// (0 under the star topology).
+    pub agg_forwards: u64,
     /// Smallest arrival set that ever triggered a round (must be ≥ P);
     /// `None` until the first round fires, so reading stats early can
     /// never leak a `usize::MAX` sentinel to callers.
@@ -159,6 +174,24 @@ pub struct EventEngine<'a> {
     /// being drained; flushed as one batch between instants (buffer is
     /// recycled across flushes).
     pending_dispatch: Vec<usize>,
+    /// Non-star fan-in: intermediate aggregators between leaf arrivals and
+    /// the consensus sum ([`crate::topology`]). `None` for the star, whose
+    /// pre-existing (bit-exact) path is untouched.
+    tier: Option<AggregatorTier>,
+    /// Aggregators that received a child arrival in the instant being
+    /// drained; their forward condition is checked between instants in
+    /// ascending id order (recycled buffer, like `pending_dispatch`).
+    touched_aggs: Vec<usize>,
+    /// Per-aggregator FIFO of forwards in transit toward the server.
+    agg_inbox: Vec<VecDeque<AggForward>>,
+    /// Monotonicity clamp for aggregator→server arrivals (a later forward
+    /// never overtakes an earlier one on the same link).
+    agg_last: Vec<f64>,
+    /// Aggregator link profiles (uplink leg used; realized from the same
+    /// population spec as the leaves, independently of the leaf count).
+    agg_links: Vec<LinkProfile>,
+    /// Gossip relay draws (dedicated stream, shared with the simulator).
+    rng_topology: Pcg64,
     /// Sparse arrival set for the round being assembled (no n ≤ 64 mask).
     arrived: BTreeSet<usize>,
     /// Overdue nodes (staleness = τ−1) that have not arrived yet, counted
@@ -188,6 +221,8 @@ pub struct EventEngine<'a> {
     node_quant: Vec<Pcg64>,
     /// Server-side quantizer stream for the broadcast compression.
     server_quant: Pcg64,
+    /// Per-aggregator quantizer streams (re-quantized upstream forwards).
+    agg_quant: Vec<Pcg64>,
     /// Per-node batch-sampling streams for inexact problems.
     node_batch: Vec<Pcg64>,
     recorder: RunRecorder,
@@ -214,7 +249,8 @@ impl<'a> EventEngine<'a> {
         let x = Arena::broadcast_row(&x0, n);
         let u = Arena::zeros(n, m);
 
-        let mut accounting = CommAccounting::new(n);
+        let n_aggs = cfg.topology.n_aggregators(n);
+        let mut accounting = CommAccounting::new(n + n_aggs);
         for i in 0..n {
             accounting.record_uplink(
                 i,
@@ -225,13 +261,36 @@ impl<'a> EventEngine<'a> {
             (0..n).map(|_| EstimateTracker::new(x0.clone(), ef)).collect();
         let uhat: Vec<EstimateTracker> =
             (0..n).map(|_| EstimateTracker::new(vec![0.0; m], ef)).collect();
+        // Non-star fan-in: seed each aggregator's server-side partial from
+        // its children's init state and charge the aggregated full-precision
+        // forward on the aggregator's own link (identically to the sim).
+        let mut tier = AggregatorTier::new(cfg.topology, n, m, cfg.p_tier, ef);
+        if let Some(t) = &mut tier {
+            for leaf in 0..n {
+                t.seed_partial(
+                    cfg.topology.static_parent(leaf),
+                    xhat[leaf].estimate(),
+                    uhat[leaf].estimate(),
+                );
+            }
+            for g in 0..n_aggs {
+                accounting.record_uplink(
+                    n + g,
+                    MSG_HEADER_BYTES * 8 + 2 * m as u64 * INIT_BITS_PER_SCALAR,
+                );
+            }
+        }
         // z⁰ via the incremental path seeded with a full bank sweep — the
-        // identical fold order the simulator uses, so the parity contract
+        // identical fold order (and, under a tier, the identical ŝ_g
+        // partial source) the simulator uses, so the parity contract
         // starts bit-exact.
         let mut acc = ConsensusAccumulator::new(m, cfg.consensus_refresh_every);
-        acc.refresh(xhat.iter().zip(&uhat).map(|(xt, ut)| (xt.estimate(), ut.estimate())));
+        match &tier {
+            Some(t) => acc.refresh(t.refresh_rows()),
+            None => acc.refresh(estimate_rows(&xhat, &uhat)),
+        }
         let z = problem.consensus_from_sum(acc.sum(), n)?;
-        accounting.record_broadcast(MSG_HEADER_BYTES * 8 + m as u64 * INIT_BITS_PER_SCALAR);
+        accounting.record_broadcast_to(n, MSG_HEADER_BYTES * 8 + m as u64 * INIT_BITS_PER_SCALAR);
         let zhat = EstimateTracker::new(z.clone(), ef);
 
         // Every node's mirror starts at the full-precision z⁰ it received
@@ -241,6 +300,10 @@ impl<'a> EventEngine<'a> {
         let mut qroot = rngs.quant;
         let node_quant: Vec<Pcg64> = (0..n).map(|i| qroot.fork(i as u64)).collect();
         let server_quant = qroot.fork(n as u64);
+        // per-aggregator quantizer streams for the re-quantized forwards
+        // (forked after the server's, so star consumption is unchanged)
+        let agg_quant: Vec<Pcg64> =
+            (0..n_aggs).map(|g| qroot.fork(n as u64 + 1 + g as u64)).collect();
         let mut broot = rngs.batches;
         let node_batch: Vec<Pcg64> = (0..n).map(|i| broot.fork(i as u64)).collect();
 
@@ -262,6 +325,12 @@ impl<'a> EventEngine<'a> {
             downlink_inbox: (0..n).map(|_| VecDeque::new()).collect(),
             downlink_last: vec![0.0; n],
             pending_dispatch: Vec::new(),
+            tier,
+            touched_aggs: Vec::new(),
+            agg_inbox: (0..n_aggs).map(|_| VecDeque::new()).collect(),
+            agg_last: vec![0.0; n_aggs],
+            agg_links: per_node_profiles(cfg.link, n_aggs),
+            rng_topology: rngs.topology,
             arrived: BTreeSet::new(),
             overdue_pending,
             busy: vec![false; n],
@@ -274,6 +343,7 @@ impl<'a> EventEngine<'a> {
             accounting,
             queue: EventQueue::new(),
             server_quant,
+            agg_quant,
             links: per_node_profiles(cfg.link, n),
             // per-trial stream: MC trials must be independent replicates
             // over network randomness, not replays of one delay sequence
@@ -313,6 +383,15 @@ impl<'a> EventEngine<'a> {
                 if self.pending_dispatch.is_empty() {
                     self.pending_dispatch = nodes;
                 }
+            }
+            // Aggregators touched by arrivals in the drained instant check
+            // their forward condition *after* this instant's dispatches
+            // registered their routes (so "nothing further in flight" is
+            // evaluated against the freshest picture), in ascending id
+            // order — the simulator's flush order, which is what keeps
+            // tree/gossip runs bit-exact across engines at zero delay.
+            if !self.touched_aggs.is_empty() {
+                self.forward_ready_aggs();
             }
             if self.trigger_satisfied() {
                 return self.fire();
@@ -380,16 +459,34 @@ impl<'a> EventEngine<'a> {
                 slot.occupied = false;
                 self.xhat[node].commit(&slot.cx.dequantized);
                 self.uhat[node].commit(&slot.cu.dequantized);
-                // keep s = Σ(x̂+û) in lockstep with the bank commits
-                self.acc.fold(&slot.cx.dequantized, &slot.cu.dequantized);
-                self.arrived_loss[node] = slot.loss;
-                if self.arrived.insert(node)
-                    && self.scheduler.staleness()[node] + 1 >= self.cfg.tau
-                {
-                    // an overdue (τ−1-stale) node just reported
-                    self.overdue_pending -= 1;
+                match &mut self.tier {
+                    None => {
+                        // star: the update reached the server — keep
+                        // s = Σ(x̂+û) in lockstep with the bank commits
+                        self.acc.fold(&slot.cx.dequantized, &slot.cu.dequantized);
+                        self.arrived_loss[node] = slot.loss;
+                        if self.arrived.insert(node)
+                            && self.scheduler.staleness()[node] + 1 >= self.cfg.tau
+                        {
+                            // an overdue (τ−1-stale) node just reported
+                            self.overdue_pending -= 1;
+                        }
+                        self.busy[node] = false;
+                    }
+                    Some(t) => {
+                        // tree/gossip: the update landed one hop down, at
+                        // its aggregator; arrival credit (and the busy
+                        // release) waits for the re-quantized forward to
+                        // reach the server (`AggregateArrive`)
+                        let agg = t.deliver(
+                            node,
+                            &slot.cx.dequantized,
+                            &slot.cu.dequantized,
+                            slot.loss,
+                        );
+                        self.touched_aggs.push(agg);
+                    }
                 }
-                self.busy[node] = false;
             }
             EventKind::DownlinkArrive { node } => {
                 let pkt = self.downlink_inbox[node].pop_front().ok_or_else(|| {
@@ -402,8 +499,66 @@ impl<'a> EventEngine<'a> {
                     self.pending_dispatch.push(node);
                 }
             }
+            EventKind::AggregateArrive { agg } => {
+                let fw = self.agg_inbox[agg].pop_front().ok_or_else(|| {
+                    anyhow::anyhow!("AggregateArrive with empty inbox (agg {agg})")
+                })?;
+                let tier = self.tier.as_mut().expect("AggregateArrive without a tier");
+                // ŝ_g += C(Δpartial), and the global sum folds the same
+                // dequantized vectors so s keeps tracking Σ_g ŝ_g
+                tier.commit(agg, &fw.cx.dequantized, &fw.cu.dequantized);
+                self.acc.fold(&fw.cx.dequantized, &fw.cu.dequantized);
+                let tau = self.cfg.tau;
+                for (child, loss) in fw.children {
+                    self.arrived_loss[child] = loss;
+                    if self.arrived.insert(child)
+                        && self.scheduler.staleness()[child] + 1 >= tau
+                    {
+                        self.overdue_pending -= 1;
+                    }
+                    self.busy[child] = false;
+                }
+            }
         }
         Ok(())
+    }
+
+    /// Check the forward condition of every aggregator touched in the
+    /// instant just drained (ascending id, deduplicated) and put ready
+    /// partial sums on the aggregator→server wire: compress the pending
+    /// delta with the aggregator's quantizer stream (error-feedback
+    /// residual stays behind), charge the frame to link n + g, and
+    /// schedule `AggregateArrive` after the aggregator's uplink leg
+    /// (monotone per link, like the downlink clamps).
+    fn forward_ready_aggs(&mut self) {
+        let mut aggs = std::mem::take(&mut self.touched_aggs);
+        aggs.sort_unstable();
+        aggs.dedup();
+        let tier = self.tier.as_mut().expect("touched aggregators without a tier");
+        for &g in &aggs {
+            if !tier.ready(g) {
+                // below P_g with children still in flight: the next child
+                // arrival re-touches this aggregator
+                continue;
+            }
+            let fw = tier.flush(g, self.compressor.as_ref(), &mut self.agg_quant[g]);
+            self.accounting.record_uplink(
+                self.n + g,
+                MSG_HEADER_BYTES * 8 + fw.cx.wire_bits() + fw.cu.wire_bits(),
+            );
+            self.stats.agg_forwards += 1;
+            let delay = self.agg_links[g].sample_uplink(&mut self.rng_latency);
+            let at = (self.vtime + delay).max(self.agg_last[g]);
+            self.agg_last[g] = at;
+            self.agg_inbox[g].push_back(fw);
+            self.queue.push(at, EventKind::AggregateArrive { agg: g });
+        }
+        // recycle the buffer (fragmented arrivals touch aggregators once
+        // per instant, like the dispatch list)
+        aggs.clear();
+        if self.touched_aggs.is_empty() {
+            self.touched_aggs = aggs;
+        }
     }
 
     /// One consensus round: mirrors `AsyncSim::step`'s server phase —
@@ -418,14 +573,17 @@ impl<'a> EventEngine<'a> {
         let train_loss: f64 = self.arrived.iter().map(|&i| self.arrived_loss[i]).sum();
 
         if self.acc.refresh_due(self.stats.rounds + 1) {
-            self.acc.refresh(
-                self.xhat.iter().zip(&self.uhat).map(|(xt, ut)| (xt.estimate(), ut.estimate())),
-            );
+            // tree/gossip rebuild from the ŝ_g partials (O(A·m)); the star
+            // sweeps the per-node banks (O(n·m)) as before
+            match &self.tier {
+                Some(t) => self.acc.refresh(t.refresh_rows()),
+                None => self.acc.refresh(estimate_rows(&self.xhat, &self.uhat)),
+            }
         }
         self.z = self.problem.consensus_from_sum(self.acc.sum(), self.n)?;
         let dz = self.zhat.make_delta(&self.z);
         let cz = self.compressor.compress(&dz, &mut self.server_quant);
-        self.accounting.record_broadcast(MSG_HEADER_BYTES * 8 + cz.wire_bits());
+        self.accounting.record_broadcast_to(self.n, MSG_HEADER_BYTES * 8 + cz.wire_bits());
         self.zhat.commit(&cz.dequantized);
         // One shared payload for all n downlinks; the node mirrors commit
         // it when their DownlinkArrive fires, not here.
@@ -561,6 +719,12 @@ impl<'a> EventEngine<'a> {
             slot.occupied = true;
             self.busy[node] = true;
             self.stats.dispatches += 1;
+            // non-star fan-in: bind this update to its aggregator now (the
+            // same per-dispatch draw order the simulator uses, so gossip
+            // routes replay identically at zero link delay)
+            if let Some(t) = &mut self.tier {
+                t.route(node, &mut self.rng_topology);
+            }
             let delay = self.links[node].sample_compute(&mut self.rng_latency);
             self.queue.push(self.vtime + delay, EventKind::ComputeDone { node });
         }
@@ -609,5 +773,43 @@ impl<'a> EventEngine<'a> {
     /// every broadcast has landed).
     pub fn z_estimate(&self) -> &[f64] {
         self.zhat.estimate()
+    }
+
+    /// The aggregator tier, when a non-star topology owns the fan-in
+    /// (conservation property tests read its tracked mass).
+    pub fn tier(&self) -> Option<&AggregatorTier> {
+        self.tier.as_ref()
+    }
+
+    /// Σ per coordinate of everything the fan-in currently holds:
+    /// committed partials ŝ_g + pending buffers + forwards still on the
+    /// aggregator→server wire. At any instant this equals
+    /// Σ_leaves(x̂ᵢ + ûᵢ) to Kahan precision — re-quantization shuffles
+    /// error into the pending residuals, it never creates or destroys
+    /// mass (the conservation half of the gossip property tests).
+    pub fn fan_in_tracked_mass(&self) -> Option<Vec<f64>> {
+        let t = self.tier.as_ref()?;
+        let mut mass = t.tracked_mass();
+        for inbox in &self.agg_inbox {
+            for fw in inbox {
+                for (v, d) in mass.iter_mut().zip(&fw.cx.dequantized) {
+                    *v += d;
+                }
+                for (v, d) in mass.iter_mut().zip(&fw.cu.dequantized) {
+                    *v += d;
+                }
+            }
+        }
+        Some(mass)
+    }
+
+    /// Node i's x̂ estimate bank (the lossless state of its first hop).
+    pub fn x_estimate(&self, i: usize) -> &[f64] {
+        self.xhat[i].estimate()
+    }
+
+    /// Node i's û estimate bank.
+    pub fn u_estimate(&self, i: usize) -> &[f64] {
+        self.uhat[i].estimate()
     }
 }

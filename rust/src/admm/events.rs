@@ -21,6 +21,11 @@ pub enum EventKind {
     /// (payloads ride a per-node FIFO inbox; arrival times are clamped
     /// monotone per link, so broadcasts never overtake each other).
     DownlinkArrive { node: usize },
+    /// An intermediate aggregator's re-quantized partial sum reached the
+    /// server (non-star topologies only): the payload rides a per-agg FIFO
+    /// with monotone arrival clamps, exactly like the downlink inboxes, and
+    /// carries the arrival credit of every child folded into it.
+    AggregateArrive { agg: usize },
 }
 
 /// One scheduled event. Ordered by `(time, seq)` with `f64::total_cmp`,

@@ -9,9 +9,15 @@
 //!   verbatim (the reproducible path behind every figure).
 //! * [`events`] / [`engine`] — the event-driven virtual-time engine: a
 //!   binary-heap timeline of per-node `ComputeDone` / `MsgArrive` /
-//!   `DownlinkArrive` events, with per-node ẑ mirrors that advance only
-//!   when the server's broadcast lands on that node's downlink.
+//!   `DownlinkArrive` (and, under hierarchical fan-in, `AggregateArrive`)
+//!   events, with per-node ẑ mirrors that advance only when the server's
+//!   broadcast lands on that node's downlink.
 //! * [`runner`] — the Monte-Carlo trial harness and series averaging.
+//!
+//! The consensus fan-in itself is owned by the configured
+//! [`crate::topology`]: all three engines run the star directly (the
+//! bit-exact reference path) or route arrivals through re-quantizing
+//! intermediate aggregators (`tree:<fanout>` / `gossip:<k>`).
 //!
 //! # Choosing an engine
 //!

@@ -8,12 +8,13 @@
 
 use crate::comm::accounting::CommAccounting;
 use crate::comm::message::{INIT_BITS_PER_SCALAR, MSG_HEADER_BYTES};
-use crate::compress::error_feedback::EstimateTracker;
+use crate::compress::error_feedback::{estimate_rows, EstimateTracker};
 use crate::compress::Compressor;
 use crate::config::ExperimentConfig;
 use crate::metrics::{IterRecord, RunRecorder};
 use crate::problems::accumulator::ConsensusAccumulator;
 use crate::problems::{Arena, Problem};
+use crate::topology::AggregatorTier;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -31,6 +32,11 @@ pub struct TrialRngs {
     /// Virtual compute/network delay draws (event engine only). Forked
     /// last, so streams 1–5 are unchanged from before it existed.
     pub latency: Pcg64,
+    /// Randomized fan-in routing (gossip relay draws). Forked after
+    /// `latency`, so streams 1–6 — and with them every star trajectory —
+    /// are unchanged from before topologies existed; star and tree consume
+    /// nothing from it.
+    pub topology: Pcg64,
 }
 
 impl TrialRngs {
@@ -43,6 +49,7 @@ impl TrialRngs {
             batches: root.fork(4),
             init: root.fork(5),
             latency: root.fork(6),
+            topology: root.fork(7),
         }
     }
 }
@@ -67,6 +74,15 @@ pub struct AsyncSim<'a> {
     /// produces at zero latency — this is what keeps the parity contract
     /// bit-exact through the incremental consensus path.
     acc: ConsensusAccumulator,
+    /// Non-star fan-in: intermediate aggregators between the leaves and
+    /// the consensus sum ([`crate::topology`]). `None` for the star — the
+    /// pre-existing (bit-exact) path is then untouched. In the lockstep
+    /// simulator every active leaf's update reaches its aggregator within
+    /// the round, so aggregators always flush at round end (in ascending
+    /// id order — the same order the event engine produces at zero link
+    /// delay, which is what extends the parity contract to trees).
+    tier: Option<AggregatorTier>,
+    rng_topology: Pcg64,
     active: Vec<bool>,
     scheduler: Scheduler,
     oracle: AsyncOracle,
@@ -95,7 +111,8 @@ impl<'a> AsyncSim<'a> {
         let x = Arena::broadcast_row(&x0, n);
         let u = Arena::zeros(n, m);
 
-        let mut accounting = CommAccounting::new(n);
+        let n_aggs = cfg.topology.n_aggregators(n);
+        let mut accounting = CommAccounting::new(n + n_aggs);
         // lines 1–4: nodes transmit x⁰, u⁰ at full precision, charged at the
         // paper's stated rate ("e.g., 32-bits per scalar")
         for i in 0..n {
@@ -109,12 +126,36 @@ impl<'a> AsyncSim<'a> {
         let uhat: Vec<EstimateTracker> =
             (0..n).map(|_| EstimateTracker::new(vec![0.0; m], ef)).collect();
 
+        // Non-star fan-in: seed each aggregator's server-side partial with
+        // its children's init state and charge the aggregated full-precision
+        // forward on the aggregator's own link (one (x, u) pair per agg).
+        let mut tier = AggregatorTier::new(cfg.topology, n, m, cfg.p_tier, ef);
+        if let Some(t) = &mut tier {
+            for leaf in 0..n {
+                t.seed_partial(
+                    cfg.topology.static_parent(leaf),
+                    xhat[leaf].estimate(),
+                    uhat[leaf].estimate(),
+                );
+            }
+            for g in 0..n_aggs {
+                accounting.record_uplink(
+                    n + g,
+                    MSG_HEADER_BYTES * 8 + 2 * m as u64 * INIT_BITS_PER_SCALAR,
+                );
+            }
+        }
+
         // line 7: z⁰ from the (exact) estimates via the incremental path
-        // seeded with a full bank sweep; line 8: broadcast full precision
+        // seeded with a full bank sweep (from the ŝ_g partials when an
+        // aggregator tier owns the fan-in); line 8: broadcast full precision
         let mut acc = ConsensusAccumulator::new(m, cfg.consensus_refresh_every);
-        acc.refresh(xhat.iter().zip(&uhat).map(|(xt, ut)| (xt.estimate(), ut.estimate())));
+        match &tier {
+            Some(t) => acc.refresh(t.refresh_rows()),
+            None => acc.refresh(estimate_rows(&xhat, &uhat)),
+        }
         let z = problem.consensus_from_sum(acc.sum(), n)?;
-        accounting.record_broadcast(MSG_HEADER_BYTES * 8 + m as u64 * INIT_BITS_PER_SCALAR);
+        accounting.record_broadcast_to(n, MSG_HEADER_BYTES * 8 + m as u64 * INIT_BITS_PER_SCALAR);
         let zhat = EstimateTracker::new(z.clone(), ef);
 
         let oracle = AsyncOracle::new(n, cfg.oracle, &mut rngs.oracle);
@@ -129,6 +170,8 @@ impl<'a> AsyncSim<'a> {
             uhat,
             zhat,
             acc,
+            tier,
+            rng_topology: rngs.topology,
             active: vec![true; n], // A₀ = V: every node computes first
             scheduler: Scheduler::new(n, cfg.tau, cfg.p_min),
             oracle,
@@ -186,20 +229,51 @@ impl<'a> AsyncSim<'a> {
             );
             self.xhat[i].commit(&cx.dequantized);
             self.uhat[i].commit(&cu.dequantized);
-            self.acc.fold(&cx.dequantized, &cu.dequantized);
+            match &mut self.tier {
+                // star: fold straight into the server sum
+                None => self.acc.fold(&cx.dequantized, &cu.dequantized),
+                // tree/gossip: the update lands at its aggregator instead
+                // (the leaf-hop bits above were already charged to link i)
+                Some(t) => {
+                    t.route(i, &mut self.rng_topology);
+                    t.deliver(i, &cx.dequantized, &cu.dequantized, 0.0);
+                }
+            }
+        }
+
+        // --- aggregator tier: every pending partial flushes upstream (in
+        // lockstep no child is ever still in flight at round end), charged
+        // per aggregator link and folded in ascending id order ---
+        if let Some(t) = &mut self.tier {
+            for g in 0..t.n_aggregators() {
+                if !t.has_pending(g) {
+                    continue;
+                }
+                let fw = t.flush(g, self.compressor.as_ref(), &mut self.rng_quant);
+                self.accounting.record_uplink(
+                    self.n + g,
+                    MSG_HEADER_BYTES * 8 + fw.cx.wire_bits() + fw.cu.wire_bits(),
+                );
+                t.commit(g, &fw.cx.dequantized, &fw.cu.dequantized);
+                self.acc.fold(&fw.cx.dequantized, &fw.cu.dequantized);
+            }
         }
 
         // --- server (lines 27–43): consensus from the incremental sum,
-        // with the periodic full-recompute drift wash-out ---
+        // with the periodic full-recompute drift wash-out (rebuilt from the
+        // aggregator partials ŝ_g when a tier owns the fan-in — refreshing
+        // from the leaf banks would leak information past the re-quantized
+        // hop) ---
         if self.acc.refresh_due(self.iter + 1) {
-            self.acc.refresh(
-                self.xhat.iter().zip(&self.uhat).map(|(xt, ut)| (xt.estimate(), ut.estimate())),
-            );
+            match &self.tier {
+                Some(t) => self.acc.refresh(t.refresh_rows()),
+                None => self.acc.refresh(estimate_rows(&self.xhat, &self.uhat)),
+            }
         }
         self.z = self.problem.consensus_from_sum(self.acc.sum(), self.n)?;
         let dz = self.zhat.make_delta(&self.z);
         let cz = self.compressor.compress(&dz, &mut self.rng_quant);
-        self.accounting.record_broadcast(MSG_HEADER_BYTES * 8 + cz.wire_bits());
+        self.accounting.record_broadcast_to(self.n, MSG_HEADER_BYTES * 8 + cz.wire_bits());
         self.zhat.commit(&cz.dequantized);
 
         let next = self
@@ -276,5 +350,10 @@ impl<'a> AsyncSim<'a> {
     /// Per-node staleness counters (invariant: ≤ τ−1; see the scheduler).
     pub fn staleness(&self) -> &[usize] {
         self.scheduler.staleness()
+    }
+
+    /// The aggregator tier, when a non-star topology owns the fan-in.
+    pub fn tier(&self) -> Option<&AggregatorTier> {
+        self.tier.as_ref()
     }
 }

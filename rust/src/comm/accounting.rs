@@ -36,7 +36,14 @@ impl CommAccounting {
     /// Downlink broadcast: the server transmits the same frame to every
     /// node; each link carries it (the paper charges both directions).
     pub fn record_broadcast(&mut self, bits: u64) {
-        for link in &mut self.links {
+        self.record_broadcast_to(self.links.len(), bits);
+    }
+
+    /// Broadcast to the first `k` links only. Hierarchical fan-in appends
+    /// aggregator links after the n leaf links, and the ẑ broadcast goes
+    /// direct server→leaf — aggregator links must not be charged for it.
+    pub fn record_broadcast_to(&mut self, k: usize, bits: u64) {
+        for link in self.links.iter_mut().take(k) {
             link.downlink_bits += bits;
             link.downlink_msgs += 1;
         }
@@ -90,6 +97,20 @@ mod tests {
         acc.record_broadcast(10);
         assert_eq!(acc.total_downlink_bits(), 40);
         assert_eq!(acc.link(3).downlink_msgs, 1);
+    }
+
+    #[test]
+    fn broadcast_to_first_k_spares_aggregator_links() {
+        // 3 leaves + 2 aggregator links appended
+        let mut acc = CommAccounting::new(5);
+        acc.record_broadcast_to(3, 10);
+        assert_eq!(acc.total_downlink_bits(), 30);
+        assert_eq!(acc.link(2).downlink_msgs, 1);
+        assert_eq!(acc.link(3).downlink_bits, 0);
+        assert_eq!(acc.link(4).downlink_msgs, 0);
+        // aggregator uplinks still accumulate per link
+        acc.record_uplink(3, 7);
+        assert_eq!(acc.total_bits(), 37);
     }
 
     #[test]

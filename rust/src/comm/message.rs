@@ -1,8 +1,13 @@
-//! Message vocabulary between nodes and the server (star topology).
+//! Message vocabulary between nodes and the server.
 //!
 //! Payloads are wire frames from [`crate::compress::wire`]; their byte
 //! length *is* the accounted communication cost. Control fields (node id,
-//! iteration) are charged as a fixed per-message header.
+//! iteration) are charged as a fixed per-message header. Under a
+//! hierarchical fan-in ([`crate::topology`]) the aggregator→server hop
+//! reuses the `Update` frame shape — header + two compressed payloads
+//! (the re-quantized partial-sum deltas) — charged to the aggregator's
+//! own link; the child inclusion list it carries is control plane, like
+//! the `Consensus` frame's, and is not charged.
 
 /// Fixed header overhead charged per message (node id + iteration + kind),
 /// matching what a compact real framing would carry.

@@ -163,15 +163,20 @@ impl ServerEndpoint {
 }
 
 /// Build a star network: one server endpoint + N node endpoints, each
-/// with its own per-link [`LinkProfile`].
+/// with its own per-link [`LinkProfile`]. `extra_links` appends accounting
+/// slots after the node links (indices n..n+extra) for server-colocated
+/// aggregator hops ([`crate::topology`]) — they carry no channel, only
+/// charged bits.
 pub fn star(
     n_nodes: usize,
     profiles: &[LinkProfile],
     faults: FaultSpec,
     seed: u64,
+    extra_links: usize,
 ) -> (ServerEndpoint, Vec<NodeEndpoint>, SharedAccounting) {
     assert_eq!(profiles.len(), n_nodes);
-    let accounting: SharedAccounting = Arc::new(Mutex::new(CommAccounting::new(n_nodes)));
+    let accounting: SharedAccounting =
+        Arc::new(Mutex::new(CommAccounting::new(n_nodes + extra_links)));
     let (up_tx, up_rx) = channel::<NodeToServer>();
     let mut to_nodes = Vec::with_capacity(n_nodes);
     let mut endpoints = Vec::with_capacity(n_nodes);
@@ -210,7 +215,7 @@ mod tests {
     #[test]
     fn roundtrip_with_accounting() {
         let (mut server, mut nodes, acc) =
-            star(2, &[LinkProfile::none(); 2], FaultSpec::default(), 1);
+            star(2, &[LinkProfile::none(); 2], FaultSpec::default(), 1, 0);
         nodes[0].send(update(0, 0)).unwrap();
         nodes[1].send(update(1, 0)).unwrap();
         for _ in 0..2 {
@@ -240,6 +245,7 @@ mod tests {
             &[LinkProfile::none()],
             FaultSpec { dup_prob: 1.0 }, // every message duplicated
             2,
+            0,
         );
         nodes[0].send(update(0, 0)).unwrap();
         nodes[0].send(update(0, 1)).unwrap();
@@ -262,7 +268,7 @@ mod tests {
     #[test]
     fn recv_timeout_times_out() {
         let (mut server, _nodes, _acc) =
-            star(1, &[LinkProfile::none()], FaultSpec::default(), 3);
+            star(1, &[LinkProfile::none()], FaultSpec::default(), 3, 0);
         let got = server.recv_timeout(Duration::from_millis(20)).unwrap();
         assert!(got.is_none());
     }

@@ -147,6 +147,13 @@ fn drift_spread(i: usize, n: usize) -> f64 {
 /// Realize per-node profiles from one population spec: each leg goes
 /// through [`per_node_latencies`] (odd-indexed nodes 4× slower), and the
 /// drift amplitude resolves to a per-node clock-rate factor.
+///
+/// Hierarchical fan-in ([`crate::topology`]) realizes its aggregator links
+/// with a *separate* call (indexed over the aggregator count), so adding a
+/// tier never perturbs the leaf population — leaf profiles depend only on
+/// the leaf index and count. Aggregators use the uplink leg for their
+/// re-quantized upstream forwards; their compute/downlink legs and drift
+/// are inert (aggregation is O(m) folding, modeled as instantaneous).
 pub fn per_node_profiles(cfg: LinkConfig, n: usize) -> Vec<LinkProfile> {
     let compute = per_node_latencies(cfg.compute, n);
     let uplink = per_node_latencies(cfg.uplink, n);

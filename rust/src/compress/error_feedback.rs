@@ -75,6 +75,17 @@ impl EstimateTracker {
     }
 }
 
+/// (x̂ᵢ, ûᵢ) estimate-slice pairs of two parallel tracker banks — the
+/// consensus-refresh source shared by every runtime's star fan-in (the
+/// hierarchical topologies refresh from their aggregator partials
+/// instead; see `crate::topology`).
+pub fn estimate_rows<'a>(
+    xhat: &'a [EstimateTracker],
+    uhat: &'a [EstimateTracker],
+) -> impl Iterator<Item = (&'a [f64], &'a [f64])> {
+    xhat.iter().zip(uhat).map(|(x, u)| (x.estimate(), u.estimate()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,6 +8,7 @@ pub mod presets;
 
 use crate::comm::profile::LinkConfig;
 use crate::compress::CompressorKind;
+use crate::topology::TopologyKind;
 use crate::util::json::Json;
 
 /// Which problem instance to run.
@@ -131,6 +132,16 @@ pub struct ExperimentConfig {
     /// clock drift): injected sleeps for the threaded runtime, virtual
     /// delays for the event engine (unused by the sequential simulator).
     pub link: LinkConfig,
+    /// Aggregation topology owning the consensus fan-in
+    /// ([`crate::topology`]): `star` is the paper's direct fan-in (and the
+    /// bit-exact pre-existing path); `tree:<fanout>` and `gossip:<k>`
+    /// interpose re-quantizing intermediate aggregators.
+    pub topology: TopologyKind,
+    /// Per-tier arrival threshold P_g: an intermediate aggregator forwards
+    /// its re-quantized partial sum once this many children are pending
+    /// (it forwards earlier when no further child update is in flight, so
+    /// the server trigger stays live). Ignored by `topology = star`.
+    pub p_tier: usize,
 }
 
 impl ExperimentConfig {
@@ -162,6 +173,8 @@ impl ExperimentConfig {
             "clock_drift must be in [0,1) so drifted clock rates stay positive (got {})",
             self.link.clock_drift
         );
+        self.topology.validate(n)?;
+        anyhow::ensure!(self.p_tier >= 1, "p_tier must be >= 1");
         Ok(())
     }
 
@@ -239,6 +252,8 @@ impl ExperimentConfig {
                     ("clock_drift", Json::Num(self.link.clock_drift)),
                 ]),
             ),
+            ("topology", Json::Str(self.topology.label())),
+            ("p_tier", Json::Num(self.p_tier as f64)),
         ])
     }
 }
@@ -284,6 +299,16 @@ mod tests {
         let mut c = base();
         c.link.clock_drift = -0.1;
         assert!(c.validate().is_err());
+        let mut c = base();
+        c.p_tier = 0;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        // gossip relays are drawn from the leaves, so k cannot exceed n
+        c.topology = crate::topology::TopologyKind::Gossip { k: 1000 };
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.topology = crate::topology::TopologyKind::Tree { fanout: 4 };
+        c.validate().unwrap();
     }
 
     #[test]
@@ -313,6 +338,8 @@ mod tests {
             j.get("link").unwrap().get("downlink").unwrap().as_str(),
             Some("none")
         );
+        assert_eq!(j.get("topology").unwrap().as_str(), Some("star"));
+        assert_eq!(j.get("p_tier").unwrap().as_usize(), Some(1));
         assert_eq!(
             j.get("problem").unwrap().get("kind").unwrap().as_str(),
             Some("lasso")

@@ -4,6 +4,7 @@ use super::{Backend, EngineKind, ExperimentConfig, OracleConfig, ProblemKind};
 use crate::comm::latency::LatencyModel;
 use crate::comm::profile::LinkConfig;
 use crate::compress::CompressorKind;
+use crate::topology::TopologyKind;
 
 /// Default full-recompute cadence for the incremental consensus sum: one
 /// O(n·m) bank sweep every 64 rounds amortizes to < 2% of the old per-round
@@ -30,6 +31,8 @@ pub fn fig3(tau: usize) -> ExperimentConfig {
         eval_every: 1,
         consensus_refresh_every: DEFAULT_CONSENSUS_REFRESH,
         link: LinkConfig::none(),
+        topology: TopologyKind::Star,
+        p_tier: 1,
     }
 }
 
@@ -54,6 +57,8 @@ pub fn fig4() -> ExperimentConfig {
         eval_every: 2,
         consensus_refresh_every: DEFAULT_CONSENSUS_REFRESH,
         link: LinkConfig::none(),
+        topology: TopologyKind::Star,
+        p_tier: 1,
     }
 }
 
@@ -84,6 +89,8 @@ pub fn ci_lasso() -> ExperimentConfig {
         eval_every: 1,
         consensus_refresh_every: DEFAULT_CONSENSUS_REFRESH,
         link: LinkConfig::none(),
+        topology: TopologyKind::Star,
+        p_tier: 1,
     }
 }
 
@@ -110,6 +117,8 @@ pub fn e2e_mlp() -> ExperimentConfig {
             slow: 0.004,
             p_slow: 0.2,
         }),
+        topology: TopologyKind::Star,
+        p_tier: 1,
     }
 }
 

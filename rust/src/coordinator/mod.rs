@@ -54,7 +54,12 @@ pub fn run_threaded(
     // virtual-time runs at 1000+ nodes belong to admm::engine.)
     let profiles: Vec<LinkProfile> = per_node_profiles(cfg.link, n);
 
-    let (server_ep, node_eps, accounting) = network::star(n, &profiles, faults, cfg.seed);
+    // Non-star topologies colocate the aggregator tier with the server
+    // thread (see `server::ServerLoop`); each aggregator still gets its
+    // own accounted link after the n node links.
+    let n_aggs = cfg.topology.n_aggregators(n);
+    let (server_ep, node_eps, accounting) =
+        network::star(n, &profiles, faults, cfg.seed, n_aggs);
     let shared: SharedProblem = Arc::new(Mutex::new(problem));
 
     // Initial state (Algorithm 1 lines 1–9) is assembled centrally and the

@@ -6,14 +6,17 @@
 use std::collections::BTreeSet;
 use std::time::Duration;
 
-use crate::comm::message::{NodeToServer, ServerToNode};
+use crate::comm::message::{
+    NodeToServer, ServerToNode, INIT_BITS_PER_SCALAR, MSG_HEADER_BYTES,
+};
 use crate::comm::network::{ServerEndpoint, SharedAccounting};
-use crate::compress::error_feedback::EstimateTracker;
+use crate::compress::error_feedback::{estimate_rows, EstimateTracker};
 use crate::compress::{wire, Compressor};
 use crate::config::ExperimentConfig;
 use crate::metrics::{IterRecord, RunRecorder};
 use crate::problems::accumulator::ConsensusAccumulator;
 use crate::problems::Arena;
+use crate::topology::AggregatorTier;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -38,6 +41,14 @@ pub struct ServerLoop {
     /// shape, only the accumulator's drift bound), so the per-round
     /// consensus is O(m) + the every-K-rounds refresh.
     acc: ConsensusAccumulator,
+    /// Non-star fan-in, colocated with the server thread: decoded arrivals
+    /// route through their aggregator, which re-quantizes the partial sum
+    /// and charges its own link (n + g). In the deployment shape there is
+    /// no virtual timeline to batch against, so a ready aggregator flushes
+    /// as soon as an arrival lands (P_g batching is an in-process-engine
+    /// lever; liveness beats batching on real channels).
+    tier: Option<AggregatorTier>,
+    rng_topology: Pcg64,
     d: Vec<usize>,
     pending: BTreeSet<usize>,
     rng: Pcg64,
@@ -54,10 +65,11 @@ impl ServerLoop {
         cfg: &ExperimentConfig,
         x0: Vec<f64>,
         m: usize,
-        rng: Pcg64,
+        mut rng: Pcg64,
     ) -> Self {
         let n = ep.n_nodes();
         let ef = cfg.error_feedback;
+        let rng_topology = rng.fork(0x746f_706f);
         Self {
             ep,
             problem,
@@ -73,6 +85,8 @@ impl ServerLoop {
             uhat: (0..n).map(|_| EstimateTracker::new(vec![0.0; m], ef)).collect(),
             zhat: None,
             acc: ConsensusAccumulator::new(m, cfg.consensus_refresh_every),
+            tier: AggregatorTier::new(cfg.topology, n, m, cfg.p_tier, ef),
+            rng_topology,
             d: vec![0; n],
             pending: BTreeSet::new(),
             rng,
@@ -99,8 +113,24 @@ impl ServerLoop {
                 }
             }
         }
-        // seed the incremental sum with one full bank sweep, then fold
-        // arrivals in as they land
+        // Non-star fan-in: seed the aggregator partials with the collected
+        // init state and charge the aggregated full-precision forwards on
+        // the aggregator links (n + g), mirroring the in-process engines.
+        if let Some(t) = &mut self.tier {
+            for leaf in 0..self.n {
+                let parent = t.static_parent(leaf);
+                t.seed_partial(parent, self.xhat[leaf].estimate(), self.uhat[leaf].estimate());
+            }
+            let mut acc = self.accounting.lock().unwrap();
+            for g in 0..t.n_aggregators() {
+                acc.record_uplink(
+                    self.n + g,
+                    MSG_HEADER_BYTES * 8 + 2 * self.m as u64 * INIT_BITS_PER_SCALAR,
+                );
+            }
+        }
+        // seed the incremental sum with one full bank sweep (from the ŝ_g
+        // partials under a tier), then fold arrivals in as they land
         self.refresh_sum();
         let z = self.consensus()?;
         self.ep.broadcast(&ServerToNode::InitZ { z0: z.clone() })?;
@@ -175,10 +205,34 @@ impl ServerLoop {
                     let du = wire::decode(&du_wire, self.m)?;
                     self.xhat[node].commit(&dx);
                     self.uhat[node].commit(&du);
-                    // O(m) fold keeps s = Σ(x̂+û) current without the
-                    // per-round bank sweep
-                    self.acc.fold(&dx, &du);
-                    self.pending.insert(node);
+                    match &mut self.tier {
+                        None => {
+                            // O(m) fold keeps s = Σ(x̂+û) current without
+                            // the per-round bank sweep
+                            self.acc.fold(&dx, &du);
+                            self.pending.insert(node);
+                        }
+                        Some(t) => {
+                            // route through the colocated aggregator tier:
+                            // fold into the pending partial, then forward
+                            // the re-quantized delta on the aggregator's
+                            // own link immediately (deployment shape:
+                            // arrival order is real time, nothing to batch
+                            // a virtual instant against)
+                            let g = t.route(node, &mut self.rng_topology);
+                            t.deliver(node, &dx, &du, 0.0);
+                            let fw = t.flush(g, self.compressor.as_ref(), &mut self.rng);
+                            self.accounting.lock().unwrap().record_uplink(
+                                self.n + g,
+                                MSG_HEADER_BYTES * 8 + fw.cx.wire_bits() + fw.cu.wire_bits(),
+                            );
+                            t.commit(g, &fw.cx.dequantized, &fw.cu.dequantized);
+                            self.acc.fold(&fw.cx.dequantized, &fw.cu.dequantized);
+                            for (child, _) in fw.children {
+                                self.pending.insert(child);
+                            }
+                        }
+                    }
                 }
                 // Duplicated InitFull frames (fault injection) are ignored —
                 // the handshake already completed.
@@ -197,10 +251,14 @@ impl ServerLoop {
         self.problem.lock().unwrap().consensus_from_sum(self.acc.sum(), self.n)
     }
 
-    /// Full O(n·m) rebuild of the sum from the banks (init + every-K-rounds
-    /// drift wash-out).
+    /// Full rebuild of the sum (init + every-K-rounds drift wash-out):
+    /// O(n·m) from the per-node banks under the star, O(A·m) from the ŝ_g
+    /// partials under a tier (refreshing from leaf banks would leak
+    /// information past the re-quantized aggregator hop).
     fn refresh_sum(&mut self) {
-        self.acc
-            .refresh(self.xhat.iter().zip(&self.uhat).map(|(x, u)| (x.estimate(), u.estimate())));
+        match &self.tier {
+            Some(t) => self.acc.refresh(t.refresh_rows()),
+            None => self.acc.refresh(estimate_rows(&self.xhat, &self.uhat)),
+        }
     }
 }

@@ -59,7 +59,7 @@ pub fn run(opts: &Fig3Options) -> anyhow::Result<Fig3Summary> {
     let service = match opts.backend {
         Backend::Hlo => Some(ComputeService::start(
             opts.artifact_dir.clone(),
-            vec!["lasso_node_step".into(), "lasso_server_step".into()],
+            vec!["lasso_node_step".into()],
         )?),
         Backend::Native => None,
     };

@@ -41,6 +41,7 @@ pub mod metrics;
 pub mod problems;
 pub mod runtime;
 pub mod solver;
+pub mod topology;
 pub mod util;
 
 pub use compress::{Compressor, CompressorKind};

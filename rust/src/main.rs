@@ -18,7 +18,7 @@ use qadmm::admm::runner::{self, ProblemFactory};
 use qadmm::comm::network::FaultSpec;
 use qadmm::compress::CompressorKind;
 use qadmm::config::{presets, Backend, EngineKind, ProblemKind};
-use qadmm::exp::{ablation, downlink, fig3, fig4};
+use qadmm::exp::{ablation, downlink, fig3, fig4, topology};
 use qadmm::problems::lasso::{LassoConfig, LassoProblem};
 use qadmm::problems::nn::{NnArch, NnProblem};
 use qadmm::problems::Problem;
@@ -45,6 +45,7 @@ fn real_main() -> anyhow::Result<()> {
         "fig4" => cmd_fig4(&mut args),
         "ablation" => cmd_ablation(&mut args),
         "downlink" => cmd_downlink(&mut args),
+        "topology" => cmd_topology(&mut args),
         "serve" => cmd_serve(&mut args),
         "info" => cmd_info(&mut args),
         "selftest" => cmd_selftest(&mut args),
@@ -66,10 +67,13 @@ USAGE: qadmm <cmd> [--options]
             [--compute-delay L] [--uplink-delay L] [--downlink-delay L]
             [--clock-drift E] [--refresh-every K]  (K rounds between full
             recomputes of the incremental consensus sum; 0 = never)
+            [--topology star|tree:F|gossip:K] [--p-tier P_g]
   fig3      [--iters N] [--trials N] [--backend hlo|native] [--target X]
   fig4      [--iters N] [--trials N] [--arch cnn|mlp] [--train N] [--test N]
   ablation  [--iters N] [--trials N] [--target X]
   downlink  [--iters N] [--trials N] [--target X] [--quick]
+  topology  [--iters N] [--trials N] [--target X] [--quick]
+            (star vs tree vs gossip convergence-per-bit, event engine)
   serve     --preset NAME [--iters N] [--dup-prob X]   (threaded deployment)
   info      [--artifacts DIR]
   selftest  [--artifacts DIR]
@@ -81,6 +85,10 @@ Engines: seq (lockstep simulator) | event (virtual-time, 1000+ nodes)
 Latency models L: none | const:S | exp:MEAN | mix:FAST,SLOW,P_SLOW
   (per-link legs; odd-indexed nodes are 4x slower, --clock-drift E in [0,1)
    spreads node clock rates over [1-E, 1+E])
+Topologies: star (direct fan-in) | tree:F (2-tier, fanout-F aggregators)
+            | gossip:K (random relay among K aggregators); --p-tier sets the
+            per-aggregator arrival threshold P_g before a re-quantized
+            partial-sum forward
 ";
 
 fn apply_overrides(
@@ -124,6 +132,11 @@ fn apply_overrides(
         cfg.link.downlink = qadmm::comm::latency::LatencyModel::parse(&l)?;
     }
     cfg.link.clock_drift = args.f64("clock-drift", cfg.link.clock_drift);
+    // aggregation topology (consensus fan-in) + per-tier threshold
+    if let Some(t) = args.str_opt("topology") {
+        cfg.topology = qadmm::topology::TopologyKind::parse(&t)?;
+    }
+    cfg.p_tier = args.usize("p-tier", cfg.p_tier);
     // problem-level overrides
     let rho_override = args.f64("rho", f64::NAN);
     let lr_override = args.f64("lr", f64::NAN);
@@ -201,9 +214,7 @@ fn make_factory<'a>(
 
 fn needed_artifacts(cfg: &qadmm::ExperimentConfig) -> Vec<String> {
     match cfg.problem {
-        ProblemKind::Lasso { .. } => {
-            vec!["lasso_node_step".into(), "lasso_server_step".into()]
-        }
+        ProblemKind::Lasso { .. } => vec!["lasso_node_step".into()],
         ProblemKind::Mlp { .. } => vec!["mlp_local_update".into(), "mlp_eval".into()],
         ProblemKind::Cnn { .. } => vec!["cnn_local_update".into(), "cnn_eval".into()],
     }
@@ -381,6 +392,19 @@ fn cmd_downlink(args: &mut Args) -> anyhow::Result<()> {
     };
     args.finish()?;
     downlink::run(&opts)?;
+    Ok(())
+}
+
+fn cmd_topology(args: &mut Args) -> anyhow::Result<()> {
+    let defaults = topology::TopologySweepOptions::default();
+    let opts = topology::TopologySweepOptions {
+        iters: args.usize("iters", defaults.iters),
+        mc_trials: args.usize("trials", defaults.mc_trials),
+        target: args.f64("target", defaults.target),
+        quick: args.flag("quick"),
+    };
+    args.finish()?;
+    topology::run(&opts)?;
     Ok(())
 }
 

@@ -45,40 +45,114 @@
 //! bits. The threaded coordinator folds in real arrival order — no bitwise
 //! claim there, only the ≤1e-10 drift bound.
 
-/// Running Kahan-compensated Σᵢ(x̂ᵢ + ûᵢ) with a periodic full-recompute
-/// refresh. See the module docs for fold/finalize/refresh semantics.
+/// A Kahan-compensated running vector sum: the *mergeable partial sum*
+/// primitive shared by the server's [`ConsensusAccumulator`] and the
+/// per-aggregator pending buffers of hierarchical fan-in topologies
+/// ([`crate::topology::AggregatorTier`]). Each coordinate carries its
+/// compensation term, so the represented value stays within O(ε)·Σ|δ| of
+/// the exact sum regardless of fold count, and two independently
+/// accumulated partials can be [`KahanVec::merge`]d without losing either
+/// side's low-order bits.
 #[derive(Clone, Debug)]
-pub struct ConsensusAccumulator {
-    /// s[j] = Σᵢ(x̂ᵢ[j] + ûᵢ[j]), maintained incrementally.
+pub struct KahanVec {
     sum: Vec<f64>,
-    /// Per-coordinate Kahan compensation (the low-order bits the last
-    /// additions lost).
+    /// Per-coordinate compensation: the low-order error the last addition
+    /// *included* (subtracted from the next addend).
     comp: Vec<f64>,
-    /// Full recompute cadence in consensus rounds (0 = never).
-    refresh_every: usize,
 }
 
-impl ConsensusAccumulator {
-    pub fn new(m: usize, refresh_every: usize) -> Self {
-        Self { sum: vec![0.0; m], comp: vec![0.0; m], refresh_every }
+impl KahanVec {
+    pub fn zeros(m: usize) -> Self {
+        Self { sum: vec![0.0; m], comp: vec![0.0; m] }
     }
 
     pub fn dim(&self) -> usize {
         self.sum.len()
     }
 
-    /// The current running sum s (pass to
-    /// [`crate::problems::Problem::consensus_from_sum`]).
-    pub fn sum(&self) -> &[f64] {
+    /// The represented value (the compensated running sum).
+    pub fn value(&self) -> &[f64] {
         &self.sum
     }
 
     #[inline]
-    fn kahan_add(sum: &mut f64, comp: &mut f64, v: f64) {
+    pub fn kahan_add(sum: &mut f64, comp: &mut f64, v: f64) {
         let y = v - *comp;
         let t = *sum + y;
         *comp = (t - *sum) - y;
         *sum = t;
+    }
+
+    /// s += v, compensated per coordinate.
+    pub fn add(&mut self, v: &[f64]) {
+        debug_assert_eq!(v.len(), self.sum.len());
+        for (j, (s, c)) in self.sum.iter_mut().zip(self.comp.iter_mut()).enumerate() {
+            Self::kahan_add(s, c, v[j]);
+        }
+    }
+
+    /// s −= v (error-feedback residual after a compressed forward).
+    pub fn sub(&mut self, v: &[f64]) {
+        debug_assert_eq!(v.len(), self.sum.len());
+        for (j, (s, c)) in self.sum.iter_mut().zip(self.comp.iter_mut()).enumerate() {
+            Self::kahan_add(s, c, -v[j]);
+        }
+    }
+
+    /// Paired fold s += a + b in one pass (the consensus arrival shape).
+    pub fn fold2(&mut self, a: &[f64], b: &[f64]) {
+        debug_assert_eq!(a.len(), self.sum.len());
+        debug_assert_eq!(b.len(), self.sum.len());
+        for (j, (s, c)) in self.sum.iter_mut().zip(self.comp.iter_mut()).enumerate() {
+            Self::kahan_add(s, c, a[j]);
+            Self::kahan_add(s, c, b[j]);
+        }
+    }
+
+    /// Fold another partial sum in, preserving its compensation: the true
+    /// value of `other` is `sum − comp` to working precision, so the merge
+    /// adds `other.sum` and then corrects by `−other.comp`. No runtime
+    /// path calls this yet — it is the composition primitive for
+    /// multi-level aggregator trees (aggregators of aggregators merge
+    /// their children's partials; see the ROADMAP topology follow-up) and
+    /// is kept pinned by its unit test until that tier lands.
+    pub fn merge(&mut self, other: &KahanVec) {
+        debug_assert_eq!(other.dim(), self.dim());
+        for (j, (s, c)) in self.sum.iter_mut().zip(self.comp.iter_mut()).enumerate() {
+            Self::kahan_add(s, c, other.sum[j]);
+            Self::kahan_add(s, c, -other.comp[j]);
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.sum.iter_mut().for_each(|v| *v = 0.0);
+        self.comp.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+/// Running Kahan-compensated Σᵢ(x̂ᵢ + ûᵢ) with a periodic full-recompute
+/// refresh. See the module docs for fold/finalize/refresh semantics.
+#[derive(Clone, Debug)]
+pub struct ConsensusAccumulator {
+    /// s = Σᵢ(x̂ᵢ + ûᵢ) with per-coordinate compensation.
+    state: KahanVec,
+    /// Full recompute cadence in consensus rounds (0 = never).
+    refresh_every: usize,
+}
+
+impl ConsensusAccumulator {
+    pub fn new(m: usize, refresh_every: usize) -> Self {
+        Self { state: KahanVec::zeros(m), refresh_every }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.state.dim()
+    }
+
+    /// The current running sum s (pass to
+    /// [`crate::problems::Problem::consensus_from_sum`]).
+    pub fn sum(&self) -> &[f64] {
+        self.state.value()
     }
 
     /// Fold one arrival's dequantized deltas: s += C(Δx) + C(Δu), O(m).
@@ -86,12 +160,7 @@ impl ConsensusAccumulator {
     /// banks (the [`crate::compress::Compressed::dequantized`] payloads) so
     /// that s keeps tracking Σᵢ(x̂ᵢ + ûᵢ).
     pub fn fold(&mut self, dx: &[f64], du: &[f64]) {
-        debug_assert_eq!(dx.len(), self.sum.len());
-        debug_assert_eq!(du.len(), self.sum.len());
-        for (j, (s, c)) in self.sum.iter_mut().zip(self.comp.iter_mut()).enumerate() {
-            Self::kahan_add(s, c, dx[j]);
-            Self::kahan_add(s, c, du[j]);
-        }
+        self.state.fold2(dx, du);
     }
 
     /// True when the round about to fire (1-based) is a refresh round. Both
@@ -105,8 +174,7 @@ impl ConsensusAccumulator {
     /// the compensation: the O(n·m) drift wash-out. `rows` yields each
     /// node's (x̂ᵢ, ûᵢ) estimate slices.
     pub fn refresh<'b>(&mut self, rows: impl Iterator<Item = (&'b [f64], &'b [f64])>) {
-        self.sum.iter_mut().for_each(|v| *v = 0.0);
-        self.comp.iter_mut().for_each(|v| *v = 0.0);
+        self.state.reset();
         for (x, u) in rows {
             self.fold(x, u);
         }
@@ -151,6 +219,45 @@ mod tests {
         let never = ConsensusAccumulator::new(1, 0);
         for r in 1..100 {
             assert!(!never.refresh_due(r));
+        }
+    }
+
+    /// A single `add` from zero is exact (the compensation starts at 0 and
+    /// the addend lands unrounded): this is what keeps the degenerate
+    /// one-child-per-aggregator tree bit-identical to the star fan-in.
+    #[test]
+    fn kahan_vec_single_add_from_zero_is_exact() {
+        let mut rng = Pcg64::seed_from_u64(17);
+        let v = rng.normal_vec(33, 0.0, 3.0);
+        let mut k = KahanVec::zeros(33);
+        k.add(&v);
+        assert_eq!(k.value(), v.as_slice());
+        // and subtracting it back lands exactly on zero
+        k.sub(&v);
+        assert!(k.value().iter().all(|&x| x == 0.0));
+    }
+
+    /// Merging two independently accumulated partials matches folding both
+    /// streams into one accumulator, to working precision.
+    #[test]
+    fn kahan_vec_merge_matches_joint_fold() {
+        let mut rng = Pcg64::seed_from_u64(23);
+        let m = 16;
+        let a_stream: Vec<Vec<f64>> = (0..500).map(|_| rng.normal_vec(m, 0.0, 1e6)).collect();
+        let b_stream: Vec<Vec<f64>> = (0..500).map(|_| rng.normal_vec(m, 0.0, 1e-6)).collect();
+        let mut a = KahanVec::zeros(m);
+        let mut b = KahanVec::zeros(m);
+        let mut joint = KahanVec::zeros(m);
+        for (va, vb) in a_stream.iter().zip(&b_stream) {
+            a.add(va);
+            b.add(vb);
+            joint.add(va);
+            joint.add(vb);
+        }
+        a.merge(&b);
+        let norm = joint.value().iter().fold(1.0f64, |mx, v| mx.max(v.abs()));
+        for (x, y) in a.value().iter().zip(joint.value()) {
+            assert!((x - y).abs() <= 1e-12 * norm, "merge {x} vs joint {y}");
         }
     }
 

@@ -166,8 +166,9 @@ impl LassoProblem {
         })
     }
 
-    /// Switch to the HLO backend (artifact `lasso_node_step` /
-    /// `lasso_server_step`). Requires the artifact dimensions to match.
+    /// Switch to the HLO backend (artifact `lasso_node_step`; the server
+    /// prox stays native f64 — see [`Problem::consensus_from_sum`]).
+    /// Requires the artifact dimensions to match.
     pub fn with_hlo(
         mut self,
         exec: Box<dyn Exec + Send>,
@@ -312,25 +313,6 @@ impl LassoProblem {
         Ok(out[0].as_f64()?.to_vec())
     }
 
-    fn consensus_hlo(&self, xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
-        let LassoConfig { m, n, rho, theta, .. } = self.cfg;
-        let exec = self.exec.as_ref().expect("hlo backend without exec");
-        let stack = |vs: &[Vec<f64>]| -> Tensor {
-            Tensor::F64(vs.concat(), vec![n, m])
-        };
-        let inputs = vec![
-            stack(xhat),
-            stack(uhat),
-            Tensor::vec_f64(vec![0.0; m]), // zhat (only feeds fused quant)
-            Tensor::vec_f64(vec![0.5; m]), // noise
-            Tensor::scalar_f64(theta),
-            Tensor::scalar_f64(rho),
-            Tensor::scalar_f64(3.0),
-        ];
-        let out = exec.call("lasso_server_step", &inputs)?;
-        Ok(out[0].as_f64()?.to_vec())
-    }
-
     /// Stacked (AᵀA [n·m·m], 2Aᵀb [n·m], ‖b‖² [n]) tensors for the HLO
     /// Lagrangian artifact (parity tests). The Grams are built on demand —
     /// they are no longer kept resident (O(n·m²) memory).
@@ -416,20 +398,19 @@ impl Problem for LassoProblem {
         }))
     }
 
+    /// Soft-thresholded mean over the full banks — native f64 on every
+    /// backend. The `lasso_server_step` HLO artifact that used to serve
+    /// this entry point under `backend=hlo` is retired: no runtime path
+    /// reached it once the per-round server prox moved to
+    /// [`Self::consensus_from_sum`] (re-wire as a fused fold+prox kernel
+    /// if the server step ever moves on-device — see ROADMAP).
     fn consensus(&mut self, xhat: &[Vec<f64>], uhat: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
-        match self.backend {
-            Backend::Native => Ok(self.consensus_native(xhat, uhat)),
-            Backend::Hlo => self.consensus_hlo(xhat, uhat),
-        }
+        Ok(self.consensus_native(xhat, uhat))
     }
 
     /// Eq. 15 from the running sum: z = S_{θ/(ρn)}(s/n), O(m). Computed in
-    /// native f64 on every backend: the HLO `lasso_server_step` artifact
-    /// consumes the *stacked banks*, so it cannot serve the incremental
-    /// path — and since every runtime (init included) now goes through this
-    /// method, the artifact is exercised only by the explicit bank-based
-    /// [`Problem::consensus`] calls in the HLO parity tests and benches,
-    /// not by any run path (ROADMAP records the retire-or-rewire decision).
+    /// native f64 on every backend: the incremental path needs only the
+    /// running sum, never the stacked banks.
     fn consensus_from_sum(&mut self, sum: &[f64], n_nodes: usize) -> anyhow::Result<Vec<f64>> {
         let LassoConfig { rho, theta, .. } = self.cfg;
         let n = n_nodes as f64;

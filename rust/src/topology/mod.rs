@@ -1,0 +1,191 @@
+//! Aggregation topologies: who owns the consensus fan-in.
+//!
+//! The paper's Algorithm 1 assumes a **star**: every node's compressed
+//! (Δx, Δu) update travels one hop to the server, which folds it into the
+//! running consensus sum. The sparse arrival set, the event queue and the
+//! bounded-staleness scheduler were always topology-agnostic — only the
+//! fan-in hard-coded the star. This module makes the fan-in pluggable:
+//!
+//! * [`TopologyKind::Star`] — the paper's shape, byte-for-byte the
+//!   pre-existing path (the engines skip every aggregator branch, so the
+//!   `tests/engine_parity.rs` bit-identity contract is untouched).
+//! * [`TopologyKind::Tree`] — a 2-tier k-ary tree: leaves are partitioned
+//!   into ⌈n/fanout⌉ groups, each owned by an **intermediate aggregator**
+//!   that folds child arrivals into a pending partial sum (O(m) per
+//!   arrival, Kahan-compensated) and forwards the *re-quantized* partial
+//!   delta upstream once its per-tier threshold `P_g`
+//!   ([`crate::config::ExperimentConfig::p_tier`]) is met — or as soon as
+//!   no further child update is in flight, which keeps the server trigger
+//!   live for any (P, P_g) combination.
+//! * [`TopologyKind::Gossip`] — randomized neighbor exchange: `k` relay
+//!   aggregators, and each dispatched update picks its relay uniformly at
+//!   random (a fresh draw per dispatch from the dedicated topology RNG
+//!   stream, identical across the sequential and event engines).
+//!
+//! # Per-hop compression, error feedback, and accounting
+//!
+//! Each aggregator→server hop reuses the experiment's compressor: the
+//! pending partial delta is compressed with the aggregator's own quantizer
+//! stream, the wire frame is charged to the aggregator's *own* link (index
+//! `n + g` in [`crate::comm::accounting::CommAccounting`], realized from
+//! the same [`crate::comm::profile::LinkConfig`] as the leaves), and the
+//! quantization residual stays in the pending buffer (error feedback per
+//! hop — with `--no-ef` the residual is dropped instead, extending the
+//! §4.1 ablation across tiers). Communication accounting therefore
+//! *composes*: a tree run's total bits = leaf-hop bits + aggregator-hop
+//! bits + broadcast bits, each priced per link.
+//!
+//! # Staleness across tiers
+//!
+//! τ is enforced end-to-end at the server: a leaf's staleness counter
+//! advances per consensus round until its update *arrives at the server*,
+//! which with an intermediate tier means compute + leaf-hop transit +
+//! aggregator batching (P_g) + aggregator-hop transit. Every hop consumes
+//! the same τ budget — per-hop delay composes additively into the
+//! asymmetric staleness of the paper's Fig. 2 — and the server still
+//! force-waits any τ−1-stale leaf, so the bounded-delay guarantee is
+//! unchanged. The ẑ broadcast fan-*out* remains direct server→leaf
+//! (aggregation is a fan-in optimization; relaying the broadcast through
+//! the tier would add nothing to the bits story, since the frame must
+//! reach every leaf either way).
+//!
+//! # Conservation invariant
+//!
+//! Everything that ever arrived is either already in the server's sum or
+//! still pending at an aggregator:
+//! Σ_leaves(x̂ᵢ+ûᵢ) = Σ_g(ŝ_g) + Σ_g(pending_g) to Kahan precision —
+//! `tests/prop.rs` drives this under randomized gossip routing.
+
+mod tier;
+
+pub use tier::{AggForward, AggregatorTier};
+
+/// Which aggregation topology owns the consensus fan-in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Single server, every leaf reports directly (the paper's shape).
+    Star,
+    /// 2-tier k-ary tree: ⌈n/fanout⌉ intermediate aggregators, leaf i
+    /// parented by aggregator i / fanout.
+    Tree { fanout: usize },
+    /// Randomized neighbor exchange through `k` relay aggregators; the
+    /// relay is redrawn per dispatched update.
+    Gossip { k: usize },
+}
+
+impl TopologyKind {
+    /// Parse `star` | `tree:<fanout>` | `gossip:<k>`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        if s == "star" {
+            return Ok(TopologyKind::Star);
+        }
+        if let Some(f) = s.strip_prefix("tree:") {
+            let fanout: usize = f
+                .parse()
+                .map_err(|_| anyhow::anyhow!("topology 'tree:{f}': fanout is not an integer"))?;
+            anyhow::ensure!(fanout >= 1, "topology 'tree:{f}': fanout must be >= 1");
+            return Ok(TopologyKind::Tree { fanout });
+        }
+        if let Some(k) = s.strip_prefix("gossip:") {
+            let k_num: usize = k
+                .parse()
+                .map_err(|_| anyhow::anyhow!("topology 'gossip:{k}': k is not an integer"))?;
+            anyhow::ensure!(k_num >= 1, "topology 'gossip:{k}': k must be >= 1");
+            return Ok(TopologyKind::Gossip { k: k_num });
+        }
+        anyhow::bail!("unknown topology '{s}' (star|tree:<fanout>|gossip:<k>)")
+    }
+
+    /// Inverse of [`Self::parse`].
+    pub fn label(&self) -> String {
+        match *self {
+            TopologyKind::Star => "star".into(),
+            TopologyKind::Tree { fanout } => format!("tree:{fanout}"),
+            TopologyKind::Gossip { k } => format!("gossip:{k}"),
+        }
+    }
+
+    /// Number of intermediate aggregators for an `n`-leaf fleet (0 = the
+    /// star's direct fan-in).
+    pub fn n_aggregators(&self, n_leaves: usize) -> usize {
+        match *self {
+            TopologyKind::Star => 0,
+            TopologyKind::Tree { fanout } => n_leaves.div_ceil(fanout),
+            TopologyKind::Gossip { k } => k.min(n_leaves),
+        }
+    }
+
+    /// The deterministic parent used for the full-precision init exchange
+    /// (gossip has no fixed parent, so init partials are assigned
+    /// round-robin — any fixed assignment preserves Σ over leaves).
+    pub fn static_parent(&self, leaf: usize) -> usize {
+        match *self {
+            TopologyKind::Star => 0,
+            TopologyKind::Tree { fanout } => leaf / fanout,
+            TopologyKind::Gossip { k } => leaf % k,
+        }
+    }
+
+    pub fn validate(&self, n_leaves: usize) -> anyhow::Result<()> {
+        match *self {
+            TopologyKind::Star => Ok(()),
+            TopologyKind::Tree { fanout } => {
+                anyhow::ensure!(fanout >= 1, "tree fanout must be >= 1");
+                Ok(())
+            }
+            TopologyKind::Gossip { k } => {
+                anyhow::ensure!(
+                    (1..=n_leaves).contains(&k),
+                    "gossip k must be in 1..={n_leaves} (got {k})"
+                );
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_label_roundtrip() {
+        for s in ["star", "tree:8", "tree:1", "gossip:4"] {
+            let k = TopologyKind::parse(s).unwrap();
+            assert_eq!(k.label(), s);
+            assert_eq!(TopologyKind::parse(&k.label()).unwrap(), k);
+        }
+        for s in ["mesh", "tree:0", "tree:x", "gossip:0", "gossip:", "tree"] {
+            assert!(TopologyKind::parse(s).is_err(), "{s} should be rejected");
+        }
+    }
+
+    #[test]
+    fn aggregator_counts() {
+        assert_eq!(TopologyKind::Star.n_aggregators(16), 0);
+        assert_eq!(TopologyKind::Tree { fanout: 4 }.n_aggregators(16), 4);
+        assert_eq!(TopologyKind::Tree { fanout: 5 }.n_aggregators(16), 4); // ceil
+        assert_eq!(TopologyKind::Tree { fanout: 1 }.n_aggregators(7), 7); // degenerate
+        assert_eq!(TopologyKind::Tree { fanout: 100 }.n_aggregators(16), 1);
+        assert_eq!(TopologyKind::Gossip { k: 3 }.n_aggregators(16), 3);
+        assert_eq!(TopologyKind::Gossip { k: 30 }.n_aggregators(16), 16); // capped
+    }
+
+    #[test]
+    fn tree_parents_partition_leaves() {
+        let t = TopologyKind::Tree { fanout: 3 };
+        let parents: Vec<usize> = (0..8).map(|i| t.static_parent(i)).collect();
+        assert_eq!(parents, vec![0, 0, 0, 1, 1, 1, 2, 2]);
+        for i in 0..8 {
+            assert!(t.static_parent(i) < t.n_aggregators(8));
+        }
+    }
+
+    #[test]
+    fn validate_bounds() {
+        assert!(TopologyKind::Star.validate(4).is_ok());
+        assert!(TopologyKind::Tree { fanout: 9 }.validate(4).is_ok());
+        assert!(TopologyKind::Gossip { k: 4 }.validate(4).is_ok());
+        assert!(TopologyKind::Gossip { k: 5 }.validate(4).is_err());
+    }
+}

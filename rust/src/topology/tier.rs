@@ -1,0 +1,343 @@
+//! The intermediate-aggregator tier: runtime state of a non-star fan-in.
+//!
+//! One [`AggregatorTier`] instance lives beside each engine (sequential
+//! simulator, event engine, threaded server) and owns, per aggregator g:
+//!
+//! * `pending_g` — the Kahan-compensated sum of child deltas received
+//!   since the last upstream forward, *plus* the re-quantization residual
+//!   of previous forwards (error feedback per hop). Folding a child
+//!   arrival in is O(m).
+//! * `ŝ_g` — the server-side estimate of g's forwarded partial sum, the
+//!   exact analogue of the star's per-node estimate banks: it advances
+//!   only by dequantized forwarded deltas, so the server's periodic
+//!   consensus refresh rebuilds s = Σ_g ŝ_g in O(A·m) instead of the
+//!   star's O(n·m) — refreshing from the *leaf* banks would teleport
+//!   information past the aggregator hop without paying its wire bits.
+//!
+//! Determinism contract: at zero link delay the event engine delivers and
+//! flushes in ascending id order within each virtual instant — the same
+//! order the sequential simulator uses — so tree/gossip runs are bit-exact
+//! across the two in-process engines, and the degenerate tree (fanout 1,
+//! identity compressor) reproduces the star bit-for-bit: a single child
+//! delta folded into a zeroed Kahan buffer is exact, the identity forward
+//! carries it unchanged, and `ŝ_g` then replays the leaf bank's commits.
+
+use super::TopologyKind;
+use crate::compress::{Compressed, Compressor};
+use crate::problems::accumulator::KahanVec;
+use crate::problems::Arena;
+use crate::util::rng::Pcg64;
+
+/// One re-quantized partial-sum forward in flight toward the server.
+pub struct AggForward {
+    /// Compressed Δ of the aggregator's x-partial (what the server folds).
+    pub cx: Compressed,
+    /// Compressed Δ of the aggregator's u-partial.
+    pub cu: Compressed,
+    /// The leaves folded into this forward, with the local loss each one
+    /// reported (control plane: arrival credit for the server's scheduler).
+    pub children: Vec<(usize, f64)>,
+}
+
+pub struct AggregatorTier {
+    kind: TopologyKind,
+    n_aggs: usize,
+    /// Per-tier arrival threshold P_g: forward once this many children are
+    /// pending (or earlier, when no further child update is in flight).
+    p_tier: usize,
+    /// Error feedback on: keep the re-quantization residual in the pending
+    /// buffer; off: drop it (pure delta coding across the hop).
+    error_feedback: bool,
+    pending_x: Vec<KahanVec>,
+    pending_u: Vec<KahanVec>,
+    children: Vec<Vec<(usize, f64)>>,
+    /// Child updates routed to each aggregator but not yet delivered
+    /// (computing or on the leaf-hop wire).
+    in_transit: Vec<usize>,
+    /// The aggregator each leaf's in-flight update was routed to.
+    assigned: Vec<Option<usize>>,
+    /// Server-side estimates of each aggregator's forwarded partial sums
+    /// (plain adds, mirroring `EstimateTracker::commit`).
+    sx: Arena,
+    su: Arena,
+    forwards: u64,
+}
+
+impl AggregatorTier {
+    /// `None` for the star (no tier: engines keep their original fan-in).
+    pub fn new(
+        kind: TopologyKind,
+        n_leaves: usize,
+        m: usize,
+        p_tier: usize,
+        error_feedback: bool,
+    ) -> Option<Self> {
+        let n_aggs = kind.n_aggregators(n_leaves);
+        if n_aggs == 0 {
+            return None;
+        }
+        Some(Self {
+            kind,
+            n_aggs,
+            p_tier: p_tier.max(1),
+            error_feedback,
+            pending_x: (0..n_aggs).map(|_| KahanVec::zeros(m)).collect(),
+            pending_u: (0..n_aggs).map(|_| KahanVec::zeros(m)).collect(),
+            children: vec![Vec::new(); n_aggs],
+            in_transit: vec![0; n_aggs],
+            assigned: vec![None; n_leaves],
+            sx: Arena::zeros(n_aggs, m),
+            su: Arena::zeros(n_aggs, m),
+            forwards: 0,
+        })
+    }
+
+    pub fn n_aggregators(&self) -> usize {
+        self.n_aggs
+    }
+
+    /// The deterministic init-exchange parent (see
+    /// [`TopologyKind::static_parent`]).
+    pub fn static_parent(&self, leaf: usize) -> usize {
+        self.kind.static_parent(leaf)
+    }
+
+    /// Upstream forwards performed so far (wire-bits property tests).
+    pub fn forwards(&self) -> u64 {
+        self.forwards
+    }
+
+    /// Seed ŝ_g with a leaf's full-precision init state (Algorithm 1
+    /// lines 1–4 aggregated at the static parent). Plain adds, so the
+    /// degenerate tree's ŝ banks start exactly like the star's leaf banks.
+    pub fn seed_partial(&mut self, agg: usize, x0: &[f64], u0: &[f64]) {
+        for (s, v) in self.sx.row_mut(agg).iter_mut().zip(x0) {
+            *s += v;
+        }
+        for (s, v) in self.su.row_mut(agg).iter_mut().zip(u0) {
+            *s += v;
+        }
+    }
+
+    /// Route a freshly dispatched leaf update to its aggregator. Tree
+    /// routing is static and draws nothing; gossip draws one relay index
+    /// from the dedicated topology stream per dispatch.
+    pub fn route(&mut self, leaf: usize, rng: &mut Pcg64) -> usize {
+        let agg = match self.kind {
+            TopologyKind::Star => unreachable!("star has no aggregator tier"),
+            TopologyKind::Tree { fanout } => leaf / fanout,
+            TopologyKind::Gossip { .. } => rng.gen_range(self.n_aggs),
+        };
+        debug_assert!(self.assigned[leaf].is_none(), "leaf {leaf} already in flight");
+        self.assigned[leaf] = Some(agg);
+        self.in_transit[agg] += 1;
+        agg
+    }
+
+    /// A child's dequantized deltas landed at its aggregator: fold into the
+    /// pending partial sum (O(m)) and record the arrival credit. Returns
+    /// the aggregator id (the caller's "touched" set).
+    pub fn deliver(&mut self, leaf: usize, dx: &[f64], du: &[f64], loss: f64) -> usize {
+        let agg = self.assigned[leaf].take().expect("delivery without a routed update");
+        self.in_transit[agg] -= 1;
+        self.pending_x[agg].add(dx);
+        self.pending_u[agg].add(du);
+        self.children[agg].push((leaf, loss));
+        agg
+    }
+
+    /// Forward condition: ≥ P_g children pending, or nothing further in
+    /// flight toward this aggregator (so a partial batch never wedges the
+    /// server's P/τ trigger).
+    pub fn ready(&self, agg: usize) -> bool {
+        !self.children[agg].is_empty()
+            && (self.children[agg].len() >= self.p_tier || self.in_transit[agg] == 0)
+    }
+
+    pub fn has_pending(&self, agg: usize) -> bool {
+        !self.children[agg].is_empty()
+    }
+
+    /// Re-quantize the pending partial delta for the upstream hop: compress
+    /// both halves with the aggregator's quantizer stream, retain the
+    /// compression residual in the pending buffer (error feedback) or drop
+    /// it (EF-off ablation), and hand back the forward payload. The caller
+    /// charges the wire bits to link n + agg and delivers the payload
+    /// upstream (instantly in the simulator, after the aggregator's uplink
+    /// leg in the event engine).
+    pub fn flush(
+        &mut self,
+        agg: usize,
+        compressor: &dyn Compressor,
+        rng: &mut Pcg64,
+    ) -> AggForward {
+        debug_assert!(self.has_pending(agg), "flush of an empty aggregator");
+        let cx = compressor.compress(self.pending_x[agg].value(), rng);
+        let cu = compressor.compress(self.pending_u[agg].value(), rng);
+        if self.error_feedback {
+            self.pending_x[agg].sub(&cx.dequantized);
+            self.pending_u[agg].sub(&cu.dequantized);
+        } else {
+            self.pending_x[agg].reset();
+            self.pending_u[agg].reset();
+        }
+        self.forwards += 1;
+        AggForward { cx, cu, children: std::mem::take(&mut self.children[agg]) }
+    }
+
+    /// Server side of a forward's arrival: ŝ_g += C(Δpartial). The caller
+    /// folds the same vectors into its global
+    /// [`crate::problems::accumulator::ConsensusAccumulator`] so s keeps
+    /// tracking Σ_g ŝ_g.
+    pub fn commit(&mut self, agg: usize, cx_deq: &[f64], cu_deq: &[f64]) {
+        for (s, d) in self.sx.row_mut(agg).iter_mut().zip(cx_deq) {
+            *s += d;
+        }
+        for (s, d) in self.su.row_mut(agg).iter_mut().zip(cu_deq) {
+            *s += d;
+        }
+    }
+
+    /// (ŝx_g, ŝu_g) rows for the consensus refresh — O(A·m) total.
+    pub fn refresh_rows(&self) -> impl Iterator<Item = (&[f64], &[f64])> {
+        self.sx.rows().zip(self.su.rows())
+    }
+
+    /// Σ_g(ŝ_g + pending_g) per coordinate: everything that ever arrived
+    /// anywhere in the tier. The conservation property tests pin this
+    /// against Σ_leaves(x̂ᵢ + ûᵢ).
+    pub fn tracked_mass(&self) -> Vec<f64> {
+        let m = self.sx.dim();
+        let mut total = KahanVec::zeros(m);
+        for g in 0..self.n_aggs {
+            total.add(self.sx.row(g));
+            total.add(self.su.row(g));
+            total.add(self.pending_x[g].value());
+            total.add(self.pending_u[g].value());
+        }
+        total.value().to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::CompressorKind;
+
+    fn tier(kind: TopologyKind, n: usize, m: usize, p_tier: usize) -> AggregatorTier {
+        AggregatorTier::new(kind, n, m, p_tier, true).expect("non-star tier")
+    }
+
+    #[test]
+    fn star_has_no_tier() {
+        assert!(AggregatorTier::new(TopologyKind::Star, 8, 4, 1, true).is_none());
+    }
+
+    #[test]
+    fn tree_routes_statically_and_batches_to_p_tier() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut t = tier(TopologyKind::Tree { fanout: 2 }, 4, 3, 2);
+        assert_eq!(t.route(0, &mut rng), 0);
+        assert_eq!(t.route(1, &mut rng), 0);
+        assert_eq!(t.route(2, &mut rng), 1);
+        // first child lands; sibling still in transit and P_g = 2 → wait
+        let agg = t.deliver(0, &[1.0, 0.0, 0.0], &[0.0; 3], 0.5);
+        assert_eq!(agg, 0);
+        assert!(!t.ready(0));
+        // second child completes the batch
+        t.deliver(1, &[0.0, 2.0, 0.0], &[0.0; 3], 0.25);
+        assert!(t.ready(0));
+        // aggregator 1: one pending child, none in transit — must flush
+        // even though the P_g = 2 batch is incomplete
+        t.deliver(2, &[0.0, 0.0, 4.0], &[0.0; 3], 0.0);
+        assert!(t.ready(1), "no sibling in flight: partial batch must flush");
+
+        let comp = CompressorKind::Identity.build();
+        let fw = t.flush(0, comp.as_ref(), &mut rng);
+        assert_eq!(fw.cx.dequantized, vec![1.0, 2.0, 0.0]);
+        assert_eq!(fw.children, vec![(0, 0.5), (1, 0.25)]);
+        assert!(!t.has_pending(0));
+        // identity compression leaves no residual
+        assert!(t.pending_x[0].value().iter().all(|&v| v == 0.0));
+        t.commit(0, &fw.cx.dequantized, &fw.cu.dequantized);
+        assert_eq!(t.sx.row(0), &[1.0, 2.0, 0.0]);
+        assert_eq!(t.forwards(), 1);
+    }
+
+    #[test]
+    fn gossip_routes_within_bounds_and_conserves_mass() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let (n, m, k) = (12usize, 5usize, 3usize);
+        let mut t = tier(TopologyKind::Gossip { k }, n, m, 1);
+        let comp = CompressorKind::Qsgd { bits: 3 }.build();
+        let mut true_mass = vec![0.0f64; m];
+        for round in 0..20 {
+            for leaf in 0..n {
+                let agg = t.route(leaf, &mut rng);
+                assert!(agg < k);
+                let dx = rng.normal_vec(m, 0.0, 1.0);
+                let du = rng.normal_vec(m, 0.0, 0.5);
+                for j in 0..m {
+                    true_mass[j] += dx[j] + du[j];
+                }
+                let agg = t.deliver(leaf, &dx, &du, 0.0);
+                if t.ready(agg) && round % 2 == 0 {
+                    // leave some rounds pending: mass must be conserved
+                    // whether or not a forward happened
+                    let fw = t.flush(agg, comp.as_ref(), &mut rng);
+                    t.commit(agg, &fw.cx.dequantized, &fw.cu.dequantized);
+                }
+            }
+        }
+        let tracked = t.tracked_mass();
+        let norm = true_mass.iter().fold(1.0f64, |a, v| a.max(v.abs()));
+        for (a, b) in tracked.iter().zip(&true_mass) {
+            assert!((a - b).abs() <= 1e-10 * norm, "tracked {a} vs true {b}");
+        }
+    }
+
+    /// EF keeps the residual; EF-off drops it (the §4.1 ablation per hop).
+    #[test]
+    fn error_feedback_toggles_residual() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let comp = CompressorKind::Qsgd { bits: 2 }.build();
+        let delta = rng.normal_vec(8, 0.0, 1.0);
+        for (ef, residual_expected) in [(true, true), (false, false)] {
+            let mut t = AggregatorTier::new(TopologyKind::Tree { fanout: 4 }, 4, 8, 1, ef)
+                .unwrap();
+            let mut r = Pcg64::seed_from_u64(9);
+            t.route(0, &mut r);
+            t.deliver(0, &delta, &delta, 0.0);
+            let _ = t.flush(0, comp.as_ref(), &mut r);
+            let has_residual = t.pending_x[0].value().iter().any(|&v| v != 0.0);
+            assert_eq!(has_residual, residual_expected, "ef={ef}");
+        }
+    }
+
+    /// The degenerate one-child tree with identity compression forwards the
+    /// child's deltas bit-for-bit and replays them into ŝ_g exactly — the
+    /// unit-level half of the star parity contract.
+    #[test]
+    fn degenerate_tree_identity_forward_is_exact() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let comp = CompressorKind::Identity.build();
+        let mut t = tier(TopologyKind::Tree { fanout: 1 }, 3, 6, 1);
+        let mut bank = vec![0.0f64; 6];
+        for _ in 0..50 {
+            let dx = rng.normal_vec(6, 0.0, 1.0);
+            let du = rng.normal_vec(6, 0.0, 0.1);
+            t.route(1, &mut rng);
+            t.deliver(1, &dx, &du, 0.0);
+            assert!(t.ready(1));
+            let fw = t.flush(1, comp.as_ref(), &mut rng);
+            assert_eq!(fw.cx.dequantized, dx, "forward must carry the child delta exactly");
+            assert_eq!(fw.cu.dequantized, du);
+            t.commit(1, &fw.cx.dequantized, &fw.cu.dequantized);
+            for (b, d) in bank.iter_mut().zip(&dx) {
+                *b += d;
+            }
+        }
+        // ŝ_g replayed the same adds in the same order as a leaf bank would
+        assert_eq!(t.sx.row(1), bank.as_slice());
+    }
+}

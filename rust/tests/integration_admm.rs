@@ -175,6 +175,57 @@ fn threaded_lasso_matches_sequential_quality() {
     assert!(outcome.normalized_bits > 0.0);
 }
 
+/// Hierarchical fan-in end-to-end: a 2-tier tree (re-quantized aggregator
+/// hop, EF per hop) still drives the CI LASSO to the same accuracy regime
+/// as the star, and its accounting includes the aggregator links.
+#[test]
+fn tree_fan_in_converges_on_ci_lasso() {
+    let (mut cfg, l) = ci_cfg();
+    cfg.iters = 300;
+    cfg.mc_trials = 1;
+    let mut f = lasso_factory(l);
+    let star = runner::run_mc(&cfg, f.as_mut()).unwrap();
+    cfg.topology = qadmm::topology::TopologyKind::Tree { fanout: 2 };
+    cfg.p_tier = 2;
+    let mut f = lasso_factory(l);
+    let tree = runner::run_mc(&cfg, f.as_mut()).unwrap();
+    let star_acc = *star.mean_accuracy.last().unwrap();
+    let tree_acc = *tree.mean_accuracy.last().unwrap();
+    assert!(tree_acc < 1e-4, "tree fan-in should converge: {tree_acc}");
+    assert!(
+        tree_acc < star_acc * 1e3 + 1e-6,
+        "tree {tree_acc} should be in the star's regime {star_acc}"
+    );
+    // the aggregator hop costs wire bits the star does not pay
+    let star_bits = *star.mean_comm_bits.last().unwrap();
+    let tree_bits = *tree.mean_comm_bits.last().unwrap();
+    assert!(tree_bits > star_bits, "aggregator links must be charged");
+}
+
+/// The threaded deployment runs the colocated aggregator tier: a tree run
+/// over real threads converges and charges the aggregator links.
+#[test]
+fn threaded_tree_converges() {
+    let (mut cfg, l) = ci_cfg();
+    cfg.iters = 120;
+    cfg.p_min = 2;
+    cfg.topology = qadmm::topology::TopologyKind::Tree { fanout: 2 };
+    cfg.p_tier = 1;
+    let seed = runner::trial_seed(cfg.seed, 0);
+    let mut rngs = TrialRngs::new(seed);
+    let problem = LassoProblem::generate(l, &mut rngs.data).unwrap();
+    let outcome = qadmm::coordinator::run_threaded(
+        &cfg,
+        Box::new(problem),
+        FaultSpec::default(),
+    )
+    .unwrap();
+    let acc = outcome.recorder.last().unwrap().accuracy;
+    assert!(acc < 1e-4, "threaded tree accuracy {acc}");
+    // uplink totals include the aggregator links (n + ceil(n/2) of them)
+    assert!(outcome.uplink_bits > 0 && outcome.normalized_bits > 0.0);
+}
+
 /// Failure injection: heavy message duplication must not change the result
 /// (sequence-number dedup) — estimates stay consistent and the run converges.
 #[test]

@@ -3,7 +3,7 @@
 //! parity suite. Skipped gracefully when `artifacts/` has not been built.
 
 use qadmm::compress::qsgd::Qsgd;
-use qadmm::problems::lasso::{consensus_input, LassoConfig, LassoProblem};
+use qadmm::problems::lasso::{LassoConfig, LassoProblem};
 use qadmm::problems::Problem;
 use qadmm::runtime::tensor::Tensor;
 use qadmm::runtime::Runtime;
@@ -155,29 +155,10 @@ fn pinned_consts_do_not_collide_across_instances() {
     check(&mut nat_a, &mut hlo_a, &mut rng);
 }
 
-#[test]
-fn lasso_server_step_hlo_matches_native() {
-    let Some(svc) = service() else { return };
-    let mut rng = Pcg64::seed_from_u64(4);
-    let mut native = paper_lasso(&mut rng);
-    let mut rng2 = Pcg64::seed_from_u64(4);
-    let mut hlo =
-        paper_lasso(&mut rng2).with_hlo(Box::new(svc.client()), 200, 16).unwrap();
-
-    let xhat: Vec<Vec<f64>> = (0..16).map(|_| rng.normal_vec(200, 0.0, 1.0)).collect();
-    let uhat: Vec<Vec<f64>> = (0..16).map(|_| rng.normal_vec(200, 0.0, 0.1)).collect();
-    let zn = native.consensus(&xhat, &uhat).unwrap();
-    let zh = hlo.consensus(&xhat, &uhat).unwrap();
-    for (a, b) in zn.iter().zip(&zh) {
-        assert!((a - b).abs() < 1e-10);
-    }
-    // sanity: the consensus is the soft-thresholded mean
-    let v = consensus_input(&xhat, &uhat);
-    let kappa = 0.1 / (500.0 * 16.0);
-    for (z, vj) in zn.iter().zip(&v) {
-        assert!((z - prox::soft_threshold_scalar(*vj, kappa)).abs() < 1e-12);
-    }
-}
+// NOTE: the `lasso_server_step` artifact (and its HLO-vs-native parity
+// test) is retired: no runtime path reaches it — the per-round server prox
+// runs native-f64 via `Problem::consensus_from_sum` on every backend. The
+// remaining kernels below are the HLO parity surface.
 
 #[test]
 fn lasso_lagrangian_artifact_matches_native() {

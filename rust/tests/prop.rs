@@ -6,6 +6,7 @@ use qadmm::admm::engine::EventEngine;
 use qadmm::admm::scheduler::Scheduler;
 use qadmm::admm::sim::{AsyncSim, TrialRngs};
 use qadmm::comm::latency::LatencyModel;
+use qadmm::comm::message::{INIT_BITS_PER_SCALAR, MSG_HEADER_BYTES};
 use qadmm::comm::profile::LinkConfig;
 use qadmm::compress::error_feedback::EstimateTracker;
 use qadmm::compress::packing::{pack_levels, unpack_levels};
@@ -13,6 +14,7 @@ use qadmm::compress::{Compressor, CompressorKind};
 use qadmm::config::{presets, OracleConfig, ProblemKind};
 use qadmm::problems::accumulator::ConsensusAccumulator;
 use qadmm::problems::lasso::{LassoConfig, LassoProblem};
+use qadmm::topology::TopologyKind;
 use qadmm::util::rng::Pcg64;
 
 /// Run `f` over `cases` random seeds; panic with the seed on failure.
@@ -355,6 +357,149 @@ fn prop_downlink_delay_changes_z_trajectory() {
             "Exp downlink delay left all {} rounds bit-identical",
             cfg.iters
         );
+    });
+}
+
+/// Hierarchical fan-in accounting identity: a tree run's total wire bits
+/// decompose exactly into per-link charges — init (leaf + aggregator +
+/// broadcast), one leaf-hop frame per dispatch, one aggregator-hop frame
+/// per forward, one broadcast frame per round per leaf — under random
+/// fanouts, per-tier thresholds and compressor families whose frame size
+/// is a function of m alone (identity / qsgd / sign; the sparsifiers'
+/// frames are value-dependent, so they cannot be predicted from counts).
+#[test]
+fn prop_tree_wire_bits_equal_sum_of_per_link_charges() {
+    let kinds = [
+        CompressorKind::Identity,
+        CompressorKind::Qsgd { bits: 3 },
+        CompressorKind::Qsgd { bits: 8 },
+        CompressorKind::Sign,
+    ];
+    for_all(12, 404, |rng| {
+        let n = 4 + rng.gen_range(12);
+        let m = 4 + rng.gen_range(24);
+        let fanout = 1 + rng.gen_range(n);
+        let p_tier = 1 + rng.gen_range(fanout.min(4));
+        let kind = kinds[rng.gen_range(kinds.len())];
+        let mut cfg = presets::ci_lasso();
+        cfg.name = format!("prop-treebits-n{n}-f{fanout}");
+        cfg.problem = ProblemKind::Lasso { m, h: 3, n, rho: 20.0, theta: 0.1 };
+        cfg.compressor = kind;
+        cfg.tau = 3;
+        cfg.p_min = 1 + rng.gen_range(n);
+        cfg.iters = 15;
+        cfg.mc_trials = 1;
+        cfg.eval_every = cfg.iters;
+        cfg.seed = rng.next_u64();
+        cfg.engine = qadmm::config::EngineKind::Event;
+        cfg.topology = TopologyKind::Tree { fanout };
+        cfg.p_tier = p_tier;
+        cfg.link = LinkConfig {
+            compute: LatencyModel::Exp(0.01),
+            uplink: LatencyModel::Exp(0.01),
+            downlink: LatencyModel::Exp(0.01),
+            clock_drift: 0.1,
+        };
+        let n_aggs = cfg.topology.n_aggregators(n);
+        let lcfg = LassoConfig { m, h: 3, n, rho: 20.0, theta: 0.1 };
+        let mut rngs = TrialRngs::new(cfg.seed);
+        let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+        p.set_reference_optimum(1.0);
+        let mut eng = EventEngine::new(&cfg, &mut p, rngs).unwrap();
+        for _ in 0..cfg.iters {
+            eng.step_round().unwrap();
+        }
+        let stats = eng.stats();
+
+        // frame size is a pure function of m for these families
+        let frame_bits = cfg
+            .compressor
+            .build()
+            .compress(&vec![0.0; m], &mut Pcg64::seed_from_u64(0))
+            .wire_bits();
+        let hdr = MSG_HEADER_BYTES * 8;
+        let acc = eng.accounting();
+        // per-link message counts: 1 init frame per link, then update /
+        // forward frames (a dispatch still computing or on the wire at run
+        // end has not been charged yet, so the counters are the truth)
+        let leaf_msgs: u64 = (0..n).map(|i| acc.link(i).uplink_msgs - 1).sum();
+        let agg_msgs: u64 = (0..n_aggs).map(|g| acc.link(n + g).uplink_msgs - 1).sum();
+        assert_eq!(agg_msgs, stats.agg_forwards, "forward count vs aggregator links");
+        assert!(leaf_msgs <= stats.dispatches, "more charges than dispatches");
+        let init = (n + n_aggs) as u64 * (hdr + 2 * m as u64 * INIT_BITS_PER_SCALAR)
+            + n as u64 * (hdr + m as u64 * INIT_BITS_PER_SCALAR);
+        // init + leaf-hop frames + aggregator-hop frames + broadcasts
+        let expect = init
+            + leaf_msgs * (hdr + 2 * frame_bits)
+            + stats.agg_forwards * (hdr + 2 * frame_bits)
+            + (stats.rounds as u64) * n as u64 * (hdr + frame_bits);
+        assert_eq!(
+            acc.total_bits(),
+            expect,
+            "n={n} fanout={fanout} p_tier={p_tier} kind={} (msgs={} forwards={} rounds={})",
+            kind.label(),
+            leaf_msgs,
+            stats.agg_forwards,
+            stats.rounds
+        );
+        assert!(stats.agg_forwards > 0, "tree run produced no aggregator traffic");
+    });
+}
+
+/// Gossip conservation: at every point of a randomized-relay run, the mass
+/// Σ_g(ŝ_g + pending_g) tracked by the tier equals Σ_leaves(x̂ᵢ + ûᵢ) to
+/// Kahan precision — re-quantization moves error into the pending residual,
+/// it never creates or destroys Σ(x̂+û) mass — and the server's incremental
+/// sum s tracks the committed part Σ_g ŝ_g.
+#[test]
+fn prop_gossip_rounds_preserve_mass() {
+    for_all(10, 505, |rng| {
+        let n = 4 + rng.gen_range(10);
+        let m = 4 + rng.gen_range(24);
+        let k = 1 + rng.gen_range(n.min(5));
+        let mut cfg = presets::ci_lasso();
+        cfg.name = format!("prop-gossipmass-n{n}-k{k}");
+        cfg.problem = ProblemKind::Lasso { m, h: 3, n, rho: 20.0, theta: 0.1 };
+        cfg.compressor = CompressorKind::Qsgd { bits: 3 };
+        cfg.tau = 3;
+        cfg.p_min = 1 + rng.gen_range(n);
+        cfg.iters = 20;
+        cfg.mc_trials = 1;
+        cfg.eval_every = cfg.iters;
+        cfg.seed = rng.next_u64();
+        cfg.engine = qadmm::config::EngineKind::Event;
+        cfg.topology = TopologyKind::Gossip { k };
+        cfg.p_tier = 1 + rng.gen_range(3);
+        cfg.link = LinkConfig {
+            compute: LatencyModel::Exp(0.01),
+            uplink: LatencyModel::Exp(0.02),
+            downlink: LatencyModel::Exp(0.01),
+            clock_drift: 0.1,
+        };
+        let lcfg = LassoConfig { m, h: 3, n, rho: 20.0, theta: 0.1 };
+        let mut rngs = TrialRngs::new(cfg.seed);
+        let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+        p.set_reference_optimum(1.0);
+        let mut eng = EventEngine::new(&cfg, &mut p, rngs).unwrap();
+        for round in 0..cfg.iters {
+            eng.step_round().unwrap();
+            // Σ_leaves(x̂+û): what the tier is supposed to be carrying.
+            // (Compare through a Kahan fold so the reference itself does
+            // not drown the bound in naive-summation error.)
+            let mut bank_mass = ConsensusAccumulator::new(m, 0);
+            for i in 0..n {
+                bank_mass.fold(eng.x_estimate(i), eng.u_estimate(i));
+            }
+            let tracked = eng.fan_in_tracked_mass().expect("gossip run has a tier");
+            let norm = bank_mass.sum().iter().fold(1.0f64, |a, v| a.max(v.abs()));
+            for (j, (t, b)) in tracked.iter().zip(bank_mass.sum()).enumerate() {
+                assert!(
+                    (t - b).abs() <= 1e-10 * norm,
+                    "round {round} coord {j}: tier mass {t} vs bank mass {b}"
+                );
+            }
+        }
+        assert!(eng.stats().agg_forwards > 0, "gossip run produced no relay traffic");
     });
 }
 

@@ -1,0 +1,250 @@
+//! The topology parity contract.
+//!
+//! Two safety rails guard the hierarchical fan-in:
+//!
+//! 1. **Star is untouched** — `topology = star` allocates no tier state
+//!    and runs the exact pre-PR code path, so `tests/engine_parity.rs`
+//!    passes unchanged. (Not re-proved here; this file pins the *new*
+//!    half.)
+//! 2. **The degenerate tree collapses onto the star** — `tree:1` puts one
+//!    aggregator above every leaf. With the identity compressor the
+//!    forward carries the child's deltas bit-for-bit (a single Kahan fold
+//!    from zero is exact, and identity re-quantization is lossless), and
+//!    at zero link delay the forwards fold in ascending id order — the
+//!    star's order. The z-trajectory and staleness must therefore be
+//!    **bit-identical** to the star's, in both the sequential simulator
+//!    and the event engine; only the comm accounting differs (the
+//!    aggregator hop is charged per link, as it must be).
+//!
+//! Beyond the degenerate pin, any tree/gossip configuration must be
+//! bit-exact *between* the two in-process engines at zero link delay
+//! (same folds, same flush order, same routing draws), and a tree under
+//! real per-link delays must still uphold every scheduling invariant.
+
+use qadmm::admm::engine::EventEngine;
+use qadmm::admm::sim::{AsyncSim, TrialRngs};
+use qadmm::comm::latency::LatencyModel;
+use qadmm::comm::profile::LinkConfig;
+use qadmm::compress::CompressorKind;
+use qadmm::config::{presets, EngineKind, ExperimentConfig, OracleConfig, ProblemKind};
+use qadmm::problems::lasso::{LassoConfig, LassoProblem};
+use qadmm::topology::TopologyKind;
+
+fn base_cfg(n: usize, tau: usize, p_min: usize) -> ExperimentConfig {
+    let mut cfg = presets::ci_lasso();
+    cfg.name = format!("topo-parity-n{n}-tau{tau}-p{p_min}");
+    cfg.problem = ProblemKind::Lasso { m: 24, h: 18, n, rho: 30.0, theta: 0.1 };
+    cfg.compressor = CompressorKind::Identity; // zero quantizer randomness
+    cfg.tau = tau;
+    cfg.p_min = p_min;
+    cfg.iters = 40;
+    cfg.mc_trials = 1;
+    cfg.eval_every = 1;
+    cfg.oracle = OracleConfig { p_slow: 0.1, p_fast: 0.8, regroup_each_call: false };
+    cfg.link = LinkConfig::none();
+    cfg
+}
+
+fn lasso_of(cfg: &ExperimentConfig) -> LassoConfig {
+    match cfg.problem {
+        ProblemKind::Lasso { m, h, n, rho, theta } => LassoConfig { m, h, n, rho, theta },
+        _ => unreachable!(),
+    }
+}
+
+/// Per-round (z, staleness, comm bits) series from the simulator.
+fn run_sim(cfg: &ExperimentConfig) -> (Vec<Vec<f64>>, Vec<Vec<usize>>, Vec<u64>) {
+    let lcfg = lasso_of(cfg);
+    let mut rngs = TrialRngs::new(cfg.seed);
+    let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+    let mut sim = AsyncSim::new(cfg, &mut p, rngs).unwrap();
+    let (mut zs, mut ds, mut bits) = (Vec::new(), Vec::new(), Vec::new());
+    for _ in 0..cfg.iters {
+        sim.step().unwrap();
+        zs.push(sim.z().to_vec());
+        ds.push(sim.staleness().to_vec());
+        bits.push(sim.accounting().total_bits());
+    }
+    (zs, ds, bits)
+}
+
+/// The same series from the event engine.
+fn run_event(cfg: &ExperimentConfig) -> (Vec<Vec<f64>>, Vec<Vec<usize>>, Vec<u64>) {
+    let lcfg = lasso_of(cfg);
+    let mut rngs = TrialRngs::new(cfg.seed);
+    let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+    let mut eng = EventEngine::new(cfg, &mut p, rngs).unwrap();
+    let (mut zs, mut ds, mut bits) = (Vec::new(), Vec::new(), Vec::new());
+    for _ in 0..cfg.iters {
+        eng.step_round().unwrap();
+        zs.push(eng.z().to_vec());
+        ds.push(eng.staleness().to_vec());
+        bits.push(eng.accounting().total_bits());
+    }
+    (zs, ds, bits)
+}
+
+fn assert_z_bitwise(a: &[Vec<f64>], b: &[Vec<f64>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: round count");
+    for (r, (za, zb)) in a.iter().zip(b).enumerate() {
+        for (x, y) in za.iter().zip(zb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: z diverged at round {r}");
+        }
+    }
+}
+
+/// The headline pin: tree-of-depth-1 with one aggregator per node must
+/// reproduce the star's z-trajectory and staleness bit-for-bit, across
+/// *both* in-process engines — while its accounting visibly charges the
+/// extra hop.
+#[test]
+fn degenerate_tree_matches_star_bitwise_in_both_engines() {
+    for (tau, p_min) in [(3usize, 1usize), (1, 4), (4, 2)] {
+        let star = base_cfg(4, tau, p_min);
+        let mut tree = base_cfg(4, tau, p_min);
+        tree.topology = TopologyKind::Tree { fanout: 1 };
+        tree.p_tier = 1;
+
+        let (z_star_sim, d_star_sim, bits_star_sim) = run_sim(&star);
+        let (z_star_eng, d_star_eng, bits_star_eng) = run_event(&star);
+        let (z_tree_sim, d_tree_sim, bits_tree_sim) = run_sim(&tree);
+        let (z_tree_eng, d_tree_eng, bits_tree_eng) = run_event(&tree);
+
+        // all four z-trajectories coincide exactly
+        assert_z_bitwise(&z_star_sim, &z_star_eng, "star sim vs event");
+        assert_z_bitwise(&z_star_sim, &z_tree_sim, "star vs degenerate tree (sim)");
+        assert_z_bitwise(&z_star_sim, &z_tree_eng, "star vs degenerate tree (event)");
+        assert_eq!(d_star_sim, d_star_eng, "staleness star sim/event");
+        assert_eq!(d_star_sim, d_tree_sim, "staleness star vs tree (sim)");
+        assert_eq!(d_star_sim, d_tree_eng, "staleness star vs tree (event)");
+
+        // bits agree within each topology (sim vs event) ...
+        assert_eq!(bits_star_sim, bits_star_eng, "star bits sim/event");
+        assert_eq!(bits_tree_sim, bits_tree_eng, "tree bits sim/event");
+        // ... and the tree charges strictly more: the aggregator hop is a
+        // real link, not free relabeling
+        for (s, t) in bits_star_sim.iter().zip(&bits_tree_sim) {
+            assert!(t > s, "aggregator hop must be charged (star {s}, tree {t})");
+        }
+    }
+}
+
+/// General (non-degenerate) trees and gossip are *different* algorithms
+/// from the star — but each must still be bit-exact between the two
+/// in-process engines at zero link delay: same folds, same ascending
+/// flush order, same topology RNG draws.
+#[test]
+fn tree_and_gossip_are_bit_exact_across_engines_at_zero_delay() {
+    for topology in [
+        TopologyKind::Tree { fanout: 3 },
+        TopologyKind::Tree { fanout: 8 }, // single aggregator over all 8
+        TopologyKind::Gossip { k: 3 },
+    ] {
+        for p_tier in [1usize, 2] {
+            let mut cfg = base_cfg(8, 3, 2);
+            cfg.name = format!("topo-parity-{}-pt{p_tier}", topology.label());
+            cfg.topology = topology;
+            cfg.p_tier = p_tier;
+            // identity compressor: the engines draw their quantizer noise
+            // from different stream layouts, so the bitwise claim (like
+            // engine_parity's) is made with zero quantizer randomness
+            cfg.compressor = CompressorKind::Identity;
+            let (z_sim, d_sim, bits_sim) = run_sim(&cfg);
+            let (z_eng, d_eng, bits_eng) = run_event(&cfg);
+            assert_z_bitwise(&z_sim, &z_eng, &cfg.name);
+            assert_eq!(d_sim, d_eng, "{}: staleness", cfg.name);
+            assert_eq!(bits_sim, bits_eng, "{}: bits", cfg.name);
+        }
+    }
+}
+
+/// A non-degenerate tree changes the trajectory (the aggregator folds a
+/// whole group before the server sees it — different summation grouping,
+/// different bits): the parity pin above must not be vacuous.
+#[test]
+fn non_degenerate_tree_differs_from_star() {
+    let star = base_cfg(8, 3, 2);
+    let mut tree = base_cfg(8, 3, 2);
+    tree.topology = TopologyKind::Tree { fanout: 4 };
+    let (z_star, _, _) = run_sim(&star);
+    let (z_tree, _, _) = run_sim(&tree);
+    assert!(
+        z_star.iter().zip(&z_tree).any(|(a, b)| a != b),
+        "fanout-4 tree left the z-trajectory identical to the star"
+    );
+}
+
+/// Under real per-link delays (compute, uplink, downlink, drift) a tree
+/// run must uphold every scheduling invariant: ≥ P arrivals per fire,
+/// staleness ≤ τ−1 end-to-end (each hop consumes the same τ budget), and
+/// aggregator forwards actually flowing.
+#[test]
+fn tree_under_latency_upholds_scheduling_invariants() {
+    let n = 24;
+    let mut cfg = base_cfg(n, 4, n / 4);
+    cfg.name = "topo-latency-tree".into();
+    cfg.compressor = CompressorKind::Qsgd { bits: 3 };
+    cfg.topology = TopologyKind::Tree { fanout: 6 };
+    cfg.p_tier = 3;
+    cfg.iters = 30;
+    cfg.engine = EngineKind::Event;
+    cfg.link = LinkConfig {
+        compute: LatencyModel::Exp(0.01),
+        uplink: LatencyModel::Exp(0.01),
+        downlink: LatencyModel::Exp(0.02),
+        clock_drift: 0.2,
+    };
+    let lcfg = lasso_of(&cfg);
+    let mut rngs = TrialRngs::new(cfg.seed);
+    let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+    p.set_reference_optimum(1.0);
+    let mut eng = EventEngine::new(&cfg, &mut p, rngs).unwrap();
+    for _ in 0..cfg.iters {
+        eng.step_round().unwrap();
+        let max_d = eng.staleness().iter().copied().max().unwrap();
+        assert!(max_d + 1 <= cfg.tau, "staleness bound broken under tree fan-in");
+    }
+    let stats = eng.stats();
+    assert_eq!(stats.rounds, cfg.iters);
+    assert!(stats.min_arrivals.expect("rounds fired") >= cfg.p_min);
+    assert!(stats.agg_forwards > 0, "no aggregator traffic in a tree run");
+    assert!(stats.virtual_time > 0.0);
+    // every forward carries at least one delivered child update
+    assert!(stats.agg_forwards <= stats.dispatches);
+    assert_eq!(eng.tier().unwrap().n_aggregators(), 4);
+}
+
+/// Determinism at scale with the tier active: two identical gossip runs
+/// under latency produce identical results (routing comes from the
+/// dedicated per-trial topology stream, not from timing).
+#[test]
+fn gossip_run_is_deterministic() {
+    let mut cfg = base_cfg(16, 3, 4);
+    cfg.name = "topo-gossip-determinism".into();
+    cfg.compressor = CompressorKind::Qsgd { bits: 3 };
+    cfg.topology = TopologyKind::Gossip { k: 4 };
+    cfg.p_tier = 2;
+    cfg.iters = 20;
+    cfg.link = LinkConfig {
+        compute: LatencyModel::Exp(0.01),
+        uplink: LatencyModel::Exp(0.01),
+        downlink: LatencyModel::None,
+        clock_drift: 0.0,
+    };
+    let lcfg = lasso_of(&cfg);
+    let run = || {
+        let mut rngs = TrialRngs::new(cfg.seed);
+        let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+        p.set_reference_optimum(1.0);
+        let mut eng = EventEngine::new(&cfg, &mut p, rngs).unwrap();
+        for _ in 0..cfg.iters {
+            eng.step_round().unwrap();
+        }
+        (eng.z().to_vec(), eng.accounting().total_bits(), eng.stats().agg_forwards)
+    };
+    let (z1, b1, f1) = run();
+    let (z2, b2, f2) = run();
+    assert_eq!(z1, z2);
+    assert_eq!(b1, b2);
+    assert_eq!(f1, f2);
+}

@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_engine.json snapshots and emit a markdown delta table.
+
+Used by the non-blocking `bench-trajectory` CI job: the committed
+BENCH_engine.json (if any) is the baseline, the fresh bench run is the
+current snapshot, and the table lands in the job summary so the perf
+trajectory is visible per PR without gating merges on noisy runners.
+
+Stdlib only; always exits 0 (the job is informational).
+
+Usage:
+    bench_compare.py --current BENCH_engine.json \
+        [--baseline path/to/previous.json] [--summary $GITHUB_STEP_SUMMARY]
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"(bench_compare: could not read {path}: {e})", file=sys.stderr)
+        return None
+
+
+def fmt_delta(old, new):
+    """Relative change, signed; n/a when the baseline cell is missing."""
+    if old is None or not isinstance(old, (int, float)) or old == 0:
+        return "n/a"
+    pct = 100.0 * (new - old) / old
+    arrow = "🔺" if pct > 10.0 else ("✅" if pct < -10.0 else "·")
+    return f"{pct:+.1f}% {arrow}"
+
+
+def index_section(records, key_fields):
+    out = {}
+    for rec in records or []:
+        key = tuple(rec.get(k) for k in key_fields)
+        out[key] = rec
+    return out
+
+
+def section_table(name, key_fields, metric, baseline, current):
+    """Markdown table for one section, keyed on key_fields, timing `metric`."""
+    cur = index_section(current.get(name), key_fields)
+    base = index_section((baseline or {}).get(name), key_fields)
+    if not cur:
+        return f"\n_(no `{name}` records in the current snapshot)_\n"
+    lines = [
+        f"\n### {name}\n",
+        "| " + " | ".join(key_fields) + f" | {metric} (base) | {metric} (now) | delta |",
+        "|" + "---|" * (len(key_fields) + 3),
+    ]
+    for key, rec in cur.items():
+        old = base.get(key, {}).get(metric)
+        new = rec.get(metric)
+        old_s = f"{old:.3f}" if isinstance(old, (int, float)) else "—"
+        new_s = f"{new:.3f}" if isinstance(new, (int, float)) else "—"
+        cells = [str(k) for k in key] + [old_s, new_s, fmt_delta(old, new)]
+        lines.append("| " + " | ".join(cells) + " |")
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--baseline", default=None)
+    ap.add_argument("--summary", default=None,
+                    help="file to append the markdown to (e.g. $GITHUB_STEP_SUMMARY)")
+    args = ap.parse_args()
+
+    current = load(args.current)
+    if current is None:
+        print("bench_compare: no current snapshot; nothing to compare")
+        return
+    baseline = load(args.baseline) if args.baseline else None
+
+    out = ["## engine_scale bench trajectory"]
+    if baseline is None:
+        out.append(
+            "\n_No committed baseline found — this snapshot becomes the "
+            "first point of the trajectory._\n"
+        )
+    mode = "fast (QADMM_BENCH_FAST)" if current.get("fast") else "full"
+    out.append(f"\nmode: {mode}\n")
+    out.append(section_table(
+        "sweeps", ["label", "n", "m", "tau"], "wall_s", baseline, current))
+    out.append(section_table(
+        "server_round", ["n", "m", "p"], "inc_round_us", baseline, current))
+    text = "\n".join(out)
+
+    print(text)
+    if args.summary:
+        try:
+            with open(args.summary, "a") as f:
+                f.write(text + "\n")
+        except OSError as e:
+            print(f"(bench_compare: could not append to summary: {e})",
+                  file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()
