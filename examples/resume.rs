@@ -1,0 +1,152 @@
+//! Checkpoint → kill → resume quickstart on the n = 256 LASSO preset.
+//!
+//! ```text
+//! cargo run --release --example resume
+//! ```
+//!
+//! Runs the event engine under straggler latency for 60 consensus rounds
+//! three ways:
+//!
+//! 1. straight through (the reference trajectory);
+//! 2. to round 30, snapshotting to `out/resume-quickstart.qsnap`, then
+//!    **dropping the engine and the problem** (the simulated crash);
+//! 3. reloading the snapshot, re-deriving the problem from the seed, and
+//!    resuming rounds 31–60.
+//!
+//! The resumed trajectory must be bit-identical to the reference — z,
+//! per-link wire bits, RNG streams — which is exactly what
+//! `qadmm run --checkpoint-every K` / `--resume-from FILE` give long runs
+//! for free. See README § "Checkpoint / resume".
+
+use std::path::PathBuf;
+
+use qadmm::admm::engine::EventEngine;
+use qadmm::admm::runner::trial_seed;
+use qadmm::admm::sim::TrialRngs;
+use qadmm::comm::latency::LatencyModel;
+use qadmm::comm::profile::LinkConfig;
+use qadmm::compress::CompressorKind;
+use qadmm::config::{presets, EngineKind, ExperimentConfig, ProblemKind};
+use qadmm::problems::lasso::{LassoConfig, LassoProblem};
+use qadmm::snapshot;
+use qadmm::util::timer::Stopwatch;
+
+/// The n = 256 LASSO configuration the topology/downlink sweeps use,
+/// trimmed to quickstart length.
+fn preset_n256() -> ExperimentConfig {
+    let mut cfg = presets::ci_lasso();
+    cfg.name = "resume-quickstart".into();
+    cfg.problem = ProblemKind::Lasso { m: 128, h: 16, n: 256, rho: 50.0, theta: 0.1 };
+    cfg.compressor = CompressorKind::Qsgd { bits: 3 };
+    cfg.engine = EngineKind::Event;
+    cfg.tau = 4;
+    cfg.p_min = 64;
+    cfg.iters = 60;
+    cfg.mc_trials = 1;
+    cfg.eval_every = 10;
+    // heterogeneous stragglers: the checkpoint lands with updates still on
+    // the virtual wire, the case worth demonstrating
+    cfg.link = LinkConfig {
+        compute: LatencyModel::Mixture { fast: 0.002, slow: 0.25, p_slow: 0.15 },
+        uplink: LatencyModel::Exp(0.01),
+        downlink: LatencyModel::Exp(0.01),
+        clock_drift: 0.05,
+    };
+    cfg
+}
+
+fn make_problem(cfg: &ExperimentConfig) -> anyhow::Result<(LassoProblem, TrialRngs)> {
+    let lcfg = match cfg.problem {
+        ProblemKind::Lasso { m, h, n, rho, theta } => LassoConfig { m, h, n, rho, theta },
+        _ => unreachable!(),
+    };
+    let mut rngs = TrialRngs::new(trial_seed(cfg.seed, 0));
+    let mut p = LassoProblem::generate(lcfg, &mut rngs.data)?;
+    p.set_reference_optimum(1.0); // quickstart: skip the F* reference solve
+    Ok((p, rngs))
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = preset_n256();
+    let ck_round = cfg.iters / 2;
+    let ck_path = PathBuf::from("out/resume-quickstart.qsnap");
+    println!(
+        "resume quickstart: n=256 LASSO, {} rounds, checkpoint at round {ck_round}",
+        cfg.iters
+    );
+
+    // ---- 1. the reference: straight through ----
+    let clock = Stopwatch::new();
+    let (mut p_ref, rngs) = make_problem(&cfg)?;
+    let mut reference = EventEngine::new(&cfg, &mut p_ref, rngs)?;
+    for _ in 0..cfg.iters {
+        reference.step_round()?;
+    }
+    println!(
+        "  straight run:  {} rounds in {:.2}s (virtual {:.1}s)",
+        cfg.iters,
+        clock.elapsed_secs(),
+        reference.stats().virtual_time
+    );
+
+    // ---- 2. run to the checkpoint, snapshot, and "crash" ----
+    let (mut p_a, rngs) = make_problem(&cfg)?;
+    let mut engine = EventEngine::new(&cfg, &mut p_a, rngs)?;
+    for _ in 0..ck_round {
+        engine.step_round()?;
+    }
+    snapshot::write_file(&ck_path, &engine.snapshot_meta(), &engine.snapshot_body())?;
+    let snap_bytes = std::fs::metadata(&ck_path)?.len();
+    drop(engine);
+    drop(p_a); // everything the first process held is gone
+    println!(
+        "  checkpointed:  round {ck_round} -> {} ({:.1} KiB)",
+        ck_path.display(),
+        snap_bytes as f64 / 1024.0
+    );
+
+    // ---- 3. a "new process": read the file, re-derive, resume ----
+    let (meta, body) = snapshot::read_file(&ck_path)?;
+    anyhow::ensure!(
+        snapshot::config_resume_digest(&meta.config) == cfg.resume_digest(),
+        "snapshot belongs to a different experiment"
+    );
+    println!(
+        "  resuming:      engine={} round={} n={} m={} (problem re-derived from seed {})",
+        meta.engine, meta.round, meta.n, meta.m, meta.seed
+    );
+    let (mut p_b, _) = make_problem(&cfg)?;
+    let mut resumed = EventEngine::resume(&cfg, &mut p_b, &body)?;
+    while resumed.stats().rounds < cfg.iters {
+        resumed.step_round()?;
+    }
+
+    // ---- the contract: bit-identical continuation ----
+    anyhow::ensure!(
+        reference.z() == resumed.z(),
+        "resumed z differs from the straight run"
+    );
+    anyhow::ensure!(
+        reference.staleness() == resumed.staleness(),
+        "resumed staleness differs"
+    );
+    anyhow::ensure!(
+        reference.rng_digest() == resumed.rng_digest(),
+        "resumed RNG streams differ"
+    );
+    anyhow::ensure!(
+        reference.accounting().total_bits() == resumed.accounting().total_bits(),
+        "resumed wire-bit totals differ"
+    );
+    println!(
+        "  OK: resumed run is bit-identical (z, staleness, {} wire bits, RNG states)",
+        resumed.accounting().total_bits()
+    );
+    println!(
+        "same flow from the CLI:\n  qadmm run --preset ci-lasso --engine event --trials 1 \
+         --checkpoint-every {ck_round} --checkpoint {}\n  qadmm run ... --resume-from {}",
+        ck_path.display(),
+        ck_path.display()
+    );
+    Ok(())
+}

@@ -78,6 +78,9 @@ use crate::config::ExperimentConfig;
 use crate::metrics::{IterRecord, RunRecorder};
 use crate::problems::accumulator::ConsensusAccumulator;
 use crate::problems::{Arena, LocalUpdateItem, Problem};
+use crate::snapshot::codec::{Pack, Reader, Writer};
+use crate::snapshot::timeline::RecordedTimeline;
+use crate::snapshot::SnapshotMeta;
 use crate::topology::{AggForward, AggregatorTier};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
@@ -229,6 +232,9 @@ pub struct EventEngine<'a> {
     clock: Stopwatch,
     vtime: f64,
     stats: EngineStats,
+    /// When recording (`--record-timeline`): the realized event stream and
+    /// per-round arrival/dispatch sets, replayable by the threaded runtime.
+    timeline: Option<RecordedTimeline>,
 }
 
 impl<'a> EventEngine<'a> {
@@ -355,6 +361,7 @@ impl<'a> EventEngine<'a> {
             clock: Stopwatch::new(),
             vtime: 0.0,
             stats: EngineStats::default(),
+            timeline: None,
             cfg,
             problem,
         };
@@ -413,6 +420,9 @@ impl<'a> EventEngine<'a> {
             // sequential simulator's rounds.
             while self.queue.peek_time() == Some(t) {
                 let ev = self.queue.pop().unwrap();
+                if let Some(tl) = &mut self.timeline {
+                    tl.push_event(ev.time, ev.seq, ev.kind.label(), ev.kind.index());
+                }
                 self.handle(ev.kind)?;
             }
         }
@@ -571,6 +581,10 @@ impl<'a> EventEngine<'a> {
         let batch = self.arrived.len();
         debug_assert!(batch >= self.cfg.p_min);
         let train_loss: f64 = self.arrived.iter().map(|&i| self.arrived_loss[i]).sum();
+        // Timeline recording captures the arrival set before it is cleared
+        // (ascending — BTreeSet order — exactly what the replay bridge pins).
+        let tl_arrivals: Option<Vec<usize>> =
+            self.timeline.as_ref().map(|_| self.arrived.iter().copied().collect());
 
         if self.acc.refresh_due(self.stats.rounds + 1) {
             // tree/gossip rebuild from the ŝ_g partials (O(A·m)); the star
@@ -632,10 +646,14 @@ impl<'a> EventEngine<'a> {
         // marked busy *now* (it cannot be re-selected while the broadcast
         // is in transit) but starts computing only when its DownlinkArrive
         // fires and its mirror has caught up.
+        let mut tl_dispatches: Vec<usize> = Vec::new();
         for i in 0..self.n {
             let dispatch = next[i] && !self.busy[i];
             if dispatch {
                 self.busy[i] = true;
+                if self.timeline.is_some() {
+                    tl_dispatches.push(i);
+                }
             }
             self.downlink_inbox[i]
                 .push_back(DownlinkPacket { dz: Arc::clone(&dz_payload), dispatch });
@@ -643,6 +661,9 @@ impl<'a> EventEngine<'a> {
             let at = (self.vtime + delay).max(self.downlink_last[i]);
             self.downlink_last[i] = at;
             self.queue.push(at, EventKind::DownlinkArrive { node: i });
+        }
+        if let Some(tl) = &mut self.timeline {
+            tl.push_round(self.vtime, tl_arrivals.unwrap_or_default(), tl_dispatches);
         }
         Ok(())
     }
@@ -811,5 +832,371 @@ impl<'a> EventEngine<'a> {
     /// Node i's û estimate bank.
     pub fn u_estimate(&self, i: usize) -> &[f64] {
         self.uhat[i].estimate()
+    }
+
+    // ---- snapshot / resume / timeline recording ----
+
+    /// Start recording the realized timeline (event stream + per-round
+    /// arrival/dispatch sets). Rounds fired before this call are not in
+    /// the recording.
+    pub fn record_timeline(&mut self) {
+        self.timeline = Some(RecordedTimeline::new("event", self.n, self.cfg.seed));
+    }
+
+    /// Take the recording accumulated so far (ends recording).
+    pub fn take_timeline(&mut self) -> Option<RecordedTimeline> {
+        self.timeline.take()
+    }
+
+    /// Human-readable header for a snapshot taken now.
+    pub fn snapshot_meta(&self) -> SnapshotMeta {
+        SnapshotMeta {
+            engine: "event".into(),
+            round: self.stats.rounds,
+            n: self.n,
+            m: self.m,
+            seed: self.cfg.seed,
+            config: self.cfg.to_json(),
+        }
+    }
+
+    /// Serialize the complete mutable run state — arenas, estimate banks,
+    /// accumulator (with Kahan compensations), ẑ mirrors, FIFO inboxes and
+    /// monotone clamps, aggregator tier, in-flight slots, arrival set and
+    /// overdue counter, scheduler, oracle, accounting, the event queue
+    /// with its seq counter, every RNG stream, the metric series, virtual
+    /// time and stats — into one binary body for
+    /// [`crate::snapshot::encode`]. Everything else (compressor, link
+    /// profiles, scratch buffers) is a pure function of the config and is
+    /// rebuilt by [`Self::resume`]. Call between rounds (after
+    /// [`Self::step_round`] returns), which is the only boundary the
+    /// bit-identity contract is defined at.
+    pub fn snapshot_body(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        self.x.pack(&mut w);
+        self.u.pack(&mut w);
+        self.z.pack(&mut w);
+        self.xhat.pack(&mut w);
+        self.uhat.pack(&mut w);
+        self.zhat.pack(&mut w);
+        self.acc.pack(&mut w);
+        self.z_mirror.pack(&mut w);
+        self.downlink_inbox.pack(&mut w);
+        self.downlink_last.pack(&mut w);
+        self.pending_dispatch.pack(&mut w);
+        self.tier.pack(&mut w);
+        self.touched_aggs.pack(&mut w);
+        self.agg_inbox.pack(&mut w);
+        self.agg_last.pack(&mut w);
+        self.rng_topology.pack(&mut w);
+        self.arrived.pack(&mut w);
+        w.put_usize(self.overdue_pending);
+        self.busy.pack(&mut w);
+        self.in_flight.pack(&mut w);
+        self.arrived_loss.pack(&mut w);
+        self.scheduler.pack(&mut w);
+        self.oracle.pack(&mut w);
+        self.accounting.pack(&mut w);
+        self.queue.pack(&mut w);
+        self.rng_latency.pack(&mut w);
+        self.rng_oracle.pack(&mut w);
+        self.node_quant.pack(&mut w);
+        self.server_quant.pack(&mut w);
+        self.agg_quant.pack(&mut w);
+        self.node_batch.pack(&mut w);
+        self.recorder.pack(&mut w);
+        w.put_f64(self.vtime);
+        self.stats.pack(&mut w);
+        w.into_inner()
+    }
+
+    /// Rebuild an engine from a [`Self::snapshot_body`], continuing the
+    /// interrupted timeline **bit-identically**. The problem must be
+    /// re-derived from the same seed (the snapshot stores no problem
+    /// data); config-derived state (compressor, link profiles) is rebuilt
+    /// from `cfg`, which the caller must have validated against the
+    /// snapshot header's config digest.
+    pub fn resume(
+        cfg: &'a ExperimentConfig,
+        problem: &'a mut dyn Problem,
+        body: &[u8],
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let m = problem.dim();
+        let n = problem.n_nodes();
+        let n_aggs = cfg.topology.n_aggregators(n);
+        let mut r = Reader::new(body);
+
+        let x = Arena::unpack(&mut r)?;
+        let u = Arena::unpack(&mut r)?;
+        let z = Vec::<f64>::unpack(&mut r)?;
+        let xhat = Vec::<EstimateTracker>::unpack(&mut r)?;
+        let uhat = Vec::<EstimateTracker>::unpack(&mut r)?;
+        let zhat = EstimateTracker::unpack(&mut r)?;
+        let acc = ConsensusAccumulator::unpack(&mut r)?;
+        let z_mirror = Arena::unpack(&mut r)?;
+        let downlink_inbox = Vec::<VecDeque<DownlinkPacket>>::unpack(&mut r)?;
+        let downlink_last = Vec::<f64>::unpack(&mut r)?;
+        let pending_dispatch = Vec::<usize>::unpack(&mut r)?;
+        let tier = Option::<AggregatorTier>::unpack(&mut r)?;
+        let touched_aggs = Vec::<usize>::unpack(&mut r)?;
+        let agg_inbox = Vec::<VecDeque<AggForward>>::unpack(&mut r)?;
+        let agg_last = Vec::<f64>::unpack(&mut r)?;
+        let rng_topology = Pcg64::unpack(&mut r)?;
+        let arrived = BTreeSet::<usize>::unpack(&mut r)?;
+        let overdue_pending = r.get_usize()?;
+        let busy = Vec::<bool>::unpack(&mut r)?;
+        let in_flight = Vec::<InFlightSlot>::unpack(&mut r)?;
+        let arrived_loss = Vec::<f64>::unpack(&mut r)?;
+        let scheduler = Scheduler::unpack(&mut r)?;
+        let oracle = AsyncOracle::unpack(&mut r)?;
+        let accounting = CommAccounting::unpack(&mut r)?;
+        let queue = EventQueue::unpack(&mut r)?;
+        let rng_latency = Pcg64::unpack(&mut r)?;
+        let rng_oracle = Pcg64::unpack(&mut r)?;
+        let node_quant = Vec::<Pcg64>::unpack(&mut r)?;
+        let server_quant = Pcg64::unpack(&mut r)?;
+        let agg_quant = Vec::<Pcg64>::unpack(&mut r)?;
+        let node_batch = Vec::<Pcg64>::unpack(&mut r)?;
+        let recorder = RunRecorder::unpack(&mut r)?;
+        let vtime = r.get_f64()?;
+        let stats = EngineStats::unpack(&mut r)?;
+        r.finish()?;
+
+        // ---- cross-validate the state against the problem + config ----
+        let dims_ok = |a: &Arena, what: &str| -> anyhow::Result<()> {
+            anyhow::ensure!(
+                a.n_rows() == n && a.dim() == m,
+                "snapshot {what} is {}x{}, problem is {n}x{m}",
+                a.n_rows(),
+                a.dim()
+            );
+            Ok(())
+        };
+        dims_ok(&x, "x")?;
+        dims_ok(&u, "u")?;
+        dims_ok(&z_mirror, "z mirror")?;
+        anyhow::ensure!(z.len() == m, "snapshot z has wrong dimension");
+        anyhow::ensure!(
+            xhat.len() == n && uhat.len() == n,
+            "snapshot estimate banks sized for a different fleet"
+        );
+        for t in xhat.iter().chain(&uhat).chain(std::iter::once(&zhat)) {
+            anyhow::ensure!(t.estimate().len() == m, "snapshot estimate bank wrong dim");
+            anyhow::ensure!(
+                t.feedback_enabled() == cfg.error_feedback,
+                "snapshot was taken with error feedback {}",
+                if cfg.error_feedback { "off" } else { "on" }
+            );
+        }
+        anyhow::ensure!(acc.dim() == m, "snapshot accumulator wrong dim");
+        anyhow::ensure!(
+            downlink_inbox.len() == n
+                && downlink_last.len() == n
+                && busy.len() == n
+                && in_flight.len() == n
+                && arrived_loss.len() == n
+                && node_quant.len() == n
+                && node_batch.len() == n,
+            "snapshot per-node tables sized for a different fleet"
+        );
+        for inbox in &downlink_inbox {
+            for pkt in inbox {
+                anyhow::ensure!(pkt.dz.len() == m, "snapshot downlink payload wrong dim");
+            }
+        }
+        for slot in &in_flight {
+            if slot.occupied {
+                anyhow::ensure!(
+                    slot.cx.dequantized.len() == m && slot.cu.dequantized.len() == m,
+                    "snapshot in-flight payload wrong dim"
+                );
+            }
+        }
+        anyhow::ensure!(
+            tier.is_some() == (n_aggs > 0),
+            "snapshot topology ({}) disagrees with config ({})",
+            if tier.is_some() { "tiered" } else { "star" },
+            cfg.topology.label()
+        );
+        if let Some(t) = &tier {
+            anyhow::ensure!(
+                t.kind() == cfg.topology
+                    && t.p_tier() == cfg.p_tier.max(1)
+                    && t.error_feedback() == cfg.error_feedback,
+                "snapshot tier parameters disagree with config"
+            );
+            anyhow::ensure!(t.n_aggregators() == n_aggs, "snapshot tier aggregator count");
+        }
+        anyhow::ensure!(
+            agg_inbox.len() == n_aggs && agg_last.len() == n_aggs && agg_quant.len() == n_aggs,
+            "snapshot aggregator tables sized for a different tier"
+        );
+        // forwards still on the aggregator→server wire must be usable as-is:
+        // their payloads fold into m-dim banks and their children index
+        // per-node tables, so bad values must be Err here, not a panic at
+        // the next AggregateArrive
+        for inbox in &agg_inbox {
+            for fw in inbox {
+                anyhow::ensure!(
+                    fw.cx.dequantized.len() == m && fw.cu.dequantized.len() == m,
+                    "snapshot aggregator forward payload wrong dim"
+                );
+                anyhow::ensure!(
+                    fw.children.iter().all(|(leaf, _)| *leaf < n),
+                    "snapshot aggregator forward credits a leaf out of range"
+                );
+            }
+        }
+        anyhow::ensure!(
+            scheduler.staleness().len() == n
+                && scheduler.tau() == cfg.tau
+                && scheduler.p_min() == cfg.p_min,
+            "snapshot scheduler disagrees with config"
+        );
+        anyhow::ensure!(oracle.fast_mask().len() == n, "snapshot oracle wrong fleet size");
+        anyhow::ensure!(
+            accounting.n_nodes() == n + n_aggs,
+            "snapshot accounting has {} links, expected {}",
+            accounting.n_nodes(),
+            n + n_aggs
+        );
+        anyhow::ensure!(
+            arrived.iter().all(|&i| i < n)
+                && pending_dispatch.iter().all(|&i| i < n)
+                && touched_aggs.iter().all(|&g| g < n_aggs),
+            "snapshot pending sets out of range"
+        );
+        for ev in queue.events() {
+            let ok = match ev.kind {
+                EventKind::ComputeDone { node }
+                | EventKind::MsgArrive { node }
+                | EventKind::DownlinkArrive { node } => node < n,
+                EventKind::AggregateArrive { agg } => tier.is_some() && agg < n_aggs,
+            };
+            anyhow::ensure!(ok, "snapshot event {:?} out of range", ev.kind);
+        }
+        anyhow::ensure!(
+            vtime.is_finite() && vtime >= 0.0,
+            "snapshot virtual time {vtime} invalid"
+        );
+
+        Ok(Self {
+            compressor: cfg.compressor.build(),
+            m,
+            n,
+            x,
+            u,
+            z,
+            xhat,
+            uhat,
+            zhat,
+            acc,
+            z_mirror,
+            downlink_inbox,
+            downlink_last,
+            pending_dispatch,
+            tier,
+            touched_aggs,
+            agg_inbox,
+            agg_last,
+            agg_links: per_node_profiles(cfg.link, n_aggs),
+            rng_topology,
+            arrived,
+            overdue_pending,
+            busy,
+            in_flight,
+            arrived_loss,
+            delta_buf: Vec::with_capacity(m),
+            arrived_mask: vec![false; n],
+            scheduler,
+            oracle,
+            accounting,
+            queue,
+            server_quant,
+            agg_quant,
+            links: per_node_profiles(cfg.link, n),
+            rng_latency,
+            rng_oracle,
+            node_quant,
+            node_batch,
+            recorder,
+            clock: Stopwatch::new(),
+            vtime,
+            stats,
+            timeline: None,
+            cfg,
+            problem,
+        })
+    }
+
+    /// FNV digest over the raw state of every RNG stream the engine owns —
+    /// the "final RNG states" leg of the resume-parity contract.
+    pub fn rng_digest(&self) -> u64 {
+        let mut w = Writer::new();
+        self.rng_latency.pack(&mut w);
+        self.rng_oracle.pack(&mut w);
+        self.rng_topology.pack(&mut w);
+        self.server_quant.pack(&mut w);
+        self.node_quant.pack(&mut w);
+        self.agg_quant.pack(&mut w);
+        self.node_batch.pack(&mut w);
+        crate::snapshot::codec::fnv1a64(w.as_slice())
+    }
+}
+
+impl Pack for EngineStats {
+    fn pack(&self, w: &mut Writer) {
+        w.put_usize(self.rounds);
+        w.put_f64(self.virtual_time);
+        w.put_u64(self.events);
+        w.put_u64(self.dispatches);
+        w.put_u64(self.agg_forwards);
+        self.min_arrivals.pack(w);
+        w.put_usize(self.max_staleness);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        Ok(Self {
+            rounds: r.get_usize()?,
+            virtual_time: r.get_f64()?,
+            events: r.get_u64()?,
+            dispatches: r.get_u64()?,
+            agg_forwards: r.get_u64()?,
+            min_arrivals: Option::<usize>::unpack(r)?,
+            max_staleness: r.get_usize()?,
+        })
+    }
+}
+
+impl Pack for InFlightSlot {
+    fn pack(&self, w: &mut Writer) {
+        self.cx.pack(w);
+        self.cu.pack(w);
+        w.put_u64(self.bits);
+        w.put_f64(self.loss);
+        w.put_bool(self.occupied);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        Ok(Self {
+            cx: Compressed::unpack(r)?,
+            cu: Compressed::unpack(r)?,
+            bits: r.get_u64()?,
+            loss: r.get_f64()?,
+            occupied: r.get_bool()?,
+        })
+    }
+}
+
+/// The shared-payload `Arc` is an in-memory aliasing optimization, not
+/// state: snapshots store each queued broadcast's Δz by value, and restore
+/// re-wraps them in fresh `Arc`s (value-identical, so the bit-identity
+/// contract is unaffected).
+impl Pack for DownlinkPacket {
+    fn pack(&self, w: &mut Writer) {
+        (*self.dz).pack(w);
+        w.put_bool(self.dispatch);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        Ok(Self { dz: Arc::new(Vec::<f64>::unpack(r)?), dispatch: r.get_bool()? })
     }
 }

@@ -10,6 +10,8 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::snapshot::codec::{Pack, Reader, Writer};
+
 /// What happened at a virtual instant.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EventKind {
@@ -26,6 +28,28 @@ pub enum EventKind {
     /// with monotone arrival clamps, exactly like the downlink inboxes, and
     /// carries the arrival credit of every child folded into it.
     AggregateArrive { agg: usize },
+}
+
+impl EventKind {
+    /// Stable label for timeline recordings ([`crate::snapshot::timeline`]).
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::ComputeDone { .. } => "compute-done",
+            EventKind::MsgArrive { .. } => "msg-arrive",
+            EventKind::DownlinkArrive { .. } => "downlink-arrive",
+            EventKind::AggregateArrive { .. } => "aggregate-arrive",
+        }
+    }
+
+    /// The node (or aggregator) index the event belongs to.
+    pub fn index(&self) -> usize {
+        match *self {
+            EventKind::ComputeDone { node }
+            | EventKind::MsgArrive { node }
+            | EventKind::DownlinkArrive { node } => node,
+            EventKind::AggregateArrive { agg } => agg,
+        }
+    }
 }
 
 /// One scheduled event. Ordered by `(time, seq)` with `f64::total_cmp`,
@@ -94,6 +118,77 @@ impl EventQueue {
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
+
+    /// All scheduled events, in unspecified order (snapshot validation).
+    pub fn events(&self) -> impl Iterator<Item = &Event> {
+        self.heap.iter().map(|Reverse(e)| e)
+    }
+}
+
+impl Pack for EventKind {
+    fn pack(&self, w: &mut Writer) {
+        let (tag, idx): (u8, usize) = match *self {
+            EventKind::ComputeDone { node } => (0, node),
+            EventKind::MsgArrive { node } => (1, node),
+            EventKind::DownlinkArrive { node } => (2, node),
+            EventKind::AggregateArrive { agg } => (3, agg),
+        };
+        w.put_u8(tag);
+        w.put_usize(idx);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        let tag = r.get_u8()?;
+        let idx = r.get_usize()?;
+        Ok(match tag {
+            0 => EventKind::ComputeDone { node: idx },
+            1 => EventKind::MsgArrive { node: idx },
+            2 => EventKind::DownlinkArrive { node: idx },
+            3 => EventKind::AggregateArrive { agg: idx },
+            other => anyhow::bail!("unknown event kind tag {other}"),
+        })
+    }
+}
+
+impl Pack for Event {
+    fn pack(&self, w: &mut Writer) {
+        w.put_f64(self.time);
+        w.put_u64(self.seq);
+        self.kind.pack(w);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        let time = r.get_f64()?;
+        anyhow::ensure!(
+            time.is_finite() && time >= 0.0,
+            "snapshot event has bad virtual time {time}"
+        );
+        let seq = r.get_u64()?;
+        let kind = EventKind::unpack(r)?;
+        Ok(Self { time, seq, kind })
+    }
+}
+
+/// Snapshots serialize the heap as a *sorted* `(time, seq)` list — heap
+/// layout is an implementation detail, but the sorted order is canonical,
+/// so pack∘unpack∘pack is byte-stable.
+impl Pack for EventQueue {
+    fn pack(&self, w: &mut Writer) {
+        let mut evs: Vec<Event> = self.heap.iter().map(|Reverse(e)| *e).collect();
+        evs.sort();
+        evs.pack(w);
+        w.put_u64(self.next_seq);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        let evs = Vec::<Event>::unpack(r)?;
+        let next_seq = r.get_u64()?;
+        for e in &evs {
+            anyhow::ensure!(
+                e.seq < next_seq,
+                "snapshot event seq {} not below counter {next_seq}",
+                e.seq
+            );
+        }
+        Ok(Self { heap: evs.into_iter().map(Reverse).collect(), next_seq })
+    }
 }
 
 #[cfg(test)]
@@ -135,6 +230,65 @@ mod tests {
             std::iter::from_fn(|| q.pop().map(|e| (e.time, e.kind))).collect::<Vec<_>>()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn queue_snapshot_restores_order_and_seq_counter() {
+        let mut q = EventQueue::new();
+        q.push(1.0, EventKind::ComputeDone { node: 0 });
+        q.push(1.0, EventKind::MsgArrive { node: 1 });
+        q.push(0.5, EventKind::DownlinkArrive { node: 2 });
+        q.push(2.0, EventKind::AggregateArrive { agg: 0 });
+        let _ = q.pop(); // consume one so next_seq != len
+        let mut w = Writer::new();
+        q.pack(&mut w);
+        let bytes = w.into_inner();
+        let mut restored = EventQueue::unpack(&mut Reader::new(&bytes)).unwrap();
+        // restored queue pops identically AND assigns the same future seqs
+        q.push(1.0, EventKind::ComputeDone { node: 9 });
+        restored.push(1.0, EventKind::ComputeDone { node: 9 });
+        loop {
+            let (a, b) = (q.pop(), restored.pop());
+            assert_eq!(a.map(|e| (e.time, e.seq, e.kind)), b.map(|e| (e.time, e.seq, e.kind)));
+            if a.is_none() {
+                break;
+            }
+        }
+        // pack is canonical: repacking the restored queue is byte-identical
+        let mut q2 = EventQueue::new();
+        q2.push(3.0, EventKind::MsgArrive { node: 4 });
+        q2.push(1.0, EventKind::ComputeDone { node: 2 });
+        let mut w1 = Writer::new();
+        q2.pack(&mut w1);
+        let restored2 = EventQueue::unpack(&mut Reader::new(w1.as_slice())).unwrap();
+        let mut w2 = Writer::new();
+        restored2.pack(&mut w2);
+        assert_eq!(w1.as_slice(), w2.as_slice());
+    }
+
+    #[test]
+    fn queue_unpack_rejects_bad_times_and_seqs() {
+        // NaN time
+        let mut w = Writer::new();
+        vec![Event { time: f64::NAN, seq: 0, kind: EventKind::ComputeDone { node: 0 } }]
+            .pack(&mut w);
+        w.put_u64(1);
+        assert!(EventQueue::unpack(&mut Reader::new(w.as_slice())).is_err());
+        // seq not below the counter
+        let mut w = Writer::new();
+        vec![Event { time: 0.0, seq: 5, kind: EventKind::ComputeDone { node: 0 } }]
+            .pack(&mut w);
+        w.put_u64(5);
+        assert!(EventQueue::unpack(&mut Reader::new(w.as_slice())).is_err());
+        // unknown kind tag
+        let mut w = Writer::new();
+        w.put_usize(1);
+        w.put_f64(0.0);
+        w.put_u64(0);
+        w.put_u8(9);
+        w.put_usize(0);
+        w.put_u64(1);
+        assert!(EventQueue::unpack(&mut Reader::new(w.as_slice())).is_err());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! probability per node.
 
 use crate::config::OracleConfig;
+use crate::snapshot::codec::{Pack, Reader, Writer};
 use crate::util::rng::Pcg64;
 
 pub struct AsyncOracle {
@@ -51,6 +52,30 @@ impl AsyncOracle {
 
     pub fn fast_mask(&self) -> &[bool] {
         &self.fast
+    }
+}
+
+/// Snapshots capture the realized group assignment (the §5.1 half-split is
+/// drawn once at construction and must survive a resume verbatim) plus the
+/// selection probabilities, so a restored oracle consumes its RNG stream
+/// exactly like the uninterrupted one.
+impl Pack for AsyncOracle {
+    fn pack(&self, w: &mut Writer) {
+        w.put_f64(self.cfg.p_slow);
+        w.put_f64(self.cfg.p_fast);
+        w.put_bool(self.cfg.regroup_each_call);
+        self.fast.pack(w);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        let p_slow = r.get_f64()?;
+        let p_fast = r.get_f64()?;
+        let regroup_each_call = r.get_bool()?;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&p_slow) && (0.0..=1.0).contains(&p_fast),
+            "snapshot oracle: probabilities out of [0,1]"
+        );
+        let fast = Vec::<bool>::unpack(r)?;
+        Ok(Self { cfg: OracleConfig { p_slow, p_fast, regroup_each_call }, fast })
     }
 }
 

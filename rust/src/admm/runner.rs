@@ -3,9 +3,12 @@
 //! trial, all derived from `seed + trial`), then average the metric series
 //! — exactly how the paper's figures are produced.
 
-use crate::config::{EngineKind, ExperimentConfig};
+use std::path::PathBuf;
+
+use crate::config::{EngineKind, ExperimentConfig, ProblemKind};
 use crate::metrics::RunRecorder;
 use crate::problems::Problem;
+use crate::snapshot;
 use crate::util::stats;
 
 use super::engine::EventEngine;
@@ -95,6 +98,167 @@ pub fn run_mc(cfg: &ExperimentConfig, factory: &mut ProblemFactory) -> anyhow::R
     Ok(McResult::from_trials(trials))
 }
 
+/// Checkpoint / resume / timeline-recording knobs for a single-trial run
+/// (`qadmm run --checkpoint-every K | --resume-from P | --record-timeline P`).
+#[derive(Clone, Debug, Default)]
+pub struct SingleRunOptions {
+    /// Write a snapshot every this many consensus rounds (0 = never).
+    pub checkpoint_every: usize,
+    /// Where the snapshot goes; each write atomically replaces the
+    /// previous one. The CLI defaults this to `<--out>/<name>.qsnap` so a
+    /// run's artifacts stay together; `None` here falls back to
+    /// `out/<name>.qsnap`.
+    pub checkpoint_path: Option<PathBuf>,
+    /// Resume from this snapshot instead of starting at round 0.
+    pub resume_from: Option<PathBuf>,
+    /// Event engine only: record the realized timeline here (JSON),
+    /// replayable with `--engine threaded --replay-timeline`.
+    pub record_timeline: Option<PathBuf>,
+}
+
+impl SingleRunOptions {
+    pub fn is_active(&self) -> bool {
+        self.checkpoint_every > 0
+            || self.resume_from.is_some()
+            || self.record_timeline.is_some()
+    }
+}
+
+/// One checkpointable trial of an in-process engine. This is `run_mc` for
+/// the long-run shape: a single trial (checkpoints of an averaged MC sweep
+/// would be n_trials interleaved states — resume the trials separately if
+/// that is what you need), with a periodic snapshot, an optional resume
+/// point, and an optional timeline recording.
+///
+/// A resumed run is **bit-identical** to the uninterrupted one — z
+/// trajectory, staleness, wire bits, RNG streams (`tests/snapshot_parity.rs`)
+/// — because the snapshot carries every piece of mutable run state and the
+/// problem is re-derived from the same seed. That re-derivation is also the
+/// boundary of support: problems that hold *runtime* state outside the
+/// engine (the NN families keep Adam moments and pinned tensors in the
+/// compute service) are refused rather than resumed wrong.
+pub fn run_single(
+    cfg: &ExperimentConfig,
+    factory: &mut ProblemFactory,
+    opts: &SingleRunOptions,
+) -> anyhow::Result<RunRecorder> {
+    cfg.validate()?;
+    anyhow::ensure!(
+        cfg.engine != EngineKind::Threaded,
+        "run_single drives the in-process engines; the threaded runtime replays \
+         recorded timelines instead (see --replay-timeline)"
+    );
+    if opts.checkpoint_every > 0 || opts.resume_from.is_some() {
+        anyhow::ensure!(
+            matches!(cfg.problem, ProblemKind::Lasso { .. }),
+            "checkpoint/resume re-derives the problem from the seed; {} holds \
+             runtime state outside the engine and cannot be resumed faithfully",
+            cfg.problem.label()
+        );
+        // The snapshot header (and the resume digest) carry the seed
+        // through JSON f64, which is integer-exact only below 2^53 —
+        // beyond that two different seeds can collide after rounding and
+        // a resume would silently re-derive the wrong problem data.
+        anyhow::ensure!(
+            cfg.seed < (1u64 << 53),
+            "checkpoint/resume requires --seed below 2^53 (the snapshot header \
+             stores it as a JSON number); got {}",
+            cfg.seed
+        );
+    }
+    if opts.record_timeline.is_some() {
+        anyhow::ensure!(
+            cfg.engine == EngineKind::Event,
+            "--record-timeline captures the event engine's virtual timeline \
+             (engine={} has none)",
+            cfg.engine.label()
+        );
+    }
+
+    let seed = trial_seed(cfg.seed, 0);
+    let mut rngs = TrialRngs::new(seed);
+    let mut problem = factory(seed, &mut rngs.data)?;
+
+    // Resume point: validate the header before touching the body.
+    let resumed: Option<(snapshot::SnapshotMeta, Vec<u8>)> = match &opts.resume_from {
+        Some(path) => {
+            let (meta, body) = snapshot::read_file(path)?;
+            anyhow::ensure!(
+                meta.engine == cfg.engine.label(),
+                "snapshot was written by engine={}, run requests engine={}",
+                meta.engine,
+                cfg.engine.label()
+            );
+            anyhow::ensure!(
+                snapshot::config_resume_digest(&meta.config) == cfg.resume_digest(),
+                "snapshot config does not match this run (only iters/trials/name may \
+                 differ on resume); snapshot header: {}",
+                meta.config.to_string_compact()
+            );
+            anyhow::ensure!(
+                meta.round <= cfg.iters,
+                "snapshot already at round {} >= --iters {}; nothing to resume",
+                meta.round,
+                cfg.iters
+            );
+            crate::util::log::debug(
+                "runner",
+                &format!("resuming {} from round {} ({})", cfg.name, meta.round, path.display()),
+            );
+            Some((meta, body))
+        }
+        None => None,
+    };
+
+    let ck_path = opts
+        .checkpoint_path
+        .clone()
+        .unwrap_or_else(|| PathBuf::from(format!("out/{}.qsnap", cfg.name)));
+
+    match cfg.engine {
+        EngineKind::Seq => {
+            let mut sim = match &resumed {
+                Some((_, body)) => AsyncSim::resume(cfg, problem.as_mut(), body)?,
+                None => AsyncSim::new(cfg, problem.as_mut(), rngs)?,
+            };
+            while sim.iter() < cfg.iters {
+                sim.step()?;
+                if opts.checkpoint_every > 0 && sim.iter() % opts.checkpoint_every == 0 {
+                    snapshot::write_file(&ck_path, &sim.snapshot_meta(), &sim.snapshot_body())?;
+                }
+            }
+            Ok(sim.recorder().clone())
+        }
+        EngineKind::Event => {
+            let mut eng = match &resumed {
+                Some((_, body)) => EventEngine::resume(cfg, problem.as_mut(), body)?,
+                None => EventEngine::new(cfg, problem.as_mut(), rngs)?,
+            };
+            if opts.record_timeline.is_some() {
+                eng.record_timeline();
+            }
+            while eng.stats().rounds < cfg.iters {
+                eng.step_round()?;
+                if opts.checkpoint_every > 0
+                    && eng.stats().rounds % opts.checkpoint_every == 0
+                {
+                    snapshot::write_file(&ck_path, &eng.snapshot_meta(), &eng.snapshot_body())?;
+                }
+            }
+            if let Some(path) = &opts.record_timeline {
+                let tl = eng.take_timeline().expect("recording was enabled");
+                tl.write(path)?;
+                crate::util::log::debug(
+                    "runner",
+                    &format!("recorded {} rounds to {}", tl.rounds.len(), path.display()),
+                );
+            }
+            Ok(eng.recorder().clone())
+        }
+        EngineKind::Threaded => unreachable!("rejected above"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +325,58 @@ mod tests {
         let b = run_mc(&cfg, &mut f2).unwrap();
         assert_eq!(a.mean_accuracy, b.mean_accuracy);
         assert_eq!(a.mean_comm_bits, b.mean_comm_bits);
+    }
+
+    /// The CLI-level glue: run_single writes a checkpoint file at the
+    /// cadence, a second run_single resumes from it, and the resumed
+    /// recorder continues the same series (bit-exact tail) that a straight
+    /// run produces.
+    #[test]
+    fn run_single_checkpoints_and_resumes_through_the_file() {
+        let dir = std::env::temp_dir().join("qadmm-run-single-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ck = dir.join("run.qsnap");
+        let mut cfg = presets::ci_lasso();
+        cfg.engine = EngineKind::Event;
+        cfg.iters = 20;
+        cfg.mc_trials = 1;
+
+        let mut f1 = lasso_factory(&cfg);
+        let straight = run_single(&cfg, &mut f1, &SingleRunOptions::default()).unwrap();
+
+        // interrupted plan: checkpoint every 7 rounds, stop at 14
+        let mut short = cfg.clone();
+        short.iters = 14;
+        let mut f2 = lasso_factory(&short);
+        let opts = SingleRunOptions {
+            checkpoint_every: 7,
+            checkpoint_path: Some(ck.clone()),
+            ..Default::default()
+        };
+        let _ = run_single(&short, &mut f2, &opts).unwrap();
+        assert!(ck.exists(), "checkpoint file not written");
+
+        // resume with the full plan (iters differ — the digest permits it)
+        let mut f3 = lasso_factory(&cfg);
+        let opts = SingleRunOptions { resume_from: Some(ck.clone()), ..Default::default() };
+        let resumed = run_single(&cfg, &mut f3, &opts).unwrap();
+
+        assert_eq!(straight.records.len(), resumed.records.len());
+        for (a, b) in straight.records.iter().zip(&resumed.records) {
+            assert_eq!(a.iter, b.iter);
+            assert_eq!(a.comm_bits.to_bits(), b.comm_bits.to_bits());
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+            assert_eq!(a.active_nodes, b.active_nodes);
+        }
+
+        // a config drift must be refused
+        let mut other = cfg.clone();
+        other.tau = cfg.tau + 1;
+        let mut f4 = lasso_factory(&other);
+        let opts = SingleRunOptions { resume_from: Some(ck.clone()), ..Default::default() };
+        assert!(run_single(&other, &mut f4, &opts).is_err());
+
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -2,6 +2,8 @@
 //! per-node staleness counters d_i, forced inclusion at d_i = τ−1, and the
 //! minimum-arrivals threshold P.
 
+use crate::snapshot::codec::{Pack, Reader, Writer};
+
 /// Bookkeeping for the async trigger rule. `advance` consumes the active
 //  set of iteration r plus an oracle draw and produces A_{r+1}.
 #[derive(Clone, Debug)]
@@ -89,6 +91,37 @@ impl Scheduler {
 
     pub fn tau(&self) -> usize {
         self.tau
+    }
+
+    pub fn p_min(&self) -> usize {
+        self.p_min
+    }
+}
+
+impl Pack for Scheduler {
+    fn pack(&self, w: &mut Writer) {
+        self.d.pack(w);
+        w.put_usize(self.tau);
+        w.put_usize(self.p_min);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        let d = Vec::<usize>::unpack(r)?;
+        let tau = r.get_usize()?;
+        let p_min = r.get_usize()?;
+        anyhow::ensure!(tau >= 1, "snapshot scheduler: tau must be >= 1");
+        anyhow::ensure!(
+            (1..=d.len()).contains(&p_min),
+            "snapshot scheduler: p_min {p_min} out of 1..={}",
+            d.len()
+        );
+        // the τ−1 bound is a run invariant; a counter past it is corruption
+        for (i, &di) in d.iter().enumerate() {
+            anyhow::ensure!(
+                di + 1 <= tau,
+                "snapshot scheduler: node {i} staleness {di} breaks tau={tau}"
+            );
+        }
+        Ok(Self { d, tau, p_min })
     }
 }
 

@@ -14,6 +14,8 @@ use crate::config::ExperimentConfig;
 use crate::metrics::{IterRecord, RunRecorder};
 use crate::problems::accumulator::ConsensusAccumulator;
 use crate::problems::{Arena, Problem};
+use crate::snapshot::codec::{Pack, Reader, Writer};
+use crate::snapshot::SnapshotMeta;
 use crate::topology::AggregatorTier;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
@@ -355,5 +357,169 @@ impl<'a> AsyncSim<'a> {
     /// The aggregator tier, when a non-star topology owns the fan-in.
     pub fn tier(&self) -> Option<&AggregatorTier> {
         self.tier.as_ref()
+    }
+
+    // ---- snapshot / resume ----
+
+    /// Human-readable header for a snapshot taken now.
+    pub fn snapshot_meta(&self) -> SnapshotMeta {
+        SnapshotMeta {
+            engine: "seq".into(),
+            round: self.iter,
+            n: self.n,
+            m: self.m,
+            seed: self.cfg.seed,
+            config: self.cfg.to_json(),
+        }
+    }
+
+    /// Serialize the simulator's complete mutable run state (the lockstep
+    /// analogue of [`super::engine::EventEngine::snapshot_body`]): arenas,
+    /// estimate banks, the Kahan-compensated consensus sum, the aggregator
+    /// tier, the active set, scheduler counters, oracle grouping, wire-bit
+    /// books, the metric series, every RNG stream and the round counter.
+    /// Call between [`Self::step`] calls.
+    pub fn snapshot_body(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        self.x.pack(&mut w);
+        self.u.pack(&mut w);
+        self.z.pack(&mut w);
+        self.xhat.pack(&mut w);
+        self.uhat.pack(&mut w);
+        self.zhat.pack(&mut w);
+        self.acc.pack(&mut w);
+        self.tier.pack(&mut w);
+        self.rng_topology.pack(&mut w);
+        self.active.pack(&mut w);
+        self.scheduler.pack(&mut w);
+        self.oracle.pack(&mut w);
+        self.accounting.pack(&mut w);
+        self.rng_oracle.pack(&mut w);
+        self.rng_quant.pack(&mut w);
+        self.rng_batches.pack(&mut w);
+        self.recorder.pack(&mut w);
+        w.put_usize(self.iter);
+        w.into_inner()
+    }
+
+    /// Rebuild a simulator from [`Self::snapshot_body`] — bit-identical
+    /// continuation, with the problem re-derived from the same seed by the
+    /// caller (snapshots store no problem data).
+    pub fn resume(
+        cfg: &'a ExperimentConfig,
+        problem: &'a mut dyn Problem,
+        body: &[u8],
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let m = problem.dim();
+        let n = problem.n_nodes();
+        let n_aggs = cfg.topology.n_aggregators(n);
+        let mut r = Reader::new(body);
+
+        let x = Arena::unpack(&mut r)?;
+        let u = Arena::unpack(&mut r)?;
+        let z = Vec::<f64>::unpack(&mut r)?;
+        let xhat = Vec::<EstimateTracker>::unpack(&mut r)?;
+        let uhat = Vec::<EstimateTracker>::unpack(&mut r)?;
+        let zhat = EstimateTracker::unpack(&mut r)?;
+        let acc = ConsensusAccumulator::unpack(&mut r)?;
+        let tier = Option::<AggregatorTier>::unpack(&mut r)?;
+        let rng_topology = Pcg64::unpack(&mut r)?;
+        let active = Vec::<bool>::unpack(&mut r)?;
+        let scheduler = Scheduler::unpack(&mut r)?;
+        let oracle = AsyncOracle::unpack(&mut r)?;
+        let accounting = CommAccounting::unpack(&mut r)?;
+        let rng_oracle = Pcg64::unpack(&mut r)?;
+        let rng_quant = Pcg64::unpack(&mut r)?;
+        let rng_batches = Pcg64::unpack(&mut r)?;
+        let recorder = RunRecorder::unpack(&mut r)?;
+        let iter = r.get_usize()?;
+        r.finish()?;
+
+        anyhow::ensure!(
+            x.n_rows() == n && x.dim() == m && u.n_rows() == n && u.dim() == m,
+            "snapshot iterate arenas sized {}x{}, problem is {n}x{m}",
+            x.n_rows(),
+            x.dim()
+        );
+        anyhow::ensure!(z.len() == m, "snapshot z has wrong dimension");
+        anyhow::ensure!(
+            xhat.len() == n && uhat.len() == n,
+            "snapshot estimate banks sized for a different fleet"
+        );
+        for t in xhat.iter().chain(&uhat).chain(std::iter::once(&zhat)) {
+            anyhow::ensure!(t.estimate().len() == m, "snapshot estimate bank wrong dim");
+            anyhow::ensure!(
+                t.feedback_enabled() == cfg.error_feedback,
+                "snapshot error-feedback mode disagrees with config"
+            );
+        }
+        anyhow::ensure!(acc.dim() == m, "snapshot accumulator wrong dim");
+        anyhow::ensure!(
+            tier.is_some() == (n_aggs > 0),
+            "snapshot topology disagrees with config ({})",
+            cfg.topology.label()
+        );
+        if let Some(t) = &tier {
+            anyhow::ensure!(
+                t.kind() == cfg.topology
+                    && t.n_aggregators() == n_aggs
+                    && t.p_tier() == cfg.p_tier.max(1)
+                    && t.error_feedback() == cfg.error_feedback,
+                "snapshot tier parameters disagree with config"
+            );
+        }
+        anyhow::ensure!(active.len() == n, "snapshot active set wrong fleet size");
+        anyhow::ensure!(
+            scheduler.staleness().len() == n
+                && scheduler.tau() == cfg.tau
+                && scheduler.p_min() == cfg.p_min,
+            "snapshot scheduler disagrees with config"
+        );
+        anyhow::ensure!(oracle.fast_mask().len() == n, "snapshot oracle wrong fleet size");
+        anyhow::ensure!(
+            accounting.n_nodes() == n + n_aggs,
+            "snapshot accounting has {} links, expected {}",
+            accounting.n_nodes(),
+            n + n_aggs
+        );
+
+        Ok(Self {
+            compressor: cfg.compressor.build(),
+            m,
+            n,
+            x,
+            u,
+            z,
+            xhat,
+            uhat,
+            zhat,
+            acc,
+            tier,
+            rng_topology,
+            active,
+            scheduler,
+            oracle,
+            accounting,
+            rng_oracle,
+            rng_quant,
+            rng_batches,
+            recorder,
+            clock: Stopwatch::new(),
+            iter,
+            cfg,
+            problem,
+        })
+    }
+
+    /// FNV digest over the raw state of every RNG stream the simulator
+    /// owns (resume-parity contract).
+    pub fn rng_digest(&self) -> u64 {
+        let mut w = Writer::new();
+        self.rng_oracle.pack(&mut w);
+        self.rng_quant.pack(&mut w);
+        self.rng_batches.pack(&mut w);
+        self.rng_topology.pack(&mut w);
+        crate::snapshot::codec::fnv1a64(w.as_slice())
     }
 }

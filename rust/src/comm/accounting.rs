@@ -4,6 +4,8 @@
 //!     communication bits = (total bits exchanged between nodes and server) / M
 //! i.e. cumulative wire traffic normalized by the model dimension.
 
+use crate::snapshot::codec::{Pack, Reader, Writer};
+
 #[derive(Clone, Debug, Default)]
 pub struct LinkStats {
     pub uplink_bits: u64,
@@ -72,6 +74,34 @@ impl CommAccounting {
 
     pub fn n_nodes(&self) -> usize {
         self.links.len()
+    }
+}
+
+impl Pack for LinkStats {
+    fn pack(&self, w: &mut Writer) {
+        w.put_u64(self.uplink_bits);
+        w.put_u64(self.downlink_bits);
+        w.put_u64(self.uplink_msgs);
+        w.put_u64(self.downlink_msgs);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        Ok(Self {
+            uplink_bits: r.get_u64()?,
+            downlink_bits: r.get_u64()?,
+            uplink_msgs: r.get_u64()?,
+            downlink_msgs: r.get_u64()?,
+        })
+    }
+}
+
+/// Wire-bit books are run state: a resumed run must keep charging on top
+/// of the interrupted totals or every bits-to-target curve restarts.
+impl Pack for CommAccounting {
+    fn pack(&self, w: &mut Writer) {
+        self.links.pack(w);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        Ok(Self { links: Vec::<LinkStats>::unpack(r)? })
     }
 }
 

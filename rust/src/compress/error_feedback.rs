@@ -6,6 +6,8 @@
 //! The EF-off ablation transmits C(y_new − y_old) instead (pure delta
 //! coding), demonstrating the §4.1 error-accumulation argument.
 
+use crate::snapshot::codec::{Pack, Reader, Writer};
+
 /// One endpoint's view of a compressed stream: the shared estimate ŷ plus
 /// (for the EF-off ablation only) the last true iterate. With feedback on —
 /// the paper's configuration — the delta base *is* the estimate, so no
@@ -72,6 +74,30 @@ impl EstimateTracker {
 
     pub fn feedback_enabled(&self) -> bool {
         self.feedback
+    }
+}
+
+impl Pack for EstimateTracker {
+    fn pack(&self, w: &mut Writer) {
+        self.estimate.pack(w);
+        self.last_true.pack(w);
+        w.put_bool(self.feedback);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        let estimate = Vec::<f64>::unpack(r)?;
+        let last_true = Option::<Vec<f64>>::unpack(r)?;
+        let feedback = r.get_bool()?;
+        anyhow::ensure!(
+            last_true.is_some() == !feedback,
+            "snapshot tracker: last_true presence must match EF-off mode"
+        );
+        if let Some(lt) = &last_true {
+            anyhow::ensure!(
+                lt.len() == estimate.len(),
+                "snapshot tracker: last_true/estimate length mismatch"
+            );
+        }
+        Ok(Self { estimate, last_true, feedback })
     }
 }
 

@@ -21,6 +21,7 @@ pub mod signsgd;
 pub mod topk;
 pub mod wire;
 
+use crate::snapshot::codec::{Pack, Reader, Writer};
 use crate::util::rng::Pcg64;
 
 /// Result of compressing a vector.
@@ -40,6 +41,19 @@ impl Compressed {
 
     pub fn wire_bits(&self) -> u64 {
         self.wire.len() as u64 * 8
+    }
+}
+
+/// Snapshots carry in-flight compressed payloads verbatim — both the
+/// dequantized values (what a commit would fold) and the exact wire frame
+/// (what the bit accounting already charged).
+impl Pack for Compressed {
+    fn pack(&self, w: &mut Writer) {
+        self.dequantized.pack(w);
+        w.put_bytes(&self.wire);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        Ok(Self { dequantized: Vec::<f64>::unpack(r)?, wire: r.get_bytes()? })
     }
 }
 

@@ -189,6 +189,13 @@ impl ExperimentConfig {
         }
     }
 
+    /// The config identity a resume must match: everything except the run
+    /// *length* knobs and the cosmetic name — see
+    /// [`crate::snapshot::config_resume_digest`].
+    pub fn resume_digest(&self) -> String {
+        crate::snapshot::config_resume_digest(&self.to_json())
+    }
+
     pub fn to_json(&self) -> Json {
         let problem = match self.problem {
             ProblemKind::Lasso { m, h, n, rho, theta } => Json::obj(vec![

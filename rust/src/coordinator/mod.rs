@@ -19,6 +19,8 @@ use crate::comm::profile::{per_node_profiles, LinkProfile};
 use crate::config::ExperimentConfig;
 use crate::metrics::RunRecorder;
 use crate::problems::Problem;
+use crate::snapshot::timeline::RecordedTimeline;
+use crate::topology::TopologyKind;
 use crate::util::rng::Pcg64;
 
 /// Problems are shared behind a mutex: node threads lock for their own
@@ -32,6 +34,11 @@ pub struct ThreadedOutcome {
     pub normalized_bits: f64,
     pub uplink_bits: u64,
     pub downlink_bits: u64,
+    /// Replay mode only: the arrival set each fired round folded
+    /// (ascending), which must equal the recording's round list verbatim
+    /// — the contract `tests/snapshot_parity.rs` enforces. Empty for
+    /// normal (non-replay) runs.
+    pub round_arrivals: Vec<Vec<usize>>,
 }
 
 /// Run a full threaded deployment for `cfg.iters` server rounds.
@@ -39,6 +46,55 @@ pub fn run_threaded(
     cfg: &ExperimentConfig,
     problem: Box<dyn Problem + Send>,
     faults: FaultSpec,
+) -> anyhow::Result<ThreadedOutcome> {
+    run_threaded_inner(cfg, problem, faults, None)
+}
+
+/// Replay a recorded event-engine timeline through the threaded runtime:
+/// the server folds exactly the recording's per-round arrival sets (early
+/// arrivals are held back, see `server::ServerLoop::gather_replay`) and
+/// fires exactly its round count, so a deployment-shaped run reproduces
+/// the straggler schedule the virtual-time engine discovered — with **no
+/// injected wall-clock sleeps** (the recording already encodes who was
+/// late; sleeping through the delays again would only slow the replay).
+///
+/// Scope: star fan-in only (aggregator routing consumes RNG draws the
+/// recording never made), and the fleet size must match the recording.
+/// The replay reproduces the *schedule* — arrival sets and round count —
+/// not the engine's bit-exact z trajectory: the threaded runtime folds
+/// within a round in real arrival order, which bit-identity was never
+/// claimed for (see `ROADMAP.md`).
+pub fn run_threaded_replay(
+    cfg: &ExperimentConfig,
+    problem: Box<dyn Problem + Send>,
+    faults: FaultSpec,
+    timeline: &RecordedTimeline,
+) -> anyhow::Result<ThreadedOutcome> {
+    anyhow::ensure!(
+        timeline.engine == "event",
+        "replay needs an event-engine recording (got '{}')",
+        timeline.engine
+    );
+    anyhow::ensure!(
+        timeline.n == problem.n_nodes(),
+        "recording is for n={} nodes, problem has n={}",
+        timeline.n,
+        problem.n_nodes()
+    );
+    anyhow::ensure!(
+        cfg.topology == TopologyKind::Star,
+        "timeline replay drives the star fan-in only (topology={} routes through \
+         aggregators whose RNG draws the recording does not contain)",
+        cfg.topology.label()
+    );
+    run_threaded_inner(cfg, problem, faults, Some(timeline))
+}
+
+fn run_threaded_inner(
+    cfg: &ExperimentConfig,
+    problem: Box<dyn Problem + Send>,
+    faults: FaultSpec,
+    replay: Option<&RecordedTimeline>,
 ) -> anyhow::Result<ThreadedOutcome> {
     cfg.validate()?;
     let n = problem.n_nodes();
@@ -52,7 +108,13 @@ pub fn run_threaded(
     // motivation. (The old n ≤ 64 cap is gone: inclusion travels as a
     // sparse id set, and node counts are bounded only by thread resources —
     // virtual-time runs at 1000+ nodes belong to admm::engine.)
-    let profiles: Vec<LinkProfile> = per_node_profiles(cfg.link, n);
+    // Under replay every injected sleep is dropped: the recorded schedule,
+    // not the wall clock, decides which round an update lands in.
+    let profiles: Vec<LinkProfile> = if replay.is_some() {
+        vec![LinkProfile::none(); n]
+    } else {
+        per_node_profiles(cfg.link, n)
+    };
 
     // Non-star topologies colocate the aggregator tier with the server
     // thread (see `server::ServerLoop`); each aggregator still gets its
@@ -77,7 +139,7 @@ pub fn run_threaded(
         );
     }
 
-    let srv = server::ServerLoop::new(
+    let mut srv = server::ServerLoop::new(
         server_ep,
         shared,
         accounting.clone(),
@@ -86,7 +148,10 @@ pub fn run_threaded(
         m,
         root.fork(300),
     );
-    let recorder = srv.run()?;
+    if let Some(tl) = replay {
+        srv.set_replay(tl.rounds.iter().map(|r| r.arrivals.clone()).collect());
+    }
+    let (recorder, round_arrivals) = srv.run()?;
 
     for h in handles {
         h.join().map_err(|_| anyhow::anyhow!("node thread panicked"))??;
@@ -97,5 +162,6 @@ pub fn run_threaded(
         normalized_bits: acc.normalized_bits(m),
         uplink_bits: acc.total_uplink_bits(),
         downlink_bits: acc.total_downlink_bits(),
+        round_arrivals,
     })
 }

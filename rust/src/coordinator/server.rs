@@ -3,7 +3,7 @@
 //! among them (the bounded-delay rule); broadcasts the compressed consensus
 //! delta; repeats for the configured number of rounds.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::Duration;
 
 use crate::comm::message::{
@@ -52,6 +52,22 @@ pub struct ServerLoop {
     d: Vec<usize>,
     pending: BTreeSet<usize>,
     rng: Pcg64,
+    /// Replay mode ([`Self::set_replay`]): the per-round arrival sets of a
+    /// recorded event-engine timeline. Round r folds **exactly** these
+    /// nodes' updates — anything else that lands early is held back in
+    /// [`Self::stash`] until the round the recording assigns it to, so the
+    /// deployment reproduces the engine's partial-participation schedule
+    /// without any wall-clock sleeps.
+    replay: Option<Vec<Vec<usize>>>,
+    /// Decoded updates that arrived ahead of their recorded round (replay
+    /// mode only). At most one per node: a node recomputes only after its
+    /// previous update was folded into a broadcast it has seen.
+    stash: BTreeMap<usize, (Vec<f64>, Vec<f64>)>,
+    /// Replay mode only: the realized arrival set of every fired round
+    /// (ascending) — what the replay-parity tests diff against the
+    /// recording. Left empty in normal runs (a long deployment would
+    /// otherwise accumulate one id vector per round for nobody).
+    round_arrivals: Vec<Vec<usize>>,
     /// How long the server will wait for a required (stale) node before
     /// declaring the deployment wedged.
     pub stall_timeout: Duration,
@@ -90,11 +106,23 @@ impl ServerLoop {
             d: vec![0; n],
             pending: BTreeSet::new(),
             rng,
+            replay: None,
+            stash: BTreeMap::new(),
+            round_arrivals: Vec::new(),
             stall_timeout: Duration::from_secs(60),
         }
     }
 
-    pub fn run(mut self) -> anyhow::Result<RunRecorder> {
+    /// Drive the round loop from a recorded timeline's arrival sets
+    /// instead of real arrival order. The round count becomes the
+    /// recording's (`cfg.iters` is ignored), and the fan-in must be the
+    /// star — aggregator routing consumes RNG draws the recording never
+    /// made (validated by [`super::run_threaded_replay`]).
+    pub fn set_replay(&mut self, rounds: Vec<Vec<usize>>) {
+        self.replay = Some(rounds);
+    }
+
+    pub fn run(mut self) -> anyhow::Result<(RunRecorder, Vec<Vec<usize>>)> {
         let clock = Stopwatch::new();
         let mut recorder = RunRecorder::new();
 
@@ -137,8 +165,16 @@ impl ServerLoop {
         self.zhat = Some(EstimateTracker::new(z, true));
 
         // ---- main rounds ----
-        for r in 0..self.iters {
-            self.gather_batch()?;
+        // In replay mode the recording *is* the plan: exactly its rounds,
+        // each folding exactly its recorded arrival set.
+        let iters = self.replay.as_ref().map_or(self.iters, Vec::len);
+        for r in 0..iters {
+            if self.replay.is_some() {
+                self.gather_replay(r)?;
+                self.round_arrivals.push(self.pending.iter().copied().collect());
+            } else {
+                self.gather_batch()?;
+            }
             if self.acc.refresh_due(r + 1) {
                 self.refresh_sum();
             }
@@ -187,7 +223,7 @@ impl ServerLoop {
         // orderly shutdown: stop the nodes, then drain in-flight uplinks
         self.ep.broadcast(&ServerToNode::Shutdown)?;
         self.ep.drain(Duration::from_millis(100));
-        Ok(recorder)
+        Ok((recorder, self.round_arrivals))
     }
 
     /// Wait until ≥ P arrivals and every τ−1-stale node has reported.
@@ -203,16 +239,15 @@ impl ServerLoop {
                 Some(NodeToServer::Update { node, dx_wire, du_wire, .. }) => {
                     let dx = wire::decode(&dx_wire, self.m)?;
                     let du = wire::decode(&du_wire, self.m)?;
-                    self.xhat[node].commit(&dx);
-                    self.uhat[node].commit(&du);
                     match &mut self.tier {
                         None => {
                             // O(m) fold keeps s = Σ(x̂+û) current without
                             // the per-round bank sweep
-                            self.acc.fold(&dx, &du);
-                            self.pending.insert(node);
+                            self.fold_update(node, &dx, &du);
                         }
                         Some(t) => {
+                            self.xhat[node].commit(&dx);
+                            self.uhat[node].commit(&du);
                             // route through the colocated aggregator tier:
                             // fold into the pending partial, then forward
                             // the re-quantized delta on the aggregator's
@@ -244,6 +279,66 @@ impl ServerLoop {
                 ),
             }
         }
+    }
+
+    /// Commit one decoded star-fan-in update: estimate banks, incremental
+    /// consensus sum, and the pending (arrival) set.
+    fn fold_update(&mut self, node: usize, dx: &[f64], du: &[f64]) {
+        self.xhat[node].commit(dx);
+        self.uhat[node].commit(du);
+        self.acc.fold(dx, du);
+        self.pending.insert(node);
+    }
+
+    /// Replay-mode gather: assemble **exactly** the recorded round's
+    /// arrival set. Stashed early arrivals scheduled for this round fold
+    /// first (ascending node order); live arrivals fold as they land if
+    /// they belong here, otherwise they are held back for the round the
+    /// recording assigns them to. The node cadence (compute on inclusion,
+    /// one update in flight) guarantees every target update eventually
+    /// arrives: a node in round r's recorded set was, by construction,
+    /// included in some earlier broadcast it has already seen.
+    fn gather_replay(&mut self, r: usize) -> anyhow::Result<()> {
+        let target = self.replay.as_ref().expect("replay mode")[r].clone();
+        for &node in &target {
+            if let Some((dx, du)) = self.stash.remove(&node) {
+                self.fold_update(node, &dx, &du);
+            }
+        }
+        while !target.iter().all(|i| self.pending.contains(i)) {
+            match self.ep.recv_timeout(self.stall_timeout)? {
+                Some(NodeToServer::Update { node, dx_wire, du_wire, .. }) => {
+                    let dx = wire::decode(&dx_wire, self.m)?;
+                    let du = wire::decode(&du_wire, self.m)?;
+                    if target.contains(&node) && !self.pending.contains(&node) {
+                        self.fold_update(node, &dx, &du);
+                    } else {
+                        // ahead of its recorded round — hold it back
+                        self.stash.insert(node, (dx, du));
+                    }
+                }
+                Some(NodeToServer::InitFull { .. }) => {}
+                None => {
+                    let missing: Vec<usize> = target
+                        .iter()
+                        .copied()
+                        .filter(|i| !self.pending.contains(i))
+                        .collect();
+                    anyhow::bail!(
+                        "replay stalled at round {r}: waiting for nodes {missing:?}, \
+                         folded {:?}, {} stashed",
+                        self.pending,
+                        self.stash.len()
+                    )
+                }
+            }
+        }
+        debug_assert_eq!(
+            self.pending.iter().copied().collect::<Vec<_>>(),
+            target,
+            "replay folded an arrival set the recording did not prescribe"
+        );
+        Ok(())
     }
 
     /// z = prox(s/n) from the incremental sum — O(m) per round.

@@ -6,6 +6,7 @@ pub mod ablation;
 pub mod downlink;
 pub mod fig3;
 pub mod fig4;
+pub mod resume;
 pub mod topology;
 
 use crate::admm::runner::McResult;

@@ -1,0 +1,356 @@
+//! Resume-parity smoke sweep (`qadmm resume`): the executable form of the
+//! snapshot subsystem's contract, small enough for CI.
+//!
+//! For every (engine × topology) cell it runs the same seeded LASSO
+//! experiment twice — once straight through, once checkpointed at round k,
+//! torn down, and resumed from the snapshot with the problem re-derived
+//! from the seed — and diffs the *entire* observable run bit-for-bit:
+//! per-round z trajectories (as raw f64 bits), per-round staleness
+//! vectors, per-link wire-bit totals, the metric series (minus wall
+//! clock), and the final state of every RNG stream. Any mismatch is a
+//! hard error (CI fails).
+//!
+//! It then records an event-engine timeline under straggler latency,
+//! round-trips it through the JSON file format, replays it on the
+//! threaded runtime, and checks the deployment reproduced the recorded
+//! arrival sets and round count exactly — the bridge half of the
+//! contract. The recording is left in `--out` (CI uploads it as an
+//! artifact).
+
+use std::path::{Path, PathBuf};
+
+use crate::admm::engine::EventEngine;
+use crate::admm::sim::{AsyncSim, TrialRngs};
+use crate::comm::latency::LatencyModel;
+use crate::comm::network::FaultSpec;
+use crate::comm::profile::LinkConfig;
+use crate::compress::CompressorKind;
+use crate::config::{presets, EngineKind, ExperimentConfig, ProblemKind};
+use crate::coordinator;
+use crate::problems::lasso::{LassoConfig, LassoProblem};
+use crate::snapshot;
+use crate::topology::TopologyKind;
+use crate::util::timer::Stopwatch;
+
+pub struct ResumeSmokeOptions {
+    /// Rounds per cell.
+    pub iters: usize,
+    /// Checkpoint round (must be in 1..iters).
+    pub k: usize,
+    /// Where the recorded timeline (and one on-disk snapshot) land.
+    pub out_dir: PathBuf,
+    /// Smaller fleet / fewer rounds.
+    pub quick: bool,
+}
+
+impl Default for ResumeSmokeOptions {
+    fn default() -> Self {
+        Self { iters: 48, k: 19, out_dir: PathBuf::from("out"), quick: false }
+    }
+}
+
+/// Everything the bit-identity contract covers, in compare-exactly form.
+#[derive(PartialEq)]
+struct RunTrace {
+    /// Per-round z as raw IEEE bits.
+    z: Vec<Vec<u64>>,
+    /// Per-round staleness counters.
+    staleness: Vec<Vec<usize>>,
+    /// Per-link (uplink_bits, downlink_bits, uplink_msgs, downlink_msgs).
+    links: Vec<(u64, u64, u64, u64)>,
+    /// Metric series minus wall clock (iter, comm/accuracy/loss bits, |A|).
+    records: Vec<(usize, u64, u64, u64, usize)>,
+    /// FNV digest over every RNG stream's raw state.
+    rng_digest: u64,
+}
+
+fn cell_cfg(opts: &ResumeSmokeOptions, engine: EngineKind, topo: TopologyKind) -> ExperimentConfig {
+    let (n, m, h) = if opts.quick { (8, 16, 8) } else { (16, 24, 12) };
+    let mut cfg = presets::ci_lasso();
+    cfg.name = format!("resume-smoke-{}-{}", engine.label(), topo.label());
+    cfg.problem = ProblemKind::Lasso { m, h, n, rho: 30.0, theta: 0.1 };
+    cfg.compressor = CompressorKind::Qsgd { bits: 3 };
+    cfg.engine = engine;
+    cfg.topology = topo;
+    cfg.p_tier = 2;
+    cfg.tau = 3;
+    cfg.p_min = 2;
+    cfg.iters = opts.iters;
+    cfg.mc_trials = 1;
+    cfg.eval_every = 1;
+    // a refresh cadence that straddles the checkpoint round, so the
+    // resumed run must hit the same refresh rounds to stay bit-exact
+    cfg.consensus_refresh_every = 8;
+    if engine == EngineKind::Event {
+        // nonzero delay on every leg: the checkpoint lands mid-timeline
+        // with events in flight, the regime worth testing
+        cfg.link = LinkConfig {
+            compute: LatencyModel::Exp(0.01),
+            uplink: LatencyModel::Exp(0.01),
+            downlink: LatencyModel::Exp(0.02),
+            clock_drift: 0.1,
+        };
+    }
+    cfg
+}
+
+fn lasso_of(cfg: &ExperimentConfig) -> LassoConfig {
+    match cfg.problem {
+        ProblemKind::Lasso { m, h, n, rho, theta } => LassoConfig { m, h, n, rho, theta },
+        _ => unreachable!("smoke cells are lasso"),
+    }
+}
+
+fn make_problem(cfg: &ExperimentConfig) -> anyhow::Result<(LassoProblem, TrialRngs)> {
+    let seed = crate::admm::runner::trial_seed(cfg.seed, 0);
+    let mut rngs = TrialRngs::new(seed);
+    let mut p = LassoProblem::generate(lasso_of(cfg), &mut rngs.data)?;
+    p.set_reference_optimum(1.0); // parity cares about bits, not F*
+    Ok((p, rngs))
+}
+
+fn trace_links(acc: &crate::comm::accounting::CommAccounting) -> Vec<(u64, u64, u64, u64)> {
+    (0..acc.n_nodes())
+        .map(|i| {
+            let l = acc.link(i);
+            (l.uplink_bits, l.downlink_bits, l.uplink_msgs, l.downlink_msgs)
+        })
+        .collect()
+}
+
+fn trace_records(rec: &crate::metrics::RunRecorder) -> Vec<(usize, u64, u64, u64, usize)> {
+    rec.records
+        .iter()
+        .map(|r| {
+            (r.iter, r.comm_bits.to_bits(), r.accuracy.to_bits(), r.loss.to_bits(), r.active_nodes)
+        })
+        .collect()
+}
+
+/// Run a seq cell; `interrupt_at = Some(k)` snapshots at round k, drops
+/// everything, re-derives the problem and resumes.
+fn run_seq(cfg: &ExperimentConfig, interrupt_at: Option<usize>) -> anyhow::Result<RunTrace> {
+    let mut z = Vec::new();
+    let mut staleness = Vec::new();
+    let (mut problem, rngs) = make_problem(cfg)?;
+    let mut sim = AsyncSim::new(cfg, &mut problem, rngs)?;
+    let k = interrupt_at.unwrap_or(cfg.iters);
+    for _ in 0..k {
+        sim.step()?;
+        z.push(sim.z().iter().map(|v| v.to_bits()).collect());
+        staleness.push(sim.staleness().to_vec());
+    }
+    if interrupt_at.is_some() && k < cfg.iters {
+        let bytes = snapshot::encode(&sim.snapshot_meta(), &sim.snapshot_body());
+        drop(sim); // the "crash"
+        let (meta, body) = snapshot::decode(&bytes)?;
+        anyhow::ensure!(meta.round == k, "snapshot header round mismatch");
+        let (mut problem2, _) = make_problem(cfg)?;
+        let mut sim = AsyncSim::resume(cfg, &mut problem2, &body)?;
+        while sim.iter() < cfg.iters {
+            sim.step()?;
+            z.push(sim.z().iter().map(|v| v.to_bits()).collect());
+            staleness.push(sim.staleness().to_vec());
+        }
+        return Ok(RunTrace {
+            z,
+            staleness,
+            links: trace_links(sim.accounting()),
+            records: trace_records(sim.recorder()),
+            rng_digest: sim.rng_digest(),
+        });
+    }
+    Ok(RunTrace {
+        z,
+        staleness,
+        links: trace_links(sim.accounting()),
+        records: trace_records(sim.recorder()),
+        rng_digest: sim.rng_digest(),
+    })
+}
+
+/// Event-engine twin of [`run_seq`]; `via_disk` additionally round-trips
+/// the snapshot through a real file.
+fn run_event(
+    cfg: &ExperimentConfig,
+    interrupt_at: Option<usize>,
+    via_disk: Option<&Path>,
+) -> anyhow::Result<RunTrace> {
+    let mut z = Vec::new();
+    let mut staleness = Vec::new();
+    let (mut problem, rngs) = make_problem(cfg)?;
+    let mut eng = EventEngine::new(cfg, &mut problem, rngs)?;
+    let k = interrupt_at.unwrap_or(cfg.iters);
+    for _ in 0..k {
+        eng.step_round()?;
+        z.push(eng.z().iter().map(|v| v.to_bits()).collect());
+        staleness.push(eng.staleness().to_vec());
+    }
+    if interrupt_at.is_some() && k < cfg.iters {
+        let meta = eng.snapshot_meta();
+        let body = eng.snapshot_body();
+        drop(eng); // the "crash"
+        let restored = match via_disk {
+            Some(dir) => {
+                let path = dir.join(format!("{}.qsnap", cfg.name));
+                snapshot::write_file(&path, &meta, &body)?;
+                let (meta2, body2) = snapshot::read_file(&path)?;
+                anyhow::ensure!(meta2.round == k, "snapshot file round mismatch");
+                body2
+            }
+            None => body,
+        };
+        let (mut problem2, _) = make_problem(cfg)?;
+        let mut eng = EventEngine::resume(cfg, &mut problem2, &restored)?;
+        while eng.stats().rounds < cfg.iters {
+            eng.step_round()?;
+            z.push(eng.z().iter().map(|v| v.to_bits()).collect());
+            staleness.push(eng.staleness().to_vec());
+        }
+        return Ok(RunTrace {
+            z,
+            staleness,
+            links: trace_links(eng.accounting()),
+            records: trace_records(eng.recorder()),
+            rng_digest: eng.rng_digest(),
+        });
+    }
+    Ok(RunTrace {
+        z,
+        staleness,
+        links: trace_links(eng.accounting()),
+        records: trace_records(eng.recorder()),
+        rng_digest: eng.rng_digest(),
+    })
+}
+
+fn check_cell(
+    opts: &ResumeSmokeOptions,
+    engine: EngineKind,
+    topo: TopologyKind,
+) -> anyhow::Result<()> {
+    let cfg = cell_cfg(opts, engine, topo);
+    anyhow::ensure!(
+        (1..cfg.iters).contains(&opts.k),
+        "--k must be in 1..{} (got {})",
+        cfg.iters,
+        opts.k
+    );
+    let clock = Stopwatch::new();
+    // the event × star cell also exercises the on-disk container
+    let via_disk = (engine == EngineKind::Event && topo == TopologyKind::Star)
+        .then(|| opts.out_dir.clone());
+    let (straight, resumed) = match engine {
+        EngineKind::Seq => (run_seq(&cfg, None)?, run_seq(&cfg, Some(opts.k))?),
+        EngineKind::Event => (
+            run_event(&cfg, None, None)?,
+            run_event(&cfg, Some(opts.k), via_disk.as_deref())?,
+        ),
+        EngineKind::Threaded => unreachable!("threaded is the replay half"),
+    };
+    anyhow::ensure!(
+        straight.z == resumed.z,
+        "{}: z trajectory diverged after resume at round {}",
+        cfg.name,
+        opts.k
+    );
+    anyhow::ensure!(straight.staleness == resumed.staleness, "{}: staleness diverged", cfg.name);
+    anyhow::ensure!(straight.links == resumed.links, "{}: per-link wire bits diverged", cfg.name);
+    anyhow::ensure!(straight.records == resumed.records, "{}: metric series diverged", cfg.name);
+    anyhow::ensure!(
+        straight.rng_digest == resumed.rng_digest,
+        "{}: final RNG states diverged",
+        cfg.name
+    );
+    println!(
+        "  PASS {:32} checkpoint@{:<3} resume bit-identical ({} rounds, {:.2}s)",
+        cfg.name,
+        opts.k,
+        cfg.iters,
+        clock.elapsed_secs()
+    );
+    Ok(())
+}
+
+/// Record an event-engine timeline under stragglers, replay it through the
+/// threaded runtime, and require the deployment to reproduce the recorded
+/// arrival sets and round count exactly.
+fn check_replay_bridge(opts: &ResumeSmokeOptions) -> anyhow::Result<PathBuf> {
+    let mut cfg = presets::ci_lasso();
+    cfg.name = "resume-smoke-bridge".into();
+    cfg.engine = EngineKind::Event;
+    cfg.iters = if opts.quick { 12 } else { 20 };
+    cfg.mc_trials = 1;
+    cfg.eval_every = cfg.iters;
+    cfg.tau = 4;
+    cfg.p_min = 2;
+    cfg.link = LinkConfig {
+        compute: LatencyModel::Exp(0.004),
+        uplink: LatencyModel::Exp(0.006),
+        downlink: LatencyModel::None,
+        clock_drift: 0.0,
+    };
+    let clock = Stopwatch::new();
+
+    let (mut problem, rngs) = make_problem(&cfg)?;
+    let mut eng = EventEngine::new(&cfg, &mut problem, rngs)?;
+    eng.record_timeline();
+    for _ in 0..cfg.iters {
+        eng.step_round()?;
+    }
+    let tl = eng.take_timeline().expect("recording enabled");
+    drop(eng);
+    let path = opts.out_dir.join("timeline.json");
+    tl.write(&path)?;
+    // the replay consumes the *file*, proving the format round-trips
+    let tl = crate::snapshot::timeline::RecordedTimeline::load(&path)?;
+
+    let mut thr_cfg = cfg.clone();
+    thr_cfg.engine = EngineKind::Threaded;
+    let (problem, _) = make_problem(&thr_cfg)?;
+    let outcome = coordinator::run_threaded_replay(
+        &thr_cfg,
+        Box::new(problem),
+        FaultSpec::default(),
+        &tl,
+    )?;
+    anyhow::ensure!(
+        outcome.round_arrivals.len() == tl.rounds.len(),
+        "bridge: replay fired {} rounds, recording has {}",
+        outcome.round_arrivals.len(),
+        tl.rounds.len()
+    );
+    for (r, (got, want)) in
+        outcome.round_arrivals.iter().zip(tl.rounds.iter().map(|x| &x.arrivals)).enumerate()
+    {
+        anyhow::ensure!(
+            got == want,
+            "bridge: round {r} folded {got:?}, recording prescribes {want:?}"
+        );
+    }
+    println!(
+        "  PASS {:32} threaded replay == recorded schedule ({} rounds, {:.2}s)",
+        "resume-smoke-bridge",
+        tl.rounds.len(),
+        clock.elapsed_secs()
+    );
+    Ok(path)
+}
+
+pub fn run(opts: &ResumeSmokeOptions) -> anyhow::Result<()> {
+    println!("--- resume-parity smoke: checkpoint@k -> resume must be bit-identical ---");
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let topologies =
+        [TopologyKind::Star, TopologyKind::Tree { fanout: 4 }, TopologyKind::Gossip { k: 3 }];
+    for engine in [EngineKind::Seq, EngineKind::Event] {
+        for topo in topologies {
+            check_cell(opts, engine, topo)?;
+        }
+    }
+    let tl_path = check_replay_bridge(opts)?;
+    println!(
+        "--- resume smoke OK; recorded timeline at {} ---",
+        tl_path.display()
+    );
+    Ok(())
+}

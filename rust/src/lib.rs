@@ -40,6 +40,7 @@ pub mod exp;
 pub mod metrics;
 pub mod problems;
 pub mod runtime;
+pub mod snapshot;
 pub mod solver;
 pub mod topology;
 pub mod util;

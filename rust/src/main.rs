@@ -18,7 +18,7 @@ use qadmm::admm::runner::{self, ProblemFactory};
 use qadmm::comm::network::FaultSpec;
 use qadmm::compress::CompressorKind;
 use qadmm::config::{presets, Backend, EngineKind, ProblemKind};
-use qadmm::exp::{ablation, downlink, fig3, fig4, topology};
+use qadmm::exp::{ablation, downlink, fig3, fig4, resume, topology};
 use qadmm::problems::lasso::{LassoConfig, LassoProblem};
 use qadmm::problems::nn::{NnArch, NnProblem};
 use qadmm::problems::Problem;
@@ -46,6 +46,7 @@ fn real_main() -> anyhow::Result<()> {
         "ablation" => cmd_ablation(&mut args),
         "downlink" => cmd_downlink(&mut args),
         "topology" => cmd_topology(&mut args),
+        "resume" => cmd_resume(&mut args),
         "serve" => cmd_serve(&mut args),
         "info" => cmd_info(&mut args),
         "selftest" => cmd_selftest(&mut args),
@@ -68,12 +69,24 @@ USAGE: qadmm <cmd> [--options]
             [--clock-drift E] [--refresh-every K]  (K rounds between full
             recomputes of the incremental consensus sum; 0 = never)
             [--topology star|tree:F|gossip:K] [--p-tier P_g]
+            [--checkpoint-every K] [--checkpoint FILE] [--resume-from FILE]
+            (periodic run snapshots; a resumed run is bit-identical to the
+             uninterrupted one — seq/event engines, single trial)
+            [--record-timeline FILE]   (event engine: log the realized
+             (time, seq, kind) stream + per-round arrival/dispatch sets)
+            [--replay-timeline FILE]   (threaded engine: replay a recorded
+             schedule instead of wall-clock sleeps; star topology)
   fig3      [--iters N] [--trials N] [--backend hlo|native] [--target X]
   fig4      [--iters N] [--trials N] [--arch cnn|mlp] [--train N] [--test N]
   ablation  [--iters N] [--trials N] [--target X]
   downlink  [--iters N] [--trials N] [--target X] [--quick]
   topology  [--iters N] [--trials N] [--target X] [--quick]
             (star vs tree vs gossip convergence-per-bit, event engine)
+  resume    [--iters N] [--k K] [--out DIR] [--quick]
+            (checkpoint/resume parity smoke: every engine x topology cell
+             checkpoints at round K, resumes, and diffs the continued run
+             bit-for-bit against a straight run; also records a timeline
+             and replays it through the threaded bridge)
   serve     --preset NAME [--iters N] [--dup-prob X]   (threaded deployment)
   info      [--artifacts DIR]
   selftest  [--artifacts DIR]
@@ -229,8 +242,33 @@ fn cmd_run(args: &mut Args) -> anyhow::Result<()> {
     let data_dir = PathBuf::from(args.str("data", "data/mnist"));
     let n_train = args.usize("train", 3000);
     let n_test = args.usize("test", 1024);
+    // snapshot / replay plumbing (see the snapshot module docs)
+    let mut single_opts = runner::SingleRunOptions {
+        checkpoint_every: args.usize("checkpoint-every", 0),
+        checkpoint_path: args.str_opt("checkpoint").map(PathBuf::from),
+        resume_from: args.str_opt("resume-from").map(PathBuf::from),
+        record_timeline: args.str_opt("record-timeline").map(PathBuf::from),
+    };
+    if single_opts.checkpoint_every > 0 && single_opts.checkpoint_path.is_none() {
+        // keep every artifact of a run under its --out directory
+        single_opts.checkpoint_path = Some(out_dir.join(format!("{}.qsnap", cfg.name)));
+    }
+    let replay_timeline = args.str_opt("replay-timeline").map(PathBuf::from);
     args.finish()?;
     cfg.validate()?;
+    if replay_timeline.is_some() {
+        anyhow::ensure!(
+            cfg.engine == EngineKind::Threaded,
+            "--replay-timeline drives the threaded runtime (use --engine threaded)"
+        );
+    }
+    if single_opts.is_active() {
+        anyhow::ensure!(
+            cfg.engine != EngineKind::Threaded,
+            "checkpoint/record options drive the in-process engines; the threaded \
+             runtime replays recordings (--replay-timeline)"
+        );
+    }
 
     let needs_hlo = cfg.backend == Backend::Hlo
         || matches!(cfg.problem, ProblemKind::Mlp { .. } | ProblemKind::Cnn { .. });
@@ -281,8 +319,23 @@ fn cmd_run(args: &mut Args) -> anyhow::Result<()> {
         let boxed = factory(seed, &mut rngs.data)?;
         drop(factory);
         let problem: Box<dyn Problem + Send> = unsafe { make_send(boxed) };
-        let outcome =
-            qadmm::coordinator::run_threaded(&cfg, problem, FaultSpec::default())?;
+        let outcome = match &replay_timeline {
+            Some(path) => {
+                let tl = qadmm::snapshot::timeline::RecordedTimeline::load(path)?;
+                println!(
+                    "replaying {} recorded rounds from {} (no injected sleeps)",
+                    tl.rounds.len(),
+                    path.display()
+                );
+                qadmm::coordinator::run_threaded_replay(
+                    &cfg,
+                    problem,
+                    FaultSpec::default(),
+                    &tl,
+                )?
+            }
+            None => qadmm::coordinator::run_threaded(&cfg, problem, FaultSpec::default())?,
+        };
         std::fs::create_dir_all(&out_dir)?;
         let csv = out_dir.join(format!("{}.csv", cfg.name));
         outcome.recorder.write_csv(&csv)?;
@@ -290,6 +343,31 @@ fn cmd_run(args: &mut Args) -> anyhow::Result<()> {
             println!(
                 "final: iter={} accuracy={:.3e} test_acc={:.4} loss={:.4e} bits/param={:.1}",
                 last.iter, last.accuracy, last.test_acc, last.loss, outcome.normalized_bits
+            );
+        }
+        println!("wrote {}", csv.display());
+        return Ok(());
+    }
+    if single_opts.is_active() {
+        // Checkpoint/resume/recording is single-trial by construction: a
+        // snapshot is ONE run's state (resume MC sweeps trial by trial).
+        if cfg.mc_trials > 1 {
+            println!("note: checkpoint/record runs a single trial; --trials ignored");
+            cfg.mc_trials = 1;
+        }
+        let rec = runner::run_single(&cfg, factory.as_mut(), &single_opts)?;
+        drop(factory);
+        std::fs::create_dir_all(&out_dir)?;
+        let csv = out_dir.join(format!("{}.csv", cfg.name));
+        rec.write_csv(&csv)?;
+        std::fs::write(
+            out_dir.join(format!("{}.config.json", cfg.name)),
+            cfg.to_json().to_string_pretty(),
+        )?;
+        if let Some(last) = rec.last() {
+            println!(
+                "final: iter={} accuracy={:.3e} test_acc={:.4} loss={:.4e} bits/param={:.1}",
+                last.iter, last.accuracy, last.test_acc, last.loss, last.comm_bits
             );
         }
         println!("wrote {}", csv.display());
@@ -406,6 +484,18 @@ fn cmd_topology(args: &mut Args) -> anyhow::Result<()> {
     args.finish()?;
     topology::run(&opts)?;
     Ok(())
+}
+
+fn cmd_resume(args: &mut Args) -> anyhow::Result<()> {
+    let defaults = resume::ResumeSmokeOptions::default();
+    let opts = resume::ResumeSmokeOptions {
+        iters: args.usize("iters", defaults.iters),
+        k: args.usize("k", defaults.k),
+        out_dir: PathBuf::from(args.str("out", "out")),
+        quick: args.flag("quick"),
+    };
+    args.finish()?;
+    resume::run(&opts)
 }
 
 fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {

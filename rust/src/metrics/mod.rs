@@ -4,6 +4,7 @@
 
 pub mod summary;
 
+use crate::snapshot::codec::{Pack, Reader, Writer};
 use crate::util::json::Json;
 
 /// One measured point along a run.
@@ -88,6 +89,42 @@ impl RunRecorder {
 
     pub fn last(&self) -> Option<&IterRecord> {
         self.records.last()
+    }
+}
+
+impl Pack for IterRecord {
+    fn pack(&self, w: &mut Writer) {
+        w.put_usize(self.iter);
+        w.put_f64(self.comm_bits);
+        w.put_f64(self.accuracy);
+        w.put_f64(self.test_acc);
+        w.put_f64(self.loss);
+        w.put_usize(self.active_nodes);
+        w.put_f64(self.wall_s);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        Ok(Self {
+            iter: r.get_usize()?,
+            comm_bits: r.get_f64()?,
+            accuracy: r.get_f64()?,
+            test_acc: r.get_f64()?,
+            loss: r.get_f64()?,
+            active_nodes: r.get_usize()?,
+            wall_s: r.get_f64()?,
+        })
+    }
+}
+
+/// The metric series rides in the snapshot so a resumed run emits one
+/// continuous CSV. `wall_s` of pre-checkpoint records keeps the original
+/// process's clock — it is the one field excluded from the bit-identity
+/// contract (wall time is not run state).
+impl Pack for RunRecorder {
+    fn pack(&self, w: &mut Writer) {
+        self.records.pack(w);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        Ok(Self { records: Vec::<IterRecord>::unpack(r)? })
     }
 }
 

@@ -45,6 +45,8 @@
 //! bits. The threaded coordinator folds in real arrival order — no bitwise
 //! claim there, only the ≤1e-10 drift bound.
 
+use crate::snapshot::codec::{Pack, Reader, Writer};
+
 /// A Kahan-compensated running vector sum: the *mergeable partial sum*
 /// primitive shared by the server's [`ConsensusAccumulator`] and the
 /// per-aggregator pending buffers of hierarchical fan-in topologies
@@ -178,6 +180,35 @@ impl ConsensusAccumulator {
         for (x, u) in rows {
             self.fold(x, u);
         }
+    }
+}
+
+impl Pack for KahanVec {
+    fn pack(&self, w: &mut Writer) {
+        self.sum.pack(w);
+        self.comp.pack(w);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        let sum = Vec::<f64>::unpack(r)?;
+        let comp = Vec::<f64>::unpack(r)?;
+        anyhow::ensure!(
+            sum.len() == comp.len(),
+            "snapshot kahan vec: sum/compensation length mismatch"
+        );
+        Ok(Self { sum, comp })
+    }
+}
+
+/// The compensation terms travel with the sum: restoring only `value()`
+/// would discard the low-order bits and break the bit-identity contract on
+/// the very next fold.
+impl Pack for ConsensusAccumulator {
+    fn pack(&self, w: &mut Writer) {
+        self.state.pack(w);
+        w.put_usize(self.refresh_every);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        Ok(Self { state: KahanVec::unpack(r)?, refresh_every: r.get_usize()? })
     }
 }
 

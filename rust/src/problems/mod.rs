@@ -8,6 +8,7 @@ pub mod logreg;
 pub mod mnist;
 pub mod nn;
 
+use crate::snapshot::codec::{Pack, Reader, Writer};
 use crate::util::rng::Pcg64;
 
 /// Contiguous n×m row-major storage for per-node vectors (one row per
@@ -77,6 +78,27 @@ impl Arena {
     /// The whole n·m buffer (row-major).
     pub fn flat(&self) -> &[f64] {
         &self.data
+    }
+}
+
+impl Pack for Arena {
+    fn pack(&self, w: &mut Writer) {
+        w.put_usize(self.m);
+        self.data.pack(w);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        let m = r.get_usize()?;
+        let data = Vec::<f64>::unpack(r)?;
+        if m == 0 {
+            anyhow::ensure!(data.is_empty(), "snapshot arena: zero-width rows with data");
+        } else {
+            anyhow::ensure!(
+                data.len() % m == 0,
+                "snapshot arena: {} values do not tile rows of width {m}",
+                data.len()
+            );
+        }
+        Ok(Self { m, data })
     }
 }
 

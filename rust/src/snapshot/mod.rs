@@ -1,0 +1,237 @@
+//! Snapshot/replay subsystem: serializable run state, checkpoint/resume of
+//! the virtual timeline, and recorded-timeline replay.
+//!
+//! The paper's experiments are long asynchronous runs whose *trajectory*
+//! is the result — a 10k-node run that dies at round 9k used to restart
+//! from zero, and a straggler schedule the event engine discovered could
+//! not be reproduced in the threaded deployment. This module owns the
+//! three layers that fix that:
+//!
+//! * [`codec`] — the in-house versioned binary codec ([`codec::Pack`]):
+//!   every piece of mutable per-run state — engine arenas, the event queue
+//!   and its seq counter, per-node FIFO inboxes and monotone clamps,
+//!   consensus accumulators, aggregator-tier partials, error-feedback
+//!   residuals, estimate banks, comm accounting, and every forked PCG64
+//!   stream — packs into one canonical byte body, and unpacks back with
+//!   full bounds/tag validation (truncation or corruption is `Err`, never
+//!   a panic).
+//! * [`SnapshotMeta`] + the container ([`codec::encode_container`]) — a
+//!   human-readable JSON header (engine, round, dimensions, full config)
+//!   in front of the checksummed binary body. `write_file`/`read_file`
+//!   wrap that in atomic-rename file IO.
+//! * [`timeline`] — recorded `(time, seq, kind)` event streams + per-round
+//!   arrival/dispatch sets from the event engine, replayable by the
+//!   threaded runtime ([`crate::coordinator::run_threaded_replay`]).
+//!
+//! # What a snapshot does and does not capture
+//!
+//! Captured: everything the engines mutate per round (see the field lists
+//! in [`crate::admm::engine`] / [`crate::admm::sim`]), so a resumed run is
+//! **bit-identical** to the uninterrupted one — z trajectory, staleness,
+//! per-link wire bits, RNG states (`tests/snapshot_parity.rs`). Not
+//! captured: the problem *data* (re-derived from the seed by the problem
+//! factory — storing n·h·m matrices would dwarf the state), wall-clock
+//! timestamps (`wall_s` in the metric records restarts with the resumed
+//! process), and any state a problem holds outside the engine (native
+//! LASSO/logreg hold none; NN runtime state lives in the compute service,
+//! so NN runs refuse to checkpoint rather than resume wrong).
+
+pub mod codec;
+pub mod timeline;
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Human-readable snapshot header: enough to identify the run without
+/// decoding the body, plus the full config for resume validation.
+#[derive(Clone, Debug)]
+pub struct SnapshotMeta {
+    /// Engine that wrote the snapshot (`seq` | `event`).
+    pub engine: String,
+    /// Consensus rounds completed at capture time.
+    pub round: usize,
+    /// Fleet size.
+    pub n: usize,
+    /// Model dimension M.
+    pub m: usize,
+    /// Base seed (the problem factory re-derives data from it).
+    pub seed: u64,
+    /// The full experiment config JSON at capture time.
+    pub config: Json,
+}
+
+impl SnapshotMeta {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::Str("qadmm-run-snapshot".into())),
+            ("engine", Json::Str(self.engine.clone())),
+            ("round", Json::Num(self.round as f64)),
+            ("n", Json::Num(self.n as f64)),
+            ("m", Json::Num(self.m as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("config", self.config.clone()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            j.get("kind").and_then(Json::as_str) == Some("qadmm-run-snapshot"),
+            "not a qadmm run snapshot header"
+        );
+        let field = |k: &str| -> anyhow::Result<usize> {
+            j.expect(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("snapshot header '{k}' must be an integer"))
+        };
+        Ok(Self {
+            engine: j
+                .expect("engine")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("snapshot header 'engine' must be a string"))?
+                .to_string(),
+            round: field("round")?,
+            n: field("n")?,
+            m: field("m")?,
+            seed: field("seed")? as u64,
+            config: j.expect("config")?.clone(),
+        })
+    }
+}
+
+/// The portion of a config that must match for a resume to be sound:
+/// everything except the run *length* knobs (`iters`, `mc_trials`) and the
+/// cosmetic `name` — resuming with more rounds than the original plan is
+/// exactly the long-run use case, but resuming under a different
+/// compressor, topology, τ, latency model or seed would silently produce
+/// a trajectory that belongs to neither run.
+pub fn config_resume_digest(config: &Json) -> String {
+    match config {
+        Json::Obj(map) => {
+            let mut m = map.clone();
+            m.remove("iters");
+            m.remove("mc_trials");
+            m.remove("name");
+            Json::Obj(m).to_string_compact()
+        }
+        other => other.to_string_compact(),
+    }
+}
+
+/// Encode a snapshot (header + body) into one container byte vector.
+pub fn encode(meta: &SnapshotMeta, body: &[u8]) -> Vec<u8> {
+    codec::encode_container(&meta.to_json(), body)
+}
+
+/// Decode a container produced by [`encode`].
+pub fn decode(bytes: &[u8]) -> anyhow::Result<(SnapshotMeta, Vec<u8>)> {
+    let (header, body) = codec::decode_container(bytes)?;
+    Ok((SnapshotMeta::from_json(&header)?, body))
+}
+
+/// Write a snapshot with write-to-tmp + fsync + atomic rename: a crash
+/// mid-write must not destroy the previous checkpoint, and a crash right
+/// *after* the rename must not leave a renamed-but-unflushed file — the
+/// whole point is surviving crashes, so the tmp file is synced to disk
+/// before it replaces the old snapshot.
+pub fn write_file(path: &Path, meta: &SnapshotMeta, body: &[u8]) -> anyhow::Result<()> {
+    use std::io::Write as _;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = path.with_extension("qsnap.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&encode(meta, body))?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+pub fn read_file(path: &Path) -> anyhow::Result<(SnapshotMeta, Vec<u8>)> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("cannot read snapshot {}: {e}", path.display()))?;
+    decode(&bytes).map_err(|e| anyhow::anyhow!("snapshot {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn meta() -> SnapshotMeta {
+        SnapshotMeta {
+            engine: "event".into(),
+            round: 31,
+            n: 16,
+            m: 200,
+            seed: 2025,
+            config: presets::ci_lasso().to_json(),
+        }
+    }
+
+    #[test]
+    fn meta_round_trips() {
+        let m = meta();
+        let back = SnapshotMeta::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.engine, "event");
+        assert_eq!(back.round, 31);
+        assert_eq!((back.n, back.m, back.seed), (16, 200, 2025));
+        assert_eq!(back.config, m.config);
+    }
+
+    #[test]
+    fn encode_decode_round_trips() {
+        let body = vec![9u8; 1000];
+        let bytes = encode(&meta(), &body);
+        let (m, b) = decode(&bytes).unwrap();
+        assert_eq!(m.round, 31);
+        assert_eq!(b, body);
+    }
+
+    #[test]
+    fn digest_ignores_length_knobs_but_not_semantics() {
+        let base = presets::ci_lasso();
+        let mut longer = base.clone();
+        longer.iters = 100_000;
+        longer.mc_trials = 1;
+        longer.name = "renamed".into();
+        assert_eq!(
+            config_resume_digest(&base.to_json()),
+            config_resume_digest(&longer.to_json())
+        );
+        let mut different = base.clone();
+        different.tau = base.tau + 1;
+        assert_ne!(
+            config_resume_digest(&base.to_json()),
+            config_resume_digest(&different.to_json())
+        );
+        let mut compressor = base.clone();
+        compressor.compressor = crate::compress::CompressorKind::Sign;
+        assert_ne!(
+            config_resume_digest(&base.to_json()),
+            config_resume_digest(&compressor.to_json())
+        );
+    }
+
+    #[test]
+    fn file_round_trip_is_atomic_renamed() {
+        let dir = std::env::temp_dir().join("qadmm-snapshot-test");
+        let path = dir.join("run.qsnap");
+        write_file(&path, &meta(), &[1, 2, 3]).unwrap();
+        assert!(!path.with_extension("qsnap.tmp").exists(), "tmp file left behind");
+        let (m, b) = read_file(&path).unwrap();
+        assert_eq!(m.n, 16);
+        assert_eq!(b, vec![1, 2, 3]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn non_snapshot_header_rejected() {
+        let j = Json::obj(vec![("kind", Json::Str("something-else".into()))]);
+        assert!(SnapshotMeta::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,330 @@
+//! Recorded virtual timelines: what the event engine actually did, written
+//! down so other runtimes can replay it.
+//!
+//! A recording has two granularities:
+//!
+//! * **rounds** — per consensus fire: the virtual fire time, the arrival
+//!   set the server folded (ascending node ids, exactly the engine's
+//!   `arrived` set), and the dispatch set (nodes selected *and* idle, i.e.
+//!   the ones whose local update this broadcast started). This is the part
+//!   the threaded replay bridge consumes: it pins each node's update to
+//!   the consensus round that incorporated it in the recording, so a
+//!   deployment-shaped run reproduces the engine's partial-participation
+//!   schedule without any wall-clock sleeps.
+//! * **events** — the realized `(time, seq, kind, idx)` stream the event
+//!   queue popped, for audit and offline analysis (who computed when, what
+//!   overtook what). Replay does not need it; `--record-timeline` logs it
+//!   so a schedule can be *explained*, not just reproduced.
+//!
+//! The format is plain JSON via [`crate::util::json`] — recordings are
+//! meant to be read, diffed and committed as CI artifacts; binary density
+//! matters for snapshots (engine arenas), not for schedules.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Format version written into every recording.
+pub const TIMELINE_VERSION: usize = 1;
+
+/// Cap on the recorded audit event stream. Replay needs only the
+/// per-round arrival sets (always recorded in full); the `(time, seq,
+/// kind)` stream is O(rounds·n) and would dominate memory on the long
+/// 10k-node runs this subsystem targets, so past this many events the
+/// recorder stops appending and sets an explicit `events_truncated`
+/// marker — a bounded recording that says so, never a silent one.
+pub const MAX_RECORDED_EVENTS: usize = 1_000_000;
+
+/// One popped event of the virtual timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimelineEvent {
+    pub time: f64,
+    pub seq: u64,
+    /// Event kind label (`compute-done` | `msg-arrive` | `downlink-arrive`
+    /// | `aggregate-arrive`).
+    pub kind: String,
+    /// The node (or aggregator) the event belongs to.
+    pub idx: usize,
+}
+
+/// One consensus round as the engine realized it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimelineRound {
+    /// Virtual time of the fire.
+    pub time: f64,
+    /// Ascending node ids whose updates this round incorporated.
+    pub arrivals: Vec<usize>,
+    /// Ascending node ids dispatched by this round's broadcast (selected
+    /// and idle at fire time). Informational for the threaded bridge —
+    /// deployment nodes recompute on inclusion — but it pins the oracle's
+    /// realized schedule for audit.
+    pub dispatches: Vec<usize>,
+}
+
+/// A full recorded run of the event engine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecordedTimeline {
+    /// Engine that produced the recording (`event`).
+    pub engine: String,
+    /// Fleet size the recording is valid for.
+    pub n: usize,
+    /// Base seed of the recorded run (provenance; replay does not use it).
+    pub seed: u64,
+    pub rounds: Vec<TimelineRound>,
+    pub events: Vec<TimelineEvent>,
+    /// True when the event stream hit [`MAX_RECORDED_EVENTS`] and later
+    /// events were dropped (the rounds are always complete).
+    pub events_truncated: bool,
+}
+
+impl RecordedTimeline {
+    pub fn new(engine: &str, n: usize, seed: u64) -> Self {
+        Self {
+            engine: engine.to_string(),
+            n,
+            seed,
+            rounds: Vec::new(),
+            events: Vec::new(),
+            events_truncated: false,
+        }
+    }
+
+    pub fn push_event(&mut self, time: f64, seq: u64, kind: &str, idx: usize) {
+        if self.events.len() >= MAX_RECORDED_EVENTS {
+            self.events_truncated = true;
+            return;
+        }
+        self.events.push(TimelineEvent { time, seq, kind: kind.to_string(), idx });
+    }
+
+    pub fn push_round(&mut self, time: f64, arrivals: Vec<usize>, dispatches: Vec<usize>) {
+        self.rounds.push(TimelineRound { time, arrivals, dispatches });
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rounds = self
+            .rounds
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("t", Json::Num(r.time)),
+                    (
+                        "arrivals",
+                        Json::Arr(r.arrivals.iter().map(|&i| Json::Num(i as f64)).collect()),
+                    ),
+                    (
+                        "dispatches",
+                        Json::Arr(
+                            r.dispatches.iter().map(|&i| Json::Num(i as f64)).collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("t", Json::Num(e.time)),
+                    ("seq", Json::Num(e.seq as f64)),
+                    ("kind", Json::Str(e.kind.clone())),
+                    ("idx", Json::Num(e.idx as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::Num(TIMELINE_VERSION as f64)),
+            ("engine", Json::Str(self.engine.clone())),
+            ("n", Json::Num(self.n as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("rounds", Json::Arr(rounds)),
+            ("events", Json::Arr(events)),
+            ("events_truncated", Json::Bool(self.events_truncated)),
+        ])
+    }
+
+    /// Parse and validate a recording. Arrival/dispatch sets must be
+    /// strictly ascending and in `0..n`, so the replay bridge can index
+    /// node tables without bounds anxiety.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let version = j
+            .expect("version")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("timeline version must be an integer"))?;
+        anyhow::ensure!(
+            version == TIMELINE_VERSION,
+            "timeline version {version} not supported (expected {TIMELINE_VERSION})"
+        );
+        let engine = j
+            .expect("engine")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("timeline engine must be a string"))?
+            .to_string();
+        let n = j
+            .expect("n")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("timeline n must be an integer"))?;
+        anyhow::ensure!(n >= 1, "timeline n must be >= 1");
+        let seed = j
+            .expect("seed")?
+            .as_f64()
+            .filter(|s| *s >= 0.0 && s.fract() == 0.0)
+            .ok_or_else(|| anyhow::anyhow!("timeline seed must be a non-negative integer"))?
+            as u64;
+
+        let id_list = |v: &Json, what: &str| -> anyhow::Result<Vec<usize>> {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("timeline {what} must be an array"))?;
+            let mut out = Vec::with_capacity(arr.len());
+            for item in arr {
+                let id = item
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("timeline {what} entry is not an id"))?;
+                anyhow::ensure!(id < n, "timeline {what} id {id} out of range (n = {n})");
+                if let Some(&last) = out.last() {
+                    anyhow::ensure!(
+                        id > last,
+                        "timeline {what} ids must be strictly ascending"
+                    );
+                }
+                out.push(id);
+            }
+            Ok(out)
+        };
+
+        let rounds_json = j
+            .expect("rounds")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("timeline rounds must be an array"))?;
+        let mut rounds = Vec::new();
+        for (i, rj) in rounds_json.iter().enumerate() {
+            let time = rj
+                .expect("t")?
+                .as_f64()
+                .filter(|t| t.is_finite() && *t >= 0.0)
+                .ok_or_else(|| anyhow::anyhow!("round {i}: bad fire time"))?;
+            let arrivals = id_list(rj.expect("arrivals")?, "arrivals")?;
+            anyhow::ensure!(!arrivals.is_empty(), "round {i}: empty arrival set");
+            let dispatches = id_list(rj.expect("dispatches")?, "dispatches")?;
+            rounds.push(TimelineRound { time, arrivals, dispatches });
+        }
+        anyhow::ensure!(!rounds.is_empty(), "timeline has no rounds");
+
+        let events_json = j
+            .expect("events")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("timeline events must be an array"))?;
+        let mut events = Vec::new();
+        for (i, ej) in events_json.iter().enumerate() {
+            events.push(TimelineEvent {
+                time: ej
+                    .expect("t")?
+                    .as_f64()
+                    .filter(|t| t.is_finite() && *t >= 0.0)
+                    .ok_or_else(|| anyhow::anyhow!("event {i}: bad time"))?,
+                seq: ej
+                    .expect("seq")?
+                    .as_f64()
+                    .filter(|s| *s >= 0.0 && s.fract() == 0.0)
+                    .ok_or_else(|| anyhow::anyhow!("event {i}: bad seq"))?
+                    as u64,
+                kind: ej
+                    .expect("kind")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("event {i}: bad kind"))?
+                    .to_string(),
+                idx: ej
+                    .expect("idx")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("event {i}: bad idx"))?,
+            });
+        }
+        let events_truncated =
+            j.get("events_truncated").and_then(Json::as_bool).unwrap_or(false);
+        Ok(Self { engine, n, seed, rounds, events, events_truncated })
+    }
+
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read timeline {}: {e}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("timeline {} is not json: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RecordedTimeline {
+        let mut tl = RecordedTimeline::new("event", 4, 99);
+        tl.push_event(0.0, 0, "compute-done", 2);
+        tl.push_event(0.5, 3, "msg-arrive", 2);
+        tl.push_round(0.5, vec![0, 2], vec![1, 3]);
+        tl.push_round(1.25, vec![1, 3], vec![0]);
+        tl
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let tl = sample();
+        let back = RecordedTimeline::from_json(&tl.to_json()).unwrap();
+        assert_eq!(back, tl);
+        // the explicit-truncation marker survives the round trip too
+        let mut capped = sample();
+        capped.events_truncated = true;
+        let back = RecordedTimeline::from_json(&capped.to_json()).unwrap();
+        assert!(back.events_truncated);
+    }
+
+    #[test]
+    fn rejects_malformed_recordings() {
+        let tl = sample();
+        // out-of-range id
+        let mut bad = tl.clone();
+        bad.rounds[0].arrivals = vec![0, 9];
+        assert!(RecordedTimeline::from_json(&bad.to_json()).is_err());
+        // non-ascending arrivals
+        let mut bad = tl.clone();
+        bad.rounds[0].arrivals = vec![2, 0];
+        assert!(RecordedTimeline::from_json(&bad.to_json()).is_err());
+        // empty arrival set
+        let mut bad = tl.clone();
+        bad.rounds[1].arrivals.clear();
+        assert!(RecordedTimeline::from_json(&bad.to_json()).is_err());
+        // no rounds at all
+        let mut bad = tl.clone();
+        bad.rounds.clear();
+        assert!(RecordedTimeline::from_json(&bad.to_json()).is_err());
+        // wrong version
+        let mut j = tl.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".into(), Json::Num(999.0));
+        }
+        assert!(RecordedTimeline::from_json(&j).is_err());
+        // garbage
+        assert!(RecordedTimeline::from_json(&Json::Num(3.0)).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let tl = sample();
+        let dir = std::env::temp_dir().join("qadmm-timeline-test");
+        let path = dir.join("tl.json");
+        tl.write(&path).unwrap();
+        let back = RecordedTimeline::load(&path).unwrap();
+        assert_eq!(back, tl);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -26,6 +26,7 @@ use super::TopologyKind;
 use crate::compress::{Compressed, Compressor};
 use crate::problems::accumulator::KahanVec;
 use crate::problems::Arena;
+use crate::snapshot::codec::{Pack, Reader, Writer};
 use crate::util::rng::Pcg64;
 
 /// One re-quantized partial-sum forward in flight toward the server.
@@ -216,6 +217,124 @@ impl AggregatorTier {
             total.add(self.pending_u[g].value());
         }
         total.value().to_vec()
+    }
+}
+
+impl AggregatorTier {
+    /// The topology this tier realizes (snapshot/resume validation).
+    pub fn kind(&self) -> TopologyKind {
+        self.kind
+    }
+
+    /// Per-tier threshold (snapshot/resume validation).
+    pub fn p_tier(&self) -> usize {
+        self.p_tier
+    }
+
+    /// Whether the re-quantization residual is retained per hop.
+    pub fn error_feedback(&self) -> bool {
+        self.error_feedback
+    }
+}
+
+impl Pack for AggForward {
+    fn pack(&self, w: &mut Writer) {
+        self.cx.pack(w);
+        self.cu.pack(w);
+        self.children.pack(w);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        Ok(Self {
+            cx: Compressed::unpack(r)?,
+            cu: Compressed::unpack(r)?,
+            children: Vec::<(usize, f64)>::unpack(r)?,
+        })
+    }
+}
+
+/// A tier snapshot is self-contained: topology, thresholds, every pending
+/// Kahan partial (sum *and* compensation — the per-hop error-feedback
+/// residual lives there), the routed/in-transit bookkeeping, and the
+/// server-side ŝ_g estimate banks.
+impl Pack for AggregatorTier {
+    fn pack(&self, w: &mut Writer) {
+        self.kind.label().pack(w);
+        w.put_usize(self.n_aggs);
+        w.put_usize(self.p_tier);
+        w.put_bool(self.error_feedback);
+        self.pending_x.pack(w);
+        self.pending_u.pack(w);
+        self.children.pack(w);
+        self.in_transit.pack(w);
+        self.assigned.pack(w);
+        self.sx.pack(w);
+        self.su.pack(w);
+        w.put_u64(self.forwards);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        let kind = TopologyKind::parse(&String::unpack(r)?)?;
+        let n_aggs = r.get_usize()?;
+        let p_tier = r.get_usize()?;
+        let error_feedback = r.get_bool()?;
+        let pending_x = Vec::<KahanVec>::unpack(r)?;
+        let pending_u = Vec::<KahanVec>::unpack(r)?;
+        let children = Vec::<Vec<(usize, f64)>>::unpack(r)?;
+        let in_transit = Vec::<usize>::unpack(r)?;
+        let assigned = Vec::<Option<usize>>::unpack(r)?;
+        let sx = Arena::unpack(r)?;
+        let su = Arena::unpack(r)?;
+        let forwards = r.get_u64()?;
+        anyhow::ensure!(n_aggs >= 1, "snapshot tier: zero aggregators");
+        anyhow::ensure!(p_tier >= 1, "snapshot tier: p_tier must be >= 1");
+        anyhow::ensure!(
+            kind.n_aggregators(assigned.len()) == n_aggs,
+            "snapshot tier: {} aggregators inconsistent with {} leaves under {}",
+            n_aggs,
+            assigned.len(),
+            kind.label()
+        );
+        for v in [pending_x.len(), pending_u.len(), children.len(), in_transit.len()] {
+            anyhow::ensure!(v == n_aggs, "snapshot tier: per-aggregator table length mismatch");
+        }
+        anyhow::ensure!(
+            sx.n_rows() == n_aggs && su.n_rows() == n_aggs && sx.dim() == su.dim(),
+            "snapshot tier: partial-sum bank shape mismatch"
+        );
+        for k in pending_x.iter().chain(&pending_u) {
+            anyhow::ensure!(
+                k.dim() == sx.dim(),
+                "snapshot tier: pending buffer width {} != bank width {}",
+                k.dim(),
+                sx.dim()
+            );
+        }
+        for (leaf, a) in assigned.iter().enumerate() {
+            if let Some(g) = a {
+                anyhow::ensure!(*g < n_aggs, "snapshot tier: leaf {leaf} routed out of range");
+            }
+        }
+        for group in &children {
+            for (leaf, _) in group {
+                anyhow::ensure!(
+                    *leaf < assigned.len(),
+                    "snapshot tier: pending child {leaf} out of range"
+                );
+            }
+        }
+        Ok(Self {
+            kind,
+            n_aggs,
+            p_tier,
+            error_feedback,
+            pending_x,
+            pending_u,
+            children,
+            in_transit,
+            assigned,
+            sx,
+            su,
+            forwards,
+        })
     }
 }
 

@@ -352,10 +352,17 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                 }
                 Some(_) => {
-                    // advance one UTF-8 char
+                    // advance one UTF-8 char; a decode failure (or an
+                    // empty tail on a malformed slice) is a parse error,
+                    // never a panic — this parser also reads *foreign*
+                    // files (snapshot headers, recorded timelines), not
+                    // just our own output
                     let rest = std::str::from_utf8(&self.bytes[self.pos..])
                         .map_err(|_| self.err("invalid utf8"))?;
-                    let c = rest.chars().next().unwrap();
+                    let c = rest
+                        .chars()
+                        .next()
+                        .ok_or_else(|| self.err("unterminated string"))?;
                     s.push(c);
                     self.pos += c.len_utf8();
                 }
@@ -435,6 +442,50 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    /// Truncated escapes and malformed tails must yield `Err`, never a
+    /// panic: the parser reads snapshot headers and recorded timelines,
+    /// i.e. files that may be cut off mid-write.
+    #[test]
+    fn truncated_escapes_error_instead_of_panicking() {
+        for s in [
+            "\"abc\\",          // backslash at end of input
+            "\"\\",             // nothing after the escape
+            "\"\\u",            // \u with no digits
+            "\"\\u12",          // \u with too few digits
+            "\"\\u123",         // one digit short
+            "\"\\uzzzz\"",      // non-hex digits
+            "\"\\q\"",          // unknown escape
+            "{\"k\": \"v\\",    // truncated escape nested in an object
+            "[\"a\", \"b\\t",   // truncated string in an array
+        ] {
+            assert!(Json::parse(s).is_err(), "{s:?} should be a parse error");
+        }
+        // the happy escapes still work
+        assert_eq!(Json::parse("\"\\u0041\\n\"").unwrap(), Json::Str("A\n".into()));
+    }
+
+    /// Byte-noise fuzz: arbitrary prefixes/mutations of valid documents
+    /// must parse or error, never panic.
+    #[test]
+    fn garbage_inputs_never_panic() {
+        let base = r#"{"a": [1, 2.5e-3, "x\ny", {"b": null}], "c": true}"#;
+        for cut in 0..base.len() {
+            if base.is_char_boundary(cut) {
+                let _ = Json::parse(&base[..cut]);
+            }
+        }
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(11);
+        let bytes = base.as_bytes();
+        for _ in 0..500 {
+            let mut noisy = bytes.to_vec();
+            let i = rng.gen_range(noisy.len());
+            noisy[i] = (rng.next_u32() % 128) as u8; // keep it utf-8
+            if let Ok(text) = std::str::from_utf8(&noisy) {
+                let _ = Json::parse(text);
+            }
+        }
     }
 
     #[test]

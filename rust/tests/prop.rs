@@ -564,6 +564,188 @@ fn prop_wire_decode_rejects_corruption_or_stays_sane() {
     });
 }
 
+/// Snapshot round-trip (ISSUE 5 satellite): serialize `RunState` at a
+/// random round under random n/P/τ/compressor/topology (event engine under
+/// nonzero delays on every leg, so the snapshot catches events in flight),
+/// restore onto a seed-re-derived problem, and require the continued
+/// trajectory — z, staleness, per-link wire bits, final RNG states — to be
+/// bit-exact against the uninterrupted run.
+#[test]
+fn prop_snapshot_resume_continues_bit_exact() {
+    let kinds = [
+        CompressorKind::Identity,
+        CompressorKind::Qsgd { bits: 3 },
+        CompressorKind::Qsgd { bits: 8 },
+        CompressorKind::Sign,
+        CompressorKind::TopK { frac_permille: 150 },
+        CompressorKind::RandK { frac_permille: 250 },
+    ];
+    for_all(8, 707, |rng| {
+        let n = 3 + rng.gen_range(8);
+        let m = 4 + rng.gen_range(16);
+        let tau = 2 + rng.gen_range(3);
+        let p_min = 1 + rng.gen_range(n);
+        let iters = 12 + rng.gen_range(10);
+        let k = 1 + rng.gen_range(iters - 1);
+        let mut cfg = presets::ci_lasso();
+        cfg.name = format!("prop-snap-n{n}-tau{tau}-p{p_min}-k{k}");
+        cfg.problem = ProblemKind::Lasso { m, h: 4, n, rho: 25.0, theta: 0.1 };
+        cfg.compressor = kinds[rng.gen_range(kinds.len())];
+        cfg.tau = tau;
+        cfg.p_min = p_min;
+        cfg.iters = iters;
+        cfg.mc_trials = 1;
+        cfg.eval_every = 1;
+        cfg.consensus_refresh_every = [0usize, 1, 5][rng.gen_range(3)];
+        cfg.seed = rng.next_u64() >> 12; // keep header json integer-exact
+        cfg.topology = match rng.gen_range(3) {
+            0 => TopologyKind::Star,
+            1 => TopologyKind::Tree { fanout: 1 + rng.gen_range(n) },
+            _ => TopologyKind::Gossip { k: 1 + rng.gen_range(n.min(4)) },
+        };
+        cfg.p_tier = 1 + rng.gen_range(3);
+        cfg.engine = qadmm::config::EngineKind::Event;
+        cfg.link = LinkConfig {
+            compute: LatencyModel::Exp(0.01),
+            uplink: LatencyModel::Exp(0.01),
+            downlink: LatencyModel::Exp(0.015),
+            clock_drift: 0.1,
+        };
+        let lcfg = LassoConfig { m, h: 4, n, rho: 25.0, theta: 0.1 };
+
+        let make = |cfg: &qadmm::config::ExperimentConfig| {
+            let mut rngs = TrialRngs::new(cfg.seed);
+            let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+            p.set_reference_optimum(1.0);
+            (p, rngs)
+        };
+
+        // straight run
+        let (mut p1, rngs1) = make(&cfg);
+        let mut straight = EventEngine::new(&cfg, &mut p1, rngs1).unwrap();
+        let mut z_straight: Vec<Vec<u64>> = Vec::new();
+        for _ in 0..iters {
+            straight.step_round().unwrap();
+            z_straight.push(straight.z().iter().map(|v| v.to_bits()).collect());
+        }
+
+        // interrupted at k + resumed through the full container
+        let (mut p2, rngs2) = make(&cfg);
+        let mut eng = EventEngine::new(&cfg, &mut p2, rngs2).unwrap();
+        let mut z_resumed: Vec<Vec<u64>> = Vec::new();
+        for _ in 0..k {
+            eng.step_round().unwrap();
+            z_resumed.push(eng.z().iter().map(|v| v.to_bits()).collect());
+        }
+        let bytes = qadmm::snapshot::encode(&eng.snapshot_meta(), &eng.snapshot_body());
+        drop(eng);
+        let (meta, body) = qadmm::snapshot::decode(&bytes).unwrap();
+        assert_eq!(meta.round, k);
+        let (mut p3, _) = make(&cfg);
+        let mut eng = EventEngine::resume(&cfg, &mut p3, &body).unwrap();
+        while eng.stats().rounds < iters {
+            eng.step_round().unwrap();
+            z_resumed.push(eng.z().iter().map(|v| v.to_bits()).collect());
+        }
+
+        assert_eq!(z_straight, z_resumed, "{}: z diverged after resume", cfg.name);
+        assert_eq!(
+            straight.staleness(),
+            eng.staleness(),
+            "{}: staleness diverged",
+            cfg.name
+        );
+        assert_eq!(straight.rng_digest(), eng.rng_digest(), "{}: rng states", cfg.name);
+        for i in 0..straight.accounting().n_nodes() {
+            let (a, b) = (straight.accounting().link(i), eng.accounting().link(i));
+            assert_eq!(
+                (a.uplink_bits, a.downlink_bits, a.uplink_msgs, a.downlink_msgs),
+                (b.uplink_bits, b.downlink_bits, b.uplink_msgs, b.downlink_msgs),
+                "{}: link {i} wire bits diverged",
+                cfg.name
+            );
+        }
+    });
+}
+
+/// Snapshot decode totality (mirrors the wire-frame truncation/corruption
+/// props): every strict prefix of a real snapshot container is `Err`, and
+/// arbitrary single-bit corruption is `Err` or a clean decode — never a
+/// panic, never an unbounded allocation. The raw body (checksum stripped)
+/// is also fed straight to `EventEngine::resume`, which must likewise
+/// error or succeed without panicking.
+#[test]
+fn prop_snapshot_decode_on_truncated_or_corrupt_bytes_never_panics() {
+    let mut cfg = presets::ci_lasso();
+    cfg.name = "prop-snap-totality".into();
+    cfg.engine = qadmm::config::EngineKind::Event;
+    cfg.iters = 6;
+    cfg.mc_trials = 1;
+    cfg.eval_every = 1;
+    cfg.topology = TopologyKind::Tree { fanout: 2 };
+    cfg.link = LinkConfig {
+        compute: LatencyModel::Exp(0.01),
+        uplink: LatencyModel::Exp(0.01),
+        downlink: LatencyModel::Exp(0.01),
+        clock_drift: 0.1,
+    };
+    let lcfg = match cfg.problem {
+        ProblemKind::Lasso { m, h, n, rho, theta } => LassoConfig { m, h, n, rho, theta },
+        _ => unreachable!(),
+    };
+    let mut rngs = TrialRngs::new(cfg.seed);
+    let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+    p.set_reference_optimum(1.0);
+    let mut eng = EventEngine::new(&cfg, &mut p, rngs).unwrap();
+    for _ in 0..cfg.iters {
+        eng.step_round().unwrap();
+    }
+    let meta = eng.snapshot_meta();
+    let body = eng.snapshot_body();
+    drop(eng);
+    let container = qadmm::snapshot::encode(&meta, &body);
+
+    // every strict prefix of the container is rejected (sampled stride +
+    // the interesting boundaries, so the loop stays O(container))
+    let stride = (container.len() / 192).max(1);
+    let mut cuts: Vec<usize> = (0..container.len()).step_by(stride).collect();
+    cuts.extend([0, 1, 7, 8, 12, container.len() - 9, container.len() - 1]);
+    for cut in cuts {
+        assert!(
+            qadmm::snapshot::decode(&container[..cut]).is_err(),
+            "container prefix of {cut}/{} bytes accepted",
+            container.len()
+        );
+    }
+
+    // random bit flips across the container: Err or clean decode
+    let mut flip_rng = Pcg64::seed_from_u64(31337);
+    for _ in 0..200 {
+        let mut bad = container.clone();
+        let i = flip_rng.gen_range(bad.len());
+        bad[i] ^= 1 << flip_rng.gen_range(8);
+        let _ = qadmm::snapshot::decode(&bad);
+    }
+
+    // raw-body abuse (checksum bypassed): truncations and flips straight
+    // into resume() — must error or produce a usable engine, never panic
+    let mut p2 = LassoProblem::generate(lcfg, &mut TrialRngs::new(cfg.seed).data).unwrap();
+    p2.set_reference_optimum(1.0);
+    for cut in (0..body.len()).step_by((body.len() / 96).max(1)) {
+        assert!(
+            EventEngine::resume(&cfg, &mut p2, &body[..cut]).is_err(),
+            "truncated body of {cut}/{} bytes resumed",
+            body.len()
+        );
+    }
+    for _ in 0..120 {
+        let mut bad = body.clone();
+        let i = flip_rng.gen_range(bad.len());
+        bad[i] ^= 1 << flip_rng.gen_range(8);
+        let _ = EventEngine::resume(&cfg, &mut p2, &bad);
+    }
+}
+
 #[test]
 fn prop_json_roundtrip_numbers() {
     use qadmm::util::json::Json;

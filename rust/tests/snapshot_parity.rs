@@ -1,0 +1,426 @@
+//! The snapshot subsystem's acceptance contract (ISSUE 5):
+//!
+//! 1. **Resume parity** — for both in-process engines, a run checkpointed
+//!    at round k and resumed (problem re-derived from the seed, every
+//!    other piece of state from the snapshot) is *bit-identical* to the
+//!    same seed run straight through: per-round z trajectories, per-round
+//!    staleness vectors, per-link wire-bit totals, the metric series
+//!    (minus wall clock) and the final state of every RNG stream — across
+//!    star, tree and gossip topologies, with the event engine under
+//!    nonzero delay on every link leg (so the checkpoint lands with
+//!    events in flight and payloads on the virtual wire).
+//! 2. **Recorded-timeline bridge** — the threaded runtime replaying an
+//!    event-engine recording reproduces that engine's arrival sets and
+//!    round count exactly.
+
+use qadmm::admm::engine::EventEngine;
+use qadmm::admm::runner::trial_seed;
+use qadmm::admm::sim::{AsyncSim, TrialRngs};
+use qadmm::comm::latency::LatencyModel;
+use qadmm::comm::network::FaultSpec;
+use qadmm::comm::profile::LinkConfig;
+use qadmm::compress::CompressorKind;
+use qadmm::config::{presets, EngineKind, ExperimentConfig, ProblemKind};
+use qadmm::problems::lasso::{LassoConfig, LassoProblem};
+use qadmm::snapshot;
+use qadmm::topology::TopologyKind;
+
+const ITERS: usize = 36;
+const K: usize = 17; // checkpoint round: not a refresh multiple on purpose
+
+fn cfg_for(engine: EngineKind, topo: TopologyKind) -> ExperimentConfig {
+    let mut cfg = presets::ci_lasso();
+    cfg.name = format!("snapshot-parity-{}-{}", engine.label(), topo.label());
+    cfg.problem = ProblemKind::Lasso { m: 20, h: 10, n: 12, rho: 30.0, theta: 0.1 };
+    cfg.compressor = CompressorKind::Qsgd { bits: 3 };
+    cfg.engine = engine;
+    cfg.topology = topo;
+    cfg.p_tier = 2;
+    cfg.tau = 3;
+    cfg.p_min = 3;
+    cfg.iters = ITERS;
+    cfg.mc_trials = 1;
+    cfg.eval_every = 1;
+    cfg.consensus_refresh_every = 8; // refresh rounds straddle the checkpoint
+    if engine == EngineKind::Event {
+        cfg.link = LinkConfig {
+            compute: LatencyModel::Exp(0.01),
+            uplink: LatencyModel::Exp(0.015),
+            downlink: LatencyModel::Exp(0.02),
+            clock_drift: 0.15,
+        };
+    }
+    cfg
+}
+
+fn make_problem(cfg: &ExperimentConfig) -> (LassoProblem, TrialRngs) {
+    let lcfg = match cfg.problem {
+        ProblemKind::Lasso { m, h, n, rho, theta } => LassoConfig { m, h, n, rho, theta },
+        _ => unreachable!(),
+    };
+    let mut rngs = TrialRngs::new(trial_seed(cfg.seed, 0));
+    let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+    p.set_reference_optimum(1.0);
+    (p, rngs)
+}
+
+/// Everything the contract compares, bitwise.
+#[derive(PartialEq, Debug)]
+struct Trace {
+    z: Vec<Vec<u64>>,
+    staleness: Vec<Vec<usize>>,
+    links: Vec<(u64, u64, u64, u64)>,
+    records: Vec<(usize, u64, u64, u64, usize)>,
+    rng_digest: u64,
+}
+
+fn links_of(acc: &qadmm::comm::accounting::CommAccounting) -> Vec<(u64, u64, u64, u64)> {
+    (0..acc.n_nodes())
+        .map(|i| {
+            let l = acc.link(i);
+            (l.uplink_bits, l.downlink_bits, l.uplink_msgs, l.downlink_msgs)
+        })
+        .collect()
+}
+
+fn records_of(rec: &qadmm::metrics::RunRecorder) -> Vec<(usize, u64, u64, u64, usize)> {
+    // wall_s excluded: wall time is not run state
+    rec.records
+        .iter()
+        .map(|r| {
+            (r.iter, r.comm_bits.to_bits(), r.accuracy.to_bits(), r.loss.to_bits(), r.active_nodes)
+        })
+        .collect()
+}
+
+fn run_seq(cfg: &ExperimentConfig, interrupt: Option<usize>) -> Trace {
+    let (mut problem, rngs) = make_problem(cfg);
+    let mut sim = AsyncSim::new(cfg, &mut problem, rngs).unwrap();
+    let mut z = Vec::new();
+    let mut staleness = Vec::new();
+    let k = interrupt.unwrap_or(cfg.iters);
+    for _ in 0..k {
+        sim.step().unwrap();
+        z.push(sim.z().iter().map(|v| v.to_bits()).collect());
+        staleness.push(sim.staleness().to_vec());
+    }
+    if k < cfg.iters {
+        // full container round-trip, then a cold resume on a re-derived problem
+        let bytes = snapshot::encode(&sim.snapshot_meta(), &sim.snapshot_body());
+        drop(sim);
+        let (meta, body) = snapshot::decode(&bytes).unwrap();
+        assert_eq!(meta.round, k);
+        assert_eq!(meta.engine, "seq");
+        assert_eq!(
+            snapshot::config_resume_digest(&meta.config),
+            cfg.resume_digest(),
+            "snapshot header must carry the resumable config identity"
+        );
+        let (mut problem2, _) = make_problem(cfg);
+        let mut sim = AsyncSim::resume(cfg, &mut problem2, &body).unwrap();
+        while sim.iter() < cfg.iters {
+            sim.step().unwrap();
+            z.push(sim.z().iter().map(|v| v.to_bits()).collect());
+            staleness.push(sim.staleness().to_vec());
+        }
+        return Trace {
+            z,
+            staleness,
+            links: links_of(sim.accounting()),
+            records: records_of(sim.recorder()),
+            rng_digest: sim.rng_digest(),
+        };
+    }
+    Trace {
+        z,
+        staleness,
+        links: links_of(sim.accounting()),
+        records: records_of(sim.recorder()),
+        rng_digest: sim.rng_digest(),
+    }
+}
+
+fn run_event(cfg: &ExperimentConfig, interrupt: Option<usize>) -> Trace {
+    let (mut problem, rngs) = make_problem(cfg);
+    let mut eng = EventEngine::new(cfg, &mut problem, rngs).unwrap();
+    let mut z = Vec::new();
+    let mut staleness = Vec::new();
+    let k = interrupt.unwrap_or(cfg.iters);
+    for _ in 0..k {
+        eng.step_round().unwrap();
+        z.push(eng.z().iter().map(|v| v.to_bits()).collect());
+        staleness.push(eng.staleness().to_vec());
+    }
+    if k < cfg.iters {
+        let bytes = snapshot::encode(&eng.snapshot_meta(), &eng.snapshot_body());
+        drop(eng);
+        let (meta, body) = snapshot::decode(&bytes).unwrap();
+        assert_eq!(meta.round, k);
+        assert_eq!(meta.engine, "event");
+        let (mut problem2, _) = make_problem(cfg);
+        let mut eng = EventEngine::resume(cfg, &mut problem2, &body).unwrap();
+        while eng.stats().rounds < cfg.iters {
+            eng.step_round().unwrap();
+            z.push(eng.z().iter().map(|v| v.to_bits()).collect());
+            staleness.push(eng.staleness().to_vec());
+        }
+        return Trace {
+            z,
+            staleness,
+            links: links_of(eng.accounting()),
+            records: records_of(eng.recorder()),
+            rng_digest: eng.rng_digest(),
+        };
+    }
+    Trace {
+        z,
+        staleness,
+        links: links_of(eng.accounting()),
+        records: records_of(eng.recorder()),
+        rng_digest: eng.rng_digest(),
+    }
+}
+
+fn assert_cell(engine: EngineKind, topo: TopologyKind) {
+    let cfg = cfg_for(engine, topo);
+    let (straight, resumed) = match engine {
+        EngineKind::Seq => (run_seq(&cfg, None), run_seq(&cfg, Some(K))),
+        EngineKind::Event => (run_event(&cfg, None), run_event(&cfg, Some(K))),
+        EngineKind::Threaded => unreachable!(),
+    };
+    assert_eq!(straight.z, resumed.z, "{}: z trajectory", cfg.name);
+    assert_eq!(straight.staleness, resumed.staleness, "{}: staleness", cfg.name);
+    assert_eq!(straight.links, resumed.links, "{}: per-link wire bits", cfg.name);
+    assert_eq!(straight.records, resumed.records, "{}: metric series", cfg.name);
+    assert_eq!(straight.rng_digest, resumed.rng_digest, "{}: final RNG states", cfg.name);
+}
+
+#[test]
+fn seq_resume_is_bit_identical_across_topologies() {
+    for topo in
+        [TopologyKind::Star, TopologyKind::Tree { fanout: 4 }, TopologyKind::Gossip { k: 3 }]
+    {
+        assert_cell(EngineKind::Seq, topo);
+    }
+}
+
+#[test]
+fn event_resume_is_bit_identical_across_topologies_under_latency() {
+    for topo in
+        [TopologyKind::Star, TopologyKind::Tree { fanout: 4 }, TopologyKind::Gossip { k: 3 }]
+    {
+        assert_cell(EngineKind::Event, topo);
+    }
+}
+
+/// Back-to-back resumes (checkpoint, resume, checkpoint again, resume
+/// again) keep the contract: state round-trips are closed under
+/// composition, the long-run operating mode.
+#[test]
+fn chained_resumes_stay_bit_identical() {
+    let cfg = cfg_for(EngineKind::Event, TopologyKind::Star);
+    let straight = run_event(&cfg, None);
+
+    let (mut problem, rngs) = make_problem(&cfg);
+    let mut z = Vec::new();
+    let mut staleness = Vec::new();
+    let mut body: Vec<u8>;
+    {
+        let mut eng = EventEngine::new(&cfg, &mut problem, rngs).unwrap();
+        for _ in 0..9 {
+            eng.step_round().unwrap();
+            z.push(eng.z().iter().map(|v| v.to_bits()).collect());
+            staleness.push(eng.staleness().to_vec());
+        }
+        body = eng.snapshot_body();
+    }
+    let (mut p2, _) = make_problem(&cfg);
+    {
+        let mut eng = EventEngine::resume(&cfg, &mut p2, &body).unwrap();
+        for _ in 0..11 {
+            eng.step_round().unwrap();
+            z.push(eng.z().iter().map(|v| v.to_bits()).collect());
+            staleness.push(eng.staleness().to_vec());
+        }
+        body = eng.snapshot_body();
+    }
+    let (mut p3, _) = make_problem(&cfg);
+    let mut eng = EventEngine::resume(&cfg, &mut p3, &body).unwrap();
+    while eng.stats().rounds < cfg.iters {
+        eng.step_round().unwrap();
+        z.push(eng.z().iter().map(|v| v.to_bits()).collect());
+        staleness.push(eng.staleness().to_vec());
+    }
+    assert_eq!(straight.z, z, "chained resumes diverged");
+    assert_eq!(straight.staleness, staleness);
+    assert_eq!(straight.rng_digest, eng.rng_digest());
+    assert_eq!(straight.links, links_of(eng.accounting()));
+}
+
+/// A resume under a *different* config identity must be refused by the
+/// digest check the runner applies (changing τ mid-run would produce a
+/// trajectory belonging to neither plan).
+#[test]
+fn resume_digest_detects_config_drift() {
+    let cfg = cfg_for(EngineKind::Event, TopologyKind::Star);
+    let (mut problem, rngs) = make_problem(&cfg);
+    let mut eng = EventEngine::new(&cfg, &mut problem, rngs).unwrap();
+    for _ in 0..3 {
+        eng.step_round().unwrap();
+    }
+    let meta = eng.snapshot_meta();
+    let mut other = cfg.clone();
+    other.tau = cfg.tau + 2;
+    assert_ne!(
+        snapshot::config_resume_digest(&meta.config),
+        other.resume_digest(),
+        "digest must change when tau changes"
+    );
+    let mut longer = cfg.clone();
+    longer.iters = cfg.iters * 10;
+    longer.name = "same-run-more-rounds".into();
+    assert_eq!(
+        snapshot::config_resume_digest(&meta.config),
+        longer.resume_digest(),
+        "digest must permit extending the run"
+    );
+}
+
+/// Structural config mismatches must be caught by `resume` itself even
+/// when the caller skips the digest check: wrong fleet size, wrong
+/// topology, wrong EF mode.
+#[test]
+fn resume_rejects_mismatched_state() {
+    let cfg = cfg_for(EngineKind::Event, TopologyKind::Tree { fanout: 4 });
+    let (mut problem, rngs) = make_problem(&cfg);
+    let mut eng = EventEngine::new(&cfg, &mut problem, rngs).unwrap();
+    for _ in 0..2 {
+        eng.step_round().unwrap();
+    }
+    let body = eng.snapshot_body();
+    drop(eng);
+
+    // topology flip: tier state present, config says star
+    let mut star = cfg.clone();
+    star.topology = TopologyKind::Star;
+    let (mut p2, _) = make_problem(&star);
+    assert!(EventEngine::resume(&star, &mut p2, &body).is_err());
+
+    // EF flip
+    let mut no_ef = cfg.clone();
+    no_ef.error_feedback = false;
+    let (mut p3, _) = make_problem(&no_ef);
+    assert!(EventEngine::resume(&no_ef, &mut p3, &body).is_err());
+
+    // different fleet
+    let mut small = cfg.clone();
+    small.problem = ProblemKind::Lasso { m: 20, h: 10, n: 6, rho: 30.0, theta: 0.1 };
+    small.p_min = 3;
+    let (mut p4, _) = make_problem(&small);
+    assert!(EventEngine::resume(&small, &mut p4, &body).is_err());
+
+    // τ change (scheduler state disagrees)
+    let mut tau = cfg.clone();
+    tau.tau = cfg.tau + 1;
+    let (mut p5, _) = make_problem(&tau);
+    assert!(EventEngine::resume(&tau, &mut p5, &body).is_err());
+}
+
+/// The recorded-timeline bridge: the threaded runtime, driven by a
+/// recording instead of wall-clock sleeps, reproduces the event engine's
+/// arrival sets and round count exactly.
+#[test]
+fn threaded_replay_reproduces_recorded_arrival_sets() {
+    let mut cfg = presets::ci_lasso();
+    cfg.name = "snapshot-parity-bridge".into();
+    cfg.engine = EngineKind::Event;
+    cfg.iters = 18;
+    cfg.mc_trials = 1;
+    cfg.eval_every = cfg.iters;
+    cfg.tau = 4;
+    cfg.p_min = 2;
+    // stragglers: the recording must contain genuinely partial rounds
+    cfg.link = LinkConfig {
+        compute: LatencyModel::Exp(0.004),
+        uplink: LatencyModel::Exp(0.006),
+        downlink: LatencyModel::None,
+        clock_drift: 0.0,
+    };
+    let (mut problem, rngs) = make_problem(&cfg);
+    let mut eng = EventEngine::new(&cfg, &mut problem, rngs).unwrap();
+    eng.record_timeline();
+    for _ in 0..cfg.iters {
+        eng.step_round().unwrap();
+    }
+    let tl = eng.take_timeline().expect("recording enabled");
+    drop(eng);
+    assert_eq!(tl.rounds.len(), cfg.iters);
+    assert!(
+        tl.rounds.iter().any(|r| r.arrivals.len() < 4),
+        "recording should contain partial-participation rounds"
+    );
+    assert!(!tl.events.is_empty(), "recording should carry the event stream");
+    // json round-trip before replay (what the CLI file path does)
+    let tl =
+        qadmm::snapshot::timeline::RecordedTimeline::from_json(&tl.to_json()).unwrap();
+
+    let mut thr = cfg.clone();
+    thr.engine = EngineKind::Threaded;
+    let (problem, _) = make_problem(&thr);
+    let outcome = qadmm::coordinator::run_threaded_replay(
+        &thr,
+        Box::new(problem),
+        FaultSpec::default(),
+        &tl,
+    )
+    .unwrap();
+    assert_eq!(outcome.round_arrivals.len(), tl.rounds.len(), "round count");
+    for (r, round) in tl.rounds.iter().enumerate() {
+        assert_eq!(
+            outcome.round_arrivals[r], round.arrivals,
+            "replay arrival set diverged at round {r}"
+        );
+    }
+}
+
+/// Replay refuses recordings it cannot honor.
+#[test]
+fn threaded_replay_validates_inputs() {
+    let mut tl = qadmm::snapshot::timeline::RecordedTimeline::new("event", 4, 7);
+    tl.push_round(0.0, vec![0, 1, 2, 3], vec![]);
+    let mut cfg = presets::ci_lasso();
+    cfg.engine = EngineKind::Threaded;
+    // wrong fleet size
+    let mut big = tl.clone();
+    big.n = 9;
+    let (p, _) = make_problem(&cfg);
+    assert!(qadmm::coordinator::run_threaded_replay(
+        &cfg,
+        Box::new(p),
+        FaultSpec::default(),
+        &big
+    )
+    .is_err());
+    // non-star topology
+    let mut tiered = cfg.clone();
+    tiered.topology = TopologyKind::Tree { fanout: 2 };
+    let (p, _) = make_problem(&tiered);
+    assert!(qadmm::coordinator::run_threaded_replay(
+        &tiered,
+        Box::new(p),
+        FaultSpec::default(),
+        &tl
+    )
+    .is_err());
+    // wrong engine label
+    let mut wrong = tl.clone();
+    wrong.engine = "seq".into();
+    let (p, _) = make_problem(&cfg);
+    assert!(qadmm::coordinator::run_threaded_replay(
+        &cfg,
+        Box::new(p),
+        FaultSpec::default(),
+        &wrong
+    )
+    .is_err());
+}

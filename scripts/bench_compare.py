@@ -6,7 +6,12 @@ BENCH_engine.json (if any) is the baseline, the fresh bench run is the
 current snapshot, and the table lands in the job summary so the perf
 trajectory is visible per PR without gating merges on noisy runners.
 
-Stdlib only; always exits 0 (the job is informational).
+Robustness contract: the two files come from *different revisions* of the
+bench, so any section / record / field may exist on only one side or have
+the wrong type — every such case degrades to "n/a" or a note, never a
+crash (the job is informational and always exits 0).
+
+Stdlib only.
 
 Usage:
     bench_compare.py --current BENCH_engine.json \
@@ -17,19 +22,41 @@ import argparse
 import json
 import sys
 
+# section name -> (key fields, timing metric)
+SECTIONS = {
+    "sweeps": (["label", "n", "m", "tau"], "wall_s"),
+    "server_round": (["n", "m", "p"], "inc_round_us"),
+}
+
 
 def load(path):
     try:
         with open(path) as f:
-            return json.load(f)
+            doc = json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         print(f"(bench_compare: could not read {path}: {e})", file=sys.stderr)
         return None
+    if not isinstance(doc, dict):
+        print(f"(bench_compare: {path} is not a JSON object; ignoring)", file=sys.stderr)
+        return None
+    return doc
+
+
+def records_of(doc, name):
+    """A section's record list, tolerating absent/mistyped sections."""
+    recs = (doc or {}).get(name)
+    if not isinstance(recs, list):
+        return []
+    return [r for r in recs if isinstance(r, dict)]
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
 
 
 def fmt_delta(old, new):
-    """Relative change, signed; n/a when the baseline cell is missing."""
-    if old is None or not isinstance(old, (int, float)) or old == 0:
+    """Relative change, signed; n/a when either cell is missing/zero."""
+    if not is_num(old) or old == 0 or not is_num(new):
         return "n/a"
     pct = 100.0 * (new - old) / old
     arrow = "🔺" if pct > 10.0 else ("✅" if pct < -10.0 else "·")
@@ -38,31 +65,57 @@ def fmt_delta(old, new):
 
 def index_section(records, key_fields):
     out = {}
-    for rec in records or []:
+    for rec in records:
         key = tuple(rec.get(k) for k in key_fields)
         out[key] = rec
     return out
 
 
 def section_table(name, key_fields, metric, baseline, current):
-    """Markdown table for one section, keyed on key_fields, timing `metric`."""
-    cur = index_section(current.get(name), key_fields)
-    base = index_section((baseline or {}).get(name), key_fields)
-    if not cur:
-        return f"\n_(no `{name}` records in the current snapshot)_\n"
+    """Markdown table for one section, keyed on key_fields, timing `metric`.
+
+    Tolerates the section (or any record/field) being present in only one
+    of baseline/current: missing baseline cells render as n/a, and
+    baseline-only rows are appended with an em-dash current cell so a
+    dropped configuration is visible instead of vanishing.
+    """
+    cur = index_section(records_of(current, name), key_fields)
+    base = index_section(records_of(baseline, name), key_fields)
+    if not cur and not base:
+        return f"\n_(no `{name}` records in either snapshot)_\n"
     lines = [
         f"\n### {name}\n",
         "| " + " | ".join(key_fields) + f" | {metric} (base) | {metric} (now) | delta |",
         "|" + "---|" * (len(key_fields) + 3),
     ]
+
+    def cell(v):
+        return f"{v:.3f}" if is_num(v) else "—"
+
     for key, rec in cur.items():
         old = base.get(key, {}).get(metric)
         new = rec.get(metric)
-        old_s = f"{old:.3f}" if isinstance(old, (int, float)) else "—"
-        new_s = f"{new:.3f}" if isinstance(new, (int, float)) else "—"
-        cells = [str(k) for k in key] + [old_s, new_s, fmt_delta(old, new)]
+        cells = [str(k) for k in key] + [cell(old), cell(new), fmt_delta(old, new)]
+        lines.append("| " + " | ".join(cells) + " |")
+    for key in (k for k in base if k not in cur):
+        old = base[key].get(metric)
+        cells = [str(k) for k in key] + [cell(old), "—", "n/a (dropped)"]
         lines.append("| " + " | ".join(cells) + " |")
     return "\n".join(lines) + "\n"
+
+
+def one_sided_sections(baseline, current):
+    """Names of list-valued sections present in exactly one snapshot."""
+    def sections(doc):
+        return {k for k, v in (doc or {}).items() if isinstance(v, list)}
+
+    cur, base = sections(current), sections(baseline)
+    notes = []
+    for name in sorted(base - cur):
+        notes.append(f"- section `{name}` exists only in the baseline")
+    for name in sorted(cur - base):
+        notes.append(f"- section `{name}` exists only in the current snapshot")
+    return notes
 
 
 def main():
@@ -85,12 +138,17 @@ def main():
             "\n_No committed baseline found — this snapshot becomes the "
             "first point of the trajectory._\n"
         )
+    for doc, label in ((baseline, "baseline"), (current, "current")):
+        prov = (doc or {}).get("provenance")
+        if isinstance(prov, str):
+            out.append(f"\n_{label} provenance: {prov}_\n")
     mode = "fast (QADMM_BENCH_FAST)" if current.get("fast") else "full"
     out.append(f"\nmode: {mode}\n")
-    out.append(section_table(
-        "sweeps", ["label", "n", "m", "tau"], "wall_s", baseline, current))
-    out.append(section_table(
-        "server_round", ["n", "m", "p"], "inc_round_us", baseline, current))
+    for name, (key_fields, metric) in SECTIONS.items():
+        out.append(section_table(name, key_fields, metric, baseline, current))
+    notes = one_sided_sections(baseline, current)
+    if baseline is not None and notes:
+        out.append("\n" + "\n".join(notes) + "\n")
     text = "\n".join(out)
 
     print(text)
