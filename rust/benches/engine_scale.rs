@@ -26,6 +26,7 @@ use qadmm::admm::engine::EventEngine;
 use qadmm::admm::sim::TrialRngs;
 use qadmm::comm::latency::LatencyModel;
 use qadmm::comm::profile::LinkConfig;
+use qadmm::compress::CompressorKind;
 use qadmm::config::{presets, EngineKind, ExperimentConfig, OracleConfig, ProblemKind};
 use qadmm::problems::accumulator::ConsensusAccumulator;
 use qadmm::problems::lasso::{LassoConfig, LassoProblem};
@@ -266,6 +267,61 @@ fn server_round_cell(n: usize, m: usize, p: usize, reps: usize) -> anyhow::Resul
     ]))
 }
 
+// ---- trigger: event-trigger dead-band / adaptive levels at scale -----------
+
+/// One (n, δ, adapt) cell of the event-trigger section: the same straggler
+/// timeline as the scale sweep, QSGD(4) uplinks, with the dead-band and
+/// the adaptive level schedule toggled. Reports wall time (the gate is on
+/// the dispatch hot path — this is the overhead guard), realized skip
+/// fraction, and total accounted uplink bits (the savings the trigger
+/// exists for; the δ=0 fixed row is the baseline).
+fn trigger_cell(n: usize, rounds: usize, delta: f64, adapt: bool) -> anyhow::Result<Json> {
+    let (m, h) = (1024usize, 8usize);
+    let sweep = Sweep { n, m, h, rounds, tau: 4, link: straggler_link(), label: "trigger" };
+    let mut cfg = base_cfg(&sweep);
+    cfg.name = format!("engine-trigger-n{n}-d{delta:.0e}-{}", if adapt { "adapt" } else { "fixed" });
+    cfg.compressor = CompressorKind::Qsgd { bits: 4 };
+    cfg.trigger.delta = delta;
+    cfg.trigger.adapt = adapt;
+    let mut rngs = TrialRngs::new(cfg.seed);
+    let mut problem = LassoProblem::generate(
+        LassoConfig { m, h, n, rho: 50.0, theta: 0.1 },
+        &mut rngs.data,
+    )?;
+    problem.set_reference_optimum(1.0);
+
+    let clock = Stopwatch::new();
+    let mut engine = EventEngine::new(&cfg, &mut problem, rngs)?;
+    for _ in 0..rounds {
+        engine.step_round()?;
+    }
+    let wall = clock.elapsed_secs();
+    let stats = engine.stats();
+    let skipped = engine.trigger().skipped();
+    let uplink_bits = engine.accounting().total_uplink_bits();
+    let skip_frac = skipped as f64 / (stats.dispatches.max(1)) as f64;
+    println!(
+        "trigger                 n={n:5} delta={delta:8.0e} levels={:8}  wall {wall:7.2}s  \
+         dispatches {:>8}  skipped {:>8} ({:5.1}%)  uplink bits {}",
+        if adapt { "adaptive" } else { "fixed" },
+        stats.dispatches,
+        skipped,
+        100.0 * skip_frac,
+        fmt_count(uplink_bits as f64),
+    );
+    Ok(Json::obj(vec![
+        ("n", Json::Num(n as f64)),
+        ("delta", Json::Num(delta)),
+        ("adapt", Json::Bool(adapt)),
+        ("rounds", Json::Num(rounds as f64)),
+        ("wall_s", Json::Num(wall)),
+        ("dispatches", Json::Num(stats.dispatches as f64)),
+        ("skipped", Json::Num(skipped as f64)),
+        ("skip_frac", Json::Num(skip_frac)),
+        ("uplink_bits", Json::Num(uplink_bits as f64)),
+    ]))
+}
+
 fn main() {
     let fast = std::env::var("QADMM_BENCH_FAST").is_ok();
     let mut sweeps = if fast {
@@ -343,12 +399,31 @@ fn main() {
         }
     }
 
+    // event-trigger cells: δ=0 fixed is the baseline row; the gated and
+    // adaptive rows show the uplink-bit savings and the hot-path overhead
+    println!("--- trigger: dead-band delta x level schedule (qsgd4) ---");
+    let trig_sizes: &[usize] = if fast { &[256] } else { &[256, 1024] };
+    let trig_rounds = if fast { 10 } else { 100 };
+    let mut trigger_records = Vec::new();
+    for &n in trig_sizes {
+        for (delta, adapt) in [(0.0, false), (1e-4, false), (1e-4, true)] {
+            match trigger_cell(n, trig_rounds, delta, adapt) {
+                Ok(rec) => trigger_records.push(rec),
+                Err(e) => {
+                    eprintln!("trigger n={n} delta={delta} adapt={adapt}: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+        }
+    }
+
     // machine-readable trajectory record at the repo root
     let out = Json::obj(vec![
         ("bench", Json::Str("engine_scale".into())),
         ("fast", Json::Bool(fast)),
         ("sweeps", Json::Arr(sweep_records)),
         ("server_round", Json::Arr(server_records)),
+        ("trigger", Json::Arr(trigger_records)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");
     match std::fs::write(path, out.to_string_pretty()) {

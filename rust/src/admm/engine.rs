@@ -89,6 +89,7 @@ use super::events::{EventKind, EventQueue};
 use super::oracle::AsyncOracle;
 use super::scheduler::Scheduler;
 use super::sim::TrialRngs;
+use super::trigger::{inf_norm, TriggerState};
 
 /// A compressed update sitting in a node's outbox / on the virtual wire.
 /// One slot per node lives for the whole run — `compress_into` refills the
@@ -100,6 +101,10 @@ struct InFlightSlot {
     bits: u64,
     loss: f64,
     occupied: bool,
+    /// Dead-banded dispatch: the slot traverses the same compute+uplink
+    /// timeline but carries no payload — its arrival grants scheduler
+    /// credit only (zero wire bits, no bank commits, no fold).
+    skipped: bool,
 }
 
 impl InFlightSlot {
@@ -110,6 +115,7 @@ impl InFlightSlot {
             bits: 0,
             loss: 0.0,
             occupied: false,
+            skipped: false,
         }
     }
 }
@@ -209,8 +215,14 @@ pub struct EventEngine<'a> {
     arrived_loss: Vec<f64>,
     /// Scratch for delta construction (reused across all nodes/rounds).
     delta_buf: Vec<f64>,
+    /// Second delta scratch: the trigger gate needs both peeked deltas
+    /// alive at once (‖Δx‖∞ and ‖Δu‖∞ are compared against δ together).
+    delta_buf_u: Vec<f64>,
     /// Reusable arrival mask handed to the scheduler each fire.
     arrived_mask: Vec<bool>,
+    /// Event-triggered transmission + adaptive level schedule (inert when
+    /// `cfg.trigger` is the default — the legacy path is then untouched).
+    trigger: TriggerState,
     scheduler: Scheduler,
     oracle: AsyncOracle,
     accounting: CommAccounting,
@@ -343,7 +355,9 @@ impl<'a> EventEngine<'a> {
             in_flight: (0..n).map(|_| InFlightSlot::empty()).collect(),
             arrived_loss: vec![0.0; n],
             delta_buf: Vec::with_capacity(m),
+            delta_buf_u: Vec::with_capacity(m),
             arrived_mask: vec![false; n],
+            trigger: TriggerState::new(cfg, n),
             scheduler: Scheduler::new(n, cfg.tau, cfg.p_min),
             oracle,
             accounting,
@@ -459,7 +473,11 @@ impl<'a> EventEngine<'a> {
             EventKind::ComputeDone { node } => {
                 let slot = &self.in_flight[node];
                 anyhow::ensure!(slot.occupied, "ComputeDone without outbox (node {node})");
-                self.accounting.record_uplink(node, slot.bits);
+                // a dead-banded dispatch ships nothing: zero wire bits, no
+                // message counted — only the timeline legs are traversed
+                if !slot.skipped {
+                    self.accounting.record_uplink(node, slot.bits);
+                }
                 let delay = self.links[node].sample_uplink(&mut self.rng_latency);
                 self.queue.push(self.vtime + delay, EventKind::MsgArrive { node });
             }
@@ -467,6 +485,22 @@ impl<'a> EventEngine<'a> {
                 let slot = &mut self.in_flight[node];
                 anyhow::ensure!(slot.occupied, "MsgArrive without payload (node {node})");
                 slot.occupied = false;
+                if slot.skipped {
+                    // credit-only arrival: the node answered "nothing to
+                    // report" — it counts toward P, resets its staleness,
+                    // and releases the busy latch, but no bank, partial sum
+                    // or accumulator moves (even under a tier: the empty
+                    // report needs no aggregation hop)
+                    slot.skipped = false;
+                    self.arrived_loss[node] = slot.loss;
+                    if self.arrived.insert(node)
+                        && self.scheduler.staleness()[node] + 1 >= self.cfg.tau
+                    {
+                        self.overdue_pending -= 1;
+                    }
+                    self.busy[node] = false;
+                    return Ok(());
+                }
                 self.xhat[node].commit(&slot.cx.dequantized);
                 self.uhat[node].commit(&slot.cu.dequantized);
                 match &mut self.tier {
@@ -515,9 +549,13 @@ impl<'a> EventEngine<'a> {
                 })?;
                 let tier = self.tier.as_mut().expect("AggregateArrive without a tier");
                 // ŝ_g += C(Δpartial), and the global sum folds the same
-                // dequantized vectors so s keeps tracking Σ_g ŝ_g
-                tier.commit(agg, &fw.cx.dequantized, &fw.cu.dequantized);
-                self.acc.fold(&fw.cx.dequantized, &fw.cu.dequantized);
+                // dequantized vectors so s keeps tracking Σ_g ŝ_g. A
+                // credit-only forward (aggregator dead-band) carries empty
+                // payloads: only the children's arrival credit flows.
+                if !fw.cx.dequantized.is_empty() {
+                    tier.commit(agg, &fw.cx.dequantized, &fw.cu.dequantized);
+                    self.acc.fold(&fw.cx.dequantized, &fw.cu.dequantized);
+                }
                 let tau = self.cfg.tau;
                 for (child, loss) in fw.children {
                     self.arrived_loss[child] = loss;
@@ -551,12 +589,28 @@ impl<'a> EventEngine<'a> {
                 // arrival re-touches this aggregator
                 continue;
             }
-            let fw = tier.flush(g, self.compressor.as_ref(), &mut self.agg_quant[g]);
-            self.accounting.record_uplink(
-                self.n + g,
-                MSG_HEADER_BYTES * 8 + fw.cx.wire_bits() + fw.cu.wire_bits(),
-            );
-            self.stats.agg_forwards += 1;
+            // Aggregator dead-band: a ready partial below δ is withheld —
+            // the children's arrival credit still travels upstream (as a
+            // zero-payload, zero-bit forward: a silent aggregator may never
+            // wedge the server's P/τ trigger), but the pending mass stays
+            // put and no compressor or accounting runs.
+            let fw = if self.trigger.delta() > 0.0
+                && tier.pending_inf_norm(g) <= self.trigger.delta()
+            {
+                AggForward {
+                    cx: Compressed::empty(),
+                    cu: Compressed::empty(),
+                    children: tier.credit_only_flush(g),
+                }
+            } else {
+                let fw = tier.flush(g, self.compressor.as_ref(), &mut self.agg_quant[g]);
+                self.accounting.record_uplink(
+                    self.n + g,
+                    MSG_HEADER_BYTES * 8 + fw.cx.wire_bits() + fw.cu.wire_bits(),
+                );
+                self.stats.agg_forwards += 1;
+                fw
+            };
             let delay = self.agg_links[g].sample_uplink(&mut self.rng_latency);
             let at = (self.vtime + delay).max(self.agg_last[g]);
             self.agg_last[g] = at;
@@ -716,35 +770,78 @@ impl<'a> EventEngine<'a> {
                 }
             }
             self.x.row_mut(node).copy_from_slice(&x_new);
-            // eqs. (10)–(14): compress deltas against the node's estimate
-            // bank (== the server bank: its previous update has landed),
-            // writing through the pooled delta scratch and the node's
-            // in-flight slot — no steady-state allocation on this path
-            // (the problem's `x_new` vector is the one remaining alloc,
-            // inherent to the `local_update` signature)
+            // eqs. (10)–(14) under the optional event trigger: peek both
+            // EF-adjusted deltas against the node's estimate banks (== the
+            // server banks: its previous update has landed), and below the
+            // dead-band dispatch a *skipped* slot — same compute/uplink
+            // timeline, but no frame, no quantizer draw, no bank mutation.
+            // peek + note_sent == the old make_delta, so the disabled path
+            // is byte-for-byte the pre-trigger behavior; all buffers stay
+            // pooled (no steady-state allocation on this path).
             let slot = &mut self.in_flight[node];
-            self.xhat[node].make_delta_into(self.x.row(node), &mut self.delta_buf);
-            self.compressor.compress_into(
-                &self.delta_buf,
-                &mut self.node_quant[node],
-                &mut slot.cx,
-            );
-            self.uhat[node].make_delta_into(self.u.row(node), &mut self.delta_buf);
-            self.compressor.compress_into(
-                &self.delta_buf,
-                &mut self.node_quant[node],
-                &mut slot.cu,
-            );
-            slot.bits = MSG_HEADER_BYTES * 8 + slot.cx.wire_bits() + slot.cu.wire_bits();
+            self.xhat[node].peek_delta_into(self.x.row(node), &mut self.delta_buf);
+            self.uhat[node].peek_delta_into(self.u.row(node), &mut self.delta_buf_u);
+            let skip = if self.trigger.enabled() {
+                let norm = inf_norm(&self.delta_buf).max(inf_norm(&self.delta_buf_u));
+                self.trigger.observe(node, norm);
+                !self.trigger.should_send(norm)
+            } else {
+                false
+            };
+            if skip {
+                self.trigger.note_skip();
+                slot.cx.dequantized.clear();
+                slot.cx.wire.clear();
+                slot.cu.dequantized.clear();
+                slot.cu.wire.clear();
+                slot.bits = 0;
+            } else {
+                self.xhat[node].note_sent(self.x.row(node));
+                self.uhat[node].note_sent(self.u.row(node));
+                match self.trigger.compressor_for(node) {
+                    // adaptive schedule: this node's current QSGD width
+                    Some(q) => {
+                        q.compress_into(
+                            &self.delta_buf,
+                            &mut self.node_quant[node],
+                            &mut slot.cx,
+                        );
+                        q.compress_into(
+                            &self.delta_buf_u,
+                            &mut self.node_quant[node],
+                            &mut slot.cu,
+                        );
+                    }
+                    None => {
+                        self.compressor.compress_into(
+                            &self.delta_buf,
+                            &mut self.node_quant[node],
+                            &mut slot.cx,
+                        );
+                        self.compressor.compress_into(
+                            &self.delta_buf_u,
+                            &mut self.node_quant[node],
+                            &mut slot.cu,
+                        );
+                    }
+                }
+                slot.bits =
+                    MSG_HEADER_BYTES * 8 + slot.cx.wire_bits() + slot.cu.wire_bits();
+            }
             slot.loss = loss;
             slot.occupied = true;
+            slot.skipped = skip;
             self.busy[node] = true;
             self.stats.dispatches += 1;
             // non-star fan-in: bind this update to its aggregator now (the
             // same per-dispatch draw order the simulator uses, so gossip
-            // routes replay identically at zero link delay)
-            if let Some(t) = &mut self.tier {
-                t.route(node, &mut self.rng_topology);
+            // routes replay identically at zero link delay). A skipped
+            // dispatch routes nowhere — its credit-only arrival goes
+            // straight to the server.
+            if !skip {
+                if let Some(t) = &mut self.tier {
+                    t.route(node, &mut self.rng_topology);
+                }
             }
             let delay = self.links[node].sample_compute(&mut self.rng_latency);
             self.queue.push(self.vtime + delay, EventKind::ComputeDone { node });
@@ -800,6 +897,12 @@ impl<'a> EventEngine<'a> {
     /// (conservation property tests read its tracked mass).
     pub fn tier(&self) -> Option<&AggregatorTier> {
         self.tier.as_ref()
+    }
+
+    /// Event-trigger / adaptive-schedule state (skip counters, per-node
+    /// bit widths).
+    pub fn trigger(&self) -> &TriggerState {
+        &self.trigger
     }
 
     /// Σ per coordinate of everything the fan-in currently holds:
@@ -905,6 +1008,7 @@ impl<'a> EventEngine<'a> {
         self.agg_quant.pack(&mut w);
         self.node_batch.pack(&mut w);
         self.recorder.pack(&mut w);
+        self.trigger.pack(&mut w);
         w.put_f64(self.vtime);
         self.stats.pack(&mut w);
         w.into_inner()
@@ -959,6 +1063,7 @@ impl<'a> EventEngine<'a> {
         let agg_quant = Vec::<Pcg64>::unpack(&mut r)?;
         let node_batch = Vec::<Pcg64>::unpack(&mut r)?;
         let recorder = RunRecorder::unpack(&mut r)?;
+        let trigger = TriggerState::unpack(&mut r)?;
         let vtime = r.get_f64()?;
         let stats = EngineStats::unpack(&mut r)?;
         r.finish()?;
@@ -1006,10 +1111,16 @@ impl<'a> EventEngine<'a> {
             }
         }
         for slot in &in_flight {
-            if slot.occupied {
+            if slot.occupied && !slot.skipped {
                 anyhow::ensure!(
                     slot.cx.dequantized.len() == m && slot.cu.dequantized.len() == m,
                     "snapshot in-flight payload wrong dim"
+                );
+            }
+            if slot.skipped {
+                anyhow::ensure!(
+                    slot.bits == 0 && slot.cx.dequantized.is_empty(),
+                    "snapshot skipped in-flight slot must carry no payload"
                 );
             }
         }
@@ -1038,8 +1149,10 @@ impl<'a> EventEngine<'a> {
         // the next AggregateArrive
         for inbox in &agg_inbox {
             for fw in inbox {
+                // credit-only forwards (aggregator dead-band) are empty
                 anyhow::ensure!(
-                    fw.cx.dequantized.len() == m && fw.cu.dequantized.len() == m,
+                    (fw.cx.dequantized.len() == m && fw.cu.dequantized.len() == m)
+                        || (fw.cx.dequantized.is_empty() && fw.cu.dequantized.is_empty()),
                     "snapshot aggregator forward payload wrong dim"
                 );
                 anyhow::ensure!(
@@ -1080,6 +1193,10 @@ impl<'a> EventEngine<'a> {
             vtime.is_finite() && vtime >= 0.0,
             "snapshot virtual time {vtime} invalid"
         );
+        anyhow::ensure!(
+            trigger.matches(cfg, n),
+            "snapshot trigger/adaptive-schedule state disagrees with config"
+        );
 
         Ok(Self {
             compressor: cfg.compressor.build(),
@@ -1108,7 +1225,9 @@ impl<'a> EventEngine<'a> {
             in_flight,
             arrived_loss,
             delta_buf: Vec::with_capacity(m),
+            delta_buf_u: Vec::with_capacity(m),
             arrived_mask: vec![false; n],
+            trigger,
             scheduler,
             oracle,
             accounting,
@@ -1175,6 +1294,7 @@ impl Pack for InFlightSlot {
         w.put_u64(self.bits);
         w.put_f64(self.loss);
         w.put_bool(self.occupied);
+        w.put_bool(self.skipped);
     }
     fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
         Ok(Self {
@@ -1183,6 +1303,7 @@ impl Pack for InFlightSlot {
             bits: r.get_u64()?,
             loss: r.get_f64()?,
             occupied: r.get_bool()?,
+            skipped: r.get_bool()?,
         })
     }
 }

@@ -40,3 +40,4 @@ pub mod oracle;
 pub mod runner;
 pub mod scheduler;
 pub mod sim;
+pub mod trigger;

@@ -22,6 +22,7 @@ use crate::util::timer::Stopwatch;
 
 use super::oracle::AsyncOracle;
 use super::scheduler::Scheduler;
+use super::trigger::{inf_norm, TriggerState};
 
 /// Disjoint RNG streams for one trial. The data stream (fork 1) is consumed
 /// by the problem factory; the simulator takes the rest.
@@ -87,6 +88,9 @@ pub struct AsyncSim<'a> {
     rng_topology: Pcg64,
     active: Vec<bool>,
     scheduler: Scheduler,
+    /// Event-triggered transmission + adaptive level schedule (inert when
+    /// `cfg.trigger` is the default — the legacy path is then untouched).
+    trigger: TriggerState,
     oracle: AsyncOracle,
     accounting: CommAccounting,
     rng_oracle: Pcg64,
@@ -176,6 +180,7 @@ impl<'a> AsyncSim<'a> {
             rng_topology: rngs.topology,
             active: vec![true; n], // A₀ = V: every node computes first
             scheduler: Scheduler::new(n, cfg.tau, cfg.p_min),
+            trigger: TriggerState::new(cfg, n),
             oracle,
             accounting,
             rng_oracle: rngs.oracle,
@@ -218,13 +223,39 @@ impl<'a> AsyncSim<'a> {
             self.x.row_mut(i).copy_from_slice(&x_new);
             train_loss += loss;
 
-            // eqs. (10)–(14): compress deltas, update both estimate banks,
-            // and fold the committed deltas into the running consensus sum
-            // (s += C(Δx) + C(Δu), the O(m)-per-arrival server cost)
-            let dx = self.xhat[i].make_delta(self.x.row(i));
-            let du = self.uhat[i].make_delta(self.u.row(i));
-            let cx = self.compressor.compress(&dx, &mut self.rng_quant);
-            let cu = self.compressor.compress(&du, &mut self.rng_quant);
+            // eqs. (10)–(14) under the optional event trigger: peek the
+            // EF-adjusted deltas first, and below the dead-band skip the
+            // dispatch entirely — no frame, no quantizer RNG draw, no
+            // bank/accumulator mutation. The node still counts as active
+            // (it computed; "nothing worth sending" is itself a report),
+            // so scheduling and liveness are exactly as if it had sent.
+            // peek + note_sent == the old make_delta, so the disabled
+            // path is byte-for-byte the pre-trigger behavior.
+            let mut dx = Vec::with_capacity(self.m);
+            let mut du = Vec::with_capacity(self.m);
+            self.xhat[i].peek_delta_into(self.x.row(i), &mut dx);
+            self.uhat[i].peek_delta_into(self.u.row(i), &mut du);
+            if self.trigger.enabled() {
+                let norm = inf_norm(&dx).max(inf_norm(&du));
+                self.trigger.observe(i, norm);
+                if !self.trigger.should_send(norm) {
+                    self.trigger.note_skip();
+                    continue;
+                }
+            }
+            self.xhat[i].note_sent(self.x.row(i));
+            self.uhat[i].note_sent(self.u.row(i));
+            let (cx, cu) = match self.trigger.compressor_for(i) {
+                // adaptive schedule: this node's current QSGD width
+                Some(q) => (
+                    q.compress(&dx, &mut self.rng_quant),
+                    q.compress(&du, &mut self.rng_quant),
+                ),
+                None => (
+                    self.compressor.compress(&dx, &mut self.rng_quant),
+                    self.compressor.compress(&du, &mut self.rng_quant),
+                ),
+            };
             self.accounting.record_uplink(
                 i,
                 MSG_HEADER_BYTES * 8 + cx.wire_bits() + cu.wire_bits(),
@@ -249,6 +280,14 @@ impl<'a> AsyncSim<'a> {
         if let Some(t) = &mut self.tier {
             for g in 0..t.n_aggregators() {
                 if !t.has_pending(g) {
+                    continue;
+                }
+                // aggregator dead-band: a pending partial below δ is held
+                // back (credit-only — zero wire bits, mass keeps pending)
+                if self.trigger.delta() > 0.0
+                    && t.pending_inf_norm(g) <= self.trigger.delta()
+                {
+                    let _ = t.credit_only_flush(g);
                     continue;
                 }
                 let fw = t.flush(g, self.compressor.as_ref(), &mut self.rng_quant);
@@ -359,6 +398,12 @@ impl<'a> AsyncSim<'a> {
         self.tier.as_ref()
     }
 
+    /// Event-trigger / adaptive-schedule state (skip counters, per-node
+    /// bit widths).
+    pub fn trigger(&self) -> &TriggerState {
+        &self.trigger
+    }
+
     // ---- snapshot / resume ----
 
     /// Human-readable header for a snapshot taken now.
@@ -398,6 +443,7 @@ impl<'a> AsyncSim<'a> {
         self.rng_quant.pack(&mut w);
         self.rng_batches.pack(&mut w);
         self.recorder.pack(&mut w);
+        self.trigger.pack(&mut w);
         w.put_usize(self.iter);
         w.into_inner()
     }
@@ -433,6 +479,7 @@ impl<'a> AsyncSim<'a> {
         let rng_quant = Pcg64::unpack(&mut r)?;
         let rng_batches = Pcg64::unpack(&mut r)?;
         let recorder = RunRecorder::unpack(&mut r)?;
+        let trigger = TriggerState::unpack(&mut r)?;
         let iter = r.get_usize()?;
         r.finish()?;
 
@@ -471,6 +518,10 @@ impl<'a> AsyncSim<'a> {
         }
         anyhow::ensure!(active.len() == n, "snapshot active set wrong fleet size");
         anyhow::ensure!(
+            trigger.matches(cfg, n),
+            "snapshot trigger/adaptive-schedule state disagrees with config"
+        );
+        anyhow::ensure!(
             scheduler.staleness().len() == n
                 && scheduler.tau() == cfg.tau
                 && scheduler.p_min() == cfg.p_min,
@@ -499,6 +550,7 @@ impl<'a> AsyncSim<'a> {
             rng_topology,
             active,
             scheduler,
+            trigger,
             oracle,
             accounting,
             rng_oracle,

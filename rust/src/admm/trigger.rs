@@ -1,0 +1,266 @@
+//! Event-triggered transmission + per-node adaptive quantization schedule.
+//!
+//! A node that computed an update does not necessarily *transmit* it: with
+//! a dead-band δ > 0 configured ([`crate::config::TriggerConfig`]), the
+//! dispatch is skipped whenever the EF-adjusted delta satisfies
+//! ‖Δ‖∞ ≤ δ — the frame the receiver would decode moves every estimate by
+//! at most δ per coordinate, so dropping it costs a bounded modeling error
+//! while saving the entire uplink frame. A skipped dispatch still counts as
+//! an *arrival* for the server's P/τ trigger (the node answered "nothing to
+//! report", which is information), it just carries zero wire bits.
+//!
+//! Independently, `adapt` activates a per-node quantization-level schedule:
+//! nodes start coarse ([`ADAPT_START_BITS`] bits) and refine one bit at a
+//! time as their realized delta magnitude shrinks below per-stage
+//! thresholds `base · ADAPT_REFINE^(stage+1)`, capped at the configured
+//! QSGD bit width. Early rounds — where deltas are large and the iterate
+//! is far from convergence anyway — ship cheap frames; precision arrives
+//! when the residual actually needs it.
+//!
+//! This state is shared verbatim by all three runtimes (sequential
+//! simulator, event engine, threaded coordinator) so the trigger decisions
+//! are engine-independent given the same delta stream.
+
+use crate::compress::qsgd::Qsgd;
+use crate::compress::CompressorKind;
+use crate::config::{ExperimentConfig, ADAPT_REFINE, ADAPT_START_BITS};
+use crate::snapshot::codec::{Pack, Reader, Writer};
+
+/// ‖v‖∞ for the trigger gate. Any non-finite coordinate makes the norm
+/// +∞ — a diverged delta must always *transmit* (the compressors sanitize
+/// it on the way out), never hide inside the dead-band where the server
+/// would keep crediting a silently broken node.
+pub fn inf_norm(v: &[f64]) -> f64 {
+    v.iter().fold(0.0f64, |m, x| if x.is_finite() { m.max(x.abs()) } else { f64::INFINITY })
+}
+
+/// Per-fleet trigger + adaptive-schedule state. Constructed for every run
+/// (disabled instances are inert and pack a few bytes of zeros), mutated
+/// only through [`Self::observe`] / [`Self::note_skip`], and packed into
+/// snapshots so a resumed run continues the schedule bit-identically.
+#[derive(Clone, Debug)]
+pub struct TriggerState {
+    delta: f64,
+    adapt: bool,
+    /// The configured QSGD width — the schedule's refinement ceiling.
+    /// 0 when `adapt` is off (no schedule; the run's compressor rules).
+    target_bits: u8,
+    /// Refinement stage per node: bits = min(target, START + stage).
+    stage: Vec<u32>,
+    /// First observed ‖Δ‖∞ per node — the schedule's reference scale.
+    /// 0.0 = not yet observed.
+    base_scale: Vec<f64>,
+    /// Dispatches suppressed by the dead-band (stats only).
+    skipped: u64,
+}
+
+impl TriggerState {
+    pub fn new(cfg: &ExperimentConfig, n: usize) -> Self {
+        let target_bits = match (cfg.trigger.adapt, cfg.compressor) {
+            (true, CompressorKind::Qsgd { bits }) => bits,
+            _ => 0, // validate() rejects adapt without QSGD
+        };
+        Self {
+            delta: cfg.trigger.delta,
+            adapt: cfg.trigger.adapt,
+            target_bits,
+            stage: vec![0; n],
+            base_scale: vec![0.0; n],
+            skipped: 0,
+        }
+    }
+
+    /// Whether any trigger machinery is active. False ⇒ the caller must
+    /// take its legacy path untouched (byte-for-byte pre-trigger behavior).
+    pub fn enabled(&self) -> bool {
+        self.delta > 0.0 || self.adapt
+    }
+
+    /// δ = 0 disables the dead-band entirely (even a zero delta ships a
+    /// frame, exactly as before the trigger existed); otherwise strict
+    /// ‖Δ‖∞ > δ.
+    pub fn should_send(&self, norm_inf: f64) -> bool {
+        self.delta == 0.0 || norm_inf > self.delta
+    }
+
+    /// Feed one dispatch-time ‖Δ‖∞ observation into node `i`'s schedule:
+    /// the first positive finite norm anchors the reference scale, then
+    /// each observation below `base · ADAPT_REFINE^(stage+1)` advances one
+    /// refinement stage (possibly several at once after a long skip
+    /// streak). Called on every dispatch decision — skipped or sent — so
+    /// the schedule depends only on the delta stream, not on δ.
+    pub fn observe(&mut self, i: usize, norm_inf: f64) {
+        if !self.adapt || !norm_inf.is_finite() {
+            return;
+        }
+        if self.base_scale[i] == 0.0 {
+            if norm_inf > 0.0 {
+                self.base_scale[i] = norm_inf;
+            }
+            return;
+        }
+        while self.bits(i) < self.target_bits
+            && norm_inf < self.base_scale[i] * ADAPT_REFINE.powi(self.stage[i] as i32 + 1)
+        {
+            self.stage[i] += 1;
+        }
+    }
+
+    /// Current wire width for node `i` under the schedule.
+    pub fn bits(&self, i: usize) -> u8 {
+        let b = u32::from(ADAPT_START_BITS).saturating_add(self.stage[i]);
+        b.min(u32::from(self.target_bits)) as u8
+    }
+
+    /// The compressor node `i` must use for this dispatch: a scheduled
+    /// QSGD when `adapt` is on, `None` to use the run's configured
+    /// compressor (sharing its wire format and RNG discipline).
+    pub fn compressor_for(&self, i: usize) -> Option<Qsgd> {
+        self.adapt.then(|| Qsgd::new(self.bits(i).max(2)))
+    }
+
+    pub fn note_skip(&mut self) {
+        self.skipped += 1;
+    }
+
+    pub fn skipped(&self) -> u64 {
+        self.skipped
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.stage.len()
+    }
+
+    pub fn delta(&self) -> f64 {
+        self.delta
+    }
+
+    pub fn adapt(&self) -> bool {
+        self.adapt
+    }
+
+    /// Resume-time consistency check against the config the snapshot
+    /// claims to continue.
+    pub fn matches(&self, cfg: &ExperimentConfig, n: usize) -> bool {
+        self.delta == cfg.trigger.delta
+            && self.adapt == cfg.trigger.adapt
+            && self.stage.len() == n
+            && self.base_scale.len() == n
+    }
+}
+
+impl Pack for TriggerState {
+    fn pack(&self, w: &mut Writer) {
+        w.put_f64(self.delta);
+        w.put_bool(self.adapt);
+        w.put_u8(self.target_bits);
+        self.stage.pack(w);
+        self.base_scale.pack(w);
+        w.put_u64(self.skipped);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        let delta = r.get_f64()?;
+        let adapt = r.get_bool()?;
+        let target_bits = r.get_u8()?;
+        let stage = Vec::<u32>::unpack(r)?;
+        let base_scale = Vec::<f64>::unpack(r)?;
+        let skipped = r.get_u64()?;
+        anyhow::ensure!(
+            stage.len() == base_scale.len(),
+            "snapshot trigger state: stage/base_scale length mismatch"
+        );
+        anyhow::ensure!(
+            delta.is_finite() && delta >= 0.0,
+            "snapshot trigger delta must be finite and non-negative"
+        );
+        Ok(Self { delta, adapt, target_bits, stage, base_scale, skipped })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    fn cfg_with(delta: f64, adapt: bool) -> ExperimentConfig {
+        let mut cfg = presets::ci_lasso();
+        cfg.trigger.delta = delta;
+        cfg.trigger.adapt = adapt;
+        if adapt {
+            cfg.compressor = CompressorKind::Qsgd { bits: 4 };
+        }
+        cfg
+    }
+
+    #[test]
+    fn disabled_state_is_inert() {
+        let t = TriggerState::new(&cfg_with(0.0, false), 3);
+        assert!(!t.enabled());
+        assert!(t.should_send(0.0)); // δ=0: even a zero delta ships
+        assert!(t.compressor_for(0).is_none());
+    }
+
+    #[test]
+    fn dead_band_gates_strictly() {
+        let t = TriggerState::new(&cfg_with(1e-3, false), 2);
+        assert!(t.enabled());
+        assert!(!t.should_send(1e-3)); // boundary: ≤ δ skips
+        assert!(t.should_send(1e-3 + 1e-9));
+        // non-finite deltas always transmit (sanitized downstream)
+        assert!(t.should_send(inf_norm(&[f64::NAN, 0.0])));
+    }
+
+    #[test]
+    fn inf_norm_forces_transmission_on_non_finite() {
+        assert_eq!(inf_norm(&[1.0, -3.0, 2.0]), 3.0);
+        assert_eq!(inf_norm(&[0.0, f64::INFINITY]), f64::INFINITY);
+        assert_eq!(inf_norm(&[f64::NAN]), f64::INFINITY);
+        assert_eq!(inf_norm(&[]), 0.0);
+    }
+
+    #[test]
+    fn schedule_refines_as_the_residual_shrinks() {
+        let mut t = TriggerState::new(&cfg_with(0.0, true), 1);
+        assert_eq!(t.bits(0), ADAPT_START_BITS);
+        t.observe(0, 8.0); // anchors base scale
+        assert_eq!(t.bits(0), ADAPT_START_BITS);
+        t.observe(0, 7.9); // above 8·0.25 = 2 → no advance
+        assert_eq!(t.bits(0), ADAPT_START_BITS);
+        t.observe(0, 1.9); // below 2 → stage 1
+        assert_eq!(t.bits(0), ADAPT_START_BITS + 1);
+        t.observe(0, 1e-6); // collapses through every remaining stage…
+        assert_eq!(t.bits(0), 4); // …but never past the configured width
+        assert_eq!(t.compressor_for(0).unwrap().bits(), 4);
+        // non-finite observations never move the schedule
+        t.observe(0, f64::INFINITY);
+        assert_eq!(t.bits(0), 4);
+    }
+
+    #[test]
+    fn schedule_is_per_node() {
+        let mut t = TriggerState::new(&cfg_with(0.0, true), 2);
+        t.observe(0, 4.0);
+        t.observe(0, 0.5);
+        t.observe(1, 4.0);
+        assert_eq!(t.bits(0), ADAPT_START_BITS + 1);
+        assert_eq!(t.bits(1), ADAPT_START_BITS);
+    }
+
+    #[test]
+    fn pack_round_trips() {
+        let mut t = TriggerState::new(&cfg_with(0.5, true), 3);
+        t.observe(1, 2.0);
+        t.observe(1, 0.1);
+        t.note_skip();
+        let mut w = Writer::new();
+        t.pack(&mut w);
+        let bytes = w.into_inner();
+        let mut r = Reader::new(&bytes);
+        let back = TriggerState::unpack(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.bits(1), t.bits(1));
+        assert_eq!(back.skipped(), 1);
+        assert!(back.matches(&cfg_with(0.5, true), 3));
+        assert!(!back.matches(&cfg_with(0.4, true), 3));
+    }
+}

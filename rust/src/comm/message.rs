@@ -34,6 +34,18 @@ pub enum NodeToServer {
     },
     /// Full-precision initial exchange (Algorithm 1 lines 1–4).
     InitFull { node: usize, x0: Vec<f64>, u0: Vec<f64> },
+    /// Event-trigger dead-band: the node computed but its EF-adjusted
+    /// delta stayed within δ, so nothing ships. The arrival still counts
+    /// toward the server's P/τ trigger (it resets the node's staleness),
+    /// but eq. (20) charges nothing — in a real deployment this is the
+    /// absence of a frame, observed by the server's arrival bookkeeping;
+    /// the explicit message is an artifact of the channel transport.
+    Skip {
+        node: usize,
+        /// Same monotone per-node sequence counter as `Update` (the dedup
+        /// contract covers skipped dispatches too).
+        seq: u64,
+    },
 }
 
 impl NodeToServer {
@@ -46,12 +58,16 @@ impl NodeToServer {
             NodeToServer::InitFull { x0, u0, .. } => {
                 MSG_HEADER_BYTES * 8 + (x0.len() + u0.len()) as u64 * INIT_BITS_PER_SCALAR
             }
+            // a skipped dispatch is the *absence* of a transmission
+            NodeToServer::Skip { .. } => 0,
         }
     }
 
     pub fn node(&self) -> usize {
         match self {
-            NodeToServer::Update { node, .. } | NodeToServer::InitFull { node, .. } => *node,
+            NodeToServer::Update { node, .. }
+            | NodeToServer::InitFull { node, .. }
+            | NodeToServer::Skip { node, .. } => *node,
         }
     }
 }
@@ -130,6 +146,16 @@ mod tests {
         // header + payload only: eq. (20) does not count the inclusion list
         assert_eq!(m.wire_bits(), (12 + 100) * 8);
         assert_eq!(ServerToNode::Shutdown.wire_bits(), 96);
+    }
+
+    /// A skipped dispatch is the absence of a frame: zero bits, whatever
+    /// the fleet or dimension — the event trigger's entire savings rest on
+    /// this being exactly 0, not a header charge.
+    #[test]
+    fn skip_charges_nothing() {
+        let m = NodeToServer::Skip { node: 7, seq: 42 };
+        assert_eq!(m.wire_bits(), 0);
+        assert_eq!(m.node(), 7);
     }
 
     /// The inclusion list is control plane: its length must not change the

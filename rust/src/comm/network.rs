@@ -38,12 +38,22 @@ pub struct NodeEndpoint {
 impl NodeEndpoint {
     /// Send with accounting + injected uplink latency + optional duplication.
     pub fn send(&mut self, mut msg: NodeToServer) -> anyhow::Result<()> {
-        if let NodeToServer::Update { seq, .. } = &mut msg {
-            *seq = self.seq;
-            self.seq += 1;
+        match &mut msg {
+            NodeToServer::Update { seq, .. } | NodeToServer::Skip { seq, .. } => {
+                *seq = self.seq;
+                self.seq += 1;
+            }
+            NodeToServer::InitFull { .. } => {}
         }
-        let bits = msg.wire_bits();
-        self.accounting.lock().unwrap().record_uplink(self.node, bits);
+        // A Skip is the *absence* of a transmission: neither bits nor the
+        // per-link message counter may move (the event trigger's zero-
+        // steady-state-uplink contract is asserted against both). The
+        // uplink latency and duplicate injection below still apply — the
+        // arrival signal itself propagates like any other delivery.
+        if !matches!(msg, NodeToServer::Skip { .. }) {
+            let bits = msg.wire_bits();
+            self.accounting.lock().unwrap().record_uplink(self.node, bits);
+        }
         let delay = self.profile.sample_uplink(&mut self.rng);
         if delay > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(delay));
@@ -134,13 +144,16 @@ impl ServerEndpoint {
     }
 
     fn is_duplicate(&mut self, msg: &NodeToServer) -> bool {
-        if let NodeToServer::Update { node, seq, .. } = msg {
-            if self.last_seq[*node] == Some(*seq) {
-                return true;
+        match msg {
+            NodeToServer::Update { node, seq, .. } | NodeToServer::Skip { node, seq } => {
+                if self.last_seq[*node] == Some(*seq) {
+                    return true;
+                }
+                self.last_seq[*node] = Some(*seq);
+                false
             }
-            self.last_seq[*node] = Some(*seq);
+            NodeToServer::InitFull { .. } => false,
         }
-        false
     }
 
     /// Unicast to one node (accounted).
@@ -263,6 +276,35 @@ mod tests {
         }
         // nothing further pending
         assert!(server.recv_timeout(Duration::from_millis(50)).unwrap().is_none());
+    }
+
+    /// A skipped dispatch shares the node's sequence counter (dedup covers
+    /// it) but leaves the uplink books — bits *and* message count — fully
+    /// untouched: it is the absence of a transmission.
+    #[test]
+    fn skip_is_deduplicated_but_never_accounted() {
+        let (mut server, mut nodes, acc) = star(
+            1,
+            &[LinkProfile::none()],
+            FaultSpec { dup_prob: 1.0 }, // every message duplicated
+            5,
+            0,
+        );
+        nodes[0].send(NodeToServer::Skip { node: 0, seq: 0 }).unwrap();
+        nodes[0].send(update(0, 1)).unwrap();
+        match server.recv().unwrap() {
+            NodeToServer::Skip { node: 0, seq: 0 } => {}
+            other => panic!("expected the skip first, got {other:?}"),
+        }
+        match server.recv().unwrap() {
+            NodeToServer::Update { seq: 1, .. } => {}
+            other => panic!("expected the update, got {other:?}"),
+        }
+        // the duplicates in between were dropped by the shared seq counter
+        assert!(server.recv_timeout(Duration::from_millis(50)).unwrap().is_none());
+        let acc = acc.lock().unwrap();
+        assert_eq!(acc.total_uplink_bits(), (12 + 16) * 8); // the Update only
+        assert_eq!(acc.link(0).uplink_msgs, 1);
     }
 
     #[test]

@@ -39,13 +39,40 @@ impl EstimateTracker {
     /// filled) — the engine hot path reuses one scratch vector per round so
     /// delta construction does no steady-state allocation.
     pub fn make_delta_into(&mut self, current: &[f64], out: &mut Vec<f64>) {
+        self.peek_delta_into(current, out);
+        self.note_sent(current);
+    }
+
+    /// The Δ [`Self::make_delta`] would transmit, **without** committing to
+    /// the transmission: no state is touched, so an event-triggered sender
+    /// can inspect ‖Δ‖∞ against its dead-band and skip the dispatch. A
+    /// skipped dispatch must leave the EF-off `last_true` base untouched
+    /// (the delta keeps accumulating against the last value the receiver
+    /// actually saw); the legacy `make_delta` path is peek + note_sent.
+    pub fn peek_delta_into(&self, current: &[f64], out: &mut Vec<f64>) {
+        // The zip below would silently truncate on a length mismatch,
+        // shipping a short frame that desynchronizes the two banks forever.
+        assert_eq!(
+            current.len(),
+            self.estimate.len(),
+            "delta base length mismatch: iterate has {} coords, tracker {}",
+            current.len(),
+            self.estimate.len()
+        );
         out.clear();
         let base: &[f64] = match &self.last_true {
             Some(lt) if !self.feedback => lt,
             _ => &self.estimate,
         };
         out.extend(current.iter().zip(base).map(|(c, b)| c - b));
+    }
+
+    /// Record that `current` was actually transmitted (the EF-off mode's
+    /// delta base is the last *sent* iterate). Paired with
+    /// [`Self::peek_delta_into`]; call only on a realized transmission.
+    pub fn note_sent(&mut self, current: &[f64]) {
         if let Some(lt) = &mut self.last_true {
+            assert_eq!(lt.len(), current.len(), "note_sent length mismatch");
             lt.copy_from_slice(current);
         }
     }
@@ -53,10 +80,27 @@ impl EstimateTracker {
     /// Apply a dequantized message to the estimate: ŷ += C(Δ).
     /// Called symmetrically at sender (mirror) and receiver.
     pub fn commit(&mut self, dequantized: &[f64]) {
-        debug_assert_eq!(dequantized.len(), self.estimate.len());
+        assert_eq!(
+            dequantized.len(),
+            self.estimate.len(),
+            "commit length mismatch: message has {} coords, tracker {}",
+            dequantized.len(),
+            self.estimate.len()
+        );
+        let mut finite = true;
         for (e, d) in self.estimate.iter_mut().zip(dequantized) {
+            finite &= d.is_finite();
             *e += d;
         }
+        // Fail loudly at the corruption boundary: folding a NaN/±∞ into
+        // the bank is permanent (EF telescopes the error, it never washes
+        // out). Every in-tree compressor sanitizes its output, so this
+        // firing means a decoded frame or a custom compressor broke the
+        // totality contract.
+        assert!(
+            finite,
+            "non-finite dequantized delta would poison the estimate bank permanently"
+        );
     }
 
     pub fn estimate(&self) -> &[f64] {
@@ -189,6 +233,47 @@ mod tests {
             receiver.commit(&decoded);
             assert_eq!(sender.estimate(), receiver.estimate());
         }
+    }
+
+    /// peek must be pure: with EF off, only note_sent (a realized
+    /// transmission) may move the delta base — a skipped dispatch keeps
+    /// accumulating against the last value the receiver actually saw.
+    #[test]
+    fn peek_is_pure_and_skips_accumulate() {
+        let mut t = EstimateTracker::new(vec![0.0; 2], false);
+        let mut d = Vec::new();
+        t.peek_delta_into(&[1.0, 2.0], &mut d);
+        assert_eq!(d, vec![1.0, 2.0]);
+        // peek again — base unchanged, same delta (a skip happened)
+        t.peek_delta_into(&[1.5, 2.0], &mut d);
+        assert_eq!(d, vec![1.5, 2.0]);
+        // realized transmission moves the base
+        t.note_sent(&[1.5, 2.0]);
+        t.peek_delta_into(&[2.0, 2.0], &mut d);
+        assert_eq!(d, vec![0.5, 0.0]);
+        // make_delta == peek + note_sent
+        let d2 = t.make_delta(&[3.0, 3.0]);
+        assert_eq!(d2, vec![1.0, 1.0]);
+        t.peek_delta_into(&[3.0, 3.0], &mut d);
+        assert_eq!(d, vec![0.0, 0.0]);
+    }
+
+    /// Regression: `current.iter().zip(base)` silently dropped the excess
+    /// coordinates on a length mismatch — now it fails loudly.
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic_instead_of_truncating() {
+        let mut t = EstimateTracker::new(vec![0.0; 4], true);
+        t.make_delta(&[1.0; 3]);
+    }
+
+    /// Committing a non-finite message is permanent estimate-bank
+    /// poisoning — it must abort loudly, not fold.
+    #[test]
+    #[should_panic(expected = "poison the estimate bank")]
+    fn non_finite_commit_fails_loudly() {
+        let mut t = EstimateTracker::new(vec![0.0; 2], true);
+        t.commit(&[1.0, f64::NAN]);
     }
 
     #[test]

@@ -2,8 +2,7 @@
 //! async-ADMM baseline the paper compares against. Its wire size is what
 //! the ~90% reduction headline is measured relative to.
 
-use super::wire::encode_dense64;
-use super::{Compressed, Compressor};
+use super::{sanitize, Compressed, Compressor};
 use crate::util::rng::Pcg64;
 
 #[derive(Clone, Copy, Debug)]
@@ -14,17 +13,29 @@ impl Compressor for Identity {
         "identity".into()
     }
 
-    fn compress(&self, delta: &[f64], _rng: &mut Pcg64) -> Compressed {
-        Compressed { dequantized: delta.to_vec(), wire: encode_dense64(delta) }
+    fn compress(&self, delta: &[f64], rng: &mut Pcg64) -> Compressed {
+        let mut out = Compressed::empty();
+        self.compress_into(delta, rng, &mut out);
+        out
     }
 
     /// Pooled-buffer variant: clears and refills `out`, reusing capacity —
     /// no steady-state allocation. The frame comes from the same
     /// [`super::wire::encode_dense64_into`] encoder `compress` uses.
+    /// Lossless for finite inputs; non-finite coordinates are dropped
+    /// (0.0) like every other compressor, so a diverged delta cannot
+    /// poison the receiving estimate bank even on the baseline path.
     fn compress_into(&self, delta: &[f64], _rng: &mut Pcg64, out: &mut Compressed) {
-        out.dequantized.clear();
-        out.dequantized.extend_from_slice(delta);
-        super::wire::encode_dense64_into(delta, &mut out.wire);
+        if delta.iter().all(|v| v.is_finite()) {
+            out.dequantized.clear();
+            out.dequantized.extend_from_slice(delta);
+            super::wire::encode_dense64_into(delta, &mut out.wire);
+        } else {
+            let clean: Vec<f64> = delta.iter().map(|&v| sanitize(v)).collect();
+            out.dequantized.clear();
+            out.dequantized.extend_from_slice(&clean);
+            super::wire::encode_dense64_into(&clean, &mut out.wire);
+        }
     }
 }
 
@@ -40,18 +51,26 @@ impl Compressor for Identity32 {
         "identity32".into()
     }
 
-    fn compress(&self, delta: &[f64], _rng: &mut Pcg64) -> Compressed {
-        let wire = super::wire::encode_dense32(delta);
-        let dequantized = delta.iter().map(|&x| x as f32 as f64).collect();
-        Compressed { dequantized, wire }
+    fn compress(&self, delta: &[f64], rng: &mut Pcg64) -> Compressed {
+        let mut out = Compressed::empty();
+        self.compress_into(delta, rng, &mut out);
+        out
     }
 
     /// Pooled-buffer variant via [`super::wire::encode_dense32_into`] —
-    /// one source of truth for the dense32 frame.
+    /// one source of truth for the dense32 frame. Non-finite coordinates
+    /// are dropped (0.0), as on every other compressor.
     fn compress_into(&self, delta: &[f64], _rng: &mut Pcg64, out: &mut Compressed) {
-        out.dequantized.clear();
-        out.dequantized.extend(delta.iter().map(|&x| x as f32 as f64));
-        super::wire::encode_dense32_into(delta, &mut out.wire);
+        if delta.iter().all(|v| v.is_finite()) {
+            out.dequantized.clear();
+            out.dequantized.extend(delta.iter().map(|&x| x as f32 as f64));
+            super::wire::encode_dense32_into(delta, &mut out.wire);
+        } else {
+            let clean: Vec<f64> = delta.iter().map(|&v| sanitize(v)).collect();
+            out.dequantized.clear();
+            out.dequantized.extend(clean.iter().map(|&x| x as f32 as f64));
+            super::wire::encode_dense32_into(&clean, &mut out.wire);
+        }
     }
 }
 

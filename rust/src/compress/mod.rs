@@ -24,6 +24,21 @@ pub mod wire;
 use crate::snapshot::codec::{Pack, Reader, Writer};
 use crate::util::rng::Pcg64;
 
+/// Totality guard shared by every compressor: a non-finite coordinate
+/// (diverged local solve, EF residual blow-up) contributes **0** to the
+/// frame instead of riding the wire as NaN/±∞ and poisoning both ends'
+/// estimate banks at commit. Finite values pass through untouched, so all
+/// legacy bitstreams are unchanged; the loud failure for actual state
+/// corruption lives in [`error_feedback::EstimateTracker::commit`].
+#[inline]
+pub fn sanitize(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
 /// Result of compressing a vector.
 #[derive(Clone, Debug)]
 pub struct Compressed {

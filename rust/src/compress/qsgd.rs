@@ -8,8 +8,22 @@
 //! test feeds both the same noise and asserts identical levels.
 
 use super::wire::encode_qsgd;
-use super::{Compressed, Compressor};
+use super::{sanitize, Compressed, Compressor};
 use crate::util::rng::Pcg64;
+
+/// ‖Δ‖_max over the *finite* coordinates only. A single ∞ used to make
+/// `norm = inf`, collapsing every level to 0 and dequantizing the ∞
+/// coordinate to `inf · 0 / S = NaN` — which `EstimateTracker::commit`
+/// then folded into the estimate bank permanently (EF never recovers).
+/// Non-finite coordinates are instead dropped from the frame (level 0,
+/// dequantized +0.0); [`EstimateTracker::commit`] asserts the bank stays
+/// finite. For all-finite input this is bitwise the old fold (`f64::max`
+/// already ignored NaN; the guard only changes ±∞ handling).
+///
+/// [`EstimateTracker::commit`]: super::error_feedback::EstimateTracker::commit
+fn finite_max_norm(delta: &[f64]) -> f64 {
+    delta.iter().fold(0.0f64, |m, x| if x.is_finite() { m.max(x.abs()) } else { m })
+}
 
 #[derive(Clone, Copy, Debug)]
 pub struct Qsgd {
@@ -37,7 +51,7 @@ impl Qsgd {
     pub fn quantize_with_noise(&self, delta: &[f64], noise: &[f64]) -> (Vec<i32>, f64) {
         assert_eq!(delta.len(), noise.len());
         let s = self.s() as f64;
-        let norm = delta.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        let norm = finite_max_norm(delta);
         if norm == 0.0 {
             return (vec![0; delta.len()], 0.0);
         }
@@ -45,6 +59,7 @@ impl Qsgd {
             .iter()
             .zip(noise)
             .map(|(&d, &n)| {
+                let d = sanitize(d);
                 let y = d.abs() / norm * s;
                 let p = y.floor().min(s - 1.0);
                 let frac = y - p;
@@ -109,7 +124,7 @@ impl Compressor for Qsgd {
     fn compress_into(&self, delta: &[f64], rng: &mut Pcg64, out: &mut Compressed) {
         let m = delta.len();
         let s = self.s() as f64;
-        let norm = delta.iter().fold(0.0f64, |mx, x| mx.max(x.abs()));
+        let norm = finite_max_norm(delta);
 
         // frame header (layout of wire::encode_qsgd): tag, m, q, norm
         let payload_len = super::packing::packed_len(m, self.bits);
@@ -143,7 +158,7 @@ impl Compressor for Qsgd {
         let mut nbits: u32 = 0;
         let mut byte_pos = 0usize;
         for i in 0..m {
-            let d = delta[i];
+            let d = sanitize(delta[i]);
             let y = d.abs() / norm * s;
             let p = y.floor().min(s - 1.0);
             let frac = y - p;
@@ -301,6 +316,41 @@ mod tests {
             for (x, y) in decoded.iter().zip(&a.dequantized) {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
+        }
+    }
+
+    /// Regression: an ∞ coordinate used to make norm = inf, collapse every
+    /// level to 0, and dequantize the ∞ itself to NaN (`inf · 0 / S`) —
+    /// poisoning the estimate bank at commit. Non-finite coordinates are
+    /// dropped (level 0, +0.0), the finite ones quantize against the finite
+    /// norm, and fused stays bitwise-equal to reference.
+    #[test]
+    fn non_finite_coordinates_are_dropped_not_poisonous() {
+        for q in [2u8, 3, 8] {
+            let c = Qsgd::new(q);
+            let delta =
+                [f64::INFINITY, 1.5, f64::NAN, -2.0, f64::NEG_INFINITY, 0.25];
+            let a = c.compress(&delta, &mut Pcg64::seed_from_u64(23));
+            let b = c.compress_reference(&delta, &mut Pcg64::seed_from_u64(23));
+            assert_eq!(a.wire, b.wire, "q={q}");
+            assert_eq!(a.dequantized, b.dequantized, "q={q}");
+            assert!(a.dequantized.iter().all(|v| v.is_finite()), "q={q}");
+            // finite norm: the largest finite magnitude, so the -2.0 slot
+            // stays exact at max-noise and the non-finite slots carry 0
+            assert_eq!(a.dequantized[0], 0.0);
+            assert_eq!(a.dequantized[2], 0.0);
+            assert_eq!(a.dequantized[4], 0.0);
+            assert_eq!(c.decode(&a.wire, 6).unwrap(), a.dequantized);
+            // all-non-finite vector behaves like the zero vector, with the
+            // RNG stream position still aligned across the two paths
+            let bad = [f64::NAN, f64::INFINITY];
+            let mut r1 = Pcg64::seed_from_u64(3);
+            let mut r2 = Pcg64::seed_from_u64(3);
+            let x = c.compress(&bad, &mut r1);
+            let y = c.compress_reference(&bad, &mut r2);
+            assert_eq!(x.wire, y.wire);
+            assert!(x.dequantized.iter().all(|&v| v == 0.0));
+            assert_eq!(r1.next_u64(), r2.next_u64());
         }
     }
 

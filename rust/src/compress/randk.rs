@@ -3,7 +3,7 @@
 //! (biased); error feedback supplies convergence, as with top-k.
 
 use super::wire::{encode_randk, randk_indices};
-use super::{Compressed, Compressor};
+use super::{sanitize, Compressed, Compressor};
 use crate::util::rng::Pcg64;
 
 #[derive(Clone, Copy, Debug)]
@@ -24,7 +24,8 @@ impl RandK {
 
 impl Compressor for RandK {
     fn name(&self) -> String {
-        format!("randk{}", (self.frac * 1000.0).round() as u64)
+        // clamped to the parser's 1..=1000 permille range, as in TopK::name
+        format!("randk{}", ((self.frac * 1000.0).round() as u64).clamp(1, 1000))
     }
 
     fn compress(&self, delta: &[f64], rng: &mut Pcg64) -> Compressed {
@@ -32,7 +33,8 @@ impl Compressor for RandK {
         let k = self.k_for(m);
         let seed = rng.next_u64();
         let idx = randk_indices(m, k, seed);
-        let values: Vec<f64> = idx.iter().map(|&i| delta[i]).collect();
+        // a sampled non-finite coordinate is dropped (0.0), not transmitted
+        let values: Vec<f64> = idx.iter().map(|&i| sanitize(delta[i])).collect();
         let mut dequantized = vec![0.0; m];
         for (&i, &v) in idx.iter().zip(&values) {
             dequantized[i] = v;

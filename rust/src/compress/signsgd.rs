@@ -3,7 +3,7 @@
 //! bits-vs-fidelity ablation.
 
 use super::wire::encode_sign;
-use super::{Compressed, Compressor};
+use super::{sanitize, Compressed, Compressor};
 use crate::util::rng::Pcg64;
 
 #[derive(Clone, Copy, Debug)]
@@ -16,8 +16,10 @@ impl Compressor for SignSgd {
 
     fn compress(&self, delta: &[f64], _rng: &mut Pcg64) -> Compressed {
         let m = delta.len().max(1);
-        let scale = delta.iter().map(|x| x.abs()).sum::<f64>() / m as f64;
-        let negs: Vec<bool> = delta.iter().map(|&x| x < 0.0).collect();
+        // non-finite coordinates contribute 0 to the ℓ₁ scale (one ∞ would
+        // otherwise blow the scale — and thus every coordinate — to ∞)
+        let scale = delta.iter().map(|x| sanitize(*x).abs()).sum::<f64>() / m as f64;
+        let negs: Vec<bool> = delta.iter().map(|&x| sanitize(x) < 0.0).collect();
         let dequantized = negs.iter().map(|&n| if n { -scale } else { scale }).collect();
         Compressed { dequantized, wire: encode_sign(&negs, scale) }
     }

@@ -4,7 +4,7 @@
 //! what the EF ablation demonstrates.
 
 use super::wire::encode_topk;
-use super::{Compressed, Compressor};
+use super::{sanitize, Compressed, Compressor};
 use crate::util::rng::Pcg64;
 
 #[derive(Clone, Copy, Debug)]
@@ -25,19 +25,29 @@ impl TopK {
 
 impl Compressor for TopK {
     fn name(&self) -> String {
-        format!("topk{}", (self.frac * 1000.0).round() as u64)
+        // Round-trip with `CompressorKind::parse`: a fraction below 0.0005
+        // used to round to "topk0", which the parser (rightly) rejects —
+        // clamp to the 1..=1000 permille range the parser accepts.
+        format!("topk{}", ((self.frac * 1000.0).round() as u64).clamp(1, 1000))
     }
 
     fn compress(&self, delta: &[f64], _rng: &mut Pcg64) -> Compressed {
         let m = delta.len();
         let k = self.k_for(m);
         let mut order: Vec<usize> = (0..m).collect();
+        // Selection runs on the sanitized magnitudes under `total_cmp`: the
+        // seed's `partial_cmp(..).unwrap()` aborted the whole run on a
+        // single NaN coordinate (select_nth panics on incomparable keys),
+        // and a selected ±∞ would have ridden the wire into the estimate
+        // banks. Non-finite coordinates rank as 0 and encode as 0.0 —
+        // dropped from the update, not transmitted as poison.
         order.select_nth_unstable_by(k - 1, |&a, &b| {
-            delta[b].abs().partial_cmp(&delta[a].abs()).unwrap()
+            sanitize(delta[b]).abs().total_cmp(&sanitize(delta[a]).abs())
         });
         let mut keep: Vec<usize> = order[..k].to_vec();
         keep.sort_unstable();
-        let entries: Vec<(usize, f64)> = keep.iter().map(|&i| (i, delta[i])).collect();
+        let entries: Vec<(usize, f64)> =
+            keep.iter().map(|&i| (i, sanitize(delta[i]))).collect();
         let mut dequantized = vec![0.0; m];
         for &(i, v) in &entries {
             dequantized[i] = v;
@@ -71,6 +81,39 @@ mod tests {
     fn k_at_least_one() {
         assert_eq!(TopK::new(0.001).k_for(10), 1);
         assert_eq!(TopK::new(1.0).k_for(10), 10);
+    }
+
+    /// Regression: a single NaN coordinate aborted the run inside
+    /// `select_nth_unstable_by` (partial_cmp().unwrap() on incomparable
+    /// keys). Non-finite coordinates now rank as 0 and encode as 0.0.
+    #[test]
+    fn non_finite_inputs_neither_panic_nor_reach_the_wire() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let t = TopK::new(0.5);
+        let delta = vec![f64::NAN, 5.0, f64::INFINITY, -3.0, f64::NEG_INFINITY, 0.1];
+        let c = t.compress(&delta, &mut rng);
+        assert!(c.dequantized.iter().all(|v| v.is_finite()));
+        // the finite magnitudes win the selection
+        assert_eq!(c.dequantized[1], 5.0);
+        assert_eq!(c.dequantized[3], -3.0);
+        assert_eq!(t.decode(&c.wire, 6).unwrap(), c.dequantized);
+        // all-NaN input degrades to an all-zero update
+        let c = t.compress(&[f64::NAN; 8], &mut rng);
+        assert!(c.dequantized.iter().all(|&v| v == 0.0));
+    }
+
+    /// Regression: name() rounded fractions below 0.0005 to "topk0", which
+    /// `CompressorKind::parse` rejects — the label must stay parseable.
+    #[test]
+    fn name_round_trips_through_parse_for_tiny_fractions() {
+        use crate::compress::CompressorKind;
+        for frac in [0.0001, 0.0004, 0.001, 0.05, 1.0] {
+            let name = TopK::new(frac).name();
+            CompressorKind::parse(&name)
+                .unwrap_or_else(|e| panic!("frac={frac}: '{name}' unparseable: {e}"));
+        }
+        assert_eq!(TopK::new(0.0001).name(), "topk1");
+        assert_eq!(TopK::new(1.0).name(), "topk1000");
     }
 
     #[test]

@@ -85,6 +85,58 @@ impl EngineKind {
     }
 }
 
+/// Event-triggered transmission + adaptive quantization (the dead-band /
+/// level-schedule layer over the compressor + EF pipeline).
+///
+/// `delta == 0.0` and `adapt == false` (the default) disables the layer
+/// entirely: every selected node transmits every dispatch at the configured
+/// quantizer resolution — byte-for-byte the pre-trigger behavior (a strict
+/// `‖Δ‖∞ > 0` gate would already diverge: today a zero delta still ships a
+/// frame, charges bits, and consumes quantizer RNG).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TriggerConfig {
+    /// Dead-band threshold δ: a node transmits only when its EF-adjusted
+    /// delta satisfies ‖Δ‖∞ > δ (the larger of the x and u delta norms —
+    /// one uplink frame carries both payloads). A skipped dispatch still
+    /// counts as an arrival for the P/τ trigger (liveness via the τ−1
+    /// force-wait) but puts **0 bits on the wire** (eq. 20 charges only
+    /// realized transmissions).
+    pub delta: f64,
+    /// Per-node adaptive QSGD level schedule: start coarse
+    /// ([`ADAPT_START_BITS`]) and refine one bit per stage as the realized
+    /// delta magnitude shrinks below `base·ADAPT_REFINE^(stage+1)`, where
+    /// `base` is the node's first observed ‖Δ‖∞. Requires a `qsgdQ`
+    /// compressor (the schedule is a level count).
+    pub adapt: bool,
+}
+
+impl Default for TriggerConfig {
+    fn default() -> Self {
+        Self { delta: 0.0, adapt: false }
+    }
+}
+
+/// First stage of the adaptive schedule: 2-bit QSGD (or the configured
+/// bit-width when that is already coarser).
+pub const ADAPT_START_BITS: u8 = 2;
+
+/// Per-stage refinement threshold decay: stage s+1 begins once the realized
+/// ‖Δ‖∞ drops below `base_scale · ADAPT_REFINE^(s+1)`.
+pub const ADAPT_REFINE: f64 = 0.25;
+
+impl TriggerConfig {
+    /// Anything beyond the bit-exact legacy path?
+    pub fn enabled(&self) -> bool {
+        self.delta > 0.0 || self.adapt
+    }
+
+    /// The dead-band gate. `delta == 0` means *disabled*, not "transmit
+    /// only nonzero deltas" — see the struct docs.
+    pub fn should_send(&self, norm_inf: f64) -> bool {
+        self.delta == 0.0 || norm_inf > self.delta
+    }
+}
+
 /// The `simulate-async()` oracle (§5.1/§5.2): two groups with selection
 /// probabilities 0.1 / 0.8.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -142,6 +194,9 @@ pub struct ExperimentConfig {
     /// (it forwards earlier when no further child update is in flight, so
     /// the server trigger stays live). Ignored by `topology = star`.
     pub p_tier: usize,
+    /// Event-triggered transmission + adaptive level schedule
+    /// ([`TriggerConfig`]); the default is the bit-exact legacy path.
+    pub trigger: TriggerConfig,
 }
 
 impl ExperimentConfig {
@@ -175,6 +230,18 @@ impl ExperimentConfig {
         );
         self.topology.validate(n)?;
         anyhow::ensure!(self.p_tier >= 1, "p_tier must be >= 1");
+        anyhow::ensure!(
+            self.trigger.delta.is_finite() && self.trigger.delta >= 0.0,
+            "trigger delta must be finite and >= 0 (got {}); 0 disables the dead-band",
+            self.trigger.delta
+        );
+        if self.trigger.adapt {
+            anyhow::ensure!(
+                matches!(self.compressor, CompressorKind::Qsgd { .. }),
+                "--adapt-levels schedules QSGD level counts; compressor is '{}'",
+                self.compressor.label()
+            );
+        }
         Ok(())
     }
 
@@ -261,6 +328,8 @@ impl ExperimentConfig {
             ),
             ("topology", Json::Str(self.topology.label())),
             ("p_tier", Json::Num(self.p_tier as f64)),
+            ("trigger_delta", Json::Num(self.trigger.delta)),
+            ("adapt_levels", Json::Bool(self.trigger.adapt)),
         ])
     }
 }
@@ -354,6 +423,35 @@ mod tests {
         // round-trips through the parser
         let parsed = Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed.get("compressor").unwrap().as_str(), Some("qsgd3"));
+    }
+
+    #[test]
+    fn trigger_validation_and_semantics() {
+        // defaults are the disabled legacy path
+        let c = base();
+        assert!(!c.trigger.enabled());
+        assert!(c.trigger.should_send(0.0), "delta=0 means disabled, not a >0 gate");
+        let mut c = base();
+        c.trigger.delta = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.trigger.delta = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.trigger.adapt = true;
+        c.compressor = CompressorKind::Identity;
+        assert!(c.validate().is_err(), "adaptive levels need a QSGD compressor");
+        let mut c = base();
+        c.trigger = TriggerConfig { delta: 1e-3, adapt: true };
+        c.validate().unwrap();
+        assert!(c.trigger.enabled());
+        assert!(!c.trigger.should_send(1e-3), "gate is strict: ‖Δ‖∞ > δ");
+        assert!(c.trigger.should_send(2e-3));
+        // trigger knobs are part of the resume identity
+        let j = c.to_json();
+        assert_eq!(j.get("trigger_delta").unwrap().as_f64(), Some(1e-3));
+        assert_eq!(j.get("adapt_levels"), Some(&Json::Bool(true)));
+        assert_ne!(c.resume_digest(), base().resume_digest());
     }
 
     #[test]

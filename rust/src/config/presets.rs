@@ -1,6 +1,6 @@
 //! Named experiment presets matching the paper's §5 setups.
 
-use super::{Backend, EngineKind, ExperimentConfig, OracleConfig, ProblemKind};
+use super::{Backend, EngineKind, ExperimentConfig, OracleConfig, ProblemKind, TriggerConfig};
 use crate::comm::latency::LatencyModel;
 use crate::comm::profile::LinkConfig;
 use crate::compress::CompressorKind;
@@ -33,6 +33,7 @@ pub fn fig3(tau: usize) -> ExperimentConfig {
         link: LinkConfig::none(),
         topology: TopologyKind::Star,
         p_tier: 1,
+        trigger: TriggerConfig::default(),
     }
 }
 
@@ -59,6 +60,7 @@ pub fn fig4() -> ExperimentConfig {
         link: LinkConfig::none(),
         topology: TopologyKind::Star,
         p_tier: 1,
+        trigger: TriggerConfig::default(),
     }
 }
 
@@ -91,6 +93,7 @@ pub fn ci_lasso() -> ExperimentConfig {
         link: LinkConfig::none(),
         topology: TopologyKind::Star,
         p_tier: 1,
+        trigger: TriggerConfig::default(),
     }
 }
 
@@ -119,6 +122,7 @@ pub fn e2e_mlp() -> ExperimentConfig {
         }),
         topology: TopologyKind::Star,
         p_tier: 1,
+        trigger: TriggerConfig::default(),
     }
 }
 

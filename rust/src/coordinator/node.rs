@@ -3,6 +3,7 @@
 //! stream is cumulative), runs its local update, and ships compressed
 //! deltas back to the server.
 
+use crate::admm::trigger::{inf_norm, TriggerState};
 use crate::comm::message::{NodeToServer, ServerToNode};
 use crate::comm::network::NodeEndpoint;
 use crate::compress::error_feedback::EstimateTracker;
@@ -23,6 +24,9 @@ pub struct NodeWorker {
     xhat: EstimateTracker,
     uhat: EstimateTracker,
     zhat: Option<EstimateTracker>,
+    /// This node's event-trigger / adaptive-schedule state (a fleet of
+    /// one: the worker owns only its own node, index 0).
+    trigger: TriggerState,
     rng: Pcg64,
 }
 
@@ -46,6 +50,7 @@ impl NodeWorker {
             xhat: EstimateTracker::new(x0, cfg.error_feedback),
             uhat: EstimateTracker::new(vec![0.0; m], cfg.error_feedback),
             zhat: None,
+            trigger: TriggerState::new(cfg, 1),
             rng,
         }
     }
@@ -128,10 +133,39 @@ impl NodeWorker {
             self.u[j] += x_new[j] - zhat[j];
         }
         self.x = x_new;
-        let dx = self.xhat.make_delta(&self.x);
-        let du = self.uhat.make_delta(&self.u);
-        let cx = self.compressor.compress(&dx, &mut self.rng);
-        let cu = self.compressor.compress(&du, &mut self.rng);
+        // Event trigger: peek the EF-adjusted deltas first; within the
+        // dead-band the payload is withheld and a zero-bit Skip carries
+        // the arrival credit instead (no bank mutation, no quantizer
+        // draw). peek + note_sent == the old make_delta, so the disabled
+        // path is byte-for-byte the pre-trigger behavior.
+        let mut dx = Vec::with_capacity(self.m);
+        let mut du = Vec::with_capacity(self.m);
+        self.xhat.peek_delta_into(&self.x, &mut dx);
+        self.uhat.peek_delta_into(&self.u, &mut du);
+        if self.trigger.enabled() {
+            let norm = inf_norm(&dx).max(inf_norm(&du));
+            self.trigger.observe(0, norm);
+            if !self.trigger.should_send(norm) {
+                self.trigger.note_skip();
+                let sent = self.ep.send(NodeToServer::Skip {
+                    node: self.ep.node,
+                    seq: 0, // stamped by the endpoint
+                });
+                return Ok(sent.is_ok());
+            }
+        }
+        self.xhat.note_sent(&self.x);
+        self.uhat.note_sent(&self.u);
+        let (cx, cu) = match self.trigger.compressor_for(0) {
+            // adaptive schedule: this node's current QSGD width
+            Some(q) => {
+                (q.compress(&dx, &mut self.rng), q.compress(&du, &mut self.rng))
+            }
+            None => (
+                self.compressor.compress(&dx, &mut self.rng),
+                self.compressor.compress(&du, &mut self.rng),
+            ),
+        };
         self.xhat.commit(&cx.dequantized);
         self.uhat.commit(&cu.dequantized);
         let sent = self.ep.send(NodeToServer::Update {

@@ -49,6 +49,10 @@ pub struct ServerLoop {
     /// lever; liveness beats batching on real channels).
     tier: Option<AggregatorTier>,
     rng_topology: Pcg64,
+    /// Event-trigger dead-band δ for the colocated aggregator tier: a
+    /// ready partial with ‖pending‖∞ ≤ δ forwards credit only (zero bits).
+    /// 0.0 disables the gate (every ready partial re-quantizes as before).
+    trigger_delta: f64,
     d: Vec<usize>,
     pending: BTreeSet<usize>,
     rng: Pcg64,
@@ -63,6 +67,11 @@ pub struct ServerLoop {
     /// mode only). At most one per node: a node recomputes only after its
     /// previous update was folded into a broadcast it has seen.
     stash: BTreeMap<usize, (Vec<f64>, Vec<f64>)>,
+    /// Dead-banded (zero-payload) reports that arrived ahead of their
+    /// recorded round (replay mode only). Disjoint from [`Self::stash`]
+    /// by the same one-in-flight cadence: a node's dispatch is either a
+    /// payload or a skip, never both.
+    skip_stash: BTreeSet<usize>,
     /// Replay mode only: the realized arrival set of every fired round
     /// (ascending) — what the replay-parity tests diff against the
     /// recording. Left empty in normal runs (a long deployment would
@@ -103,11 +112,13 @@ impl ServerLoop {
             acc: ConsensusAccumulator::new(m, cfg.consensus_refresh_every),
             tier: AggregatorTier::new(cfg.topology, n, m, cfg.p_tier, ef),
             rng_topology,
+            trigger_delta: cfg.trigger.delta,
             d: vec![0; n],
             pending: BTreeSet::new(),
             rng,
             replay: None,
             stash: BTreeMap::new(),
+            skip_stash: BTreeSet::new(),
             round_arrivals: Vec::new(),
             stall_timeout: Duration::from_secs(60),
         }
@@ -136,7 +147,7 @@ impl ServerLoop {
                     self.uhat[node].reset(&u0);
                     inited[node] = true;
                 }
-                NodeToServer::Update { .. } => {
+                NodeToServer::Update { .. } | NodeToServer::Skip { .. } => {
                     anyhow::bail!("update before init handshake completed")
                 }
             }
@@ -256,18 +267,41 @@ impl ServerLoop {
                             // a virtual instant against)
                             let g = t.route(node, &mut self.rng_topology);
                             t.deliver(node, &dx, &du, 0.0);
-                            let fw = t.flush(g, self.compressor.as_ref(), &mut self.rng);
-                            self.accounting.lock().unwrap().record_uplink(
-                                self.n + g,
-                                MSG_HEADER_BYTES * 8 + fw.cx.wire_bits() + fw.cu.wire_bits(),
-                            );
-                            t.commit(g, &fw.cx.dequantized, &fw.cu.dequantized);
-                            self.acc.fold(&fw.cx.dequantized, &fw.cu.dequantized);
-                            for (child, _) in fw.children {
-                                self.pending.insert(child);
+                            // Event-trigger dead-band at the aggregator:
+                            // a partial within δ forwards credit only —
+                            // the mass stays pending (Kahan-tracked) and
+                            // rides with the next over-threshold flush.
+                            if self.trigger_delta > 0.0
+                                && t.pending_inf_norm(g) <= self.trigger_delta
+                            {
+                                for (child, _) in t.credit_only_flush(g) {
+                                    self.pending.insert(child);
+                                }
+                            } else {
+                                let fw =
+                                    t.flush(g, self.compressor.as_ref(), &mut self.rng);
+                                self.accounting.lock().unwrap().record_uplink(
+                                    self.n + g,
+                                    MSG_HEADER_BYTES * 8
+                                        + fw.cx.wire_bits()
+                                        + fw.cu.wire_bits(),
+                                );
+                                t.commit(g, &fw.cx.dequantized, &fw.cu.dequantized);
+                                self.acc.fold(&fw.cx.dequantized, &fw.cu.dequantized);
+                                for (child, _) in fw.children {
+                                    self.pending.insert(child);
+                                }
                             }
                         }
                     }
+                }
+                Some(NodeToServer::Skip { node, .. }) => {
+                    // Dead-banded dispatch: zero bits on the books, but
+                    // the arrival still counts toward the P/τ trigger
+                    // (resets this node's staleness). No bank commit, no
+                    // consensus fold, and no aggregator hop — an empty
+                    // report needs no aggregation.
+                    self.pending.insert(node);
                 }
                 // Duplicated InitFull frames (fault injection) are ignored —
                 // the handshake already completed.
@@ -303,6 +337,8 @@ impl ServerLoop {
         for &node in &target {
             if let Some((dx, du)) = self.stash.remove(&node) {
                 self.fold_update(node, &dx, &du);
+            } else if self.skip_stash.remove(&node) {
+                self.pending.insert(node);
             }
         }
         while !target.iter().all(|i| self.pending.contains(i)) {
@@ -315,6 +351,16 @@ impl ServerLoop {
                     } else {
                         // ahead of its recorded round — hold it back
                         self.stash.insert(node, (dx, du));
+                    }
+                }
+                Some(NodeToServer::Skip { node, .. }) => {
+                    // a skip is arrival credit with no payload: fold it
+                    // into this round if the recording prescribes it,
+                    // otherwise hold it for its recorded round
+                    if target.contains(&node) && !self.pending.contains(&node) {
+                        self.pending.insert(node);
+                    } else {
+                        self.skip_stash.insert(node);
                     }
                 }
                 Some(NodeToServer::InitFull { .. }) => {}

@@ -8,6 +8,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod resume;
 pub mod topology;
+pub mod trigger;
 
 use crate::admm::runner::McResult;
 use crate::metrics::RunRecorder;

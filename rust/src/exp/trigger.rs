@@ -1,0 +1,225 @@
+//! Event-trigger / adaptive-quantization ablation: δ × level-schedule vs
+//! fixed QSGD on bits-to-target.
+//!
+//! Two problem families, both Fig. 3-style scales: the exact-update LASSO
+//! (Woodbury closed-form local solve) and the inexact-update logistic
+//! regression (K gradient steps, the related work's [5]–[8] workload). For
+//! each, the grid crosses the dead-band δ ∈ {0, δ_lo, δ_hi} with the
+//! adaptive level schedule on/off; the δ=0 + fixed cell *is* today's QSGD
+//! baseline (byte-for-byte — the parity suites assert it), so every other
+//! row reads as a savings (or regression) against it on the same axis:
+//! normalized communication bits to reach the accuracy target (eq. 20).
+//!
+//! Invoke with `qadmm trigger [--iters N] [--trials N] [--target X]
+//! [--quick]`.
+
+use crate::admm::runner::{self, ProblemFactory};
+use crate::compress::CompressorKind;
+use crate::config::{presets, EngineKind, ExperimentConfig, OracleConfig, ProblemKind};
+use crate::metrics::summary;
+use crate::problems::lasso::{LassoConfig, LassoProblem};
+use crate::problems::logreg::{LogRegConfig, LogRegProblem};
+use crate::problems::Problem;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct TriggerRow {
+    pub label: String,
+    pub family: String,
+    pub delta: f64,
+    pub adapt: bool,
+    pub final_accuracy: f64,
+    pub bits_to_target: Option<f64>,
+    pub total_bits: f64,
+}
+
+impl TriggerRow {
+    pub fn render(&self) -> String {
+        format!(
+            "{:40} final_acc {:>10.3e}  bits@target {:>12}  total_bits/param {:>12.1}",
+            self.label,
+            self.final_accuracy,
+            self.bits_to_target
+                .map(|b| format!("{b:.1}"))
+                .unwrap_or_else(|| "n/a".into()),
+            self.total_bits
+        )
+    }
+}
+
+pub struct TriggerSweepOptions {
+    pub iters: usize,
+    pub mc_trials: usize,
+    pub target: f64,
+    /// Restrict to the LASSO family (CI / smoke); the full grid adds the
+    /// inexact logistic-regression family.
+    pub quick: bool,
+}
+
+impl Default for TriggerSweepOptions {
+    fn default() -> Self {
+        Self { iters: 300, mc_trials: 2, target: 1e-6, quick: false }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Lasso,
+    LogReg,
+}
+
+impl Family {
+    fn label(self) -> &'static str {
+        match self {
+            Family::Lasso => "lasso",
+            Family::LogReg => "logreg",
+        }
+    }
+}
+
+/// Dead-band grid per family. The EF-adjusted deltas shrink with the
+/// residual, so δ only starts suppressing sends once a node is close to
+/// consensus — the useful range sits a few decades under the initial
+/// delta magnitude (~O(1) for both generated problem families).
+fn deltas() -> [f64; 3] {
+    [0.0, 1e-6, 1e-4]
+}
+
+fn sweep_cfg(family: Family, delta: f64, adapt: bool, opts: &TriggerSweepOptions) -> ExperimentConfig {
+    let mut cfg = presets::ci_lasso();
+    // Problem dims ride in cfg.problem even for logreg (the engines read
+    // only n from it; the actual instance comes from the factory).
+    cfg.problem = ProblemKind::Lasso { m: 64, h: 8, n: 32, rho: 500.0, theta: 0.1 };
+    cfg.name = format!(
+        "trigger-{}-d{delta:.0e}-{}",
+        family.label(),
+        if adapt { "adapt" } else { "fixed" }
+    );
+    cfg.compressor = CompressorKind::Qsgd { bits: 4 };
+    cfg.engine = EngineKind::Event;
+    cfg.tau = 4;
+    cfg.p_min = 8;
+    cfg.iters = opts.iters;
+    cfg.mc_trials = opts.mc_trials;
+    cfg.eval_every = 1;
+    cfg.oracle = OracleConfig { p_slow: 0.1, p_fast: 0.8, regroup_each_call: false };
+    cfg.trigger.delta = delta;
+    cfg.trigger.adapt = adapt;
+    cfg
+}
+
+fn run_one(cfg: &ExperimentConfig, family: Family, opts: &TriggerSweepOptions) -> anyhow::Result<McRow> {
+    let (m, h, n, rho) = match cfg.problem {
+        ProblemKind::Lasso { m, h, n, rho, .. } => (m, h, n, rho),
+        _ => unreachable!(),
+    };
+    let mut factory: Box<ProblemFactory> = match family {
+        Family::Lasso => {
+            let lcfg = LassoConfig { m, h, n, rho, theta: 0.1 };
+            Box::new(move |_seed, data_rng: &mut Pcg64| {
+                Ok(Box::new(LassoProblem::generate(lcfg, data_rng)?) as Box<dyn Problem>)
+            })
+        }
+        Family::LogReg => {
+            let lcfg =
+                LogRegConfig { m, h, n, rho: 2.0, gamma: 1.0, k_steps: 8, lr: 0.02 };
+            Box::new(move |_seed, data_rng: &mut Pcg64| {
+                Ok(Box::new(LogRegProblem::generate(lcfg, data_rng)?) as Box<dyn Problem>)
+            })
+        }
+    };
+    let res = runner::run_mc(cfg, factory.as_mut())?;
+    drop(factory);
+    let rec = res.mean_recorder();
+    Ok(McRow {
+        final_accuracy: *res.mean_accuracy.last().unwrap(),
+        bits_to_target: summary::bits_to_accuracy(&rec.records, opts.target),
+        total_bits: *res.mean_comm_bits.last().unwrap(),
+    })
+}
+
+struct McRow {
+    final_accuracy: f64,
+    bits_to_target: Option<f64>,
+    total_bits: f64,
+}
+
+/// Run the δ × schedule grid, printing one table per problem family.
+pub fn run(opts: &TriggerSweepOptions) -> anyhow::Result<Vec<TriggerRow>> {
+    let families: &[Family] =
+        if opts.quick { &[Family::Lasso] } else { &[Family::Lasso, Family::LogReg] };
+    let mut all = Vec::new();
+    for &family in families {
+        println!(
+            "--- trigger sweep: {} (delta x level-schedule; delta=0 fixed = today's QSGD) ---",
+            family.label()
+        );
+        for adapt in [false, true] {
+            for delta in deltas() {
+                let cfg = sweep_cfg(family, delta, adapt, opts);
+                let r = run_one(&cfg, family, opts)?;
+                let row = TriggerRow {
+                    label: format!(
+                        "{} delta={delta:.0e} levels={}",
+                        family.label(),
+                        if adapt { "adaptive" } else { "fixed" }
+                    ),
+                    family: family.label().into(),
+                    delta,
+                    adapt,
+                    final_accuracy: r.final_accuracy,
+                    bits_to_target: r.bits_to_target,
+                    total_bits: r.total_bits,
+                };
+                println!("{}", row.render());
+                all.push(row);
+            }
+        }
+    }
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One tiny grid point per family end-to-end: the sweep config (with
+    /// the trigger enabled) validates and the run completes sanely.
+    #[test]
+    fn one_grid_point_runs_per_family() {
+        let opts = TriggerSweepOptions { iters: 8, mc_trials: 1, target: 1e-6, quick: true };
+        for family in [Family::Lasso, Family::LogReg] {
+            let mut cfg = sweep_cfg(family, 1e-5, true, &opts);
+            cfg.problem = ProblemKind::Lasso { m: 16, h: 6, n: 8, rho: 50.0, theta: 0.1 };
+            cfg.p_min = 2;
+            cfg.validate().unwrap();
+            let r = run_one(&cfg, family, &opts).unwrap();
+            assert!(r.final_accuracy.is_finite());
+            assert!(r.total_bits > 0.0);
+        }
+    }
+
+    /// The dead-band must not cost bits: at equal iteration count a δ > 0
+    /// run can only suppress transmissions, so its total accounted uplink
+    /// traffic is bounded by the δ = 0 baseline's.
+    #[test]
+    fn dead_band_never_increases_total_bits() {
+        let opts = TriggerSweepOptions { iters: 12, mc_trials: 1, target: 1e-6, quick: true };
+        let shrink = |mut cfg: ExperimentConfig| {
+            cfg.problem = ProblemKind::Lasso { m: 16, h: 6, n: 8, rho: 50.0, theta: 0.1 };
+            cfg.p_min = 2;
+            cfg
+        };
+        let base = run_one(&shrink(sweep_cfg(Family::Lasso, 0.0, false, &opts)), Family::Lasso, &opts)
+            .unwrap();
+        let gated = run_one(&shrink(sweep_cfg(Family::Lasso, 1e-3, false, &opts)), Family::Lasso, &opts)
+            .unwrap();
+        assert!(
+            gated.total_bits <= base.total_bits + 1e-9,
+            "dead-band run charged more bits than the always-send baseline \
+             ({} > {})",
+            gated.total_bits,
+            base.total_bits
+        );
+    }
+}

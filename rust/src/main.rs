@@ -6,6 +6,7 @@
 //!   fig4       regenerate Figure 4 (CNN/MNIST, test acc vs iters/bits)
 //!   ablation   design-choice sweeps (q, EF, compressor family, tau, P)
 //!   downlink   tau x downlink-delay sweep at n in {256, 1024} (event engine)
+//!   trigger    event-trigger delta x adaptive-level sweep vs fixed QSGD
 //!   serve      threaded deployment (server + node workers + PJRT service)
 //!   info       inspect the artifact manifest
 //!   selftest   PJRT round-trip smoke test
@@ -18,7 +19,7 @@ use qadmm::admm::runner::{self, ProblemFactory};
 use qadmm::comm::network::FaultSpec;
 use qadmm::compress::CompressorKind;
 use qadmm::config::{presets, Backend, EngineKind, ProblemKind};
-use qadmm::exp::{ablation, downlink, fig3, fig4, resume, topology};
+use qadmm::exp::{ablation, downlink, fig3, fig4, resume, topology, trigger};
 use qadmm::problems::lasso::{LassoConfig, LassoProblem};
 use qadmm::problems::nn::{NnArch, NnProblem};
 use qadmm::problems::Problem;
@@ -46,6 +47,7 @@ fn real_main() -> anyhow::Result<()> {
         "ablation" => cmd_ablation(&mut args),
         "downlink" => cmd_downlink(&mut args),
         "topology" => cmd_topology(&mut args),
+        "trigger" => cmd_trigger(&mut args),
         "resume" => cmd_resume(&mut args),
         "serve" => cmd_serve(&mut args),
         "info" => cmd_info(&mut args),
@@ -69,6 +71,11 @@ USAGE: qadmm <cmd> [--options]
             [--clock-drift E] [--refresh-every K]  (K rounds between full
             recomputes of the incremental consensus sum; 0 = never)
             [--topology star|tree:F|gossip:K] [--p-tier P_g]
+            [--trigger-delta D] [--adapt-levels]  (event-triggered uplink:
+             transmit only when the EF-adjusted delta has inf-norm > D —
+             a skipped dispatch still counts toward P/tau but ships 0 bits;
+             --adapt-levels starts QSGD coarse and refines per node as its
+             realized residual shrinks; requires a qsgdQ compressor)
             [--checkpoint-every K] [--checkpoint FILE] [--resume-from FILE]
             (periodic run snapshots; a resumed run is bit-identical to the
              uninterrupted one — seq/event engines, single trial)
@@ -82,6 +89,9 @@ USAGE: qadmm <cmd> [--options]
   downlink  [--iters N] [--trials N] [--target X] [--quick]
   topology  [--iters N] [--trials N] [--target X] [--quick]
             (star vs tree vs gossip convergence-per-bit, event engine)
+  trigger   [--iters N] [--trials N] [--target X] [--quick]
+            (event-trigger dead-band delta x adaptive level schedule vs
+             fixed QSGD on bits-to-target; LASSO + logreg families)
   resume    [--iters N] [--k K] [--out DIR] [--quick]
             (checkpoint/resume parity smoke: every engine x topology cell
              checkpoints at round K, resumes, and diffs the continued run
@@ -150,6 +160,11 @@ fn apply_overrides(
         cfg.topology = qadmm::topology::TopologyKind::parse(&t)?;
     }
     cfg.p_tier = args.usize("p-tier", cfg.p_tier);
+    // event-triggered transmission + adaptive level schedule
+    cfg.trigger.delta = args.f64("trigger-delta", cfg.trigger.delta);
+    if args.flag("adapt-levels") {
+        cfg.trigger.adapt = true;
+    }
     // problem-level overrides
     let rho_override = args.f64("rho", f64::NAN);
     let lr_override = args.f64("lr", f64::NAN);
@@ -483,6 +498,19 @@ fn cmd_topology(args: &mut Args) -> anyhow::Result<()> {
     };
     args.finish()?;
     topology::run(&opts)?;
+    Ok(())
+}
+
+fn cmd_trigger(args: &mut Args) -> anyhow::Result<()> {
+    let defaults = trigger::TriggerSweepOptions::default();
+    let opts = trigger::TriggerSweepOptions {
+        iters: args.usize("iters", defaults.iters),
+        mc_trials: args.usize("trials", defaults.mc_trials),
+        target: args.f64("target", defaults.target),
+        quick: args.flag("quick"),
+    };
+    args.finish()?;
+    trigger::run(&opts)?;
     Ok(())
 }
 

@@ -32,7 +32,11 @@ pub const MAGIC: [u8; 8] = *b"QADMMSNP";
 /// Container layout version. Bump on any change to the header/body/checksum
 /// framing; the per-state layout is versioned by [`MAGIC`]+this pair, and a
 /// reader rejects versions it does not know instead of misparsing.
-pub const VERSION: u32 = 1;
+///
+/// v2: event-trigger / adaptive-schedule state ([`crate::admm::trigger`])
+/// packed into both runtime bodies, and the event engine's in-flight slots
+/// gained a `skipped` flag — v1 snapshots no longer parse.
+pub const VERSION: u32 = 2;
 
 /// FNV-1a 64-bit over a byte slice (checksums + RNG-state digests).
 pub fn fnv1a64(bytes: &[u8]) -> u64 {

@@ -159,6 +159,28 @@ impl AggregatorTier {
         !self.children[agg].is_empty()
     }
 
+    /// ‖pending_g‖∞ across both halves — what an upstream forward *would*
+    /// move the server's banks by. The event trigger's aggregator dead-band
+    /// gates on this: below δ the forward is withheld (see
+    /// [`Self::credit_only_flush`]). Non-finite pending mass reports +∞,
+    /// forcing the forward out of the dead-band.
+    pub fn pending_inf_norm(&self, agg: usize) -> f64 {
+        crate::admm::trigger::inf_norm(self.pending_x[agg].value())
+            .max(crate::admm::trigger::inf_norm(self.pending_u[agg].value()))
+    }
+
+    /// The dead-band analogue of [`Self::flush`]: the aggregator reports
+    /// "children arrived, nothing worth forwarding". The children's arrival
+    /// credits are handed back (they must reach the server's P/τ trigger —
+    /// a silent aggregator may never wedge liveness), but the pending Kahan
+    /// mass stays put to keep accumulating (so `tracked_mass` is conserved),
+    /// no compressor runs, no RNG is drawn, and `forwards` does not advance
+    /// (zero wire bits: the caller charges nothing).
+    pub fn credit_only_flush(&mut self, agg: usize) -> Vec<(usize, f64)> {
+        debug_assert!(self.has_pending(agg), "credit-only flush of an empty aggregator");
+        std::mem::take(&mut self.children[agg])
+    }
+
     /// Re-quantize the pending partial delta for the upstream hop: compress
     /// both halves with the aggregator's quantizer stream, retain the
     /// compression residual in the pending buffer (error feedback) or drop
@@ -413,6 +435,33 @@ mod tests {
         for (a, b) in tracked.iter().zip(&true_mass) {
             assert!((a - b).abs() <= 1e-10 * norm, "tracked {a} vs true {b}");
         }
+    }
+
+    /// A dead-banded forward surrenders the arrival credits but keeps the
+    /// pending mass accumulating — conservation must hold across it, and no
+    /// wire-side state (forwards counter, ŝ banks) may move.
+    #[test]
+    fn credit_only_flush_retains_mass_and_returns_credits() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        let mut t = tier(TopologyKind::Tree { fanout: 2 }, 4, 3, 1);
+        t.route(0, &mut rng);
+        t.deliver(0, &[1e-9, 0.0, 0.0], &[0.0; 3], 0.5);
+        assert!(t.ready(0));
+        assert!(t.pending_inf_norm(0) <= 1e-6);
+        let before = t.tracked_mass();
+        let credits = t.credit_only_flush(0);
+        assert_eq!(credits, vec![(0, 0.5)]);
+        assert!(!t.has_pending(0));
+        assert_eq!(t.forwards(), 0);
+        assert_eq!(t.tracked_mass(), before);
+        // the withheld mass rides along with the next real delivery
+        t.route(1, &mut rng);
+        t.deliver(1, &[0.5, 0.0, 0.0], &[0.0; 3], 0.0);
+        assert!((t.pending_inf_norm(0) - (0.5 + 1e-9)).abs() < 1e-15);
+        // non-finite pending mass must report +∞ (never dead-banded)
+        t.route(3, &mut rng);
+        t.deliver(3, &[f64::NAN, 0.0, 0.0], &[0.0; 3], 0.0);
+        assert_eq!(t.pending_inf_norm(1), f64::INFINITY);
     }
 
     /// EF keeps the residual; EF-off drops it (the §4.1 ablation per hop).

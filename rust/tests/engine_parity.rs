@@ -79,6 +79,15 @@ fn assert_parity(
     assert!(stats.min_arrivals.expect("rounds fired") >= cfg.p_min);
     assert!(stats.max_staleness + 1 <= cfg.tau.max(1));
 
+    // The engines must have dead-banded exactly the same dispatches (0 on
+    // both sides whenever the trigger is disabled).
+    assert_eq!(
+        sim.trigger().skipped(),
+        eng.trigger().skipped(),
+        "skip counts diverged ({})",
+        cfg.name
+    );
+
     // Full metric series, NaN-safe (test_acc is NaN for convex problems).
     let (a, b) = (sim.recorder(), eng.recorder());
     assert_eq!(a.records.len(), b.records.len());
@@ -118,6 +127,32 @@ fn logreg_trajectories_are_bit_identical() {
         let mut cfg = parity_cfg(5, tau, p_min, false);
         cfg.name = format!("parity-logreg-tau{tau}-p{p_min}");
         cfg.eval_every = 5; // logreg eval (F* reference) is the pricey part
+        assert_parity(&cfg, &make);
+    }
+}
+
+/// Event-trigger parity: with the identity compressor and zero delays the
+/// two engines see identical EF-adjusted deltas, so a dead-band δ > 0 must
+/// suppress *exactly* the same dispatches in both — trajectory, accounting,
+/// staleness and skip counts all stay bit-identical. The grid spans a δ
+/// below the realized delta scale (nothing skips), one inside it (a
+/// realized mix of sends and skips), and one no finite delta passes
+/// (everything skips; rounds keep firing on τ−1 force-waits alone).
+/// The δ = 0 + fixed-levels cell is every *other* test in this file: the
+/// default `TriggerConfig` is the byte-for-byte legacy path.
+#[test]
+fn dead_band_trajectories_are_bit_identical_across_engines() {
+    for delta in [1e-12, 1e-3, 1e300] {
+        let mut cfg = parity_cfg(4, 3, 1, false);
+        cfg.name = format!("parity-trigger-d{delta:.0e}");
+        cfg.trigger.delta = delta;
+        let lcfg = match cfg.problem {
+            ProblemKind::Lasso { m, h, n, rho, theta } => LassoConfig { m, h, n, rho, theta },
+            _ => unreachable!(),
+        };
+        let make = move |rng: &mut Pcg64| -> Box<dyn Problem> {
+            Box::new(LassoProblem::generate(lcfg, rng).unwrap())
+        };
         assert_parity(&cfg, &make);
     }
 }

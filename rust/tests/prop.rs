@@ -746,6 +746,134 @@ fn prop_snapshot_decode_on_truncated_or_corrupt_bytes_never_panics() {
     }
 }
 
+/// Totality on poisoned inputs (the bugfix satellites): every compressor
+/// family must accept deltas containing NaN/±inf without panicking — the
+/// TopK comparator and the QSGD norm were the historical offenders — and
+/// the dequantized output it commits into the EF banks must be entirely
+/// finite (a single NaN there poisons x̂ forever through the telescoped
+/// estimate stream). The wire frame must still decode to exactly the
+/// sanitized dequantized vector.
+#[test]
+fn prop_compressors_total_on_non_finite_inputs() {
+    let kinds = [
+        CompressorKind::Identity,
+        CompressorKind::Identity32,
+        CompressorKind::Qsgd { bits: 2 },
+        CompressorKind::Qsgd { bits: 3 },
+        CompressorKind::Qsgd { bits: 11 },
+        CompressorKind::Sign,
+        CompressorKind::TopK { frac_permille: 120 },
+        CompressorKind::RandK { frac_permille: 250 },
+    ];
+    let poisons = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY];
+    for_all(60, 1212, |rng| {
+        let mut delta = random_vec(rng);
+        // poison 1..=min(m, 5) random coordinates (possibly all of a tiny vec)
+        let m = delta.len();
+        for _ in 0..1 + rng.gen_range(m.min(5)) {
+            let i = rng.gen_range(m);
+            delta[i] = poisons[rng.gen_range(poisons.len())];
+        }
+        for kind in kinds {
+            let c = kind.build();
+            let out = c.compress(&delta, rng);
+            assert_eq!(out.dequantized.len(), m, "{}", kind.label());
+            for (j, v) in out.dequantized.iter().enumerate() {
+                assert!(
+                    v.is_finite(),
+                    "{}: non-finite dequantized[{j}] = {v} leaked into the EF bank",
+                    kind.label()
+                );
+            }
+            let decoded = c.decode(&out.wire, m).unwrap();
+            assert_eq!(decoded, out.dequantized, "{}", kind.label());
+        }
+    });
+}
+
+/// Trigger liveness at δ → ∞ (the wedge hazard the ISSUE calls out): with
+/// a dead-band no delta can ever exceed, every dispatch is skipped — yet
+/// the server must keep firing rounds (a skip is an arrival for the P/τ
+/// trigger, and the τ−1 force-wait drags silent nodes in), the staleness
+/// bound must hold, and the uplink books must show **exactly** the init
+/// exchange: zero steady-state uplink bits, zero steady-state uplink
+/// messages, on every node link of both in-process runtimes.
+#[test]
+fn prop_trigger_dead_band_liveness_and_zero_steady_state_uplink() {
+    for_all(10, 1313, |rng| {
+        let n = 2 + rng.gen_range(8);
+        let m = 4 + rng.gen_range(12);
+        let tau = 2 + rng.gen_range(4);
+        let p_min = 1 + rng.gen_range(n);
+        let mut cfg = presets::ci_lasso();
+        cfg.name = format!("prop-trigger-n{n}-tau{tau}-p{p_min}");
+        cfg.problem = ProblemKind::Lasso { m, h: 4, n, rho: 25.0, theta: 0.1 };
+        cfg.compressor = CompressorKind::Qsgd { bits: 4 };
+        cfg.tau = tau;
+        cfg.p_min = p_min;
+        cfg.iters = 20;
+        cfg.mc_trials = 1;
+        cfg.eval_every = 1;
+        cfg.seed = rng.next_u64();
+        cfg.trigger.delta = 1e300; // no finite delta passes the gate
+        cfg.trigger.adapt = rng.bernoulli(0.5);
+        let lcfg = LassoConfig { m, h: 4, n, rho: 25.0, theta: 0.1 };
+        let hdr = MSG_HEADER_BYTES * 8;
+        let init_bits = hdr + 2 * m as u64 * INIT_BITS_PER_SCALAR;
+
+        // sequential simulator
+        let mut rngs = TrialRngs::new(cfg.seed);
+        let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+        p.set_reference_optimum(1.0);
+        let mut sim = AsyncSim::new(&cfg, &mut p, rngs).unwrap();
+        for _ in 0..cfg.iters {
+            sim.step().unwrap();
+            let active = sim.recorder().last().unwrap().active_nodes;
+            assert!(active >= p_min, "sim wedged: round fired on {active} < P");
+            let max_d = sim.staleness().iter().copied().max().unwrap();
+            assert!(max_d + 1 <= tau, "sim staleness {max_d} breaks tau={tau}");
+        }
+        assert!(sim.trigger().skipped() > 0, "nothing was dead-banded");
+        for i in 0..n {
+            let l = sim.accounting().link(i);
+            assert_eq!(
+                (l.uplink_bits, l.uplink_msgs),
+                (init_bits, 1),
+                "sim node {i}: steady-state uplink traffic under an infinite dead-band"
+            );
+        }
+
+        // event engine under delays on every leg
+        cfg.engine = qadmm::config::EngineKind::Event;
+        cfg.link = LinkConfig {
+            compute: LatencyModel::Exp(0.01),
+            uplink: LatencyModel::Exp(0.01),
+            downlink: LatencyModel::Exp(0.015),
+            clock_drift: 0.1,
+        };
+        let mut rngs = TrialRngs::new(cfg.seed);
+        let mut p = LassoProblem::generate(lcfg, &mut rngs.data).unwrap();
+        p.set_reference_optimum(1.0);
+        let mut eng = EventEngine::new(&cfg, &mut p, rngs).unwrap();
+        for _ in 0..cfg.iters {
+            eng.step_round().unwrap();
+            let max_d = eng.staleness().iter().copied().max().unwrap();
+            assert!(max_d + 1 <= tau, "engine staleness {max_d} breaks tau={tau}");
+        }
+        let stats = eng.stats();
+        assert_eq!(stats.rounds, cfg.iters, "engine wedged under the dead-band");
+        assert!(stats.min_arrivals.expect("rounds fired") >= p_min);
+        for i in 0..n {
+            let l = eng.accounting().link(i);
+            assert_eq!(
+                (l.uplink_bits, l.uplink_msgs),
+                (init_bits, 1),
+                "engine node {i}: steady-state uplink traffic under an infinite dead-band"
+            );
+        }
+    });
+}
+
 #[test]
 fn prop_json_roundtrip_numbers() {
     use qadmm::util::json::Json;

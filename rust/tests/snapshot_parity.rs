@@ -213,6 +213,61 @@ fn event_resume_is_bit_identical_across_topologies_under_latency() {
     }
 }
 
+/// Trigger-enabled resume: the dead-band + adaptive-schedule state
+/// (per-node stage counters, anchor scales, skip tally) rides in the
+/// snapshot body, so a run checkpointed with δ > 0 and the adaptive
+/// schedule on must continue bit-identically — same contract as the
+/// disabled cells above, *not* a weaker one. A resume under flipped
+/// trigger knobs must be refused (the packed state would disagree with
+/// the config's plan).
+#[test]
+fn trigger_enabled_resume_is_bit_identical() {
+    for engine in [EngineKind::Seq, EngineKind::Event] {
+        let mut cfg = cfg_for(engine, TopologyKind::Star);
+        cfg.name = format!("snapshot-parity-trigger-{}", engine.label());
+        // qsgd(3) from cfg_for: the schedule starts at 2 bits and can
+        // refine to the configured 3, so stage state is genuinely live
+        cfg.trigger.delta = 1e-4;
+        cfg.trigger.adapt = true;
+        cfg.validate().unwrap();
+        let (straight, resumed) = match engine {
+            EngineKind::Seq => (run_seq(&cfg, None), run_seq(&cfg, Some(K))),
+            EngineKind::Event => (run_event(&cfg, None), run_event(&cfg, Some(K))),
+            EngineKind::Threaded => unreachable!(),
+        };
+        assert_eq!(straight.z, resumed.z, "{}: z trajectory", cfg.name);
+        assert_eq!(straight.staleness, resumed.staleness, "{}: staleness", cfg.name);
+        assert_eq!(straight.links, resumed.links, "{}: per-link wire bits", cfg.name);
+        assert_eq!(straight.records, resumed.records, "{}: metric series", cfg.name);
+        assert_eq!(straight.rng_digest, resumed.rng_digest, "{}: RNG states", cfg.name);
+    }
+
+    // flipping the trigger plan invalidates the snapshot
+    let mut cfg = cfg_for(EngineKind::Event, TopologyKind::Star);
+    cfg.trigger.delta = 1e-4;
+    cfg.trigger.adapt = true;
+    let (mut problem, rngs) = make_problem(&cfg);
+    let mut eng = EventEngine::new(&cfg, &mut problem, rngs).unwrap();
+    for _ in 0..3 {
+        eng.step_round().unwrap();
+    }
+    let body = eng.snapshot_body();
+    drop(eng);
+    let mut flipped = cfg.clone();
+    flipped.trigger.delta = 0.0;
+    flipped.trigger.adapt = false;
+    let (mut p2, _) = make_problem(&flipped);
+    assert!(
+        EventEngine::resume(&flipped, &mut p2, &body).is_err(),
+        "resume accepted a snapshot whose trigger state disagrees with the config"
+    );
+    assert_ne!(
+        cfg.resume_digest(),
+        flipped.resume_digest(),
+        "digest must change when the trigger knobs change"
+    );
+}
+
 /// Back-to-back resumes (checkpoint, resume, checkpoint again, resume
 /// again) keep the contract: state round-trips are closed under
 /// composition, the long-run operating mode.

@@ -26,6 +26,7 @@ import sys
 SECTIONS = {
     "sweeps": (["label", "n", "m", "tau"], "wall_s"),
     "server_round": (["n", "m", "p"], "inc_round_us"),
+    "trigger": (["n", "delta", "adapt"], "wall_s"),
 }
 
 
