@@ -1,7 +1,11 @@
 //! Event-engine scaling sweep: n ∈ {16, 128, 1024} nodes, a τ ×
-//! downlink-delay grid at n ∈ {256, 1024}, and the `server_round` section
+//! downlink-delay grid at n ∈ {256, 1024}, the `server_round` section
 //! comparing the old O(n·m) bank-sweep fire against the incremental
-//! O(|A|·m) accumulator path at n ∈ {256, 1024, 4096} × P ∈ {n/8, n/2, n}.
+//! O(|A|·m) accumulator path at n ∈ {256, 1024, 4096} × P ∈ {n/8, n/2, n},
+//! and the `server_round_nn` section at NN-scale m ∈ {10^5, 10^6}
+//! comparing the fused O(k) sparse frame fold against the retired
+//! materialize-then-fold path and the coordinate-sharded dense fire
+//! against the serial kernel.
 //!
 //! The headline configuration is the acceptance bar for the virtual-time
 //! engine: **n = 1024 nodes, m = 10240-dim LASSO, 200 consensus rounds,
@@ -267,6 +271,113 @@ fn server_round_cell(n: usize, m: usize, p: usize, reps: usize) -> anyhow::Resul
     ]))
 }
 
+// ---- server_round_nn: NN-scale fused sparse folds + sharded fires ----------
+
+/// NN-scale server hot path (m up to 10^6): the fused O(k) sparse frame
+/// fold against the retired materialize-then-dense-fold path (which paid an
+/// O(m) allocation + traversal per arrival regardless of k), and the
+/// coordinate-sharded dense fire kernel against the serial one. The fused
+/// column should be flat in m at fixed k; the sharded fire should win at
+/// m = 10^6 where the dense O(m) work amortizes the thread fan-out.
+fn server_round_nn_cell(
+    n: usize,
+    m: usize,
+    p: usize,
+    k: usize,
+    reps: usize,
+) -> anyhow::Result<Json> {
+    use qadmm::compress::{wire, Compressed};
+    use qadmm::problems::accumulator::{auto_shards, KahanVec};
+
+    let mut rng = Pcg64::seed_from_u64(0x4e4e ^ m as u64);
+    let mut problem = ProxMean { m, n };
+    // one arrival batch of top-k-shaped wire frames (k nonzeros each),
+    // reused every rep — exactly what a sparse-compressor fleet sends
+    let make_frame = |rng: &mut Pcg64| {
+        let mut idx: Vec<usize> = (0..k).map(|_| rng.gen_range(m)).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        let entries: Vec<(usize, f64)> =
+            idx.iter().map(|&i| (i, rng.standard_normal() * 0.01)).collect();
+        Compressed { wire: wire::encode_topk(m, &entries) }
+    };
+    let frames: Vec<(Compressed, Compressed)> =
+        (0..p).map(|_| (make_frame(&mut rng), make_frame(&mut rng))).collect();
+    let mut sink = 0.0;
+
+    // fused round: P sparse frame folds (O(k) each) + the O(m) fire
+    let mut acc = ConsensusAccumulator::new(m, 0);
+    let clock = Stopwatch::new();
+    for _ in 0..reps {
+        for (cx, cu) in &frames {
+            acc.fold_frames(cx, cu)?;
+        }
+        let z = problem.consensus_from_sum(acc.sum(), n)?;
+        sink += z[0];
+    }
+    let fused_round_us = clock.elapsed_secs() * 1e6 / reps as f64;
+
+    // retired path: materialize each frame dense, then dense-fold
+    let mut acc = ConsensusAccumulator::new(m, 0);
+    let clock = Stopwatch::new();
+    for _ in 0..reps {
+        for (cx, cu) in &frames {
+            let dx = cx.dequantized()?;
+            let du = cu.dequantized()?;
+            acc.fold(&dx, &du);
+        }
+        let z = problem.consensus_from_sum(acc.sum(), n)?;
+        sink += z[0];
+    }
+    let mat_round_us = clock.elapsed_secs() * 1e6 / reps as f64;
+
+    // dense fire-time work (refresh-style fold2 over all m coordinates +
+    // the prox): serial blocked kernel vs the coordinate-sharded variant
+    let a = rng.normal_vec(m, 0.0, 1.0);
+    let b = rng.normal_vec(m, 0.0, 0.1);
+    let mut kv = KahanVec::zeros(m);
+    let clock = Stopwatch::new();
+    for _ in 0..reps {
+        kv.fold2(&a, &b);
+        let z = problem.consensus_from_sum(kv.value(), n)?;
+        sink += z[0];
+    }
+    let serial_fire_us = clock.elapsed_secs() * 1e6 / reps as f64;
+
+    let shards = auto_shards(m);
+    let mut kv = KahanVec::zeros(m);
+    let clock = Stopwatch::new();
+    for _ in 0..reps {
+        kv.fold2_sharded(&a, &b, shards);
+        let z = problem.consensus_from_sum(kv.value(), n)?;
+        sink += z[0];
+    }
+    let sharded_fire_us = clock.elapsed_secs() * 1e6 / reps as f64;
+    std::hint::black_box(sink);
+
+    let speedup_fused = mat_round_us / fused_round_us.max(1e-9);
+    let speedup_sharded = serial_fire_us / sharded_fire_us.max(1e-9);
+    println!(
+        "server_round_nn         n={n:5} m={m:7} P={p:4} k={k:4} shards={shards:2}  \
+         fused {fused_round_us:9.1}us  materialized {mat_round_us:9.1}us ({speedup_fused:5.1}x)  \
+         fire serial {serial_fire_us:9.1}us  sharded {sharded_fire_us:9.1}us ({speedup_sharded:4.1}x)"
+    );
+    Ok(Json::obj(vec![
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("p", Json::Num(p as f64)),
+        ("k", Json::Num(k as f64)),
+        ("reps", Json::Num(reps as f64)),
+        ("shards", Json::Num(shards as f64)),
+        ("fused_round_us", Json::Num(fused_round_us)),
+        ("mat_round_us", Json::Num(mat_round_us)),
+        ("speedup_fused", Json::Num(speedup_fused)),
+        ("serial_fire_us", Json::Num(serial_fire_us)),
+        ("sharded_fire_us", Json::Num(sharded_fire_us)),
+        ("speedup_sharded", Json::Num(speedup_sharded)),
+    ]))
+}
+
 // ---- trigger: event-trigger dead-band / adaptive levels at scale -----------
 
 /// One (n, δ, adapt) cell of the event-trigger section: the same straggler
@@ -399,6 +510,24 @@ fn main() {
         }
     }
 
+    // NN-scale fused/sharded hot path: m up to 10^6 with top-k frames
+    println!("--- server_round_nn: fused O(k) folds + sharded fires at NN-scale m ---");
+    let (nn_ms, nn_p, nn_k, nn_reps): (&[usize], usize, usize, usize) = if fast {
+        (&[100_000], 4, 256, 10)
+    } else {
+        (&[100_000, 1_000_000], 64, 256, 20)
+    };
+    let mut server_nn_records = Vec::new();
+    for &m in nn_ms {
+        match server_round_nn_cell(1024, m, nn_p, nn_k, nn_reps) {
+            Ok(rec) => server_nn_records.push(rec),
+            Err(e) => {
+                eprintln!("server_round_nn m={m}: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+
     // event-trigger cells: δ=0 fixed is the baseline row; the gated and
     // adaptive rows show the uplink-bit savings and the hot-path overhead
     println!("--- trigger: dead-band delta x level schedule (qsgd4) ---");
@@ -423,6 +552,7 @@ fn main() {
         ("fast", Json::Bool(fast)),
         ("sweeps", Json::Arr(sweep_records)),
         ("server_round", Json::Arr(server_records)),
+        ("server_round_nn", Json::Arr(server_nn_records)),
         ("trigger", Json::Arr(trigger_records)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");

@@ -10,8 +10,9 @@
 //! milliseconds of wall time.
 //!
 //! The server's per-round cost scales with the **arrival set**, not the
-//! fleet: each `MsgArrive` folds its dequantized deltas into the running
-//! sum s = Σ(x̂+û) ([`ConsensusAccumulator`], O(m) per arrival), so a fire
+//! fleet: each `MsgArrive` folds its wire frames into the running
+//! sum s = Σ(x̂+û) ([`ConsensusAccumulator`], O(k) per sparse arrival,
+//! O(m) dense — no dense intermediate is materialized), so a fire
 //! is `consensus_from_sum(s)` — O(m) — instead of the old O(n·m) bank
 //! sweep; true iterates and ẑ mirrors live in flat n×m [`Arena`]s, and the
 //! dispatch path reuses pooled delta/compression buffers (no steady-state
@@ -49,8 +50,8 @@
 //!    `ComputeDone` event is scheduled at `+ compute_delay / clock_rate`
 //!    (fast-clocked nodes finish sooner);
 //! 3. `ComputeDone` accounts the uplink and schedules `MsgArrive` at
-//!    `+ uplink_delay`; `MsgArrive` commits the dequantized deltas into
-//!    the server's estimate banks and joins the sparse arrival set;
+//!    `+ uplink_delay`; `MsgArrive` commits the wire frames into the
+//!    server's estimate banks and joins the sparse arrival set;
 //! 4. between distinct virtual instants the server checks the trigger:
 //!    |arrivals| ≥ P **and** every node whose staleness has reached τ−1
 //!    has arrived. Nodes selected while still in flight are not
@@ -93,8 +94,11 @@ use super::trigger::{inf_norm, TriggerState};
 
 /// A compressed update sitting in a node's outbox / on the virtual wire.
 /// One slot per node lives for the whole run — `compress_into` refills the
-/// pooled [`Compressed`] buffers on every dispatch, so the steady-state
-/// round does no per-message allocation.
+/// pooled [`Compressed`] wire buffers on every dispatch, so the
+/// steady-state round does no per-message allocation. The slot holds the
+/// wire frames only (no materialized dense vectors): arrival commits and
+/// folds consume the frames directly, so in-flight memory is the
+/// compressed size per message, not O(m).
 struct InFlightSlot {
     cx: Compressed,
     cu: Compressed,
@@ -501,13 +505,15 @@ impl<'a> EventEngine<'a> {
                     self.busy[node] = false;
                     return Ok(());
                 }
-                self.xhat[node].commit(&slot.cx.dequantized);
-                self.uhat[node].commit(&slot.cu.dequantized);
+                self.xhat[node].commit_frame(&slot.cx)?;
+                self.uhat[node].commit_frame(&slot.cu)?;
                 match &mut self.tier {
                     None => {
                         // star: the update reached the server — keep
-                        // s = Σ(x̂+û) in lockstep with the bank commits
-                        self.acc.fold(&slot.cx.dequantized, &slot.cu.dequantized);
+                        // s = Σ(x̂+û) in lockstep with the bank commits,
+                        // folding straight from the wire frames (O(k) for
+                        // sparse compressors)
+                        self.acc.fold_frames(&slot.cx, &slot.cu)?;
                         self.arrived_loss[node] = slot.loss;
                         if self.arrived.insert(node)
                             && self.scheduler.staleness()[node] + 1 >= self.cfg.tau
@@ -522,12 +528,7 @@ impl<'a> EventEngine<'a> {
                         // its aggregator; arrival credit (and the busy
                         // release) waits for the re-quantized forward to
                         // reach the server (`AggregateArrive`)
-                        let agg = t.deliver(
-                            node,
-                            &slot.cx.dequantized,
-                            &slot.cu.dequantized,
-                            slot.loss,
-                        );
+                        let agg = t.deliver(node, &slot.cx, &slot.cu, slot.loss)?;
                         self.touched_aggs.push(agg);
                     }
                 }
@@ -549,12 +550,12 @@ impl<'a> EventEngine<'a> {
                 })?;
                 let tier = self.tier.as_mut().expect("AggregateArrive without a tier");
                 // ŝ_g += C(Δpartial), and the global sum folds the same
-                // dequantized vectors so s keeps tracking Σ_g ŝ_g. A
-                // credit-only forward (aggregator dead-band) carries empty
-                // payloads: only the children's arrival credit flows.
-                if !fw.cx.dequantized.is_empty() {
-                    tier.commit(agg, &fw.cx.dequantized, &fw.cu.dequantized);
-                    self.acc.fold(&fw.cx.dequantized, &fw.cu.dequantized);
+                // wire frames so s keeps tracking Σ_g ŝ_g. A credit-only
+                // forward (aggregator dead-band) carries empty payloads:
+                // only the children's arrival credit flows.
+                if !fw.cx.is_empty() {
+                    tier.commit(agg, &fw.cx, &fw.cu)?;
+                    self.acc.fold_frames(&fw.cx, &fw.cu)?;
                 }
                 let tau = self.cfg.tau;
                 for (child, loss) in fw.children {
@@ -652,10 +653,13 @@ impl<'a> EventEngine<'a> {
         let dz = self.zhat.make_delta(&self.z);
         let cz = self.compressor.compress(&dz, &mut self.server_quant);
         self.accounting.record_broadcast_to(self.n, MSG_HEADER_BYTES * 8 + cz.wire_bits());
-        self.zhat.commit(&cz.dequantized);
+        // The one sanctioned materialization on the hot path: the broadcast
+        // payload is shared dense across all n downlinks, so decode once.
+        let dz_deq = cz.dequantized()?;
+        self.zhat.commit(&dz_deq);
         // One shared payload for all n downlinks; the node mirrors commit
         // it when their DownlinkArrive fires, not here.
-        let dz_payload = Arc::new(cz.dequantized);
+        let dz_payload = Arc::new(dz_deq);
 
         for (i, a) in self.arrived_mask.iter_mut().enumerate() {
             *a = self.arrived.contains(&i);
@@ -790,9 +794,7 @@ impl<'a> EventEngine<'a> {
             };
             if skip {
                 self.trigger.note_skip();
-                slot.cx.dequantized.clear();
                 slot.cx.wire.clear();
-                slot.cu.dequantized.clear();
                 slot.cu.wire.clear();
                 slot.bits = 0;
             } else {
@@ -916,11 +918,12 @@ impl<'a> EventEngine<'a> {
         let mut mass = t.tracked_mass();
         for inbox in &self.agg_inbox {
             for fw in inbox {
-                for (v, d) in mass.iter_mut().zip(&fw.cx.dequantized) {
-                    *v += d;
-                }
-                for (v, d) in mass.iter_mut().zip(&fw.cu.dequantized) {
-                    *v += d;
+                for c in [&fw.cx, &fw.cu] {
+                    if c.is_empty() {
+                        continue; // credit-only forward
+                    }
+                    c.for_each_entry(|j, v| mass[j] += v)
+                        .expect("in-flight forward frame must decode");
                 }
             }
         }
@@ -1113,13 +1116,13 @@ impl<'a> EventEngine<'a> {
         for slot in &in_flight {
             if slot.occupied && !slot.skipped {
                 anyhow::ensure!(
-                    slot.cx.dequantized.len() == m && slot.cu.dequantized.len() == m,
+                    slot.cx.frame_dim()? == m && slot.cu.frame_dim()? == m,
                     "snapshot in-flight payload wrong dim"
                 );
             }
             if slot.skipped {
                 anyhow::ensure!(
-                    slot.bits == 0 && slot.cx.dequantized.is_empty(),
+                    slot.bits == 0 && slot.cx.is_empty(),
                     "snapshot skipped in-flight slot must carry no payload"
                 );
             }
@@ -1151,8 +1154,8 @@ impl<'a> EventEngine<'a> {
             for fw in inbox {
                 // credit-only forwards (aggregator dead-band) are empty
                 anyhow::ensure!(
-                    (fw.cx.dequantized.len() == m && fw.cu.dequantized.len() == m)
-                        || (fw.cx.dequantized.is_empty() && fw.cu.dequantized.is_empty()),
+                    (fw.cx.is_empty() && fw.cu.is_empty())
+                        || (fw.cx.frame_dim()? == m && fw.cu.frame_dim()? == m),
                     "snapshot aggregator forward payload wrong dim"
                 );
                 anyhow::ensure!(

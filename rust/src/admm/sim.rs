@@ -260,16 +260,16 @@ impl<'a> AsyncSim<'a> {
                 i,
                 MSG_HEADER_BYTES * 8 + cx.wire_bits() + cu.wire_bits(),
             );
-            self.xhat[i].commit(&cx.dequantized);
-            self.uhat[i].commit(&cu.dequantized);
+            self.xhat[i].commit_frame(&cx)?;
+            self.uhat[i].commit_frame(&cu)?;
             match &mut self.tier {
-                // star: fold straight into the server sum
-                None => self.acc.fold(&cx.dequantized, &cu.dequantized),
+                // star: fold the wire frames straight into the server sum
+                None => self.acc.fold_frames(&cx, &cu)?,
                 // tree/gossip: the update lands at its aggregator instead
                 // (the leaf-hop bits above were already charged to link i)
                 Some(t) => {
                     t.route(i, &mut self.rng_topology);
-                    t.deliver(i, &cx.dequantized, &cu.dequantized, 0.0);
+                    t.deliver(i, &cx, &cu, 0.0)?;
                 }
             }
         }
@@ -295,8 +295,8 @@ impl<'a> AsyncSim<'a> {
                     self.n + g,
                     MSG_HEADER_BYTES * 8 + fw.cx.wire_bits() + fw.cu.wire_bits(),
                 );
-                t.commit(g, &fw.cx.dequantized, &fw.cu.dequantized);
-                self.acc.fold(&fw.cx.dequantized, &fw.cu.dequantized);
+                t.commit(g, &fw.cx, &fw.cu)?;
+                self.acc.fold_frames(&fw.cx, &fw.cu)?;
             }
         }
 
@@ -315,7 +315,9 @@ impl<'a> AsyncSim<'a> {
         let dz = self.zhat.make_delta(&self.z);
         let cz = self.compressor.compress(&dz, &mut self.rng_quant);
         self.accounting.record_broadcast_to(self.n, MSG_HEADER_BYTES * 8 + cz.wire_bits());
-        self.zhat.commit(&cz.dequantized);
+        // dense commit of the materialized broadcast, matching the event
+        // engine's shared-downlink-payload order exactly
+        self.zhat.commit(&cz.dequantized()?);
 
         let next = self
             .scheduler

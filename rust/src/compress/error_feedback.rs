@@ -103,6 +103,36 @@ impl EstimateTracker {
         );
     }
 
+    /// [`Self::commit`] straight from the wire frame: ŷ += C(Δ) without
+    /// materializing the dense vector — sparse frames touch only their k
+    /// stored entries. The coordinates a sparse frame omits dequantize to
+    /// exactly 0.0, and `e += 0.0` is the identity for every finite e
+    /// except that it flips −0.0 to +0.0 — a sign nobody reads and that
+    /// every runtime now (not) flips identically, so the cross-engine
+    /// parity contract is unaffected. The finiteness guard matches
+    /// [`Self::commit`]: a decoded frame carrying NaN/±∞ aborts loudly.
+    pub fn commit_frame(&mut self, c: &super::Compressed) -> anyhow::Result<()> {
+        let m = c.frame_dim()?;
+        assert_eq!(
+            m,
+            self.estimate.len(),
+            "commit length mismatch: message has {} coords, tracker {}",
+            m,
+            self.estimate.len()
+        );
+        let mut finite = true;
+        let est = &mut self.estimate;
+        c.for_each_entry(|j, v| {
+            finite &= v.is_finite();
+            est[j] += v;
+        })?;
+        assert!(
+            finite,
+            "non-finite dequantized delta would poison the estimate bank permanently"
+        );
+        Ok(())
+    }
+
     pub fn estimate(&self) -> &[f64] {
         &self.estimate
     }
@@ -185,10 +215,10 @@ mod tests {
             }
             let d1 = ef.make_delta(&y);
             let c1 = q.compress(&d1, &mut rng);
-            ef.commit(&c1.dequantized);
+            ef.commit_frame(&c1).unwrap();
             let d2 = no_ef.make_delta(&y);
             let c2 = q.compress(&d2, &mut rng);
-            no_ef.commit(&c2.dequantized);
+            no_ef.commit_frame(&c2).unwrap();
 
             let err_ef = y
                 .iter()
@@ -229,10 +259,31 @@ mod tests {
             let delta = sender.make_delta(&y);
             let c = q.compress(&delta, &mut rng);
             let decoded = q.decode(&c.wire, m).unwrap();
-            sender.commit(&c.dequantized);
+            sender.commit_frame(&c).unwrap();
             receiver.commit(&decoded);
             assert_eq!(sender.estimate(), receiver.estimate());
         }
+    }
+
+    /// The fused frame commit agrees bitwise with the dense commit for a
+    /// sparse frame on a bank with no −0.0 coordinates (the only value
+    /// where `e += 0.0` is not the bitwise identity).
+    #[test]
+    fn commit_frame_matches_dense_commit_bitwise() {
+        use crate::compress::topk::TopK;
+        let m = 200;
+        let mut rng = Pcg64::seed_from_u64(11);
+        let base = rng.normal_vec(m, 1.0, 0.5);
+        let delta = rng.normal_vec(m, 0.0, 1.0);
+        let c = TopK::new(0.05).compress(&delta, &mut rng);
+        let mut fused = EstimateTracker::new(base.clone(), true);
+        let mut dense = EstimateTracker::new(base, true);
+        fused.commit_frame(&c).unwrap();
+        dense.commit(&c.dequantized().unwrap());
+        let bits = |t: &EstimateTracker| {
+            t.estimate().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&fused), bits(&dense));
     }
 
     /// peek must be pure: with EF off, only note_sent (a realized

@@ -27,13 +27,9 @@ impl Compressor for Identity {
     /// poison the receiving estimate bank even on the baseline path.
     fn compress_into(&self, delta: &[f64], _rng: &mut Pcg64, out: &mut Compressed) {
         if delta.iter().all(|v| v.is_finite()) {
-            out.dequantized.clear();
-            out.dequantized.extend_from_slice(delta);
             super::wire::encode_dense64_into(delta, &mut out.wire);
         } else {
             let clean: Vec<f64> = delta.iter().map(|&v| sanitize(v)).collect();
-            out.dequantized.clear();
-            out.dequantized.extend_from_slice(&clean);
             super::wire::encode_dense64_into(&clean, &mut out.wire);
         }
     }
@@ -62,13 +58,9 @@ impl Compressor for Identity32 {
     /// are dropped (0.0), as on every other compressor.
     fn compress_into(&self, delta: &[f64], _rng: &mut Pcg64, out: &mut Compressed) {
         if delta.iter().all(|v| v.is_finite()) {
-            out.dequantized.clear();
-            out.dequantized.extend(delta.iter().map(|&x| x as f32 as f64));
             super::wire::encode_dense32_into(delta, &mut out.wire);
         } else {
             let clean: Vec<f64> = delta.iter().map(|&v| sanitize(v)).collect();
-            out.dequantized.clear();
-            out.dequantized.extend(clean.iter().map(|&x| x as f32 as f64));
             super::wire::encode_dense32_into(&clean, &mut out.wire);
         }
     }
@@ -82,7 +74,7 @@ mod tests {
     fn lossless() {
         let delta = vec![1.0, -2.5, 1e-17, 0.0];
         let c = Identity.compress(&delta, &mut Pcg64::seed_from_u64(0));
-        assert_eq!(c.dequantized, delta);
+        assert_eq!(c.dequantized().unwrap(), delta);
         assert_eq!(Identity.decode(&c.wire, 4).unwrap(), delta);
         assert_eq!(c.wire.len(), 5 + 4 * 8);
     }

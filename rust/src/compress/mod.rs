@@ -5,12 +5,17 @@
 //! the other families the paper cites ([10,11,14]) and feed the compressor
 //! ablation. [`identity`] is the uncompressed baseline ("async ADMM").
 //!
-//! Contract: `decode(compress(Δ).wire) == compress(Δ).dequantized` exactly —
-//! the receiver reconstructs the *same* vector the sender used to update its
-//! own estimate mirror, so server and node estimate banks never diverge
-//! (lossless transport of the lossy code). Every compressor reports its
-//! exact wire size in bits; the paper's communication metric (eq. 20) is
-//! derived solely from these.
+//! Contract: the wire frame *is* the dequantized vector — `decode(wire)`
+//! reconstructs exactly the values the sender committed to its own estimate
+//! mirror, so server and node estimate banks never diverge (lossless
+//! transport of the lossy code). [`Compressed`] therefore carries only the
+//! frame: consumers fold its entries straight into the Kahan accumulators
+//! via the streaming [`wire::entries`] cursor ([`Compressed::fold_into`] —
+//! O(k) for sparse frames, scalar-at-a-time dequant for dense ones), and
+//! the dense vector is materialized ([`Compressed::dequantized`]) only
+//! where a full vector is genuinely needed (the fire's ẑ delta payload,
+//! tests). Every compressor reports its exact wire size in bits; the
+//! paper's communication metric (eq. 20) is derived solely from these.
 
 pub mod error_feedback;
 pub mod identity;
@@ -21,6 +26,7 @@ pub mod signsgd;
 pub mod topk;
 pub mod wire;
 
+use crate::problems::accumulator::KahanVec;
 use crate::snapshot::codec::{Pack, Reader, Writer};
 use crate::util::rng::Pcg64;
 
@@ -39,11 +45,14 @@ pub fn sanitize(v: f64) -> f64 {
     }
 }
 
-/// Result of compressing a vector.
+/// Result of compressing a vector: the exact wire frame, nothing else.
+/// The frame is self-describing (tag + length header) and losslessly
+/// carries the dequantized values, so the dense C(Δ) vector that earlier
+/// revisions stored alongside it is redundant — consumers stream entries
+/// out of the frame instead ([`Self::fold_into`] / [`Self::for_each_entry`])
+/// and in-flight memory is the compressed size, not O(m) per message.
 #[derive(Clone, Debug)]
 pub struct Compressed {
-    /// The dequantized C(Δ) — what both ends add to their estimates.
-    pub dequantized: Vec<f64>,
     /// Exact wire encoding (framed; see [`wire`]).
     pub wire: Vec<u8>,
 }
@@ -51,24 +60,94 @@ pub struct Compressed {
 impl Compressed {
     /// An empty container for [`Compressor::compress_into`] reuse.
     pub fn empty() -> Self {
-        Self { dequantized: Vec::new(), wire: Vec::new() }
+        Self { wire: Vec::new() }
+    }
+
+    /// True when no frame is held (a drained in-flight slot).
+    pub fn is_empty(&self) -> bool {
+        self.wire.is_empty()
     }
 
     pub fn wire_bits(&self) -> u64 {
         self.wire.len() as u64 * 8
     }
+
+    /// The vector length the frame declares, without decoding the payload.
+    pub fn frame_dim(&self) -> anyhow::Result<usize> {
+        wire::frame_dim(&self.wire)
+    }
+
+    /// Visit the frame's stored `(index, value)` entries in ascending index
+    /// order — all m coordinates for dense tags, the k stored entries for
+    /// sparse ones (absent coordinates dequantize to exactly 0.0). The
+    /// per-kind dequant visitor behind every fused fold.
+    pub fn for_each_entry(&self, mut f: impl FnMut(usize, f64)) -> anyhow::Result<()> {
+        let m = wire::frame_dim(&self.wire)?;
+        for e in wire::entries(&self.wire, m)? {
+            let (j, v) = e?;
+            f(j, v);
+        }
+        Ok(())
+    }
+
+    /// Fold the frame's dequantized entries straight into a Kahan
+    /// accumulator: s += C(Δ) without materializing C(Δ). O(k) for sparse
+    /// frames. Bitwise identical to folding the [`Self::dequantized`]
+    /// vector densely — the accumulator skips ±0.0 addends, so the m − k
+    /// coordinates a sparse frame omits touch nothing on either path
+    /// (`tests/prop.rs` pins this across all compressor kinds).
+    pub fn fold_into(&self, acc: &mut KahanVec) -> anyhow::Result<()> {
+        let m = wire::frame_dim(&self.wire)?;
+        anyhow::ensure!(
+            m == acc.dim(),
+            "frame length {m} != accumulator dim {}",
+            acc.dim()
+        );
+        for e in wire::entries(&self.wire, m)? {
+            let (j, v) = e?;
+            acc.fold_at(j, v);
+        }
+        Ok(())
+    }
+
+    /// Fold −C(Δ) into the accumulator (the error-feedback residual shape:
+    /// pending −= what the forwarded frame carries). Same bitwise contract
+    /// as [`Self::fold_into`] relative to a dense `sub`.
+    pub fn sub_from(&self, acc: &mut KahanVec) -> anyhow::Result<()> {
+        let m = wire::frame_dim(&self.wire)?;
+        anyhow::ensure!(
+            m == acc.dim(),
+            "frame length {m} != accumulator dim {}",
+            acc.dim()
+        );
+        for e in wire::entries(&self.wire, m)? {
+            let (j, v) = e?;
+            acc.fold_at(j, -v);
+        }
+        Ok(())
+    }
+
+    /// Materialize the dense dequantized vector. The escape hatch for call
+    /// sites that genuinely need a full vector (the fire's ẑ-delta
+    /// broadcast payload, tests, the EF estimate mirrors' dense commits) —
+    /// hot fold paths must use [`Self::fold_into`] instead.
+    pub fn dequantized(&self) -> anyhow::Result<Vec<f64>> {
+        let m = wire::frame_dim(&self.wire)?;
+        wire::decode(&self.wire, m)
+    }
 }
 
-/// Snapshots carry in-flight compressed payloads verbatim — both the
-/// dequantized values (what a commit would fold) and the exact wire frame
-/// (what the bit accounting already charged).
+/// Snapshots carry in-flight compressed payloads as the wire frame alone —
+/// the frame losslessly encodes the dequantized values (the module
+/// contract), so packing both, as container v2 did, doubled every
+/// in-flight slot for no information. This is what shrinks mid-timeline
+/// checkpoints in container v3.
 impl Pack for Compressed {
     fn pack(&self, w: &mut Writer) {
-        self.dequantized.pack(w);
         w.put_bytes(&self.wire);
     }
     fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
-        Ok(Self { dequantized: Vec::<f64>::unpack(r)?, wire: r.get_bytes()? })
+        Ok(Self { wire: r.get_bytes()? })
     }
 }
 
@@ -95,6 +174,15 @@ pub trait Compressor: Send {
     /// the frame is self-describing). `m` is the expected vector length.
     fn decode(&self, bytes: &[u8], m: usize) -> anyhow::Result<Vec<f64>> {
         wire::decode(bytes, m)
+    }
+
+    /// Fold a frame's dequantized entries straight into a Kahan accumulator
+    /// — the fused dequant→fold hot path. The frame is self-describing, so
+    /// the default dispatches per-tag via [`Compressed::fold_into`]; kinds
+    /// with a cheaper-than-generic visitor may override, but must stay
+    /// bitwise identical to materialize-then-fold (`tests/prop.rs`).
+    fn fold_into(&self, c: &Compressed, acc: &mut KahanVec) -> anyhow::Result<()> {
+        c.fold_into(acc)
     }
 }
 
@@ -199,9 +287,10 @@ mod tests {
         }
     }
 
-    /// compress_into must be bit-identical to compress — same wire bytes,
-    /// same dequantized values, same RNG consumption — including when the
-    /// output buffers are dirty from a previous (longer) message.
+    /// compress_into must be bit-identical to compress — same wire bytes
+    /// (hence same dequantized values, by the module contract), same RNG
+    /// consumption — including when the output buffer is dirty from a
+    /// previous (longer) message.
     #[test]
     fn compress_into_matches_compress_for_all_kinds() {
         let kinds = [
@@ -228,7 +317,6 @@ mod tests {
                 let a = c.compress(&delta, &mut r1);
                 c.compress_into(&delta, &mut r2, &mut out);
                 assert_eq!(a.wire, out.wire, "kind={} m={m}", kind.label());
-                assert_eq!(a.dequantized, out.dequantized, "kind={} m={m}", kind.label());
                 assert_eq!(r1.next_u64(), r2.next_u64(), "kind={} m={m}", kind.label());
             }
             // zero vector keeps the RNG streams aligned too
@@ -242,7 +330,8 @@ mod tests {
         }
     }
 
-    /// The cross-compressor contract: decode(wire) == dequantized, exactly.
+    /// The cross-compressor contract: decode(wire) is the dequantized
+    /// vector, and the header-derived materializer agrees with it exactly.
     #[test]
     fn decode_matches_dequantized_for_all_kinds() {
         let kinds = [
@@ -258,8 +347,32 @@ mod tests {
         for kind in kinds {
             let c = kind.build();
             let out = c.compress(&delta, &mut rng);
+            assert_eq!(out.frame_dim().unwrap(), delta.len(), "kind={}", kind.label());
             let decoded = c.decode(&out.wire, delta.len()).unwrap();
-            assert_eq!(decoded, out.dequantized, "kind={}", kind.label());
+            assert_eq!(decoded, out.dequantized().unwrap(), "kind={}", kind.label());
+        }
+    }
+
+    /// Smoke check of the fused path at module level (the exhaustive
+    /// 8-kind × poisoned-input property lives in `tests/prop.rs`): folding
+    /// a frame's entries equals folding the materialized vector, bitwise.
+    #[test]
+    fn fold_into_matches_materialized_fold() {
+        let mut rng = Pcg64::seed_from_u64(27);
+        let delta = rng.normal_vec(301, 0.0, 2.0);
+        for kind in [
+            CompressorKind::Qsgd { bits: 3 },
+            CompressorKind::TopK { frac_permille: 100 },
+        ] {
+            let c = kind.build();
+            let out = c.compress(&delta, &mut rng);
+            let mut fused = KahanVec::zeros(delta.len());
+            fused.add(&delta); // nonzero starting state
+            let mut dense = fused.clone();
+            c.fold_into(&out, &mut fused).unwrap();
+            dense.add(&out.dequantized().unwrap());
+            let bits = |k: &KahanVec| k.value().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&fused), bits(&dense), "kind={}", kind.label());
         }
     }
 }

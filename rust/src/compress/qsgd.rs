@@ -78,14 +78,11 @@ impl Qsgd {
     }
 
     /// Build a [`Compressed`] from levels produced elsewhere (e.g. by the
-    /// HLO artifact, which runs the same kernel) — packs the wire frame and
-    /// reconstructs the dequantized vector from the *wire* representation so
-    /// sender and receiver stay bit-identical.
+    /// HLO artifact, which runs the same kernel) — packs the wire frame;
+    /// both ends dequantize from the wire representation, so sender and
+    /// receiver stay bit-identical by construction.
     pub fn from_levels(&self, levels: &[i32], norm: f64) -> Compressed {
-        Compressed {
-            dequantized: self.dequantize(levels, norm),
-            wire: encode_qsgd(levels, norm, self.bits),
-        }
+        Compressed { wire: encode_qsgd(levels, norm, self.bits) }
     }
 }
 
@@ -106,11 +103,11 @@ impl Compressor for Qsgd {
     }
 
     /// Hot path (§Perf): one pass with inline RNG produces the signed
-    /// levels and the dequantized values together (no separate noise
-    /// vector, no second quantize pass), then the chunked bit packer emits
-    /// the payload. Bit-identical to [`Self::compress_reference`] — the
-    /// operation order (|d| / norm * s, norm · lvl / s) matches
-    /// quantize_with_noise and the Pallas kernel exactly.
+    /// levels (no separate noise vector, no second quantize pass), then
+    /// the chunked bit packer emits the payload. Bit-identical to
+    /// [`Self::compress_reference`] — the operation order
+    /// (|d| / norm * s) matches quantize_with_noise and the Pallas kernel
+    /// exactly; dequantization happens only at the consumers, off the wire.
     fn compress(&self, delta: &[f64], rng: &mut Pcg64) -> Compressed {
         let mut out = Compressed::empty();
         self.compress_into(delta, rng, &mut out);
@@ -118,7 +115,7 @@ impl Compressor for Qsgd {
     }
 
     /// In-place variant of the fused hot path: writes into `out`'s pooled
-    /// buffers (cleared, capacity reused) so the engine's dispatch loop
+    /// wire buffer (cleared, capacity reused) so the engine's dispatch loop
     /// performs no steady-state allocation per message. Bit-identical to
     /// [`Self::compress`].
     fn compress_into(&self, delta: &[f64], rng: &mut Pcg64, out: &mut Compressed) {
@@ -142,14 +139,9 @@ impl Compressor for Qsgd {
                 rng.uniform_f64();
             }
             wire.resize(14 + payload_len, 0);
-            out.dequantized.clear();
-            out.dequantized.resize(m, 0.0);
             return;
         }
 
-        out.dequantized.clear();
-        out.dequantized.resize(m, 0.0);
-        let dq = &mut out.dequantized[..];
         let header = wire.len();
         wire.resize(header + payload_len, 0);
         let payload = &mut wire[header..];
@@ -163,13 +155,12 @@ impl Compressor for Qsgd {
             let p = y.floor().min(s - 1.0);
             let frac = y - p;
             let lvl = p + (rng.uniform_f64() < frac) as u64 as f64;
-            // Zero levels must dequantize to +0.0 regardless of the input's
-            // sign bit: `lvl.copysign(d)` would emit −0.0 for a −0.0 input,
+            // Zero levels must carry a +0 sign bit regardless of the input's
+            // sign: `lvl.copysign(d)` would mark −0.0 inputs negative,
             // diverging bitwise from compress_reference (whose sign branch
             // tests `d < 0.0`, false for −0.0) and from the Pallas kernel —
             // breaking the documented bit-exact twin claim.
             let signed = if lvl == 0.0 { 0.0 } else { lvl.copysign(d) };
-            dq[i] = norm * signed / s;
             // sign-magnitude field, identical to packing::pack_levels
             let field = (signed.is_sign_negative() && lvl > 0.0) as u64 | ((lvl as u64) << 1);
             acc |= field << nbits;
@@ -226,7 +217,7 @@ mod tests {
         let c = q.compress(&delta, &mut rng);
         let norm = delta.iter().fold(0.0f64, |m, x| m.max(x.abs()));
         let bound = norm / q.s() as f64;
-        for (d, v) in delta.iter().zip(&c.dequantized) {
+        for (d, v) in delta.iter().zip(&c.dequantized().unwrap()) {
             assert!((d - v).abs() <= bound + 1e-12);
         }
     }
@@ -240,7 +231,7 @@ mod tests {
         let mut acc = vec![0.0; 64];
         for _ in 0..trials {
             let c = q.compress(&delta, &mut rng);
-            for (a, v) in acc.iter_mut().zip(&c.dequantized) {
+            for (a, v) in acc.iter_mut().zip(&c.dequantized().unwrap()) {
                 *a += v;
             }
         }
@@ -260,7 +251,7 @@ mod tests {
         // 14-byte header + ceil(1000·3/8)
         assert_eq!(c.wire.len(), 14 + 375);
         let decoded = q.decode(&c.wire, 1000).unwrap();
-        assert_eq!(decoded, c.dequantized);
+        assert_eq!(decoded, c.dequantized().unwrap());
     }
 
     #[test]
@@ -269,9 +260,10 @@ mod tests {
         let mut rng = Pcg64::seed_from_u64(4);
         let delta = rng.normal_vec(333, 0.0, 1.0);
         let c = q.compress(&delta, &mut rng);
-        assert!(c.dequantized.iter().all(|v| v.is_finite()));
+        let dq = c.dequantized().unwrap();
+        assert!(dq.iter().all(|v| v.is_finite()));
         let decoded = q.decode(&c.wire, 333).unwrap();
-        assert_eq!(decoded, c.dequantized);
+        assert_eq!(decoded, dq);
     }
 
     #[test]
@@ -284,7 +276,6 @@ mod tests {
                 let a = c.compress(&delta, &mut Pcg64::seed_from_u64(99));
                 let b = c.compress_reference(&delta, &mut Pcg64::seed_from_u64(99));
                 assert_eq!(a.wire, b.wire, "q={q} m={m}");
-                assert_eq!(a.dequantized, b.dequantized, "q={q} m={m}");
                 // zero vector too (RNG stream position must also match)
                 let mut r1 = Pcg64::seed_from_u64(5);
                 let mut r2 = Pcg64::seed_from_u64(5);
@@ -305,17 +296,10 @@ mod tests {
             let a = c.compress(&delta, &mut Pcg64::seed_from_u64(17));
             let b = c.compress_reference(&delta, &mut Pcg64::seed_from_u64(17));
             assert_eq!(a.wire, b.wire, "q={q}");
-            for (i, (x, y)) in a.dequantized.iter().zip(&b.dequantized).enumerate() {
-                assert_eq!(x.to_bits(), y.to_bits(), "q={q} elem {i}: {x} vs {y}");
-            }
             // the −0.0 inputs dequantize to +0.0 exactly
-            assert_eq!(a.dequantized[1].to_bits(), 0.0f64.to_bits());
-            assert_eq!(a.dequantized[4].to_bits(), 0.0f64.to_bits());
-            // and the wire roundtrip agrees bitwise too
-            let decoded = c.decode(&a.wire, delta.len()).unwrap();
-            for (x, y) in decoded.iter().zip(&a.dequantized) {
-                assert_eq!(x.to_bits(), y.to_bits());
-            }
+            let dq = a.dequantized().unwrap();
+            assert_eq!(dq[1].to_bits(), 0.0f64.to_bits());
+            assert_eq!(dq[4].to_bits(), 0.0f64.to_bits());
         }
     }
 
@@ -333,14 +317,13 @@ mod tests {
             let a = c.compress(&delta, &mut Pcg64::seed_from_u64(23));
             let b = c.compress_reference(&delta, &mut Pcg64::seed_from_u64(23));
             assert_eq!(a.wire, b.wire, "q={q}");
-            assert_eq!(a.dequantized, b.dequantized, "q={q}");
-            assert!(a.dequantized.iter().all(|v| v.is_finite()), "q={q}");
+            let dq = a.dequantized().unwrap();
+            assert!(dq.iter().all(|v| v.is_finite()), "q={q}");
             // finite norm: the largest finite magnitude, so the -2.0 slot
             // stays exact at max-noise and the non-finite slots carry 0
-            assert_eq!(a.dequantized[0], 0.0);
-            assert_eq!(a.dequantized[2], 0.0);
-            assert_eq!(a.dequantized[4], 0.0);
-            assert_eq!(c.decode(&a.wire, 6).unwrap(), a.dequantized);
+            assert_eq!(dq[0], 0.0);
+            assert_eq!(dq[2], 0.0);
+            assert_eq!(dq[4], 0.0);
             // all-non-finite vector behaves like the zero vector, with the
             // RNG stream position still aligned across the two paths
             let bad = [f64::NAN, f64::INFINITY];
@@ -349,7 +332,7 @@ mod tests {
             let x = c.compress(&bad, &mut r1);
             let y = c.compress_reference(&bad, &mut r2);
             assert_eq!(x.wire, y.wire);
-            assert!(x.dequantized.iter().all(|&v| v == 0.0));
+            assert!(x.dequantized().unwrap().iter().all(|&v| v == 0.0));
             assert_eq!(r1.next_u64(), r2.next_u64());
         }
     }
@@ -361,6 +344,5 @@ mod tests {
         let a = q.compress(&delta, &mut Pcg64::seed_from_u64(7));
         let b = q.compress(&delta, &mut Pcg64::seed_from_u64(7));
         assert_eq!(a.wire, b.wire);
-        assert_eq!(a.dequantized, b.dequantized);
     }
 }

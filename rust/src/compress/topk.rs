@@ -48,11 +48,7 @@ impl Compressor for TopK {
         keep.sort_unstable();
         let entries: Vec<(usize, f64)> =
             keep.iter().map(|&i| (i, sanitize(delta[i]))).collect();
-        let mut dequantized = vec![0.0; m];
-        for &(i, v) in &entries {
-            dequantized[i] = v;
-        }
-        Compressed { dequantized, wire: encode_topk(m, &entries) }
+        Compressed { wire: encode_topk(m, &entries) }
     }
 }
 
@@ -64,7 +60,7 @@ mod tests {
     fn keeps_largest_magnitudes() {
         let delta = vec![0.1, -5.0, 0.2, 3.0, -0.05];
         let c = TopK::new(0.4).compress(&delta, &mut Pcg64::seed_from_u64(0));
-        assert_eq!(c.dequantized, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+        assert_eq!(c.dequantized().unwrap(), vec![0.0, -5.0, 0.0, 3.0, 0.0]);
     }
 
     #[test]
@@ -73,8 +69,9 @@ mod tests {
         let delta = rng.normal_vec(400, 0.0, 1.0);
         let t = TopK::new(0.05);
         let c = t.compress(&delta, &mut rng);
-        assert_eq!(t.decode(&c.wire, 400).unwrap(), c.dequantized);
-        assert_eq!(c.dequantized.iter().filter(|&&v| v != 0.0).count(), t.k_for(400));
+        let dq = c.dequantized().unwrap();
+        assert_eq!(t.decode(&c.wire, 400).unwrap(), dq);
+        assert_eq!(dq.iter().filter(|&&v| v != 0.0).count(), t.k_for(400));
     }
 
     #[test]
@@ -92,14 +89,15 @@ mod tests {
         let t = TopK::new(0.5);
         let delta = vec![f64::NAN, 5.0, f64::INFINITY, -3.0, f64::NEG_INFINITY, 0.1];
         let c = t.compress(&delta, &mut rng);
-        assert!(c.dequantized.iter().all(|v| v.is_finite()));
+        let dq = c.dequantized().unwrap();
+        assert!(dq.iter().all(|v| v.is_finite()));
         // the finite magnitudes win the selection
-        assert_eq!(c.dequantized[1], 5.0);
-        assert_eq!(c.dequantized[3], -3.0);
-        assert_eq!(t.decode(&c.wire, 6).unwrap(), c.dequantized);
+        assert_eq!(dq[1], 5.0);
+        assert_eq!(dq[3], -3.0);
+        assert_eq!(t.decode(&c.wire, 6).unwrap(), dq);
         // all-NaN input degrades to an all-zero update
         let c = t.compress(&[f64::NAN; 8], &mut rng);
-        assert!(c.dequantized.iter().all(|&v| v == 0.0));
+        assert!(c.dequantized().unwrap().iter().all(|&v| v == 0.0));
     }
 
     /// Regression: name() rounded fractions below 0.0005 to "topk0", which

@@ -204,66 +204,176 @@ pub fn randk_indices(m: usize, k: usize, seed: u64) -> Vec<usize> {
     idx
 }
 
-// ---- universal decoder -----------------------------------------------------
+// ---- streaming entry cursor ------------------------------------------------
 
-/// Decode any frame into the dense dequantized vector of length `m`.
-pub fn decode(bytes: &[u8], m: usize) -> anyhow::Result<Vec<f64>> {
+/// Streaming `(index, value)` cursor over one frame's dequantized entries —
+/// the per-tag visitor behind the fused fold path
+/// ([`crate::compress::Compressed::fold_into`]).
+///
+/// Yields exactly the entry structure the frame *stores*, in ascending
+/// index order, without materializing the dense vector: dense tags
+/// (dense64/dense32/qsgd/sign) yield all m coordinates scalar-at-a-time
+/// straight off the byte/bit stream; sparse tags (topk/randk) yield only
+/// their k stored entries — every coordinate not yielded dequantizes to
+/// exactly 0.0. Each index appears at most once. The yielded values are
+/// bit-for-bit the universal [`decode`] output (which is itself built on
+/// this cursor), so a zero-skip Kahan fold over the yielded entries is
+/// bitwise interchangeable with materialize-then-fold (`tests/prop.rs`).
+///
+/// Validation matches [`decode`]: the constructor checks the header (tag,
+/// length, qsgd width + payload size, k ≤ m) and iteration surfaces
+/// truncation/corruption as `Err` items (bounded γ gaps, in-range
+/// indices), never a panic.
+pub enum Entries<'a> {
+    Dense64 { r: FrameReader<'a>, i: usize, m: usize },
+    Dense32 { r: FrameReader<'a>, i: usize, m: usize },
+    Qsgd { bits: BitReader<'a>, q: u32, norm: f64, s: f64, i: usize, m: usize },
+    Sign { bits: BitReader<'a>, scale: f64, i: usize, m: usize },
+    TopK { bits: BitReader<'a>, m: usize, k: usize, i: usize, idx: usize },
+    RandK { r: FrameReader<'a>, idx: Vec<usize>, i: usize },
+}
+
+/// Open a streaming entry cursor over a frame, validating the header
+/// against the expected length `m` exactly as [`decode`] does.
+pub fn entries(bytes: &[u8], m: usize) -> anyhow::Result<Entries<'_>> {
     let mut r = FrameReader::new(bytes);
     let tag = r.u8()?;
     let m_wire = r.u32()? as usize;
     anyhow::ensure!(m_wire == m, "frame length {m_wire} != expected {m}");
-    match tag {
-        TAG_DENSE64 => (0..m).map(|_| r.f64()).collect(),
-        TAG_DENSE32 => (0..m).map(|_| r.f32().map(|x| x as f64)).collect(),
+    Ok(match tag {
+        TAG_DENSE64 => Entries::Dense64 { r, i: 0, m },
+        TAG_DENSE32 => Entries::Dense32 { r, i: 0, m },
         TAG_QSGD => {
             let q = r.u8()?;
             anyhow::ensure!((2..=16).contains(&q), "bad qsgd width {q}");
             let norm = r.f64()?;
             let packed = r.rest();
             anyhow::ensure!(packed.len() >= packed_len(m, q), "qsgd payload too short");
-            let levels = unpack_levels(packed, m, q)?;
             let s = ((1i32 << (q - 1)) - 1) as f64;
-            Ok(levels.iter().map(|&l| norm * l as f64 / s).collect())
+            Entries::Qsgd { bits: BitReader::new(packed), q: q as u32, norm, s, i: 0, m }
         }
         TAG_SIGN => {
             let scale = r.f64()?;
-            let packed = r.rest();
-            let mut bits = BitReader::new(packed);
-            (0..m)
-                .map(|_| bits.get(1).map(|b| if b == 1 { -scale } else { scale }))
-                .collect()
+            Entries::Sign { bits: BitReader::new(r.rest()), scale, i: 0, m }
         }
         TAG_TOPK => {
             let k = r.u32()? as usize;
             anyhow::ensure!(k <= m, "topk k={k} > m={m}");
-            let mut bits = BitReader::new(r.rest());
-            let mut out = vec![0.0; m];
-            let mut idx = 0usize;
-            for i in 0..k {
-                // A corrupted γ code can decode to any u64; bound it before
-                // the add so a flipped bit yields Err, never an overflow.
-                let gap = bits.get_elias_gamma()?;
-                anyhow::ensure!(gap as u128 <= m as u128, "topk gap {gap} out of range");
-                let gap = gap as usize;
-                idx = if i == 0 { gap - 1 } else { idx + gap };
-                anyhow::ensure!(idx < m, "topk index out of range");
-                out[idx] = f64::from_bits(bits.get(64)?);
-            }
-            Ok(out)
+            Entries::TopK { bits: BitReader::new(r.rest()), m, k, i: 0, idx: 0 }
         }
         TAG_RANDK => {
             let seed = r.u64()?;
             let k = r.u32()? as usize;
             anyhow::ensure!(k <= m, "randk k={k} > m={m}");
-            let idx = randk_indices(m, k, seed);
-            let mut out = vec![0.0; m];
-            for &i in idx.iter() {
-                out[i] = r.f64()?;
-            }
-            Ok(out)
+            Entries::RandK { r, idx: randk_indices(m, k, seed), i: 0 }
         }
         t => anyhow::bail!("unknown wire tag {t}"),
+    })
+}
+
+impl Iterator for Entries<'_> {
+    type Item = anyhow::Result<(usize, f64)>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        match self {
+            Entries::Dense64 { r, i, m } => {
+                if *i >= *m {
+                    return None;
+                }
+                let j = *i;
+                *i += 1;
+                Some(r.f64().map(|v| (j, v)))
+            }
+            Entries::Dense32 { r, i, m } => {
+                if *i >= *m {
+                    return None;
+                }
+                let j = *i;
+                *i += 1;
+                Some(r.f32().map(|v| (j, v as f64)))
+            }
+            Entries::Qsgd { bits, q, norm, s, i, m } => {
+                if *i >= *m {
+                    return None;
+                }
+                let j = *i;
+                *i += 1;
+                // per-field sign-magnitude decode, identical to
+                // `packing::unpack_levels` one field at a time
+                Some(bits.get(*q).map(|field| {
+                    let sign = field & 1;
+                    let mag = (field >> 1) as i32;
+                    let level = if sign == 1 { -mag } else { mag };
+                    (j, *norm * level as f64 / *s)
+                }))
+            }
+            Entries::Sign { bits, scale, i, m } => {
+                if *i >= *m {
+                    return None;
+                }
+                let j = *i;
+                *i += 1;
+                Some(bits.get(1).map(|b| (j, if b == 1 { -*scale } else { *scale })))
+            }
+            Entries::TopK { bits, m, k, i, idx } => {
+                if *i >= *k {
+                    return None;
+                }
+                let first = *i == 0;
+                *i += 1;
+                // A corrupted γ code can decode to any u64; bound it before
+                // the add so a flipped bit yields Err, never an overflow.
+                let gap = match bits.get_elias_gamma() {
+                    Ok(g) => g,
+                    Err(e) => return Some(Err(e)),
+                };
+                if gap as u128 > *m as u128 {
+                    return Some(Err(anyhow::anyhow!("topk gap {gap} out of range")));
+                }
+                let gap = gap as usize;
+                let j = if first { gap - 1 } else { *idx + gap };
+                if j >= *m {
+                    return Some(Err(anyhow::anyhow!("topk index out of range")));
+                }
+                *idx = j;
+                Some(bits.get(64).map(|v| (j, f64::from_bits(v))))
+            }
+            Entries::RandK { r, idx, i } => {
+                if *i >= idx.len() {
+                    return None;
+                }
+                let j = idx[*i];
+                *i += 1;
+                Some(r.f64().map(|v| (j, v)))
+            }
+        }
     }
+}
+
+/// The vector length a frame declares in its header, without decoding the
+/// payload — what resume validation checks in-flight slots against.
+pub fn frame_dim(bytes: &[u8]) -> anyhow::Result<usize> {
+    let mut r = FrameReader::new(bytes);
+    let tag = r.u8()?;
+    anyhow::ensure!(
+        (TAG_DENSE64..=TAG_RANDK).contains(&tag),
+        "unknown wire tag {tag}"
+    );
+    Ok(r.u32()? as usize)
+}
+
+// ---- universal decoder -----------------------------------------------------
+
+/// Decode any frame into the dense dequantized vector of length `m`.
+/// Built on [`entries`] — the single source of truth for per-tag payload
+/// layout — by scattering the yielded entries into a zero vector.
+pub fn decode(bytes: &[u8], m: usize) -> anyhow::Result<Vec<f64>> {
+    let mut out = vec![0.0; m];
+    for e in entries(bytes, m)? {
+        let (j, v) = e?;
+        out[j] = v;
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

@@ -166,8 +166,10 @@ impl NodeWorker {
                 self.compressor.compress(&du, &mut self.rng),
             ),
         };
-        self.xhat.commit(&cx.dequantized);
-        self.uhat.commit(&cu.dequantized);
+        // Frame commit before the wire buffers move into the message: the
+        // sender advances its banks by exactly what the server will decode.
+        self.xhat.commit_frame(&cx)?;
+        self.uhat.commit_frame(&cu)?;
         let sent = self.ep.send(NodeToServer::Update {
             node: self.ep.node,
             iter: 0,

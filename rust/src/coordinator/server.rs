@@ -11,7 +11,7 @@ use crate::comm::message::{
 };
 use crate::comm::network::{ServerEndpoint, SharedAccounting};
 use crate::compress::error_feedback::{estimate_rows, EstimateTracker};
-use crate::compress::{wire, Compressor};
+use crate::compress::{Compressed, Compressor};
 use crate::config::ExperimentConfig;
 use crate::metrics::{IterRecord, RunRecorder};
 use crate::problems::accumulator::ConsensusAccumulator;
@@ -36,12 +36,13 @@ pub struct ServerLoop {
     xhat: Vec<EstimateTracker>,
     uhat: Vec<EstimateTracker>,
     zhat: Option<EstimateTracker>,
-    /// Incremental consensus sum: each decoded arrival folds its deltas in
-    /// (real arrival order — no bitwise replay claim in the deployment
-    /// shape, only the accumulator's drift bound), so the per-round
-    /// consensus is O(m) + the every-K-rounds refresh.
+    /// Incremental consensus sum: each arrival folds its wire frames in
+    /// directly — no dequantized intermediate — in real arrival order (no
+    /// bitwise replay claim in the deployment shape, only the accumulator's
+    /// drift bound), so the per-round consensus is O(m) + the
+    /// every-K-rounds refresh.
     acc: ConsensusAccumulator,
-    /// Non-star fan-in, colocated with the server thread: decoded arrivals
+    /// Non-star fan-in, colocated with the server thread: arrivals
     /// route through their aggregator, which re-quantizes the partial sum
     /// and charges its own link (n + g). In the deployment shape there is
     /// no virtual timeline to batch against, so a ready aggregator flushes
@@ -63,10 +64,11 @@ pub struct ServerLoop {
     /// deployment reproduces the engine's partial-participation schedule
     /// without any wall-clock sleeps.
     replay: Option<Vec<Vec<usize>>>,
-    /// Decoded updates that arrived ahead of their recorded round (replay
-    /// mode only). At most one per node: a node recomputes only after its
-    /// previous update was folded into a broadcast it has seen.
-    stash: BTreeMap<usize, (Vec<f64>, Vec<f64>)>,
+    /// Updates that arrived ahead of their recorded round (replay mode
+    /// only), held as wire frames. At most one per node: a node recomputes
+    /// only after its previous update was folded into a broadcast it has
+    /// seen.
+    stash: BTreeMap<usize, (Compressed, Compressed)>,
     /// Dead-banded (zero-payload) reports that arrived ahead of their
     /// recorded round (replay mode only). Disjoint from [`Self::stash`]
     /// by the same one-in-flight cadence: a node's dispatch is either a
@@ -192,6 +194,10 @@ impl ServerLoop {
             let z = self.consensus()?;
             let dz = self.zhat.as_mut().unwrap().make_delta(&z);
             let cz = self.compressor.compress(&dz, &mut self.rng);
+            // materialize the broadcast once (before the wire buffer moves
+            // into the message), then commit it dense — same op order as
+            // the in-process engines' shared downlink payload
+            let dz_deq = cz.dequantized()?;
             // BTreeSet iteration is ascending, matching the wire contract.
             let included: Vec<u32> = self.pending.iter().map(|&i| i as u32).collect();
             self.ep.broadcast(&ServerToNode::Consensus {
@@ -199,7 +205,7 @@ impl ServerLoop {
                 included,
                 dz_wire: cz.wire,
             })?;
-            self.zhat.as_mut().unwrap().commit(&cz.dequantized);
+            self.zhat.as_mut().unwrap().commit(&dz_deq);
 
             let batch_size = self.pending.len();
             for i in 0..self.n {
@@ -248,17 +254,16 @@ impl ServerLoop {
             }
             match self.ep.recv_timeout(self.stall_timeout)? {
                 Some(NodeToServer::Update { node, dx_wire, du_wire, .. }) => {
-                    let dx = wire::decode(&dx_wire, self.m)?;
-                    let du = wire::decode(&du_wire, self.m)?;
+                    let (cx, cu) = Self::check_frames(dx_wire, du_wire, self.m)?;
                     match &mut self.tier {
                         None => {
-                            // O(m) fold keeps s = Σ(x̂+û) current without
-                            // the per-round bank sweep
-                            self.fold_update(node, &dx, &du);
+                            // O(k)/O(m) frame fold keeps s = Σ(x̂+û)
+                            // current without the per-round bank sweep
+                            self.fold_update(node, &cx, &cu)?;
                         }
                         Some(t) => {
-                            self.xhat[node].commit(&dx);
-                            self.uhat[node].commit(&du);
+                            self.xhat[node].commit_frame(&cx)?;
+                            self.uhat[node].commit_frame(&cu)?;
                             // route through the colocated aggregator tier:
                             // fold into the pending partial, then forward
                             // the re-quantized delta on the aggregator's
@@ -266,7 +271,7 @@ impl ServerLoop {
                             // arrival order is real time, nothing to batch
                             // a virtual instant against)
                             let g = t.route(node, &mut self.rng_topology);
-                            t.deliver(node, &dx, &du, 0.0);
+                            t.deliver(node, &cx, &cu, 0.0)?;
                             // Event-trigger dead-band at the aggregator:
                             // a partial within δ forwards credit only —
                             // the mass stays pending (Kahan-tracked) and
@@ -286,8 +291,8 @@ impl ServerLoop {
                                         + fw.cx.wire_bits()
                                         + fw.cu.wire_bits(),
                                 );
-                                t.commit(g, &fw.cx.dequantized, &fw.cu.dequantized);
-                                self.acc.fold(&fw.cx.dequantized, &fw.cu.dequantized);
+                                t.commit(g, &fw.cx, &fw.cu)?;
+                                self.acc.fold_frames(&fw.cx, &fw.cu)?;
                                 for (child, _) in fw.children {
                                     self.pending.insert(child);
                                 }
@@ -315,13 +320,32 @@ impl ServerLoop {
         }
     }
 
-    /// Commit one decoded star-fan-in update: estimate banks, incremental
-    /// consensus sum, and the pending (arrival) set.
-    fn fold_update(&mut self, node: usize, dx: &[f64], du: &[f64]) {
-        self.xhat[node].commit(dx);
-        self.uhat[node].commit(du);
-        self.acc.fold(dx, du);
+    /// Validate a received pair of wire frames (dimension check up front,
+    /// so a malformed remote frame is an Err on the server loop, never a
+    /// panic inside a bank commit).
+    fn check_frames(
+        dx_wire: Vec<u8>,
+        du_wire: Vec<u8>,
+        m: usize,
+    ) -> anyhow::Result<(Compressed, Compressed)> {
+        let cx = Compressed { wire: dx_wire };
+        let cu = Compressed { wire: du_wire };
+        anyhow::ensure!(
+            cx.frame_dim()? == m && cu.frame_dim()? == m,
+            "update frame dimension mismatch (expected {m})"
+        );
+        Ok((cx, cu))
+    }
+
+    /// Commit one star-fan-in update straight from its wire frames:
+    /// estimate banks, incremental consensus sum, and the pending
+    /// (arrival) set.
+    fn fold_update(&mut self, node: usize, cx: &Compressed, cu: &Compressed) -> anyhow::Result<()> {
+        self.xhat[node].commit_frame(cx)?;
+        self.uhat[node].commit_frame(cu)?;
+        self.acc.fold_frames(cx, cu)?;
         self.pending.insert(node);
+        Ok(())
     }
 
     /// Replay-mode gather: assemble **exactly** the recorded round's
@@ -335,8 +359,8 @@ impl ServerLoop {
     fn gather_replay(&mut self, r: usize) -> anyhow::Result<()> {
         let target = self.replay.as_ref().expect("replay mode")[r].clone();
         for &node in &target {
-            if let Some((dx, du)) = self.stash.remove(&node) {
-                self.fold_update(node, &dx, &du);
+            if let Some((cx, cu)) = self.stash.remove(&node) {
+                self.fold_update(node, &cx, &cu)?;
             } else if self.skip_stash.remove(&node) {
                 self.pending.insert(node);
             }
@@ -344,13 +368,13 @@ impl ServerLoop {
         while !target.iter().all(|i| self.pending.contains(i)) {
             match self.ep.recv_timeout(self.stall_timeout)? {
                 Some(NodeToServer::Update { node, dx_wire, du_wire, .. }) => {
-                    let dx = wire::decode(&dx_wire, self.m)?;
-                    let du = wire::decode(&du_wire, self.m)?;
+                    let (cx, cu) = Self::check_frames(dx_wire, du_wire, self.m)?;
                     if target.contains(&node) && !self.pending.contains(&node) {
-                        self.fold_update(node, &dx, &du);
+                        self.fold_update(node, &cx, &cu)?;
                     } else {
-                        // ahead of its recorded round — hold it back
-                        self.stash.insert(node, (dx, du));
+                        // ahead of its recorded round — hold it back as
+                        // wire frames (compressed size, not 2·m floats)
+                        self.stash.insert(node, (cx, cu));
                     }
                 }
                 Some(NodeToServer::Skip { node, .. }) => {

@@ -8,7 +8,7 @@
 //! carry s across rounds and fold each arrival in as
 //!
 //! ```text
-//!     s ← s + C(Δxᵢ) + C(Δuᵢ)          (O(m) per arrival)
+//!     s ← s + C(Δxᵢ) + C(Δuᵢ)          (O(nnz) per arrival)
 //! ```
 //!
 //! after which one fire is `z = prox(s/n)` — O(m) total via
@@ -36,6 +36,33 @@
 //!   server work, amortized to O(n·m / K) per round; `refresh_every = 0`
 //!   disables it entirely (the Kahan bound still holds).
 //!
+//! # The zero-skip invariant
+//!
+//! [`KahanVec::kahan_add`] is a no-op when the addend is ±0.0. Raw Kahan
+//! is *not*: with a nonzero compensation term, adding 0.0 absorbs
+//! `−comp` into the sum and changes both words. The skip is what makes a
+//! sparse fold over a wire frame's stored entries — O(k) for top-k /
+//! rand-k ([`crate::compress::Compressed::fold_into`]) — bitwise
+//! identical to materializing the dense vector and folding all m
+//! coordinates: the m − k absent coordinates dequantize to exactly 0.0,
+//! and 0.0-adds now touch nothing on the dense path either. (`-0.0 ==
+//! 0.0` is true, so negative zero also skips, which additionally avoids
+//! the `-0.0 + 0.0 = +0.0` sign flip.) Every fold in the repo goes
+//! through this one function, so the invariant holds uniformly across
+//! engines and the parity contract is unaffected.
+//!
+//! # Blocked layout and coordinate sharding
+//!
+//! The fold kernels walk fixed-size [`BLOCK`]-coordinate blocks with a
+//! branchless select instead of the early return (bit-identical results),
+//! so the inner loop has a fixed trip count and no cross-lane dependency —
+//! the shape LLVM autovectorizes. Because the Kahan state is
+//! per-coordinate, the m dimension also shards deterministically:
+//! [`KahanVec::fold2_sharded`] fans disjoint coordinate ranges across
+//! scoped worker threads and every coordinate sees exactly the op sequence
+//! of the serial fold, so any shard count produces the same bits
+//! (`tests/prop.rs` pins shards ∈ {1, 3, 8} against serial).
+//!
 //! # Determinism contract
 //!
 //! The sequential simulator and the event engine share this type and fold
@@ -45,7 +72,29 @@
 //! bits. The threaded coordinator folds in real arrival order — no bitwise
 //! claim there, only the ≤1e-10 drift bound.
 
+use crate::compress::Compressed;
 use crate::snapshot::codec::{Pack, Reader, Writer};
+
+/// Coordinate-block width of the fold kernels: long enough to fill SIMD
+/// lanes with room for unrolling, short enough that the scalar remainder
+/// (< BLOCK coordinates) never matters.
+pub const BLOCK: usize = 64;
+
+/// Dimension below which [`auto_shards`] stays serial: a scoped-thread
+/// fan-out costs a few hundred µs of spawn/join, which only pays for
+/// itself once the per-shard fold is comparably large. Purely a
+/// performance knob — sharding never changes bits (see module docs).
+const SHARD_MIN_DIM: usize = 1 << 16;
+
+/// Shard count for a fold/refresh over `m` coordinates: 1 below the
+/// crossover, else the machine's parallelism (capped — beyond a handful
+/// of shards the fold is memory-bound).
+pub fn auto_shards(m: usize) -> usize {
+    if m < SHARD_MIN_DIM {
+        return 1;
+    }
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).clamp(1, 16)
+}
 
 /// A Kahan-compensated running vector sum: the *mergeable partial sum*
 /// primitive shared by the server's [`ConsensusAccumulator`] and the
@@ -63,6 +112,67 @@ pub struct KahanVec {
     comp: Vec<f64>,
 }
 
+/// One Kahan update as a pure step: the branchless form of
+/// [`KahanVec::kahan_add`] (a select instead of an early return —
+/// bit-identical results, including the ±0.0 skip), so the fixed-trip
+/// block loops stay free of per-lane control flow and vectorize.
+#[inline(always)]
+fn kahan_step(s: f64, c: f64, v: f64) -> (f64, f64) {
+    let y = v - c;
+    let t = s + y;
+    let nc = (t - s) - y;
+    let skip = v == 0.0;
+    (if skip { s } else { t }, if skip { c } else { nc })
+}
+
+/// Blocked single-addend fold kernel over a coordinate range (`negate`
+/// folds −v, the error-feedback shape).
+fn fold1_range(sum: &mut [f64], comp: &mut [f64], v: &[f64], negate: bool) {
+    debug_assert!(sum.len() == comp.len() && sum.len() == v.len());
+    let head = sum.len() - sum.len() % BLOCK;
+    let mut off = 0;
+    while off < head {
+        let s: &mut [f64; BLOCK] = (&mut sum[off..off + BLOCK]).try_into().unwrap();
+        let c: &mut [f64; BLOCK] = (&mut comp[off..off + BLOCK]).try_into().unwrap();
+        let x: &[f64; BLOCK] = v[off..off + BLOCK].try_into().unwrap();
+        for j in 0..BLOCK {
+            let xj = if negate { -x[j] } else { x[j] };
+            let (ns, nc) = kahan_step(s[j], c[j], xj);
+            s[j] = ns;
+            c[j] = nc;
+        }
+        off += BLOCK;
+    }
+    for j in head..sum.len() {
+        let xj = if negate { -v[j] } else { v[j] };
+        KahanVec::kahan_add(&mut sum[j], &mut comp[j], xj);
+    }
+}
+
+/// Blocked paired fold kernel (s += a + b) over a coordinate range.
+fn fold2_range(sum: &mut [f64], comp: &mut [f64], a: &[f64], b: &[f64]) {
+    debug_assert!(sum.len() == comp.len() && sum.len() == a.len() && sum.len() == b.len());
+    let head = sum.len() - sum.len() % BLOCK;
+    let mut off = 0;
+    while off < head {
+        let s: &mut [f64; BLOCK] = (&mut sum[off..off + BLOCK]).try_into().unwrap();
+        let c: &mut [f64; BLOCK] = (&mut comp[off..off + BLOCK]).try_into().unwrap();
+        let av: &[f64; BLOCK] = a[off..off + BLOCK].try_into().unwrap();
+        let bv: &[f64; BLOCK] = b[off..off + BLOCK].try_into().unwrap();
+        for j in 0..BLOCK {
+            let (s1, c1) = kahan_step(s[j], c[j], av[j]);
+            let (s2, c2) = kahan_step(s1, c1, bv[j]);
+            s[j] = s2;
+            c[j] = c2;
+        }
+        off += BLOCK;
+    }
+    for j in head..sum.len() {
+        KahanVec::kahan_add(&mut sum[j], &mut comp[j], a[j]);
+        KahanVec::kahan_add(&mut sum[j], &mut comp[j], b[j]);
+    }
+}
+
 impl KahanVec {
     pub fn zeros(m: usize) -> Self {
         Self { sum: vec![0.0; m], comp: vec![0.0; m] }
@@ -77,38 +187,116 @@ impl KahanVec {
         &self.sum
     }
 
+    /// One compensated scalar addition. ±0.0 addends are skipped — the
+    /// invariant that makes sparse frame folds bitwise identical to dense
+    /// folds of the materialized vector (see module docs); every fold in
+    /// the repo reaches this semantic, scalar or blocked.
     #[inline]
     pub fn kahan_add(sum: &mut f64, comp: &mut f64, v: f64) {
+        if v == 0.0 {
+            return;
+        }
         let y = v - *comp;
         let t = *sum + y;
         *comp = (t - *sum) - y;
         *sum = t;
     }
 
+    /// Fold a single coordinate: the sink of the wire-frame entry visitors
+    /// ([`crate::compress::Compressed::fold_into`]).
+    #[inline]
+    pub fn fold_at(&mut self, j: usize, v: f64) {
+        Self::kahan_add(&mut self.sum[j], &mut self.comp[j], v);
+    }
+
     /// s += v, compensated per coordinate.
     pub fn add(&mut self, v: &[f64]) {
         debug_assert_eq!(v.len(), self.sum.len());
-        for (j, (s, c)) in self.sum.iter_mut().zip(self.comp.iter_mut()).enumerate() {
-            Self::kahan_add(s, c, v[j]);
-        }
+        fold1_range(&mut self.sum, &mut self.comp, v, false);
     }
 
     /// s −= v (error-feedback residual after a compressed forward).
     pub fn sub(&mut self, v: &[f64]) {
         debug_assert_eq!(v.len(), self.sum.len());
-        for (j, (s, c)) in self.sum.iter_mut().zip(self.comp.iter_mut()).enumerate() {
-            Self::kahan_add(s, c, -v[j]);
-        }
+        fold1_range(&mut self.sum, &mut self.comp, v, true);
     }
 
     /// Paired fold s += a + b in one pass (the consensus arrival shape).
     pub fn fold2(&mut self, a: &[f64], b: &[f64]) {
         debug_assert_eq!(a.len(), self.sum.len());
         debug_assert_eq!(b.len(), self.sum.len());
-        for (j, (s, c)) in self.sum.iter_mut().zip(self.comp.iter_mut()).enumerate() {
-            Self::kahan_add(s, c, a[j]);
-            Self::kahan_add(s, c, b[j]);
+        fold2_range(&mut self.sum, &mut self.comp, a, b);
+    }
+
+    /// [`Self::fold2`] with the coordinate range fanned across `shards`
+    /// scoped worker threads. Deterministic by construction: the Kahan
+    /// state is per-coordinate and the shards are disjoint contiguous
+    /// ranges, so coordinate j undergoes exactly the serial op sequence no
+    /// matter which thread owns it — any shard count yields the same bits
+    /// (`tests/prop.rs`). `shards <= 1` (or a tiny m) runs serial with no
+    /// spawn.
+    pub fn fold2_sharded(&mut self, a: &[f64], b: &[f64], shards: usize) {
+        debug_assert_eq!(a.len(), self.sum.len());
+        debug_assert_eq!(b.len(), self.sum.len());
+        let m = self.sum.len();
+        let shards = shards.clamp(1, m.max(1));
+        if shards <= 1 {
+            return self.fold2(a, b);
         }
+        let chunk = m.div_ceil(shards);
+        std::thread::scope(|scope| {
+            let mut sum_rest: &mut [f64] = &mut self.sum;
+            let mut comp_rest: &mut [f64] = &mut self.comp;
+            let mut a_rest = a;
+            let mut b_rest = b;
+            while !sum_rest.is_empty() {
+                let take = chunk.min(sum_rest.len());
+                let (s0, s1) = sum_rest.split_at_mut(take);
+                let (c0, c1) = comp_rest.split_at_mut(take);
+                let (a0, a1) = a_rest.split_at(take);
+                let (b0, b1) = b_rest.split_at(take);
+                scope.spawn(move || fold2_range(s0, c0, a0, b0));
+                sum_rest = s1;
+                comp_rest = c1;
+                a_rest = a1;
+                b_rest = b1;
+            }
+        });
+    }
+
+    /// Fold every `(a, b)` row pair, sharded over the coordinate range:
+    /// the refresh shape (n rows × m coordinates with the row loop inside
+    /// each shard, so per-coordinate row order — hence bits — matches the
+    /// serial row-by-row fold exactly).
+    pub fn fold2_rows_sharded(&mut self, rows: &[(&[f64], &[f64])], shards: usize) {
+        let m = self.sum.len();
+        let shards = shards.clamp(1, m.max(1));
+        if shards <= 1 {
+            for (a, b) in rows {
+                self.fold2(a, b);
+            }
+            return;
+        }
+        let chunk = m.div_ceil(shards);
+        std::thread::scope(|scope| {
+            let mut sum_rest: &mut [f64] = &mut self.sum;
+            let mut comp_rest: &mut [f64] = &mut self.comp;
+            let mut off = 0usize;
+            while !sum_rest.is_empty() {
+                let take = chunk.min(sum_rest.len());
+                let (s0, s1) = sum_rest.split_at_mut(take);
+                let (c0, c1) = comp_rest.split_at_mut(take);
+                let range = off..off + take;
+                scope.spawn(move || {
+                    for (a, b) in rows {
+                        fold2_range(s0, c0, &a[range.clone()], &b[range.clone()]);
+                    }
+                });
+                sum_rest = s1;
+                comp_rest = c1;
+                off += take;
+            }
+        });
     }
 
     /// Fold another partial sum in, preserving its compensation: the true
@@ -157,12 +345,25 @@ impl ConsensusAccumulator {
         self.state.value()
     }
 
-    /// Fold one arrival's dequantized deltas: s += C(Δx) + C(Δu), O(m).
+    /// Fold one arrival's dequantized deltas: s += C(Δx) + C(Δu).
     /// Must be called with exactly the vectors committed into the estimate
-    /// banks (the [`crate::compress::Compressed::dequantized`] payloads) so
-    /// that s keeps tracking Σᵢ(x̂ᵢ + ûᵢ).
+    /// banks so that s keeps tracking Σᵢ(x̂ᵢ + ûᵢ). Large-m folds shard
+    /// across the worker pool ([`auto_shards`]) — bit-identical to serial.
     pub fn fold(&mut self, dx: &[f64], du: &[f64]) {
-        self.state.fold2(dx, du);
+        let shards = auto_shards(self.state.dim());
+        self.state.fold2_sharded(dx, du, shards);
+    }
+
+    /// Fold one arrival straight from its wire frames: s += C(Δx) + C(Δu)
+    /// without materializing either vector — O(k) for sparse frames. The
+    /// zero-skip invariant makes this bitwise identical to
+    /// [`Self::fold`] on the decoded vectors, and folding the x frame
+    /// fully before the u frame matches the interleaved per-coordinate
+    /// `fold2` order exactly because each coordinate's Kahan state is
+    /// touched at most once per frame (`tests/prop.rs` pins it).
+    pub fn fold_frames(&mut self, cx: &Compressed, cu: &Compressed) -> anyhow::Result<()> {
+        cx.fold_into(&mut self.state)?;
+        cu.fold_into(&mut self.state)
     }
 
     /// True when the round about to fire (1-based) is a refresh round. Both
@@ -174,11 +375,18 @@ impl ConsensusAccumulator {
 
     /// Full recompute from the estimate banks, in iteration order, resetting
     /// the compensation: the O(n·m) drift wash-out. `rows` yields each
-    /// node's (x̂ᵢ, ûᵢ) estimate slices.
+    /// node's (x̂ᵢ, ûᵢ) estimate slices. Large-m refreshes shard the
+    /// coordinate range across the worker pool — bit-identical to serial.
     pub fn refresh<'b>(&mut self, rows: impl Iterator<Item = (&'b [f64], &'b [f64])>) {
         self.state.reset();
-        for (x, u) in rows {
-            self.fold(x, u);
+        let shards = auto_shards(self.state.dim());
+        if shards <= 1 {
+            for (x, u) in rows {
+                self.state.fold2(x, u);
+            }
+        } else {
+            let rows: Vec<(&[f64], &[f64])> = rows.collect();
+            self.state.fold2_rows_sharded(&rows, shards);
         }
     }
 }
@@ -266,6 +474,97 @@ mod tests {
         // and subtracting it back lands exactly on zero
         k.sub(&v);
         assert!(k.value().iter().all(|&x| x == 0.0));
+    }
+
+    /// The zero-skip invariant: adding a zero vector changes nothing —
+    /// bitwise — even with nonzero compensation in flight. (Raw Kahan
+    /// would absorb −comp into the sum here; the skip is what makes
+    /// sparse frame folds ≡ dense folds, see module docs.)
+    #[test]
+    fn zero_addend_is_bitwise_noop_even_with_pending_compensation() {
+        let mut k = KahanVec::zeros(4);
+        // build nonzero compensation: big + tiny leaves comp != 0
+        k.add(&[1e16, 1.0, -1e16, 3.5]);
+        k.add(&[1.0, 1e-16, 1.0, 1e16]);
+        let before: Vec<u64> = {
+            let mut w = Writer::new();
+            k.pack(&mut w);
+            w.into_inner().iter().map(|&b| b as u64).collect()
+        };
+        k.add(&[0.0, -0.0, 0.0, -0.0]);
+        k.fold2(&[0.0; 4], &[-0.0, 0.0, -0.0, 0.0]);
+        k.sub(&[0.0, 0.0, -0.0, -0.0]);
+        let after: Vec<u64> = {
+            let mut w = Writer::new();
+            k.pack(&mut w);
+            w.into_inner().iter().map(|&b| b as u64).collect()
+        };
+        assert_eq!(before, after, "±0.0 addends must not touch sum or comp");
+    }
+
+    /// The blocked kernels agree bitwise with the scalar `kahan_add` path
+    /// across sizes straddling the BLOCK boundary (remainder handling).
+    #[test]
+    fn blocked_fold_matches_scalar_fold_bitwise() {
+        let mut rng = Pcg64::seed_from_u64(41);
+        for m in [1, BLOCK - 1, BLOCK, BLOCK + 1, 3 * BLOCK + 7] {
+            let a = rng.normal_vec(m, 0.0, 1e8);
+            let b = rng.normal_vec(m, 0.0, 1e-8);
+            let mut blocked = KahanVec::zeros(m);
+            blocked.fold2(&a, &b);
+            blocked.fold2(&b, &a);
+            let mut scalar = KahanVec::zeros(m);
+            for j in 0..m {
+                scalar.fold_at(j, a[j]);
+                scalar.fold_at(j, b[j]);
+            }
+            for j in 0..m {
+                scalar.fold_at(j, b[j]);
+                scalar.fold_at(j, a[j]);
+            }
+            let bits = |k: &KahanVec| -> Vec<u64> { k.value().iter().map(|v| v.to_bits()).collect() };
+            assert_eq!(bits(&blocked), bits(&scalar), "m={m}");
+        }
+    }
+
+    /// Sharded folds are bit-identical to serial for every shard count
+    /// (per-coordinate Kahan state ⇒ m-sharding cannot reorder any
+    /// coordinate's op sequence).
+    #[test]
+    fn sharded_fold_bitwise_identical_to_serial() {
+        let mut rng = Pcg64::seed_from_u64(43);
+        let m = 5 * BLOCK + 13;
+        let a = rng.normal_vec(m, 0.0, 1e6);
+        let b = rng.normal_vec(m, 0.0, 1e-6);
+        let mut serial = KahanVec::zeros(m);
+        serial.fold2(&a, &b);
+        serial.fold2(&b, &a);
+        for shards in [1usize, 2, 3, 8, 64] {
+            let mut sharded = KahanVec::zeros(m);
+            sharded.fold2_sharded(&a, &b, shards);
+            sharded.fold2_sharded(&b, &a, shards);
+            let pack = |k: &KahanVec| {
+                let mut w = Writer::new();
+                k.pack(&mut w);
+                w.into_inner()
+            };
+            assert_eq!(pack(&serial), pack(&sharded), "shards={shards}");
+        }
+        // row-sharded refresh shape
+        let rows: Vec<(&[f64], &[f64])> = vec![(&a, &b), (&b, &a), (&a, &a)];
+        let mut serial_rows = KahanVec::zeros(m);
+        for (x, u) in &rows {
+            serial_rows.fold2(x, u);
+        }
+        for shards in [1usize, 3, 8] {
+            let mut sharded = KahanVec::zeros(m);
+            sharded.fold2_rows_sharded(&rows, shards);
+            assert_eq!(
+                serial_rows.value().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                sharded.value().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "rows shards={shards}"
+            );
+        }
     }
 
     /// Merging two independently accumulated partials matches folding both

@@ -36,7 +36,13 @@ pub const MAGIC: [u8; 8] = *b"QADMMSNP";
 /// v2: event-trigger / adaptive-schedule state ([`crate::admm::trigger`])
 /// packed into both runtime bodies, and the event engine's in-flight slots
 /// gained a `skipped` flag — v1 snapshots no longer parse.
-pub const VERSION: u32 = 2;
+///
+/// v3: in-flight [`crate::compress::Compressed`] payloads pack wire-only
+/// (v2 stored the dequantized vector *and* the wire frame; the
+/// `decode(wire) == dequantized` contract makes the dense copy redundant),
+/// shrinking checkpoints of in-flight-heavy runs — v2 snapshots no longer
+/// parse.
+pub const VERSION: u32 = 3;
 
 /// FNV-1a 64-bit over a byte slice (checksums + RNG-state digests).
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -409,7 +415,9 @@ pub fn decode_container(
     let version = r.get_u32()?;
     anyhow::ensure!(
         version == VERSION,
-        "snapshot container version {version} not supported (expected {VERSION})"
+        "snapshot container version {version} not supported (expected {VERSION}); \
+         v3 packs in-flight compressed deltas wire-only, so older snapshots \
+         cannot be migrated — re-record the checkpoint with this build"
     );
     let header_len = r.get_u32()? as usize;
     let header_bytes = r.take(header_len)?;
@@ -553,6 +561,18 @@ mod tests {
         let mut packed2 = encode_container(&header, &[1, 2, 3]);
         packed2[8] = 0xee; // version byte
         assert!(decode_container(&packed2).is_err());
+    }
+
+    /// A v2 checkpoint (pre-wire-only Compressed packing) must be refused
+    /// with an actionable message, not misparse into a v3 state.
+    #[test]
+    fn v2_container_rejected_with_actionable_message() {
+        let header = Json::obj(vec![]);
+        let mut packed = encode_container(&header, &[1, 2, 3]);
+        packed[8..12].copy_from_slice(&2u32.to_le_bytes());
+        let err = decode_container(&packed).unwrap_err().to_string();
+        assert!(err.contains("version 2 not supported"), "got: {err}");
+        assert!(err.contains("re-record"), "got: {err}");
     }
 
     #[test]

@@ -5,8 +5,9 @@
 //!
 //! * `pending_g` — the Kahan-compensated sum of child deltas received
 //!   since the last upstream forward, *plus* the re-quantization residual
-//!   of previous forwards (error feedback per hop). Folding a child
-//!   arrival in is O(m).
+//!   of previous forwards (error feedback per hop). A child arrival folds
+//!   its wire frame straight in — O(k) for sparse compressors, O(m)
+//!   dense — without materializing a dequantized vector.
 //! * `ŝ_g` — the server-side estimate of g's forwarded partial sum, the
 //!   exact analogue of the star's per-node estimate banks: it advances
 //!   only by dequantized forwarded deltas, so the server's periodic
@@ -135,16 +136,23 @@ impl AggregatorTier {
         agg
     }
 
-    /// A child's dequantized deltas landed at its aggregator: fold into the
-    /// pending partial sum (O(m)) and record the arrival credit. Returns
-    /// the aggregator id (the caller's "touched" set).
-    pub fn deliver(&mut self, leaf: usize, dx: &[f64], du: &[f64], loss: f64) -> usize {
+    /// A child's compressed deltas landed at its aggregator: fold the wire
+    /// frames into the pending partial sum (O(k) sparse, O(m) dense) and
+    /// record the arrival credit. Returns the aggregator id (the caller's
+    /// "touched" set).
+    pub fn deliver(
+        &mut self,
+        leaf: usize,
+        cx: &Compressed,
+        cu: &Compressed,
+        loss: f64,
+    ) -> anyhow::Result<usize> {
         let agg = self.assigned[leaf].take().expect("delivery without a routed update");
         self.in_transit[agg] -= 1;
-        self.pending_x[agg].add(dx);
-        self.pending_u[agg].add(du);
+        cx.fold_into(&mut self.pending_x[agg])?;
+        cu.fold_into(&mut self.pending_u[agg])?;
         self.children[agg].push((leaf, loss));
-        agg
+        Ok(agg)
     }
 
     /// Forward condition: ≥ P_g children pending, or nothing further in
@@ -198,8 +206,10 @@ impl AggregatorTier {
         let cx = compressor.compress(self.pending_x[agg].value(), rng);
         let cu = compressor.compress(self.pending_u[agg].value(), rng);
         if self.error_feedback {
-            self.pending_x[agg].sub(&cx.dequantized);
-            self.pending_u[agg].sub(&cu.dequantized);
+            // the frames were just encoded by the compressor, so decoding
+            // them cannot fail — the residual is pending − decode(wire)
+            cx.sub_from(&mut self.pending_x[agg]).expect("just-encoded frame must decode");
+            cu.sub_from(&mut self.pending_u[agg]).expect("just-encoded frame must decode");
         } else {
             self.pending_x[agg].reset();
             self.pending_u[agg].reset();
@@ -208,17 +218,19 @@ impl AggregatorTier {
         AggForward { cx, cu, children: std::mem::take(&mut self.children[agg]) }
     }
 
-    /// Server side of a forward's arrival: ŝ_g += C(Δpartial). The caller
-    /// folds the same vectors into its global
-    /// [`crate::problems::accumulator::ConsensusAccumulator`] so s keeps
-    /// tracking Σ_g ŝ_g.
-    pub fn commit(&mut self, agg: usize, cx_deq: &[f64], cu_deq: &[f64]) {
-        for (s, d) in self.sx.row_mut(agg).iter_mut().zip(cx_deq) {
-            *s += d;
-        }
-        for (s, d) in self.su.row_mut(agg).iter_mut().zip(cu_deq) {
-            *s += d;
-        }
+    /// Server side of a forward's arrival: ŝ_g += C(Δpartial), consumed
+    /// straight from the wire frames. The caller folds the same frames into
+    /// its global [`crate::problems::accumulator::ConsensusAccumulator`] so
+    /// s keeps tracking Σ_g ŝ_g. Like `EstimateTracker::commit_frame`, a
+    /// sparse frame leaves unvisited coordinates untouched (plain `+= 0.0`
+    /// would only have normalized a stray −0.0 anyway, and every runtime
+    /// switched to frame commits together).
+    pub fn commit(&mut self, agg: usize, cx: &Compressed, cu: &Compressed) -> anyhow::Result<()> {
+        let row = self.sx.row_mut(agg);
+        cx.for_each_entry(|j, d| row[j] += d)?;
+        let row = self.su.row_mut(agg);
+        cu.for_each_entry(|j, d| row[j] += d)?;
+        Ok(())
     }
 
     /// (ŝx_g, ŝu_g) rows for the consensus refresh — O(A·m) total.
@@ -369,6 +381,12 @@ mod tests {
         AggregatorTier::new(kind, n, m, p_tier, true).expect("non-star tier")
     }
 
+    /// A raw dense64 frame — bypasses the compressors (and their input
+    /// sanitization), so tests can also put non-finite values on the wire.
+    fn frame(v: &[f64]) -> Compressed {
+        Compressed { wire: crate::compress::wire::encode_dense64(v) }
+    }
+
     #[test]
     fn star_has_no_tier() {
         assert!(AggregatorTier::new(TopologyKind::Star, 8, 4, 1, true).is_none());
@@ -382,25 +400,25 @@ mod tests {
         assert_eq!(t.route(1, &mut rng), 0);
         assert_eq!(t.route(2, &mut rng), 1);
         // first child lands; sibling still in transit and P_g = 2 → wait
-        let agg = t.deliver(0, &[1.0, 0.0, 0.0], &[0.0; 3], 0.5);
+        let agg = t.deliver(0, &frame(&[1.0, 0.0, 0.0]), &frame(&[0.0; 3]), 0.5).unwrap();
         assert_eq!(agg, 0);
         assert!(!t.ready(0));
         // second child completes the batch
-        t.deliver(1, &[0.0, 2.0, 0.0], &[0.0; 3], 0.25);
+        t.deliver(1, &frame(&[0.0, 2.0, 0.0]), &frame(&[0.0; 3]), 0.25).unwrap();
         assert!(t.ready(0));
         // aggregator 1: one pending child, none in transit — must flush
         // even though the P_g = 2 batch is incomplete
-        t.deliver(2, &[0.0, 0.0, 4.0], &[0.0; 3], 0.0);
+        t.deliver(2, &frame(&[0.0, 0.0, 4.0]), &frame(&[0.0; 3]), 0.0).unwrap();
         assert!(t.ready(1), "no sibling in flight: partial batch must flush");
 
         let comp = CompressorKind::Identity.build();
         let fw = t.flush(0, comp.as_ref(), &mut rng);
-        assert_eq!(fw.cx.dequantized, vec![1.0, 2.0, 0.0]);
+        assert_eq!(fw.cx.dequantized().unwrap(), vec![1.0, 2.0, 0.0]);
         assert_eq!(fw.children, vec![(0, 0.5), (1, 0.25)]);
         assert!(!t.has_pending(0));
         // identity compression leaves no residual
         assert!(t.pending_x[0].value().iter().all(|&v| v == 0.0));
-        t.commit(0, &fw.cx.dequantized, &fw.cu.dequantized);
+        t.commit(0, &fw.cx, &fw.cu).unwrap();
         assert_eq!(t.sx.row(0), &[1.0, 2.0, 0.0]);
         assert_eq!(t.forwards(), 1);
     }
@@ -421,12 +439,12 @@ mod tests {
                 for j in 0..m {
                     true_mass[j] += dx[j] + du[j];
                 }
-                let agg = t.deliver(leaf, &dx, &du, 0.0);
+                let agg = t.deliver(leaf, &frame(&dx), &frame(&du), 0.0).unwrap();
                 if t.ready(agg) && round % 2 == 0 {
                     // leave some rounds pending: mass must be conserved
                     // whether or not a forward happened
                     let fw = t.flush(agg, comp.as_ref(), &mut rng);
-                    t.commit(agg, &fw.cx.dequantized, &fw.cu.dequantized);
+                    t.commit(agg, &fw.cx, &fw.cu).unwrap();
                 }
             }
         }
@@ -445,7 +463,7 @@ mod tests {
         let mut rng = Pcg64::seed_from_u64(11);
         let mut t = tier(TopologyKind::Tree { fanout: 2 }, 4, 3, 1);
         t.route(0, &mut rng);
-        t.deliver(0, &[1e-9, 0.0, 0.0], &[0.0; 3], 0.5);
+        t.deliver(0, &frame(&[1e-9, 0.0, 0.0]), &frame(&[0.0; 3]), 0.5).unwrap();
         assert!(t.ready(0));
         assert!(t.pending_inf_norm(0) <= 1e-6);
         let before = t.tracked_mass();
@@ -456,11 +474,13 @@ mod tests {
         assert_eq!(t.tracked_mass(), before);
         // the withheld mass rides along with the next real delivery
         t.route(1, &mut rng);
-        t.deliver(1, &[0.5, 0.0, 0.0], &[0.0; 3], 0.0);
+        t.deliver(1, &frame(&[0.5, 0.0, 0.0]), &frame(&[0.0; 3]), 0.0).unwrap();
         assert!((t.pending_inf_norm(0) - (0.5 + 1e-9)).abs() < 1e-15);
-        // non-finite pending mass must report +∞ (never dead-banded)
+        // non-finite pending mass must report +∞ (never dead-banded).
+        // `frame` writes raw dense64, so the NaN actually reaches the fold
+        // (the compressors would have sanitized it away).
         t.route(3, &mut rng);
-        t.deliver(3, &[f64::NAN, 0.0, 0.0], &[0.0; 3], 0.0);
+        t.deliver(3, &frame(&[f64::NAN, 0.0, 0.0]), &frame(&[0.0; 3]), 0.0).unwrap();
         assert_eq!(t.pending_inf_norm(1), f64::INFINITY);
     }
 
@@ -475,7 +495,7 @@ mod tests {
                 .unwrap();
             let mut r = Pcg64::seed_from_u64(9);
             t.route(0, &mut r);
-            t.deliver(0, &delta, &delta, 0.0);
+            t.deliver(0, &frame(&delta), &frame(&delta), 0.0).unwrap();
             let _ = t.flush(0, comp.as_ref(), &mut r);
             let has_residual = t.pending_x[0].value().iter().any(|&v| v != 0.0);
             assert_eq!(has_residual, residual_expected, "ef={ef}");
@@ -495,12 +515,16 @@ mod tests {
             let dx = rng.normal_vec(6, 0.0, 1.0);
             let du = rng.normal_vec(6, 0.0, 0.1);
             t.route(1, &mut rng);
-            t.deliver(1, &dx, &du, 0.0);
+            t.deliver(1, &frame(&dx), &frame(&du), 0.0).unwrap();
             assert!(t.ready(1));
             let fw = t.flush(1, comp.as_ref(), &mut rng);
-            assert_eq!(fw.cx.dequantized, dx, "forward must carry the child delta exactly");
-            assert_eq!(fw.cu.dequantized, du);
-            t.commit(1, &fw.cx.dequantized, &fw.cu.dequantized);
+            assert_eq!(
+                fw.cx.dequantized().unwrap(),
+                dx,
+                "forward must carry the child delta exactly"
+            );
+            assert_eq!(fw.cu.dequantized().unwrap(), du);
+            t.commit(1, &fw.cx, &fw.cu).unwrap();
             for (b, d) in bank.iter_mut().zip(&dx) {
                 *b += d;
             }

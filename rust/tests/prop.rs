@@ -12,7 +12,8 @@ use qadmm::compress::error_feedback::EstimateTracker;
 use qadmm::compress::packing::{pack_levels, unpack_levels};
 use qadmm::compress::{Compressor, CompressorKind};
 use qadmm::config::{presets, OracleConfig, ProblemKind};
-use qadmm::problems::accumulator::ConsensusAccumulator;
+use qadmm::problems::accumulator::{ConsensusAccumulator, KahanVec};
+use qadmm::snapshot::codec::{Pack, Writer};
 use qadmm::problems::lasso::{LassoConfig, LassoProblem};
 use qadmm::topology::TopologyKind;
 use qadmm::util::rng::Pcg64;
@@ -90,9 +91,9 @@ fn prop_incremental_consensus_sum_matches_full_recompute() {
             for node in rng.choose_k(n, p) {
                 let dx = comp.compress(&rng.normal_vec(m, 0.0, scale), rng);
                 let du = comp.compress(&rng.normal_vec(m, 0.0, scale), rng);
-                xhat[node].commit(&dx.dequantized);
-                uhat[node].commit(&du.dequantized);
-                acc.fold(&dx.dequantized, &du.dequantized);
+                xhat[node].commit_frame(&dx).unwrap();
+                uhat[node].commit_frame(&du).unwrap();
+                acc.fold_frames(&dx, &du).unwrap();
             }
             if acc.refresh_due(round) {
                 acc.refresh(xhat.iter().zip(&uhat).map(|(x, u)| (x.estimate(), u.estimate())));
@@ -133,9 +134,9 @@ fn kahan_drift_bounded_over_10k_folds_without_refresh() {
         let node = rng.gen_range(n);
         let dx = q.compress(&rng.normal_vec(m, 0.0, 0.1), &mut rng);
         let du = q.compress(&rng.normal_vec(m, 0.0, 0.1), &mut rng);
-        xhat[node].commit(&dx.dequantized);
-        uhat[node].commit(&du.dequantized);
-        acc.fold(&dx.dequantized, &du.dequantized);
+        xhat[node].commit_frame(&dx).unwrap();
+        uhat[node].commit_frame(&du).unwrap();
+        acc.fold_frames(&dx, &du).unwrap();
     }
     let mut full = vec![0.0; m];
     for (x, u) in xhat.iter().zip(&uhat) {
@@ -150,6 +151,92 @@ fn kahan_drift_bounded_over_10k_folds_without_refresh() {
             "10k-fold drift: inc={s} full={f} (norm {norm})"
         );
     }
+}
+
+/// Full Kahan state (sum + compensation) as bytes, for bitwise equality
+/// asserts that see through `-0.0 == 0.0` and pending-compensation drift.
+fn kahan_bytes(k: &KahanVec) -> Vec<u8> {
+    let mut w = Writer::new();
+    k.pack(&mut w);
+    w.into_inner()
+}
+
+/// Tentpole bitwise contract: folding a wire frame straight into a Kahan
+/// accumulator (`fold_into`) is bit-for-bit identical to materializing the
+/// dequantized vector and dense-adding it — across every compressor kind,
+/// random dimensions/scales, nonzero starting states with pending
+/// compensation, and non-finite-poisoned inputs (the compressors sanitize
+/// those; the two fold paths must agree either way). The zero-skip
+/// invariant in `kahan_add` is what makes the O(k) sparse fold exact.
+#[test]
+fn prop_fused_fold_into_bitwise_matches_materialized_fold() {
+    let kinds = [
+        CompressorKind::Identity,
+        CompressorKind::Identity32,
+        CompressorKind::Qsgd { bits: 2 },
+        CompressorKind::Qsgd { bits: 3 },
+        CompressorKind::Qsgd { bits: 11 },
+        CompressorKind::Sign,
+        CompressorKind::TopK { frac_permille: 120 },
+        CompressorKind::RandK { frac_permille: 250 },
+    ];
+    let poisons = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY];
+    for_all(60, 2424, |rng| {
+        let mut delta = random_vec(rng);
+        let m = delta.len();
+        if rng.gen_range(2) == 0 {
+            for _ in 0..1 + rng.gen_range(m.min(4)) {
+                let i = rng.gen_range(m);
+                delta[i] = poisons[rng.gen_range(poisons.len())];
+            }
+        }
+        // ill-conditioned starting state: a huge and a tiny vector leave
+        // nonzero compensation terms behind, so the assert also covers the
+        // "fold into dirty Kahan state" case the server hot path lives in
+        let big: Vec<f64> = (0..m).map(|_| rng.standard_normal() * 1e12).collect();
+        let small: Vec<f64> = (0..m).map(|_| rng.standard_normal()).collect();
+        for kind in kinds {
+            let c = kind.build().compress(&delta, rng);
+            let mut fused = KahanVec::zeros(m);
+            let mut dense = KahanVec::zeros(m);
+            for acc in [&mut fused, &mut dense] {
+                acc.add(&big);
+                acc.add(&small);
+            }
+            c.fold_into(&mut fused).unwrap();
+            dense.add(&c.dequantized().unwrap());
+            assert_eq!(
+                kahan_bytes(&fused),
+                kahan_bytes(&dense),
+                "fused fold diverged for kind={} m={m}",
+                kind.label()
+            );
+        }
+    });
+}
+
+/// Coordinate-sharded folds are a pure range partition of per-coordinate
+/// Kahan state: any shard count (including the serial shards=1 and more
+/// shards than the host has cores) produces bitwise-identical sum *and*
+/// compensation to the unsharded kernel.
+#[test]
+fn prop_sharded_fold_bitwise_identical_across_shard_counts() {
+    for_all(40, 2525, |rng| {
+        let m = 1 + rng.gen_range(2000);
+        let a: Vec<f64> = (0..m).map(|_| rng.standard_normal() * 1e9).collect();
+        let b: Vec<f64> = (0..m).map(|_| rng.standard_normal()).collect();
+        let c: Vec<f64> = (0..m).map(|_| rng.standard_normal() * 1e-6).collect();
+        let mut serial = KahanVec::zeros(m);
+        serial.fold2(&a, &b);
+        serial.fold2(&c, &a);
+        let want = kahan_bytes(&serial);
+        for shards in [1usize, 3, 8] {
+            let mut k = KahanVec::zeros(m);
+            k.fold2_sharded(&a, &b, shards);
+            k.fold2_sharded(&c, &a, shards);
+            assert_eq!(kahan_bytes(&k), want, "shards={shards} m={m}");
+        }
+    });
 }
 
 #[test]
@@ -182,7 +269,7 @@ fn prop_decode_equals_dequantized_for_every_compressor() {
             let c = kind.build();
             let out = c.compress(&delta, rng);
             let decoded = c.decode(&out.wire, delta.len()).unwrap();
-            assert_eq!(decoded, out.dequantized, "{}", kind.label());
+            assert_eq!(decoded, out.dequantized().unwrap(), "{}", kind.label());
         }
     });
 }
@@ -196,7 +283,7 @@ fn prop_qsgd_error_bounded_and_sign_preserving() {
         let out = comp.compress(&delta, rng);
         let norm = delta.iter().fold(0.0f64, |m, x| m.max(x.abs()));
         let s = ((1i32 << (q - 1)) - 1) as f64;
-        for (d, v) in delta.iter().zip(&out.dequantized) {
+        for (d, v) in delta.iter().zip(&out.dequantized().unwrap()) {
             assert!((d - v).abs() <= norm / s * (1.0 + 1e-12) + 1e-300);
             assert!(*v == 0.0 || v.signum() == d.signum());
         }
@@ -777,8 +864,9 @@ fn prop_compressors_total_on_non_finite_inputs() {
         for kind in kinds {
             let c = kind.build();
             let out = c.compress(&delta, rng);
-            assert_eq!(out.dequantized.len(), m, "{}", kind.label());
-            for (j, v) in out.dequantized.iter().enumerate() {
+            assert_eq!(out.frame_dim().unwrap(), m, "{}", kind.label());
+            let dq = out.dequantized().unwrap();
+            for (j, v) in dq.iter().enumerate() {
                 assert!(
                     v.is_finite(),
                     "{}: non-finite dequantized[{j}] = {v} leaked into the EF bank",
@@ -786,7 +874,7 @@ fn prop_compressors_total_on_non_finite_inputs() {
                 );
             }
             let decoded = c.decode(&out.wire, m).unwrap();
-            assert_eq!(decoded, out.dequantized, "{}", kind.label());
+            assert_eq!(decoded, dq, "{}", kind.label());
         }
     });
 }

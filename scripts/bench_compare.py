@@ -26,6 +26,7 @@ import sys
 SECTIONS = {
     "sweeps": (["label", "n", "m", "tau"], "wall_s"),
     "server_round": (["n", "m", "p"], "inc_round_us"),
+    "server_round_nn": (["n", "m", "p", "k"], "fused_round_us"),
     "trigger": (["n", "delta", "adapt"], "wall_s"),
 }
 
@@ -119,12 +120,35 @@ def one_sided_sections(baseline, current):
     return notes
 
 
+def regression_warnings(baseline, current, threshold):
+    """`server_round` rows whose inc_round_us regressed beyond threshold.
+
+    Soft gate only: the caller prints a prominent warning but still exits 0
+    (runner noise must never block a merge on its own).
+    """
+    key_fields, metric = SECTIONS["server_round"]
+    cur = index_section(records_of(current, "server_round"), key_fields)
+    base = index_section(records_of(baseline, "server_round"), key_fields)
+    warns = []
+    for key, rec in cur.items():
+        old = base.get(key, {}).get(metric)
+        new = rec.get(metric)
+        if is_num(old) and old > 0 and is_num(new) and new / old > threshold:
+            warns.append((key, old, new, new / old))
+    return warns
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--current", required=True)
     ap.add_argument("--baseline", default=None)
     ap.add_argument("--summary", default=None,
                     help="file to append the markdown to (e.g. $GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--warn-threshold", type=float, default=None,
+                    help="soft regression gate: warn prominently when a "
+                         "server_round row's inc_round_us exceeds "
+                         "THRESHOLD x its committed baseline (never fails "
+                         "the job)")
     args = ap.parse_args()
 
     current = load(args.current)
@@ -150,6 +174,23 @@ def main():
     notes = one_sided_sections(baseline, current)
     if baseline is not None and notes:
         out.append("\n" + "\n".join(notes) + "\n")
+    if args.warn_threshold is not None and baseline is not None:
+        warns = regression_warnings(baseline, current, args.warn_threshold)
+        if warns:
+            key_fields, metric = SECTIONS["server_round"]
+            block = [
+                "\n> [!WARNING]",
+                f"> ## ⚠️ server_round `{metric}` regressed more than "
+                f"{args.warn_threshold:.2f}x vs the committed baseline",
+                "> Non-blocking (runners are noisy), but check before "
+                "merging a hot-path change:",
+            ]
+            for key, old, new, ratio in warns:
+                label = ", ".join(f"{f}={v}" for f, v in zip(key_fields, key))
+                block.append(
+                    f"> - {label}: {old:.1f}us → {new:.1f}us ({ratio:.2f}x)"
+                )
+            out.append("\n".join(block) + "\n")
     text = "\n".join(out)
 
     print(text)
