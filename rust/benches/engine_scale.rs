@@ -5,7 +5,11 @@
 //! and the `server_round_nn` section at NN-scale m ∈ {10^5, 10^6}
 //! comparing the fused O(k) sparse frame fold against the retired
 //! materialize-then-fold path and the coordinate-sharded dense fire
-//! against the serial kernel.
+//! against the serial kernel. The `scale_xl` section drives the whole
+//! engine at fleet sizes n ∈ {10^5, 10^6} (small m) and *asserts* the
+//! peak-RSS budget — the million-node acceptance bar: calendar-queue
+//! timeline, quantized-at-rest banks, shared mirror window, sampled
+//! metrics, all under a flat memory ceiling.
 //!
 //! The headline configuration is the acceptance bar for the virtual-time
 //! engine: **n = 1024 nodes, m = 10240-dim LASSO, 200 consensus rounds,
@@ -128,6 +132,89 @@ fn run_sweep(s: &Sweep) -> anyhow::Result<Json> {
 
 fn scale_sweep(n: usize, m: usize, h: usize, rounds: usize) -> Sweep {
     Sweep { n, m, h, rounds, tau: 4, link: straggler_link(), label: "scale" }
+}
+
+// ---- scale_xl: million-node fleets, O(active) memory ------------------------
+
+/// One extra-large fleet cell (n up to 10^6, small m so per-node data stays
+/// honest): the full engine — calendar-queue timeline, quantized-at-rest
+/// banks, shared mirror window, `--metrics-sample` evaluation — driven for
+/// a few consensus rounds with the straggler mixture. Asserts the peak-RSS
+/// budget (the acceptance bar of the million-node work: memory stays flat
+/// beyond the inherent iterate arenas + the active set, so a regression
+/// back to dense per-node banks or per-node downlink FIFOs fails loudly)
+/// and reports the new queue high-water / scheduled-event counters.
+fn scale_xl_cell(n: usize, rounds: usize) -> anyhow::Result<Json> {
+    let (m, h) = (8usize, 4usize);
+    let sweep =
+        Sweep { n, m, h, rounds, tau: 4, link: straggler_link(), label: "scale_xl" };
+    let mut cfg = base_cfg(&sweep);
+    cfg.name = format!("engine-scale-xl-n{n}");
+    // full-fleet evaluation is O(n·h·m) per eval — the sampled Lagrangian
+    // (64 nodes, rescaled) is the point of --metrics-sample
+    cfg.metrics_sample = 64;
+
+    let gen_clock = Stopwatch::new();
+    let mut rngs = TrialRngs::new(cfg.seed);
+    let mut problem = LassoProblem::generate(
+        LassoConfig { m, h, n, rho: 50.0, theta: 0.1 },
+        &mut rngs.data,
+    )?;
+    problem.set_reference_optimum(1.0);
+    let gen_s = gen_clock.elapsed_secs();
+
+    let clock = Stopwatch::new();
+    let mut engine = EventEngine::new(&cfg, &mut problem, rngs)?;
+    for _ in 0..rounds {
+        engine.step_round()?;
+    }
+    let wall = clock.elapsed_secs();
+    let stats = engine.stats();
+    let peak_rss_mb = qadmm::util::mem::peak_rss_mb();
+    println!(
+        "scale_xl                n={n:8} m={m:3} rounds={rounds:2}  wall {wall:7.2}s \
+         (gen {gen_s:5.2}s)  peak RSS {}  queue peak {}  events {}",
+        peak_rss_mb.map_or("n/a".into(), |mb| format!("{mb:7.0} MiB")),
+        fmt_count(stats.queue_peak as f64),
+        fmt_count(stats.events_scheduled as f64),
+    );
+    // VmHWM is process-wide (earlier sections count toward it), so the
+    // budgets leave headroom — but any O(n·m)-per-round leak or a return
+    // to dense per-node state at n = 10^6 overshoots them by an order of
+    // magnitude.
+    if let Some(mb) = peak_rss_mb {
+        let budget_mb = if n >= 1_000_000 { 4096.0 } else { 1536.0 };
+        anyhow::ensure!(
+            mb < budget_mb,
+            "peak RSS {mb:.0} MiB exceeds the {budget_mb:.0} MiB budget at n = {n}"
+        );
+    }
+    // the queue must stay O(n), not O(rounds·n): downlink arrivals drain
+    // before the next broadcast wave under this link profile (≤1 compute,
+    // ≤1 uplink in flight per node + one broadcast wave + timer slack)
+    anyhow::ensure!(
+        stats.queue_peak <= 4 * n + 64,
+        "queue peak {} is not O(n) at n = {n}",
+        stats.queue_peak
+    );
+    Ok(Json::obj(vec![
+        ("label", Json::Str("scale_xl".into())),
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("tau", Json::Num(4.0)),
+        ("rounds", Json::Num(rounds as f64)),
+        ("wall_s", Json::Num(wall)),
+        ("gen_s", Json::Num(gen_s)),
+        ("virtual_s", Json::Num(stats.virtual_time)),
+        ("events", Json::Num(stats.events as f64)),
+        ("dispatches", Json::Num(stats.dispatches as f64)),
+        ("queue_peak", Json::Num(stats.queue_peak as f64)),
+        ("events_scheduled", Json::Num(stats.events_scheduled as f64)),
+        (
+            "peak_rss_mb",
+            peak_rss_mb.map_or(Json::Null, Json::Num),
+        ),
+    ]))
 }
 
 // ---- server_round: old O(n·m) fire vs incremental O(|A|·m) -----------------
@@ -546,11 +633,27 @@ fn main() {
         }
     }
 
+    // million-node cells: the O(active) memory acceptance bar. Fast mode
+    // keeps the n = 10^5 smoke (seconds); the full run adds n = 10^6.
+    println!("--- scale_xl: 10^5..10^6-node fleets, flat memory ---");
+    let xl_cells: &[(usize, usize)] = if fast { &[(100_000, 3)] } else { &[(100_000, 5), (1_000_000, 3)] };
+    let mut xl_records = Vec::new();
+    for &(n, rounds) in xl_cells {
+        match scale_xl_cell(n, rounds) {
+            Ok(rec) => xl_records.push(rec),
+            Err(e) => {
+                eprintln!("scale_xl n={n}: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+
     // machine-readable trajectory record at the repo root
     let out = Json::obj(vec![
         ("bench", Json::Str("engine_scale".into())),
         ("fast", Json::Bool(fast)),
         ("sweeps", Json::Arr(sweep_records)),
+        ("scale_xl", Json::Arr(xl_records)),
         ("server_round", Json::Arr(server_records)),
         ("server_round_nn", Json::Arr(server_nn_records)),
         ("trigger", Json::Arr(trigger_records)),

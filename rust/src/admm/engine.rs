@@ -5,18 +5,28 @@
 //! on injected `thread::sleep` latency. This engine keeps the *semantics*
 //! of genuine asynchrony — per-node compute and network delays, the
 //! server firing on `P` arrivals, force-waiting any node at staleness τ−1 —
-//! but advances a **virtual clock** through a binary-heap event queue
-//! ([`super::events`]), so a 1000-node straggler run finishes in
-//! milliseconds of wall time.
+//! but advances a **virtual clock** through a calendar-queue event
+//! timeline ([`super::events`], O(1) amortized push/pop), so a 1000-node
+//! straggler run finishes in milliseconds of wall time and an n = 10^6
+//! fleet is event-rate-bound rather than heap-depth-bound.
 //!
 //! The server's per-round cost scales with the **arrival set**, not the
 //! fleet: each `MsgArrive` folds its wire frames into the running
 //! sum s = Σ(x̂+û) ([`ConsensusAccumulator`], O(k) per sparse arrival,
 //! O(m) dense — no dense intermediate is materialized), so a fire
 //! is `consensus_from_sum(s)` — O(m) — instead of the old O(n·m) bank
-//! sweep; true iterates and ẑ mirrors live in flat n×m [`Arena`]s, and the
-//! dispatch path reuses pooled delta/compression buffers (no steady-state
-//! per-message allocation).
+//! sweep; the dispatch path reuses pooled delta/compression buffers (no
+//! steady-state per-message allocation).
+//!
+//! Per-node memory is O(active), not O(n·m): the server estimate banks
+//! are stored **quantized-at-rest** ([`QuantBank`] — committed wire
+//! frames, dense rows materialized through a bounded LRU scratch pool),
+//! the n ẑ mirrors collapse into a [`MirrorTable`] of shared broadcast
+//! prefix states (O(window·m + n) instead of an n×m arena plus n inbox
+//! FIFOs), and in-flight outboxes are lazily boxed (`None` for every idle
+//! node, recycled through a bounded slot pool). The true x/u iterates
+//! remain dense arenas — they are the algorithm's state proper, touched
+//! by every local update.
 //!
 //! The consensus **fan-in** is owned by the configured topology
 //! ([`crate::topology`]): under the star every `MsgArrive` is an arrival
@@ -68,12 +78,12 @@
 //! asymmetric staleness of the paper's Fig. 2.
 
 use std::collections::{BTreeSet, VecDeque};
-use std::sync::Arc;
 
 use crate::comm::accounting::CommAccounting;
 use crate::comm::message::{INIT_BITS_PER_SCALAR, MSG_HEADER_BYTES};
 use crate::comm::profile::{per_node_profiles, LinkProfile};
-use crate::compress::error_feedback::{estimate_rows, EstimateTracker};
+use crate::compress::bank::QuantBank;
+use crate::compress::error_feedback::EstimateTracker;
 use crate::compress::{Compressed, Compressor};
 use crate::config::ExperimentConfig;
 use crate::metrics::{IterRecord, RunRecorder};
@@ -93,18 +103,19 @@ use super::sim::TrialRngs;
 use super::trigger::{inf_norm, TriggerState};
 
 /// A compressed update sitting in a node's outbox / on the virtual wire.
-/// One slot per node lives for the whole run — `compress_into` refills the
-/// pooled [`Compressed`] wire buffers on every dispatch, so the
-/// steady-state round does no per-message allocation. The slot holds the
-/// wire frames only (no materialized dense vectors): arrival commits and
-/// folds consume the frames directly, so in-flight memory is the
+/// A node holds a slot only while its update is computing or in transit
+/// (`in_flight[i]` is `None` otherwise — idle nodes cost nothing);
+/// drained slots recycle through a bounded pool, and `compress_into`
+/// refills the pooled [`Compressed`] wire buffers on every dispatch, so
+/// the steady-state round does no per-message allocation. The slot holds
+/// the wire frames only (no materialized dense vectors): arrival commits
+/// and folds consume the frames directly, so in-flight memory is the
 /// compressed size per message, not O(m).
 struct InFlightSlot {
     cx: Compressed,
     cu: Compressed,
     bits: u64,
     loss: f64,
-    occupied: bool,
     /// Dead-banded dispatch: the slot traverses the same compute+uplink
     /// timeline but carries no payload — its arrival grants scheduler
     /// credit only (zero wire bits, no bank commits, no fold).
@@ -118,18 +129,106 @@ impl InFlightSlot {
             cu: Compressed::empty(),
             bits: 0,
             loss: 0.0,
-            occupied: false,
             skipped: false,
         }
     }
 }
 
-/// One broadcast on a node's downlink: the dequantized Δz (shared across
-/// all n links) and whether the node should start a local update when it
-/// lands (it was selected and idle at fire time).
-struct DownlinkPacket {
-    dz: Arc<Vec<f64>>,
-    dispatch: bool,
+/// Drained in-flight slots kept for reuse (bounded — beyond this the box
+/// is simply dropped; the cap only has to cover the steady-state arrival
+/// burst, not the fleet).
+const SLOT_POOL_CAP: usize = 256;
+
+/// One broadcast still in downlink transit: its Δz, the (ascending) nodes
+/// it dispatches on landing, and how many nodes have yet to apply it.
+struct BroadcastRec {
+    dz: Vec<f64>,
+    dispatch: Vec<usize>,
+    remaining: usize,
+}
+
+/// All n per-node views of ẑ, stored as shared broadcast **prefix states**
+/// instead of an n×m arena with n inbox FIFOs. Every broadcast reaches
+/// every node in FIFO order on its downlink (the monotone per-link clamp
+/// guarantees no overtaking), so a node that has applied k broadcasts has
+/// mirror S_k = z⁰ + Δz_1 + … + Δz_k — the *same* vector for every such
+/// node. The table keeps one dense state per broadcast still in transit
+/// (O(window·m), where the window is bounded by the downlink delay
+/// spread) plus an O(n) applied-counter. Each prefix state is built by
+/// the identical `+=` addition sequence the per-node mirror commits used
+/// to run, so every materialized row is bit-for-bit the arena row it
+/// replaces (the engine-parity suites pin this).
+struct MirrorTable {
+    m: usize,
+    n: usize,
+    /// Global index of the oldest retained broadcast record.
+    base_idx: u64,
+    /// Prefix states S_{base_idx} … S_{base_idx + recs.len()} — always
+    /// exactly `recs.len() + 1` entries (front = fully-applied floor).
+    states: VecDeque<Vec<f64>>,
+    recs: VecDeque<BroadcastRec>,
+    /// Broadcasts applied per node (global count; row = states[applied −
+    /// base_idx]).
+    applied: Vec<u64>,
+}
+
+impl MirrorTable {
+    fn new(z0: &[f64], n: usize) -> Self {
+        Self {
+            m: z0.len(),
+            n,
+            base_idx: 0,
+            states: VecDeque::from([z0.to_vec()]),
+            recs: VecDeque::new(),
+            applied: vec![0; n],
+        }
+    }
+
+    /// Server fired: append the broadcast. The new prefix state commits
+    /// Δz with the same per-coordinate `+=` the node mirrors ran.
+    fn push_broadcast(&mut self, dz: Vec<f64>, dispatch: Vec<usize>) {
+        debug_assert_eq!(dz.len(), self.m);
+        debug_assert!(dispatch.windows(2).all(|w| w[0] < w[1]));
+        let mut next = self.states.back().expect("mirror table keeps >= 1 state").clone();
+        for (s, d) in next.iter_mut().zip(&dz) {
+            *s += d;
+        }
+        self.states.push_back(next);
+        self.recs.push_back(BroadcastRec { dz, dispatch, remaining: self.n });
+    }
+
+    /// A `DownlinkArrive` fired for `node`: advance its applied counter
+    /// past the next in-transit broadcast and say whether that broadcast
+    /// dispatches the node. Fully-applied front records are trimmed, so
+    /// the window always spans exactly the broadcasts someone has yet to
+    /// receive.
+    fn deliver(&mut self, node: usize) -> anyhow::Result<bool> {
+        let j = (self.applied[node] - self.base_idx) as usize;
+        anyhow::ensure!(j < self.recs.len(), "DownlinkArrive with empty inbox (node {node})");
+        self.applied[node] += 1;
+        let rec = &mut self.recs[j];
+        rec.remaining -= 1;
+        let dispatch = rec.dispatch.binary_search(&node).is_ok();
+        while self.recs.front().is_some_and(|r| r.remaining == 0) {
+            self.recs.pop_front();
+            self.states.pop_front();
+            self.base_idx += 1;
+        }
+        Ok(dispatch)
+    }
+
+    /// Node `node`'s current view of ẑ.
+    fn row(&self, node: usize) -> &[f64] {
+        &self.states[(self.applied[node] - self.base_idx) as usize]
+    }
+
+    fn n_nodes(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.m
+    }
 }
 
 /// Timeline counters the property tests assert on.
@@ -153,6 +252,12 @@ pub struct EngineStats {
     pub min_arrivals: Option<usize>,
     /// Largest per-node staleness counter ever observed (must be ≤ τ−1).
     pub max_staleness: usize,
+    /// Largest event-queue population ever reached (updated on every
+    /// push — the timeline's working-set high-water mark).
+    pub queue_peak: usize,
+    /// Events pushed onto the timeline (processed + still pending;
+    /// `events` counts only the processed ones).
+    pub events_scheduled: u64,
 }
 
 pub struct EventEngine<'a> {
@@ -165,21 +270,22 @@ pub struct EventEngine<'a> {
     x: Arena,
     u: Arena,
     z: Vec<f64>,
-    // server-side estimate banks (committed only on MsgArrive)
-    xhat: Vec<EstimateTracker>,
-    uhat: Vec<EstimateTracker>,
+    // server-side estimate banks (committed only on MsgArrive), stored
+    // quantized-at-rest: wire frames + a bounded dense scratch pool, so
+    // idle nodes cost O(1) instead of two dense rows each
+    xhat: QuantBank,
+    uhat: QuantBank,
     zhat: EstimateTracker,
     /// Incremental server sum s = Σ(x̂+û): every `MsgArrive` folds its
     /// committed deltas in (O(m)), so `fire` is O(m) instead of the old
     /// O(n·m) bank sweep — see [`ConsensusAccumulator`] for the Kahan +
     /// periodic-refresh drift contract.
     acc: ConsensusAccumulator,
-    /// Each node's private view of ẑ (n×m arena): a row advances only when
-    /// a broadcast lands on its downlink (`DownlinkArrive`), never at fire
-    /// time. `dispatch` reads this, not `zhat`.
-    z_mirror: Arena,
-    /// Per-node FIFO of broadcasts in downlink transit.
-    downlink_inbox: Vec<VecDeque<DownlinkPacket>>,
+    /// Each node's private view of ẑ, as shared broadcast prefix states:
+    /// a node's row advances only when a broadcast lands on its downlink
+    /// (`DownlinkArrive`), never at fire time. `dispatch` reads this, not
+    /// `zhat`.
+    mirrors: MirrorTable,
     /// Last scheduled downlink arrival per node (monotonicity clamp: a
     /// later broadcast never overtakes an earlier one on the same link).
     downlink_last: Vec<f64>,
@@ -214,7 +320,11 @@ pub struct EventEngine<'a> {
     overdue_pending: usize,
     /// Node has an update computing or in transit (one in flight max).
     busy: Vec<bool>,
-    in_flight: Vec<InFlightSlot>,
+    /// Outboxes, allocated only while an update is in flight (`None` for
+    /// every idle node — the O(active) half of the memory contract).
+    in_flight: Vec<Option<Box<InFlightSlot>>>,
+    /// Drained slots kept for reuse (bounded; never serialized).
+    slot_pool: Vec<Box<InFlightSlot>>,
     /// Loss delivered with each node's last arrival (round-loss fallback).
     arrived_loss: Vec<f64>,
     /// Scratch for delta construction (reused across all nodes/rounds).
@@ -245,6 +355,10 @@ pub struct EventEngine<'a> {
     /// Per-node batch-sampling streams for inexact problems.
     node_batch: Vec<Pcg64>,
     recorder: RunRecorder,
+    /// Deterministic node sample for the eval hook (`--metrics-sample`):
+    /// empty = evaluate the full fleet. A pure stride over the node range
+    /// derived from the config (no RNG consumed, nothing to snapshot).
+    eval_sample: Vec<usize>,
     clock: Stopwatch,
     vtime: f64,
     stats: EngineStats,
@@ -279,21 +393,19 @@ impl<'a> EventEngine<'a> {
                 MSG_HEADER_BYTES * 8 + 2 * m as u64 * INIT_BITS_PER_SCALAR,
             );
         }
-        let xhat: Vec<EstimateTracker> =
-            (0..n).map(|_| EstimateTracker::new(x0.clone(), ef)).collect();
-        let uhat: Vec<EstimateTracker> =
-            (0..n).map(|_| EstimateTracker::new(vec![0.0; m], ef)).collect();
+        // Quantized-at-rest banks: every row starts at the shared init row
+        // (x⁰ / zeros) with no per-node allocation at all.
+        let xhat = QuantBank::new(n, x0.clone(), ef);
+        let uhat = QuantBank::new(n, vec![0.0; m], ef);
+        let zeros = vec![0.0; m];
         // Non-star fan-in: seed each aggregator's server-side partial from
-        // its children's init state and charge the aggregated full-precision
+        // its children's init state (x̂ᵢ = x⁰, ûᵢ = 0 — the banks hold
+        // exactly these rows) and charge the aggregated full-precision
         // forward on the aggregator's own link (identically to the sim).
         let mut tier = AggregatorTier::new(cfg.topology, n, m, cfg.p_tier, ef);
         if let Some(t) = &mut tier {
             for leaf in 0..n {
-                t.seed_partial(
-                    cfg.topology.static_parent(leaf),
-                    xhat[leaf].estimate(),
-                    uhat[leaf].estimate(),
-                );
+                t.seed_partial(cfg.topology.static_parent(leaf), &x0, &zeros);
             }
             for g in 0..n_aggs {
                 accounting.record_uplink(
@@ -305,19 +417,25 @@ impl<'a> EventEngine<'a> {
         // z⁰ via the incremental path seeded with a full bank sweep — the
         // identical fold order (and, under a tier, the identical ŝ_g
         // partial source) the simulator uses, so the parity contract
-        // starts bit-exact.
+        // starts bit-exact. Every star row is (x⁰, 0) at init, so the
+        // sweep streams the shared rows without touching the banks.
         let mut acc = ConsensusAccumulator::new(m, cfg.consensus_refresh_every);
         match &tier {
             Some(t) => acc.refresh(t.refresh_rows()),
-            None => acc.refresh(estimate_rows(&xhat, &uhat)),
+            None => {
+                acc.refresh_begin();
+                for _ in 0..n {
+                    acc.refresh_fold_row(&x0, &zeros);
+                }
+            }
         }
         let z = problem.consensus_from_sum(acc.sum(), n)?;
         accounting.record_broadcast_to(n, MSG_HEADER_BYTES * 8 + m as u64 * INIT_BITS_PER_SCALAR);
         let zhat = EstimateTracker::new(z.clone(), ef);
 
         // Every node's mirror starts at the full-precision z⁰ it received
-        // in the (synchronous) init broadcast.
-        let z_mirror = Arena::broadcast_row(&z, n);
+        // in the (synchronous) init broadcast: one shared prefix state.
+        let mirrors = MirrorTable::new(&z, n);
         let oracle = AsyncOracle::new(n, cfg.oracle, &mut rngs.oracle);
         let mut qroot = rngs.quant;
         let node_quant: Vec<Pcg64> = (0..n).map(|i| qroot.fork(i as u64)).collect();
@@ -343,8 +461,7 @@ impl<'a> EventEngine<'a> {
             uhat,
             zhat,
             acc,
-            z_mirror,
-            downlink_inbox: (0..n).map(|_| VecDeque::new()).collect(),
+            mirrors,
             downlink_last: vec![0.0; n],
             pending_dispatch: Vec::new(),
             tier,
@@ -356,7 +473,8 @@ impl<'a> EventEngine<'a> {
             arrived: BTreeSet::new(),
             overdue_pending,
             busy: vec![false; n],
-            in_flight: (0..n).map(|_| InFlightSlot::empty()).collect(),
+            in_flight: (0..n).map(|_| None).collect(),
+            slot_pool: Vec::new(),
             arrived_loss: vec![0.0; n],
             delta_buf: Vec::with_capacity(m),
             delta_buf_u: Vec::with_capacity(m),
@@ -376,6 +494,7 @@ impl<'a> EventEngine<'a> {
             node_quant,
             node_batch,
             recorder: RunRecorder::new(),
+            eval_sample: Self::eval_sample_for(cfg, n),
             clock: Stopwatch::new(),
             vtime: 0.0,
             stats: EngineStats::default(),
@@ -387,6 +506,37 @@ impl<'a> EventEngine<'a> {
         let all: Vec<usize> = (0..n).collect();
         engine.dispatch(&all)?;
         Ok(engine)
+    }
+
+    /// The `--metrics-sample` node set: a pure stride over the fleet
+    /// (deterministic, consumes no RNG — the trial RNG fork order is part
+    /// of the reproducibility contract). Empty = evaluate everyone.
+    /// Shared with the simulator so both engines measure the same nodes.
+    fn eval_sample_for(cfg: &ExperimentConfig, n: usize) -> Vec<usize> {
+        super::sim::eval_sample_indices(cfg, n)
+    }
+
+    /// Every timeline push goes through here so the queue's high-water
+    /// mark and total scheduled-event count are maintained exactly (not
+    /// sampled). Associated fn over disjoint fields: call sites hold other
+    /// `self` borrows (e.g. the aggregator tier).
+    fn push_event(queue: &mut EventQueue, stats: &mut EngineStats, at: f64, kind: EventKind) {
+        queue.push(at, kind);
+        stats.events_scheduled += 1;
+        stats.queue_peak = stats.queue_peak.max(queue.len());
+    }
+
+    /// Return a drained outbox to the bounded recycle pool (cleared so a
+    /// pooled slot is indistinguishable from a fresh one).
+    fn recycle_slot(pool: &mut Vec<Box<InFlightSlot>>, mut slot: Box<InFlightSlot>) {
+        if pool.len() < SLOT_POOL_CAP {
+            slot.cx.wire.clear();
+            slot.cu.wire.clear();
+            slot.bits = 0;
+            slot.loss = 0.0;
+            slot.skipped = false;
+            pool.push(slot);
+        }
     }
 
     /// Advance virtual time until exactly one more consensus round fires —
@@ -475,27 +625,33 @@ impl<'a> EventEngine<'a> {
         self.stats.events += 1;
         match kind {
             EventKind::ComputeDone { node } => {
-                let slot = &self.in_flight[node];
-                anyhow::ensure!(slot.occupied, "ComputeDone without outbox (node {node})");
+                let Some(slot) = self.in_flight[node].as_deref() else {
+                    anyhow::bail!("ComputeDone without outbox (node {node})");
+                };
+                let (skipped, bits) = (slot.skipped, slot.bits);
                 // a dead-banded dispatch ships nothing: zero wire bits, no
                 // message counted — only the timeline legs are traversed
-                if !slot.skipped {
-                    self.accounting.record_uplink(node, slot.bits);
+                if !skipped {
+                    self.accounting.record_uplink(node, bits);
                 }
                 let delay = self.links[node].sample_uplink(&mut self.rng_latency);
-                self.queue.push(self.vtime + delay, EventKind::MsgArrive { node });
+                Self::push_event(
+                    &mut self.queue,
+                    &mut self.stats,
+                    self.vtime + delay,
+                    EventKind::MsgArrive { node },
+                );
             }
             EventKind::MsgArrive { node } => {
-                let slot = &mut self.in_flight[node];
-                anyhow::ensure!(slot.occupied, "MsgArrive without payload (node {node})");
-                slot.occupied = false;
+                let slot = self.in_flight[node].take().ok_or_else(|| {
+                    anyhow::anyhow!("MsgArrive without payload (node {node})")
+                })?;
                 if slot.skipped {
                     // credit-only arrival: the node answered "nothing to
                     // report" — it counts toward P, resets its staleness,
                     // and releases the busy latch, but no bank, partial sum
                     // or accumulator moves (even under a tier: the empty
                     // report needs no aggregation hop)
-                    slot.skipped = false;
                     self.arrived_loss[node] = slot.loss;
                     if self.arrived.insert(node)
                         && self.scheduler.staleness()[node] + 1 >= self.cfg.tau
@@ -503,10 +659,11 @@ impl<'a> EventEngine<'a> {
                         self.overdue_pending -= 1;
                     }
                     self.busy[node] = false;
+                    Self::recycle_slot(&mut self.slot_pool, slot);
                     return Ok(());
                 }
-                self.xhat[node].commit_frame(&slot.cx)?;
-                self.uhat[node].commit_frame(&slot.cu)?;
+                self.xhat.commit_frame(node, &slot.cx)?;
+                self.uhat.commit_frame(node, &slot.cu)?;
                 match &mut self.tier {
                     None => {
                         // star: the update reached the server — keep
@@ -532,15 +689,12 @@ impl<'a> EventEngine<'a> {
                         self.touched_aggs.push(agg);
                     }
                 }
+                Self::recycle_slot(&mut self.slot_pool, slot);
             }
             EventKind::DownlinkArrive { node } => {
-                let pkt = self.downlink_inbox[node].pop_front().ok_or_else(|| {
-                    anyhow::anyhow!("DownlinkArrive with empty inbox (node {node})")
-                })?;
-                for (zm, d) in self.z_mirror.row_mut(node).iter_mut().zip(pkt.dz.iter()) {
-                    *zm += d;
-                }
-                if pkt.dispatch {
+                // advance the node onto the next broadcast prefix state
+                // (same error as the per-node FIFO raised on underflow)
+                if self.mirrors.deliver(node)? {
                     self.pending_dispatch.push(node);
                 }
             }
@@ -616,7 +770,12 @@ impl<'a> EventEngine<'a> {
             let at = (self.vtime + delay).max(self.agg_last[g]);
             self.agg_last[g] = at;
             self.agg_inbox[g].push_back(fw);
-            self.queue.push(at, EventKind::AggregateArrive { agg: g });
+            Self::push_event(
+                &mut self.queue,
+                &mut self.stats,
+                at,
+                EventKind::AggregateArrive { agg: g },
+            );
         }
         // recycle the buffer (fragmented arrivals touch aggregators once
         // per instant, like the dispatch list)
@@ -643,10 +802,17 @@ impl<'a> EventEngine<'a> {
 
         if self.acc.refresh_due(self.stats.rounds + 1) {
             // tree/gossip rebuild from the ŝ_g partials (O(A·m)); the star
-            // sweeps the per-node banks (O(n·m)) as before
+            // streams the per-node banks (O(n·m), one materialized row at
+            // a time — the serial fold order, which the sharded refresh is
+            // property-pinned bitwise-equal to)
             match &self.tier {
                 Some(t) => self.acc.refresh(t.refresh_rows()),
-                None => self.acc.refresh(estimate_rows(&self.xhat, &self.uhat)),
+                None => {
+                    self.acc.refresh_begin();
+                    for i in 0..self.n {
+                        self.acc.refresh_fold_row(self.xhat.row(i), self.uhat.row(i));
+                    }
+                }
             }
         }
         self.z = self.problem.consensus_from_sum(self.acc.sum(), self.n)?;
@@ -657,9 +823,6 @@ impl<'a> EventEngine<'a> {
         // payload is shared dense across all n downlinks, so decode once.
         let dz_deq = cz.dequantized()?;
         self.zhat.commit(&dz_deq);
-        // One shared payload for all n downlinks; the node mirrors commit
-        // it when their DownlinkArrive fires, not here.
-        let dz_payload = Arc::new(dz_deq);
 
         for (i, a) in self.arrived_mask.iter_mut().enumerate() {
             *a = self.arrived.contains(&i);
@@ -684,7 +847,13 @@ impl<'a> EventEngine<'a> {
             self.scheduler.staleness().iter().filter(|&&d| d + 1 >= tau).count();
 
         if self.stats.rounds % self.cfg.eval_every == 0 {
-            let metrics = self.problem.evaluate(&self.x, &self.u, &self.z)?;
+            // --metrics-sample: score a deterministic k-node stride instead
+            // of the full fleet (the only O(n·m) eval left at n = 10^6)
+            let metrics = if self.eval_sample.is_empty() {
+                self.problem.evaluate(&self.x, &self.u, &self.z)?
+            } else {
+                self.problem.evaluate_sample(&self.eval_sample, &self.x, &self.u, &self.z)?
+            };
             self.recorder.push(IterRecord {
                 iter: self.stats.rounds,
                 comm_bits: self.accounting.normalized_bits(self.m),
@@ -704,25 +873,28 @@ impl<'a> EventEngine<'a> {
         // marked busy *now* (it cannot be re-selected while the broadcast
         // is in transit) but starts computing only when its DownlinkArrive
         // fires and its mirror has caught up.
-        let mut tl_dispatches: Vec<usize> = Vec::new();
+        let mut dispatch_set: Vec<usize> = Vec::new();
         for i in 0..self.n {
-            let dispatch = next[i] && !self.busy[i];
-            if dispatch {
+            if next[i] && !self.busy[i] {
                 self.busy[i] = true;
-                if self.timeline.is_some() {
-                    tl_dispatches.push(i);
-                }
+                dispatch_set.push(i);
             }
-            self.downlink_inbox[i]
-                .push_back(DownlinkPacket { dz: Arc::clone(&dz_payload), dispatch });
             let delay = self.links[i].sample_downlink(&mut self.rng_latency);
             let at = (self.vtime + delay).max(self.downlink_last[i]);
             self.downlink_last[i] = at;
-            self.queue.push(at, EventKind::DownlinkArrive { node: i });
+            Self::push_event(
+                &mut self.queue,
+                &mut self.stats,
+                at,
+                EventKind::DownlinkArrive { node: i },
+            );
         }
         if let Some(tl) = &mut self.timeline {
-            tl.push_round(self.vtime, tl_arrivals.unwrap_or_default(), tl_dispatches);
+            tl.push_round(self.vtime, tl_arrivals.unwrap_or_default(), dispatch_set.clone());
         }
+        // One shared Δz (and one prefix state) for all n downlinks; a
+        // node's mirror advances when its DownlinkArrive fires, not here.
+        self.mirrors.push_broadcast(dz_deq, dispatch_set);
         Ok(())
     }
 
@@ -739,7 +911,7 @@ impl<'a> EventEngine<'a> {
         let results = {
             let u = &self.u;
             let x = &self.x;
-            let zm = &self.z_mirror;
+            let zm = &self.mirrors;
             let mut items: Vec<LocalUpdateItem<'_>> = Vec::with_capacity(nodes.len());
             // O(|nodes|) carve-out of the per-node RNG forks (split_at_mut
             // is pointer arithmetic): with fragmented downlink arrivals a
@@ -767,7 +939,7 @@ impl<'a> EventEngine<'a> {
             anyhow::ensure!(x_new.len() == self.m, "local_update wrong dim");
             // eq. (9b): u ← u + (x_new − ẑᵢ), against the node's mirror
             {
-                let zrow = self.z_mirror.row(node);
+                let zrow = self.mirrors.row(node);
                 let urow = self.u.row_mut(node);
                 for j in 0..self.m {
                     urow[j] += x_new[j] - zrow[j];
@@ -782,9 +954,11 @@ impl<'a> EventEngine<'a> {
             // peek + note_sent == the old make_delta, so the disabled path
             // is byte-for-byte the pre-trigger behavior; all buffers stay
             // pooled (no steady-state allocation on this path).
-            let slot = &mut self.in_flight[node];
-            self.xhat[node].peek_delta_into(self.x.row(node), &mut self.delta_buf);
-            self.uhat[node].peek_delta_into(self.u.row(node), &mut self.delta_buf_u);
+            debug_assert!(self.in_flight[node].is_none(), "dispatch into an occupied outbox");
+            let mut slot =
+                self.slot_pool.pop().unwrap_or_else(|| Box::new(InFlightSlot::empty()));
+            self.xhat.peek_delta_into(node, self.x.row(node), &mut self.delta_buf);
+            self.uhat.peek_delta_into(node, self.u.row(node), &mut self.delta_buf_u);
             let skip = if self.trigger.enabled() {
                 let norm = inf_norm(&self.delta_buf).max(inf_norm(&self.delta_buf_u));
                 self.trigger.observe(node, norm);
@@ -798,8 +972,8 @@ impl<'a> EventEngine<'a> {
                 slot.cu.wire.clear();
                 slot.bits = 0;
             } else {
-                self.xhat[node].note_sent(self.x.row(node));
-                self.uhat[node].note_sent(self.u.row(node));
+                self.xhat.note_sent(node, self.x.row(node));
+                self.uhat.note_sent(node, self.u.row(node));
                 match self.trigger.compressor_for(node) {
                     // adaptive schedule: this node's current QSGD width
                     Some(q) => {
@@ -831,8 +1005,8 @@ impl<'a> EventEngine<'a> {
                     MSG_HEADER_BYTES * 8 + slot.cx.wire_bits() + slot.cu.wire_bits();
             }
             slot.loss = loss;
-            slot.occupied = true;
             slot.skipped = skip;
+            self.in_flight[node] = Some(slot);
             self.busy[node] = true;
             self.stats.dispatches += 1;
             // non-star fan-in: bind this update to its aggregator now (the
@@ -846,7 +1020,12 @@ impl<'a> EventEngine<'a> {
                 }
             }
             let delay = self.links[node].sample_compute(&mut self.rng_latency);
-            self.queue.push(self.vtime + delay, EventKind::ComputeDone { node });
+            Self::push_event(
+                &mut self.queue,
+                &mut self.stats,
+                self.vtime + delay,
+                EventKind::ComputeDone { node },
+            );
         }
         Ok(())
     }
@@ -886,7 +1065,7 @@ impl<'a> EventEngine<'a> {
 
     /// Node `i`'s current view of ẑ (advances only on downlink arrival).
     pub fn z_mirror(&self, node: usize) -> &[f64] {
-        self.z_mirror.row(node)
+        self.mirrors.row(node)
     }
 
     /// The server's own ẑ estimate (what the mirrors converge to once
@@ -931,13 +1110,15 @@ impl<'a> EventEngine<'a> {
     }
 
     /// Node i's x̂ estimate bank (the lossless state of its first hop).
-    pub fn x_estimate(&self, i: usize) -> &[f64] {
-        self.xhat[i].estimate()
+    /// Owned: the quantized-at-rest bank materializes the row on demand
+    /// (`&mut` for the scratch-pool LRU), bit-identical to the dense bank.
+    pub fn x_estimate(&mut self, i: usize) -> Vec<f64> {
+        self.xhat.estimate(i)
     }
 
     /// Node i's û estimate bank.
-    pub fn u_estimate(&self, i: usize) -> &[f64] {
-        self.uhat[i].estimate()
+    pub fn u_estimate(&mut self, i: usize) -> Vec<f64> {
+        self.uhat.estimate(i)
     }
 
     // ---- snapshot / resume / timeline recording ----
@@ -979,42 +1160,51 @@ impl<'a> EventEngine<'a> {
     /// bit-identity contract is defined at.
     pub fn snapshot_body(&self) -> Vec<u8> {
         let mut w = Writer::new();
-        self.x.pack(&mut w);
-        self.u.pack(&mut w);
-        self.z.pack(&mut w);
-        self.xhat.pack(&mut w);
-        self.uhat.pack(&mut w);
-        self.zhat.pack(&mut w);
-        self.acc.pack(&mut w);
-        self.z_mirror.pack(&mut w);
-        self.downlink_inbox.pack(&mut w);
-        self.downlink_last.pack(&mut w);
-        self.pending_dispatch.pack(&mut w);
-        self.tier.pack(&mut w);
-        self.touched_aggs.pack(&mut w);
-        self.agg_inbox.pack(&mut w);
-        self.agg_last.pack(&mut w);
-        self.rng_topology.pack(&mut w);
-        self.arrived.pack(&mut w);
-        w.put_usize(self.overdue_pending);
-        self.busy.pack(&mut w);
-        self.in_flight.pack(&mut w);
-        self.arrived_loss.pack(&mut w);
-        self.scheduler.pack(&mut w);
-        self.oracle.pack(&mut w);
-        self.accounting.pack(&mut w);
-        self.queue.pack(&mut w);
-        self.rng_latency.pack(&mut w);
-        self.rng_oracle.pack(&mut w);
-        self.node_quant.pack(&mut w);
-        self.server_quant.pack(&mut w);
-        self.agg_quant.pack(&mut w);
-        self.node_batch.pack(&mut w);
-        self.recorder.pack(&mut w);
-        self.trigger.pack(&mut w);
-        w.put_f64(self.vtime);
-        self.stats.pack(&mut w);
+        self.write_snapshot_body(&mut w);
         w.into_inner()
+    }
+
+    /// [`Self::snapshot_body`] into a caller-supplied [`Writer`] — the
+    /// streamed-checkpoint entry point: with a spill sink attached
+    /// ([`Writer::with_sink`]) the body flushes in bounded chunks instead
+    /// of materializing all ~O(n·m) bytes, so checkpointing an n = 10^6
+    /// run does not double peak RSS. The byte stream is identical either
+    /// way (the parity suites pin the resumed trajectory).
+    pub fn write_snapshot_body(&self, w: &mut Writer) {
+        self.x.pack(w);
+        self.u.pack(w);
+        self.z.pack(w);
+        self.xhat.pack(w);
+        self.uhat.pack(w);
+        self.zhat.pack(w);
+        self.acc.pack(w);
+        self.mirrors.pack(w);
+        self.downlink_last.pack(w);
+        self.pending_dispatch.pack(w);
+        self.tier.pack(w);
+        self.touched_aggs.pack(w);
+        self.agg_inbox.pack(w);
+        self.agg_last.pack(w);
+        self.rng_topology.pack(w);
+        self.arrived.pack(w);
+        w.put_usize(self.overdue_pending);
+        self.busy.pack(w);
+        self.in_flight.pack(w);
+        self.arrived_loss.pack(w);
+        self.scheduler.pack(w);
+        self.oracle.pack(w);
+        self.accounting.pack(w);
+        self.queue.pack(w);
+        self.rng_latency.pack(w);
+        self.rng_oracle.pack(w);
+        self.node_quant.pack(w);
+        self.server_quant.pack(w);
+        self.agg_quant.pack(w);
+        self.node_batch.pack(w);
+        self.recorder.pack(w);
+        self.trigger.pack(w);
+        w.put_f64(self.vtime);
+        self.stats.pack(w);
     }
 
     /// Rebuild an engine from a [`Self::snapshot_body`], continuing the
@@ -1037,12 +1227,11 @@ impl<'a> EventEngine<'a> {
         let x = Arena::unpack(&mut r)?;
         let u = Arena::unpack(&mut r)?;
         let z = Vec::<f64>::unpack(&mut r)?;
-        let xhat = Vec::<EstimateTracker>::unpack(&mut r)?;
-        let uhat = Vec::<EstimateTracker>::unpack(&mut r)?;
+        let xhat = QuantBank::unpack(&mut r)?;
+        let uhat = QuantBank::unpack(&mut r)?;
         let zhat = EstimateTracker::unpack(&mut r)?;
         let acc = ConsensusAccumulator::unpack(&mut r)?;
-        let z_mirror = Arena::unpack(&mut r)?;
-        let downlink_inbox = Vec::<VecDeque<DownlinkPacket>>::unpack(&mut r)?;
+        let mirrors = MirrorTable::unpack(&mut r)?;
         let downlink_last = Vec::<f64>::unpack(&mut r)?;
         let pending_dispatch = Vec::<usize>::unpack(&mut r)?;
         let tier = Option::<AggregatorTier>::unpack(&mut r)?;
@@ -1053,7 +1242,7 @@ impl<'a> EventEngine<'a> {
         let arrived = BTreeSet::<usize>::unpack(&mut r)?;
         let overdue_pending = r.get_usize()?;
         let busy = Vec::<bool>::unpack(&mut r)?;
-        let in_flight = Vec::<InFlightSlot>::unpack(&mut r)?;
+        let in_flight = Vec::<Option<Box<InFlightSlot>>>::unpack(&mut r)?;
         let arrived_loss = Vec::<f64>::unpack(&mut r)?;
         let scheduler = Scheduler::unpack(&mut r)?;
         let oracle = AsyncOracle::unpack(&mut r)?;
@@ -1083,24 +1272,31 @@ impl<'a> EventEngine<'a> {
         };
         dims_ok(&x, "x")?;
         dims_ok(&u, "u")?;
-        dims_ok(&z_mirror, "z mirror")?;
         anyhow::ensure!(z.len() == m, "snapshot z has wrong dimension");
         anyhow::ensure!(
             xhat.len() == n && uhat.len() == n,
             "snapshot estimate banks sized for a different fleet"
         );
-        for t in xhat.iter().chain(&uhat).chain(std::iter::once(&zhat)) {
-            anyhow::ensure!(t.estimate().len() == m, "snapshot estimate bank wrong dim");
-            anyhow::ensure!(
-                t.feedback_enabled() == cfg.error_feedback,
-                "snapshot was taken with error feedback {}",
-                if cfg.error_feedback { "off" } else { "on" }
-            );
-        }
+        anyhow::ensure!(
+            xhat.dim() == m && uhat.dim() == m && zhat.estimate().len() == m,
+            "snapshot estimate bank wrong dim"
+        );
+        anyhow::ensure!(
+            xhat.feedback_enabled() == cfg.error_feedback
+                && uhat.feedback_enabled() == cfg.error_feedback
+                && zhat.feedback_enabled() == cfg.error_feedback,
+            "snapshot was taken with error feedback {}",
+            if cfg.error_feedback { "off" } else { "on" }
+        );
         anyhow::ensure!(acc.dim() == m, "snapshot accumulator wrong dim");
         anyhow::ensure!(
-            downlink_inbox.len() == n
-                && downlink_last.len() == n
+            mirrors.n_nodes() == n && mirrors.dim() == m,
+            "snapshot mirror table is {}x{}, problem is {n}x{m}",
+            mirrors.n_nodes(),
+            mirrors.dim()
+        );
+        anyhow::ensure!(
+            downlink_last.len() == n
                 && busy.len() == n
                 && in_flight.len() == n
                 && arrived_loss.len() == n
@@ -1108,22 +1304,16 @@ impl<'a> EventEngine<'a> {
                 && node_batch.len() == n,
             "snapshot per-node tables sized for a different fleet"
         );
-        for inbox in &downlink_inbox {
-            for pkt in inbox {
-                anyhow::ensure!(pkt.dz.len() == m, "snapshot downlink payload wrong dim");
-            }
-        }
-        for slot in &in_flight {
-            if slot.occupied && !slot.skipped {
-                anyhow::ensure!(
-                    slot.cx.frame_dim()? == m && slot.cu.frame_dim()? == m,
-                    "snapshot in-flight payload wrong dim"
-                );
-            }
+        for slot in in_flight.iter().flatten() {
             if slot.skipped {
                 anyhow::ensure!(
                     slot.bits == 0 && slot.cx.is_empty(),
                     "snapshot skipped in-flight slot must carry no payload"
+                );
+            } else {
+                anyhow::ensure!(
+                    slot.cx.frame_dim()? == m && slot.cu.frame_dim()? == m,
+                    "snapshot in-flight payload wrong dim"
                 );
             }
         }
@@ -1212,8 +1402,7 @@ impl<'a> EventEngine<'a> {
             uhat,
             zhat,
             acc,
-            z_mirror,
-            downlink_inbox,
+            mirrors,
             downlink_last,
             pending_dispatch,
             tier,
@@ -1226,6 +1415,7 @@ impl<'a> EventEngine<'a> {
             overdue_pending,
             busy,
             in_flight,
+            slot_pool: Vec::new(),
             arrived_loss,
             delta_buf: Vec::with_capacity(m),
             delta_buf_u: Vec::with_capacity(m),
@@ -1243,6 +1433,7 @@ impl<'a> EventEngine<'a> {
             node_quant,
             node_batch,
             recorder,
+            eval_sample: Self::eval_sample_for(cfg, n),
             clock: Stopwatch::new(),
             vtime,
             stats,
@@ -1276,6 +1467,8 @@ impl Pack for EngineStats {
         w.put_u64(self.agg_forwards);
         self.min_arrivals.pack(w);
         w.put_usize(self.max_staleness);
+        w.put_usize(self.queue_peak);
+        w.put_u64(self.events_scheduled);
     }
     fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
         Ok(Self {
@@ -1286,6 +1479,8 @@ impl Pack for EngineStats {
             agg_forwards: r.get_u64()?,
             min_arrivals: Option::<usize>::unpack(r)?,
             max_staleness: r.get_usize()?,
+            queue_peak: r.get_usize()?,
+            events_scheduled: r.get_u64()?,
         })
     }
 }
@@ -1296,7 +1491,6 @@ impl Pack for InFlightSlot {
         self.cu.pack(w);
         w.put_u64(self.bits);
         w.put_f64(self.loss);
-        w.put_bool(self.occupied);
         w.put_bool(self.skipped);
     }
     fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
@@ -1305,22 +1499,89 @@ impl Pack for InFlightSlot {
             cu: Compressed::unpack(r)?,
             bits: r.get_u64()?,
             loss: r.get_f64()?,
-            occupied: r.get_bool()?,
             skipped: r.get_bool()?,
         })
     }
 }
 
-/// The shared-payload `Arc` is an in-memory aliasing optimization, not
-/// state: snapshots store each queued broadcast's Δz by value, and restore
-/// re-wraps them in fresh `Arc`s (value-identical, so the bit-identity
-/// contract is unaffected).
-impl Pack for DownlinkPacket {
+impl Pack for Box<InFlightSlot> {
     fn pack(&self, w: &mut Writer) {
-        (*self.dz).pack(w);
-        w.put_bool(self.dispatch);
+        (**self).pack(w);
     }
     fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
-        Ok(Self { dz: Arc::new(Vec::<f64>::unpack(r)?), dispatch: r.get_bool()? })
+        Ok(Box::new(InFlightSlot::unpack(r)?))
+    }
+}
+
+/// Snapshots store the mirror window as its *history* — the oldest retained
+/// state plus each broadcast's Δz in commit order — and restore replays the
+/// same `clone-then-+=` walk that built the in-memory states, so the
+/// restored window is bitwise identical to the live one.
+impl Pack for MirrorTable {
+    fn pack(&self, w: &mut Writer) {
+        w.put_usize(self.n);
+        w.put_u64(self.base_idx);
+        self.states[0].pack(w);
+        w.put_usize(self.recs.len());
+        for rec in &self.recs {
+            rec.dz.pack(w);
+            rec.dispatch.pack(w);
+        }
+        self.applied.pack(w);
+    }
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        let n = r.get_usize()?;
+        let base_idx = r.get_u64()?;
+        let front = Vec::<f64>::unpack(r)?;
+        let m = front.len();
+        let n_recs = r.get_len()?;
+        let mut states = VecDeque::with_capacity(n_recs + 1);
+        states.push_back(front);
+        let mut recs = VecDeque::with_capacity(n_recs);
+        for _ in 0..n_recs {
+            let dz = Vec::<f64>::unpack(r)?;
+            anyhow::ensure!(
+                dz.len() == m,
+                "snapshot mirror broadcast has {} coords, table is {m}-dimensional",
+                dz.len()
+            );
+            let dispatch = Vec::<usize>::unpack(r)?;
+            anyhow::ensure!(
+                dispatch.windows(2).all(|w| w[0] < w[1])
+                    && dispatch.last().map_or(true, |&i| i < n),
+                "snapshot mirror dispatch set is not a sorted subset of 0..{n}"
+            );
+            let mut next = states.back().expect("states is never empty").clone();
+            for (s, d) in next.iter_mut().zip(dz.iter()) {
+                *s += *d;
+            }
+            states.push_back(next);
+            recs.push_back(BroadcastRec { dz, dispatch, remaining: 0 });
+        }
+        let applied = Vec::<u64>::unpack(r)?;
+        anyhow::ensure!(
+            applied.len() == n,
+            "snapshot mirror table tracks {} nodes, expected {n}",
+            applied.len()
+        );
+        for &a in &applied {
+            anyhow::ensure!(
+                a >= base_idx && a - base_idx <= n_recs as u64,
+                "snapshot mirror cursor {a} outside retained window \
+                 [{base_idx}, {}]",
+                base_idx + n_recs as u64
+            );
+        }
+        for (k, rec) in recs.iter_mut().enumerate() {
+            rec.remaining =
+                applied.iter().filter(|&&a| a <= base_idx + k as u64).count();
+        }
+        if let Some(front_rec) = recs.front() {
+            anyhow::ensure!(
+                front_rec.remaining > 0,
+                "snapshot mirror window retains a fully-applied broadcast"
+            );
+        }
+        Ok(Self { m, n, base_idx, states, recs, applied })
     }
 }

@@ -1,14 +1,37 @@
 //! Virtual-time event substrate for the event-driven engine.
 //!
-//! A binary-heap priority queue over `(time, seq)` where `time` is virtual
-//! seconds and `seq` is the insertion order. Ties on `time` are broken by
-//! insertion order, which makes the whole timeline deterministic: two runs
-//! that push the same events in the same order pop them in the same order,
-//! even when every delay is 0.0 (the parity configuration, where the
-//! engine must replay the sequential simulator bit-for-bit).
+//! A calendar queue (bucketed timing wheel) over `(time, seq)` where `time`
+//! is virtual seconds and `seq` is the insertion order. Ties on `time` are
+//! broken by insertion order, which makes the whole timeline deterministic:
+//! two runs that push the same events in the same order pop them in the
+//! same order, even when every delay is 0.0 (the parity configuration,
+//! where the engine must replay the sequential simulator bit-for-bit).
+//!
+//! ## Why a calendar queue
+//!
+//! The binary heap this replaces costs O(log n) per push/pop; at n = 10^6
+//! nodes a single consensus round schedules ~n downlink events and the log
+//! factor dominates the timeline. The calendar queue hashes each event into
+//! a bucket of its virtual "day" (`day = time / width`) and pops by
+//! scanning forward from the current day — O(1) amortized per operation
+//! when `width` tracks the mean event spacing, which the periodic rebuilds
+//! maintain.
+//!
+//! ## Determinism argument
+//!
+//! Pop order never depends on the bucket geometry. `day(t) = (t / width)
+//! as u64` is monotone in `t` for any fixed positive width (division by a
+//! positive constant and the saturating f64→u64 cast are both monotone),
+//! so `day(a) > day(b)` implies `a > b`: the earliest event always lives
+//! in the first nonempty bucket, every bucket is kept sorted by
+//! `(time, seq)`, and the overflow list only holds events of strictly
+//! later days than anything in the wheel. The popped sequence is therefore
+//! the exact `(time, seq)` total order — the same stream the heap
+//! produced, bit-for-bit — regardless of how width/bucket-count heuristics
+//! carve up the timeline. Parity and snapshot tests pin this: snapshots
+//! serialize the *canonically sorted* event list, never the geometry.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::VecDeque;
 
 use crate::snapshot::codec::{Pack, Reader, Writer};
 
@@ -20,13 +43,13 @@ pub enum EventKind {
     /// Node's compressed update arrived at the server.
     MsgArrive { node: usize },
     /// The server's compressed Δz broadcast reached this node's ẑ mirror
-    /// (payloads ride a per-node FIFO inbox; arrival times are clamped
-    /// monotone per link, so broadcasts never overtake each other).
+    /// (payloads ride the shared broadcast window; arrival times are
+    /// clamped monotone per link, so broadcasts never overtake each other).
     DownlinkArrive { node: usize },
     /// An intermediate aggregator's re-quantized partial sum reached the
     /// server (non-star topologies only): the payload rides a per-agg FIFO
-    /// with monotone arrival clamps, exactly like the downlink inboxes, and
-    /// carries the arrival credit of every child folded into it.
+    /// with monotone arrival clamps, exactly like the downlink deliveries,
+    /// and carries the arrival credit of every child folded into it.
     AggregateArrive { agg: usize },
 }
 
@@ -81,47 +104,199 @@ impl Ord for Event {
     }
 }
 
-/// Min-heap of events in virtual time.
-#[derive(Debug, Default)]
+/// Bucket count floor; also the size an empty queue starts at.
+const MIN_BUCKETS: usize = 16;
+/// Bucket count ceiling: bounds the wheel's own footprint (~32 B/bucket)
+/// to tens of MB even for multi-million-event timelines.
+const MAX_BUCKETS: usize = 1 << 20;
+
+/// Calendar-queue timeline: O(1) amortized push/pop over bucketed virtual
+/// days, exact `(time, seq)` pop order (see the module docs).
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Reverse<Event>>,
+    /// One sorted run of events per virtual day of the current "year"
+    /// (`year_base .. year_base + buckets.len()` in day units).
+    buckets: Vec<VecDeque<Event>>,
+    /// Seconds per day. Rebuilds re-fit it to the mean event spacing; any
+    /// positive finite value is *correct*, only speed depends on it.
+    width: f64,
+    /// Day index mapped to `buckets[0]`.
+    year_base: u64,
+    /// Events of days at/after the end of the current year, unsorted.
+    /// Everything here is strictly later than everything in the wheel.
+    overflow: Vec<Event>,
+    /// Total scheduled events (wheel + overflow).
+    len: usize,
+    /// Cached global minimum (always a wheel resident when `len > 0`).
+    front: Option<Event>,
     next_seq: u64,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl EventQueue {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            buckets: vec![VecDeque::new(); MIN_BUCKETS],
+            width: 1.0,
+            year_base: 0,
+            overflow: Vec::new(),
+            len: 0,
+            front: None,
+            next_seq: 0,
+        }
     }
 
     /// Schedule `kind` at virtual time `time` (seconds). Delays must be
-    /// finite and non-negative; a NaN time would corrupt the ordering.
+    /// finite and non-negative: a NaN or negative time would silently
+    /// corrupt the total order, so this is a hard error in release builds
+    /// too, not a debug assertion.
     pub fn push(&mut self, time: f64, kind: EventKind) {
-        debug_assert!(time.is_finite() && time >= 0.0, "bad virtual time {time}");
+        assert!(time.is_finite() && time >= 0.0, "bad virtual time {time}");
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Reverse(Event { time, seq, kind }));
+        self.insert_event(Event { time, seq, kind });
+        if self.len > 2 * self.buckets.len() && self.buckets.len() < MAX_BUCKETS {
+            let evs = self.drain_all();
+            self.rebuild_with(evs);
+        }
     }
 
     pub fn pop(&mut self) -> Option<Event> {
-        self.heap.pop().map(|Reverse(e)| e)
+        let e = self.front?;
+        let idx = (self.day(e.time) - self.year_base) as usize;
+        let popped = self.buckets[idx].pop_front();
+        debug_assert_eq!(popped.map(|p| p.seq), Some(e.seq), "front cache out of sync");
+        self.len -= 1;
+        // The new minimum is the head of the first nonempty bucket at or
+        // after the popped one (earlier buckets are empty: the popped event
+        // was the global minimum and day() is monotone in time).
+        self.front = None;
+        for b in &self.buckets[idx..] {
+            if let Some(f) = b.front() {
+                self.front = Some(*f);
+                break;
+            }
+        }
+        if self.front.is_none() && !self.overflow.is_empty() {
+            // Year exhausted: re-anchor the wheel on the overflow events.
+            let evs = std::mem::take(&mut self.overflow);
+            self.rebuild_with(evs);
+        } else if self.len * 4 < self.buckets.len() && self.buckets.len() > MIN_BUCKETS {
+            let evs = self.drain_all();
+            self.rebuild_with(evs);
+        }
+        Some(e)
     }
 
     /// Virtual time of the next event, if any.
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|Reverse(e)| e.time)
+        self.front.map(|e| e.time)
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
+    }
+
+    /// The next sequence number this queue will assign (== total events
+    /// ever scheduled; surfaced in `EngineStats`).
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
     }
 
     /// All scheduled events, in unspecified order (snapshot validation).
     pub fn events(&self) -> impl Iterator<Item = &Event> {
-        self.heap.iter().map(|Reverse(e)| e)
+        self.buckets.iter().flat_map(VecDeque::iter).chain(self.overflow.iter())
+    }
+
+    fn day(&self, time: f64) -> u64 {
+        // `as` saturates: a huge quotient maps to u64::MAX, which is still
+        // monotone — correctness never depends on the width choice.
+        (time / self.width) as u64
+    }
+
+    fn drain_all(&mut self) -> Vec<Event> {
+        let mut evs = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            evs.extend(b.drain(..));
+        }
+        evs.append(&mut self.overflow);
+        evs
+    }
+
+    /// Re-fit the geometry to `evs` (all currently scheduled events) and
+    /// redistribute them. O(len log len); amortized away by the doubling /
+    /// halving triggers and year advances that call it.
+    fn rebuild_with(&mut self, mut evs: Vec<Event>) {
+        self.len = evs.len();
+        let nb = self.len.next_power_of_two().clamp(MIN_BUCKETS, MAX_BUCKETS);
+        let (mut tmin, mut tmax) = (f64::INFINITY, 0.0f64);
+        for e in &evs {
+            tmin = tmin.min(e.time);
+            tmax = tmax.max(e.time);
+        }
+        // Mean spacing as the day width; degenerate spans (empty queue,
+        // one instant) fall back to 1.0 — still correct, possibly slower.
+        let w = (tmax - tmin) / self.len.max(1) as f64;
+        self.width = if w.is_finite() && w > 0.0 { w } else { 1.0 };
+        self.year_base = if self.len == 0 { 0 } else { self.day(tmin) };
+        self.buckets.clear();
+        self.buckets.resize(nb, VecDeque::new());
+        self.overflow.clear();
+        evs.sort();
+        self.front = evs.first().copied();
+        for e in evs {
+            // day(e) >= year_base == day(tmin) by monotonicity
+            let off = self.day(e.time) - self.year_base;
+            if (off as usize) < nb {
+                self.buckets[off as usize].push_back(e); // sorted input: append keeps order
+            } else {
+                self.overflow.push(e);
+            }
+        }
+    }
+
+    fn insert_event(&mut self, e: Event) {
+        let d = self.day(e.time);
+        if self.front.is_none() || d < self.year_base {
+            // Empty queue, or a push into a day the year has advanced past
+            // (possible right after an overflow re-anchor: virtual "now"
+            // trails the earliest remaining event). Re-anchor on the full
+            // set — at most once per year advance, so amortized O(1).
+            let mut evs = self.drain_all();
+            evs.push(e);
+            self.rebuild_with(evs);
+            return;
+        }
+        let nb = self.buckets.len();
+        let off = d - self.year_base;
+        if (off as usize) < nb {
+            let b = &mut self.buckets[off as usize];
+            // Equal-time bursts arrive in ascending seq: append is O(1)
+            // and the common case; out-of-order times fall back to a
+            // sorted insert.
+            if b.back().map_or(true, |last| *last < e) {
+                b.push_back(e);
+            } else {
+                let pos = b.partition_point(|x| *x < e);
+                b.insert(pos, e);
+            }
+            if self.front.map_or(true, |f| e < f) {
+                self.front = Some(e);
+            }
+        } else {
+            // Strictly later day than every wheel event: cannot be the min.
+            self.overflow.push(e);
+        }
+        self.len += 1;
     }
 }
 
@@ -167,12 +342,13 @@ impl Pack for Event {
     }
 }
 
-/// Snapshots serialize the heap as a *sorted* `(time, seq)` list — heap
-/// layout is an implementation detail, but the sorted order is canonical,
-/// so pack∘unpack∘pack is byte-stable.
+/// Snapshots serialize the queue as a *sorted* `(time, seq)` list — the
+/// bucket geometry is an implementation detail, but the sorted order is
+/// canonical, so pack∘unpack∘pack is byte-stable (and byte-identical to
+/// the binary-heap era: snapshot version compatibility is free).
 impl Pack for EventQueue {
     fn pack(&self, w: &mut Writer) {
-        let mut evs: Vec<Event> = self.heap.iter().map(|Reverse(e)| *e).collect();
+        let mut evs: Vec<Event> = self.events().copied().collect();
         evs.sort();
         evs.pack(w);
         w.put_u64(self.next_seq);
@@ -187,7 +363,10 @@ impl Pack for EventQueue {
                 e.seq
             );
         }
-        Ok(Self { heap: evs.into_iter().map(Reverse).collect(), next_seq })
+        let mut q = Self::new();
+        q.rebuild_with(evs);
+        q.next_seq = next_seq;
+        Ok(q)
     }
 }
 
@@ -230,6 +409,50 @@ mod tests {
             std::iter::from_fn(|| q.pop().map(|e| (e.time, e.kind))).collect::<Vec<_>>()
         };
         assert_eq!(run(), run());
+    }
+
+    /// S1 regression: a non-finite or negative virtual time must be a hard
+    /// error in release builds, not a debug assertion.
+    #[test]
+    fn push_rejects_bad_virtual_times_in_release() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1e-9] {
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut q = EventQueue::new();
+                q.push(bad, EventKind::ComputeDone { node: 0 });
+            }));
+            assert!(caught.is_err(), "time {bad} was accepted");
+        }
+    }
+
+    /// Far-future events land in the overflow list (day beyond the current
+    /// year) and still pop in exact (time, seq) order after the wheel
+    /// re-anchors — including a push *below* the re-anchored year.
+    #[test]
+    fn overflow_and_year_advance_preserve_total_order() {
+        let mut q = EventQueue::new();
+        for node in 0..64 {
+            q.push(node as f64 * 0.01, EventKind::ComputeDone { node });
+        }
+        // far-future cluster, way past the dense year
+        for node in 0..8 {
+            q.push(1e9 + node as f64, EventKind::MsgArrive { node });
+        }
+        let mut last = (-1.0, 0u64);
+        for _ in 0..60 {
+            let e = q.pop().unwrap();
+            assert!((e.time, e.seq) > last, "order inverted at {:?}", (e.time, e.seq));
+            last = (e.time, e.seq);
+        }
+        // now push below the drained region again (virtual "now" trails)
+        q.push(0.9, EventKind::DownlinkArrive { node: 3 });
+        let next = q.pop().unwrap();
+        assert_eq!(next.time, 0.9);
+        let mut prev = (next.time, next.seq);
+        while let Some(e) = q.pop() {
+            assert!((e.time, e.seq) > prev);
+            prev = (e.time, e.seq);
+        }
+        assert_eq!(q.len(), 0);
     }
 
     #[test]
@@ -301,5 +524,27 @@ mod tests {
         assert_eq!(q.pop().unwrap().time, 0.25);
         assert_eq!(q.peek_time(), Some(3.5));
         assert_eq!(q.len(), 1);
+        assert_eq!(q.next_seq(), 2);
+    }
+
+    /// Grow/shrink rebuilds (len crossing 2·buckets and buckets/4) must be
+    /// invisible to pop order.
+    #[test]
+    fn resize_rebuilds_preserve_order() {
+        let mut q = EventQueue::new();
+        let mut reference = Vec::new();
+        // enough same-instant + spread events to force several doublings
+        for i in 0..500usize {
+            let t = if i % 3 == 0 { 7.25 } else { (i as f64 * 0.618).fract() * 100.0 };
+            q.push(t, EventKind::ComputeDone { node: i });
+            reference.push((t, i as u64));
+        }
+        reference.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        // drain far enough to trigger the shrink path too
+        for want in &reference {
+            let e = q.pop().unwrap();
+            assert_eq!((e.time, e.seq), *want);
+        }
+        assert!(q.is_empty());
     }
 }

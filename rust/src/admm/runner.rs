@@ -224,7 +224,9 @@ pub fn run_single(
             while sim.iter() < cfg.iters {
                 sim.step()?;
                 if opts.checkpoint_every > 0 && sim.iter() % opts.checkpoint_every == 0 {
-                    snapshot::write_file(&ck_path, &sim.snapshot_meta(), &sim.snapshot_body())?;
+                    snapshot::write_file_streamed(&ck_path, &sim.snapshot_meta(), |w| {
+                        sim.write_snapshot_body(w)
+                    })?;
                 }
             }
             Ok(sim.recorder().clone())
@@ -242,7 +244,9 @@ pub fn run_single(
                 if opts.checkpoint_every > 0
                     && eng.stats().rounds % opts.checkpoint_every == 0
                 {
-                    snapshot::write_file(&ck_path, &eng.snapshot_meta(), &eng.snapshot_body())?;
+                    snapshot::write_file_streamed(&ck_path, &eng.snapshot_meta(), |w| {
+                        eng.write_snapshot_body(w)
+                    })?;
                 }
             }
             if let Some(path) = &opts.record_timeline {

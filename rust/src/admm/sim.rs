@@ -57,6 +57,20 @@ impl TrialRngs {
     }
 }
 
+/// Deterministic metrics-sample indices: `k` nodes on a fixed stride over
+/// `0..n`, shared by both in-process engines so a seq and an event run of
+/// the same config measure the same nodes. Consumes **no** RNG — sampling
+/// is observation-only and must not perturb any stream. Empty when
+/// sampling is off (`metrics_sample == 0`) or would not shrink the fleet.
+pub(crate) fn eval_sample_indices(cfg: &ExperimentConfig, n: usize) -> Vec<usize> {
+    let k = cfg.metrics_sample;
+    if k > 0 && k < n {
+        (0..k).map(|j| j * n / k).collect()
+    } else {
+        Vec::new()
+    }
+}
+
 pub struct AsyncSim<'a> {
     cfg: &'a ExperimentConfig,
     problem: &'a mut dyn Problem,
@@ -97,6 +111,9 @@ pub struct AsyncSim<'a> {
     rng_quant: Pcg64,
     rng_batches: Pcg64,
     recorder: RunRecorder,
+    /// Metrics-sample node set ([`eval_sample_indices`]); empty = evaluate
+    /// the full fleet.
+    eval_sample: Vec<usize>,
     clock: Stopwatch,
     iter: usize,
 }
@@ -187,6 +204,7 @@ impl<'a> AsyncSim<'a> {
             rng_quant: rngs.quant,
             rng_batches: rngs.batches,
             recorder: RunRecorder::new(),
+            eval_sample: eval_sample_indices(cfg, n),
             clock: Stopwatch::new(),
             iter: 0,
             cfg,
@@ -326,7 +344,11 @@ impl<'a> AsyncSim<'a> {
         self.iter += 1;
 
         if self.iter % self.cfg.eval_every == 0 {
-            let metrics = self.problem.evaluate(&self.x, &self.u, &self.z)?;
+            let metrics = if self.eval_sample.is_empty() {
+                self.problem.evaluate(&self.x, &self.u, &self.z)?
+            } else {
+                self.problem.evaluate_sample(&self.eval_sample, &self.x, &self.u, &self.z)?
+            };
             self.recorder.push(IterRecord {
                 iter: self.iter,
                 comm_bits: self.accounting.normalized_bits(self.m),
@@ -428,26 +450,34 @@ impl<'a> AsyncSim<'a> {
     /// Call between [`Self::step`] calls.
     pub fn snapshot_body(&self) -> Vec<u8> {
         let mut w = Writer::new();
-        self.x.pack(&mut w);
-        self.u.pack(&mut w);
-        self.z.pack(&mut w);
-        self.xhat.pack(&mut w);
-        self.uhat.pack(&mut w);
-        self.zhat.pack(&mut w);
-        self.acc.pack(&mut w);
-        self.tier.pack(&mut w);
-        self.rng_topology.pack(&mut w);
-        self.active.pack(&mut w);
-        self.scheduler.pack(&mut w);
-        self.oracle.pack(&mut w);
-        self.accounting.pack(&mut w);
-        self.rng_oracle.pack(&mut w);
-        self.rng_quant.pack(&mut w);
-        self.rng_batches.pack(&mut w);
-        self.recorder.pack(&mut w);
-        self.trigger.pack(&mut w);
-        w.put_usize(self.iter);
+        self.write_snapshot_body(&mut w);
         w.into_inner()
+    }
+
+    /// [`Self::snapshot_body`] into a caller-supplied writer — the
+    /// checkpoint path hands in a spilling writer
+    /// ([`crate::snapshot::write_file_streamed`]) so the packed state
+    /// streams to disk instead of materializing a second copy in memory.
+    pub fn write_snapshot_body(&self, w: &mut Writer) {
+        self.x.pack(w);
+        self.u.pack(w);
+        self.z.pack(w);
+        self.xhat.pack(w);
+        self.uhat.pack(w);
+        self.zhat.pack(w);
+        self.acc.pack(w);
+        self.tier.pack(w);
+        self.rng_topology.pack(w);
+        self.active.pack(w);
+        self.scheduler.pack(w);
+        self.oracle.pack(w);
+        self.accounting.pack(w);
+        self.rng_oracle.pack(w);
+        self.rng_quant.pack(w);
+        self.rng_batches.pack(w);
+        self.recorder.pack(w);
+        self.trigger.pack(w);
+        w.put_usize(self.iter);
     }
 
     /// Rebuild a simulator from [`Self::snapshot_body`] — bit-identical
@@ -559,6 +589,7 @@ impl<'a> AsyncSim<'a> {
             rng_quant,
             rng_batches,
             recorder,
+            eval_sample: eval_sample_indices(cfg, n),
             clock: Stopwatch::new(),
             iter,
             cfg,

@@ -60,12 +60,16 @@ impl TriggerState {
             (true, CompressorKind::Qsgd { bits }) => bits,
             _ => 0, // validate() rejects adapt without QSGD
         };
+        // The per-node schedule vectors exist only when the adaptive
+        // schedule can read them: a fleet with the trigger disabled (the
+        // common case at n = 10^6) carries zero per-node trigger state.
+        let per_node = if cfg.trigger.adapt { n } else { 0 };
         Self {
             delta: cfg.trigger.delta,
             adapt: cfg.trigger.adapt,
             target_bits,
-            stage: vec![0; n],
-            base_scale: vec![0.0; n],
+            stage: vec![0; per_node],
+            base_scale: vec![0.0; per_node],
             skipped: 0,
         }
     }
@@ -142,10 +146,11 @@ impl TriggerState {
     /// Resume-time consistency check against the config the snapshot
     /// claims to continue.
     pub fn matches(&self, cfg: &ExperimentConfig, n: usize) -> bool {
+        let per_node = if self.adapt { n } else { 0 };
         self.delta == cfg.trigger.delta
             && self.adapt == cfg.trigger.adapt
-            && self.stage.len() == n
-            && self.base_scale.len() == n
+            && self.stage.len() == per_node
+            && self.base_scale.len() == per_node
     }
 }
 

@@ -1,0 +1,582 @@
+//! Quantized-at-rest estimate banks for the million-node event engine.
+//!
+//! A [`QuantBank`] is the scale replacement for a `Vec<EstimateTracker>`:
+//! semantically a bank of n per-node estimate vectors ŷᵢ = init + Σ C(Δ),
+//! but stored as the *committed wire frames* instead of dense f64 rows.
+//! The wire codec is lossless over the lossy code (`decode(wire)` is
+//! exactly what both endpoints committed — the [`crate::compress`] module
+//! contract), so replaying a node's frames over its base with the same
+//! `+=` visitor order reproduces the dense tracker value **bit for bit**
+//! (`tests/prop.rs` pins this across all compressor kinds).
+//!
+//! Memory model:
+//! * a node that never transmitted costs O(1) — its row *is* the shared
+//!   `init_row`, no per-node allocation;
+//! * a lightly-active node costs its committed frame bytes (e.g. ~q/64 of
+//!   dense for qsgdQ);
+//! * once a node's resident frames would exceed one dense row (m·8 bytes)
+//!   the slot compacts: the materialized row becomes the new base and the
+//!   frames drop, bounding any slot at ≤ 2 dense rows.
+//!
+//! Dense rows are materialized only while a node is *active*, through a
+//! small LRU pool of scratch rows ([`ScratchPool`]); the pool is pure
+//! cache — eviction never loses state — and is therefore not serialized.
+//! Compaction depends only on the committed frame sequence, never on pool
+//! state, so snapshots of a resumed run stay byte-identical.
+
+use super::wire;
+use super::Compressed;
+use crate::snapshot::codec::{Pack, Reader, Writer};
+
+/// Dense scratch rows for the currently-active nodes, recycled LRU. The
+/// capacity bounds resident dense rows regardless of fleet size; a linear
+/// stamp scan is fine at this size (≤ 64 entries).
+#[derive(Debug)]
+struct ScratchPool {
+    cap: usize,
+    stamp: u64,
+    entries: Vec<PoolEntry>,
+}
+
+#[derive(Debug)]
+struct PoolEntry {
+    node: usize,
+    stamp: u64,
+    row: Box<[f64]>,
+}
+
+impl ScratchPool {
+    fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), stamp: 0, entries: Vec::new() }
+    }
+
+    fn find(&mut self, node: usize) -> Option<usize> {
+        let idx = self.entries.iter().position(|e| e.node == node)?;
+        self.stamp += 1;
+        self.entries[idx].stamp = self.stamp;
+        Some(idx)
+    }
+
+    /// Claim a slot for `node` (not currently pooled): reuse the LRU row
+    /// once at capacity, else allocate. The returned row holds garbage —
+    /// the caller fills it.
+    fn claim(&mut self, node: usize, m: usize) -> usize {
+        self.stamp += 1;
+        if self.entries.len() < self.cap {
+            self.entries.push(PoolEntry {
+                node,
+                stamp: self.stamp,
+                row: vec![0.0; m].into_boxed_slice(),
+            });
+            return self.entries.len() - 1;
+        }
+        let idx = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, e)| e.stamp)
+            .map(|(i, _)| i)
+            .expect("pool capacity is >= 1");
+        self.entries[idx].node = node;
+        self.entries[idx].stamp = self.stamp;
+        idx
+    }
+
+    fn drop_node(&mut self, node: usize) {
+        if let Some(idx) = self.entries.iter().position(|e| e.node == node) {
+            self.entries.swap_remove(idx);
+        }
+    }
+}
+
+/// One node's at-rest state. `base == None` means the shared init row;
+/// `last_true` exists only in the EF-off ablation (`None` there means
+/// "never transmitted", i.e. the init row).
+#[derive(Debug, Default)]
+struct NodeSlot {
+    base: Option<Box<[f64]>>,
+    frames: Vec<Box<[u8]>>,
+    frames_bytes: usize,
+    last_true: Option<Box<[f64]>>,
+}
+
+impl NodeSlot {
+    fn is_trivial(&self) -> bool {
+        self.base.is_none() && self.frames.is_empty() && self.last_true.is_none()
+    }
+}
+
+/// A bank of n per-node estimate vectors stored quantized-at-rest. Drop-in
+/// for the engine's `Vec<EstimateTracker>` banks: `commit_frame`,
+/// `peek_delta_into`, `note_sent` and `row` (≡ `estimate`) carry the same
+/// semantics, assertions and bit-level arithmetic as
+/// [`crate::compress::error_feedback::EstimateTracker`].
+#[derive(Debug)]
+pub struct QuantBank {
+    n: usize,
+    m: usize,
+    feedback: bool,
+    /// The shared initial estimate (x⁰ for x̂, zeros for û): the implicit
+    /// base/last_true of every slot that has no state of its own.
+    init_row: Vec<f64>,
+    slots: Vec<NodeSlot>,
+    /// Pure cache of materialized rows — never serialized.
+    pool: ScratchPool,
+}
+
+/// Dense scratch rows kept resident at once (the "active set" bound).
+const POOL_CAP: usize = 64;
+
+impl QuantBank {
+    pub fn new(n: usize, init_row: Vec<f64>, feedback: bool) -> Self {
+        Self {
+            n,
+            m: init_row.len(),
+            feedback,
+            init_row,
+            slots: (0..n).map(|_| NodeSlot::default()).collect(),
+            pool: ScratchPool::new(POOL_CAP.min(n.max(1))),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.m
+    }
+
+    pub fn feedback_enabled(&self) -> bool {
+        self.feedback
+    }
+
+    /// Resident at-rest bytes across all slots (frames + dense bases +
+    /// EF-off last-sent rows; excludes the bounded scratch pool) — the
+    /// quantity the scale bench reports.
+    pub fn resident_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| {
+                s.frames_bytes
+                    + s.base.as_ref().map_or(0, |b| b.len() * 8)
+                    + s.last_true.as_ref().map_or(0, |b| b.len() * 8)
+            })
+            .sum()
+    }
+
+    /// Materialize node `i`'s dense row (base + frame replay) in the
+    /// scratch pool and return it. Bitwise equal to the dense tracker's
+    /// `estimate()` — the replay applies the identical `row[j] += v`
+    /// sequence the tracker's `commit_frame` calls applied.
+    pub fn row(&mut self, i: usize) -> &[f64] {
+        let idx = self.ensure_row(i);
+        &self.pool.entries[idx].row
+    }
+
+    fn ensure_row(&mut self, i: usize) -> usize {
+        if let Some(idx) = self.pool.find(i) {
+            return idx;
+        }
+        let idx = self.pool.claim(i, self.m);
+        let slot = &self.slots[i];
+        let row = &mut self.pool.entries[idx].row;
+        match &slot.base {
+            Some(b) => row.copy_from_slice(b),
+            None => row.copy_from_slice(&self.init_row),
+        }
+        for frame in &slot.frames {
+            replay_frame(frame, self.m, row).expect("committed frame replays");
+        }
+        idx
+    }
+
+    /// Apply a committed wire frame to node `i`: ŷᵢ += C(Δ). Same
+    /// dimension/finiteness contract as `EstimateTracker::commit_frame`.
+    pub fn commit_frame(&mut self, i: usize, c: &Compressed) -> anyhow::Result<()> {
+        let fm = c.frame_dim()?;
+        assert_eq!(
+            fm,
+            self.m,
+            "commit length mismatch: message has {} coords, tracker {}",
+            fm,
+            self.m
+        );
+        let mut finite = true;
+        match self.pool.find(i) {
+            // row resident: fold the entries in directly (one pass)
+            Some(idx) => {
+                let row = &mut self.pool.entries[idx].row;
+                c.for_each_entry(|j, v| {
+                    finite &= v.is_finite();
+                    row[j] += v;
+                })?;
+            }
+            // at rest: the frame is appended below; scan for finiteness only
+            None => {
+                c.for_each_entry(|_, v| finite &= v.is_finite())?;
+            }
+        }
+        assert!(
+            finite,
+            "non-finite dequantized delta would poison the estimate bank permanently"
+        );
+        let slot = &mut self.slots[i];
+        slot.frames_bytes += c.wire.len();
+        slot.frames.push(c.wire.clone().into_boxed_slice());
+        if slot.frames_bytes > self.m * 8 {
+            self.compact(i);
+        }
+        Ok(())
+    }
+
+    /// Fold the frame sequence into a dense base. Depends only on the
+    /// committed frames (deterministic across pool states), and the result
+    /// is bitwise the materialized row, so `row()` before and after
+    /// compaction agree.
+    fn compact(&mut self, i: usize) {
+        let idx = self.ensure_row(i);
+        let dense: Box<[f64]> = self.pool.entries[idx].row.to_vec().into_boxed_slice();
+        let slot = &mut self.slots[i];
+        slot.base = Some(dense);
+        slot.frames.clear();
+        slot.frames_bytes = 0;
+    }
+
+    /// The Δ a sender should compress, without committing to the
+    /// transmission — `EstimateTracker::peek_delta_into` semantics: EF-on
+    /// base is the estimate row, EF-off base is the last *sent* iterate.
+    pub fn peek_delta_into(&mut self, i: usize, current: &[f64], out: &mut Vec<f64>) {
+        assert_eq!(
+            current.len(),
+            self.m,
+            "delta base length mismatch: iterate has {} coords, tracker {}",
+            current.len(),
+            self.m
+        );
+        out.clear();
+        if self.feedback {
+            let base = self.row(i);
+            out.extend(current.iter().zip(base.iter()).map(|(c, b)| c - b));
+        } else {
+            let base: &[f64] = match &self.slots[i].last_true {
+                Some(lt) => lt,
+                None => &self.init_row,
+            };
+            out.extend(current.iter().zip(base.iter()).map(|(c, b)| c - b));
+        }
+    }
+
+    /// Record a realized transmission (EF-off delta base; no-op with EF on,
+    /// matching the tracker).
+    pub fn note_sent(&mut self, i: usize, current: &[f64]) {
+        if self.feedback {
+            return;
+        }
+        assert_eq!(current.len(), self.m, "note_sent length mismatch");
+        match &mut self.slots[i].last_true {
+            Some(lt) => lt.copy_from_slice(current),
+            lt @ None => *lt = Some(current.to_vec().into_boxed_slice()),
+        }
+    }
+
+    /// Owned copy of node `i`'s dense estimate (accessor convenience).
+    pub fn estimate(&mut self, i: usize) -> Vec<f64> {
+        self.row(i).to_vec()
+    }
+}
+
+/// ŷ += decode(frame), streaming — the same entry visitor (hence the same
+/// f64 addition sequence) as `EstimateTracker::commit_frame`.
+fn replay_frame(frame: &[u8], m: usize, row: &mut [f64]) -> anyhow::Result<()> {
+    for e in wire::entries(frame, m)? {
+        let (j, v) = e?;
+        row[j] += v;
+    }
+    Ok(())
+}
+
+/// Serialized form: feedback flag, init row, then per-slot base / frames /
+/// last_true. The scratch pool is cache and is rebuilt empty. Packing is
+/// canonical in the at-rest state, and the at-rest state is a
+/// deterministic function of the commit history, so pack∘unpack∘pack is
+/// byte-stable and resumed-run snapshots stay byte-identical.
+impl Pack for QuantBank {
+    fn pack(&self, w: &mut Writer) {
+        w.put_bool(self.feedback);
+        w.put_usize(self.n);
+        self.init_row.pack(w);
+        for s in &self.slots {
+            pack_opt_row(w, &s.base);
+            w.put_usize(s.frames.len());
+            for f in &s.frames {
+                w.put_bytes(f);
+            }
+            pack_opt_row(w, &s.last_true);
+        }
+    }
+
+    fn unpack(r: &mut Reader<'_>) -> anyhow::Result<Self> {
+        let feedback = r.get_bool()?;
+        let n = r.get_usize()?;
+        let init_row = Vec::<f64>::unpack(r)?;
+        let m = init_row.len();
+        let mut slots = Vec::with_capacity(n);
+        for i in 0..n {
+            let base = unpack_opt_row(r)?;
+            if let Some(b) = &base {
+                anyhow::ensure!(
+                    b.len() == m,
+                    "snapshot bank: node {i} base has {} coords, bank dim {m}",
+                    b.len()
+                );
+            }
+            let n_frames = r.get_usize()?;
+            let mut frames = Vec::with_capacity(n_frames.min(1024));
+            let mut frames_bytes = 0usize;
+            for _ in 0..n_frames {
+                let f = r.get_bytes()?;
+                anyhow::ensure!(
+                    wire::frame_dim(&f)? == m,
+                    "snapshot bank: node {i} holds a frame of the wrong dimension"
+                );
+                frames_bytes += f.len();
+                frames.push(f.into_boxed_slice());
+            }
+            let last_true = unpack_opt_row(r)?;
+            if let Some(lt) = &last_true {
+                anyhow::ensure!(
+                    !feedback,
+                    "snapshot bank: last_true present with error feedback on"
+                );
+                anyhow::ensure!(
+                    lt.len() == m,
+                    "snapshot bank: node {i} last_true has {} coords, bank dim {m}",
+                    lt.len()
+                );
+            }
+            slots.push(NodeSlot { base, frames, frames_bytes, last_true });
+        }
+        Ok(Self {
+            n,
+            m,
+            feedback,
+            init_row,
+            slots,
+            pool: ScratchPool::new(POOL_CAP.min(n.max(1))),
+        })
+    }
+}
+
+fn pack_opt_row(w: &mut Writer, row: &Option<Box<[f64]>>) {
+    match row {
+        None => w.put_bool(false),
+        Some(b) => {
+            w.put_bool(true);
+            w.put_usize(b.len());
+            for &v in b.iter() {
+                w.put_f64(v);
+            }
+        }
+    }
+}
+
+fn unpack_opt_row(r: &mut Reader<'_>) -> anyhow::Result<Option<Box<[f64]>>> {
+    if !r.get_bool()? {
+        return Ok(None);
+    }
+    let len = r.get_len()?;
+    let mut v = Vec::with_capacity(len);
+    for _ in 0..len {
+        v.push(r.get_f64()?);
+    }
+    Ok(Some(v.into_boxed_slice()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::error_feedback::EstimateTracker;
+    use crate::compress::{Compressor, CompressorKind};
+    use crate::util::rng::Pcg64;
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// The core contract: an identical commit/peek/note_sent history drives
+    /// the quantized-at-rest bank and the dense trackers to bitwise-equal
+    /// estimates and deltas — across eviction, replay and compaction.
+    #[test]
+    fn matches_dense_trackers_bitwise() {
+        for feedback in [true, false] {
+            let m = 48;
+            let n = 5;
+            let mut rng = Pcg64::seed_from_u64(42);
+            let init = rng.normal_vec(m, 0.0, 1.0);
+            let mut bank = QuantBank::new(n, init.clone(), feedback);
+            // tiny pool forces eviction + replay constantly
+            bank.pool = ScratchPool::new(2);
+            let mut dense: Vec<EstimateTracker> =
+                (0..n).map(|_| EstimateTracker::new(init.clone(), feedback)).collect();
+            let comp = CompressorKind::Qsgd { bits: 3 }.build();
+            let mut iterates: Vec<Vec<f64>> = (0..n).map(|_| init.clone()).collect();
+            for round in 0..40 {
+                let i = round % n;
+                for v in &mut iterates[i] {
+                    *v += 0.3 * rng.standard_normal();
+                }
+                let (mut da, mut db) = (Vec::new(), Vec::new());
+                bank.peek_delta_into(i, &iterates[i], &mut da);
+                dense[i].peek_delta_into(&iterates[i], &mut db);
+                assert_eq!(bits(&da), bits(&db), "round {round} delta");
+                if round % 7 == 3 {
+                    continue; // skipped dispatch: no note_sent, no commit
+                }
+                bank.note_sent(i, &iterates[i]);
+                dense[i].note_sent(&iterates[i]);
+                let c = comp.compress(&da, &mut rng);
+                bank.commit_frame(i, &c).unwrap();
+                dense[i].commit_frame(&c).unwrap();
+            }
+            for i in 0..n {
+                assert_eq!(
+                    bits(bank.row(i)),
+                    bits(dense[i].estimate()),
+                    "node {i} feedback={feedback}"
+                );
+            }
+        }
+    }
+
+    /// Same bitwise round-trip across all 8 compressor kinds the repo
+    /// exercises (the satellite-test matrix; the randomized-interleaving
+    /// version lives in tests/prop.rs).
+    #[test]
+    fn round_trips_bitwise_for_all_compressor_kinds() {
+        let kinds = [
+            CompressorKind::Identity,
+            CompressorKind::Identity32,
+            CompressorKind::Qsgd { bits: 2 },
+            CompressorKind::Qsgd { bits: 3 },
+            CompressorKind::Qsgd { bits: 11 },
+            CompressorKind::Sign,
+            CompressorKind::TopK { frac_permille: 100 },
+            CompressorKind::RandK { frac_permille: 100 },
+        ];
+        for kind in kinds {
+            let m = 64;
+            let comp = kind.build();
+            let mut rng = Pcg64::seed_from_u64(7);
+            let init = vec![0.0; m];
+            let mut bank = QuantBank::new(1, init.clone(), true);
+            let mut tracker = EstimateTracker::new(init, true);
+            let mut y = vec![0.0; m];
+            for _ in 0..30 {
+                for v in &mut y {
+                    *v += 0.2 * rng.standard_normal();
+                }
+                let mut d = Vec::new();
+                bank.peek_delta_into(0, &y, &mut d);
+                let c = comp.compress(&d, &mut rng);
+                bank.commit_frame(0, &c).unwrap();
+                // drive the tracker with ITS delta base (must agree)
+                let mut dt = Vec::new();
+                tracker.peek_delta_into(&y, &mut dt);
+                assert_eq!(bits(&d), bits(&dt), "kind={}", kind.label());
+                tracker.commit_frame(&c).unwrap();
+            }
+            assert_eq!(bits(bank.row(0)), bits(tracker.estimate()), "kind={}", kind.label());
+        }
+    }
+
+    /// Idle nodes hold no per-node allocation; committed frames are bounded
+    /// at ≤ one dense row per slot before compaction folds them away.
+    #[test]
+    fn memory_is_o_active() {
+        let m = 32;
+        let n = 10_000;
+        let mut rng = Pcg64::seed_from_u64(3);
+        let mut bank = QuantBank::new(n, vec![0.0; m], true);
+        assert_eq!(bank.resident_bytes(), 0, "idle fleet costs nothing at rest");
+        let comp = CompressorKind::Qsgd { bits: 3 }.build();
+        // hammer a handful of nodes; the rest stay trivial
+        for round in 0..200 {
+            let i = round % 7;
+            let d = rng.normal_vec(m, 0.0, 1.0);
+            let c = comp.compress(&d, &mut rng);
+            bank.commit_frame(i, &c).unwrap();
+        }
+        assert!(bank.slots.iter().skip(7).all(NodeSlot::is_trivial));
+        // each active slot: ≤ dense base + one dense row of frames
+        for s in bank.slots.iter().take(7) {
+            assert!(s.frames_bytes <= m * 8, "compaction bounds resident frames");
+        }
+        assert!(bank.resident_bytes() <= 7 * 2 * m * 8 + 7 * 64);
+    }
+
+    #[test]
+    fn pack_round_trip_is_byte_stable() {
+        let m = 16;
+        let mut rng = Pcg64::seed_from_u64(9);
+        let mut bank = QuantBank::new(4, rng.normal_vec(m, 0.0, 1.0), false);
+        let comp = CompressorKind::Qsgd { bits: 4 }.build();
+        for round in 0..10 {
+            let i = round % 4;
+            let y = rng.normal_vec(m, 0.0, 1.0);
+            let mut d = Vec::new();
+            bank.peek_delta_into(i, &y, &mut d);
+            bank.note_sent(i, &y);
+            let c = comp.compress(&d, &mut rng);
+            bank.commit_frame(i, &c).unwrap();
+        }
+        let rows: Vec<Vec<f64>> = (0..4).map(|i| bank.row(i).to_vec()).collect();
+        let mut w = Writer::new();
+        bank.pack(&mut w);
+        let body = w.into_inner();
+        let mut r = Reader::new(&body);
+        let mut back = QuantBank::unpack(&mut r).unwrap();
+        r.finish().unwrap();
+        for i in 0..4 {
+            assert_eq!(bits(&rows[i]), bits(back.row(i)), "node {i}");
+        }
+        let mut w2 = Writer::new();
+        back.pack(&mut w2);
+        assert_eq!(body, w2.into_inner(), "pack∘unpack∘pack byte-stable");
+    }
+
+    #[test]
+    fn unpack_rejects_corrupt_slots() {
+        let bank = QuantBank::new(2, vec![0.0; 8], true);
+        let mut w = Writer::new();
+        bank.pack(&mut w);
+        let mut bytes = w.into_inner();
+        // truncation is an error, never a panic
+        bytes.truncate(bytes.len() - 1);
+        let mut r = Reader::new(&bytes);
+        assert!(
+            QuantBank::unpack(&mut r).is_err() || r.finish().is_err(),
+            "truncated bank body must fail to decode"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "poison the estimate bank")]
+    fn non_finite_frame_fails_loudly() {
+        let mut bank = QuantBank::new(1, vec![0.0; 3], true);
+        let c = Compressed { wire: wire::encode_dense64(&[1.0, f64::NAN, 0.0]) };
+        let _ = bank.commit_frame(0, &c);
+    }
+
+    #[test]
+    #[should_panic(expected = "commit length mismatch")]
+    fn wrong_dimension_frame_fails_loudly() {
+        let mut bank = QuantBank::new(1, vec![0.0; 3], true);
+        let c = Compressed { wire: wire::encode_dense64(&[1.0, 2.0]) };
+        let _ = bank.commit_frame(0, &c);
+    }
+}

@@ -17,6 +17,7 @@
 //! tests). Every compressor reports its exact wire size in bits; the
 //! paper's communication metric (eq. 20) is derived solely from these.
 
+pub mod bank;
 pub mod error_feedback;
 pub mod identity;
 pub mod packing;

@@ -197,6 +197,14 @@ pub struct ExperimentConfig {
     /// Event-triggered transmission + adaptive level schedule
     /// ([`TriggerConfig`]); the default is the bit-exact legacy path.
     pub trigger: TriggerConfig,
+    /// `--metrics-sample k`: evaluate the loss on a deterministic k-node
+    /// stride instead of the full fleet (0 = everyone). At n = 10^6 a full
+    /// evaluation touches every node's data each eval round and dominates
+    /// the run; the sampled Lagrangian is scaled back to fleet magnitude
+    /// (n/k) so curves stay comparable. Observation-only: the trajectory,
+    /// wire bits and every RNG stream are untouched (it is excluded from
+    /// the resume digest for the same reason).
+    pub metrics_sample: usize,
 }
 
 impl ExperimentConfig {
@@ -242,6 +250,11 @@ impl ExperimentConfig {
                 self.compressor.label()
             );
         }
+        anyhow::ensure!(
+            self.metrics_sample <= n,
+            "metrics_sample must be <= n = {n} (got {}); 0 evaluates the full fleet",
+            self.metrics_sample
+        );
         Ok(())
     }
 
@@ -330,6 +343,7 @@ impl ExperimentConfig {
             ("p_tier", Json::Num(self.p_tier as f64)),
             ("trigger_delta", Json::Num(self.trigger.delta)),
             ("adapt_levels", Json::Bool(self.trigger.adapt)),
+            ("metrics_sample", Json::Num(self.metrics_sample as f64)),
         ])
     }
 }
@@ -384,6 +398,12 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = base();
         c.topology = crate::topology::TopologyKind::Tree { fanout: 4 };
+        c.validate().unwrap();
+        // metrics sample cannot exceed the fleet; 0 and n are both fine
+        let mut c = base();
+        c.metrics_sample = c.problem.n_nodes() + 1;
+        assert!(c.validate().is_err());
+        c.metrics_sample = c.problem.n_nodes();
         c.validate().unwrap();
     }
 

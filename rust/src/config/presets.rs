@@ -34,6 +34,7 @@ pub fn fig3(tau: usize) -> ExperimentConfig {
         topology: TopologyKind::Star,
         p_tier: 1,
         trigger: TriggerConfig::default(),
+        metrics_sample: 0,
     }
 }
 
@@ -61,6 +62,7 @@ pub fn fig4() -> ExperimentConfig {
         topology: TopologyKind::Star,
         p_tier: 1,
         trigger: TriggerConfig::default(),
+        metrics_sample: 0,
     }
 }
 
@@ -94,6 +96,7 @@ pub fn ci_lasso() -> ExperimentConfig {
         topology: TopologyKind::Star,
         p_tier: 1,
         trigger: TriggerConfig::default(),
+        metrics_sample: 0,
     }
 }
 
@@ -123,6 +126,7 @@ pub fn e2e_mlp() -> ExperimentConfig {
         topology: TopologyKind::Star,
         p_tier: 1,
         trigger: TriggerConfig::default(),
+        metrics_sample: 0,
     }
 }
 

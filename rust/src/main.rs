@@ -76,6 +76,9 @@ USAGE: qadmm <cmd> [--options]
              a skipped dispatch still counts toward P/tau but ships 0 bits;
              --adapt-levels starts QSGD coarse and refines per node as its
              realized residual shrinks; requires a qsgdQ compressor)
+            [--metrics-sample K]  (evaluate the loss on a deterministic
+             K-node stride instead of the full fleet, scaled back to fleet
+             magnitude — observation-only, for n >> 10^4 runs; 0 = all)
             [--checkpoint-every K] [--checkpoint FILE] [--resume-from FILE]
             (periodic run snapshots; a resumed run is bit-identical to the
              uninterrupted one — seq/event engines, single trial)
@@ -124,6 +127,7 @@ fn apply_overrides(
     cfg.p_min = args.usize("p", cfg.p_min);
     cfg.seed = args.u64("seed", cfg.seed);
     cfg.eval_every = args.usize("eval-every", cfg.eval_every);
+    cfg.metrics_sample = args.usize("metrics-sample", cfg.metrics_sample);
     cfg.consensus_refresh_every =
         args.usize("refresh-every", cfg.consensus_refresh_every);
     let engine = args.choice(

@@ -373,6 +373,22 @@ impl ConsensusAccumulator {
         self.refresh_every > 0 && round % self.refresh_every == 0
     }
 
+    /// Streaming refresh, step 1: reset the sum and compensation. Pair
+    /// with [`Self::refresh_fold_row`] per node. This is the serial row
+    /// order of [`Self::refresh`] — which sharding is property-pinned
+    /// bitwise-equal to — so a streaming caller that can only materialize
+    /// one bank row at a time (quantized-at-rest banks at n = 10^6)
+    /// produces the identical sum.
+    pub fn refresh_begin(&mut self) {
+        self.state.reset();
+    }
+
+    /// Streaming refresh, step 2: fold one node's (x̂ᵢ, ûᵢ) pair, in node
+    /// order, after [`Self::refresh_begin`].
+    pub fn refresh_fold_row(&mut self, x: &[f64], u: &[f64]) {
+        self.state.fold2(x, u);
+    }
+
     /// Full recompute from the estimate banks, in iteration order, resetting
     /// the compensation: the O(n·m) drift wash-out. `rows` yields each
     /// node's (x̂ᵢ, ûᵢ) estimate slices. Large-m refreshes shard the

@@ -428,6 +428,46 @@ impl Problem for LassoProblem {
             loss: lag,
         })
     }
+
+    /// Sampled Lagrangian for `--metrics-sample`: the per-node terms of
+    /// eq. 3/4 over the sample only, rescaled by n/k to fleet magnitude,
+    /// plus the (global, O(m)) θ‖z‖₁ term. No reference optimum is
+    /// computed — eq. 19's F* needs a fleet-scale exact solve, which is
+    /// precisely what sampling exists to avoid — so `accuracy` is NaN
+    /// (serialized as null in the metrics file).
+    fn evaluate_sample(
+        &mut self,
+        sample: &[usize],
+        x: &Arena,
+        u: &Arena,
+        z: &[f64],
+    ) -> anyhow::Result<EvalMetrics> {
+        if sample.is_empty() {
+            return self.evaluate(x, u, z);
+        }
+        let LassoConfig { m, n, rho, theta, .. } = self.cfg;
+        let mut total = 0.0;
+        for &i in sample {
+            anyhow::ensure!(i < n, "metrics sample index {i} out of range (n = {n})");
+            let (xi, ui) = (x.row(i), u.row(i));
+            let ax = self.a[i].matvec(xi);
+            total += dot(&ax, &ax) - dot(&self.atb2[i], xi) + self.btb[i];
+            let mut pen = 0.0;
+            let mut unorm = 0.0;
+            for j in 0..m {
+                let r = xi[j] - z[j] + ui[j];
+                pen += r * r;
+                unorm += ui[j] * ui[j];
+            }
+            total += 0.5 * rho * (pen - unorm);
+        }
+        let scaled = total * (n as f64 / sample.len() as f64);
+        Ok(EvalMetrics {
+            accuracy: f64::NAN,
+            test_acc: f64::NAN,
+            loss: scaled + theta * prox::l1_norm(z),
+        })
+    }
 }
 
 impl Drop for LassoProblem {
@@ -598,6 +638,28 @@ mod tests {
             p.evaluate(&Arena::from_rows(&x), &Arena::from_rows(&u), &z).unwrap();
         assert!(metrics.accuracy < 1e-6, "accuracy={}", metrics.accuracy);
         assert!((metrics.loss - fstar).abs() / fstar < 1e-6);
+    }
+
+    /// The full-fleet "sample" walks the same per-node terms in the same
+    /// order as the exact Lagrangian with scale n/k = 1 — bitwise equal.
+    /// Partial samples rescale to fleet magnitude and report NaN accuracy
+    /// (no F* is computed). Out-of-range indices are refused.
+    #[test]
+    fn sampled_evaluation_scales_to_fleet_magnitude() {
+        let (mut p, mut rng) = small();
+        let xr: Vec<Vec<f64>> = (0..4).map(|_| rng.normal_vec(24, 0.0, 1.0)).collect();
+        let ur: Vec<Vec<f64>> = (0..4).map(|_| rng.normal_vec(24, 0.0, 0.1)).collect();
+        let (x, u) = (Arena::from_rows(&xr), Arena::from_rows(&ur));
+        let z = rng.normal_vec(24, 0.0, 1.0);
+        let full = p.evaluate_sample(&[0, 1, 2, 3], &x, &u, &z).unwrap();
+        assert_eq!(full.loss.to_bits(), p.lagrangian(&x, &u, &z).to_bits());
+        assert!(full.accuracy.is_nan() && full.test_acc.is_nan());
+        let half = p.evaluate_sample(&[0, 2], &x, &u, &z).unwrap();
+        assert!(half.loss.is_finite());
+        // an empty sample falls back to the exact evaluation
+        let exact = p.evaluate_sample(&[], &x, &u, &z).unwrap();
+        assert!(exact.accuracy.is_finite());
+        assert!(p.evaluate_sample(&[7], &x, &u, &z).is_err());
     }
 
     #[test]

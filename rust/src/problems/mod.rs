@@ -223,6 +223,25 @@ pub trait Problem {
     /// Metrics on the *true* iterates (eq. 19 uses x, z, u, not estimates),
     /// stored as n×m arenas (one row per node).
     fn evaluate(&mut self, x: &Arena, u: &Arena, z: &[f64]) -> anyhow::Result<EvalMetrics>;
+
+    /// [`Self::evaluate`] restricted to a node subset (`--metrics-sample`):
+    /// at n = 10^6 a full evaluation touches every node's data and
+    /// dominates the run, so the engines hand in a small deterministic
+    /// sample instead. Implementations should report the sampled objective
+    /// rescaled to fleet magnitude (·n/k) so the curve stays comparable to
+    /// a full evaluation; quantities that need the whole fleet (eq. 19's
+    /// |L−F*|/F*) are NaN. The default ignores the sample and evaluates
+    /// everything — correct for any problem, just not cheaper.
+    fn evaluate_sample(
+        &mut self,
+        sample: &[usize],
+        x: &Arena,
+        u: &Arena,
+        z: &[f64],
+    ) -> anyhow::Result<EvalMetrics> {
+        let _ = sample;
+        self.evaluate(x, u, z)
+    }
 }
 
 #[cfg(test)]

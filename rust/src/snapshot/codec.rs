@@ -42,11 +42,27 @@ pub const MAGIC: [u8; 8] = *b"QADMMSNP";
 /// `decode(wire) == dequantized` contract makes the dense copy redundant),
 /// shrinking checkpoints of in-flight-heavy runs — v2 snapshots no longer
 /// parse.
-pub const VERSION: u32 = 3;
+///
+/// v4: the event engine's body layout changed with the million-node work —
+/// estimate banks pack as committed wire frames
+/// ([`crate::compress::bank::QuantBank`]) instead of dense rows, the
+/// per-node downlink inboxes collapsed into one shared mirror window, and
+/// in-flight slots became optional (idle nodes pack one tag byte) — v3
+/// snapshots no longer parse.
+pub const VERSION: u32 = 4;
+
+const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
 
 /// FNV-1a 64-bit over a byte slice (checksums + RNG-state digests).
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    fnv1a64_update(FNV_SEED, bytes)
+}
+
+/// Fold more bytes into a running FNV-1a state (seed with [`fnv1a64`] of
+/// the empty slice, i.e. the FNV offset basis). Chaining updates over
+/// chunks is exactly equal to one [`fnv1a64`] over the concatenation —
+/// what lets the spilling [`Writer`] checksum a body it never holds whole.
+pub fn fnv1a64_update(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
@@ -54,10 +70,61 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Spill threshold for [`Writer::with_sink`]: the buffer drains to the
+/// sink whenever it crosses this size, so peak codec memory stays ~1 MiB
+/// no matter how large the packed state is.
+const SPILL_CHUNK: usize = 1 << 20;
+
+/// IO side of a spilling [`Writer`]: where the drained chunks go, plus the
+/// running length/checksum over everything drained so far.
+struct Spill {
+    sink: Box<dyn std::io::Write>,
+    written: u64,
+    hash: u64,
+    err: Option<std::io::Error>,
+}
+
+impl Spill {
+    /// Drain `buf` into the sink, folding it into the running checksum.
+    /// The first IO error is latched and re-raised by
+    /// [`Writer::finish_stream`]; the length/checksum keep tracking the
+    /// *intended* bytes so the failure surfaces exactly once, at the end.
+    fn drain(&mut self, buf: &mut Vec<u8>) {
+        if buf.is_empty() {
+            return;
+        }
+        self.hash = fnv1a64_update(self.hash, buf);
+        self.written += buf.len() as u64;
+        if self.err.is_none() {
+            if let Err(e) = self.sink.write_all(buf) {
+                self.err = Some(e);
+            }
+        }
+        buf.clear();
+    }
+}
+
 /// Append-only little-endian byte sink.
-#[derive(Debug, Default)]
+///
+/// Two modes share every `put_*` method: the default in-memory buffer
+/// ([`Writer::new`], read back with [`Writer::into_inner`]) and a spilling
+/// mode ([`Writer::with_sink`]) that drains to an [`std::io::Write`] every
+/// [`SPILL_CHUNK`] bytes and finishes with [`Writer::finish_stream`] —
+/// used by checkpointing so serializing a multi-GB arena never doubles
+/// resident memory.
+#[derive(Default)]
 pub struct Writer {
     buf: Vec<u8>,
+    spill: Option<Spill>,
+}
+
+impl std::fmt::Debug for Writer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Writer")
+            .field("buffered", &self.buf.len())
+            .field("spilling", &self.spill.is_some())
+            .finish()
+    }
 }
 
 impl Writer {
@@ -65,36 +132,77 @@ impl Writer {
         Self::default()
     }
 
+    /// A spilling writer: bytes drain to `sink` in [`SPILL_CHUNK`] pieces.
+    /// Must be finished with [`Writer::finish_stream`]; the in-memory
+    /// accessors ([`Writer::into_inner`] / [`Writer::as_slice`]) are
+    /// unavailable because the writer never holds the full payload.
+    pub fn with_sink(sink: Box<dyn std::io::Write>) -> Self {
+        Self {
+            buf: Vec::with_capacity(SPILL_CHUNK),
+            spill: Some(Spill { sink, written: 0, hash: FNV_SEED, err: None }),
+        }
+    }
+
     pub fn into_inner(self) -> Vec<u8> {
+        assert!(self.spill.is_none(), "into_inner on a spilling Writer");
         self.buf
     }
 
     pub fn as_slice(&self) -> &[u8] {
+        assert!(self.spill.is_none(), "as_slice on a spilling Writer");
         &self.buf
     }
 
+    /// Total bytes written so far (drained + still buffered).
     pub fn len(&self) -> usize {
-        self.buf.len()
+        self.buf.len() + self.spill.as_ref().map_or(0, |s| s.written as usize)
     }
 
     pub fn is_empty(&self) -> bool {
-        self.buf.is_empty()
+        self.len() == 0
+    }
+
+    /// Drain the remainder and return `(total_len, fnv1a64(body))` —
+    /// exactly what the container framing needs to patch in after the
+    /// body. Any IO error from any earlier drain surfaces here.
+    pub fn finish_stream(mut self) -> anyhow::Result<(u64, u64)> {
+        let mut sp = self.spill.take().expect("finish_stream on a buffered Writer");
+        sp.drain(&mut self.buf);
+        if let Some(e) = sp.err.take() {
+            return Err(anyhow::anyhow!("snapshot stream write failed: {e}"));
+        }
+        sp.sink
+            .flush()
+            .map_err(|e| anyhow::anyhow!("snapshot stream flush failed: {e}"))?;
+        Ok((sp.written, sp.hash))
+    }
+
+    fn maybe_spill(&mut self) {
+        if self.buf.len() >= SPILL_CHUNK {
+            if let Some(sp) = &mut self.spill {
+                sp.drain(&mut self.buf);
+            }
+        }
     }
 
     pub fn put_u8(&mut self, v: u8) {
         self.buf.push(v);
+        self.maybe_spill();
     }
 
     pub fn put_u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
+        self.maybe_spill();
     }
 
     pub fn put_u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
+        self.maybe_spill();
     }
 
     pub fn put_u128(&mut self, v: u128) {
         self.buf.extend_from_slice(&v.to_le_bytes());
+        self.maybe_spill();
     }
 
     /// usize travels as u64 so snapshots are portable across word sizes.
@@ -116,6 +224,7 @@ impl Writer {
     pub fn put_bytes(&mut self, v: &[u8]) {
         self.put_usize(v.len());
         self.buf.extend_from_slice(v);
+        self.maybe_spill();
     }
 
     pub fn put_str(&mut self, v: &str) {
@@ -416,8 +525,9 @@ pub fn decode_container(
     anyhow::ensure!(
         version == VERSION,
         "snapshot container version {version} not supported (expected {VERSION}); \
-         v3 packs in-flight compressed deltas wire-only, so older snapshots \
-         cannot be migrated — re-record the checkpoint with this build"
+         v4 packs estimate banks as wire frames and the downlink window as a \
+         shared mirror table, so older snapshots cannot be migrated — \
+         re-record the checkpoint with this build"
     );
     let header_len = r.get_u32()? as usize;
     let header_bytes = r.take(header_len)?;
@@ -579,5 +689,84 @@ mod tests {
     fn fnv_is_stable() {
         assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
         assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn fnv_update_chains_like_one_pass() {
+        let bytes: Vec<u8> = (0..4096u32).map(|i| (i % 253) as u8).collect();
+        let whole = fnv1a64(&bytes);
+        let mut h = fnv1a64(b"");
+        for chunk in bytes.chunks(97) {
+            h = fnv1a64_update(h, chunk);
+        }
+        assert_eq!(h, whole);
+    }
+
+    /// A byte sink the test can read back after the boxed writer is gone.
+    #[derive(Clone, Default)]
+    struct SharedBuf(std::rc::Rc<std::cell::RefCell<Vec<u8>>>);
+
+    impl std::io::Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.borrow_mut().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// The spilling writer must emit exactly the bytes the buffered writer
+    /// would — same stream, same length, same checksum — including across
+    /// multiple spill chunks (the payload below crosses the 1 MiB
+    /// threshold several times).
+    #[test]
+    fn spilling_writer_matches_buffered_byte_for_byte() {
+        let emit = |w: &mut Writer| {
+            w.put_str("header-ish");
+            for i in 0..400_000u64 {
+                w.put_u64(i.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            }
+            w.put_bytes(&[7u8; 1234]);
+            w.put_bool(true);
+        };
+        let mut buffered = Writer::new();
+        emit(&mut buffered);
+        let reference = buffered.into_inner();
+        assert!(reference.len() > 3 * SPILL_CHUNK, "payload must force spills");
+
+        let sink = SharedBuf::default();
+        let mut spilling = Writer::with_sink(Box::new(sink.clone()));
+        emit(&mut spilling);
+        assert_eq!(spilling.len(), reference.len());
+        let (len, hash) = spilling.finish_stream().unwrap();
+        assert_eq!(len as usize, reference.len());
+        assert_eq!(hash, fnv1a64(&reference));
+        assert_eq!(*sink.0.borrow(), reference);
+    }
+
+    /// An IO failure anywhere in the stream surfaces as `Err` from
+    /// `finish_stream`, never as a silently short body.
+    #[test]
+    fn spilling_writer_reports_sink_errors_at_finish() {
+        struct FailAfter(usize);
+        impl std::io::Write for FailAfter {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                if self.0 < buf.len() {
+                    return Err(std::io::Error::new(std::io::ErrorKind::Other, "disk full"));
+                }
+                self.0 -= buf.len();
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut w = Writer::with_sink(Box::new(FailAfter(SPILL_CHUNK / 2)));
+        for i in 0..400_000u64 {
+            w.put_u64(i);
+        }
+        let err = w.finish_stream().unwrap_err().to_string();
+        assert!(err.contains("stream write failed"), "got: {err}");
     }
 }

@@ -100,11 +100,13 @@ impl SnapshotMeta {
 }
 
 /// The portion of a config that must match for a resume to be sound:
-/// everything except the run *length* knobs (`iters`, `mc_trials`) and the
-/// cosmetic `name` — resuming with more rounds than the original plan is
-/// exactly the long-run use case, but resuming under a different
-/// compressor, topology, τ, latency model or seed would silently produce
-/// a trajectory that belongs to neither run.
+/// everything except the run *length* knobs (`iters`, `mc_trials`), the
+/// cosmetic `name`, and the observation-only `metrics_sample` (it changes
+/// which nodes the loss is *measured* on, never the trajectory itself) —
+/// resuming with more rounds than the original plan is exactly the
+/// long-run use case, but resuming under a different compressor, topology,
+/// τ, latency model or seed would silently produce a trajectory that
+/// belongs to neither run.
 pub fn config_resume_digest(config: &Json) -> String {
     match config {
         Json::Obj(map) => {
@@ -112,6 +114,7 @@ pub fn config_resume_digest(config: &Json) -> String {
             m.remove("iters");
             m.remove("mc_trials");
             m.remove("name");
+            m.remove("metrics_sample");
             Json::Obj(m).to_string_compact()
         }
         other => other.to_string_compact(),
@@ -147,6 +150,49 @@ pub fn write_file(path: &Path, meta: &SnapshotMeta, body: &[u8]) -> anyhow::Resu
         f.write_all(&encode(meta, body))?;
         f.sync_all()?;
     }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// [`write_file`] without ever materializing the body: the engine packs
+/// straight into a spilling [`codec::Writer`] draining to the tmp file, so
+/// checkpointing a multi-GB arena costs ~1 MiB of codec memory instead of
+/// a second copy of the state. The container layout (and therefore the
+/// on-disk bytes) is identical to the buffered path — the unknown-upfront
+/// `body_len` is a placeholder patched in place once the stream finishes.
+pub fn write_file_streamed(
+    path: &Path,
+    meta: &SnapshotMeta,
+    emit: impl FnOnce(&mut codec::Writer),
+) -> anyhow::Result<()> {
+    use std::io::{Seek as _, SeekFrom, Write as _};
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = path.with_extension("qsnap.tmp");
+    let mut f = std::fs::File::create(&tmp)?;
+    let header_text = meta.to_json().to_string_pretty();
+    f.write_all(&codec::MAGIC)?;
+    f.write_all(&codec::VERSION.to_le_bytes())?;
+    f.write_all(&(header_text.len() as u32).to_le_bytes())?;
+    f.write_all(header_text.as_bytes())?;
+    let body_len_at = f.stream_position()?;
+    f.write_all(&0u64.to_le_bytes())?; // patched below once body_len is known
+    {
+        // The clone shares the file cursor, so when the stream finishes
+        // (flushing its BufWriter), `f` sits exactly at the end of the body.
+        let sink = std::io::BufWriter::new(f.try_clone()?);
+        let mut w = codec::Writer::with_sink(Box::new(sink));
+        emit(&mut w);
+        let (body_len, checksum) = w.finish_stream()?;
+        f.write_all(&checksum.to_le_bytes())?;
+        f.seek(SeekFrom::Start(body_len_at))?;
+        f.write_all(&body_len.to_le_bytes())?;
+    }
+    f.sync_all()?;
+    drop(f);
     std::fs::rename(&tmp, path)?;
     Ok(())
 }
@@ -227,6 +273,45 @@ mod tests {
         assert_eq!(m.n, 16);
         assert_eq!(b, vec![1, 2, 3]);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The streamed writer must leave exactly the bytes `write_file`
+    /// would — the placeholder-patch framing is invisible on disk.
+    #[test]
+    fn streamed_file_is_byte_identical_to_buffered() {
+        let dir = std::env::temp_dir().join("qadmm-snapshot-stream-test");
+        let buffered = dir.join("buffered.qsnap");
+        let streamed = dir.join("streamed.qsnap");
+        let body: Vec<u8> = (0..300_000u32).flat_map(|i| i.to_le_bytes()).collect();
+        write_file(&buffered, &meta(), &body).unwrap();
+        write_file_streamed(&streamed, &meta(), |w| {
+            // feed in uneven pieces so spill boundaries fall mid-value
+            for chunk in body.chunks(777) {
+                for &b in chunk {
+                    w.put_u8(b);
+                }
+            }
+        })
+        .unwrap();
+        assert!(!streamed.with_extension("qsnap.tmp").exists(), "tmp file left behind");
+        let a = std::fs::read(&buffered).unwrap();
+        let b = std::fs::read(&streamed).unwrap();
+        assert_eq!(a, b, "streamed container differs from buffered");
+        let (m, back) = read_file(&streamed).unwrap();
+        assert_eq!(m.round, 31);
+        assert_eq!(back, body);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn digest_ignores_metrics_sample() {
+        let base = presets::ci_lasso();
+        let mut sampled = base.clone();
+        sampled.metrics_sample = 7;
+        assert_eq!(
+            config_resume_digest(&base.to_json()),
+            config_resume_digest(&sampled.to_json())
+        );
     }
 
     #[test]

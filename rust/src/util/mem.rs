@@ -1,0 +1,43 @@
+//! Process-memory introspection for the scale benchmarks.
+//!
+//! The million-node engine work's acceptance criterion is *peak resident
+//! memory*, not allocator counters — fragmentation and transient spikes
+//! count. On Linux the kernel already tracks exactly that high-water mark
+//! (`VmHWM` in `/proc/self/status`); elsewhere we report `None` rather
+//! than a number measured differently on different platforms.
+
+/// Peak resident set size of this process in MiB (`VmHWM`), or `None`
+/// where `/proc` is unavailable. The value is a high-water mark: it never
+/// decreases over the process lifetime, so read it *after* the workload.
+pub fn peak_rss_mb() -> Option<f64> {
+    #[cfg(target_os = "linux")]
+    {
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                // format: "VmHWM:    123456 kB"
+                let kb: f64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+                return Some(kb / 1024.0);
+            }
+        }
+        None
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_rss_is_positive_where_supported() {
+        match peak_rss_mb() {
+            // any running test process occupies at least a few MiB
+            Some(mb) => assert!(mb > 1.0 && mb.is_finite(), "VmHWM = {mb} MiB"),
+            None => assert!(cfg!(not(target_os = "linux")), "/proc parse failed on linux"),
+        }
+    }
+}

@@ -6,6 +6,7 @@
 pub mod cli;
 pub mod json;
 pub mod log;
+pub mod mem;
 pub mod rng;
 pub mod stats;
 pub mod timer;

@@ -575,7 +575,8 @@ fn prop_gossip_rounds_preserve_mass() {
             // not drown the bound in naive-summation error.)
             let mut bank_mass = ConsensusAccumulator::new(m, 0);
             for i in 0..n {
-                bank_mass.fold(eng.x_estimate(i), eng.u_estimate(i));
+                let (xi, ui) = (eng.x_estimate(i), eng.u_estimate(i));
+                bank_mass.fold(&xi, &ui);
             }
             let tracked = eng.fan_in_tracked_mass().expect("gossip run has a tier");
             let norm = bank_mass.sum().iter().fold(1.0f64, |a, v| a.max(v.abs()));
@@ -957,6 +958,160 @@ fn prop_trigger_dead_band_liveness_and_zero_steady_state_uplink() {
                 (l.uplink_bits, l.uplink_msgs),
                 (init_bits, 1),
                 "engine node {i}: steady-state uplink traffic under an infinite dead-band"
+            );
+        }
+    });
+}
+
+/// Million-node tentpole, timeline half: the calendar queue pops the exact
+/// `(time, seq, kind)` stream a reference binary heap produces, under
+/// randomized interleavings of pushes and pops that include equal-time
+/// bursts (order falls back to seq alone), far-future outliers (overflow
+/// + year re-anchoring) and full drains (shrink rebuilds). The engines'
+/// determinism contract rides on this order being exact, not approximate.
+#[test]
+fn prop_calendar_queue_pops_identical_stream_to_reference_heap() {
+    use qadmm::admm::events::{Event, EventKind, EventQueue};
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    fn random_kind(rng: &mut Pcg64) -> EventKind {
+        match rng.gen_range(4) {
+            0 => EventKind::ComputeDone { node: rng.gen_range(64) },
+            1 => EventKind::MsgArrive { node: rng.gen_range(64) },
+            2 => EventKind::DownlinkArrive { node: rng.gen_range(64) },
+            _ => EventKind::AggregateArrive { agg: rng.gen_range(8) },
+        }
+    }
+
+    for_all(25, 4242, |rng| {
+        let mut q = EventQueue::new();
+        let mut reference: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+        // `now` advances exactly like the engine's virtual clock: pushes
+        // schedule at now + delay, so times never go behind the frontier
+        let mut now = 0.0f64;
+        let pop_both = |q: &mut EventQueue,
+                            reference: &mut BinaryHeap<Reverse<Event>>,
+                            now: &mut f64| {
+            let got = q.pop();
+            let want = reference.pop().map(|Reverse(e)| e);
+            match (got, want) {
+                (Some(g), Some(w)) => {
+                    assert_eq!(
+                        (g.time.to_bits(), g.seq),
+                        (w.time.to_bits(), w.seq),
+                        "calendar ({}, {}) vs heap ({}, {})",
+                        g.time,
+                        g.seq,
+                        w.time,
+                        w.seq
+                    );
+                    assert_eq!(g.kind, w.kind, "kind diverged at seq {}", g.seq);
+                    *now = g.time;
+                }
+                (None, None) => {}
+                (g, w) => panic!("pop divergence: calendar {g:?} vs heap {w:?}"),
+            }
+        };
+        for _ in 0..300 {
+            // a burst of same-instant events forces the seq tie-break;
+            // the far-future arm lands past the wheel's year (overflow)
+            let delay = match rng.gen_range(6) {
+                0 => 0.0,
+                1 | 2 => rng.uniform_f64() * 3.0,
+                3 => rng.uniform_f64() * 1e4,
+                4 => 1e7 * (1.0 + rng.uniform_f64()),
+                _ => rng.uniform_f64() * 1e-6,
+            };
+            let t = now + delay;
+            for _ in 0..1 + rng.gen_range(4) {
+                let kind = random_kind(rng);
+                let seq = q.next_seq();
+                q.push(t, kind);
+                reference.push(Reverse(Event { time: t, seq, kind }));
+            }
+            assert_eq!(q.len(), reference.len());
+            for _ in 0..rng.gen_range(4) {
+                pop_both(&mut q, &mut reference, &mut now);
+            }
+            // occasional full drain exercises the shrink path and the
+            // overflow re-anchor, then the timeline keeps going
+            if rng.gen_range(40) == 0 {
+                while !q.is_empty() {
+                    pop_both(&mut q, &mut reference, &mut now);
+                }
+            }
+        }
+        while !q.is_empty() || !reference.is_empty() {
+            pop_both(&mut q, &mut reference, &mut now);
+        }
+    });
+}
+
+/// Million-node tentpole, memory half: the quantized-at-rest bank is
+/// bitwise-indistinguishable from a fleet of dense `EstimateTracker`s —
+/// same committed frames, same estimate rows down to the sign of zero —
+/// across every compressor family, EF on/off, interleaved reads (which
+/// move rows through the scratch pool) and enough traffic per node to
+/// trigger frame compaction. This is what makes swapping the engines'
+/// banks out from under the parity suites sound.
+#[test]
+fn prop_quant_bank_bitwise_matches_dense_trackers() {
+    use qadmm::compress::bank::QuantBank;
+
+    let kinds = [
+        CompressorKind::Identity,
+        CompressorKind::Identity32,
+        CompressorKind::Qsgd { bits: 2 },
+        CompressorKind::Qsgd { bits: 3 },
+        CompressorKind::Qsgd { bits: 11 },
+        CompressorKind::Sign,
+        CompressorKind::TopK { frac_permille: 100 },
+        CompressorKind::RandK { frac_permille: 100 },
+    ];
+    let poisons = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY];
+    for_all(40, 5353, |rng| {
+        let n = 1 + rng.gen_range(12);
+        let m = 1 + rng.gen_range(48);
+        let feedback = rng.bernoulli(0.5);
+        let kind = kinds[rng.gen_range(kinds.len())];
+        let comp = kind.build();
+        let scale = 10f64.powf(rng.uniform_f64() * 6.0 - 3.0); // 1e-3..1e3
+        let init_row = rng.normal_vec(m, 0.0, scale);
+        let mut bank = QuantBank::new(n, init_row.clone(), feedback);
+        let mut dense: Vec<EstimateTracker> =
+            (0..n).map(|_| EstimateTracker::new(init_row.clone(), feedback)).collect();
+
+        let bits = |v: &[f64]| -> Vec<u64> { v.iter().map(|x| x.to_bits()).collect() };
+        for step in 0..60 {
+            let i = rng.gen_range(n);
+            let mut delta = rng.normal_vec(m, 0.0, scale);
+            if rng.gen_range(8) == 0 {
+                // compressors sanitize non-finite inputs; both banks must
+                // commit the same sanitized frame
+                let j = rng.gen_range(m);
+                delta[j] = poisons[rng.gen_range(poisons.len())];
+            }
+            let c = comp.compress(&delta, rng);
+            bank.commit_frame(i, &c).unwrap();
+            dense[i].commit_frame(&c).unwrap();
+            if rng.bernoulli(0.3) {
+                // interleaved reads rotate rows through the scratch pool
+                let j = rng.gen_range(n);
+                assert_eq!(
+                    bits(bank.row(j)),
+                    bits(dense[j].estimate()),
+                    "kind={} step={step} node={j}: row read diverged",
+                    kind.label()
+                );
+            }
+        }
+        for i in 0..n {
+            assert_eq!(
+                bits(&bank.estimate(i)),
+                bits(dense[i].estimate()),
+                "kind={} node={i} (n={n} m={m} feedback={feedback}): final estimate",
+                kind.label()
             );
         }
     });

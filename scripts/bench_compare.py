@@ -25,10 +25,19 @@ import sys
 # section name -> (key fields, timing metric)
 SECTIONS = {
     "sweeps": (["label", "n", "m", "tau"], "wall_s"),
+    "scale_xl": (["n", "m", "tau"], "wall_s"),
     "server_round": (["n", "m", "p"], "inc_round_us"),
     "server_round_nn": (["n", "m", "p", "k"], "fused_round_us"),
     "trigger": (["n", "delta", "adapt"], "wall_s"),
 }
+
+# soft regression gates: (section, metric) pairs checked against
+# --warn-threshold. peak_rss_mb guards the million-node O(active)-memory
+# work the same way inc_round_us guards the server hot path.
+GATES = [
+    ("server_round", "inc_round_us"),
+    ("scale_xl", "peak_rss_mb"),
+]
 
 
 def load(path):
@@ -120,15 +129,50 @@ def one_sided_sections(baseline, current):
     return notes
 
 
-def regression_warnings(baseline, current, threshold):
-    """`server_round` rows whose inc_round_us regressed beyond threshold.
+def scale_xl_memory_table(baseline, current):
+    """Extra columns for the million-node section: the timing table above
+    only shows wall_s, but scale_xl's acceptance metric is peak RSS, with
+    the queue high-water mark as the O(n)-not-O(rounds·n) witness."""
+    key_fields = SECTIONS["scale_xl"][0]
+    cur = index_section(records_of(current, "scale_xl"), key_fields)
+    base = index_section(records_of(baseline, "scale_xl"), key_fields)
+    if not cur:
+        return ""
+    lines = [
+        "\n### scale_xl memory\n",
+        "| " + " | ".join(key_fields)
+        + " | peak_rss_mb (base) | peak_rss_mb (now) | delta"
+        + " | queue_peak | events_scheduled |",
+        "|" + "---|" * (len(key_fields) + 5),
+    ]
+
+    def cell(v):
+        return f"{v:.1f}" if is_num(v) else "—"
+
+    for key, rec in cur.items():
+        old = base.get(key, {}).get("peak_rss_mb")
+        new = rec.get("peak_rss_mb")
+        qp, ev = rec.get("queue_peak"), rec.get("events_scheduled")
+        cells = [str(k) for k in key] + [
+            cell(old),
+            cell(new),
+            fmt_delta(old, new),
+            f"{qp:.0f}" if is_num(qp) else "—",
+            f"{ev:.0f}" if is_num(ev) else "—",
+        ]
+        lines.append("| " + " | ".join(cells) + " |")
+    return "\n".join(lines) + "\n"
+
+
+def regression_warnings(baseline, current, threshold, name, metric):
+    """Rows of `name` whose `metric` regressed beyond threshold.
 
     Soft gate only: the caller prints a prominent warning but still exits 0
     (runner noise must never block a merge on its own).
     """
-    key_fields, metric = SECTIONS["server_round"]
-    cur = index_section(records_of(current, "server_round"), key_fields)
-    base = index_section(records_of(baseline, "server_round"), key_fields)
+    key_fields = SECTIONS[name][0]
+    cur = index_section(records_of(current, name), key_fields)
+    base = index_section(records_of(baseline, name), key_fields)
     warns = []
     for key, rec in cur.items():
         old = base.get(key, {}).get(metric)
@@ -146,9 +190,9 @@ def main():
                     help="file to append the markdown to (e.g. $GITHUB_STEP_SUMMARY)")
     ap.add_argument("--warn-threshold", type=float, default=None,
                     help="soft regression gate: warn prominently when a "
-                         "server_round row's inc_round_us exceeds "
-                         "THRESHOLD x its committed baseline (never fails "
-                         "the job)")
+                         "gated metric (server_round inc_round_us, "
+                         "scale_xl peak_rss_mb) exceeds THRESHOLD x its "
+                         "committed baseline (never fails the job)")
     args = ap.parse_args()
 
     current = load(args.current)
@@ -171,16 +215,23 @@ def main():
     out.append(f"\nmode: {mode}\n")
     for name, (key_fields, metric) in SECTIONS.items():
         out.append(section_table(name, key_fields, metric, baseline, current))
+    mem_table = scale_xl_memory_table(baseline, current)
+    if mem_table:
+        out.append(mem_table)
     notes = one_sided_sections(baseline, current)
     if baseline is not None and notes:
         out.append("\n" + "\n".join(notes) + "\n")
     if args.warn_threshold is not None and baseline is not None:
-        warns = regression_warnings(baseline, current, args.warn_threshold)
-        if warns:
-            key_fields, metric = SECTIONS["server_round"]
+        for name, metric in GATES:
+            warns = regression_warnings(
+                baseline, current, args.warn_threshold, name, metric
+            )
+            if not warns:
+                continue
+            key_fields = SECTIONS[name][0]
             block = [
                 "\n> [!WARNING]",
-                f"> ## ⚠️ server_round `{metric}` regressed more than "
+                f"> ## ⚠️ {name} `{metric}` regressed more than "
                 f"{args.warn_threshold:.2f}x vs the committed baseline",
                 "> Non-blocking (runners are noisy), but check before "
                 "merging a hot-path change:",
@@ -188,7 +239,7 @@ def main():
             for key, old, new, ratio in warns:
                 label = ", ".join(f"{f}={v}" for f, v in zip(key_fields, key))
                 block.append(
-                    f"> - {label}: {old:.1f}us → {new:.1f}us ({ratio:.2f}x)"
+                    f"> - {label}: {old:.1f} → {new:.1f} ({ratio:.2f}x)"
                 )
             out.append("\n".join(block) + "\n")
     text = "\n".join(out)
