@@ -37,6 +37,7 @@
 pub mod engine;
 pub mod events;
 pub mod oracle;
+pub mod replay;
 pub mod runner;
 pub mod scheduler;
 pub mod sim;

@@ -1,0 +1,336 @@
+//! Offline replay of a **deploy** recording: drive the Algorithm 1 state
+//! machines through exactly the round schedule a production `qadmm serve`
+//! captured ([`RecordedTimeline`] with `engine == "deploy"`), with no
+//! sockets, no threads, and no wall-clock — the reverse of the PR 5
+//! bridge (which replayed an *event-engine* recording through the
+//! threaded runtime). This is the offline-diagnosis leg: a schedule
+//! observed in production replays on a laptop, and the replay validates
+//! the recording against the protocol's own invariants as it goes:
+//!
+//! - **cadence** — a node may arrive in round r only if it was dispatched
+//!   (included in a broadcast, or the init) and has not arrived since:
+//!   at most one update in flight per node (the paper's Fig. 2 cadence);
+//! - **arrival fidelity** — the replay folds exactly the recorded arrival
+//!   sets; the returned `round_arrivals` must equal the recording's
+//!   verbatim (the deploy smoke asserts this).
+//!
+//! The replay reproduces the *schedule*, not the deployment's bit-exact
+//! trajectory — within-round fold order here is ascending node id, while a
+//! real deployment folds in arrival order (the same scope note as the
+//! PR 5 bridge; bit-identity across runtimes is only ever claimed at
+//! matching fold order).
+
+use anyhow::{ensure, Result};
+
+use crate::admm::trigger::{inf_norm, TriggerState};
+use crate::comm::accounting::CommAccounting;
+use crate::comm::message::{NodeToServer, ServerToNode};
+use crate::compress::error_feedback::EstimateTracker;
+use crate::compress::Compressed;
+use crate::config::ExperimentConfig;
+use crate::problems::{Arena, Problem};
+use crate::snapshot::timeline::RecordedTimeline;
+use crate::topology::TopologyKind;
+use crate::util::rng::Pcg64;
+
+/// What one node has staged for the server.
+enum InFlight {
+    /// Dispatched but its update has not been folded yet.
+    Payload(Compressed, Compressed),
+    /// Dead-banded dispatch: arrival credit, no payload.
+    SkipCredit,
+    /// Nothing in flight — the node is waiting to be dispatched.
+    None,
+}
+
+pub struct ReplayOutcome {
+    /// Realized arrival set per fired round (ascending) — equals the
+    /// recording's `rounds[r].arrivals` when the replay succeeds.
+    pub round_arrivals: Vec<Vec<usize>>,
+    /// eq. (20) bits the replayed schedule charges (init + every realized
+    /// transmission), normalized by M.
+    pub comm_bits: f64,
+    /// Final suboptimality under the replayed schedule.
+    pub accuracy: f64,
+}
+
+/// Replay a deploy recording through the in-process state machines.
+pub fn replay_timeline(
+    cfg: &ExperimentConfig,
+    mut problem: Box<dyn Problem + Send>,
+    tl: &RecordedTimeline,
+) -> Result<ReplayOutcome> {
+    cfg.validate()?;
+    ensure!(
+        tl.engine == "deploy",
+        "this driver replays deploy recordings (got '{}'); event recordings \
+         replay via coordinator::run_threaded_replay",
+        tl.engine
+    );
+    let n = problem.n_nodes();
+    let m = problem.dim();
+    ensure!(tl.n == n, "recording is for n={} nodes, problem has n={n}", tl.n);
+    ensure!(
+        cfg.topology == TopologyKind::Star,
+        "deploy recordings are star fan-in"
+    );
+
+    // Identical state derivation to serve/worker. `fork` advances the
+    // parent, so order matters: each deploy process draws fork(100) then
+    // its own stream as the *second* draw from a fresh root — reproduce
+    // node i's rng from its own root, exactly like the worker that drew it.
+    let mut root = Pcg64::seed_from_u64(cfg.seed ^ 0x7468_7265_6164);
+    let mut init_rng = root.fork(100);
+    let x0 = problem.init_x(&mut init_rng);
+    let mut server_rng = root.fork(300);
+    let mut node_rngs: Vec<Pcg64> = (0..n)
+        .map(|i| {
+            let mut r = Pcg64::seed_from_u64(cfg.seed ^ 0x7468_7265_6164);
+            let _ = r.fork(100);
+            r.fork(200 + i as u64)
+        })
+        .collect();
+
+    let ef = cfg.error_feedback;
+    let mut xs: Vec<Vec<f64>> = vec![x0.clone(); n];
+    let mut us: Vec<Vec<f64>> = vec![vec![0.0; m]; n];
+    let mut xhat: Vec<EstimateTracker> =
+        (0..n).map(|_| EstimateTracker::new(x0.clone(), ef)).collect();
+    let mut uhat: Vec<EstimateTracker> =
+        (0..n).map(|_| EstimateTracker::new(vec![0.0; m], ef)).collect();
+    // per-node ẑ basis at dispatch time (each worker computes against the
+    // consensus estimate it had when it was told to go)
+    let mut z_seen: Vec<Vec<f64>>;
+    let mut triggers: Vec<TriggerState> =
+        (0..n).map(|_| TriggerState::new(cfg, 1)).collect();
+    let compressor = cfg.compressor.build();
+    let mut acc = CommAccounting::new(n);
+
+    // init exchange, charged at the paper's 32-bit rate like every runtime
+    for i in 0..n {
+        acc.record_uplink(
+            i,
+            NodeToServer::InitFull { node: i, x0: x0.clone(), u0: us[i].clone() }
+                .wire_bits(),
+        );
+    }
+    let sum0: Vec<f64> = (0..m)
+        .map(|j| (0..n).map(|i| xs[i][j] + us[i][j]).sum::<f64>())
+        .collect();
+    let z = problem.consensus_from_sum(&sum0, n)?;
+    acc.record_broadcast(ServerToNode::InitZ { z0: z.clone() }.wire_bits());
+    let mut zhat = EstimateTracker::new(z, true);
+    z_seen = vec![zhat.estimate().to_vec(); n];
+
+    // every node is dispatched by InitZ: compute the first update now
+    let mut inflight: Vec<InFlight> = Vec::with_capacity(n);
+    for i in 0..n {
+        let staged = compute(
+            i,
+            problem.as_mut(),
+            &z_seen[i],
+            &mut xs[i],
+            &mut us[i],
+            &mut xhat[i],
+            &mut uhat[i],
+            &mut triggers[i],
+            compressor.as_ref(),
+            &mut node_rngs[i],
+            &mut acc,
+        )?;
+        inflight.push(staged);
+    }
+
+    let mut round_arrivals = Vec::with_capacity(tl.rounds.len());
+    for (r, round) in tl.rounds.iter().enumerate() {
+        // fold exactly the recorded arrivals (ascending id order)
+        for &i in &round.arrivals {
+            ensure!(i < n, "round {r}: arrival node {i} out of range");
+            match std::mem::replace(&mut inflight[i], InFlight::None) {
+                InFlight::Payload(cx, cu) => {
+                    xhat[i].commit_frame(&cx)?;
+                    uhat[i].commit_frame(&cu)?;
+                }
+                InFlight::SkipCredit => {}
+                InFlight::None => anyhow::bail!(
+                    "round {r}: node {i} arrives without a dispatch in flight \
+                     (cadence violation in the recording)"
+                ),
+            }
+        }
+        round_arrivals.push(round.arrivals.clone());
+
+        // fire: z = prox(Σ(x̂+û)/n), broadcast the compressed delta
+        let sum: Vec<f64> = (0..m)
+            .map(|j| {
+                (0..n)
+                    .map(|i| xhat[i].estimate()[j] + uhat[i].estimate()[j])
+                    .sum::<f64>()
+            })
+            .collect();
+        let z = problem.consensus_from_sum(&sum, n)?;
+        let dz = zhat.make_delta(&z);
+        let cz = compressor.compress(&dz, &mut server_rng);
+        let dz_deq = cz.dequantized()?;
+        acc.record_broadcast(
+            ServerToNode::Consensus {
+                iter: r as u64,
+                included: Vec::new(),
+                dz_wire: cz.wire,
+                last: round.dispatches.is_empty(),
+            }
+            .wire_bits(),
+        );
+        zhat.commit(&dz_deq);
+
+        // recorded dispatches recompute against the ẑ estimate they see
+        for &i in &round.dispatches {
+            ensure!(i < n, "round {r}: dispatch node {i} out of range");
+            ensure!(
+                matches!(inflight[i], InFlight::None),
+                "round {r}: node {i} dispatched with an update already in flight"
+            );
+            z_seen[i] = zhat.estimate().to_vec();
+            inflight[i] = compute(
+                i,
+                problem.as_mut(),
+                &z_seen[i],
+                &mut xs[i],
+                &mut us[i],
+                &mut xhat[i],
+                &mut uhat[i],
+                &mut triggers[i],
+                compressor.as_ref(),
+                &mut node_rngs[i],
+                &mut acc,
+            )?;
+        }
+    }
+
+    let xa = Arena::from_rows_iter(m, xhat.iter().map(|t| t.estimate()));
+    let ua = Arena::from_rows_iter(m, uhat.iter().map(|t| t.estimate()));
+    let metrics = problem.evaluate(&xa, &ua, zhat.estimate())?;
+    Ok(ReplayOutcome {
+        round_arrivals,
+        comm_bits: acc.normalized_bits(m),
+        accuracy: metrics.accuracy,
+    })
+}
+
+/// One node's local update + staging, mirroring the worker's
+/// `compute_and_send` (trigger dead-band, adaptive quantizer, EF banks,
+/// frame-commit-before-send order). Charges the uplink for realized
+/// payloads only.
+#[allow(clippy::too_many_arguments)]
+fn compute(
+    node: usize,
+    problem: &mut (dyn Problem + Send),
+    z: &[f64],
+    x: &mut Vec<f64>,
+    u: &mut Vec<f64>,
+    xhat: &mut EstimateTracker,
+    uhat: &mut EstimateTracker,
+    trigger: &mut TriggerState,
+    compressor: &dyn crate::compress::Compressor,
+    rng: &mut Pcg64,
+    acc: &mut CommAccounting,
+) -> Result<InFlight> {
+    let m = x.len();
+    let (x_new, _loss) = problem.local_update(node, z, u, x, rng)?;
+    for j in 0..m {
+        u[j] += x_new[j] - z[j];
+    }
+    *x = x_new;
+    let mut dx = Vec::with_capacity(m);
+    let mut du = Vec::with_capacity(m);
+    xhat.peek_delta_into(x, &mut dx);
+    uhat.peek_delta_into(u, &mut du);
+    if trigger.enabled() {
+        let norm = inf_norm(&dx).max(inf_norm(&du));
+        trigger.observe(0, norm);
+        if !trigger.should_send(norm) {
+            trigger.note_skip();
+            return Ok(InFlight::SkipCredit);
+        }
+    }
+    xhat.note_sent(x);
+    uhat.note_sent(u);
+    let (cx, cu) = match trigger.compressor_for(0) {
+        Some(q) => (q.compress(&dx, rng), q.compress(&du, rng)),
+        None => (compressor.compress(&dx, rng), compressor.compress(&du, rng)),
+    };
+    acc.record_uplink(
+        node,
+        crate::comm::message::MSG_HEADER_BYTES * 8
+            + (cx.wire.len() + cu.wire.len()) as u64 * 8,
+    );
+    Ok(InFlight::Payload(cx, cu))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::admm::runner::trial_seed;
+    use crate::admm::sim::TrialRngs;
+    use crate::config::presets;
+    use crate::config::ProblemKind;
+    use crate::problems::lasso::{LassoConfig, LassoProblem};
+    use crate::snapshot::timeline::RecordedTimeline;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = presets::ci_lasso();
+        cfg.iters = 4;
+        cfg
+    }
+
+    fn tiny_problem(cfg: &ExperimentConfig) -> Box<dyn Problem + Send> {
+        let ProblemKind::Lasso { m, h, n, rho, theta } = cfg.problem.clone() else {
+            unreachable!("ci preset is lasso")
+        };
+        let mut rngs = TrialRngs::new(trial_seed(cfg.seed, 0));
+        let mut p = LassoProblem::generate(LassoConfig { m, h, n, rho, theta }, &mut rngs.data)
+            .expect("problem");
+        p.set_reference_optimum(1.0);
+        Box::new(p)
+    }
+
+    /// A full-participation schedule replays cleanly and reproduces its
+    /// own arrival sets.
+    #[test]
+    fn full_participation_schedule_replays() {
+        let cfg = tiny_cfg();
+        let n = tiny_problem(&cfg).n_nodes();
+        let mut tl = RecordedTimeline::new("deploy", n, cfg.seed);
+        let all: Vec<usize> = (0..n).collect();
+        for r in 0..4usize {
+            let disp = if r == 3 { Vec::new() } else { all.clone() };
+            tl.push_round(r as f64, all.clone(), disp);
+        }
+        let out = replay_timeline(&cfg, tiny_problem(&cfg), &tl).unwrap();
+        assert_eq!(out.round_arrivals, vec![all.clone(); 4]);
+        assert!(out.comm_bits > 0.0);
+        assert!(out.accuracy.is_finite());
+    }
+
+    /// An arrival with no dispatch in flight is a cadence violation, not
+    /// a silent mis-fold.
+    #[test]
+    fn cadence_violation_is_an_error() {
+        let cfg = tiny_cfg();
+        let n = tiny_problem(&cfg).n_nodes();
+        let mut tl = RecordedTimeline::new("deploy", n, cfg.seed);
+        // node 0 arrives twice without being re-dispatched in between
+        tl.push_round(0.0, vec![0], vec![]);
+        tl.push_round(1.0, vec![0], vec![]);
+        let err = replay_timeline(&cfg, tiny_problem(&cfg), &tl).unwrap_err();
+        assert!(err.to_string().contains("cadence"), "{err}");
+    }
+
+    /// Event recordings are routed to the other replay path.
+    #[test]
+    fn event_recordings_are_rejected() {
+        let cfg = tiny_cfg();
+        let tl = RecordedTimeline::new("event", 4, cfg.seed);
+        assert!(replay_timeline(&cfg, tiny_problem(&cfg), &tl).is_err());
+    }
+}

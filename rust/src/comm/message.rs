@@ -46,6 +46,17 @@ pub enum NodeToServer {
         /// contract covers skipped dispatches too).
         seq: u64,
     },
+    /// Acknowledgement of the `last`-flagged consensus broadcast: the node
+    /// applied the final C(Δz) and is exiting. The server's drain-then-
+    /// close shutdown waits for one ack per live node, so every frame a
+    /// worker charged has landed (or provably never will) before the books
+    /// are read — the old sleep-tail bound becomes exact equality.
+    ShutdownAck { node: usize },
+    /// The node's connection is gone (deploy transport: EOF or I/O error on
+    /// its socket, synthesized by the server-side reader — a departing
+    /// worker sends nothing). The server evicts the node from the live set
+    /// so the P/τ trigger can never wedge on a dead peer.
+    Leave { node: usize },
 }
 
 impl NodeToServer {
@@ -60,6 +71,11 @@ impl NodeToServer {
             }
             // a skipped dispatch is the *absence* of a transmission
             NodeToServer::Skip { .. } => 0,
+            // control plane: a tiny fixed frame in the deploy transport,
+            // tallied there as socket control bytes — eq. (20) counts data
+            NodeToServer::ShutdownAck { .. } => 0,
+            // synthesized server-side; nothing travels at all
+            NodeToServer::Leave { .. } => 0,
         }
     }
 
@@ -67,7 +83,9 @@ impl NodeToServer {
         match self {
             NodeToServer::Update { node, .. }
             | NodeToServer::InitFull { node, .. }
-            | NodeToServer::Skip { node, .. } => *node,
+            | NodeToServer::Skip { node, .. }
+            | NodeToServer::ShutdownAck { node }
+            | NodeToServer::Leave { node } => *node,
         }
     }
 }
@@ -84,7 +102,17 @@ pub enum ServerToNode {
     /// [`Self::wire_bits`] — eq. (20) counts data, and the in-process
     /// engines (which need no inclusion frame at all) price the broadcast
     /// as header + payload.
-    Consensus { iter: u64, included: Vec<u32>, dz_wire: Vec<u8> },
+    Consensus {
+        iter: u64,
+        included: Vec<u32>,
+        dz_wire: Vec<u8>,
+        /// Set on the final round's broadcast: apply the delta, ack with
+        /// [`NodeToServer::ShutdownAck`], and exit — do **not** start
+        /// another local update. One flag bit rides in the charged header;
+        /// it replaces the old post-loop `Shutdown` broadcast + sleepy
+        /// drain (the shutdown race PR 3 could only bound, not close).
+        last: bool,
+    },
     /// Full-precision initial consensus (Algorithm 1 line 8).
     InitZ { z0: Vec<f64> },
     /// Orderly shutdown of a node worker.
@@ -141,11 +169,40 @@ mod tests {
 
     #[test]
     fn downlink_bits() {
-        let m =
-            ServerToNode::Consensus { iter: 3, included: vec![0, 2], dz_wire: vec![0u8; 100] };
+        let m = ServerToNode::Consensus {
+            iter: 3,
+            included: vec![0, 2],
+            dz_wire: vec![0u8; 100],
+            last: false,
+        };
         // header + payload only: eq. (20) does not count the inclusion list
         assert_eq!(m.wire_bits(), (12 + 100) * 8);
         assert_eq!(ServerToNode::Shutdown.wire_bits(), 96);
+    }
+
+    /// Control traffic is never data: the shutdown ack and the synthesized
+    /// leave both price at 0 (the deploy transport tallies their real
+    /// socket bytes separately, outside eq. 20).
+    #[test]
+    fn control_frames_charge_nothing() {
+        assert_eq!(NodeToServer::ShutdownAck { node: 3 }.wire_bits(), 0);
+        assert_eq!(NodeToServer::ShutdownAck { node: 3 }.node(), 3);
+        assert_eq!(NodeToServer::Leave { node: 5 }.wire_bits(), 0);
+        assert_eq!(NodeToServer::Leave { node: 5 }.node(), 5);
+    }
+
+    /// The last-round flag must not change the charged size — it rides in
+    /// the fixed header, like the iteration counter.
+    #[test]
+    fn last_flag_is_free() {
+        let frame = |last| ServerToNode::Consensus {
+            iter: 9,
+            included: vec![1],
+            dz_wire: vec![0; 32],
+            last,
+        };
+        let (base, last) = (frame(false), frame(true));
+        assert_eq!(base.wire_bits(), last.wire_bits());
     }
 
     /// A skipped dispatch is the absence of a frame: zero bits, whatever
@@ -163,11 +220,17 @@ mod tests {
     /// pricing is identical across all three runtimes at any fleet size.
     #[test]
     fn inclusion_list_is_not_charged() {
-        let small = ServerToNode::Consensus { iter: 0, included: vec![], dz_wire: vec![0; 64] };
+        let small = ServerToNode::Consensus {
+            iter: 0,
+            included: vec![],
+            dz_wire: vec![0; 64],
+            last: false,
+        };
         let large = ServerToNode::Consensus {
             iter: 0,
             included: (0..1000).collect(),
             dz_wire: vec![0; 64],
+            last: true,
         };
         assert_eq!(small.wire_bits(), large.wire_bits());
         assert_eq!(small.wire_bits(), (12 + 64) * 8);

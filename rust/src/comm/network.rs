@@ -43,14 +43,18 @@ impl NodeEndpoint {
                 *seq = self.seq;
                 self.seq += 1;
             }
-            NodeToServer::InitFull { .. } => {}
+            NodeToServer::InitFull { .. }
+            | NodeToServer::ShutdownAck { .. }
+            | NodeToServer::Leave { .. } => {}
         }
         // A Skip is the *absence* of a transmission: neither bits nor the
         // per-link message counter may move (the event trigger's zero-
         // steady-state-uplink contract is asserted against both). The
-        // uplink latency and duplicate injection below still apply — the
-        // arrival signal itself propagates like any other delivery.
-        if !matches!(msg, NodeToServer::Skip { .. }) {
+        // shutdown ack and a synthesized leave are control plane and
+        // likewise leave the books untouched. The uplink latency and
+        // duplicate injection below still apply — the arrival signal
+        // itself propagates like any other delivery.
+        if matches!(msg, NodeToServer::Update { .. } | NodeToServer::InitFull { .. }) {
             let bits = msg.wire_bits();
             self.accounting.lock().unwrap().record_uplink(self.node, bits);
         }
@@ -152,7 +156,11 @@ impl ServerEndpoint {
                 self.last_seq[*node] = Some(*seq);
                 false
             }
-            NodeToServer::InitFull { .. } => false,
+            // control messages carry no sequence number: init is
+            // idempotent at the server, acks/leaves are level-triggered
+            NodeToServer::InitFull { .. }
+            | NodeToServer::ShutdownAck { .. }
+            | NodeToServer::Leave { .. } => false,
         }
     }
 
@@ -217,6 +225,38 @@ pub fn star(
     (server, endpoints, accounting)
 }
 
+/// Build the channel half of a socket deployment: a [`ServerEndpoint`] for
+/// the unchanged [`crate::coordinator::server::ServerLoop`], plus the raw
+/// uplink `Sender` (cloned into per-connection reader threads) and the
+/// per-node downlink `Receiver`s (owned by per-node writer pumps that
+/// forward onto whatever socket the node is currently attached to).
+///
+/// The endpoint's internal accounting is a **throwaway**: in the deploy
+/// shape bits are charged where bytes actually move — readers charge the
+/// uplink on a decoded frame, pumps charge the downlink on a completed
+/// write — so the endpoint's send-side charging must not double-count, and
+/// a broadcast to a detached node must cost nothing. The caller keeps its
+/// own [`SharedAccounting`] for the real books.
+pub fn bridged(
+    n_nodes: usize,
+) -> (ServerEndpoint, Sender<NodeToServer>, Vec<Receiver<ServerToNode>>) {
+    let (up_tx, up_rx) = channel::<NodeToServer>();
+    let mut to_nodes = Vec::with_capacity(n_nodes);
+    let mut down_rxs = Vec::with_capacity(n_nodes);
+    for _ in 0..n_nodes {
+        let (down_tx, down_rx) = channel::<ServerToNode>();
+        to_nodes.push(down_tx);
+        down_rxs.push(down_rx);
+    }
+    let server = ServerEndpoint {
+        from_nodes: up_rx,
+        to_nodes,
+        accounting: Arc::new(Mutex::new(CommAccounting::new(n_nodes))),
+        last_seq: vec![None; n_nodes],
+    };
+    (server, up_tx, down_rxs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,6 +280,7 @@ mod tests {
                 iter: 0,
                 included: vec![0, 1],
                 dz_wire: vec![0; 4],
+                last: false,
             })
             .unwrap();
         assert!(matches!(nodes[0].recv().unwrap(), ServerToNode::Consensus { .. }));
@@ -313,5 +354,23 @@ mod tests {
             star(1, &[LinkProfile::none()], FaultSpec::default(), 3, 0);
         let got = server.recv_timeout(Duration::from_millis(20)).unwrap();
         assert!(got.is_none());
+    }
+
+    /// The bridged endpoint forwards raw messages both ways and leaves the
+    /// caller's books alone: its internal accounting is a throwaway the
+    /// deploy transport never reads (bytes are charged at the sockets).
+    #[test]
+    fn bridged_endpoint_routes_without_charging_the_caller() {
+        let (mut server, up_tx, down_rxs) = bridged(2);
+        up_tx.send(update(1, 0)).unwrap();
+        assert!(matches!(server.recv().unwrap(), NodeToServer::Update { node: 1, .. }));
+        server.send(0, ServerToNode::Shutdown).unwrap();
+        assert!(matches!(down_rxs[0].recv().unwrap(), ServerToNode::Shutdown));
+        assert!(down_rxs[1].try_recv().is_err()); // unicast, not broadcast
+        // control messages pass the dedup untouched
+        up_tx.send(NodeToServer::ShutdownAck { node: 0 }).unwrap();
+        up_tx.send(NodeToServer::Leave { node: 1 }).unwrap();
+        assert!(matches!(server.recv().unwrap(), NodeToServer::ShutdownAck { node: 0 }));
+        assert!(matches!(server.recv().unwrap(), NodeToServer::Leave { node: 1 }));
     }
 }

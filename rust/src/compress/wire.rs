@@ -89,6 +89,10 @@ impl<'a> FrameReader<'a> {
         Ok(self.take(1)?[0])
     }
 
+    pub fn u16(&mut self) -> anyhow::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
     pub fn u32(&mut self) -> anyhow::Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
@@ -103,6 +107,17 @@ impl<'a> FrameReader<'a> {
 
     pub fn f32(&mut self) -> anyhow::Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Bounds-checked variable-length read (the public face of `take`, for
+    /// codecs layered on this reader — e.g. the deploy socket protocol).
+    pub fn take_bytes(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    /// Bytes not yet consumed — 0 iff the frame was read exactly.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
     }
 
     pub fn rest(&mut self) -> &'a [u8] {

@@ -151,17 +151,17 @@ fn run_threaded_inner(
     if let Some(tl) = replay {
         srv.set_replay(tl.rounds.iter().map(|r| r.arrivals.clone()).collect());
     }
-    let (recorder, round_arrivals) = srv.run()?;
+    let out = srv.run()?;
 
     for h in handles {
         h.join().map_err(|_| anyhow::anyhow!("node thread panicked"))??;
     }
     let acc = accounting.lock().unwrap();
     Ok(ThreadedOutcome {
-        recorder,
+        recorder: out.recorder,
         normalized_bits: acc.normalized_bits(m),
         uplink_bits: acc.total_uplink_bits(),
         downlink_bits: acc.total_downlink_bits(),
-        round_arrivals,
+        round_arrivals: out.round_arrivals,
     })
 }

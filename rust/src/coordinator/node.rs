@@ -75,17 +75,22 @@ impl NodeWorker {
                         break;
                     }
                 }
-                ServerToNode::Consensus { included, dz_wire, .. } => {
+                ServerToNode::Consensus { included, dz_wire, last, .. } => {
                     self.apply_consensus(&dz_wire)?;
                     let mut included = included.binary_search(&(self.ep.node as u32)).is_ok();
+                    let mut last = last;
                     // Catch up: a straggler may have a backlog of broadcasts;
-                    // apply every missed delta before computing once.
+                    // apply every missed delta before computing once. A
+                    // `last` anywhere in the backlog ends the run — every
+                    // delta up to and including it is still applied, so the
+                    // final ẑ mirror is complete before the ack.
                     let mut shutdown = false;
                     while let Some(extra) = self.ep.try_recv() {
                         match extra {
-                            ServerToNode::Consensus { included: inc, dz_wire, .. } => {
+                            ServerToNode::Consensus { included: inc, dz_wire, last: l, .. } => {
                                 self.apply_consensus(&dz_wire)?;
                                 included |= inc.binary_search(&(self.ep.node as u32)).is_ok();
+                                last |= l;
                             }
                             ServerToNode::Shutdown => {
                                 shutdown = true;
@@ -93,6 +98,14 @@ impl NodeWorker {
                             }
                             ServerToNode::InitZ { .. } => {}
                         }
+                    }
+                    if last {
+                        // Drain-then-close handshake: tell the server the
+                        // final delta landed, then exit. After the ack no
+                        // frame of ours is in flight, so the books are
+                        // final the moment the server has all acks.
+                        let _ = self.ep.send(NodeToServer::ShutdownAck { node: self.ep.node });
+                        break;
                     }
                     if shutdown {
                         break;

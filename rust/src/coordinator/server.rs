@@ -16,11 +16,23 @@ use crate::config::ExperimentConfig;
 use crate::metrics::{IterRecord, RunRecorder};
 use crate::problems::accumulator::ConsensusAccumulator;
 use crate::problems::Arena;
+use crate::snapshot::timeline::RecordedTimeline;
 use crate::topology::AggregatorTier;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
 use super::SharedProblem;
+
+/// Everything one server run produces besides the side effects on the
+/// shared accounting: the metrics stream, the replay-mode arrival audit,
+/// and (when [`ServerLoop::set_record`] was called) the captured schedule.
+pub struct ServerRunOutput {
+    pub recorder: RunRecorder,
+    /// Replay mode only: the realized arrival set of every fired round.
+    pub round_arrivals: Vec<Vec<usize>>,
+    /// The recorded production schedule (deploy capture→replay workflow).
+    pub timeline: Option<RecordedTimeline>,
+}
 
 pub struct ServerLoop {
     ep: ServerEndpoint,
@@ -56,6 +68,17 @@ pub struct ServerLoop {
     trigger_delta: f64,
     d: Vec<usize>,
     pending: BTreeSet<usize>,
+    /// Deploy churn: nodes currently attached. A [`NodeToServer::Leave`]
+    /// (synthesized by the transport on EOF/error) clears the slot so the
+    /// P/τ stale rule and the shutdown drain only ever wait on peers that
+    /// can still answer; a mid-run `InitFull` from a dead slot is a rejoin
+    /// (fresh bank state, fresh downlink basis). In-process runtimes never
+    /// send `Leave`, so every slot stays live and nothing changes.
+    live: Vec<bool>,
+    /// Deploy capture ([`Self::set_record`]): the production schedule —
+    /// wall-clock round times + arrival sets — in the PR 5 recording
+    /// format, so a real deployment's cadence replays offline.
+    record: Option<RecordedTimeline>,
     rng: Pcg64,
     /// Replay mode ([`Self::set_replay`]): the per-round arrival sets of a
     /// recorded event-engine timeline. Round r folds **exactly** these
@@ -117,6 +140,8 @@ impl ServerLoop {
             trigger_delta: cfg.trigger.delta,
             d: vec![0; n],
             pending: BTreeSet::new(),
+            live: vec![true; n],
+            record: None,
             rng,
             replay: None,
             stash: BTreeMap::new(),
@@ -135,25 +160,54 @@ impl ServerLoop {
         self.replay = Some(rounds);
     }
 
-    pub fn run(mut self) -> anyhow::Result<(RunRecorder, Vec<Vec<usize>>)> {
+    /// Capture the run's schedule (round fire times + arrival sets) into a
+    /// PR 5 [`RecordedTimeline`], so a production deployment's cadence can
+    /// be replayed offline ([`crate::admm::replay`]). `engine` names the
+    /// producer (the deploy server records as `"deploy"`).
+    pub fn set_record(&mut self, engine: &str, seed: u64) {
+        self.record = Some(RecordedTimeline::new(engine, self.n, seed));
+    }
+
+    pub fn run(mut self) -> anyhow::Result<ServerRunOutput> {
         let clock = Stopwatch::new();
         let mut recorder = RunRecorder::new();
 
         // ---- init: collect full-precision (x⁰, u⁰) from every node ----
         // (idempotent per node: the fault injector may duplicate InitFull)
         let mut inited = vec![false; self.n];
-        while inited.iter().any(|i| !i) {
-            match self.ep.recv()? {
+        while inited.iter().zip(&self.live).any(|(i, l)| *l && !i) {
+            let msg = match self.ep.recv_timeout(self.stall_timeout)? {
+                Some(m) => m,
+                None => anyhow::bail!(
+                    "init handshake stalled: inited {inited:?}, live {:?}",
+                    self.live
+                ),
+            };
+            match msg {
                 NodeToServer::InitFull { node, x0, u0 } => {
+                    anyhow::ensure!(
+                        x0.len() == self.m && u0.len() == self.m,
+                        "init frame dimension mismatch (expected {})",
+                        self.m
+                    );
                     self.xhat[node].reset(&x0);
                     self.uhat[node].reset(&u0);
                     inited[node] = true;
+                    self.live[node] = true;
                 }
+                // a node that dies during the handshake is simply not
+                // waited for; its banks keep the constructor state
+                NodeToServer::Leave { node } => self.live[node] = false,
+                NodeToServer::ShutdownAck { .. } => {}
                 NodeToServer::Update { .. } | NodeToServer::Skip { .. } => {
                     anyhow::bail!("update before init handshake completed")
                 }
             }
         }
+        anyhow::ensure!(
+            self.live.iter().any(|l| *l),
+            "every node left before the init handshake completed"
+        );
         // Non-star fan-in: seed the aggregator partials with the collected
         // init state and charge the aggregated full-precision forwards on
         // the aggregator links (n + g), mirroring the in-process engines.
@@ -200,10 +254,23 @@ impl ServerLoop {
             let dz_deq = cz.dequantized()?;
             // BTreeSet iteration is ascending, matching the wire contract.
             let included: Vec<u32> = self.pending.iter().map(|&i| i as u32).collect();
+            let last = r + 1 == iters;
+            if let Some(tl) = &mut self.record {
+                let arrivals: Vec<usize> = self.pending.iter().copied().collect();
+                // dispatches = who recomputes on this broadcast: the
+                // included *live* nodes — and nobody after the last round
+                let dispatches = if last {
+                    Vec::new()
+                } else {
+                    self.pending.iter().copied().filter(|i| self.live[*i]).collect()
+                };
+                tl.push_round(clock.elapsed_secs(), arrivals, dispatches);
+            }
             self.ep.broadcast(&ServerToNode::Consensus {
                 iter: r as u64,
                 included,
                 dz_wire: cz.wire,
+                last,
             })?;
             self.zhat.as_mut().unwrap().commit(&dz_deq);
 
@@ -237,20 +304,57 @@ impl ServerLoop {
             }
         }
 
-        // orderly shutdown: stop the nodes, then drain in-flight uplinks
-        self.ep.broadcast(&ServerToNode::Shutdown)?;
-        self.ep.drain(Duration::from_millis(100));
-        Ok((recorder, self.round_arrivals))
+        // Drain-then-close: the final broadcast carried `last`, so every
+        // live node applies it, acks, and exits. Waiting for the acks (and
+        // swallowing any update/skip that raced the last fire — charged on
+        // send, never folded) closes the uplink-accounting race exactly;
+        // the old Shutdown-broadcast + 100 ms sleepy drain only bounded it.
+        let mut waiting: BTreeSet<usize> =
+            (0..self.n).filter(|i| self.live[*i]).collect();
+        while !waiting.is_empty() {
+            match self.ep.recv_timeout(self.stall_timeout)? {
+                Some(NodeToServer::ShutdownAck { node }) => {
+                    waiting.remove(&node);
+                }
+                Some(NodeToServer::Leave { node }) => {
+                    self.live[node] = false;
+                    waiting.remove(&node);
+                }
+                Some(_) => {}
+                None => anyhow::bail!(
+                    "shutdown drain stalled: no ack from nodes {waiting:?}"
+                ),
+            }
+        }
+        Ok(ServerRunOutput {
+            recorder,
+            round_arrivals: self.round_arrivals,
+            timeline: self.record,
+        })
     }
 
     /// Wait until ≥ P arrivals and every τ−1-stale node has reported.
+    /// Both rules range over the **live** set only: a departed node is
+    /// neither waited for (its staleness can never clear) nor counted
+    /// against P (P shrinks to the surviving population, Zhou & Li's
+    /// partial-participation server in the extreme). If everyone leaves,
+    /// whatever already arrived fires one final round; an empty house with
+    /// an empty batch is a wedge and errors out rather than spinning.
     fn gather_batch(&mut self) -> anyhow::Result<()> {
         loop {
+            let live_count = self.live.iter().filter(|l| **l).count();
             let stale_ok = (0..self.n)
-                .filter(|i| self.d[*i] >= self.tau - 1)
+                .filter(|i| self.live[*i] && self.d[*i] >= self.tau - 1)
                 .all(|i| self.pending.contains(&i));
-            if self.pending.len() >= self.p_min && stale_ok {
+            let p_eff = self.p_min.min(live_count.max(1));
+            if !self.pending.is_empty() && self.pending.len() >= p_eff && stale_ok {
                 return Ok(());
+            }
+            if live_count == 0 {
+                if !self.pending.is_empty() {
+                    return Ok(());
+                }
+                anyhow::bail!("all nodes left the deployment; no arrivals to fire");
             }
             match self.ep.recv_timeout(self.stall_timeout)? {
                 Some(NodeToServer::Update { node, dx_wire, du_wire, .. }) => {
@@ -308,13 +412,23 @@ impl ServerLoop {
                     // report needs no aggregation.
                     self.pending.insert(node);
                 }
-                // Duplicated InitFull frames (fault injection) are ignored —
-                // the handshake already completed.
-                Some(NodeToServer::InitFull { .. }) => {}
+                // Mid-run InitFull from a *dead* slot is a rejoin handshake;
+                // from a live node it is a fault-injected duplicate of the
+                // init frame and is ignored (the handshake already
+                // completed), exactly as before churn existed.
+                Some(NodeToServer::InitFull { node, x0, u0 }) => {
+                    if !self.live[node] {
+                        self.rejoin(node, &x0, &u0)?;
+                    }
+                }
+                Some(NodeToServer::Leave { node }) => self.evict(node),
+                // acks only answer a `last` broadcast; none is in flight
+                Some(NodeToServer::ShutdownAck { .. }) => {}
                 None => anyhow::bail!(
-                    "server stalled: {} arrivals, staleness {:?}",
+                    "server stalled: {} arrivals, staleness {:?}, live {:?}",
                     self.pending.len(),
-                    self.d
+                    self.d,
+                    self.live
                 ),
             }
         }
@@ -345,6 +459,44 @@ impl ServerLoop {
         self.uhat[node].commit_frame(cu)?;
         self.acc.fold_frames(cx, cu)?;
         self.pending.insert(node);
+        Ok(())
+    }
+
+    /// Churn eviction: the node stops counting toward P and the τ−1 stale
+    /// rule. Its banks keep their last committed state (still part of the
+    /// consensus sum — ADMM's memory of a departed participant), and an
+    /// update of its that already folded this round stays folded; a frame
+    /// that was in flight on the dead connection was simply never received,
+    /// so nothing needs un-charging.
+    fn evict(&mut self, node: usize) {
+        self.live[node] = false;
+    }
+
+    /// Rejoin re-handshake: a fresh `InitFull` from a previously-evicted
+    /// slot resets the node's banks (fresh bank slot — the old quantized
+    /// trajectory is gone), washes the consensus sum, and re-bases the
+    /// node's downlink with a unicast `InitZ` carrying the current ẑ
+    /// estimate, so subsequent C(Δz) deltas apply against the right base.
+    fn rejoin(&mut self, node: usize, x0: &[f64], u0: &[f64]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.tier.is_none(),
+            "churn (rejoin) is only supported under the star fan-in"
+        );
+        anyhow::ensure!(
+            x0.len() == self.m && u0.len() == self.m,
+            "rejoin init frame dimension mismatch (expected {})",
+            self.m
+        );
+        self.xhat[node].reset(x0);
+        self.uhat[node].reset(u0);
+        self.live[node] = true;
+        self.d[node] = 0;
+        self.pending.remove(&node);
+        // bank contents changed out-of-band: rebuild s = Σ(x̂+û)
+        self.refresh_sum();
+        if let Some(z) = &self.zhat {
+            self.ep.send(node, ServerToNode::InitZ { z0: z.estimate().to_vec() })?;
+        }
         Ok(())
     }
 
@@ -388,6 +540,12 @@ impl ServerLoop {
                     }
                 }
                 Some(NodeToServer::InitFull { .. }) => {}
+                // replay drives a fixed in-process population: a departure
+                // would make the recorded arrival sets unsatisfiable
+                Some(NodeToServer::Leave { node }) => {
+                    anyhow::bail!("node {node} left during timeline replay")
+                }
+                Some(NodeToServer::ShutdownAck { .. }) => {}
                 None => {
                     let missing: Vec<usize> = target
                         .iter()

@@ -1,0 +1,333 @@
+//! Socket codec for the deployment protocol: `[u32 len][u8 kind][body]`,
+//! little-endian, `len` counting kind + body. Decoding is bounds-checked
+//! end to end (the `compress::wire::FrameReader` discipline): the length
+//! prefix is validated against [`MAX_FRAME_BYTES`] **before** any
+//! allocation, every field read checks the remaining budget, and a decoded
+//! frame must consume its body exactly — truncation, oversize, or trailing
+//! garbage is a clean `Err`, never a panic or an unbounded allocation.
+//!
+//! Byte-accounting contract (what makes `CommAccounting` falsifiable): the
+//! steady-state data frames are framed in **exactly**
+//! [`MSG_HEADER_BYTES`](crate::comm::message::MSG_HEADER_BYTES) bytes of
+//! overhead — `Update` is `4 len + 1 kind + 2 node + 1 flags + 4 dx_len`
+//! = 12 bytes before the two wire payloads, `Consensus` is `4 len + 1 kind
+//! + 1 flags + 4 round + 2 rsv` = 12 bytes before C(Δz) — so the socket
+//! byte counter equals the charged bits/8 *exactly* for every data frame.
+//! Only the handshake/init frames (which ship f64 but are charged at the
+//! paper's 32-bit init rate) and the tiny control frames differ, by the
+//! closed-form amounts in [`Frame::socket_extra_bytes`].
+
+use anyhow::{bail, ensure, Result};
+
+use crate::comm::message::{NodeToServer, ServerToNode};
+use crate::compress::wire::FrameReader;
+
+/// Protocol version carried in the `Hello` handshake; bumped on any layout
+/// change so a stale worker is rejected instead of misparsed.
+pub const PROTO_VERSION: u16 = 1;
+
+/// Hard ceiling on one frame's `len` field (256 MiB): a garbage or hostile
+/// length prefix is rejected before any buffer is sized from it.
+pub const MAX_FRAME_BYTES: u32 = 1 << 28;
+
+pub const KIND_HELLO: u8 = 1;
+pub const KIND_WELCOME: u8 = 2;
+pub const KIND_REJECT: u8 = 3;
+pub const KIND_INIT_FULL: u8 = 4;
+pub const KIND_INIT_Z: u8 = 5;
+pub const KIND_UPDATE: u8 = 6;
+pub const KIND_CONSENSUS: u8 = 7;
+pub const KIND_SKIP: u8 = 8;
+pub const KIND_SHUTDOWN: u8 = 9;
+pub const KIND_SHUTDOWN_ACK: u8 = 10;
+
+/// One protocol frame. Data frames mirror [`NodeToServer`]/[`ServerToNode`]
+/// minus what the socket makes redundant: no `seq` (TCP/UDS deliver
+/// in-order exactly-once per connection; the server stamps sequence
+/// numbers on receipt) and no per-broadcast inclusion *list* (each node's
+/// copy carries one `included` flag instead — the unicast pump knows its
+/// recipient).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Worker → server opener: protocol version, claimed node id, problem
+    /// dimension, and the config resume digest — both sides must be running
+    /// the same experiment, byte for byte.
+    Hello { proto: u16, node: u32, m: u32, digest: Vec<u8> },
+    /// Server → worker: handshake accepted, start the init upload.
+    Welcome,
+    /// Server → worker: handshake refused (version/digest/dimension/slot
+    /// mismatch); the connection closes after this frame.
+    Reject { reason: String },
+    InitFull { node: u32, x0: Vec<f64>, u0: Vec<f64> },
+    InitZ { z0: Vec<f64> },
+    Update { node: u16, dx_wire: Vec<u8>, du_wire: Vec<u8> },
+    Consensus { round: u32, included: bool, last: bool, dz_wire: Vec<u8> },
+    Skip { node: u16 },
+    Shutdown,
+    ShutdownAck { node: u16 },
+}
+
+/// `Consensus.flags` bit 0: the recipient's update was folded into this
+/// round (it may compute again).
+pub const FLAG_INCLUDED: u8 = 1;
+/// `Consensus.flags` bit 1: final round — apply, ack, exit.
+pub const FLAG_LAST: u8 = 2;
+
+impl Frame {
+    /// Encode as a complete wire frame, length prefix included.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        let kind = match self {
+            Frame::Hello { proto, node, m, digest } => {
+                body.extend_from_slice(&proto.to_le_bytes());
+                body.extend_from_slice(&node.to_le_bytes());
+                body.extend_from_slice(&m.to_le_bytes());
+                body.extend_from_slice(&(digest.len() as u16).to_le_bytes());
+                body.extend_from_slice(digest);
+                KIND_HELLO
+            }
+            Frame::Welcome => KIND_WELCOME,
+            Frame::Reject { reason } => {
+                let r = reason.as_bytes();
+                body.extend_from_slice(&(r.len() as u16).to_le_bytes());
+                body.extend_from_slice(r);
+                KIND_REJECT
+            }
+            Frame::InitFull { node, x0, u0 } => {
+                body.extend_from_slice(&node.to_le_bytes());
+                body.extend_from_slice(&(x0.len() as u32).to_le_bytes());
+                for v in x0.iter().chain(u0) {
+                    body.extend_from_slice(&v.to_le_bytes());
+                }
+                KIND_INIT_FULL
+            }
+            Frame::InitZ { z0 } => {
+                body.extend_from_slice(&(z0.len() as u32).to_le_bytes());
+                for v in z0 {
+                    body.extend_from_slice(&v.to_le_bytes());
+                }
+                KIND_INIT_Z
+            }
+            Frame::Update { node, dx_wire, du_wire } => {
+                body.extend_from_slice(&node.to_le_bytes());
+                body.push(0); // flags, reserved
+                body.extend_from_slice(&(dx_wire.len() as u32).to_le_bytes());
+                body.extend_from_slice(dx_wire);
+                body.extend_from_slice(du_wire);
+                KIND_UPDATE
+            }
+            Frame::Consensus { round, included, last, dz_wire } => {
+                let flags = (*included as u8) * FLAG_INCLUDED + (*last as u8) * FLAG_LAST;
+                body.push(flags);
+                body.extend_from_slice(&round.to_le_bytes());
+                body.extend_from_slice(&0u16.to_le_bytes()); // rsv: pads to 12
+                body.extend_from_slice(dz_wire);
+                KIND_CONSENSUS
+            }
+            Frame::Skip { node } => {
+                body.extend_from_slice(&node.to_le_bytes());
+                KIND_SKIP
+            }
+            Frame::Shutdown => KIND_SHUTDOWN,
+            Frame::ShutdownAck { node } => {
+                body.extend_from_slice(&node.to_le_bytes());
+                KIND_SHUTDOWN_ACK
+            }
+        };
+        let mut out = Vec::with_capacity(5 + body.len());
+        out.extend_from_slice(&(1 + body.len() as u32).to_le_bytes());
+        out.push(kind);
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode one frame from its kind byte + body (the transport has
+    /// already stripped and validated the length prefix). The body must be
+    /// consumed exactly: trailing bytes are corruption, not slack.
+    pub fn decode(kind: u8, body: &[u8]) -> Result<Frame> {
+        let mut r = FrameReader::new(body);
+        let frame = match kind {
+            KIND_HELLO => {
+                let proto = r.u16()?;
+                let node = r.u32()?;
+                let m = r.u32()?;
+                let dlen = r.u16()? as usize;
+                let digest = r.take_bytes(dlen)?.to_vec();
+                Frame::Hello { proto, node, m, digest }
+            }
+            KIND_WELCOME => Frame::Welcome,
+            KIND_REJECT => {
+                let rlen = r.u16()? as usize;
+                let reason = String::from_utf8_lossy(r.take_bytes(rlen)?).into_owned();
+                Frame::Reject { reason }
+            }
+            KIND_INIT_FULL => {
+                let node = r.u32()?;
+                let m = r.u32()? as usize;
+                // the length budget is already bounded by MAX_FRAME_BYTES;
+                // this check just makes the error precise
+                ensure!(body.len() == 8 + 16 * m, "init_full body/dim mismatch");
+                let mut x0 = Vec::with_capacity(m);
+                let mut u0 = Vec::with_capacity(m);
+                for _ in 0..m {
+                    x0.push(r.f64()?);
+                }
+                for _ in 0..m {
+                    u0.push(r.f64()?);
+                }
+                Frame::InitFull { node, x0, u0 }
+            }
+            KIND_INIT_Z => {
+                let m = r.u32()? as usize;
+                ensure!(body.len() == 4 + 8 * m, "init_z body/dim mismatch");
+                let mut z0 = Vec::with_capacity(m);
+                for _ in 0..m {
+                    z0.push(r.f64()?);
+                }
+                Frame::InitZ { z0 }
+            }
+            KIND_UPDATE => {
+                let node = r.u16()?;
+                let _flags = r.u8()?;
+                let dx_len = r.u32()? as usize;
+                let dx_wire = r.take_bytes(dx_len)?.to_vec();
+                let du_wire = r.rest().to_vec();
+                return Ok(Frame::Update { node, dx_wire, du_wire });
+            }
+            KIND_CONSENSUS => {
+                let flags = r.u8()?;
+                let round = r.u32()?;
+                let _rsv = r.u16()?;
+                let dz_wire = r.rest().to_vec();
+                return Ok(Frame::Consensus {
+                    round,
+                    included: flags & FLAG_INCLUDED != 0,
+                    last: flags & FLAG_LAST != 0,
+                    dz_wire,
+                });
+            }
+            KIND_SKIP => Frame::Skip { node: r.u16()? },
+            KIND_SHUTDOWN => Frame::Shutdown,
+            KIND_SHUTDOWN_ACK => Frame::ShutdownAck { node: r.u16()? },
+            k => bail!("unknown frame kind {k}"),
+        };
+        ensure!(r.remaining() == 0, "frame kind {kind} has trailing bytes");
+        Ok(frame)
+    }
+
+    /// Socket bytes this frame occupies beyond what eq. (20) charges for
+    /// the message it carries — the closed-form per-frame tolerance the
+    /// smoke reconciliation subtracts. Data frames (`Update`, `Consensus`)
+    /// are exactly 0: their 12 framing bytes *are* the charged
+    /// `MSG_HEADER_BYTES`. Init frames ship f64 on the socket but are
+    /// charged at the 32-bit init rate; control frames charge nothing.
+    pub fn socket_extra_bytes(&self) -> u64 {
+        let total = 5 + match self {
+            Frame::Hello { digest, .. } => 12 + digest.len() as u64,
+            Frame::Welcome | Frame::Shutdown => 0,
+            Frame::Reject { reason } => 2 + reason.len() as u64,
+            Frame::InitFull { x0, u0, .. } => 8 + 8 * (x0.len() + u0.len()) as u64,
+            Frame::InitZ { z0 } => 4 + 8 * z0.len() as u64,
+            Frame::Update { dx_wire, du_wire, .. } => {
+                7 + (dx_wire.len() + du_wire.len()) as u64
+            }
+            Frame::Consensus { dz_wire, .. } => 7 + dz_wire.len() as u64,
+            Frame::Skip { .. } | Frame::ShutdownAck { .. } => 2,
+        };
+        total - self.charged_bytes()
+    }
+
+    /// eq. (20) charge for this frame, in bytes (what the in-process
+    /// runtimes put on the books for the same message).
+    pub fn charged_bytes(&self) -> u64 {
+        match self {
+            Frame::InitFull { x0, u0, .. } => {
+                NodeToServer::InitFull { node: 0, x0: x0.clone(), u0: u0.clone() }.wire_bits()
+                    / 8
+            }
+            Frame::InitZ { z0 } => ServerToNode::InitZ { z0: z0.clone() }.wire_bits() / 8,
+            Frame::Update { dx_wire, du_wire, .. } => {
+                12 + (dx_wire.len() + du_wire.len()) as u64
+            }
+            Frame::Consensus { dz_wire, .. } => 12 + dz_wire.len() as u64,
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::message::MSG_HEADER_BYTES;
+
+    fn roundtrip(f: Frame) -> Frame {
+        let enc = f.encode();
+        let len = u32::from_le_bytes(enc[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, enc.len() - 4, "length prefix counts kind + body");
+        Frame::decode(enc[4], &enc[5..]).unwrap()
+    }
+
+    #[test]
+    fn all_kinds_roundtrip() {
+        let frames = vec![
+            Frame::Hello { proto: PROTO_VERSION, node: 3, m: 32, digest: vec![9; 16] },
+            Frame::Welcome,
+            Frame::Reject { reason: "digest mismatch".into() },
+            Frame::InitFull { node: 1, x0: vec![1.5, -2.0], u0: vec![0.0, 3.25] },
+            Frame::InitZ { z0: vec![0.5, 0.25, -1.0] },
+            Frame::Update { node: 7, dx_wire: vec![1, 2, 3], du_wire: vec![4, 5] },
+            Frame::Consensus { round: 42, included: true, last: false, dz_wire: vec![8; 6] },
+            Frame::Consensus { round: 0, included: false, last: true, dz_wire: vec![] },
+            Frame::Skip { node: 2 },
+            Frame::Shutdown,
+            Frame::ShutdownAck { node: 5 },
+        ];
+        for f in frames {
+            assert_eq!(roundtrip(f.clone()), f);
+        }
+    }
+
+    /// The falsifiability anchor: data frames occupy exactly their charged
+    /// bytes on the socket — 12 framing bytes == MSG_HEADER_BYTES.
+    #[test]
+    fn data_frames_have_zero_socket_overhead() {
+        let up = Frame::Update { node: 1, dx_wire: vec![0; 33], du_wire: vec![0; 17] };
+        assert_eq!(up.encode().len() as u64, up.charged_bytes());
+        assert_eq!(up.socket_extra_bytes(), 0);
+        assert_eq!(up.charged_bytes(), MSG_HEADER_BYTES + 33 + 17);
+        let down = Frame::Consensus { round: 9, included: true, last: true, dz_wire: vec![0; 40] };
+        assert_eq!(down.encode().len() as u64, down.charged_bytes());
+        assert_eq!(down.socket_extra_bytes(), 0);
+    }
+
+    /// Init frames ship f64 but charge the paper's 32-bit init rate: the
+    /// socket extra is the closed form the smoke tolerance uses.
+    #[test]
+    fn init_frame_extras_match_closed_form() {
+        let m = 11usize;
+        let f = Frame::InitFull { node: 0, x0: vec![0.0; m], u0: vec![0.0; m] };
+        assert_eq!(f.encode().len() as u64, f.charged_bytes() + f.socket_extra_bytes());
+        assert_eq!(f.socket_extra_bytes(), 1 + 8 * m as u64);
+        let z = Frame::InitZ { z0: vec![0.0; m] };
+        assert_eq!(z.encode().len() as u64, z.charged_bytes() + z.socket_extra_bytes());
+        assert_eq!(z.socket_extra_bytes(), 4 * m as u64 - 3);
+    }
+
+    #[test]
+    fn malformed_bodies_reject_cleanly() {
+        // truncated hello (digest length says 16, body has 4)
+        let mut enc = Frame::Hello { proto: 1, node: 0, m: 8, digest: vec![7; 16] }.encode();
+        enc.truncate(enc.len() - 12);
+        assert!(Frame::decode(enc[4], &enc[5..]).is_err());
+        // trailing garbage after a well-formed skip
+        let mut enc = Frame::Skip { node: 1 }.encode();
+        enc.push(0xEE);
+        assert!(Frame::decode(enc[4], &enc[5..]).is_err());
+        // dimension lying about the payload size
+        let mut enc = Frame::InitZ { z0: vec![0.0; 4] }.encode();
+        enc[5..9].copy_from_slice(&100u32.to_le_bytes());
+        assert!(Frame::decode(enc[4], &enc[5..]).is_err());
+        // unknown kind
+        assert!(Frame::decode(0xFF, &[]).is_err());
+    }
+}

@@ -1,0 +1,405 @@
+//! `qadmm serve`: the socket-facing server. One acceptor thread, one
+//! reader thread per connection, one writer pump per node slot, all
+//! bridging into the **unchanged** [`ServerLoop`] fold path via
+//! [`crate::comm::network::bridged`] mpsc endpoints — the deployment runs
+//! the very state machine the in-process runtimes run, with real bytes.
+//!
+//! Accounting discipline: eq. (20) bits are charged **where bytes move** —
+//! the reader charges the uplink when it decodes a data frame, the pump
+//! charges the downlink when a write completes — and the same two points
+//! tally raw socket bytes into the per-link [`super::LinkBytes`] books, so
+//! [`super::reconcile`] can hold the two ledgers to exact equality. A
+//! broadcast to a detached (departed) node is discarded by its pump and
+//! charges nothing: only realized transmissions exist.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use crate::comm::accounting::CommAccounting;
+use crate::comm::message::{NodeToServer, ServerToNode};
+use crate::comm::network::{self, SharedAccounting};
+use crate::config::ExperimentConfig;
+use crate::coordinator::server::ServerLoop;
+use crate::coordinator::SharedProblem;
+use crate::metrics::RunRecorder;
+use crate::problems::Problem;
+use crate::snapshot::codec::fnv1a64;
+use crate::snapshot::timeline::RecordedTimeline;
+use crate::topology::TopologyKind;
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+use super::frame::{Frame, PROTO_VERSION};
+use super::transport::{read_frame, Endpoint, Listener, ReadOutcome, Stream};
+use super::{new_books, Books, LinkBytes};
+
+pub struct ServeOptions {
+    /// A connected worker that goes silent for this long (half-open
+    /// socket, hung process) is evicted — the P/τ trigger never waits on
+    /// it again. Also bounds the server's own stall timeout.
+    pub idle_timeout: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { idle_timeout: Duration::from_secs(30) }
+    }
+}
+
+/// Everything one `serve` run produced, for reporting and verification.
+pub struct ServeReport {
+    pub recorder: RunRecorder,
+    /// The captured production schedule (always recorded: wall-clock round
+    /// times + arrival sets; the loadgen latency percentiles and the
+    /// capture→replay smoke both read it).
+    pub timeline: RecordedTimeline,
+    /// Per-link socket byte counters — one side of the reconciliation.
+    pub books: Vec<LinkBytes>,
+    /// The charged eq. (20) books — the other side.
+    pub accounting: CommAccounting,
+    pub wall_s: f64,
+}
+
+/// The 8-byte config digest carried in the `Hello` handshake: FNV-1a over
+/// the resume digest (the config JSON minus run-length fields), so a
+/// worker launched with a different experiment is rejected at connect
+/// time instead of corrupting the run.
+pub fn config_digest(cfg: &ExperimentConfig) -> Vec<u8> {
+    fnv1a64(cfg.resume_digest().as_bytes()).to_le_bytes().to_vec()
+}
+
+/// Shared state between the acceptor, readers, pumps, and `serve` itself.
+struct Hub {
+    n: usize,
+    m: usize,
+    digest: Vec<u8>,
+    up_tx: Sender<NodeToServer>,
+    accounting: SharedAccounting,
+    books: Books,
+    /// Per-node write half of the currently attached socket (None while
+    /// the node is detached — its pump discards traffic).
+    slots: Vec<Mutex<Option<Stream>>>,
+    /// Slot claim: a second connection for an attached node is rejected.
+    attached: Vec<AtomicBool>,
+    /// Per-node uplink sequence stamps. Global across reconnects: the
+    /// [`crate::comm::network::ServerEndpoint`] dedup compares against the
+    /// last seen seq, so a rejoining node must not restart at a value its
+    /// previous life just used.
+    seqs: Vec<AtomicU64>,
+    stop: AtomicBool,
+    idle: Duration,
+}
+
+/// Run a deployment server: bind `listen`, call `on_ready` with the
+/// resolved endpoint (TCP port 0 becomes the real port — this is where a
+/// harness spawns its workers), then drive [`ServerLoop`] to completion
+/// over the sockets and return the reconciled report.
+pub fn serve<F>(
+    cfg: &ExperimentConfig,
+    problem: Box<dyn Problem + Send>,
+    listen: &Endpoint,
+    opts: &ServeOptions,
+    on_ready: F,
+) -> Result<ServeReport>
+where
+    F: FnOnce(&Endpoint) -> Result<()>,
+{
+    cfg.validate()?;
+    ensure!(
+        cfg.topology == TopologyKind::Star,
+        "deploy serves the star fan-in only (aggregators are in-process engines)"
+    );
+    let n = problem.n_nodes();
+    let m = problem.dim();
+
+    let (listener, resolved) = Listener::bind(listen)?;
+    let (ep, up_tx, down_rxs) = network::bridged(n);
+    let accounting: SharedAccounting = Arc::new(Mutex::new(CommAccounting::new(n)));
+    let hub = Arc::new(Hub {
+        n,
+        m,
+        digest: config_digest(cfg),
+        up_tx,
+        accounting: accounting.clone(),
+        books: new_books(n),
+        slots: (0..n).map(|_| Mutex::new(None)).collect(),
+        attached: (0..n).map(|_| AtomicBool::new(false)).collect(),
+        seqs: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        stop: AtomicBool::new(false),
+        idle: opts.idle_timeout,
+    });
+
+    let mut pumps = Vec::with_capacity(n);
+    for (node, rx) in down_rxs.into_iter().enumerate() {
+        let hub = hub.clone();
+        pumps.push(
+            std::thread::Builder::new()
+                .name(format!("qadmm-pump-{node}"))
+                .spawn(move || pump_loop(&hub, node, rx))?,
+        );
+    }
+    let acceptor = {
+        let hub = hub.clone();
+        std::thread::Builder::new()
+            .name("qadmm-accept".into())
+            .spawn(move || accept_loop(&hub, listener))?
+    };
+
+    // Same state derivation as `run_threaded`: workers re-derive the
+    // identical x⁰ from the shared seed, the digest guarantees they can.
+    let mut root = Pcg64::seed_from_u64(cfg.seed ^ 0x7468_7265_6164);
+    let mut init_rng = root.fork(100);
+    let shared: SharedProblem = Arc::new(Mutex::new(problem));
+    let x0 = shared.lock().unwrap().init_x(&mut init_rng);
+    let clock = Stopwatch::new();
+    let mut srv =
+        ServerLoop::new(ep, shared, accounting.clone(), cfg, x0, m, root.fork(300));
+    srv.set_record("deploy", cfg.seed);
+    srv.stall_timeout = opts.idle_timeout.max(Duration::from_secs(5));
+
+    let run_res = match on_ready(&resolved) {
+        Ok(()) => srv.run(), // consumes srv; drops the endpoint → pumps drain
+        Err(e) => Err(e),
+    };
+
+    // teardown in every path: stop the socket side, then read the books
+    hub.stop.store(true, Ordering::SeqCst);
+    for slot in &hub.slots {
+        if let Some(s) = slot.lock().unwrap().as_ref() {
+            s.shutdown();
+        }
+    }
+    acceptor.join().map_err(|_| anyhow::anyhow!("acceptor thread panicked"))?;
+    for p in pumps {
+        p.join().map_err(|_| anyhow::anyhow!("pump thread panicked"))?;
+    }
+
+    let out = run_res?;
+    let books = hub.books.lock().unwrap().clone();
+    let accounting = accounting.lock().unwrap().clone();
+    Ok(ServeReport {
+        recorder: out.recorder,
+        timeline: out.timeline.expect("deploy server always records"),
+        books,
+        accounting,
+        wall_s: clock.elapsed_secs(),
+    })
+}
+
+fn accept_loop(hub: &Arc<Hub>, listener: Listener) {
+    let mut readers: Vec<JoinHandle<()>> = Vec::new();
+    while !hub.stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok(Some(stream)) => {
+                let hub = hub.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("qadmm-conn".into())
+                    .spawn(move || connection_loop(&hub, stream));
+                if let Ok(h) = spawned {
+                    readers.push(h);
+                }
+            }
+            // nothing pending (or a transient accept error): back off
+            Ok(None) | Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+        readers.retain(|h| !h.is_finished());
+    }
+    for h in readers {
+        let _ = h.join();
+    }
+    // listener drops here — removes the UDS socket file
+}
+
+fn connection_loop(hub: &Arc<Hub>, mut stream: Stream) {
+    let node = match handshake(hub, &mut stream) {
+        Ok(Some(node)) => node,
+        // rejected, garbage, or vanished before Hello: never on the books
+        Ok(None) | Err(_) => return,
+    };
+    let res = read_loop(hub, &mut stream, node);
+    // detach: the pump discards traffic for this node from now on
+    *hub.slots[node].lock().unwrap() = None;
+    hub.attached[node].store(false, Ordering::SeqCst);
+    match res {
+        // clean close (acked shutdown / server stop): no eviction needed
+        Ok(true) => {}
+        // EOF, idle half-open, I/O error, or a protocol violation after
+        // the handshake: synthesize the Leave the worker could not send
+        Ok(false) | Err(_) => {
+            let _ = hub.up_tx.send(NodeToServer::Leave { node });
+        }
+    }
+}
+
+/// Validate the `Hello` opener and claim the node's slot. `Ok(None)` means
+/// the connection was rejected (a `Reject` frame was attempted) — rejected
+/// connections never touch the per-link books.
+fn handshake(hub: &Arc<Hub>, stream: &mut Stream) -> Result<Option<usize>> {
+    let (frame, hello_bytes) = match read_frame(stream, &hub.stop, hub.idle)? {
+        ReadOutcome::Frame(f, b) => (f, b),
+        _ => return Ok(None),
+    };
+    let Frame::Hello { proto, node, m, digest } = frame else {
+        anyhow::bail!("first frame was not Hello")
+    };
+    let reason = if proto != PROTO_VERSION {
+        Some(format!("protocol version {proto} != {PROTO_VERSION}"))
+    } else if digest != hub.digest {
+        Some("config digest mismatch".to_string())
+    } else if m as usize != hub.m {
+        Some(format!("dimension {} != {m}", hub.m))
+    } else if node as usize >= hub.n {
+        Some(format!("node id {node} out of range (n={})", hub.n))
+    } else {
+        None
+    };
+    if let Some(reason) = reason {
+        let _ = stream.write_frame(&Frame::Reject { reason });
+        return Ok(None);
+    }
+    let node = node as usize;
+    if hub.attached[node].swap(true, Ordering::SeqCst) {
+        let _ = stream.write_frame(&Frame::Reject {
+            reason: format!("node {node} already attached"),
+        });
+        return Ok(None);
+    }
+    // accepted: this connection is on the books from its Hello onward
+    // (handshake frames are pure framing extra — charged 0 by eq. 20)
+    {
+        let mut b = hub.books.lock().unwrap();
+        b[node].up_total += hello_bytes;
+        b[node].up_extra += hello_bytes;
+    }
+    let wrote = stream.write_frame(&Frame::Welcome).and_then(|wb| {
+        let mut b = hub.books.lock().unwrap();
+        b[node].down_total += wb;
+        b[node].down_extra += wb;
+        stream.try_clone()
+    });
+    match wrote {
+        Ok(write_half) => {
+            *hub.slots[node].lock().unwrap() = Some(write_half);
+            Ok(Some(node))
+        }
+        Err(e) => {
+            hub.attached[node].store(false, Ordering::SeqCst);
+            Err(e)
+        }
+    }
+}
+
+/// Decode frames off one attached connection into [`NodeToServer`]
+/// messages. Returns `Ok(true)` for a clean close (shutdown ack seen, or
+/// the server stopped), `Ok(false)` when the peer died (EOF/idle).
+fn read_loop(hub: &Arc<Hub>, stream: &mut Stream, node: usize) -> Result<bool> {
+    let mut acked = false;
+    loop {
+        match read_frame(stream, &hub.stop, hub.idle)? {
+            ReadOutcome::Frame(f, bytes) => {
+                {
+                    let mut b = hub.books.lock().unwrap();
+                    b[node].up_total += bytes;
+                    b[node].up_extra += f.socket_extra_bytes();
+                }
+                let msg = match f {
+                    Frame::InitFull { node: fnode, x0, u0 } => {
+                        ensure!(fnode as usize == node, "InitFull for wrong node");
+                        NodeToServer::InitFull { node, x0, u0 }
+                    }
+                    Frame::Update { node: fnode, dx_wire, du_wire } => {
+                        ensure!(fnode as usize == node, "Update for wrong node");
+                        let seq = hub.seqs[node].fetch_add(1, Ordering::SeqCst);
+                        NodeToServer::Update { node, iter: 0, seq, dx_wire, du_wire }
+                    }
+                    Frame::Skip { node: fnode } => {
+                        ensure!(fnode as usize == node, "Skip for wrong node");
+                        let seq = hub.seqs[node].fetch_add(1, Ordering::SeqCst);
+                        NodeToServer::Skip { node, seq }
+                    }
+                    Frame::ShutdownAck { node: fnode } => {
+                        ensure!(fnode as usize == node, "ShutdownAck for wrong node");
+                        acked = true;
+                        NodeToServer::ShutdownAck { node }
+                    }
+                    other => anyhow::bail!("unexpected frame from worker: {other:?}"),
+                };
+                // eq. (20) charge at the byte-moving point; control frames
+                // (skip/ack) stay off the books, like every other runtime
+                if matches!(
+                    msg,
+                    NodeToServer::Update { .. } | NodeToServer::InitFull { .. }
+                ) {
+                    let bits = msg.wire_bits();
+                    hub.accounting.lock().unwrap().record_uplink(node, bits);
+                }
+                if hub.up_tx.send(msg).is_err() {
+                    return Ok(true); // server loop finished first
+                }
+            }
+            ReadOutcome::Eof => return Ok(acked),
+            ReadOutcome::IdleTimeout => return Ok(false),
+            ReadOutcome::Stopped => return Ok(true),
+        }
+    }
+}
+
+/// Per-node downlink pump: owns the node's `Receiver` for the whole run
+/// (across attach/detach cycles), translating [`ServerToNode`] into wire
+/// frames. Detached slot → the message is discarded and **nothing** is
+/// charged: eq. (20) counts realized transmissions only.
+fn pump_loop(hub: &Arc<Hub>, node: usize, rx: Receiver<ServerToNode>) {
+    loop {
+        let msg = match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(m) => m,
+            Err(RecvTimeoutError::Timeout) => {
+                if hub.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                continue;
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        };
+        let charged = matches!(
+            msg,
+            ServerToNode::Consensus { .. } | ServerToNode::InitZ { .. }
+        );
+        let bits = msg.wire_bits();
+        let frame = match msg {
+            ServerToNode::Consensus { iter, included, dz_wire, last } => Frame::Consensus {
+                round: iter as u32,
+                // per-recipient flag instead of the id list: the pump is a
+                // unicast writer, it knows who it serves
+                included: included.binary_search(&(node as u32)).is_ok(),
+                last,
+                dz_wire,
+            },
+            ServerToNode::InitZ { z0 } => Frame::InitZ { z0 },
+            ServerToNode::Shutdown => Frame::Shutdown,
+        };
+        let mut slot = hub.slots[node].lock().unwrap();
+        let Some(s) = slot.as_mut() else { continue };
+        match s.write_frame(&frame) {
+            Ok(bytes) => {
+                drop(slot);
+                if charged {
+                    hub.accounting.lock().unwrap().record_downlink(node, bits);
+                }
+                let mut b = hub.books.lock().unwrap();
+                b[node].down_total += bytes;
+                b[node].down_extra += frame.socket_extra_bytes();
+            }
+            Err(_) => {
+                // write half died first: detach and evict
+                *slot = None;
+                drop(slot);
+                let _ = hub.up_tx.send(NodeToServer::Leave { node });
+            }
+        }
+    }
+}

@@ -1,0 +1,360 @@
+//! Socket transport for the deployment: one abstraction over TCP and
+//! Unix-domain sockets (std-only — no async runtime; the server is
+//! thread-per-connection, which is the right shape for hundreds of
+//! workers, not millions of sockets), plus the framed read path with the
+//! interruptible/idle semantics the server's liveness story needs:
+//!
+//! - reads poll in short slices so a reader thread notices the stop flag
+//!   promptly instead of blocking forever on a silent peer;
+//! - a peer that goes quiet for longer than the idle timeout is reported
+//!   as [`ReadOutcome::IdleTimeout`] — the half-open-connection case TCP
+//!   keepalives are too slow for — so the server can evict it and the
+//!   P/τ trigger never wedges on a dead worker;
+//! - a clean EOF **between** frames is [`ReadOutcome::Eof`] (orderly
+//!   close); an EOF or garbage **inside** a frame is an `Err`.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::frame::{Frame, MAX_FRAME_BYTES};
+
+/// How long one blocking read slice lasts before the loop re-checks the
+/// stop flag and the idle budget.
+const POLL_SLICE: Duration = Duration::from_millis(100);
+
+/// A deployment endpoint address: `tcp:HOST:PORT` or `uds:/path/to.sock`
+/// (a bare path containing `/` is accepted as UDS for convenience).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    Tcp(String),
+    Uds(PathBuf),
+}
+
+impl Endpoint {
+    pub fn parse(s: &str) -> Result<Endpoint> {
+        if let Some(addr) = s.strip_prefix("tcp:") {
+            ensure!(addr.contains(':'), "tcp endpoint needs HOST:PORT, got '{addr}'");
+            Ok(Endpoint::Tcp(addr.to_string()))
+        } else if let Some(path) = s.strip_prefix("uds:") {
+            Ok(Endpoint::Uds(PathBuf::from(path)))
+        } else if s.contains('/') {
+            Ok(Endpoint::Uds(PathBuf::from(s)))
+        } else {
+            bail!("endpoint '{s}' is neither tcp:HOST:PORT nor uds:/path")
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Endpoint::Tcp(a) => format!("tcp:{a}"),
+            Endpoint::Uds(p) => format!("uds:{}", p.display()),
+        }
+    }
+}
+
+/// A connected stream over either transport. Cloning duplicates the OS
+/// handle (reader thread + writer pump can own halves independently).
+pub enum Stream {
+    Tcp(TcpStream),
+    Uds(UnixStream),
+}
+
+impl Stream {
+    pub fn connect(ep: &Endpoint) -> Result<Stream> {
+        Ok(match ep {
+            Endpoint::Tcp(addr) => {
+                Stream::Tcp(TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?)
+            }
+            Endpoint::Uds(path) => Stream::Uds(
+                UnixStream::connect(path)
+                    .with_context(|| format!("connect {}", path.display()))?,
+            ),
+        })
+    }
+
+    pub fn try_clone(&self) -> Result<Stream> {
+        Ok(match self {
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+            Stream::Uds(s) => Stream::Uds(s.try_clone()?),
+        })
+    }
+
+    pub fn set_read_timeout(&self, t: Option<Duration>) -> Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(t)?,
+            Stream::Uds(s) => s.set_read_timeout(t)?,
+        }
+        Ok(())
+    }
+
+    /// Disable Nagle on TCP (frames are latency-sensitive and small); a
+    /// no-op on UDS.
+    pub fn tune(&self) {
+        if let Stream::Tcp(s) = self {
+            let _ = s.set_nodelay(true);
+        }
+    }
+
+    /// Best-effort full shutdown, unblocking any thread mid-read.
+    pub fn shutdown(&self) {
+        match self {
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            Stream::Uds(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+
+    fn read_impl(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Uds(s) => s.read(buf),
+        }
+    }
+
+    /// Write one encoded frame and flush; returns the bytes put on the
+    /// socket (the pump's byte-counter input).
+    pub fn write_frame(&mut self, frame: &Frame) -> Result<u64> {
+        let bytes = frame.encode();
+        match self {
+            Stream::Tcp(s) => {
+                s.write_all(&bytes)?;
+                s.flush()?;
+            }
+            Stream::Uds(s) => {
+                s.write_all(&bytes)?;
+                s.flush()?;
+            }
+        }
+        Ok(bytes.len() as u64)
+    }
+}
+
+/// What one framed-read attempt produced.
+pub enum ReadOutcome {
+    /// A complete, decoded frame plus its total socket footprint in bytes
+    /// (length prefix included) — the reader's byte-counter input.
+    Frame(Frame, u64),
+    /// Orderly close: EOF on a frame boundary.
+    Eof,
+    /// The peer went silent past the idle budget (half-open connection).
+    IdleTimeout,
+    /// The stop flag was raised mid-wait; nothing was consumed mid-frame.
+    Stopped,
+}
+
+/// Read exactly `buf.len()` bytes, polling in [`POLL_SLICE`] slices.
+/// `started` is Some once part of a frame has been consumed — then EOF and
+/// stop both become hard errors (a frame must never be torn). Returns
+/// `Ok(None)` for eof-at-boundary / stop / idle, distinguished by the
+/// caller from how much was read.
+fn read_full(
+    s: &mut Stream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    idle: Duration,
+    mid_frame: bool,
+) -> Result<Option<ReadOutcome>> {
+    let mut got = 0usize;
+    let mut quiet_since = Instant::now();
+    while got < buf.len() {
+        match s.read_impl(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 && !mid_frame {
+                    return Ok(Some(ReadOutcome::Eof));
+                }
+                bail!("connection closed mid-frame ({got} of {} bytes)", buf.len());
+            }
+            Ok(n) => {
+                got += n;
+                quiet_since = Instant::now();
+            }
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Relaxed) && got == 0 && !mid_frame {
+                    return Ok(Some(ReadOutcome::Stopped));
+                }
+                if quiet_since.elapsed() >= idle {
+                    if got == 0 && !mid_frame {
+                        return Ok(Some(ReadOutcome::IdleTimeout));
+                    }
+                    bail!("peer idle mid-frame ({got} of {} bytes)", buf.len());
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(None)
+}
+
+/// Read one `[u32 len][u8 kind][body]` frame. The length prefix is
+/// validated against [`MAX_FRAME_BYTES`] before the body buffer is sized —
+/// a garbage prefix costs at most 4 bytes of reading, never an allocation.
+/// The stream must have a read timeout set (≤ [`POLL_SLICE`] granularity
+/// is applied by the caller via `set_read_timeout`).
+pub fn read_frame(s: &mut Stream, stop: &AtomicBool, idle: Duration) -> Result<ReadOutcome> {
+    let mut len_buf = [0u8; 4];
+    if let Some(out) = read_full(s, &mut len_buf, stop, idle, false)? {
+        return Ok(out);
+    }
+    let len = u32::from_le_bytes(len_buf);
+    ensure!(
+        (1..=MAX_FRAME_BYTES).contains(&len),
+        "frame length {len} outside (0, {MAX_FRAME_BYTES}]"
+    );
+    let mut body = vec![0u8; len as usize];
+    if read_full(s, &mut body, stop, idle, true)?.is_some() {
+        unreachable!("mid-frame reads error instead of yielding an outcome");
+    }
+    let frame = Frame::decode(body[0], &body[1..])?;
+    Ok(ReadOutcome::Frame(frame, 4 + len as u64))
+}
+
+/// Blocking frame read for the worker side: no stop flag, a generous idle
+/// budget (the server may legitimately be quiet while other nodes hold up
+/// a round).
+pub fn read_frame_blocking(s: &mut Stream, idle: Duration) -> Result<ReadOutcome> {
+    static NEVER: AtomicBool = AtomicBool::new(false);
+    read_frame(s, &NEVER, idle)
+}
+
+/// A bound listener over either transport, in non-blocking accept mode so
+/// the acceptor thread can poll a stop flag.
+pub enum Listener {
+    Tcp(TcpListener),
+    Uds(UnixListener, PathBuf),
+}
+
+impl Listener {
+    /// Bind and report the *resolved* endpoint (TCP port 0 resolves to the
+    /// kernel-assigned port — what the loadgen/smoke connect back to).
+    pub fn bind(ep: &Endpoint) -> Result<(Listener, Endpoint)> {
+        match ep {
+            Endpoint::Tcp(addr) => {
+                let l = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+                let local = l.local_addr()?;
+                l.set_nonblocking(true)?;
+                Ok((Listener::Tcp(l), Endpoint::Tcp(local.to_string())))
+            }
+            Endpoint::Uds(path) => {
+                // a stale socket file from a crashed server blocks rebinding
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)
+                    .with_context(|| format!("bind {}", path.display()))?;
+                l.set_nonblocking(true)?;
+                Ok((Listener::Uds(l, path.clone()), Endpoint::Uds(path.clone())))
+            }
+        }
+    }
+
+    /// Non-blocking accept: `Ok(None)` when nothing is pending.
+    pub fn accept(&self) -> Result<Option<Stream>> {
+        let res = match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            Listener::Uds(l, _) => l.accept().map(|(s, _)| Stream::Uds(s)),
+        };
+        match res {
+            Ok(s) => {
+                s.tune();
+                // per-connection reads poll in short slices
+                s.set_read_timeout(Some(POLL_SLICE))?;
+                Ok(Some(s))
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Uds(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair() -> (Stream, Stream) {
+        let (a, b) = UnixStream::pair().unwrap();
+        (Stream::Uds(a), Stream::Uds(b))
+    }
+
+    #[test]
+    fn endpoint_parsing() {
+        assert_eq!(
+            Endpoint::parse("tcp:127.0.0.1:4700").unwrap(),
+            Endpoint::Tcp("127.0.0.1:4700".into())
+        );
+        assert_eq!(
+            Endpoint::parse("uds:/tmp/q.sock").unwrap(),
+            Endpoint::Uds(PathBuf::from("/tmp/q.sock"))
+        );
+        assert_eq!(
+            Endpoint::parse("/tmp/q.sock").unwrap(),
+            Endpoint::Uds(PathBuf::from("/tmp/q.sock"))
+        );
+        assert!(Endpoint::parse("tcp:noport").is_err());
+        assert!(Endpoint::parse("gibberish").is_err());
+    }
+
+    /// One frame over a real UDS pair: written bytes == read bytes ==
+    /// encoded length, and the frame survives intact.
+    #[test]
+    fn frame_roundtrip_over_uds() {
+        let (mut a, mut b) = pair();
+        b.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let f = Frame::Update { node: 3, dx_wire: vec![1, 2, 3, 4], du_wire: vec![5, 6] };
+        let wrote = a.write_frame(&f).unwrap();
+        let stop = AtomicBool::new(false);
+        match read_frame(&mut b, &stop, Duration::from_secs(1)).unwrap() {
+            ReadOutcome::Frame(got, bytes) => {
+                assert_eq!(got, f);
+                assert_eq!(bytes, wrote);
+            }
+            _ => panic!("expected a frame"),
+        }
+        // orderly close → Eof at the boundary
+        drop(a);
+        match read_frame(&mut b, &stop, Duration::from_secs(1)).unwrap() {
+            ReadOutcome::Eof => {}
+            _ => panic!("expected eof"),
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        let (mut a, mut b) = pair();
+        b.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        if let Stream::Uds(s) = &mut a {
+            s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        }
+        let stop = AtomicBool::new(false);
+        let err = read_frame(&mut b, &stop, Duration::from_secs(1)).unwrap_err();
+        assert!(err.to_string().contains("outside"), "{err}");
+    }
+
+    #[test]
+    fn idle_peer_times_out_cleanly() {
+        let (_a, mut b) = pair();
+        b.set_read_timeout(Some(Duration::from_millis(10))).unwrap();
+        let stop = AtomicBool::new(false);
+        match read_frame(&mut b, &stop, Duration::from_millis(30)).unwrap() {
+            ReadOutcome::IdleTimeout => {}
+            _ => panic!("expected idle timeout"),
+        }
+    }
+}

@@ -1,0 +1,243 @@
+//! `qadmm worker`: the node side of the deployment. A single-threaded
+//! socket client running the same local state machine as
+//! [`crate::coordinator::node::NodeWorker`] — handshake, full-precision
+//! init upload, then the Fig. 2 cadence (compute on inclusion, one update
+//! in flight) with the event-trigger dead-band and adaptive quantizer
+//! intact. The worker re-derives x⁰ and its RNG stream from the shared
+//! config seed, exactly as `run_threaded` does — the handshake digest is
+//! what makes that sound.
+
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::admm::trigger::{inf_norm, TriggerState};
+use crate::compress::error_feedback::EstimateTracker;
+use crate::compress::{wire, Compressor};
+use crate::config::ExperimentConfig;
+use crate::problems::Problem;
+use crate::util::rng::Pcg64;
+
+use super::frame::{Frame, PROTO_VERSION};
+use super::server::config_digest;
+use super::transport::{read_frame_blocking, Endpoint, ReadOutcome, Stream};
+
+pub struct WorkerOptions {
+    pub node: usize,
+    /// How long the server may legitimately stay quiet (other nodes
+    /// holding up a round) before this worker gives up.
+    pub idle_timeout: Duration,
+    /// Churn injection for tests: sever the connection abruptly — no ack,
+    /// no goodbye — after sending this many updates.
+    pub die_after_updates: Option<u64>,
+}
+
+impl WorkerOptions {
+    pub fn new(node: usize) -> Self {
+        Self { node, idle_timeout: Duration::from_secs(60), die_after_updates: None }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct WorkerReport {
+    pub updates_sent: u64,
+    pub skips_sent: u64,
+    /// Consensus broadcasts applied (post-init rounds this worker saw).
+    pub rounds_applied: u64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    /// Exited via the last-flagged broadcast + ack (orderly drain) rather
+    /// than an injected death.
+    pub acked_shutdown: bool,
+}
+
+/// Connect, handshake, and run the node loop to completion.
+pub fn run_worker(
+    cfg: &ExperimentConfig,
+    mut problem: Box<dyn Problem + Send>,
+    connect: &Endpoint,
+    opts: &WorkerOptions,
+) -> Result<WorkerReport> {
+    cfg.validate()?;
+    let n = problem.n_nodes();
+    let m = problem.dim();
+    ensure!(opts.node < n, "node id {} out of range (n={n})", opts.node);
+    ensure!(opts.node <= u16::MAX as usize, "deploy node ids are u16 on the wire");
+
+    // identical derivation to run_threaded / serve: same x⁰, same per-node
+    // RNG stream, so a deployment is the threaded run with real sockets
+    let mut root = Pcg64::seed_from_u64(cfg.seed ^ 0x7468_7265_6164);
+    let mut init_rng = root.fork(100);
+    let x0 = problem.init_x(&mut init_rng);
+    let mut rng = root.fork(200 + opts.node as u64);
+
+    let mut stream = Stream::connect(connect)?;
+    stream.tune();
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    let mut report = WorkerReport::default();
+
+    report.bytes_up += stream.write_frame(&Frame::Hello {
+        proto: PROTO_VERSION,
+        node: opts.node as u32,
+        m: m as u32,
+        digest: config_digest(cfg),
+    })?;
+    match read_frame_blocking(&mut stream, opts.idle_timeout)? {
+        ReadOutcome::Frame(Frame::Welcome, b) => report.bytes_down += b,
+        ReadOutcome::Frame(Frame::Reject { reason }, _) => {
+            bail!("server rejected handshake: {reason}")
+        }
+        ReadOutcome::Frame(f, _) => bail!("expected Welcome, got {f:?}"),
+        _ => bail!("server closed the connection during the handshake"),
+    }
+
+    let ef = cfg.error_feedback;
+    let mut x = x0.clone();
+    let mut u = vec![0.0; m];
+    let mut xhat = EstimateTracker::new(x0.clone(), ef);
+    let mut uhat = EstimateTracker::new(vec![0.0; m], ef);
+    let mut zhat: Option<EstimateTracker> = None;
+    let mut trigger = TriggerState::new(cfg, 1);
+    let compressor = cfg.compressor.build();
+
+    report.bytes_up += stream.write_frame(&Frame::InitFull {
+        node: opts.node as u32,
+        x0: x.clone(),
+        u0: u.clone(),
+    })?;
+
+    loop {
+        match read_frame_blocking(&mut stream, opts.idle_timeout)? {
+            ReadOutcome::Frame(Frame::InitZ { z0 }, b) => {
+                report.bytes_down += b;
+                ensure!(z0.len() == m, "InitZ dimension mismatch");
+                // fresh downlink basis (first join *and* rejoin): all
+                // subsequent C(Δz) deltas apply on this estimate
+                zhat = Some(EstimateTracker::new(z0, ef));
+                if !compute_and_send(
+                    &mut stream,
+                    problem.as_mut(),
+                    opts,
+                    &mut rng,
+                    &mut x,
+                    &mut u,
+                    &mut xhat,
+                    &mut uhat,
+                    zhat.as_ref().unwrap(),
+                    &mut trigger,
+                    compressor.as_ref(),
+                    &mut report,
+                )? {
+                    return Ok(report); // injected death: drop the socket
+                }
+            }
+            ReadOutcome::Frame(Frame::Consensus { included, last, dz_wire, .. }, b) => {
+                report.bytes_down += b;
+                if let Some(zh) = zhat.as_mut() {
+                    let dz = wire::decode(&dz_wire, m)?;
+                    zh.commit(&dz);
+                    report.rounds_applied += 1;
+                } // else: pre-rebase broadcast raced our rejoin InitZ — drop
+                if last {
+                    report.bytes_up += stream
+                        .write_frame(&Frame::ShutdownAck { node: opts.node as u16 })?;
+                    report.acked_shutdown = true;
+                    return Ok(report);
+                }
+                let alive = match zhat.as_ref() {
+                    Some(zh) if included => compute_and_send(
+                        &mut stream,
+                        problem.as_mut(),
+                        opts,
+                        &mut rng,
+                        &mut x,
+                        &mut u,
+                        &mut xhat,
+                        &mut uhat,
+                        zh,
+                        &mut trigger,
+                        compressor.as_ref(),
+                        &mut report,
+                    )?,
+                    _ => true,
+                };
+                if !alive {
+                    return Ok(report);
+                }
+            }
+            ReadOutcome::Frame(Frame::Shutdown, _) => return Ok(report),
+            ReadOutcome::Frame(f, _) => bail!("unexpected frame from server: {f:?}"),
+            ReadOutcome::Eof => bail!("server closed the connection mid-run"),
+            ReadOutcome::IdleTimeout => {
+                bail!("server idle past {:?}", opts.idle_timeout)
+            }
+            ReadOutcome::Stopped => unreachable!("worker reads have no stop flag"),
+        }
+    }
+}
+
+/// One local update + dispatch, mirroring `NodeWorker::compute_and_send`
+/// (same trigger/EF/commit order, so the quantized trajectory matches the
+/// in-process runtimes given the same arrival schedule). Returns false
+/// when an injected death severed the connection.
+#[allow(clippy::too_many_arguments)]
+fn compute_and_send(
+    stream: &mut Stream,
+    problem: &mut (dyn Problem + Send),
+    opts: &WorkerOptions,
+    rng: &mut Pcg64,
+    x: &mut Vec<f64>,
+    u: &mut Vec<f64>,
+    xhat: &mut EstimateTracker,
+    uhat: &mut EstimateTracker,
+    zhat: &EstimateTracker,
+    trigger: &mut TriggerState,
+    compressor: &dyn Compressor,
+    report: &mut WorkerReport,
+) -> Result<bool> {
+    let m = x.len();
+    let z = zhat.estimate().to_vec();
+    let (x_new, _loss) = problem.local_update(opts.node, &z, u, x, rng)?;
+    for j in 0..m {
+        u[j] += x_new[j] - z[j];
+    }
+    *x = x_new;
+    let mut dx = Vec::with_capacity(m);
+    let mut du = Vec::with_capacity(m);
+    xhat.peek_delta_into(x, &mut dx);
+    uhat.peek_delta_into(u, &mut du);
+    if trigger.enabled() {
+        let norm = inf_norm(&dx).max(inf_norm(&du));
+        trigger.observe(0, norm);
+        if !trigger.should_send(norm) {
+            trigger.note_skip();
+            report.bytes_up +=
+                stream.write_frame(&Frame::Skip { node: opts.node as u16 })?;
+            report.skips_sent += 1;
+            return Ok(true);
+        }
+    }
+    xhat.note_sent(x);
+    uhat.note_sent(u);
+    let (cx, cu) = match trigger.compressor_for(0) {
+        Some(q) => (q.compress(&dx, rng), q.compress(&du, rng)),
+        None => (compressor.compress(&dx, rng), compressor.compress(&du, rng)),
+    };
+    xhat.commit_frame(&cx)?;
+    uhat.commit_frame(&cu)?;
+    report.bytes_up += stream.write_frame(&Frame::Update {
+        node: opts.node as u16,
+        dx_wire: cx.wire,
+        du_wire: cu.wire,
+    })?;
+    report.updates_sent += 1;
+    if let Some(limit) = opts.die_after_updates {
+        if report.updates_sent >= limit {
+            // abrupt churn: no ack, no goodbye — the server's reader sees
+            // EOF and synthesizes the Leave
+            stream.shutdown();
+            return Ok(false);
+        }
+    }
+    Ok(true)
+}

@@ -1,0 +1,281 @@
+//! Deploy smoke: the end-to-end falsifiability check behind the CI
+//! `deploy-smoke` job. For each transport (Unix-domain socket, TCP on
+//! localhost) it runs a real `serve` with a fleet of workers — OS
+//! processes via the `qadmm worker` subcommand in CI, in-process threads
+//! under `--threads`/cargo tests — solves the ci LASSO instance to a
+//! target suboptimality, and then asserts the three claims the deploy
+//! runtime makes:
+//!
+//! 1. **byte reconciliation** — per link and direction, raw socket bytes
+//!    equal charged eq. (20) bits/8 plus the closed-form framing extras,
+//!    *exactly* ([`crate::deploy::reconcile`]);
+//! 2. **capture→replay** — the timeline the server recorded replays
+//!    offline through [`crate::admm::replay`] with identical per-round
+//!    arrival sets and no cadence violation;
+//! 3. **convergence** — the deployment actually solves the problem (final
+//!    eq. (19) suboptimality below the target), so 1–2 are claims about a
+//!    working run, not a stalled one.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::admm::replay::replay_timeline;
+use crate::admm::runner::trial_seed;
+use crate::admm::sim::TrialRngs;
+use crate::config::{presets, Backend, ExperimentConfig, ProblemKind};
+use crate::deploy::server::{serve, ServeOptions, ServeReport};
+use crate::deploy::transport::Endpoint;
+use crate::deploy::worker::{run_worker, WorkerOptions, WorkerReport};
+use crate::problems::lasso::{LassoConfig, LassoProblem};
+use crate::problems::Problem;
+
+pub struct DeploySmokeOptions {
+    /// Fleet size (worker count == LASSO node count).
+    pub nodes: usize,
+    pub iters: usize,
+    /// Final eq. (19) suboptimality the deployment must reach.
+    pub target: f64,
+    /// `Some(exe)`: spawn one OS process per worker via `exe worker …`
+    /// (the CI shape). `None`: in-process worker threads.
+    pub worker_exe: Option<PathBuf>,
+}
+
+impl Default for DeploySmokeOptions {
+    fn default() -> Self {
+        Self { nodes: 8, iters: 150, target: 1e-3, worker_exe: None }
+    }
+}
+
+/// The smoke configuration: the ci LASSO preset scaled to the requested
+/// fleet. Workers launched as processes rebuild this from
+/// `--preset ci-lasso --nodes N` — `iters` is deliberately excluded from
+/// the handshake digest (run length is the server's business; the `last`
+/// flag tells workers when to stop).
+pub fn smoke_cfg(nodes: usize, iters: usize) -> ExperimentConfig {
+    let mut cfg = presets::ci_lasso();
+    cfg.name = "deploy-smoke".into();
+    cfg.iters = iters;
+    if let ProblemKind::Lasso { n, .. } = &mut cfg.problem {
+        *n = nodes;
+    }
+    cfg
+}
+
+/// Build the problem a deploy endpoint runs: native LASSO, seeded exactly
+/// like trial 0 of the in-process engines so server, workers, and the
+/// offline replay all regenerate identical data from the config alone.
+pub fn make_native_problem(cfg: &ExperimentConfig) -> Result<Box<dyn Problem + Send>> {
+    ensure!(
+        cfg.backend == Backend::Native,
+        "deploy endpoints rebuild the problem from the config; that requires \
+         the native backend (HLO execs are not shareable across processes)"
+    );
+    let ProblemKind::Lasso { m, h, n, rho, theta } = cfg.problem.clone() else {
+        bail!("deploy currently serves native LASSO (NN problems need the PJRT service)")
+    };
+    let mut rngs = TrialRngs::new(trial_seed(cfg.seed, 0));
+    let p = LassoProblem::generate(LassoConfig { m, h, n, rho, theta }, &mut rngs.data)?;
+    Ok(Box::new(p))
+}
+
+/// Run the full smoke over both transports.
+pub fn run(opts: &DeploySmokeOptions) -> Result<()> {
+    let sock = std::env::temp_dir().join(format!("qadmm-smoke-{}.sock", std::process::id()));
+    let transports = [
+        Endpoint::Uds(sock),
+        Endpoint::Tcp("127.0.0.1:0".into()), // port 0: kernel-assigned
+    ];
+    for listen in &transports {
+        println!("== deploy smoke over {} ==", listen.label());
+        run_one(listen, opts)?;
+    }
+    println!("deploy smoke OK: both transports reconciled and replayed");
+    Ok(())
+}
+
+fn run_one(listen: &Endpoint, opts: &DeploySmokeOptions) -> Result<()> {
+    let cfg = smoke_cfg(opts.nodes, opts.iters);
+    let report = match &opts.worker_exe {
+        Some(exe) => serve_with_processes(&cfg, listen, exe, opts.nodes)?,
+        None => serve_with_threads(&cfg, listen, opts.nodes, &ServeOptions::default())?,
+    };
+
+    // (1) exact byte reconciliation, per link, both directions
+    crate::deploy::reconcile(&report.books, &report.accounting)
+        .context("socket byte counters drifted from the charged eq. (20) bits")?;
+    let (up, down): (u64, u64) = report
+        .books
+        .iter()
+        .fold((0, 0), |(u, d), b| (u + b.up_total, d + b.down_total));
+
+    // (2) capture -> replay with identical arrival sets
+    let rp = replay_timeline(&cfg, make_native_problem(&cfg)?, &report.timeline)
+        .context("recorded deploy timeline did not replay")?;
+    let recorded: Vec<&[usize]> =
+        report.timeline.rounds.iter().map(|r| r.arrivals.as_slice()).collect();
+    let realized: Vec<&[usize]> =
+        rp.round_arrivals.iter().map(|a| a.as_slice()).collect();
+    ensure!(
+        recorded == realized,
+        "replay arrival sets diverged from the recording"
+    );
+
+    // (3) the run converged
+    let last = report
+        .recorder
+        .records
+        .last()
+        .ok_or_else(|| anyhow::anyhow!("server recorded no iterations"))?;
+    ensure!(
+        last.accuracy <= opts.target,
+        "deployment finished at suboptimality {:.3e} > target {:.1e}",
+        last.accuracy,
+        opts.target
+    );
+
+    println!(
+        "   {} rounds in {:.2}s ({:.1} rounds/s), {} B up / {} B down, \
+         final accuracy {:.3e}, replay {} rounds OK",
+        report.timeline.rounds.len(),
+        report.wall_s,
+        report.timeline.rounds.len() as f64 / report.wall_s.max(1e-9),
+        up,
+        down,
+        last.accuracy,
+        rp.round_arrivals.len(),
+    );
+    Ok(())
+}
+
+/// Serve with `nodes` in-process worker threads against the socket — the
+/// loadgen shape (`qadmm serve --loadgen N`) and the cargo-test shape of
+/// the smoke. Joins the fleet and insists every worker drained cleanly.
+pub fn serve_with_threads(
+    cfg: &ExperimentConfig,
+    listen: &Endpoint,
+    nodes: usize,
+    opts: &ServeOptions,
+) -> Result<ServeReport> {
+    let handles: Mutex<Vec<JoinHandle<Result<WorkerReport>>>> = Mutex::new(Vec::new());
+    let report = serve(
+        cfg,
+        make_native_problem(cfg)?,
+        listen,
+        opts,
+        |ep| {
+            let mut hs = handles.lock().unwrap();
+            for node in 0..nodes {
+                let (cfg, ep) = (cfg.clone(), ep.clone());
+                let problem = make_native_problem(&cfg)?;
+                hs.push(std::thread::spawn(move || {
+                    run_worker(&cfg, problem, &ep, &WorkerOptions::new(node))
+                }));
+            }
+            Ok(())
+        },
+    )?;
+    for (node, h) in handles.into_inner().unwrap().into_iter().enumerate() {
+        let wr = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("worker {node} panicked"))?
+            .with_context(|| format!("worker {node} failed"))?;
+        ensure!(wr.acked_shutdown, "worker {node} exited without acking the drain");
+    }
+    Ok(report)
+}
+
+fn serve_with_processes(
+    cfg: &ExperimentConfig,
+    listen: &Endpoint,
+    exe: &std::path::Path,
+    nodes: usize,
+) -> Result<ServeReport> {
+    let children: Mutex<Vec<Child>> = Mutex::new(Vec::new());
+    let serve_res = serve(
+        cfg,
+        make_native_problem(cfg)?,
+        listen,
+        &ServeOptions::default(),
+        |ep| {
+            let mut cs = children.lock().unwrap();
+            for node in 0..nodes {
+                let child = Command::new(exe)
+                    .args([
+                        "worker",
+                        "--preset",
+                        "ci-lasso",
+                        "--nodes",
+                        &nodes.to_string(),
+                        "--connect",
+                        &ep.label(),
+                        "--node",
+                        &node.to_string(),
+                    ])
+                    .stdout(Stdio::null())
+                    .stderr(Stdio::inherit())
+                    .spawn()
+                    .with_context(|| format!("spawning worker {node}"))?;
+                cs.push(child);
+            }
+            Ok(())
+        },
+    );
+    // reap unconditionally: a serve error must not leave orphans around
+    let mut failures = Vec::new();
+    for (node, mut child) in children.into_inner().unwrap().into_iter().enumerate() {
+        if serve_res.is_err() {
+            let _ = child.kill();
+        }
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => failures.push(format!("worker {node} exited with {status}")),
+            Err(e) => failures.push(format!("worker {node} unreapable: {e}")),
+        }
+    }
+    let report = serve_res?;
+    ensure!(failures.is_empty(), "worker processes failed: {}", failures.join("; "));
+    Ok(report)
+}
+
+/// Round-interval percentiles off the captured timeline (used by both the
+/// smoke headline and `serve --loadgen` reporting).
+pub fn round_latency_stats(times: &[f64]) -> Option<(f64, f64)> {
+    if times.len() < 2 {
+        return None;
+    }
+    let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+    Some((crate::util::stats::quantile(&gaps, 0.5), crate::util::stats::quantile(&gaps, 0.99)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The in-process smoke (threads over a UDS) is cheap enough to be a
+    /// unit test: it exercises handshake, fold, drain, reconciliation, and
+    /// replay end to end.
+    #[test]
+    fn uds_thread_smoke_reconciles_and_replays() {
+        let sock =
+            std::env::temp_dir().join(format!("qadmm-test-smoke-{}.sock", std::process::id()));
+        let opts = DeploySmokeOptions {
+            nodes: 4,
+            iters: 40,
+            target: 1.0, // convergence is integration-tested; keep this fast
+            worker_exe: None,
+        };
+        run_one(&Endpoint::Uds(sock), &opts).unwrap();
+    }
+
+    #[test]
+    fn latency_stats_need_two_rounds() {
+        assert!(round_latency_stats(&[0.0]).is_none());
+        let (p50, p99) = round_latency_stats(&[0.0, 1.0, 2.0, 4.0]).unwrap();
+        assert!(p50 >= 1.0 && p99 <= 2.0 + 1e-9, "{p50} {p99}");
+    }
+}

@@ -3,6 +3,7 @@
 //! rows — writing CSV series under `out/` and printing headline numbers.
 
 pub mod ablation;
+pub mod deploy;
 pub mod downlink;
 pub mod fig3;
 pub mod fig4;

@@ -36,6 +36,7 @@ pub mod comm;
 pub mod compress;
 pub mod config;
 pub mod coordinator;
+pub mod deploy;
 pub mod exp;
 pub mod metrics;
 pub mod problems;

@@ -7,7 +7,10 @@
 //!   ablation   design-choice sweeps (q, EF, compressor family, tau, P)
 //!   downlink   tau x downlink-delay sweep at n in {256, 1024} (event engine)
 //!   trigger    event-trigger delta x adaptive-level sweep vs fixed QSGD
-//!   serve      threaded deployment (server + node workers + PJRT service)
+//!   serve      deployment server: wire frames over TCP / Unix sockets
+//!   worker     deployment client: one node against a serve endpoint
+//!   deploy-smoke  serve + worker fleet on both transports; asserts byte
+//!              reconciliation, capture->replay, and convergence
 //!   info       inspect the artifact manifest
 //!   selftest   PJRT round-trip smoke test
 //!
@@ -19,7 +22,9 @@ use qadmm::admm::runner::{self, ProblemFactory};
 use qadmm::comm::network::FaultSpec;
 use qadmm::compress::CompressorKind;
 use qadmm::config::{presets, Backend, EngineKind, ProblemKind};
-use qadmm::exp::{ablation, downlink, fig3, fig4, resume, topology, trigger};
+use qadmm::deploy::transport::Endpoint;
+use qadmm::deploy::worker::{run_worker, WorkerOptions};
+use qadmm::exp::{ablation, deploy, downlink, fig3, fig4, resume, topology, trigger};
 use qadmm::problems::lasso::{LassoConfig, LassoProblem};
 use qadmm::problems::nn::{NnArch, NnProblem};
 use qadmm::problems::Problem;
@@ -50,6 +55,8 @@ fn real_main() -> anyhow::Result<()> {
         "trigger" => cmd_trigger(&mut args),
         "resume" => cmd_resume(&mut args),
         "serve" => cmd_serve(&mut args),
+        "worker" => cmd_worker(&mut args),
+        "deploy-smoke" => cmd_deploy_smoke(&mut args),
         "info" => cmd_info(&mut args),
         "selftest" => cmd_selftest(&mut args),
         _ => {
@@ -100,7 +107,22 @@ USAGE: qadmm <cmd> [--options]
              checkpoints at round K, resumes, and diffs the continued run
              bit-for-bit against a straight run; also records a timeline
              and replays it through the threaded bridge)
-  serve     --preset NAME [--iters N] [--dup-prob X]   (threaded deployment)
+  serve     --preset NAME [--listen EP] [--nodes N] [--iters N]
+            [--idle-timeout SECS] [--record-timeline FILE] [--loadgen N]
+            (socket deployment server: binds EP, drives the fold loop over
+             real connections, reconciles socket bytes against eq. 20 bits;
+             --loadgen N runs N in-process workers against the socket and
+             reports rounds/s, per-link B/s, p50/p99 round latency;
+             the old threaded in-process deployment is `run --engine threaded`)
+  worker    --connect EP --node I [--preset NAME] [--nodes N]
+            [--idle-timeout SECS]
+            (deployment client for node I; config must digest-match the
+             server's or the handshake is rejected)
+  deploy-smoke  [--nodes N] [--iters N] [--target X] [--threads]
+            (serve + N workers on UDS then TCP-localhost; asserts exact
+             byte reconciliation, capture->replay arrival equality, and
+             convergence; --threads uses in-process workers instead of
+             `qadmm worker` child processes)
   info      [--artifacts DIR]
   selftest  [--artifacts DIR]
 
@@ -111,6 +133,7 @@ Engines: seq (lockstep simulator) | event (virtual-time, 1000+ nodes)
 Latency models L: none | const:S | exp:MEAN | mix:FAST,SLOW,P_SLOW
   (per-link legs; odd-indexed nodes are 4x slower, --clock-drift E in [0,1)
    spreads node clock rates over [1-E, 1+E])
+Endpoints EP: tcp:HOST:PORT (port 0 = kernel-assigned) | uds:/path/to.sock
 Topologies: star (direct fan-in) | tree:F (2-tier, fanout-F aggregators)
             | gossip:K (random relay among K aggregators); --p-tier sets the
             per-aggregator arrival threshold P_g before a re-quantized
@@ -123,6 +146,16 @@ fn apply_overrides(
 ) -> anyhow::Result<()> {
     cfg.iters = args.usize("iters", cfg.iters);
     cfg.mc_trials = args.usize("trials", cfg.mc_trials);
+    // fleet size (problem node count); deploy endpoints must agree on it
+    if let Some(nodes) = args.str_opt("nodes") {
+        let nodes: usize = nodes.parse().map_err(|_| anyhow::anyhow!("--nodes wants a count"))?;
+        anyhow::ensure!(nodes > 0, "--nodes must be positive");
+        match &mut cfg.problem {
+            ProblemKind::Lasso { n, .. }
+            | ProblemKind::Mlp { n, .. }
+            | ProblemKind::Cnn { n, .. } => *n = nodes,
+        }
+    }
     cfg.tau = args.usize("tau", cfg.tau);
     cfg.p_min = args.usize("p", cfg.p_min);
     cfg.seed = args.u64("seed", cfg.seed);
@@ -531,52 +564,122 @@ fn cmd_resume(args: &mut Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
-    let preset = args.str("preset", "e2e-mlp");
+    let preset = args.str("preset", "ci-lasso");
     let mut cfg = presets::by_name(&preset)?;
-    cfg.engine = EngineKind::Threaded; // serve *is* the threaded deployment
     apply_overrides(&mut cfg, args)?;
-    anyhow::ensure!(
-        cfg.engine == EngineKind::Threaded,
-        "serve always uses the threaded engine; use `run --engine {}` instead",
-        cfg.engine.label()
-    );
-    let artifact_dir = PathBuf::from(args.str("artifacts", "artifacts"));
-    let data_dir = PathBuf::from(args.str("data", "data/mnist"));
-    let n_train = args.usize("train", 2000);
-    let n_test = args.usize("test", 512);
-    let dup_prob = args.f64("dup-prob", 0.0);
+    let listen = Endpoint::parse(&args.str("listen", "tcp:127.0.0.1:7077"))?;
+    let loadgen = args.usize("loadgen", 0);
+    let idle = args.f64("idle-timeout", 30.0);
+    let record = args.str_opt("record-timeline").map(PathBuf::from);
     args.finish()?;
-
-    let service = ComputeService::start(artifact_dir.clone(), needed_artifacts(&cfg))?;
-    let manifest = Manifest::load(&artifact_dir.join("manifest.json"))?;
-    let art_consts = (
-        manifest.const_usize("lasso_m").unwrap_or(0),
-        manifest.const_usize("lasso_n").unwrap_or(0),
+    if loadgen > 0 {
+        // the loadgen fleet *is* the deployment: size the problem to it
+        match &mut cfg.problem {
+            ProblemKind::Lasso { n, .. }
+            | ProblemKind::Mlp { n, .. }
+            | ProblemKind::Cnn { n, .. } => *n = loadgen,
+        }
+    }
+    cfg.validate()?;
+    let n = cfg.problem.n_nodes();
+    let opts = qadmm::deploy::server::ServeOptions {
+        idle_timeout: std::time::Duration::from_secs_f64(idle),
+    };
+    let report = if loadgen > 0 {
+        println!("serving {} on {} with {loadgen} loadgen workers...", cfg.name, listen.label());
+        deploy::serve_with_threads(&cfg, &listen, loadgen, &opts)?
+    } else {
+        println!("serving {} for {n} external workers...", cfg.name);
+        qadmm::deploy::server::serve(
+            &cfg,
+            deploy::make_native_problem(&cfg)?,
+            &listen,
+            &opts,
+            |ep| {
+                println!("listening on {}", ep.label());
+                Ok(())
+            },
+        )?
+    };
+    qadmm::deploy::reconcile(&report.books, &report.accounting)?;
+    let rounds = report.timeline.rounds.len();
+    println!(
+        "done: {rounds} rounds in {:.2}s ({:.1} rounds/s), byte books reconciled",
+        report.wall_s,
+        rounds as f64 / report.wall_s.max(1e-9)
     );
-    let mut factory = make_factory(
-        &cfg,
-        Some(&service),
-        Some(&manifest),
-        art_consts,
-        data_dir,
-        n_train,
-        n_test,
-    );
-    let mut rngs = qadmm::admm::sim::TrialRngs::new(cfg.seed);
-    let boxed = factory(cfg.seed, &mut rngs.data)?;
-    drop(factory);
-    // SAFETY of Send: problems constructed here use ComputeClient execs.
-    let problem: Box<dyn Problem + Send> = unsafe { make_send(boxed) };
-    println!("serving {} on {} node threads...", cfg.name, cfg.problem.n_nodes());
-    let outcome =
-        qadmm::coordinator::run_threaded(&cfg, problem, FaultSpec { dup_prob })?;
-    if let Some(last) = outcome.recorder.last() {
+    let times: Vec<f64> = report.timeline.rounds.iter().map(|r| r.time).collect();
+    if let Some((p50, p99)) = deploy::round_latency_stats(&times) {
+        println!("round latency: p50 {:.1}us p99 {:.1}us", p50 * 1e6, p99 * 1e6);
+    }
+    for (i, b) in report.books.iter().enumerate() {
         println!(
-            "final: iter={} test_acc={:.4} loss={:.4e} bits/param={:.1}",
-            last.iter, last.test_acc, last.loss, outcome.normalized_bits
+            "  link {i}: {} B up ({:.0} B/s), {} B down ({:.0} B/s)",
+            b.up_total,
+            b.up_total as f64 / report.wall_s.max(1e-9),
+            b.down_total,
+            b.down_total as f64 / report.wall_s.max(1e-9)
         );
     }
+    if let Some(last) = report.recorder.records.last() {
+        // deploy serves native LASSO only (make_native_problem enforces it)
+        let ProblemKind::Lasso { m, .. } = cfg.problem else { unreachable!() };
+        println!(
+            "final: iter={} accuracy={:.3e} loss={:.4e} bits/param={:.1}",
+            last.iter,
+            last.accuracy,
+            last.loss,
+            report.accounting.normalized_bits(m)
+        );
+    }
+    if let Some(path) = record {
+        std::fs::write(&path, report.timeline.to_json().to_string_pretty())?;
+        println!("wrote timeline to {} (replayable offline)", path.display());
+    }
     Ok(())
+}
+
+fn cmd_worker(args: &mut Args) -> anyhow::Result<()> {
+    let preset = args.str("preset", "ci-lasso");
+    let mut cfg = presets::by_name(&preset)?;
+    apply_overrides(&mut cfg, args)?;
+    let connect = Endpoint::parse(
+        &args.str_opt("connect").ok_or_else(|| anyhow::anyhow!("--connect is required"))?,
+    )?;
+    let node = args.usize("node", usize::MAX);
+    anyhow::ensure!(node != usize::MAX, "--node is required");
+    let idle = args.f64("idle-timeout", 60.0);
+    args.finish()?;
+    let mut opts = WorkerOptions::new(node);
+    opts.idle_timeout = std::time::Duration::from_secs_f64(idle);
+    let problem = deploy::make_native_problem(&cfg)?;
+    let report = run_worker(&cfg, problem, &connect, &opts)?;
+    println!(
+        "worker {node}: {} updates + {} skips over {} rounds, {} B up / {} B down{}",
+        report.updates_sent,
+        report.skips_sent,
+        report.rounds_applied,
+        report.bytes_up,
+        report.bytes_down,
+        if report.acked_shutdown { ", drained cleanly" } else { "" }
+    );
+    Ok(())
+}
+
+fn cmd_deploy_smoke(args: &mut Args) -> anyhow::Result<()> {
+    let defaults = deploy::DeploySmokeOptions::default();
+    let opts = deploy::DeploySmokeOptions {
+        nodes: args.usize("nodes", defaults.nodes),
+        iters: args.usize("iters", defaults.iters),
+        target: args.f64("target", defaults.target),
+        worker_exe: if args.flag("threads") {
+            None
+        } else {
+            Some(std::env::current_exe()?)
+        },
+    };
+    args.finish()?;
+    deploy::run(&opts)
 }
 
 /// The factory returns `Box<dyn Problem>`; when every exec handle inside is

@@ -100,8 +100,13 @@ fn steady_state_rounds_price_identically_across_runtimes() {
     }
     .wire_bits();
     let consensus_bits =
-        ServerToNode::Consensus { iter: 0, included: (0..l.n as u32).collect(), dz_wire: frame }
-            .wire_bits();
+        ServerToNode::Consensus {
+            iter: 0,
+            included: (0..l.n as u32).collect(),
+            dz_wire: frame,
+            last: false,
+        }
+        .wire_bits();
     let init_per_node = threaded_init_bits_per_node(l.m);
     let expect = l.n as u64 * init_per_node
         + rounds as u64 * l.n as u64 * (update_bits + consensus_bits);
@@ -126,10 +131,11 @@ fn steady_state_rounds_price_identically_across_runtimes() {
     }
     assert_eq!(eng.accounting().total_bits(), expect, "event engine steady state");
 
-    // threaded deployment: downlink is fully deterministic (n InitZ +
-    // rounds·n Consensus + n Shutdown); on the uplink the nodes included in
-    // the *final* consensus race the Shutdown frame, so 0..=n extra updates
-    // may be sent (charged on send) before the workers exit.
+    // threaded deployment: with the drain-then-close shutdown (the final
+    // broadcast carries `last`, workers ack instead of computing) BOTH
+    // directions are fully deterministic — the old 0..=n shutdown-race
+    // updates cannot exist, so the bound is equality, same as the
+    // in-process engines. Shutdown acks are control plane and charge 0.
     let mut rngs = TrialRngs::new(cfg.seed);
     let mut p = LassoProblem::generate(l, &mut rngs.data).unwrap();
     p.set_reference_optimum(1.0);
@@ -138,19 +144,14 @@ fn steady_state_rounds_price_identically_across_runtimes() {
     let init_up = NodeToServer::InitFull { node: 0, x0: vec![0.0; l.m], u0: vec![0.0; l.m] }
         .wire_bits();
     let init_down = ServerToNode::InitZ { z0: vec![0.0; l.m] }.wire_bits();
-    let expect_down = l.n as u64 * init_down
-        + rounds as u64 * l.n as u64 * consensus_bits
-        + l.n as u64 * ServerToNode::Shutdown.wire_bits();
+    let expect_down = l.n as u64 * init_down + rounds as u64 * l.n as u64 * consensus_bits;
     assert_eq!(outcome.downlink_bits, expect_down, "threaded downlink steady state");
     let expect_up = l.n as u64 * init_up + rounds as u64 * l.n as u64 * update_bits;
-    let extra = outcome
-        .uplink_bits
-        .checked_sub(expect_up)
-        .expect("threaded uplink below the deterministic floor");
-    assert_eq!(extra % update_bits, 0, "uplink tail is whole update frames");
-    assert!(
-        extra / update_bits <= l.n as u64,
-        "more than n shutdown-race updates: {extra} extra bits"
+    assert_eq!(outcome.uplink_bits, expect_up, "threaded uplink steady state");
+    assert_eq!(
+        outcome.uplink_bits + outcome.downlink_bits,
+        expect,
+        "threaded total equals the in-process engines exactly"
     );
 }
 
