@@ -9,7 +9,11 @@
 //! engine at fleet sizes n ∈ {10^5, 10^6} (small m) and *asserts* the
 //! peak-RSS budget — the million-node acceptance bar: calendar-queue
 //! timeline, quantized-at-rest banks, shared mirror window, sampled
-//! metrics, all under a flat memory ceiling.
+//! metrics, all under a flat memory ceiling. The `deploy_loadgen` section
+//! drives the sharded reactor socket server with N ∈ {64, 256, 512}
+//! in-process UDS workers, recording rounds/s, the io-thread count, and
+//! p50/p99 round latency, with the exact byte reconciliation re-asserted
+//! under load.
 //!
 //! The headline configuration is the acceptance bar for the virtual-time
 //! engine: **n = 1024 nodes, m = 10240-dim LASSO, 200 consensus rounds,
@@ -465,6 +469,40 @@ fn server_round_nn_cell(
     ]))
 }
 
+// ---- deploy_loadgen: reactor socket server under a worker fleet ------------
+
+/// One `serve --loadgen N` cell: N in-process workers over a UDS against
+/// the sharded reactor, real frames on a real socket. Records rounds/s
+/// (the throughput the O(shards)-thread server sustains), the shard count
+/// (the thread bill: total server threads = io_threads + 1 regardless of
+/// N), and p50/p99 round latency off the captured timeline. The run also
+/// re-asserts the exact byte reconciliation under load — a loadgen cell
+/// that drifted the books fails the bench, not just the tests.
+fn deploy_loadgen_cell(nodes: usize, iters: usize) -> anyhow::Result<Json> {
+    let r = qadmm::exp::deploy::run_loadgen(nodes, iters)?;
+    println!(
+        "deploy_loadgen          n={nodes:5} rounds={:4}  wall {:7.2}s  \
+         rounds/s {:8.1}  io-threads {:2}  p50 {:>9}  p99 {:>9}",
+        r.rounds,
+        r.wall_s,
+        r.rounds_per_s,
+        r.io_threads,
+        r.p50_s.map_or("n/a".into(), |p| format!("{:.0}us", p * 1e6)),
+        r.p99_s.map_or("n/a".into(), |p| format!("{:.0}us", p * 1e6)),
+    );
+    Ok(Json::obj(vec![
+        ("nodes", Json::Num(nodes as f64)),
+        ("rounds", Json::Num(r.rounds as f64)),
+        ("wall_s", Json::Num(r.wall_s)),
+        ("rounds_per_s", Json::Num(r.rounds_per_s)),
+        ("io_threads", Json::Num(r.io_threads as f64)),
+        ("p50_us", r.p50_s.map_or(Json::Null, |p| Json::Num(p * 1e6))),
+        ("p99_us", r.p99_s.map_or(Json::Null, |p| Json::Num(p * 1e6))),
+        ("bytes_up", Json::Num(r.bytes_up as f64)),
+        ("bytes_down", Json::Num(r.bytes_down as f64)),
+    ]))
+}
+
 // ---- trigger: event-trigger dead-band / adaptive levels at scale -----------
 
 /// One (n, δ, adapt) cell of the event-trigger section: the same straggler
@@ -633,6 +671,22 @@ fn main() {
         }
     }
 
+    // reactor loadgen: hundreds of real socket workers against the
+    // O(shards)-thread server — rounds/s is higher-is-better here
+    println!("--- deploy_loadgen: reactor serve under N uds workers ---");
+    let lg_cells: &[(usize, usize)] =
+        if fast { &[(64, 30)] } else { &[(64, 60), (256, 40), (512, 30)] };
+    let mut loadgen_records = Vec::new();
+    for &(nodes, iters) in lg_cells {
+        match deploy_loadgen_cell(nodes, iters) {
+            Ok(rec) => loadgen_records.push(rec),
+            Err(e) => {
+                eprintln!("deploy_loadgen n={nodes}: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+
     // million-node cells: the O(active) memory acceptance bar. Fast mode
     // keeps the n = 10^5 smoke (seconds); the full run adds n = 10^6.
     println!("--- scale_xl: 10^5..10^6-node fleets, flat memory ---");
@@ -670,6 +724,7 @@ fn main() {
         ("scale_xl", Json::Arr(xl_records)),
         ("server_round", Json::Arr(server_records)),
         ("server_round_nn", Json::Arr(server_nn_records)),
+        ("deploy_loadgen", Json::Arr(loadgen_records)),
         ("trigger", Json::Arr(trigger_records)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json");

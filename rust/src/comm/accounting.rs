@@ -35,6 +35,20 @@ impl CommAccounting {
         self.links[node].downlink_msgs += 1;
     }
 
+    /// Fold a batch of uplink charges accumulated lock-free elsewhere (the
+    /// deploy reactor's per-connection counters): `msgs` transmissions
+    /// totalling `bits`, so per-link message counts survive batching.
+    pub fn record_uplink_batch(&mut self, node: usize, msgs: u64, bits: u64) {
+        self.links[node].uplink_bits += bits;
+        self.links[node].uplink_msgs += msgs;
+    }
+
+    /// Downlink counterpart of [`Self::record_uplink_batch`].
+    pub fn record_downlink_batch(&mut self, node: usize, msgs: u64, bits: u64) {
+        self.links[node].downlink_bits += bits;
+        self.links[node].downlink_msgs += msgs;
+    }
+
     /// Downlink broadcast: the server transmits the same frame to every
     /// node; each link carries it (the paper charges both directions).
     pub fn record_broadcast(&mut self, bits: u64) {
@@ -141,6 +155,24 @@ mod tests {
         // aggregator uplinks still accumulate per link
         acc.record_uplink(3, 7);
         assert_eq!(acc.total_bits(), 37);
+    }
+
+    /// A batched fold is indistinguishable from per-message recording —
+    /// bits *and* message counts — so the reactor's amortized bookkeeping
+    /// cannot drift from the per-frame ledger it replaces.
+    #[test]
+    fn batch_fold_matches_per_message_recording() {
+        let mut a = CommAccounting::new(2);
+        a.record_uplink(0, 100);
+        a.record_uplink(0, 60);
+        a.record_downlink(1, 40);
+        let mut b = CommAccounting::new(2);
+        b.record_uplink_batch(0, 2, 160);
+        b.record_downlink_batch(1, 1, 40);
+        assert_eq!(a.link(0).uplink_bits, b.link(0).uplink_bits);
+        assert_eq!(a.link(0).uplink_msgs, b.link(0).uplink_msgs);
+        assert_eq!(a.link(1).downlink_bits, b.link(1).downlink_bits);
+        assert_eq!(a.link(1).downlink_msgs, b.link(1).downlink_msgs);
     }
 
     #[test]

@@ -99,10 +99,33 @@ impl NodeEndpoint {
     }
 }
 
-/// Server-side endpoint: fan-in from all nodes + per-node senders.
+/// Where a server-side downlink message goes: per-node mpsc senders (the
+/// in-process star and the old pump bridge), or a single shared bus the
+/// deploy reactor implements — one `broadcast` call hands over the whole
+/// round instead of n clones through n channels.
+///
+/// Accounting moves with the bytes: in `Channels` mode the endpoint
+/// charges eq. (20) on send (delivery is the channel push); in `Bus` mode
+/// the sink's owner charges each link when the frame actually completes on
+/// that link's socket, so the endpoint charges nothing and a broadcast to
+/// a detached node costs nothing.
+pub trait DownlinkSink: Send {
+    fn unicast(&self, node: usize, msg: ServerToNode) -> anyhow::Result<()>;
+    /// Deliver one message to every attached node. The implementation owns
+    /// fan-out (shared encode, per-recipient variants) and per-link
+    /// accounting at write completion.
+    fn broadcast(&self, msg: ServerToNode) -> anyhow::Result<()>;
+}
+
+enum Downlink {
+    Channels(Vec<Sender<ServerToNode>>),
+    Bus { sink: Box<dyn DownlinkSink>, n: usize },
+}
+
+/// Server-side endpoint: fan-in from all nodes + the downlink fan-out.
 pub struct ServerEndpoint {
     from_nodes: Receiver<NodeToServer>,
-    to_nodes: Vec<Sender<ServerToNode>>,
+    down: Downlink,
     accounting: SharedAccounting,
     /// Last seen uplink sequence number per node, for dedup.
     last_seq: Vec<Option<u64>>,
@@ -164,22 +187,39 @@ impl ServerEndpoint {
         }
     }
 
-    /// Unicast to one node (accounted).
+    /// Unicast to one node (accounted in `Channels` mode; a `Bus` sink
+    /// charges at write completion instead).
     pub fn send(&self, node: usize, msg: ServerToNode) -> anyhow::Result<()> {
-        self.accounting.lock().unwrap().record_downlink(node, msg.wire_bits());
-        self.to_nodes[node].send(msg).map_err(|_| anyhow::anyhow!("node {node} hung up"))
+        match &self.down {
+            Downlink::Channels(to_nodes) => {
+                self.accounting.lock().unwrap().record_downlink(node, msg.wire_bits());
+                to_nodes[node].send(msg).map_err(|_| anyhow::anyhow!("node {node} hung up"))
+            }
+            Downlink::Bus { sink, .. } => sink.unicast(node, msg),
+        }
     }
 
-    /// Broadcast (each link accounted separately, as in eq. 20).
+    /// Broadcast: in `Channels` mode each link is charged separately (as
+    /// in eq. 20) and gets its own clone; in `Bus` mode this is **one**
+    /// sink call — the sink encodes once and shares the bytes across every
+    /// attached writer.
     pub fn broadcast(&self, msg: &ServerToNode) -> anyhow::Result<()> {
-        for node in 0..self.to_nodes.len() {
-            self.send(node, msg.clone())?;
+        match &self.down {
+            Downlink::Channels(to_nodes) => {
+                for node in 0..to_nodes.len() {
+                    self.send(node, msg.clone())?;
+                }
+                Ok(())
+            }
+            Downlink::Bus { sink, .. } => sink.broadcast(msg.clone()),
         }
-        Ok(())
     }
 
     pub fn n_nodes(&self) -> usize {
-        self.to_nodes.len()
+        match &self.down {
+            Downlink::Channels(to_nodes) => to_nodes.len(),
+            Downlink::Bus { n, .. } => *n,
+        }
     }
 }
 
@@ -218,7 +258,7 @@ pub fn star(
     }
     let server = ServerEndpoint {
         from_nodes: up_rx,
-        to_nodes,
+        down: Downlink::Channels(to_nodes),
         accounting: accounting.clone(),
         last_seq: vec![None; n_nodes],
     };
@@ -250,11 +290,31 @@ pub fn bridged(
     }
     let server = ServerEndpoint {
         from_nodes: up_rx,
-        to_nodes,
+        down: Downlink::Channels(to_nodes),
         accounting: Arc::new(Mutex::new(CommAccounting::new(n_nodes))),
         last_seq: vec![None; n_nodes],
     };
     (server, up_tx, down_rxs)
+}
+
+/// Bridge for the reactor deployment: the downlink is a [`DownlinkSink`]
+/// the socket reactor implements — `broadcast` hands the whole round over
+/// in **one** call (shared encode, zero per-node clones) and all downlink
+/// accounting happens sink-side at write completion. The uplink receiver
+/// is supplied by the caller (the reactor hub owns the matching `Sender`
+/// and clones it into its I/O shards). The endpoint's internal accounting
+/// stays a throwaway, exactly as in [`bridged`].
+pub fn bridged_sink(
+    n_nodes: usize,
+    from_nodes: Receiver<NodeToServer>,
+    sink: Box<dyn DownlinkSink>,
+) -> ServerEndpoint {
+    ServerEndpoint {
+        from_nodes,
+        down: Downlink::Bus { sink, n: n_nodes },
+        accounting: Arc::new(Mutex::new(CommAccounting::new(n_nodes))),
+        last_seq: vec![None; n_nodes],
+    }
 }
 
 #[cfg(test)]
@@ -354,6 +414,47 @@ mod tests {
             star(1, &[LinkProfile::none()], FaultSpec::default(), 3, 0);
         let got = server.recv_timeout(Duration::from_millis(20)).unwrap();
         assert!(got.is_none());
+    }
+
+    /// A `Bus`-mode endpoint hands a broadcast to the sink exactly once
+    /// (no per-node clones) and charges nothing itself: the reactor books
+    /// each link at write completion.
+    #[test]
+    fn bus_endpoint_broadcasts_once_and_charges_nothing() {
+        struct CountSink {
+            bcasts: Arc<Mutex<Vec<ServerToNode>>>,
+            unis: Arc<Mutex<Vec<(usize, ServerToNode)>>>,
+        }
+        impl DownlinkSink for CountSink {
+            fn unicast(&self, node: usize, msg: ServerToNode) -> anyhow::Result<()> {
+                self.unis.lock().unwrap().push((node, msg));
+                Ok(())
+            }
+            fn broadcast(&self, msg: ServerToNode) -> anyhow::Result<()> {
+                self.bcasts.lock().unwrap().push(msg);
+                Ok(())
+            }
+        }
+        let bcasts = Arc::new(Mutex::new(Vec::new()));
+        let unis = Arc::new(Mutex::new(Vec::new()));
+        let sink = CountSink { bcasts: bcasts.clone(), unis: unis.clone() };
+        let (up_tx, up_rx) = channel();
+        let mut server = bridged_sink(3, up_rx, Box::new(sink));
+        assert_eq!(server.n_nodes(), 3);
+        server
+            .broadcast(&ServerToNode::Consensus {
+                iter: 0,
+                included: vec![0, 2],
+                dz_wire: vec![1, 2, 3],
+                last: false,
+            })
+            .unwrap();
+        server.send(1, ServerToNode::Shutdown).unwrap();
+        assert_eq!(bcasts.lock().unwrap().len(), 1, "one sink call per broadcast");
+        assert!(matches!(unis.lock().unwrap()[0], (1, ServerToNode::Shutdown)));
+        // uplink still flows through the raw sender
+        up_tx.send(update(2, 0)).unwrap();
+        assert!(matches!(server.recv().unwrap(), NodeToServer::Update { node: 2, .. }));
     }
 
     /// The bridged endpoint forwards raw messages both ways and leaves the

@@ -38,10 +38,13 @@ pub struct LinkBytes {
     pub down_extra: u64,
 }
 
-/// Shared per-link books: index = node id. Readers tally uplink on every
-/// decoded frame; writer pumps tally downlink on every completed write —
-/// the same points where the eq. (20) charge is recorded, so the two
-/// ledgers describe the identical set of frames.
+/// Shared per-link books: index = node id. The reactor shards tally both
+/// directions into plain per-connection `u64`s — uplink when a complete
+/// frame decodes, downlink when a frame's last byte reaches the kernel —
+/// and fold them here once per poll batch and definitively on detach.
+/// Those are the same points where the eq. (20) charge is recorded, so
+/// the two ledgers describe the identical set of frames: partial frames
+/// (read or write) at eviction time appear on **neither** ledger.
 pub type Books = Arc<Mutex<Vec<LinkBytes>>>;
 
 pub fn new_books(n: usize) -> Books {

@@ -1,28 +1,46 @@
-//! `qadmm serve`: the socket-facing server. One acceptor thread, one
-//! reader thread per connection, one writer pump per node slot, all
-//! bridging into the **unchanged** [`ServerLoop`] fold path via
-//! [`crate::comm::network::bridged`] mpsc endpoints — the deployment runs
-//! the very state machine the in-process runtimes run, with real bytes.
+//! `qadmm serve`: the socket-facing server, as a sharded readiness-driven
+//! reactor. A small fixed pool of I/O threads (≈ `available_parallelism`,
+//! capped at [`MAX_IO_THREADS`]) each owns many **nonblocking** connections
+//! multiplexed with `poll(2)` ([`super::transport::poll_fds`]): per-
+//! connection [`FrameCursor`] read state machines replace the old blocking
+//! reader-thread-per-connection, bounded per-connection write queues with
+//! slow-consumer eviction replace the writer-pump-per-node, and a wake pipe
+//! lets [`ServerLoop`] output and the stop flag interrupt a poll promptly.
+//! The server runs `io_threads + 1` threads total regardless of fleet size
+//! (the `+1` is the caller's thread driving the **unchanged** fold path via
+//! [`crate::comm::network::bridged_sink`]) — not the old `2n + 1`.
 //!
-//! Accounting discipline: eq. (20) bits are charged **where bytes move** —
-//! the reader charges the uplink when it decodes a data frame, the pump
-//! charges the downlink when a write completes — and the same two points
-//! tally raw socket bytes into the per-link [`super::LinkBytes`] books, so
-//! [`super::reconcile`] can hold the two ledgers to exact equality. A
-//! broadcast to a detached (departed) node is discarded by its pump and
+//! Broadcast discipline: one round's `Consensus` differs per recipient only
+//! in the `included` flag bit, so the frame is encoded **once** and the
+//! excluded variant is a byte-copy with one flag flipped — two shared
+//! `Arc<[u8]>` buffers serve the whole fleet instead of n encodes of n
+//! `dz_wire` clones.
+//!
+//! Accounting discipline: eq. (20) bits are charged **where bytes move**,
+//! exactly as before — uplink when a complete frame decodes, downlink when
+//! a frame fully drains to the socket — but the tallies land in plain
+//! per-connection `u64`s owned by the reactor shard and fold into the
+//! global [`super::LinkBytes`] books / [`CommAccounting`] once per poll
+//! batch and definitively on detach/teardown. The hot path takes zero
+//! global locks, and [`super::reconcile`] still holds the two ledgers to
+//! exact equality: partial frames (read or write) are never booked and
+//! never charged, so both sides count the identical set of frames. A
+//! broadcast to a detached (departed) node is discarded unwritten and
 //! charges nothing: only realized transmissions exist.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::collections::VecDeque;
+use std::io::ErrorKind;
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
 
 use crate::comm::accounting::CommAccounting;
 use crate::comm::message::{NodeToServer, ServerToNode};
-use crate::comm::network::{self, SharedAccounting};
+use crate::comm::network::{self, DownlinkSink, SharedAccounting};
 use crate::config::ExperimentConfig;
 use crate::coordinator::server::ServerLoop;
 use crate::coordinator::SharedProblem;
@@ -34,9 +52,16 @@ use crate::topology::TopologyKind;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
-use super::frame::{Frame, PROTO_VERSION};
-use super::transport::{read_frame, Endpoint, Listener, ReadOutcome, Stream};
+use super::frame::{Frame, FLAG_INCLUDED, PROTO_VERSION};
+use super::transport::{
+    poll_fds, BufferPool, CursorStep, Endpoint, FrameCursor, Listener, PollFd, Stream, WakePipe,
+    Waker, POLLIN, POLLOUT, POLL_SLICE,
+};
 use super::{new_books, Books, LinkBytes};
+
+/// Ceiling on the I/O shard pool: beyond this, more threads buy contention,
+/// not throughput, for a frame-sized workload.
+pub const MAX_IO_THREADS: usize = 8;
 
 pub struct ServeOptions {
     /// A connected worker that goes silent for this long (half-open
@@ -48,6 +73,24 @@ pub struct ServeOptions {
 impl Default for ServeOptions {
     fn default() -> Self {
         Self { idle_timeout: Duration::from_secs(30) }
+    }
+}
+
+/// Reactor tuning, separate from [`ServeOptions`] so existing literal
+/// constructions of the latter keep compiling. Defaults suit production;
+/// tests shrink `write_queue_limit` to provoke slow-consumer eviction.
+pub struct ReactorOptions {
+    /// I/O shard count; `None` = `min(available_parallelism, MAX_IO_THREADS)`.
+    pub io_threads: Option<usize>,
+    /// A connection still holding more than this many queued frames after
+    /// a drain attempt is a slow consumer: it is detached, its unwritten
+    /// frames are discarded (uncharged), and a `Leave` is synthesized.
+    pub write_queue_limit: usize,
+}
+
+impl Default for ReactorOptions {
+    fn default() -> Self {
+        Self { io_threads: None, write_queue_limit: 1024 }
     }
 }
 
@@ -63,6 +106,9 @@ pub struct ServeReport {
     /// The charged eq. (20) books — the other side.
     pub accounting: CommAccounting,
     pub wall_s: f64,
+    /// Reactor shard count this run used (the server's thread total is
+    /// `io_threads + 1`, fleet-size independent).
+    pub io_threads: usize,
 }
 
 /// The 8-byte config digest carried in the `Hello` handshake: FNV-1a over
@@ -73,7 +119,45 @@ pub fn config_digest(cfg: &ExperimentConfig) -> Vec<u8> {
     fnv1a64(cfg.resume_digest().as_bytes()).to_le_bytes().to_vec()
 }
 
-/// Shared state between the acceptor, readers, pumps, and `serve` itself.
+/// One downlink message, encoded once and shared by every writer. For
+/// `Consensus` the two per-recipient variants (included / not) are the
+/// same bytes except the flag bit, so `excl` is a one-byte-patched copy.
+struct DownMsg {
+    /// `Some(node)` = unicast (rejoin `InitZ`); `None` = broadcast.
+    target: Option<usize>,
+    /// Frame bytes for included recipients.
+    incl: Arc<[u8]>,
+    /// Frame bytes for excluded recipients (identical length and charge).
+    excl: Arc<[u8]>,
+    /// Sorted node ids that get `incl`; `None` = everyone does.
+    included: Option<Vec<u32>>,
+    /// eq. (20) bits charged per recipient on write completion (0 for
+    /// uncharged control frames).
+    charged_bits: u64,
+    /// `socket_extra_bytes` per recipient.
+    extra: u64,
+}
+
+enum ShardCmd {
+    /// A freshly accepted connection this shard now owns.
+    Adopt(Stream),
+    /// Downlink traffic from the fold loop.
+    Down(Arc<DownMsg>),
+}
+
+struct ShardHandle {
+    inbox: Arc<Mutex<VecDeque<ShardCmd>>>,
+    waker: Waker,
+}
+
+impl ShardHandle {
+    fn push(&self, cmd: ShardCmd) {
+        self.inbox.lock().unwrap().push_back(cmd);
+        self.waker.wake();
+    }
+}
+
+/// Shared state between the I/O shards, the sink, and `serve` itself.
 struct Hub {
     n: usize,
     m: usize,
@@ -81,9 +165,6 @@ struct Hub {
     up_tx: Sender<NodeToServer>,
     accounting: SharedAccounting,
     books: Books,
-    /// Per-node write half of the currently attached socket (None while
-    /// the node is detached — its pump discards traffic).
-    slots: Vec<Mutex<Option<Stream>>>,
     /// Slot claim: a second connection for an attached node is rejected.
     attached: Vec<AtomicBool>,
     /// Per-node uplink sequence stamps. Global across reconnects: the
@@ -91,8 +172,229 @@ struct Hub {
     /// last seen seq, so a rejoining node must not restart at a value its
     /// previous life just used.
     seqs: Vec<AtomicU64>,
+    /// Which shard owns each node's current connection (valid while
+    /// attached; unicasts route through it, and a stale value just lands
+    /// the message on a shard with no such conn — discarded uncharged).
+    node_shard: Vec<AtomicUsize>,
+    shards: Vec<ShardHandle>,
     stop: AtomicBool,
     idle: Duration,
+    write_queue_limit: usize,
+    /// A fatal `accept()` failure, surfaced to `serve`'s caller instead of
+    /// spinning silently forever.
+    listener_err: Mutex<Option<String>>,
+}
+
+impl Hub {
+    fn wake_all(&self) {
+        for sh in &self.shards {
+            sh.waker.wake();
+        }
+    }
+
+    fn send_down(&self, msg: ServerToNode, target: Option<usize>) {
+        let dm = Arc::new(encode_down(msg, target));
+        match target {
+            Some(node) => {
+                let shard = self.node_shard[node].load(Ordering::SeqCst);
+                self.shards[shard].push(ShardCmd::Down(dm));
+            }
+            None => {
+                for sh in &self.shards {
+                    sh.push(ShardCmd::Down(dm.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// The [`DownlinkSink`] the unchanged [`ServerLoop`] writes into: one call
+/// per broadcast, shared-encoded, fanned to the shards' inboxes.
+struct ReactorSink(Arc<Hub>);
+
+impl DownlinkSink for ReactorSink {
+    fn unicast(&self, node: usize, msg: ServerToNode) -> Result<()> {
+        self.0.send_down(msg, Some(node));
+        Ok(())
+    }
+
+    fn broadcast(&self, msg: ServerToNode) -> Result<()> {
+        self.0.send_down(msg, None);
+        Ok(())
+    }
+}
+
+/// Encode one downlink message into its shared wire form. `Consensus` is
+/// encoded once with `included: true`; the excluded variant is the same
+/// buffer with the flag bit cleared (byte 5 = first body byte = flags).
+fn encode_down(msg: ServerToNode, target: Option<usize>) -> DownMsg {
+    let charged = matches!(msg, ServerToNode::Consensus { .. } | ServerToNode::InitZ { .. });
+    let charged_bits = if charged { msg.wire_bits() } else { 0 };
+    match msg {
+        ServerToNode::Consensus { iter, included, dz_wire, last } => {
+            let f = Frame::Consensus { round: iter as u32, included: true, last, dz_wire };
+            let extra = f.socket_extra_bytes();
+            let incl_bytes = f.encode();
+            let mut excl_bytes = incl_bytes.clone();
+            excl_bytes[5] &= !FLAG_INCLUDED;
+            DownMsg {
+                target,
+                incl: incl_bytes.into(),
+                excl: excl_bytes.into(),
+                included: Some(included),
+                charged_bits,
+                extra,
+            }
+        }
+        ServerToNode::InitZ { z0 } => {
+            let f = Frame::InitZ { z0 };
+            let extra = f.socket_extra_bytes();
+            let bytes: Arc<[u8]> = f.encode().into();
+            DownMsg { target, incl: bytes.clone(), excl: bytes, included: None, charged_bits, extra }
+        }
+        ServerToNode::Shutdown => {
+            let f = Frame::Shutdown;
+            let extra = f.socket_extra_bytes();
+            let bytes: Arc<[u8]> = f.encode().into();
+            DownMsg { target, incl: bytes.clone(), excl: bytes, included: None, charged_bits, extra }
+        }
+    }
+}
+
+/// One queued downlink frame on a connection; charged + booked only when
+/// the last byte reaches the kernel.
+struct WriteItem {
+    bytes: Arc<[u8]>,
+    off: usize,
+    charged_bits: u64,
+    extra: u64,
+}
+
+/// Per-connection byte/charge tallies — plain u64s owned by the shard,
+/// folded into the global books once per poll batch and on detach.
+#[derive(Default)]
+struct ConnCounters {
+    up_total: u64,
+    up_extra: u64,
+    up_bits: u64,
+    up_msgs: u64,
+    down_total: u64,
+    down_extra: u64,
+    down_bits: u64,
+    down_msgs: u64,
+}
+
+impl ConnCounters {
+    fn dirty(&self) -> bool {
+        (self.up_total | self.down_total) != 0
+    }
+}
+
+/// How a connection leaves the reactor.
+#[derive(Clone, Copy, PartialEq)]
+enum Fate {
+    /// Orderly: acked drain, server stop, or a pre-handshake reject —
+    /// no `Leave` is synthesized.
+    CloseClean,
+    /// The peer died or misbehaved after attaching: synthesize the
+    /// `Leave` it could not send.
+    CloseEvict,
+}
+
+struct Conn {
+    stream: Stream,
+    /// `None` until the handshake accepts; rejected/garbage connections
+    /// never earn a node id and so never touch the books.
+    node: Option<usize>,
+    cursor: FrameCursor,
+    wq: VecDeque<WriteItem>,
+    counters: ConnCounters,
+    last_rx: Instant,
+    acked: bool,
+    /// Reject path: flush the queued `Reject` frame, then close.
+    close_after_drain: bool,
+    gone: Option<Fate>,
+}
+
+impl Conn {
+    fn new(stream: Stream) -> Self {
+        Self {
+            stream,
+            node: None,
+            cursor: FrameCursor::new(),
+            wq: VecDeque::new(),
+            counters: ConnCounters::default(),
+            last_rx: Instant::now(),
+            acked: false,
+            close_after_drain: false,
+            gone: None,
+        }
+    }
+
+    fn queue_control(&mut self, frame: &Frame) {
+        let bytes: Arc<[u8]> = frame.encode().into();
+        let extra = bytes.len() as u64; // control frames charge 0 bits
+        self.wq.push_back(WriteItem { bytes, off: 0, charged_bits: 0, extra });
+    }
+}
+
+/// Exponential backoff state for resource-exhausted `accept()` (EMFILE and
+/// friends). While backing off, the listener leaves the poll set entirely —
+/// a level-triggered readable listener that cannot accept would otherwise
+/// spin the shard at 100%.
+struct AcceptBackoff {
+    consecutive: u32,
+    until: Option<Instant>,
+}
+
+impl AcceptBackoff {
+    fn new() -> Self {
+        Self { consecutive: 0, until: None }
+    }
+
+    fn accepting(&self) -> bool {
+        self.until.is_none_or(|t| Instant::now() >= t)
+    }
+
+    fn bump(&mut self) {
+        let delay = Duration::from_millis(10u64 << self.consecutive.min(8));
+        self.until = Some(Instant::now() + delay.min(Duration::from_secs(2)));
+        self.consecutive = self.consecutive.saturating_add(1);
+    }
+
+    fn clear(&mut self) {
+        self.consecutive = 0;
+        self.until = None;
+    }
+}
+
+enum AcceptClass {
+    /// This one connection died in the queue; keep accepting.
+    Transient,
+    /// fd/buffer/memory exhaustion: back off, the table may drain.
+    Resource,
+    /// The listener itself is broken: surface it and stop the run.
+    Fatal,
+}
+
+fn classify_accept_error(e: &std::io::Error) -> AcceptClass {
+    match e.kind() {
+        ErrorKind::ConnectionAborted | ErrorKind::ConnectionReset | ErrorKind::Interrupted => {
+            AcceptClass::Transient
+        }
+        _ => match e.raw_os_error() {
+            // EMFILE, ENFILE, ENOBUFS, ENOMEM
+            Some(24) | Some(23) | Some(105) | Some(12) => AcceptClass::Resource,
+            _ => AcceptClass::Fatal,
+        },
+    }
+}
+
+fn default_io_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .clamp(1, MAX_IO_THREADS)
 }
 
 /// Run a deployment server: bind `listen`, call `on_ready` with the
@@ -109,6 +411,21 @@ pub fn serve<F>(
 where
     F: FnOnce(&Endpoint) -> Result<()>,
 {
+    serve_tuned(cfg, problem, listen, opts, &ReactorOptions::default(), on_ready)
+}
+
+/// [`serve`] with explicit reactor tuning (shard count, write-queue bound).
+pub fn serve_tuned<F>(
+    cfg: &ExperimentConfig,
+    problem: Box<dyn Problem + Send>,
+    listen: &Endpoint,
+    opts: &ServeOptions,
+    reactor: &ReactorOptions,
+    on_ready: F,
+) -> Result<ServeReport>
+where
+    F: FnOnce(&Endpoint) -> Result<()>,
+{
     cfg.validate()?;
     ensure!(
         cfg.topology == TopologyKind::Star,
@@ -116,10 +433,23 @@ where
     );
     let n = problem.n_nodes();
     let m = problem.dim();
+    let io_threads = reactor.io_threads.unwrap_or_else(default_io_threads).max(1);
 
     let (listener, resolved) = Listener::bind(listen)?;
-    let (ep, up_tx, down_rxs) = network::bridged(n);
     let accounting: SharedAccounting = Arc::new(Mutex::new(CommAccounting::new(n)));
+    let (up_tx, up_rx) = channel::<NodeToServer>();
+
+    let mut pipes = Vec::with_capacity(io_threads);
+    let mut handles = Vec::with_capacity(io_threads);
+    for _ in 0..io_threads {
+        let wp = WakePipe::new()?;
+        handles.push(ShardHandle {
+            inbox: Arc::new(Mutex::new(VecDeque::new())),
+            waker: wp.waker(),
+        });
+        pipes.push(wp);
+    }
+
     let hub = Arc::new(Hub {
         n,
         m,
@@ -127,28 +457,29 @@ where
         up_tx,
         accounting: accounting.clone(),
         books: new_books(n),
-        slots: (0..n).map(|_| Mutex::new(None)).collect(),
         attached: (0..n).map(|_| AtomicBool::new(false)).collect(),
         seqs: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        node_shard: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+        shards: handles,
         stop: AtomicBool::new(false),
         idle: opts.idle_timeout,
+        write_queue_limit: reactor.write_queue_limit,
+        listener_err: Mutex::new(None),
     });
 
-    let mut pumps = Vec::with_capacity(n);
-    for (node, rx) in down_rxs.into_iter().enumerate() {
+    let ep = network::bridged_sink(n, up_rx, Box::new(ReactorSink(hub.clone())));
+
+    let mut threads = Vec::with_capacity(io_threads);
+    let mut listener = Some(listener);
+    for (id, wp) in pipes.into_iter().enumerate() {
         let hub = hub.clone();
-        pumps.push(
+        let l = if id == 0 { listener.take() } else { None };
+        threads.push(
             std::thread::Builder::new()
-                .name(format!("qadmm-pump-{node}"))
-                .spawn(move || pump_loop(&hub, node, rx))?,
+                .name(format!("qadmm-io-{id}"))
+                .spawn(move || shard_loop(&hub, id, wp, l))?,
         );
     }
-    let acceptor = {
-        let hub = hub.clone();
-        std::thread::Builder::new()
-            .name("qadmm-accept".into())
-            .spawn(move || accept_loop(&hub, listener))?
-    };
 
     // Same state derivation as `run_threaded`: workers re-derive the
     // identical x⁰ from the shared seed, the digest guarantees they can.
@@ -163,22 +494,23 @@ where
     srv.stall_timeout = opts.idle_timeout.max(Duration::from_secs(5));
 
     let run_res = match on_ready(&resolved) {
-        Ok(()) => srv.run(), // consumes srv; drops the endpoint → pumps drain
+        Ok(()) => srv.run(), // consumes srv; drops the endpoint + sink
         Err(e) => Err(e),
     };
 
     // teardown in every path: stop the socket side, then read the books
     hub.stop.store(true, Ordering::SeqCst);
-    for slot in &hub.slots {
-        if let Some(s) = slot.lock().unwrap().as_ref() {
-            s.shutdown();
-        }
-    }
-    acceptor.join().map_err(|_| anyhow::anyhow!("acceptor thread panicked"))?;
-    for p in pumps {
-        p.join().map_err(|_| anyhow::anyhow!("pump thread panicked"))?;
+    hub.wake_all();
+    for t in threads {
+        t.join().map_err(|_| anyhow::anyhow!("reactor shard panicked"))?;
     }
 
+    // a fatal listener failure explains a stalled run far better than the
+    // downstream stall it causes
+    let run_res = match hub.listener_err.lock().unwrap().take() {
+        Some(le) => run_res.map_err(|e| e.context(format!("listener failed: {le}"))),
+        None => run_res,
+    };
     let out = run_res?;
     let books = hub.books.lock().unwrap().clone();
     let accounting = accounting.lock().unwrap().clone();
@@ -188,64 +520,279 @@ where
         books,
         accounting,
         wall_s: clock.elapsed_secs(),
+        io_threads,
     })
 }
 
-fn accept_loop(hub: &Arc<Hub>, listener: Listener) {
-    let mut readers: Vec<JoinHandle<()>> = Vec::new();
+/// One reactor shard: poll its wake pipe + (shard 0) the listener + every
+/// owned connection; drain the inbox; run the per-connection read/write
+/// state machines; sweep idle peers; fold the dirty byte counters.
+fn shard_loop(hub: &Arc<Hub>, id: usize, wake: WakePipe, listener: Option<Listener>) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut pool = BufferPool::new();
+    let mut backoff = AcceptBackoff::new();
+    let mut next_shard = 0usize;
+    let mut fds: Vec<PollFd> = Vec::new();
+
     while !hub.stop.load(Ordering::Relaxed) {
+        // --- build the poll set ---
+        fds.clear();
+        fds.push(PollFd::new(wake.as_raw_fd(), POLLIN));
+        if let Some(l) = &listener {
+            if backoff.accepting() {
+                fds.push(PollFd::new(l.as_raw_fd(), POLLIN));
+            }
+        }
+        let base = fds.len();
+        for c in &conns {
+            let mut ev = POLLIN;
+            if !c.wq.is_empty() {
+                ev |= POLLOUT;
+            }
+            fds.push(PollFd::new(c.stream.as_raw_fd(), ev));
+        }
+
+        if poll_fds(&mut fds, POLL_SLICE).is_err() {
+            // poll itself failing (ENOMEM) is transient-or-fatal; a short
+            // sleep keeps a broken shard from spinning while stop decides
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        wake.drain();
+        if hub.stop.load(Ordering::Relaxed) {
+            break;
+        }
+
+        // --- readable connections (index-stable: nothing mutates the vec) ---
+        let polled = conns.len();
+        for i in 0..polled {
+            if fds[base + i].readable() && conns[i].gone.is_none() {
+                handle_readable(hub, id, &mut conns[i], &mut pool);
+            }
+        }
+
+        // --- inbox: adopted connections and downlink traffic ---
+        let cmds: Vec<ShardCmd> = {
+            let mut inbox = hub.shards[id].inbox.lock().unwrap();
+            inbox.drain(..).collect()
+        };
+        for cmd in cmds {
+            match cmd {
+                ShardCmd::Adopt(stream) => conns.push(Conn::new(stream)),
+                ShardCmd::Down(dm) => deliver(&dm, &mut conns),
+            }
+        }
+
+        // --- accept (shard 0) ---
+        if let Some(l) = &listener {
+            if backoff.accepting() {
+                accept_batch(hub, l, &mut backoff, &mut next_shard, &mut conns);
+            }
+        }
+
+        // --- write drains + slow-consumer eviction ---
+        for c in conns.iter_mut() {
+            if c.gone.is_none() && !c.wq.is_empty() {
+                flush_writes(c);
+            }
+            if c.gone.is_none() && c.wq.len() > hub.write_queue_limit {
+                // slow consumer: unwritten frames are discarded uncharged
+                c.gone = Some(Fate::CloseEvict);
+            }
+        }
+
+        // --- idle sweep ---
+        for c in conns.iter_mut() {
+            if c.gone.is_none() && c.last_rx.elapsed() >= hub.idle {
+                c.gone = Some(if c.node.is_some() {
+                    Fate::CloseEvict
+                } else {
+                    Fate::CloseClean
+                });
+            }
+        }
+
+        // --- detach the departed, fold the dirty ---
+        conns.retain_mut(|c| match c.gone {
+            Some(fate) => {
+                detach(hub, c, fate);
+                false
+            }
+            None => true,
+        });
+        fold_dirty(hub, &mut conns);
+    }
+
+    // stop: orderly teardown — fold every book, no Leave synthesis (the
+    // fold loop has already finished; these are not evictions)
+    for c in conns.iter_mut() {
+        fold_conn(hub, c);
+        if let Some(node) = c.node {
+            hub.attached[node].store(false, Ordering::SeqCst);
+        }
+        c.stream.shutdown();
+    }
+    // the listener drops here (shard 0) — removes the UDS socket file
+}
+
+/// Accept everything pending, classifying errors: transient ones skip the
+/// dead connection, resource exhaustion backs the listener off the poll
+/// set exponentially, and a fatal listener error stops the run and is
+/// surfaced to `serve` instead of spinning forever.
+fn accept_batch(
+    hub: &Arc<Hub>,
+    listener: &Listener,
+    backoff: &mut AcceptBackoff,
+    next_shard: &mut usize,
+    conns: &mut Vec<Conn>,
+) {
+    loop {
         match listener.accept() {
             Ok(Some(stream)) => {
-                let hub = hub.clone();
-                let spawned = std::thread::Builder::new()
-                    .name("qadmm-conn".into())
-                    .spawn(move || connection_loop(&hub, stream));
-                if let Ok(h) = spawned {
-                    readers.push(h);
+                backoff.clear();
+                let target = *next_shard;
+                *next_shard = (*next_shard + 1) % hub.shards.len();
+                if target == 0 {
+                    conns.push(Conn::new(stream));
+                } else {
+                    hub.shards[target].push(ShardCmd::Adopt(stream));
                 }
             }
-            // nothing pending (or a transient accept error): back off
-            Ok(None) | Err(_) => std::thread::sleep(Duration::from_millis(20)),
-        }
-        readers.retain(|h| !h.is_finished());
-    }
-    for h in readers {
-        let _ = h.join();
-    }
-    // listener drops here — removes the UDS socket file
-}
-
-fn connection_loop(hub: &Arc<Hub>, mut stream: Stream) {
-    let node = match handshake(hub, &mut stream) {
-        Ok(Some(node)) => node,
-        // rejected, garbage, or vanished before Hello: never on the books
-        Ok(None) | Err(_) => return,
-    };
-    let res = read_loop(hub, &mut stream, node);
-    // detach: the pump discards traffic for this node from now on
-    *hub.slots[node].lock().unwrap() = None;
-    hub.attached[node].store(false, Ordering::SeqCst);
-    match res {
-        // clean close (acked shutdown / server stop): no eviction needed
-        Ok(true) => {}
-        // EOF, idle half-open, I/O error, or a protocol violation after
-        // the handshake: synthesize the Leave the worker could not send
-        Ok(false) | Err(_) => {
-            let _ = hub.up_tx.send(NodeToServer::Leave { node });
+            Ok(None) => return, // drained
+            Err(e) => match classify_accept_error(&e) {
+                AcceptClass::Transient => continue,
+                AcceptClass::Resource => {
+                    backoff.bump();
+                    return;
+                }
+                AcceptClass::Fatal => {
+                    *hub.listener_err.lock().unwrap() = Some(e.to_string());
+                    hub.stop.store(true, Ordering::SeqCst);
+                    hub.wake_all();
+                    return;
+                }
+            },
         }
     }
 }
 
-/// Validate the `Hello` opener and claim the node's slot. `Ok(None)` means
-/// the connection was rejected (a `Reject` frame was attempted) — rejected
-/// connections never touch the per-link books.
-fn handshake(hub: &Arc<Hub>, stream: &mut Stream) -> Result<Option<usize>> {
-    let (frame, hello_bytes) = match read_frame(stream, &hub.stop, hub.idle)? {
-        ReadOutcome::Frame(f, b) => (f, b),
-        _ => return Ok(None),
-    };
+/// Append one downlink message to every connection it addresses. Detached
+/// nodes simply have no connection here: the message evaporates uncharged.
+fn deliver(dm: &DownMsg, conns: &mut [Conn]) {
+    for c in conns.iter_mut() {
+        if c.gone.is_some() || c.close_after_drain {
+            continue;
+        }
+        let Some(node) = c.node else { continue };
+        if let Some(target) = dm.target {
+            if target != node {
+                continue;
+            }
+        }
+        let bytes = match &dm.included {
+            None => dm.incl.clone(),
+            Some(list) => {
+                if list.binary_search(&(node as u32)).is_ok() {
+                    dm.incl.clone()
+                } else {
+                    dm.excl.clone()
+                }
+            }
+        };
+        c.wq.push_back(WriteItem { bytes, off: 0, charged_bits: dm.charged_bits, extra: dm.extra });
+    }
+}
+
+/// Drain the write queue as far as the socket allows. Books and charges
+/// move only when a frame's **last** byte reaches the kernel; a write
+/// error marks the connection for eviction with the partial frame
+/// uncounted on both ledgers.
+fn flush_writes(c: &mut Conn) {
+    while let Some(item) = c.wq.front_mut() {
+        match c.stream.write_nb(&item.bytes[item.off..]) {
+            Ok(0) => {
+                c.gone = Some(if c.node.is_some() { Fate::CloseEvict } else { Fate::CloseClean });
+                return;
+            }
+            Ok(n) => {
+                item.off += n;
+                if item.off == item.bytes.len() {
+                    c.counters.down_total += item.bytes.len() as u64;
+                    c.counters.down_extra += item.extra;
+                    if item.charged_bits > 0 {
+                        c.counters.down_bits += item.charged_bits;
+                        c.counters.down_msgs += 1;
+                    }
+                    c.wq.pop_front();
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                // write half died first: evict (Leave synthesized if attached)
+                c.gone = Some(if c.node.is_some() { Fate::CloseEvict } else { Fate::CloseClean });
+                return;
+            }
+        }
+    }
+    if c.close_after_drain && c.wq.is_empty() {
+        // reject delivered; the connection was never on the books
+        c.gone = Some(Fate::CloseClean);
+    }
+}
+
+/// Pull every complete frame the socket has buffered through the cursor,
+/// dispatching each into the fold loop. Sets `c.gone` on close/violation.
+fn handle_readable(hub: &Arc<Hub>, shard_id: usize, c: &mut Conn, pool: &mut BufferPool) {
+    loop {
+        match c.cursor.step(&mut c.stream, pool) {
+            Ok(CursorStep::Frame(frame, bytes)) => {
+                c.last_rx = Instant::now();
+                if c.close_after_drain {
+                    continue; // rejected peer babbling: ignore, stay off the books
+                }
+                match c.node {
+                    None => {
+                        if !handshake(hub, shard_id, c, frame, bytes) {
+                            return;
+                        }
+                    }
+                    Some(node) => {
+                        if !dispatch_frame(hub, c, node, frame, bytes) {
+                            return;
+                        }
+                    }
+                }
+            }
+            Ok(CursorStep::NeedMore) => return,
+            Ok(CursorStep::Eof) => {
+                c.gone = Some(match c.node {
+                    // EOF without an ack is an abrupt death (synthesize the
+                    // Leave); with the ack it is the orderly drain close
+                    Some(_) if !c.acked => Fate::CloseEvict,
+                    _ => Fate::CloseClean,
+                });
+                return;
+            }
+            Err(_) => {
+                // torn frame / lying prefix / undecodable garbage
+                c.gone = Some(match c.node {
+                    Some(_) => Fate::CloseEvict,
+                    None => Fate::CloseClean, // garbage opener: never attached
+                });
+                return;
+            }
+        }
+    }
+}
+
+/// Validate the `Hello` opener and claim the node's slot. Returns false if
+/// the connection is done for (rejected connections flush their `Reject`
+/// and close; they never touch the per-link books).
+fn handshake(hub: &Arc<Hub>, shard_id: usize, c: &mut Conn, frame: Frame, bytes: u64) -> bool {
     let Frame::Hello { proto, node, m, digest } = frame else {
-        anyhow::bail!("first frame was not Hello")
+        // first frame was not Hello: drop silently, as ever
+        c.gone = Some(Fate::CloseClean);
+        return false;
     };
     let reason = if proto != PROTO_VERSION {
         Some(format!("protocol version {proto} != {PROTO_VERSION}"))
@@ -259,147 +806,115 @@ fn handshake(hub: &Arc<Hub>, stream: &mut Stream) -> Result<Option<usize>> {
         None
     };
     if let Some(reason) = reason {
-        let _ = stream.write_frame(&Frame::Reject { reason });
-        return Ok(None);
+        c.queue_control(&Frame::Reject { reason });
+        c.close_after_drain = true;
+        return true; // keep alive long enough to flush the Reject
     }
     let node = node as usize;
     if hub.attached[node].swap(true, Ordering::SeqCst) {
-        let _ = stream.write_frame(&Frame::Reject {
-            reason: format!("node {node} already attached"),
-        });
-        return Ok(None);
+        c.queue_control(&Frame::Reject { reason: format!("node {node} already attached") });
+        c.close_after_drain = true;
+        return true;
     }
     // accepted: this connection is on the books from its Hello onward
     // (handshake frames are pure framing extra — charged 0 by eq. 20)
+    c.node = Some(node);
+    hub.node_shard[node].store(shard_id, Ordering::SeqCst);
+    c.counters.up_total += bytes;
+    c.counters.up_extra += bytes; // Hello charges 0: extra == total
+    c.queue_control(&Frame::Welcome);
+    true
+}
+
+/// Translate one post-handshake frame into the fold loop's message, with
+/// the same validation, seq stamping, and charging as the old per-
+/// connection reader. Returns false when the connection is finished.
+fn dispatch_frame(hub: &Arc<Hub>, c: &mut Conn, node: usize, frame: Frame, bytes: u64) -> bool {
+    c.counters.up_total += bytes;
+    c.counters.up_extra += frame.socket_extra_bytes();
+    let msg = match frame {
+        Frame::InitFull { node: fnode, x0, u0 } if fnode as usize == node => {
+            NodeToServer::InitFull { node, x0, u0 }
+        }
+        Frame::Update { node: fnode, dx_wire, du_wire } if fnode as usize == node => {
+            let seq = hub.seqs[node].fetch_add(1, Ordering::SeqCst);
+            NodeToServer::Update { node, iter: 0, seq, dx_wire, du_wire }
+        }
+        Frame::Skip { node: fnode } if fnode as usize == node => {
+            let seq = hub.seqs[node].fetch_add(1, Ordering::SeqCst);
+            NodeToServer::Skip { node, seq }
+        }
+        Frame::ShutdownAck { node: fnode } if fnode as usize == node => {
+            c.acked = true;
+            NodeToServer::ShutdownAck { node }
+        }
+        // wrong-node claim or a frame kind a worker must not send: a
+        // protocol violation after the handshake evicts
+        _ => {
+            c.gone = Some(Fate::CloseEvict);
+            return false;
+        }
+    };
+    // eq. (20) charge at the byte-moving point; control frames (skip/ack)
+    // stay off the books, like every other runtime
+    if matches!(msg, NodeToServer::Update { .. } | NodeToServer::InitFull { .. }) {
+        c.counters.up_bits += msg.wire_bits();
+        c.counters.up_msgs += 1;
+    }
+    if hub.up_tx.send(msg).is_err() {
+        // the fold loop finished first: orderly close
+        c.gone = Some(Fate::CloseClean);
+        return false;
+    }
+    true
+}
+
+/// Fold one connection's local counters into the global books and the
+/// charged eq. (20) ledger. Exactness: everything in the counters
+/// describes *completed* frames only.
+fn fold_conn(hub: &Hub, c: &mut Conn) {
+    let Some(node) = c.node else { return };
+    if !c.counters.dirty() {
+        return;
+    }
+    let k = std::mem::take(&mut c.counters);
     {
-        let mut b = hub.books.lock().unwrap();
-        b[node].up_total += hello_bytes;
-        b[node].up_extra += hello_bytes;
+        let mut books = hub.books.lock().unwrap();
+        books[node].up_total += k.up_total;
+        books[node].up_extra += k.up_extra;
+        books[node].down_total += k.down_total;
+        books[node].down_extra += k.down_extra;
     }
-    let wrote = stream.write_frame(&Frame::Welcome).and_then(|wb| {
-        let mut b = hub.books.lock().unwrap();
-        b[node].down_total += wb;
-        b[node].down_extra += wb;
-        stream.try_clone()
-    });
-    match wrote {
-        Ok(write_half) => {
-            *hub.slots[node].lock().unwrap() = Some(write_half);
-            Ok(Some(node))
+    if (k.up_msgs | k.down_msgs) != 0 {
+        let mut acc = hub.accounting.lock().unwrap();
+        if k.up_msgs != 0 {
+            acc.record_uplink_batch(node, k.up_msgs, k.up_bits);
         }
-        Err(e) => {
-            hub.attached[node].store(false, Ordering::SeqCst);
-            Err(e)
+        if k.down_msgs != 0 {
+            acc.record_downlink_batch(node, k.down_msgs, k.down_bits);
         }
     }
 }
 
-/// Decode frames off one attached connection into [`NodeToServer`]
-/// messages. Returns `Ok(true)` for a clean close (shutdown ack seen, or
-/// the server stopped), `Ok(false)` when the peer died (EOF/idle).
-fn read_loop(hub: &Arc<Hub>, stream: &mut Stream, node: usize) -> Result<bool> {
-    let mut acked = false;
-    loop {
-        match read_frame(stream, &hub.stop, hub.idle)? {
-            ReadOutcome::Frame(f, bytes) => {
-                {
-                    let mut b = hub.books.lock().unwrap();
-                    b[node].up_total += bytes;
-                    b[node].up_extra += f.socket_extra_bytes();
-                }
-                let msg = match f {
-                    Frame::InitFull { node: fnode, x0, u0 } => {
-                        ensure!(fnode as usize == node, "InitFull for wrong node");
-                        NodeToServer::InitFull { node, x0, u0 }
-                    }
-                    Frame::Update { node: fnode, dx_wire, du_wire } => {
-                        ensure!(fnode as usize == node, "Update for wrong node");
-                        let seq = hub.seqs[node].fetch_add(1, Ordering::SeqCst);
-                        NodeToServer::Update { node, iter: 0, seq, dx_wire, du_wire }
-                    }
-                    Frame::Skip { node: fnode } => {
-                        ensure!(fnode as usize == node, "Skip for wrong node");
-                        let seq = hub.seqs[node].fetch_add(1, Ordering::SeqCst);
-                        NodeToServer::Skip { node, seq }
-                    }
-                    Frame::ShutdownAck { node: fnode } => {
-                        ensure!(fnode as usize == node, "ShutdownAck for wrong node");
-                        acked = true;
-                        NodeToServer::ShutdownAck { node }
-                    }
-                    other => anyhow::bail!("unexpected frame from worker: {other:?}"),
-                };
-                // eq. (20) charge at the byte-moving point; control frames
-                // (skip/ack) stay off the books, like every other runtime
-                if matches!(
-                    msg,
-                    NodeToServer::Update { .. } | NodeToServer::InitFull { .. }
-                ) {
-                    let bits = msg.wire_bits();
-                    hub.accounting.lock().unwrap().record_uplink(node, bits);
-                }
-                if hub.up_tx.send(msg).is_err() {
-                    return Ok(true); // server loop finished first
-                }
-            }
-            ReadOutcome::Eof => return Ok(acked),
-            ReadOutcome::IdleTimeout => return Ok(false),
-            ReadOutcome::Stopped => return Ok(true),
-        }
+/// Amortized fold: once per poll batch, not per frame — the recorder's
+/// mid-run `comm_bits` stays current to within one wakeup while the frame
+/// hot path touches no global lock.
+fn fold_dirty(hub: &Hub, conns: &mut [Conn]) {
+    for c in conns.iter_mut() {
+        fold_conn(hub, c);
     }
 }
 
-/// Per-node downlink pump: owns the node's `Receiver` for the whole run
-/// (across attach/detach cycles), translating [`ServerToNode`] into wire
-/// frames. Detached slot → the message is discarded and **nothing** is
-/// charged: eq. (20) counts realized transmissions only.
-fn pump_loop(hub: &Arc<Hub>, node: usize, rx: Receiver<ServerToNode>) {
-    loop {
-        let msg = match rx.recv_timeout(Duration::from_millis(100)) {
-            Ok(m) => m,
-            Err(RecvTimeoutError::Timeout) => {
-                if hub.stop.load(Ordering::Relaxed) {
-                    return;
-                }
-                continue;
-            }
-            Err(RecvTimeoutError::Disconnected) => return,
-        };
-        let charged = matches!(
-            msg,
-            ServerToNode::Consensus { .. } | ServerToNode::InitZ { .. }
-        );
-        let bits = msg.wire_bits();
-        let frame = match msg {
-            ServerToNode::Consensus { iter, included, dz_wire, last } => Frame::Consensus {
-                round: iter as u32,
-                // per-recipient flag instead of the id list: the pump is a
-                // unicast writer, it knows who it serves
-                included: included.binary_search(&(node as u32)).is_ok(),
-                last,
-                dz_wire,
-            },
-            ServerToNode::InitZ { z0 } => Frame::InitZ { z0 },
-            ServerToNode::Shutdown => Frame::Shutdown,
-        };
-        let mut slot = hub.slots[node].lock().unwrap();
-        let Some(s) = slot.as_mut() else { continue };
-        match s.write_frame(&frame) {
-            Ok(bytes) => {
-                drop(slot);
-                if charged {
-                    hub.accounting.lock().unwrap().record_downlink(node, bits);
-                }
-                let mut b = hub.books.lock().unwrap();
-                b[node].down_total += bytes;
-                b[node].down_extra += frame.socket_extra_bytes();
-            }
-            Err(_) => {
-                // write half died first: detach and evict
-                *slot = None;
-                drop(slot);
-                let _ = hub.up_tx.send(NodeToServer::Leave { node });
-            }
+/// Remove a connection from the run: definitive counter fold, slot
+/// release, and (for evictions) the synthesized `Leave` the worker could
+/// not send. Queued-unwritten frames are discarded uncharged.
+fn detach(hub: &Hub, c: &mut Conn, fate: Fate) {
+    fold_conn(hub, c);
+    if let Some(node) = c.node {
+        hub.attached[node].store(false, Ordering::SeqCst);
+        if fate == Fate::CloseEvict {
+            let _ = hub.up_tx.send(NodeToServer::Leave { node });
         }
     }
+    c.stream.shutdown();
 }

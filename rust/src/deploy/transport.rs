@@ -1,23 +1,30 @@
 //! Socket transport for the deployment: one abstraction over TCP and
-//! Unix-domain sockets (std-only — no async runtime; the server is
-//! thread-per-connection, which is the right shape for hundreds of
-//! workers, not millions of sockets), plus the framed read path with the
-//! interruptible/idle semantics the server's liveness story needs:
+//! Unix-domain sockets (std-only — no async runtime and no extra crates;
+//! readiness comes from a thin `poll(2)` wrapper over the raw fds std
+//! already exposes), plus both framed read disciplines the two sides need:
 //!
-//! - reads poll in short slices so a reader thread notices the stop flag
-//!   promptly instead of blocking forever on a silent peer;
-//! - a peer that goes quiet for longer than the idle timeout is reported
-//!   as [`ReadOutcome::IdleTimeout`] — the half-open-connection case TCP
+//! - the **server** is a readiness-driven reactor: connections are
+//!   nonblocking, and [`FrameCursor`] reassembles `[u32 len][u8 kind][body]`
+//!   frames across poll wakeups with per-shard pooled body buffers — a
+//!   partial frame costs a cursor, never a blocked thread;
+//! - the **worker** keeps the simple blocking loop ([`read_frame`]), which
+//!   polls in short slices so a raised stop flag wins at the next slice
+//!   boundary between frames (a peer trickling bytes can no longer hold
+//!   teardown hostage until the idle budget expires);
+//! - a peer that goes quiet past the idle budget is reported as
+//!   [`ReadOutcome::IdleTimeout`] — the half-open-connection case TCP
 //!   keepalives are too slow for — so the server can evict it and the
 //!   P/τ trigger never wedges on a dead worker;
-//! - a clean EOF **between** frames is [`ReadOutcome::Eof`] (orderly
-//!   close); an EOF or garbage **inside** a frame is an `Err`.
+//! - a clean EOF **between** frames is orderly close; an EOF or garbage
+//!   **inside** a frame is an `Err`.
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::os::fd::{AsRawFd, RawFd};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
@@ -25,8 +32,120 @@ use anyhow::{bail, ensure, Context, Result};
 use super::frame::{Frame, MAX_FRAME_BYTES};
 
 /// How long one blocking read slice lasts before the loop re-checks the
-/// stop flag and the idle budget.
-const POLL_SLICE: Duration = Duration::from_millis(100);
+/// stop flag and the idle budget (worker side); also the reactor's maximum
+/// poll timeout, bounding how stale an idle sweep can be.
+pub const POLL_SLICE: Duration = Duration::from_millis(100);
+
+// ---------------------------------------------------------------------------
+// poll(2), std-only
+//
+// The reactor needs readiness multiplexing over a few hundred fds. std has
+// no portable API for that, and the container policy is "no new crates", so
+// this is the raw libc call declared directly: `pollfd` is a stable part of
+// the POSIX ABI (fd: int, events: short, revents: short) and `nfds_t` is
+// unsigned long on Linux (unsigned int elsewhere).
+// ---------------------------------------------------------------------------
+
+pub const POLLIN: i16 = 0x001;
+pub const POLLOUT: i16 = 0x004;
+pub const POLLERR: i16 = 0x008;
+pub const POLLHUP: i16 = 0x010;
+pub const POLLNVAL: i16 = 0x020;
+
+/// One entry in a `poll(2)` set — ABI-identical to `struct pollfd`.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct PollFd {
+    pub fd: RawFd,
+    pub events: i16,
+    pub revents: i16,
+}
+
+impl PollFd {
+    pub fn new(fd: RawFd, events: i16) -> Self {
+        Self { fd, events, revents: 0 }
+    }
+
+    /// Error conditions (HUP/ERR/NVAL) are reported as readable so the
+    /// owner's read path observes the failure and closes the connection.
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLHUP | POLLERR | POLLNVAL) != 0
+    }
+
+    pub fn writable(&self) -> bool {
+        self.revents & (POLLOUT | POLLHUP | POLLERR | POLLNVAL) != 0
+    }
+}
+
+#[cfg(target_os = "linux")]
+type NfdsT = std::os::raw::c_ulong;
+#[cfg(not(target_os = "linux"))]
+type NfdsT = std::os::raw::c_uint;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: std::os::raw::c_int) -> std::os::raw::c_int;
+}
+
+/// Wait for readiness on a set of fds. Returns the number of entries with
+/// nonzero `revents` (0 on timeout). EINTR retries with the full timeout —
+/// callers tolerate the jitter, and the wake pipe bounds real latency.
+pub fn poll_fds(fds: &mut [PollFd], timeout: Duration) -> std::io::Result<usize> {
+    let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+    loop {
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = std::io::Error::last_os_error();
+        if err.kind() != ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+/// The reactor's wake channel: a nonblocking socketpair standing in for a
+/// self-pipe (std exposes `UnixStream::pair`, not `pipe(2)`). The read end
+/// sits in the shard's poll set; [`Waker`]s are cheap clonable handles to
+/// the write end that any thread can fire.
+pub struct WakePipe {
+    rx: UnixStream,
+    tx: Arc<UnixStream>,
+}
+
+impl WakePipe {
+    pub fn new() -> Result<WakePipe> {
+        let (rx, tx) = UnixStream::pair().context("wake pipe")?;
+        rx.set_nonblocking(true)?;
+        tx.set_nonblocking(true)?;
+        Ok(WakePipe { rx, tx: Arc::new(tx) })
+    }
+
+    pub fn waker(&self) -> Waker {
+        Waker(self.tx.clone())
+    }
+
+    pub fn as_raw_fd(&self) -> RawFd {
+        self.rx.as_raw_fd()
+    }
+
+    /// Swallow every pending wake byte (level-triggered poll would
+    /// otherwise spin on them).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 256];
+        while matches!((&self.rx).read(&mut buf), Ok(n) if n > 0) {}
+    }
+}
+
+/// Handle to a [`WakePipe`]'s write end. `wake` is wait-free: a full pipe
+/// means a wake is already pending, which is all a level wake needs.
+#[derive(Clone)]
+pub struct Waker(Arc<UnixStream>);
+
+impl Waker {
+    pub fn wake(&self) {
+        let _ = (&*self.0).write(&[1u8]);
+    }
+}
 
 /// A deployment endpoint address: `tcp:HOST:PORT` or `uds:/path/to.sock`
 /// (a bare path containing `/` is accepted as UDS for convenience).
@@ -59,23 +178,58 @@ impl Endpoint {
 }
 
 /// A connected stream over either transport. Cloning duplicates the OS
-/// handle (reader thread + writer pump can own halves independently).
+/// handle (the worker's writer can own a half independently).
 pub enum Stream {
     Tcp(TcpStream),
     Uds(UnixStream),
 }
 
+impl AsRawFd for Stream {
+    fn as_raw_fd(&self) -> RawFd {
+        match self {
+            Stream::Tcp(s) => s.as_raw_fd(),
+            Stream::Uds(s) => s.as_raw_fd(),
+        }
+    }
+}
+
 impl Stream {
-    pub fn connect(ep: &Endpoint) -> Result<Stream> {
+    fn connect_once(ep: &Endpoint) -> std::io::Result<Stream> {
         Ok(match ep {
-            Endpoint::Tcp(addr) => {
-                Stream::Tcp(TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?)
-            }
-            Endpoint::Uds(path) => Stream::Uds(
-                UnixStream::connect(path)
-                    .with_context(|| format!("connect {}", path.display()))?,
-            ),
+            Endpoint::Tcp(addr) => Stream::Tcp(TcpStream::connect(addr)?),
+            Endpoint::Uds(path) => Stream::Uds(UnixStream::connect(path)?),
         })
+    }
+
+    pub fn connect(ep: &Endpoint) -> Result<Stream> {
+        Stream::connect_once(ep).with_context(|| format!("connect {}", ep.label()))
+    }
+
+    /// Connect with bounded exponential backoff on transient failures. A
+    /// full loadgen burst can overflow the listen backlog (ECONNREFUSED /
+    /// ECONNRESET on the SYN), and a worker process racing `serve`'s bind
+    /// can see ENOENT on the socket path — both deserve a retry, not a
+    /// permanently dead worker. Hard errors (EACCES, unroutable address)
+    /// fail immediately.
+    pub fn connect_retry(ep: &Endpoint, attempts: u32, base_backoff: Duration) -> Result<Stream> {
+        let attempts = attempts.max(1);
+        let mut delay = base_backoff;
+        let mut last: Option<std::io::Error> = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_secs(2));
+            }
+            match Stream::connect_once(ep) {
+                Ok(s) => return Ok(s),
+                Err(e) if transient_connect_error(&e) => last = Some(e),
+                Err(e) => {
+                    return Err(e).with_context(|| format!("connect {}", ep.label()));
+                }
+            }
+        }
+        Err(last.expect("at least one attempt ran"))
+            .with_context(|| format!("connect {} failed after {attempts} attempts", ep.label()))
     }
 
     pub fn try_clone(&self) -> Result<Stream> {
@@ -89,6 +243,14 @@ impl Stream {
         match self {
             Stream::Tcp(s) => s.set_read_timeout(t)?,
             Stream::Uds(s) => s.set_read_timeout(t)?,
+        }
+        Ok(())
+    }
+
+    pub fn set_nonblocking(&self, nb: bool) -> Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nb)?,
+            Stream::Uds(s) => s.set_nonblocking(nb)?,
         }
         Ok(())
     }
@@ -120,8 +282,17 @@ impl Stream {
         }
     }
 
+    /// One nonblocking write attempt; the raw io::Result lets the reactor
+    /// distinguish WouldBlock (keep queued) from a dead peer (evict).
+    pub fn write_nb(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Uds(s) => s.write(buf),
+        }
+    }
+
     /// Write one encoded frame and flush; returns the bytes put on the
-    /// socket (the pump's byte-counter input).
+    /// socket (the worker's byte-counter input). Blocking-mode streams only.
     pub fn write_frame(&mut self, frame: &Frame) -> Result<u64> {
         let bytes = frame.encode();
         match self {
@@ -138,6 +309,166 @@ impl Stream {
     }
 }
 
+fn transient_connect_error(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        ErrorKind::ConnectionRefused
+            | ErrorKind::ConnectionReset
+            | ErrorKind::ConnectionAborted
+            | ErrorKind::TimedOut
+            | ErrorKind::NotFound
+            | ErrorKind::AddrNotAvailable
+            | ErrorKind::WouldBlock
+            | ErrorKind::Interrupted
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Nonblocking frame reassembly (server side)
+// ---------------------------------------------------------------------------
+
+/// Recycles frame body buffers within one reactor shard, so the steady
+/// state allocates nothing per frame: `take` hands back a cleared buffer
+/// sized to the frame, `put` keeps it unless it is oversized or the pool
+/// is full (a one-off 200 MB init frame must not pin 200 MB forever).
+pub struct BufferPool {
+    bufs: Vec<Vec<u8>>,
+}
+
+/// Buffers above this capacity are dropped instead of pooled.
+const POOL_MAX_BUF_BYTES: usize = 1 << 20;
+/// At most this many idle buffers are retained per pool.
+const POOL_MAX_BUFS: usize = 16;
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self { bufs: Vec::new() }
+    }
+
+    pub fn take(&mut self, len: usize) -> Vec<u8> {
+        let mut b = self.bufs.pop().unwrap_or_default();
+        b.clear();
+        b.resize(len, 0);
+        b
+    }
+
+    pub fn put(&mut self, buf: Vec<u8>) {
+        if buf.capacity() <= POOL_MAX_BUF_BYTES && self.bufs.len() < POOL_MAX_BUFS {
+            self.bufs.push(buf);
+        }
+    }
+}
+
+/// One step of [`FrameCursor::step`].
+#[derive(Debug)]
+pub enum CursorStep {
+    /// A complete decoded frame plus its total socket footprint in bytes
+    /// (length prefix included).
+    Frame(Frame, u64),
+    /// The socket has no more data right now; re-arm POLLIN and return.
+    NeedMore,
+    /// Orderly close: EOF on a frame boundary.
+    Eof,
+}
+
+/// Per-connection read state machine: reassembles `[u32 len][u8 kind+body]`
+/// frames from a **nonblocking** stream across poll wakeups. A single-byte-
+/// at-a-time sender costs cursor arithmetic, never a blocked thread, and a
+/// lying length prefix is rejected before any buffer is sized from it.
+///
+/// Exactness contract: byte counts are reported only for **complete**
+/// frames — a partial frame at eviction/teardown was never handed to the
+/// caller and so is neither booked nor charged, keeping both reconciliation
+/// ledgers describing the identical set of frames.
+#[derive(Default)]
+pub struct FrameCursor {
+    len_buf: [u8; 4],
+    len_got: usize,
+    body: Vec<u8>,
+    body_got: usize,
+}
+
+impl FrameCursor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True once any byte of the next frame has been consumed (an EOF here
+    /// is a torn frame, not an orderly close).
+    pub fn mid_frame(&self) -> bool {
+        self.len_got > 0 || !self.body.is_empty()
+    }
+
+    /// Pull as much as the socket has: returns the next complete frame,
+    /// or `NeedMore` on WouldBlock, or `Eof` on a clean boundary close.
+    /// Call in a loop to drain a readable socket (frames already buffered
+    /// by the kernel decode without another poll wakeup).
+    pub fn step(&mut self, s: &mut Stream, pool: &mut BufferPool) -> Result<CursorStep> {
+        loop {
+            if self.body.is_empty() {
+                match s.read_impl(&mut self.len_buf[self.len_got..4]) {
+                    Ok(0) => {
+                        if self.len_got == 0 {
+                            return Ok(CursorStep::Eof);
+                        }
+                        bail!("connection closed mid-frame ({} of 4 header bytes)", self.len_got);
+                    }
+                    Ok(n) => {
+                        self.len_got += n;
+                        if self.len_got == 4 {
+                            let len = u32::from_le_bytes(self.len_buf);
+                            ensure!(
+                                (1..=MAX_FRAME_BYTES).contains(&len),
+                                "frame length {len} outside (0, {MAX_FRAME_BYTES}]"
+                            );
+                            self.body = pool.take(len as usize);
+                            self.body_got = 0;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        return Ok(CursorStep::NeedMore)
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(e) => return Err(e.into()),
+                }
+            } else {
+                match s.read_impl(&mut self.body[self.body_got..]) {
+                    Ok(0) => bail!(
+                        "connection closed mid-frame ({} of {} body bytes)",
+                        self.body_got,
+                        self.body.len()
+                    ),
+                    Ok(n) => {
+                        self.body_got += n;
+                        if self.body_got == self.body.len() {
+                            let decoded = Frame::decode(self.body[0], &self.body[1..]);
+                            let bytes = 4 + self.body.len() as u64;
+                            pool.put(std::mem::take(&mut self.body));
+                            self.len_got = 0;
+                            return Ok(CursorStep::Frame(decoded?, bytes));
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        return Ok(CursorStep::NeedMore)
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocking framed reads (worker side)
+// ---------------------------------------------------------------------------
+
 /// What one framed-read attempt produced.
 pub enum ReadOutcome {
     /// A complete, decoded frame plus its total socket footprint in bytes
@@ -147,15 +478,18 @@ pub enum ReadOutcome {
     Eof,
     /// The peer went silent past the idle budget (half-open connection).
     IdleTimeout,
-    /// The stop flag was raised mid-wait; nothing was consumed mid-frame.
+    /// The stop flag was raised mid-wait; no complete frame was consumed.
     Stopped,
 }
 
 /// Read exactly `buf.len()` bytes, polling in [`POLL_SLICE`] slices.
-/// `started` is Some once part of a frame has been consumed — then EOF and
-/// stop both become hard errors (a frame must never be torn). Returns
-/// `Ok(None)` for eof-at-boundary / stop / idle, distinguished by the
-/// caller from how much was read.
+/// `mid_frame` is true once part of a frame has been consumed — then EOF
+/// and idle both become hard errors (a frame must never be torn). A raised
+/// stop flag wins at the next slice boundary regardless of how many header
+/// bytes have trickled in (teardown discards them uncounted); only a
+/// mid-*body* stop is an error, because the caller has already sized a
+/// buffer from the prefix and a silent discard would be indistinguishable
+/// from a torn frame.
 fn read_full(
     s: &mut Stream,
     buf: &mut [u8],
@@ -180,7 +514,10 @@ fn read_full(
             Err(e)
                 if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
             {
-                if stop.load(Ordering::Relaxed) && got == 0 && !mid_frame {
+                if stop.load(Ordering::Relaxed) {
+                    if mid_frame {
+                        bail!("stopped mid-frame ({got} of {} bytes)", buf.len());
+                    }
                     return Ok(Some(ReadOutcome::Stopped));
                 }
                 if quiet_since.elapsed() >= idle {
@@ -229,10 +566,19 @@ pub fn read_frame_blocking(s: &mut Stream, idle: Duration) -> Result<ReadOutcome
 }
 
 /// A bound listener over either transport, in non-blocking accept mode so
-/// the acceptor thread can poll a stop flag.
+/// the reactor can park it in a poll set.
 pub enum Listener {
     Tcp(TcpListener),
     Uds(UnixListener, PathBuf),
+}
+
+impl AsRawFd for Listener {
+    fn as_raw_fd(&self) -> RawFd {
+        match self {
+            Listener::Tcp(l) => l.as_raw_fd(),
+            Listener::Uds(l, _) => l.as_raw_fd(),
+        }
+    }
 }
 
 impl Listener {
@@ -257,8 +603,11 @@ impl Listener {
         }
     }
 
-    /// Non-blocking accept: `Ok(None)` when nothing is pending.
-    pub fn accept(&self) -> Result<Option<Stream>> {
+    /// Non-blocking accept: `Ok(None)` when nothing is pending. The raw
+    /// io::Error is preserved so the caller can classify transient vs
+    /// resource-exhaustion vs fatal listener failures. Accepted streams
+    /// come back nonblocking and tuned — reactor-ready.
+    pub fn accept(&self) -> std::io::Result<Option<Stream>> {
         let res = match self {
             Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
             Listener::Uds(l, _) => l.accept().map(|(s, _)| Stream::Uds(s)),
@@ -266,12 +615,14 @@ impl Listener {
         match res {
             Ok(s) => {
                 s.tune();
-                // per-connection reads poll in short slices
-                s.set_read_timeout(Some(POLL_SLICE))?;
+                match &s {
+                    Stream::Tcp(t) => t.set_nonblocking(true)?,
+                    Stream::Uds(u) => u.set_nonblocking(true)?,
+                }
                 Ok(Some(s))
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => Ok(None),
-            Err(e) => Err(e.into()),
+            Err(e) => Err(e),
         }
     }
 }
@@ -356,5 +707,130 @@ mod tests {
             ReadOutcome::IdleTimeout => {}
             _ => panic!("expected idle timeout"),
         }
+    }
+
+    /// The stop-flag blind spot, fixed: a peer that has trickled *part* of
+    /// a length prefix no longer holds teardown until the idle budget —
+    /// stop wins at the next poll slice between frames.
+    #[test]
+    fn stop_wins_with_partial_header_bytes() {
+        let (mut a, mut b) = pair();
+        b.set_read_timeout(Some(Duration::from_millis(5))).unwrap();
+        if let Stream::Uds(s) = &mut a {
+            s.write_all(&[0x07, 0x00]).unwrap(); // half a length prefix
+        }
+        let stop = AtomicBool::new(true);
+        let t0 = Instant::now();
+        // idle budget is huge; only the stop flag can end this promptly
+        match read_frame(&mut b, &stop, Duration::from_secs(3600)).unwrap() {
+            ReadOutcome::Stopped => {}
+            _ => panic!("expected Stopped"),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "stop did not win promptly");
+    }
+
+    /// Single-byte-at-a-time writer vs the nonblocking cursor: the frame
+    /// reassembles across arbitrarily torn reads, byte counts stay exact,
+    /// and the body buffer comes from / returns to the pool.
+    #[test]
+    fn cursor_reassembles_partial_frames() {
+        let (mut a, mut b) = pair();
+        b.set_nonblocking(true).unwrap();
+        let f = Frame::Update { node: 9, dx_wire: vec![1, 2, 3, 4, 5], du_wire: vec![6, 7] };
+        let enc = f.encode();
+
+        let mut pool = BufferPool::new();
+        let mut cur = FrameCursor::new();
+        let mut got = None;
+        for (i, byte) in enc.iter().enumerate() {
+            if let Stream::Uds(s) = &mut a {
+                s.write_all(&[*byte]).unwrap();
+            }
+            match cur.step(&mut b, &mut pool).unwrap() {
+                CursorStep::Frame(frame, bytes) => {
+                    assert_eq!(i, enc.len() - 1, "frame completed early");
+                    assert_eq!(bytes, enc.len() as u64);
+                    got = Some(frame);
+                }
+                CursorStep::NeedMore => {
+                    assert!(i < enc.len() - 1, "NeedMore after the last byte");
+                    assert!(cur.mid_frame());
+                }
+                CursorStep::Eof => panic!("spurious eof"),
+            }
+        }
+        assert_eq!(got.expect("frame never completed"), f);
+        assert!(!cur.mid_frame());
+
+        // second frame reuses the pooled body buffer; then a clean Eof
+        let f2 = Frame::Skip { node: 1 };
+        let wrote = a.write_frame(&f2).unwrap();
+        match cur.step(&mut b, &mut pool).unwrap() {
+            CursorStep::Frame(frame, bytes) => {
+                assert_eq!(frame, f2);
+                assert_eq!(bytes, wrote);
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+        drop(a);
+        assert!(matches!(cur.step(&mut b, &mut pool).unwrap(), CursorStep::Eof));
+    }
+
+    /// EOF mid-frame through the cursor is a torn frame, not an orderly
+    /// close — and a lying length prefix is rejected before allocation.
+    #[test]
+    fn cursor_rejects_torn_and_oversized_frames() {
+        let (mut a, mut b) = pair();
+        b.set_nonblocking(true).unwrap();
+        if let Stream::Uds(s) = &mut a {
+            s.write_all(&[0x05, 0x00]).unwrap(); // half a header, then die
+        }
+        drop(a);
+        let mut pool = BufferPool::new();
+        let mut cur = FrameCursor::new();
+        let err = cur.step(&mut b, &mut pool).unwrap_err();
+        assert!(err.to_string().contains("mid-frame"), "{err}");
+
+        let (mut a2, mut b2) = pair();
+        b2.set_nonblocking(true).unwrap();
+        if let Stream::Uds(s) = &mut a2 {
+            s.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        }
+        let mut cur2 = FrameCursor::new();
+        let err = cur2.step(&mut b2, &mut pool).unwrap_err();
+        assert!(err.to_string().contains("outside"), "{err}");
+    }
+
+    /// The wake pipe interrupts a poll promptly and drains level-clean.
+    #[test]
+    fn wake_pipe_interrupts_poll() {
+        let wp = WakePipe::new().unwrap();
+        let waker = wp.waker();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            waker.wake();
+        });
+        let mut fds = [PollFd::new(wp.as_raw_fd(), POLLIN)];
+        let t0 = Instant::now();
+        let n = poll_fds(&mut fds, Duration::from_secs(10)).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].readable());
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        wp.drain();
+        // drained: an immediate poll now times out
+        let mut fds = [PollFd::new(wp.as_raw_fd(), POLLIN)];
+        assert_eq!(poll_fds(&mut fds, Duration::from_millis(1)).unwrap(), 0);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn connect_retry_gives_up_on_hard_failure_fast() {
+        // nothing listens here and nothing will: NotFound is transient
+        // (bind race) so it retries, but the attempt budget bounds it
+        let ep = Endpoint::Uds(PathBuf::from("/tmp/qadmm-definitely-absent.sock"));
+        let t0 = Instant::now();
+        let err = Stream::connect_retry(&ep, 3, Duration::from_millis(1)).unwrap_err();
+        assert!(err.to_string().contains("after 3 attempts"), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5));
     }
 }

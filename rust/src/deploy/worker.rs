@@ -30,11 +30,24 @@ pub struct WorkerOptions {
     /// Churn injection for tests: sever the connection abruptly — no ack,
     /// no goodbye — after sending this many updates.
     pub die_after_updates: Option<u64>,
+    /// Connect attempts before giving up. A loadgen burst of hundreds of
+    /// simultaneous connects can overflow the listen backlog; a refused
+    /// connect must not kill the worker permanently.
+    pub connect_attempts: u32,
+    /// First retry delay; doubles per attempt (capped inside
+    /// [`Stream::connect_retry`]).
+    pub connect_backoff: Duration,
 }
 
 impl WorkerOptions {
     pub fn new(node: usize) -> Self {
-        Self { node, idle_timeout: Duration::from_secs(60), die_after_updates: None }
+        Self {
+            node,
+            idle_timeout: Duration::from_secs(60),
+            die_after_updates: None,
+            connect_attempts: 8,
+            connect_backoff: Duration::from_millis(10),
+        }
     }
 }
 
@@ -71,7 +84,8 @@ pub fn run_worker(
     let x0 = problem.init_x(&mut init_rng);
     let mut rng = root.fork(200 + opts.node as u64);
 
-    let mut stream = Stream::connect(connect)?;
+    let mut stream =
+        Stream::connect_retry(connect, opts.connect_attempts, opts.connect_backoff)?;
     stream.tune();
     stream.set_read_timeout(Some(Duration::from_millis(100)))?;
     let mut report = WorkerReport::default();

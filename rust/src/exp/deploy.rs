@@ -28,7 +28,7 @@ use crate::admm::replay::replay_timeline;
 use crate::admm::runner::trial_seed;
 use crate::admm::sim::TrialRngs;
 use crate::config::{presets, Backend, ExperimentConfig, ProblemKind};
-use crate::deploy::server::{serve, ServeOptions, ServeReport};
+use crate::deploy::server::{serve, serve_tuned, ReactorOptions, ServeOptions, ServeReport};
 use crate::deploy::transport::Endpoint;
 use crate::deploy::worker::{run_worker, WorkerOptions, WorkerReport};
 use crate::problems::lasso::{LassoConfig, LassoProblem};
@@ -161,12 +161,25 @@ pub fn serve_with_threads(
     nodes: usize,
     opts: &ServeOptions,
 ) -> Result<ServeReport> {
+    serve_with_threads_tuned(cfg, listen, nodes, opts, &ReactorOptions::default())
+}
+
+/// [`serve_with_threads`] with explicit reactor tuning (shard count,
+/// write-queue bound) — the loadgen sweep and the reactor tests use this.
+pub fn serve_with_threads_tuned(
+    cfg: &ExperimentConfig,
+    listen: &Endpoint,
+    nodes: usize,
+    opts: &ServeOptions,
+    reactor: &ReactorOptions,
+) -> Result<ServeReport> {
     let handles: Mutex<Vec<JoinHandle<Result<WorkerReport>>>> = Mutex::new(Vec::new());
-    let report = serve(
+    let report = serve_tuned(
         cfg,
         make_native_problem(cfg)?,
         listen,
         opts,
+        reactor,
         |ep| {
             let mut hs = handles.lock().unwrap();
             for node in 0..nodes {
@@ -187,6 +200,58 @@ pub fn serve_with_threads(
         ensure!(wr.acked_shutdown, "worker {node} exited without acking the drain");
     }
     Ok(report)
+}
+
+/// One `serve --loadgen` style measurement, summarized for the bench
+/// harness and the CLI sweep.
+#[derive(Debug, Clone)]
+pub struct LoadgenResult {
+    pub nodes: usize,
+    pub rounds: usize,
+    pub wall_s: f64,
+    pub rounds_per_s: f64,
+    /// Reactor shard count (server thread total is `io_threads + 1`).
+    pub io_threads: usize,
+    /// Round-interval percentiles in seconds (None below two rounds).
+    pub p50_s: Option<f64>,
+    pub p99_s: Option<f64>,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+}
+
+/// Run an N-worker in-process loadgen over a UDS, reconcile the byte
+/// books exactly, and summarize throughput + latency. This is the unit the
+/// `deploy_loadgen` bench section and `qadmm serve --loadgen` both record.
+pub fn run_loadgen(nodes: usize, iters: usize) -> Result<LoadgenResult> {
+    let sock = std::env::temp_dir()
+        .join(format!("qadmm-loadgen-{}-{nodes}.sock", std::process::id()));
+    let cfg = smoke_cfg(nodes, iters);
+    let report = serve_with_threads(&cfg, &Endpoint::Uds(sock), nodes, &ServeOptions::default())?;
+    crate::deploy::reconcile(&report.books, &report.accounting)
+        .context("loadgen byte books drifted")?;
+    Ok(summarize_loadgen(nodes, &report))
+}
+
+/// Fold a [`ServeReport`] into the loadgen summary shape.
+pub fn summarize_loadgen(nodes: usize, report: &ServeReport) -> LoadgenResult {
+    let rounds = report.timeline.rounds.len();
+    let times: Vec<f64> = report.timeline.rounds.iter().map(|r| r.time).collect();
+    let pcts = round_latency_stats(&times);
+    let (up, down) = report
+        .books
+        .iter()
+        .fold((0u64, 0u64), |(u, d), b| (u + b.up_total, d + b.down_total));
+    LoadgenResult {
+        nodes,
+        rounds,
+        wall_s: report.wall_s,
+        rounds_per_s: rounds as f64 / report.wall_s.max(1e-9),
+        io_threads: report.io_threads,
+        p50_s: pcts.map(|(p50, _)| p50),
+        p99_s: pcts.map(|(_, p99)| p99),
+        bytes_up: up,
+        bytes_down: down,
+    }
 }
 
 fn serve_with_processes(

@@ -109,10 +109,15 @@ USAGE: qadmm <cmd> [--options]
              and replays it through the threaded bridge)
   serve     --preset NAME [--listen EP] [--nodes N] [--iters N]
             [--idle-timeout SECS] [--record-timeline FILE] [--loadgen N]
-            (socket deployment server: binds EP, drives the fold loop over
-             real connections, reconciles socket bytes against eq. 20 bits;
+            [--io-threads K]
+            (socket deployment server: a sharded poll(2) reactor — K I/O
+             threads (default min(cores, 8)) own all connections, so the
+             server runs K+1 threads total regardless of fleet size; binds
+             EP, drives the fold loop over real connections, reconciles
+             socket bytes against eq. 20 bits exactly;
              --loadgen N runs N in-process workers against the socket and
-             reports rounds/s, per-link B/s, p50/p99 round latency;
+             reports rounds/s, io threads, per-link B/s, p50/p99 round
+             latency — N in {64, 256, 512} is the bench sweep shape;
              the old threaded in-process deployment is `run --engine threaded`)
   worker    --connect EP --node I [--preset NAME] [--nodes N]
             [--idle-timeout SECS]
@@ -570,6 +575,7 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     let listen = Endpoint::parse(&args.str("listen", "tcp:127.0.0.1:7077"))?;
     let loadgen = args.usize("loadgen", 0);
     let idle = args.f64("idle-timeout", 30.0);
+    let io_threads = args.usize("io-threads", 0);
     let record = args.str_opt("record-timeline").map(PathBuf::from);
     args.finish()?;
     if loadgen > 0 {
@@ -585,16 +591,21 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     let opts = qadmm::deploy::server::ServeOptions {
         idle_timeout: std::time::Duration::from_secs_f64(idle),
     };
+    let reactor = qadmm::deploy::server::ReactorOptions {
+        io_threads: if io_threads > 0 { Some(io_threads) } else { None },
+        ..Default::default()
+    };
     let report = if loadgen > 0 {
         println!("serving {} on {} with {loadgen} loadgen workers...", cfg.name, listen.label());
-        deploy::serve_with_threads(&cfg, &listen, loadgen, &opts)?
+        deploy::serve_with_threads_tuned(&cfg, &listen, loadgen, &opts, &reactor)?
     } else {
         println!("serving {} for {n} external workers...", cfg.name);
-        qadmm::deploy::server::serve(
+        qadmm::deploy::server::serve_tuned(
             &cfg,
             deploy::make_native_problem(&cfg)?,
             &listen,
             &opts,
+            &reactor,
             |ep| {
                 println!("listening on {}", ep.label());
                 Ok(())
@@ -604,9 +615,11 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     qadmm::deploy::reconcile(&report.books, &report.accounting)?;
     let rounds = report.timeline.rounds.len();
     println!(
-        "done: {rounds} rounds in {:.2}s ({:.1} rounds/s), byte books reconciled",
+        "done: {rounds} rounds in {:.2}s ({:.1} rounds/s) on {} io threads, \
+         byte books reconciled",
         report.wall_s,
-        rounds as f64 / report.wall_s.max(1e-9)
+        rounds as f64 / report.wall_s.max(1e-9),
+        report.io_threads
     );
     let times: Vec<f64> = report.timeline.rounds.iter().map(|r| r.time).collect();
     if let Some((p50, p99)) = deploy::round_latency_stats(&times) {

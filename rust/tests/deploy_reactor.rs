@@ -1,0 +1,193 @@
+//! Reactor-specific deployment invariants, alongside (not instead of) the
+//! churn suite:
+//!
+//! * a **slow consumer** — a connection that stops draining its socket —
+//!   is detached with a synthesized `Leave` once its bounded write queue
+//!   overflows, its unwritten frames are discarded uncharged, and the
+//!   per-link byte books still reconcile **exactly**;
+//! * the server's thread bill is **O(shards)**, not O(connections): a
+//!   64-worker loadgen runs with `io_threads + 1` server threads;
+//! * the shared-broadcast encode (one buffer per `Consensus` round, the
+//!   excluded variant a one-byte flag flip) is byte-identical to two
+//!   independent encodes, so per-recipient charge and length never drift.
+
+use std::io::{Read, Write};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use qadmm::config::ProblemKind;
+use qadmm::deploy::frame::{Frame, FLAG_INCLUDED, PROTO_VERSION};
+use qadmm::deploy::server::{config_digest, serve_tuned, ReactorOptions, ServeOptions};
+use qadmm::deploy::transport::Endpoint;
+use qadmm::deploy::worker::{run_worker, WorkerOptions, WorkerReport};
+use qadmm::exp::deploy::{make_native_problem, serve_with_threads_tuned, smoke_cfg};
+
+fn sock_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("qadmm-{tag}-{}.sock", std::process::id()))
+}
+
+/// Node 1 is a fake client that handshakes, uploads its init state, and
+/// then **never reads again**. With `m` large enough that the `InitZ`
+/// broadcast overflows the socket buffer, the frame sticks in the fake's
+/// write queue; the next round's `Consensus` pushes the queue past
+/// `write_queue_limit = 1` and the reactor must evict. Node 0 is a real
+/// worker that carries the run to completion alone (`p_min = 1`).
+#[test]
+fn slow_consumer_is_evicted_and_books_reconcile() {
+    let mut cfg = smoke_cfg(2, 8);
+    // InitZ ≈ 9 + 8m bytes ≈ 512 KiB — past the default UDS send buffer,
+    // so an unread broadcast provably wedges in the write queue
+    let ProblemKind::Lasso { m, .. } = &mut cfg.problem else { unreachable!() };
+    *m = 65_536;
+    let dim = 65_536usize;
+
+    let listen = Endpoint::Uds(sock_path("slow"));
+    let opts = ServeOptions { idle_timeout: Duration::from_secs(10) };
+    let reactor = ReactorOptions { io_threads: Some(2), write_queue_limit: 1 };
+    let worker: Mutex<Option<JoinHandle<anyhow::Result<WorkerReport>>>> = Mutex::new(None);
+    let fake: Mutex<Option<JoinHandle<()>>> = Mutex::new(None);
+    let done = Arc::new(AtomicBool::new(false));
+
+    let report = serve_tuned(
+        &cfg,
+        make_native_problem(&cfg).unwrap(),
+        &listen,
+        &opts,
+        &reactor,
+        |ep| {
+            let (wcfg, wep) = (cfg.clone(), ep.clone());
+            *worker.lock().unwrap() = Some(std::thread::spawn(move || {
+                run_worker(&wcfg, make_native_problem(&wcfg)?, &wep, &WorkerOptions::new(0))
+            }));
+            let Endpoint::Uds(path) = ep.clone() else { unreachable!() };
+            let digest = config_digest(&cfg);
+            let done = done.clone();
+            *fake.lock().unwrap() = Some(std::thread::spawn(move || {
+                let mut s = UnixStream::connect(path).unwrap();
+                s.write_all(
+                    &Frame::Hello { proto: PROTO_VERSION, node: 1, m: dim as u32, digest }
+                        .encode(),
+                )
+                .unwrap();
+                // Welcome is a fixed 5-byte frame (4-byte length + kind)
+                let mut welcome = [0u8; 5];
+                s.read_exact(&mut welcome).unwrap();
+                assert_eq!(welcome, [1, 0, 0, 0, 2], "expected a Welcome frame");
+                s.write_all(
+                    &Frame::InitFull { node: 1, x0: vec![0.0; dim], u0: vec![0.0; dim] }
+                        .encode(),
+                )
+                .unwrap();
+                // ... and now stop draining the socket entirely
+                while !done.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }));
+            Ok(())
+        },
+    )
+    .expect("run must complete despite the slow consumer");
+    done.store(true, Ordering::Relaxed);
+
+    let wr = worker
+        .into_inner()
+        .unwrap()
+        .unwrap()
+        .join()
+        .expect("worker thread panicked")
+        .expect("worker 0 failed");
+    assert!(wr.acked_shutdown, "worker 0 must carry the run through the drain: {wr:?}");
+    fake.into_inner().unwrap().unwrap().join().unwrap();
+
+    // all 8 rounds fired — the evicted node never wedged the P/τ trigger
+    assert_eq!(report.timeline.rounds.len(), 8);
+    assert_eq!(report.io_threads, 2);
+    // exact reconciliation through the eviction: the fake's partially
+    // written InitZ and its discarded queued Consensus appear on NEITHER
+    // ledger, so the equality holds to the byte
+    qadmm::deploy::reconcile(&report.books, &report.accounting).unwrap();
+    // the fake's downlink books hold exactly the one completed frame (the
+    // 5-byte Welcome): the wedged InitZ was never booked, never charged
+    assert_eq!(report.books[1].down_total, 5, "fake downlink: {:?}", report.books[1]);
+    assert_eq!(report.books[1].down_extra, 5);
+    // its uplink books hold the Hello + the (charged) InitFull
+    assert!(report.books[1].up_total > 16 * dim as u64);
+    assert!(report.accounting.link(1).uplink_msgs == 1); // the InitFull
+}
+
+#[cfg(target_os = "linux")]
+fn task_count() -> usize {
+    std::fs::read_dir("/proc/self/task").map(|d| d.count()).unwrap_or(0)
+}
+
+/// 64 in-process workers over a UDS: the server side must stay at
+/// `io_threads + 1` threads — O(shards), not the old 2n+1 — while the run
+/// completes, drains, and reconciles exactly.
+#[cfg(target_os = "linux")]
+#[test]
+fn loadgen_64_keeps_server_threads_o_shards() {
+    const NODES: usize = 64;
+    const SHARDS: usize = 4;
+    let cfg = smoke_cfg(NODES, 6);
+    let listen = Endpoint::Uds(sock_path("loadgen64"));
+    let opts = ServeOptions { idle_timeout: Duration::from_secs(30) };
+    let reactor = ReactorOptions { io_threads: Some(SHARDS), ..Default::default() };
+
+    // sample the process task count while the fleet is live
+    let peak = Arc::new(AtomicUsize::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let sampler = {
+        let (peak, stop) = (peak.clone(), stop.clone());
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                peak.fetch_max(task_count(), Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        })
+    };
+
+    let report =
+        serve_with_threads_tuned(&cfg, &listen, NODES, &opts, &reactor).expect("loadgen run");
+    stop.store(true, Ordering::Relaxed);
+    sampler.join().unwrap();
+
+    assert_eq!(report.io_threads, SHARDS);
+    assert_eq!(report.timeline.rounds.len(), 6);
+    qadmm::deploy::reconcile(&report.books, &report.accounting).unwrap();
+
+    // Thread bill: NODES worker threads + (SHARDS + 1) server threads +
+    // harness slack (the test runner, the sampler, sibling tests). The old
+    // thread-per-connection server would add 2·NODES + 1 ≈ 129 more and
+    // blow far past this ceiling.
+    let peak = peak.load(Ordering::Relaxed);
+    assert!(peak > 0, "task sampler read nothing");
+    assert!(
+        peak <= NODES + SHARDS + 1 + 32,
+        "server thread count is not O(shards): peak {peak} tasks for {NODES} workers"
+    );
+}
+
+/// The shared-broadcast encode contract: the excluded recipient's frame is
+/// the included frame with exactly one flag bit cleared — same length,
+/// same charge — so encoding once and flipping byte 5 is byte-exact.
+#[test]
+fn consensus_variants_differ_only_in_the_flag_byte() {
+    let dz_wire = vec![7u8; 33];
+    let incl =
+        Frame::Consensus { round: 12, included: true, last: true, dz_wire: dz_wire.clone() }
+            .encode();
+    let excl =
+        Frame::Consensus { round: 12, included: false, last: true, dz_wire }.encode();
+    assert_eq!(incl.len(), excl.len());
+    let mut flipped = incl.clone();
+    flipped[5] &= !FLAG_INCLUDED;
+    assert_eq!(flipped, excl, "flag flip must reproduce the excluded encode exactly");
+    // and the flip commutes with decode
+    let f = Frame::decode(flipped[4], &flipped[5..]).unwrap();
+    let Frame::Consensus { included, last, .. } = f else { panic!("wrong kind") };
+    assert!(!included && last);
+}

@@ -28,15 +28,24 @@ SECTIONS = {
     "scale_xl": (["n", "m", "tau"], "wall_s"),
     "server_round": (["n", "m", "p"], "inc_round_us"),
     "server_round_nn": (["n", "m", "p", "k"], "fused_round_us"),
+    "deploy_loadgen": (["nodes"], "rounds_per_s"),
     "trigger": (["n", "delta", "adapt"], "wall_s"),
 }
 
+# metrics where a larger number is an improvement (throughput), so the
+# delta arrows and the regression gate run in the opposite direction from
+# the timing/memory metrics
+HIGHER_IS_BETTER = {("deploy_loadgen", "rounds_per_s")}
+
 # soft regression gates: (section, metric) pairs checked against
 # --warn-threshold. peak_rss_mb guards the million-node O(active)-memory
-# work the same way inc_round_us guards the server hot path.
+# work the same way inc_round_us guards the server hot path, and
+# deploy_loadgen rounds/s guards the reactor socket server (direction
+# flipped: a *drop* past the threshold warns).
 GATES = [
     ("server_round", "inc_round_us"),
     ("scale_xl", "peak_rss_mb"),
+    ("deploy_loadgen", "rounds_per_s"),
 ]
 
 
@@ -65,12 +74,14 @@ def is_num(v):
     return isinstance(v, (int, float)) and not isinstance(v, bool)
 
 
-def fmt_delta(old, new):
+def fmt_delta(old, new, higher_is_better=False):
     """Relative change, signed; n/a when either cell is missing/zero."""
     if not is_num(old) or old == 0 or not is_num(new):
         return "n/a"
     pct = 100.0 * (new - old) / old
-    arrow = "🔺" if pct > 10.0 else ("✅" if pct < -10.0 else "·")
+    worse, better = (pct < -10.0, pct > 10.0) if higher_is_better \
+        else (pct > 10.0, pct < -10.0)
+    arrow = "🔺" if worse else ("✅" if better else "·")
     return f"{pct:+.1f}% {arrow}"
 
 
@@ -103,10 +114,11 @@ def section_table(name, key_fields, metric, baseline, current):
     def cell(v):
         return f"{v:.3f}" if is_num(v) else "—"
 
+    hib = (name, metric) in HIGHER_IS_BETTER
     for key, rec in cur.items():
         old = base.get(key, {}).get(metric)
         new = rec.get(metric)
-        cells = [str(k) for k in key] + [cell(old), cell(new), fmt_delta(old, new)]
+        cells = [str(k) for k in key] + [cell(old), cell(new), fmt_delta(old, new, hib)]
         lines.append("| " + " | ".join(cells) + " |")
     for key in (k for k in base if k not in cur):
         old = base[key].get(metric)
@@ -167,18 +179,26 @@ def scale_xl_memory_table(baseline, current):
 def regression_warnings(baseline, current, threshold, name, metric):
     """Rows of `name` whose `metric` regressed beyond threshold.
 
+    Direction-aware: for timing/memory metrics a regression is the ratio
+    new/old exceeding the threshold; for HIGHER_IS_BETTER metrics
+    (throughput) it is old/new exceeding it — a drop.
+
     Soft gate only: the caller prints a prominent warning but still exits 0
     (runner noise must never block a merge on its own).
     """
     key_fields = SECTIONS[name][0]
+    hib = (name, metric) in HIGHER_IS_BETTER
     cur = index_section(records_of(current, name), key_fields)
     base = index_section(records_of(baseline, name), key_fields)
     warns = []
     for key, rec in cur.items():
         old = base.get(key, {}).get(metric)
         new = rec.get(metric)
-        if is_num(old) and old > 0 and is_num(new) and new / old > threshold:
-            warns.append((key, old, new, new / old))
+        if not (is_num(old) and old > 0 and is_num(new) and new > 0):
+            continue
+        ratio = old / new if hib else new / old
+        if ratio > threshold:
+            warns.append((key, old, new, ratio))
     return warns
 
 
@@ -191,8 +211,10 @@ def main():
     ap.add_argument("--warn-threshold", type=float, default=None,
                     help="soft regression gate: warn prominently when a "
                          "gated metric (server_round inc_round_us, "
-                         "scale_xl peak_rss_mb) exceeds THRESHOLD x its "
-                         "committed baseline (never fails the job)")
+                         "scale_xl peak_rss_mb, deploy_loadgen rounds_per_s "
+                         "— the last direction-flipped: a drop warns) moves "
+                         "past THRESHOLD x its committed baseline (never "
+                         "fails the job)")
     args = ap.parse_args()
 
     current = load(args.current)
